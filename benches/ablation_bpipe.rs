@@ -1,0 +1,83 @@
+//! Ablations on the BPipe mechanism itself:
+//!
+//! * activation bound sweep — how tight can the bound go before load
+//!   stalls stop hiding under compute;
+//! * pipeline-depth sweep — memory imbalance (stage-0 vs stage-(p−1)
+//!   stash ratio) and the BPipe bound across p;
+//! * schedule comparison — GPipe vs 1F1B vs interleaved vs 1F1B+BPipe on
+//!   the same workload (memory/bubble/makespan trade-off table).
+
+use bpipe::util::bench;
+
+use bpipe::bpipe::{apply_bpipe, pair_adjacent_layout, pairing};
+use bpipe::config::paper_experiment;
+use bpipe::model::memory::MemoryModel;
+use bpipe::schedule::{gpipe, interleaved, one_f_one_b};
+use bpipe::sim::simulate;
+
+fn main() {
+    let e = paper_experiment(8).unwrap();
+    let p = e.parallel.p;
+    let m = e.parallel.num_microbatches();
+    let layout = pair_adjacent_layout(p, e.cluster.n_nodes);
+
+    println!("\n=== Ablation A: BPipe bound sweep (GPT-3 96B, b=2) ===");
+    println!("{:>6} {:>12} {:>12} {:>14} {:>12}", "bound", "makespan s", "stall ms", "stage0 GiB", "MFU %");
+    for bound in [3u64, 4, 5, 6, 7, 8] {
+        let sched = if bound >= p { one_f_one_b(p, m) } else { apply_bpipe(&one_f_one_b(p, m), Some(bound)) };
+        let r = simulate(&e, &sched, &layout);
+        println!(
+            "{:>6} {:>12.3} {:>12.1} {:>14.1} {:>12.1}",
+            bound,
+            r.makespan,
+            r.load_stall * 1e3,
+            r.mem_high_water[0] as f64 / (1u64 << 30) as f64,
+            r.mfu_pct()
+        );
+    }
+    println!("(paper bound = ceil((p+2)/2) = {})", pairing::bound(p));
+
+    println!("\n=== Ablation B: memory imbalance vs pipeline depth ===");
+    println!("{:>4} {:>8} {:>22} {:>18}", "p", "bound", "stage0:last stash", "stage0 mem ratio");
+    for pp in [4u64, 8, 16, 32] {
+        let mut ep = e.clone();
+        ep.parallel.p = pp;
+        ep.model.l = 160; // keep layers divisible across depths
+        let mm = MemoryModel::new(&ep);
+        let prof = mm.profile_gib(false);
+        println!(
+            "{:>4} {:>8} {:>18}:{:<3} {:>17.2}x",
+            pp,
+            pairing::bound(pp),
+            pp,
+            1,
+            prof[0] / prof[pp as usize - 1]
+        );
+    }
+
+    println!("\n=== Ablation C: schedule comparison (GPT-3 96B, b=2, feasibility aside) ===");
+    println!("{:<22} {:>12} {:>10} {:>14} {:>10}", "schedule", "makespan s", "bubble %", "stage0 GiB", "MFU %");
+    let schedules: Vec<(&str, bpipe::schedule::Schedule)> = vec![
+        ("GPipe", gpipe(p, m)),
+        ("1F1B", one_f_one_b(p, m)),
+        ("1F1B interleaved v=2", interleaved(p, m, 2)),
+        ("1F1B + BPipe", apply_bpipe(&one_f_one_b(p, m), None)),
+    ];
+    for (name, sched) in schedules {
+        let r = simulate(&e, &sched, &layout);
+        println!(
+            "{:<22} {:>12.3} {:>10.1} {:>14.1} {:>10.1}",
+            name,
+            r.makespan,
+            r.bubble_fraction * 100.0,
+            r.mem_high_water[0] as f64 / (1u64 << 30) as f64,
+            r.mfu_pct()
+        );
+    }
+    println!();
+
+    let sched = apply_bpipe(&one_f_one_b(p, m), None);
+    bench("ablation_bpipe/sim_full_iteration_bpipe", 20, || {
+        simulate(std::hint::black_box(&e), &sched, &layout)
+    });
+}

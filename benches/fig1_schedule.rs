@@ -1,0 +1,36 @@
+//! Bench + regeneration of paper Figure 1: BPipe inside a 4-way 1F1B
+//! schedule — evictions after over-bound forwards, loads before the
+//! matching backwards — rendered as a timed Gantt chart from the DES.
+
+use bpipe::util::bench;
+
+use bpipe::bpipe::{apply_bpipe, pair_adjacent_layout, pairing};
+use bpipe::config::paper_experiment;
+use bpipe::report::{render_timeline, timeline::render_program};
+use bpipe::schedule::one_f_one_b;
+use bpipe::sim::simulate;
+
+fn main() {
+    let mut e = paper_experiment(8).unwrap();
+    e.parallel.p = 4;
+    e.parallel.global_batch = 8 * e.parallel.microbatch;
+    let m = 8;
+    let layout = pair_adjacent_layout(4, 1);
+    let base = one_f_one_b(4, m);
+    let bp = apply_bpipe(&base, None);
+
+    println!("\n=== Paper Figure 1 (reproduced): 4-way 1F1B, m=8 ===");
+    println!("bound = ceil((p+2)/2) = {}", pairing::bound(4));
+    println!("\n-- plain 1F1B --");
+    print!("{}", render_timeline(&simulate(&e, &base, &layout).trace, 4, 110));
+    println!("\n-- BPipe --");
+    print!("{}", render_timeline(&simulate(&e, &bp, &layout).trace, 4, 110));
+    println!("\n-- program order --");
+    print!("{}", render_program(&bp));
+
+    bench("fig1/schedule_gen_1f1b_p8_m64", 50_000, || one_f_one_b(8, 64));
+    let base8 = one_f_one_b(8, 64);
+    bench("fig1/apply_bpipe_p8_m64", 50_000, || {
+        apply_bpipe(std::hint::black_box(&base8), None)
+    });
+}

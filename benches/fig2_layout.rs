@@ -1,0 +1,32 @@
+//! Bench + regeneration of paper Figure 2: pair-adjacent assignment for
+//! 16-way pipeline parallelism on two 8-GPU nodes, and its end-to-end
+//! effect — BPipe with a sequential layout pays inter-node (IB) transfer
+//! latency the pair-adjacent layout hides under NVLink.
+
+use bpipe::util::bench;
+
+use bpipe::bpipe::{apply_bpipe, pair_adjacent_layout, sequential_layout};
+use bpipe::config::paper_experiment;
+use bpipe::report::render_layout;
+use bpipe::schedule::one_f_one_b;
+use bpipe::sim::simulate;
+
+fn main() {
+    println!("\n=== Paper Figure 2 (reproduced): 16-way PP on 2 nodes ===");
+    print!("{}", render_layout(&sequential_layout(16, 2), 16));
+    println!();
+    print!("{}", render_layout(&pair_adjacent_layout(16, 2), 16));
+
+    // end-to-end effect on the paper's main config (p=8, 4 nodes):
+    let e = paper_experiment(8).unwrap();
+    let m = e.parallel.num_microbatches();
+    let bp = apply_bpipe(&one_f_one_b(8, m), None);
+    let seq = simulate(&e, &bp, &sequential_layout(8, 4));
+    let adj = simulate(&e, &bp, &pair_adjacent_layout(8, 4));
+    println!("\nBPipe iteration, sequential layout   : {:.3} s (load stall {:.3} s)", seq.makespan, seq.load_stall);
+    println!("BPipe iteration, pair-adjacent layout: {:.3} s (load stall {:.3} s)", adj.makespan, adj.load_stall);
+    println!("pair-adjacent speedup: {:.3}x\n", seq.makespan / adj.makespan);
+
+    bench("fig2/pair_adjacent_layout_p32_n4", 100_000, || pair_adjacent_layout(32, 4));
+    bench("fig2/sim_bpipe_seq_layout", 20, || simulate(&e, &bp, &sequential_layout(8, 4)));
+}

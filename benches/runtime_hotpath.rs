@@ -1,0 +1,59 @@
+//! L3 hot-path benches over the REAL runtime: PJRT execute latency per
+//! stage op, coordinator overhead (channel + literal plumbing) vs pure
+//! execute time, and end-to-end step latency ±BPipe at tiny scale.
+//!
+//! Requires `make artifacts` (skips gracefully if absent, so `cargo
+//! bench` works in a fresh checkout).
+
+use bpipe::util::bench;
+use std::path::Path;
+
+use bpipe::coordinator::{self, TrainConfig};
+use bpipe::runtime::{literal_f32, Manifest, Runtime};
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("runtime_hotpath: artifacts/ missing — run `make artifacts`; skipping");
+        return;
+    }
+    let manifest = Manifest::load(dir).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let spec = &manifest.spec;
+    let n = manifest.param_count("mid").unwrap() as usize;
+    let fwd = rt.load(&manifest.path_of("mid_fwd").unwrap()).unwrap();
+    let bwd = rt.load(&manifest.path_of("mid_bwd").unwrap()).unwrap();
+    let params = xla::Literal::vec1(&vec![0.01f32; n]);
+    let act_len = (spec.b * spec.s * spec.h) as usize;
+    let shape = [spec.b as i64, spec.s as i64, spec.h as i64];
+    let x = literal_f32(&vec![0.1f32; act_len], &shape).unwrap();
+    let dy = literal_f32(&vec![0.05f32; act_len], &shape).unwrap();
+
+    bench("runtime/mid_fwd_execute", 30, || fwd.run1(&[&params, &x]).unwrap());
+    bench("runtime/mid_bwd_execute", 30, || bwd.run(&[&params, &x, &dy]).unwrap());
+    let host = vec![0.1f32; act_len];
+    bench("runtime/literal_upload_act", 1000, || {
+        literal_f32(std::hint::black_box(&host), &shape).unwrap()
+    });
+
+    // end-to-end short training run ±BPipe: BPipe overhead at tiny scale
+    println!("\n=== e2e step latency ±BPipe (tiny model, 2 steps × 8 microbatches) ===");
+    for bpipe in [false, true] {
+        let cfg = TrainConfig {
+            artifacts_dir: dir.to_path_buf(),
+            steps: 2,
+            microbatches: 8,
+            bpipe,
+            ..Default::default()
+        };
+        let r = coordinator::train(&cfg).unwrap();
+        let stalls: f64 = r.stage_stats.iter().map(|s| s.load_wait_s).sum();
+        println!(
+            "bpipe={bpipe:<5} mean step {:.2}s, stage0 stash hw {}, total load-wait {:.3}s, final loss {:.4}",
+            r.mean_step_time(),
+            r.stage_stats[0].stash_high_water,
+            stalls,
+            r.final_loss()
+        );
+    }
+}

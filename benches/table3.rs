@@ -1,0 +1,37 @@
+//! Bench + regeneration of paper Table 3: whole-model MFU for the ten
+//! experiments, paper-reported vs simulated, plus timing of the DES
+//! engine itself (a full 1F1B iteration of GPT-3 96B, 64–128
+//! microbatches, is the hot simulation workload).
+
+use bpipe::util::bench;
+
+use bpipe::config::{paper_experiment, paper_table3_mfu};
+use bpipe::report::render_table3;
+use bpipe::sim::simulate_experiment;
+
+fn main() {
+    // print the reproduced table once, before timing
+    println!("\n=== Paper Table 3 (reproduced) ===");
+    print!("{}", render_table3());
+
+    // the headline comparisons the paper's abstract makes:
+    let mfu = |id: u32| simulate_experiment(&paper_experiment(id).unwrap()).mfu_pct();
+    let speedup_gpt_recompute = mfu(8) / mfu(7);
+    let speedup_gpt_flash = mfu(10) / mfu(9);
+    let speedup_llama_flash = mfu(6) / mfu(5);
+    println!("BPipe speedup, GPT-3 + recompute : {speedup_gpt_recompute:.3}x (paper: {:.3}x)", 45.8 / 34.0);
+    println!("BPipe speedup, GPT-3 + flash     : {speedup_gpt_flash:.3}x (paper: {:.3}x)", 51.7 / 52.0);
+    println!("BPipe speedup, LLaMA + flash     : {speedup_llama_flash:.3}x (paper: {:.3}x)", 44.0 / 49.2);
+    let mean_abs_err: f64 = (1..=10)
+        .map(|id| (mfu(id) - paper_table3_mfu(id).unwrap()).abs())
+        .sum::<f64>()
+        / 10.0;
+    println!("mean |MFU error| vs paper: {mean_abs_err:.2} points\n");
+
+    for id in [7u32, 8] {
+        let e = paper_experiment(id).unwrap();
+        bench(&format!("table3/simulate_exp{id}"), 20, || {
+            simulate_experiment(std::hint::black_box(&e))
+        });
+    }
+}

@@ -1,0 +1,35 @@
+//! Bench + regeneration of paper Table 5: single-stage MFU for the ten
+//! experiment configurations (the cost-model calibration target).
+
+use bpipe::util::bench;
+
+use bpipe::config::{paper_experiment, paper_table5_mfu};
+use bpipe::report::render_table5;
+use bpipe::sim::CostModel;
+
+fn main() {
+    println!("\n=== Paper Table 5 (reproduced) ===");
+    print!("{}", render_table5());
+
+    // the single-stage ratios that §4 plugs into Eq. 4:
+    let mfu = |id: u32| CostModel::new(&paper_experiment(id).unwrap()).single_stage_mfu();
+    println!(
+        "stage MFU ratio b1→b2, GPT recompute: {:.3} (paper {:.3})",
+        mfu(8) / mfu(7),
+        55.2 / 37.8
+    );
+    println!(
+        "stage MFU ratio b2→b4, LLaMA flash  : {:.3} (paper {:.3})\n",
+        mfu(6) / mfu(5),
+        61.9 / 58.6
+    );
+    let max_err = (1..=10u32)
+        .map(|id| (mfu(id) * 100.0 - paper_table5_mfu(id).unwrap()).abs())
+        .fold(0.0f64, f64::max);
+    println!("max |stage MFU error| vs paper: {max_err:.2} points\n");
+
+    let e = paper_experiment(7).unwrap();
+    bench("table5/cost_model_stage_mfu", 10_000, || {
+        CostModel::new(std::hint::black_box(&e)).single_stage_mfu()
+    });
+}

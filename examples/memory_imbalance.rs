@@ -1,0 +1,68 @@
+//! The memory-imbalance story across models, microbatches and depths —
+//! the paper's §2.2 motivation, quantified.
+//!
+//! Prints, for LLaMA 65B and GPT-3 96B at every attention method and
+//! microbatch size: which configurations fit in 80 GiB under plain 1F1B,
+//! which need BPipe, and which don't fit at all — the feasibility
+//! boundary that dictates the ten runnable rows of Table 3.
+//!
+//! Run with: `cargo run --release --example memory_imbalance`
+
+use bpipe::config::{
+    gpt3_96b, llama_65b, paper_cluster, paper_parallel, AttentionMethod, ExperimentConfig,
+};
+use bpipe::model::memory::{bpipe_bound, MemoryModel};
+
+fn main() {
+    let gib = (1u64 << 30) as f64;
+    for model in [llama_65b(), gpt3_96b()] {
+        println!("=== {} (t=4, p=8, B=128, 80 GiB A100) ===", model.name);
+        println!(
+            "{:<12} {:>3} {:>14} {:>14} {:>18}",
+            "attention", "b", "1F1B peak GiB", "BPipe peak GiB", "verdict"
+        );
+        for att in AttentionMethod::ALL {
+            for b in [1u64, 2, 4, 8] {
+                let e = ExperimentConfig {
+                    id: None,
+                    model: model.clone(),
+                    parallel: paper_parallel(b),
+                    cluster: paper_cluster(),
+                    bpipe: false,
+                    attention: att,
+                };
+                let mm = MemoryModel::new(&e);
+                let plain = mm.max_peak_bytes(false) as f64 / gib;
+                let bal = mm.max_peak_bytes(true) as f64 / gib;
+                let verdict = match (mm.fits(false), mm.fits(true)) {
+                    (true, _) => "fits plain",
+                    (false, true) => "NEEDS BPIPE",
+                    (false, false) => "OOM even w/ BPipe",
+                };
+                println!(
+                    "{:<12} {:>3} {:>14.1} {:>14.1} {:>18}",
+                    att.label(),
+                    b,
+                    plain,
+                    bal,
+                    verdict
+                );
+            }
+        }
+        println!();
+    }
+
+    println!("=== per-stage profile, GPT-3 96B b=2 recompute (the exp-8 case) ===");
+    let e = bpipe::config::paper_experiment(8).unwrap();
+    let mm = MemoryModel::new(&e);
+    let cap = e.cluster.hbm_bytes as f64 / gib;
+    println!("{:>6} {:>12} {:>12}   (HBM = {cap:.0} GiB)", "stage", "1F1B GiB", "BPipe GiB");
+    for (s, (a, b)) in mm.profile_gib(false).iter().zip(mm.profile_gib(true).iter()).enumerate() {
+        let bar = |v: f64| "#".repeat((v / cap * 40.0) as usize);
+        println!("{s:>6} {a:>12.1} {b:>12.1}   |{:<40}|", bar(*b));
+    }
+    println!(
+        "\nBPipe bound for p=8: ⌈(8+2)/2⌉ = {} stashes per device (stage 0 had 8)",
+        bpipe_bound(8)
+    );
+}

@@ -1,0 +1,60 @@
+//! Quickstart: the whole BPipe story in ~60 lines of library calls.
+//!
+//! 1. Build the paper's GPT-3 96B experiment (t=4, p=8, B=128).
+//! 2. Show the 1F1B memory imbalance and why b=2 OOMs without BPipe.
+//! 3. Apply BPipe, simulate both, compare MFU.
+//! 4. Run the paper's Eq. 4 estimator to see the same answer analytically.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use bpipe::bpipe::{apply_bpipe, pair_adjacent_layout, pairing};
+use bpipe::config::paper_experiment;
+use bpipe::estimator::{estimate, StageMeasurement};
+use bpipe::model::memory::MemoryModel;
+use bpipe::schedule::one_f_one_b;
+use bpipe::sim::{simulate, CostModel};
+
+fn main() {
+    // --- 1. the paper's headline experiment: GPT-3 96B, b=2, recompute ---
+    let e = paper_experiment(8).expect("paper experiment");
+    println!("experiment: {}\n", e.summary());
+
+    // --- 2. memory imbalance under plain 1F1B ---------------------------
+    let mm = MemoryModel::new(&e);
+    println!("per-stage peak memory (GiB), HBM = 80:");
+    println!("  stage:  {}", (0..8).map(|s| format!("{s:>6}")).collect::<String>());
+    let plain = mm.profile_gib(false);
+    let bal = mm.profile_gib(true);
+    println!("  1F1B :  {}", plain.iter().map(|g| format!("{g:>6.1}")).collect::<String>());
+    println!("  BPipe:  {}", bal.iter().map(|g| format!("{g:>6.1}")).collect::<String>());
+    println!(
+        "  → stage 0 holds p={} stashes under 1F1B; BPipe bounds every stage to ⌈(p+2)/2⌉ = {}\n",
+        e.parallel.p,
+        pairing::bound(e.parallel.p)
+    );
+    assert!(!mm.fits(false), "b=2 must OOM without BPipe (that's the point)");
+    assert!(mm.fits(true));
+
+    // --- 3. simulate b=1 plain vs b=2 BPipe ------------------------------
+    let layout = pair_adjacent_layout(e.parallel.p, e.cluster.n_nodes);
+    let e1 = paper_experiment(7).unwrap(); // b=1, no BPipe
+    let m1 = e1.parallel.num_microbatches();
+    let r1 = simulate(&e1, &one_f_one_b(e1.parallel.p, m1), &layout);
+    let m2 = e.parallel.num_microbatches();
+    let r2 = simulate(&e, &apply_bpipe(&one_f_one_b(e.parallel.p, m2), None), &layout);
+    println!("simulated: b=1 plain  → MFU {:.1}% ({:.1}s/iter)", r1.mfu_pct(), r1.makespan);
+    println!("simulated: b=2 BPipe  → MFU {:.1}% ({:.1}s/iter)", r2.mfu_pct(), r2.makespan);
+    println!("speedup: {:.2}x (paper: 45.8/34.0 = 1.35x)\n", r2.mfu / r1.mfu);
+
+    // --- 4. the §4 estimator reaches the same verdict cheaply ------------
+    let sx = StageMeasurement { b: 1, mfu_stage: CostModel::new(&e1).single_stage_mfu() };
+    let sy = StageMeasurement { b: 2, mfu_stage: CostModel::new(&e).single_stage_mfu() };
+    let est = estimate(e.parallel.global_batch, e.parallel.p, sx, sy);
+    println!(
+        "Eq. 4 estimate from single-stage MFUs ({:.1}% → {:.1}%): {:.2}x upper bound",
+        sx.mfu_stage * 100.0,
+        sy.mfu_stage * 100.0,
+        est.speedup_bound
+    );
+    println!("verdict: {}", if est.speedup_bound > 1.05 { "worth implementing BPipe here" } else { "not worth it" });
+}

@@ -1,0 +1,196 @@
+"""AOT lowering: JAX stage functions → HLO-text artifacts + manifest.
+
+Python runs ONCE, at build time (``make artifacts``); the rust
+coordinator loads the emitted ``artifacts/*.hlo.txt`` through the PJRT C
+API and never touches Python again.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+Functions are lowered with ``return_tuple=True`` so every artifact's
+output is a tuple the rust side unpacks uniformly.
+
+Artifact set (per ModelSpec):
+
+  {first,mid,last}_init   (seed:i32) -> flat params
+  first_fwd/bwd           embedding + blocks
+  mid_fwd/bwd             blocks            (+ ``mid_{fwd,bwd}_b{N}``
+                                             microbatch sweep for the
+                                             paper-§4 estimator example)
+  last_fwd/bwd            blocks + head + mean-CE loss
+  adam_{first,mid,last}   Adam over flat vectors
+  mid_fwd_att_{naive,fused,flash}  attention-variant ablation artifacts
+
+plus ``manifest.json`` describing shapes/dtypes/param counts, and
+``model.hlo.txt`` (= mid_fwd) as the Makefile's freshness sentinel.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import shutil
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import ModelSpec, adam_step, make_stage_fns
+
+__all__ = ["lower_to_hlo_text", "emit_artifacts", "main"]
+
+
+def lower_to_hlo_text(fn, *example_args) -> str:
+    """Lower a jittable fn to XLA HLO text (the rust-loadable format)."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+_DTYPE_NAMES = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}
+
+
+def _sig(avals) -> list[dict]:
+    out = []
+    for a in avals:
+        out.append({"shape": list(a.shape), "dtype": _DTYPE_NAMES[jnp.asarray(a, dtype=a.dtype).dtype if not hasattr(a, "dtype") else a.dtype]})
+    return out
+
+
+def _spec_struct(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def emit_artifacts(
+    spec: ModelSpec,
+    out_dir: Path,
+    bs_sweep: tuple[int, ...] = (1, 2, 4),
+    attention_variants: tuple[str, ...] = ("naive", "fused", "flash"),
+    verbose: bool = True,
+) -> dict:
+    """Lower every artifact for ``spec`` into ``out_dir``; return manifest."""
+    out_dir.mkdir(parents=True, exist_ok=True)
+    fns = {k: make_stage_fns(spec, k) for k in ("first", "mid", "last")}
+    b, s, h = spec.b, spec.s, spec.h
+
+    f32 = jnp.float32
+    i32 = jnp.int32
+    act = _spec_struct((b, s, h), f32)
+    tok = _spec_struct((b, s), i32)
+    scalar_i = _spec_struct((), i32)
+    scalar_f = _spec_struct((), f32)
+
+    manifest: dict = {
+        "spec": dataclasses.asdict(spec),
+        "params": {k: fns[k].n_params for k in fns},
+        "bs_sweep": list(bs_sweep),
+        "artifacts": {},
+    }
+
+    def emit(name: str, fn, *args):
+        text = lower_to_hlo_text(fn, *args)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        lowered_out = jax.eval_shape(fn, *args)
+        manifest["artifacts"][name] = {
+            "file": path.name,
+            "inputs": [{"shape": list(a.shape), "dtype": _DTYPE_NAMES[a.dtype]} for a in args],
+            "outputs": [
+                {"shape": list(o.shape), "dtype": _DTYPE_NAMES[o.dtype]} for o in lowered_out
+            ],
+        }
+        if verbose:
+            print(f"  wrote {path.name} ({len(text) / 1024:.0f} KiB)")
+
+    for kind in ("first", "mid", "last"):
+        sf = fns[kind]
+        flat = _spec_struct((sf.n_params,), f32)
+        emit(f"{kind}_init", sf.init, scalar_i)
+        if kind == "first":
+            emit("first_fwd", sf.fwd, flat, tok)
+            emit("first_bwd", sf.bwd, flat, tok, act)
+        elif kind == "mid":
+            emit("mid_fwd", sf.fwd, flat, act)
+            emit("mid_bwd", sf.bwd, flat, act, act)
+        else:
+            emit("last_fwd", sf.fwd, flat, act, tok)
+            emit("last_bwd", sf.bwd, flat, act, tok)
+        emit(
+            f"adam_{kind}",
+            adam_step,
+            flat,
+            flat,
+            flat,
+            flat,
+            scalar_i,
+            scalar_f,
+        )
+
+    # Microbatch-size sweep over the mid stage: the measurement the
+    # paper's §4 estimator consumes (single-stage time at b ∈ sweep).
+    for bb in bs_sweep:
+        sweep_spec = spec.with_b(bb)
+        sf = make_stage_fns(sweep_spec, "mid")
+        flat = _spec_struct((sf.n_params,), f32)
+        act_b = _spec_struct((bb, s, h), f32)
+        emit(f"mid_fwd_b{bb}", sf.fwd, flat, act_b)
+        emit(f"mid_bwd_b{bb}", sf.bwd, flat, act_b, act_b)
+
+    # Attention-variant ablation (paper §3.2 kernel analysis) at default b.
+    for att in attention_variants:
+        var_spec = dataclasses.replace(spec, attention=att)
+        sf = make_stage_fns(var_spec, "mid")
+        flat = _spec_struct((sf.n_params,), f32)
+        emit(f"mid_fwd_att_{att}", sf.fwd, flat, act)
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    # Makefile freshness sentinel: a copy of mid_fwd.
+    shutil.copyfile(out_dir / "mid_fwd.hlo.txt", out_dir / "model.hlo.txt")
+    if verbose:
+        print(f"  wrote manifest.json + model.hlo.txt sentinel → {out_dir}")
+    return manifest
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--family", default="llama", choices=["gpt", "llama"])
+    ap.add_argument("--h", type=int, default=256)
+    ap.add_argument("--a", type=int, default=8)
+    ap.add_argument("--s", type=int, default=128)
+    ap.add_argument("--v", type=int, default=4096)
+    ap.add_argument("--layers-per-stage", type=int, default=2)
+    ap.add_argument("--stages", type=int, default=4)
+    ap.add_argument("--b", type=int, default=2)
+    ap.add_argument(
+        "--attention", default="flash", choices=["naive", "fused", "flash"]
+    )
+    ap.add_argument("--bs-sweep", default="1,2,4")
+    ap.add_argument("--no-variants", action="store_true", help="skip ablation artifacts")
+    args = ap.parse_args(argv)
+
+    spec = ModelSpec(
+        family=args.family,
+        h=args.h,
+        a=args.a,
+        s=args.s,
+        v=args.v,
+        layers_per_stage=args.layers_per_stage,
+        stages=args.stages,
+        b=args.b,
+        attention=args.attention,
+    )
+    bs_sweep = tuple(int(x) for x in args.bs_sweep.split(",") if x)
+    variants = () if args.no_variants else ("naive", "fused", "flash")
+    print(f"AOT lowering {spec} → {args.out_dir}")
+    emit_artifacts(spec, Path(args.out_dir), bs_sweep=bs_sweep, attention_variants=variants)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""L1 Pallas kernels + pure-jnp oracles.
+
+``flash_attention`` — blockwise online-softmax attention (paper's
+    "flash attn 2" arm).
+``fused_scaled_softmax`` — Megatron-style fused scale+mask+softmax
+    (the kernel behind the paper's §3.2 GPT-3 analysis).
+``ref`` — jnp reference implementations, including the *unfused*
+    softmax baseline whose extra cast kernels the paper profiles.
+"""
+
+from . import ref
+from .flash_attention import FlashBlockSizes, flash_attention, vmem_analysis
+from .fused_softmax import fused_scaled_softmax
+from .rmsnorm import fused_rmsnorm, ref_rmsnorm
+
+__all__ = [
+    "ref",
+    "flash_attention",
+    "FlashBlockSizes",
+    "vmem_analysis",
+    "fused_scaled_softmax",
+    "fused_rmsnorm",
+    "ref_rmsnorm",
+]

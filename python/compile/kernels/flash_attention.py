@@ -1,0 +1,233 @@
+"""L1 Pallas kernel: blockwise online-softmax (flash) attention.
+
+This is the "flash attn 2" arm of the paper's Table 3 experiments,
+re-thought for the TPU execution model Pallas exposes (see DESIGN.md
+§Hardware-Adaptation):
+
+* grid = (batch*heads, ceil(s_q / block_q)); each grid step owns one
+  (block_q, d) query tile staged into VMEM by its BlockSpec;
+* K/V are streamed in (block_k, d) VMEM tiles by an inner fori_loop
+  with ``pl.dynamic_slice``-style indexing — the HBM↔VMEM schedule a
+  CUDA implementation would express with a threadblock loop over SMEM
+  tiles;
+* the two matmuls per KV tile are MXU-shaped ``(block_q, d) x (d,
+  block_k)`` and ``(block_q, block_k) x (block_k, d)`` with f32
+  accumulation (bf16-in/f32-acc MXU semantics);
+* online-softmax running state (m, l, acc) is carried through the loop
+  in f32, so no (s_q, s_k) score matrix is ever materialized — the
+  memory saving that lets the paper drop attention recomputation.
+
+The kernel must run with ``interpret=True``: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.  VMEM-footprint
+and MXU-utilization analysis for the paper-scale shapes lives in
+``vmem_analysis`` below and feeds DESIGN.md §Perf.
+
+Autodiff: ``flash_attention`` carries a ``jax.custom_vjp`` whose backward
+recomputes attention through the pure-jnp reference (``ref.ref_attention``)
+— i.e. flash-style "store nothing, recompute in backward" semantics, with
+gradients defined by the mathematically identical reference function.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+__all__ = ["flash_attention", "vmem_analysis", "FlashBlockSizes"]
+
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 64
+NEG_INF = -1e30
+
+
+@dataclass(frozen=True)
+class FlashBlockSizes:
+    """Tile sizes for the flash kernel; the perf pass sweeps these."""
+
+    block_q: int = DEFAULT_BLOCK_Q
+    block_k: int = DEFAULT_BLOCK_K
+
+
+def _flash_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    *,
+    scale: float,
+    causal: bool,
+    block_k: int,
+    s_k: int,
+):
+    """One grid step: one (block_q, d) query tile against all KV tiles."""
+    block_q, d = q_ref.shape
+    q_tile_idx = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32)  # (block_q, d) in VMEM
+
+    # With causal masking, query tile t only needs KV tiles whose start is
+    # <= the tile's last query position; skipping the rest halves the work
+    # (the same triangle-skipping flash-attn-2 does per threadblock).
+    num_k_tiles = pl.cdiv(s_k, block_k)
+    if causal:
+        last_q_pos = (q_tile_idx + 1) * block_q - 1
+        needed = jax.lax.div(last_q_pos, block_k) + 1
+        num_iters = jnp.minimum(num_k_tiles, needed)
+    else:
+        num_iters = num_k_tiles
+
+    def body(i, carry):
+        acc, m_i, l_i = carry
+        k = k_ref[pl.ds(i * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[pl.ds(i * block_k, block_k), :].astype(jnp.float32)
+        # MXU matmul 1: (block_q, d) x (d, block_k), f32 accumulate.
+        s = jax.lax.dot_general(
+            q,
+            k,
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        s = s * scale
+        if causal:
+            q_pos = q_tile_idx * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0
+            )
+            k_pos = i * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1
+            )
+            s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        # Online softmax update.
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_i - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_i * alpha + jnp.sum(p, axis=-1)
+        # MXU matmul 2: (block_q, block_k) x (block_k, d).
+        pv = jax.lax.dot_general(
+            p,
+            v,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc = acc * alpha[:, None] + pv
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, _m, l = jax.lax.fori_loop(0, num_iters, body, (acc0, m0, l0))
+    # l>0 always holds for causal self-attention (diagonal is unmasked).
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def _flash_forward(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    scale: float,
+    causal: bool,
+    blocks: FlashBlockSizes,
+) -> jnp.ndarray:
+    bh, s_q, d = q.shape
+    s_k = k.shape[1]
+    block_q = min(blocks.block_q, s_q)
+    block_k = min(blocks.block_k, s_k)
+    if s_q % block_q != 0 or s_k % block_k != 0:
+        raise ValueError(
+            f"sequence lengths (s_q={s_q}, s_k={s_k}) must be divisible by "
+            f"block sizes (block_q={block_q}, block_k={block_k})"
+        )
+    grid = (bh, s_q // block_q)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, block_k=block_k, s_k=s_k
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # One query tile per grid step …
+            pl.BlockSpec((None, block_q, d), lambda b, i: (b, i, 0)),
+            # … K/V mapped whole-sequence per (batch·head); the inner
+            # fori_loop stages (block_k, d) slices, which is the VMEM
+            # streaming schedule on real hardware.
+            pl.BlockSpec((None, s_k, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, s_k, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s_q, d), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(q, k, v)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    scale: float | None = None,
+    causal: bool = True,
+    blocks: FlashBlockSizes = FlashBlockSizes(),
+) -> jnp.ndarray:
+    """Flash attention over (bh, s, d) tensors; see module docstring.
+
+    Output matches ``ref.ref_attention`` to ~1e-6 (f32) / bf16 tolerance.
+    """
+    if scale is None:
+        scale = 1.0 / math.sqrt(q.shape[-1])
+    return _flash_forward(q, k, v, scale, causal, blocks)
+
+
+def _flash_fwd_rule(q, k, v, scale, causal, blocks):
+    if scale is None:
+        scale = 1.0 / math.sqrt(q.shape[-1])
+    out = _flash_forward(q, k, v, scale, causal, blocks)
+    return out, (q, k, v)
+
+
+def _flash_bwd_rule(scale, causal, blocks, residuals, g):
+    # Flash-style backward: nothing but q/k/v was saved; recompute the
+    # attention through the reference function and take its VJP.  This is
+    # mathematically the flash-attn-2 backward (recompute + accumulate).
+    q, k, v = residuals
+    if scale is None:
+        scale = 1.0 / math.sqrt(q.shape[-1])
+    _, vjp = jax.vjp(lambda q_, k_, v_: ref.ref_attention(q_, k_, v_, scale, causal), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def vmem_analysis(
+    s: int, d: int, blocks: FlashBlockSizes = FlashBlockSizes(), bytes_per_el: int = 2
+) -> dict:
+    """Static VMEM/MXU analysis of the kernel at a given shape.
+
+    Used by the perf pass (DESIGN.md §Perf) and by
+    ``python/tests/test_kernel.py`` to keep the default block config inside
+    a 16 MiB VMEM budget with MXU-aligned tiles.
+    """
+    bq, bk = blocks.block_q, blocks.block_k
+    vmem = (
+        bq * d  # q tile
+        + 2 * bk * d  # current k, v tiles
+        + 2 * bk * d  # double-buffered next k, v tiles
+        + bq * d  # output tile
+    ) * bytes_per_el + (
+        bq * d + 2 * bq  # f32 acc + m + l carry
+        + bq * bk  # f32 score tile
+    ) * 4
+    flops = 4 * s * s * d  # 2 matmuls x 2 flops, per (batch·head), full s
+    hbm_bytes = (3 * s * d + s * d) * bytes_per_el  # q,k,v read + o write
+    return {
+        "vmem_bytes": vmem,
+        "vmem_mib": vmem / (1 << 20),
+        "mxu_aligned": bq % 8 == 0 and bk % 128 == 0 or bk % 8 == 0,
+        "arithmetic_intensity_flops_per_byte": flops / hbm_bytes,
+        "score_matrix_avoided_bytes": s * s * bytes_per_el,
+    }

@@ -1,0 +1,104 @@
+"""L1 Pallas kernel: fused scale + causal-mask + softmax.
+
+This is Megatron-LM's "scaled masked softmax" fusion, the kernel the
+paper's §3.2 identifies as the real source of BPipe's GPT-3 win: the
+unfused path (see ``ref.unfused_scaled_softmax``) launches separate
+bf16→f32 cast, scale, mask, softmax and f32→bf16 kernels — five-plus HBM
+round-trips over the (b·a, s, s) score tensor — while the fused kernel
+does one read and one write with the f32 math kept in VMEM.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): instead of a CUDA block
+per softmax row with warp reductions, we grid over
+(batch·heads, ceil(s_q / rows_block)) and stage a (rows_block, s_k) tile
+in VMEM; the row reductions are plain VPU reductions over the lane axis.
+
+Runs under ``interpret=True`` (CPU PJRT); numerics validated against
+``ref.ref_scaled_softmax`` in python/tests/test_kernel.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+__all__ = ["fused_scaled_softmax"]
+
+DEFAULT_ROWS_BLOCK = 64
+NEG_INF = -1e30
+
+
+def _softmax_kernel(x_ref, o_ref, *, scale: float, causal: bool, s_q: int, s_k: int):
+    rows_block = x_ref.shape[0]
+    row_tile = pl.program_id(1)
+    # Single VMEM-resident pass: upcast once, scale, mask, reduce, exp,
+    # normalize, downcast once.
+    x = x_ref[...].astype(jnp.float32) * scale
+    if causal:
+        q_pos = (
+            row_tile * rows_block
+            + jax.lax.broadcasted_iota(jnp.int32, (rows_block, s_k), 0)
+            + (s_k - s_q)
+        )
+        k_pos = jax.lax.broadcasted_iota(jnp.int32, (rows_block, s_k), 1)
+        x = jnp.where(k_pos <= q_pos, x, NEG_INF)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    p = jnp.exp(x - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = (p / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def fused_scaled_softmax(
+    scores: jnp.ndarray,
+    scale: float,
+    causal: bool = True,
+    rows_block: int = DEFAULT_ROWS_BLOCK,
+) -> jnp.ndarray:
+    """Fused scale+mask+softmax over (bh, s_q, s_k) scores.
+
+    Semantically identical to ``ref.ref_scaled_softmax`` /
+    ``ref.unfused_scaled_softmax``; structurally a single Pallas kernel.
+    """
+    bh, s_q, s_k = scores.shape
+    rb = min(rows_block, s_q)
+    if s_q % rb != 0:
+        raise ValueError(f"s_q={s_q} must be divisible by rows_block={rb}")
+    kernel = functools.partial(
+        _softmax_kernel, scale=scale, causal=causal, s_q=s_q, s_k=s_k
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, s_q // rb),
+        in_specs=[pl.BlockSpec((None, rb, s_k), lambda b, i: (b, i, 0))],
+        out_specs=pl.BlockSpec((None, rb, s_k), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(scores.shape, scores.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(scores)
+
+
+def _fused_fwd(scores, scale, causal, rows_block):
+    out = fused_scaled_softmax(scores, scale, causal, rows_block)
+    return out, out
+
+
+def _fused_bwd(scale, causal, rows_block, out, g):
+    # d softmax: p * (g - sum(g * p)).  The mask/scale fold into the chain
+    # rule the same way as for the reference implementation.
+    out_f = out.astype(jnp.float32)
+    g_f = g.astype(jnp.float32)
+    dot = jnp.sum(g_f * out_f, axis=-1, keepdims=True)
+    dscores = out_f * (g_f - dot) * scale
+    return (dscores.astype(out.dtype),)
+
+
+fused_scaled_softmax.defvjp(_fused_fwd, _fused_bwd)
+
+
+# Re-export the unfused baseline so model.py has one import site for all
+# three attention-softmax variants.
+unfused_scaled_softmax = ref.unfused_scaled_softmax

@@ -1,0 +1,93 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Everything here is deliberately written in the most direct jnp form; the
+pytest suite asserts the Pallas kernels (fused_softmax, flash_attention)
+match these references to tight tolerances across shape/dtype sweeps.
+
+The *unfused* softmax path (``unfused_scaled_softmax``) is also the
+performance baseline the paper's §3.2 profiles on GPT-3: separate
+bf16→f32 cast, scale, mask, softmax and f32→bf16 cast kernels, each a
+full HBM round-trip on a real accelerator.  We keep the casts explicit so
+they survive into the lowered HLO and can be pointed at from the cost
+model in ``rust/src/sim/costmodel.rs``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ref_scaled_softmax",
+    "unfused_scaled_softmax",
+    "ref_attention",
+]
+
+
+def _causal_mask(s_q: int, s_k: int) -> jnp.ndarray:
+    """Boolean (s_q, s_k) mask, True where attention is allowed.
+
+    Query i (global position ``s_k - s_q + i``) may attend to keys ``<= i``;
+    supports rectangular score matrices for block-wise tests.
+    """
+    q_pos = jnp.arange(s_q)[:, None] + (s_k - s_q)
+    k_pos = jnp.arange(s_k)[None, :]
+    return k_pos <= q_pos
+
+
+def ref_scaled_softmax(scores: jnp.ndarray, scale: float, causal: bool = True) -> jnp.ndarray:
+    """Numerically stable scale+mask+softmax over the last axis, f32 math.
+
+    ``scores``: (..., s_q, s_k).  Returns the same dtype as the input.
+    This is the semantic oracle for the fused Pallas kernel.
+    """
+    dtype = scores.dtype
+    x = scores.astype(jnp.float32) * scale
+    if causal:
+        mask = _causal_mask(scores.shape[-2], scores.shape[-1])
+        x = jnp.where(mask, x, jnp.float32(-1e30))
+    x = x - jnp.max(x, axis=-1, keepdims=True)
+    p = jnp.exp(x)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return p.astype(dtype)
+
+
+def unfused_scaled_softmax(scores: jnp.ndarray, scale: float, causal: bool = True) -> jnp.ndarray:
+    """The *unfused* baseline: distinct cast / scale / mask / softmax steps.
+
+    Matches ``ref_scaled_softmax`` numerically; differs in op structure —
+    each `astype` and elementwise op is a separate HLO op (a separate
+    memory-bound kernel on a real GPU, cf. paper §3.2 experiment (7)).
+    """
+    dtype = scores.dtype
+    x = scores.astype(jnp.float32)  # cast kernel 1: bf16 -> f32
+    x = x * jnp.float32(scale)  # scale kernel
+    if causal:
+        mask = _causal_mask(scores.shape[-2], scores.shape[-1])
+        x = jnp.where(mask, x, jnp.float32(-1e30))  # mask kernel
+    x = jax.nn.softmax(x, axis=-1)  # softmax (itself ≥3 passes)
+    return x.astype(dtype)  # cast kernel 2: f32 -> bf16
+
+
+def ref_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    scale: float | None = None,
+    causal: bool = True,
+) -> jnp.ndarray:
+    """Reference multi-head attention core.
+
+    q, k, v: (bh, s, d) — batch*heads collapsed in the leading dim.
+    Returns (bh, s_q, d), same dtype as q.  All math in f32.
+    """
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    dtype = q.dtype
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bqd,bkd->bqk", qf, kf)
+    p = ref_scaled_softmax(scores, scale, causal=causal).astype(jnp.float32)
+    out = jnp.einsum("bqk,bkd->bqd", p, vf)
+    return out.astype(dtype)

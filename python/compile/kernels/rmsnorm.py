@@ -1,0 +1,99 @@
+"""L1 Pallas kernel: fused RMSNorm (LLaMA's normalization).
+
+RMSNorm is one of the memory-bound elementwise ops the simulator's cost
+model charges per layer (`ELEM_FWD_B`/`ELEM_BWD_B` in
+rust/src/sim/costmodel.rs).  Unfused it is ≥3 HBM passes (square-mean
+reduce, rsqrt broadcast, scale-by-gain); fused it is one read + one
+write with the reduction kept in VMEM — the same single-pass argument as
+the fused softmax of paper §3.2, applied to the norm.
+
+TPU adaptation: grid over row tiles of the flattened (rows, h) input;
+one (rows_block, h) tile resident in VMEM per step; the row reduction is
+a VPU lane reduction.  `interpret=True` as always (CPU PJRT).
+
+Autodiff: custom_vjp with the closed-form RMSNorm gradient.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["fused_rmsnorm", "ref_rmsnorm"]
+
+DEFAULT_ROWS_BLOCK = 64
+EPS = 1e-5
+
+
+def ref_rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float = EPS) -> jnp.ndarray:
+    """Reference RMSNorm over the last axis: x * rsqrt(mean(x²) + ε) * g."""
+    ms = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(ms + eps) * g).astype(x.dtype)
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)  # (rows_block, h) in VMEM
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + eps) * g_ref[...].astype(jnp.float32)).astype(
+        o_ref.dtype
+    )
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def fused_rmsnorm(
+    x: jnp.ndarray,
+    g: jnp.ndarray,
+    eps: float = EPS,
+    rows_block: int = DEFAULT_ROWS_BLOCK,
+) -> jnp.ndarray:
+    """Fused RMSNorm over (..., h); `g` is the (h,) gain vector."""
+    orig_shape = x.shape
+    h = orig_shape[-1]
+    rows = 1
+    for d in orig_shape[:-1]:
+        rows *= d
+    x2 = x.reshape(rows, h)
+    rb = min(rows_block, rows)
+    if rows % rb != 0:
+        # fall back to a single whole-array tile for awkward row counts
+        rb = rows
+    kernel = functools.partial(_rmsnorm_kernel, eps=eps)
+    out = pl.pallas_call(
+        kernel,
+        grid=(rows // rb,),
+        in_specs=[
+            pl.BlockSpec((rb, h), lambda i: (i, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rb, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, h), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x2, g)
+    return out.reshape(orig_shape)
+
+
+def _fwd(x, g, eps, rows_block):
+    return fused_rmsnorm(x, g, eps, rows_block), (x, g)
+
+
+def _bwd(eps, rows_block, res, dy):
+    # closed-form RMSNorm VJP:
+    #   r = rsqrt(mean(x²)+ε); y = x·r·g
+    #   dx = r·(dy·g − x·r²·mean(x·dy·g))
+    #   dg = Σ_rows dy·x·r
+    x, g = res
+    xf = x.astype(jnp.float32)
+    dyf = dy.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    r = jax.lax.rsqrt(ms + eps)
+    dyg = dyf * gf
+    dx = r * (dyg - xf * (r * r) * jnp.mean(xf * dyg, axis=-1, keepdims=True))
+    dg = jnp.sum((dyf * xf * r).reshape(-1, x.shape[-1]), axis=0)
+    return dx.astype(x.dtype), dg.astype(g.dtype)
+
+
+fused_rmsnorm.defvjp(_fwd, _bwd)

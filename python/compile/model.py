@@ -1,0 +1,360 @@
+"""L2: JAX transformer pipeline-stage model (build-time only).
+
+Defines the compute graphs that the rust coordinator (L3) executes through
+AOT-compiled XLA artifacts.  The model is cut into pipeline *stages* the
+way Megatron-LM cuts it (paper §3.1):
+
+* ``first`` stage — token (+ learned position, GPT) embedding, then
+  ``layers_per_stage`` transformer blocks;
+* ``mid`` stages — ``layers_per_stage`` transformer blocks;
+* ``last`` stage — blocks, final norm, LM head and mean cross-entropy.
+
+Two model families, matching the paper's Table 2 subjects:
+
+* ``gpt``  — GPT-3 style: LayerNorm, learned positions, GELU 4h FFN;
+* ``llama``— LLaMA style: RMSNorm, rotary embeddings, SwiGLU FFN whose
+  three matmuls give the same 16bsh² FLOPs as GPT's FFN (paper Eq. 1
+  discussion).
+
+Three attention paths, matching Table 3's "attention method" column:
+
+* ``naive`` — unfused scale/softmax with explicit f32 casts (the slow
+  kernels the paper profiles in experiment (7));
+* ``fused`` — Pallas fused scale+mask+softmax (Megatron's fused kernel,
+  experiment (8));
+* ``flash`` — Pallas flash attention (experiments (4)–(6), (9)–(10)).
+
+Parameters cross the rust boundary as a single flat f32 vector per stage
+(``ravel_pytree``), so the coordinator stays shape-agnostic; every
+function here is pure and jit/lowerable.  Backward functions recompute
+the forward from the stashed stage *input* (stage-granularity activation
+checkpointing) — the stash is exactly the tensor BPipe evicts/loads.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from .kernels import FlashBlockSizes, flash_attention, fused_scaled_softmax
+from .kernels.ref import unfused_scaled_softmax
+from .kernels.rmsnorm import fused_rmsnorm
+
+__all__ = ["ModelSpec", "StageFns", "make_stage_fns", "adam_step", "ADAM_HYPERS"]
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    """Static model + parallelism shape; fixed at AOT-lowering time."""
+
+    family: str = "gpt"  # 'gpt' | 'llama'
+    h: int = 256  # hidden size
+    a: int = 8  # attention heads
+    s: int = 128  # sequence length
+    v: int = 4096  # vocabulary size
+    layers_per_stage: int = 2
+    stages: int = 4  # pipeline stages (p)
+    b: int = 2  # microbatch size
+    attention: str = "fused"  # 'naive' | 'fused' | 'flash'
+    flash_block_q: int = 64
+    flash_block_k: int = 64
+    #: route LLaMA's RMSNorm through the fused Pallas kernel
+    fused_rmsnorm: bool = False
+
+    def __post_init__(self):
+        if self.family not in ("gpt", "llama"):
+            raise ValueError(f"unknown family {self.family!r}")
+        if self.attention not in ("naive", "fused", "flash"):
+            raise ValueError(f"unknown attention {self.attention!r}")
+        if self.h % self.a != 0:
+            raise ValueError("h must be divisible by a")
+
+    @property
+    def d_head(self) -> int:
+        return self.h // self.a
+
+    @property
+    def ffn_hidden(self) -> int:
+        if self.family == "gpt":
+            return 4 * self.h
+        # LLaMA: 8h/3 rounded up to a multiple of 128 (weight-matrix tiling).
+        f = (8 * self.h) // 3
+        return ((f + 127) // 128) * 128
+
+    @property
+    def total_layers(self) -> int:
+        return self.layers_per_stage * self.stages
+
+    def with_b(self, b: int) -> "ModelSpec":
+        return replace(self, b=b)
+
+
+ADAM_HYPERS = dict(b1=0.9, b2=0.95, eps=1e-8)
+
+
+# --------------------------------------------------------------------------
+# Parameter initialization (pytrees; flattened at the API boundary)
+# --------------------------------------------------------------------------
+
+
+def _init_linear(key, n_in, n_out, scale=0.02, bias=True):
+    w = jax.random.normal(key, (n_in, n_out), jnp.float32) * scale
+    if bias:
+        return {"w": w, "b": jnp.zeros((n_out,), jnp.float32)}
+    return {"w": w}
+
+
+def _init_block(key, spec: ModelSpec):
+    ks = jax.random.split(key, 8)
+    # Residual-output projections scaled down with depth (GPT-2 init).
+    out_scale = 0.02 / (2.0 * spec.total_layers) ** 0.5
+    bias = spec.family == "gpt"
+    p: dict[str, Any] = {
+        "attn": {
+            "wq": _init_linear(ks[0], spec.h, spec.h, bias=bias),
+            "wk": _init_linear(ks[1], spec.h, spec.h, bias=bias),
+            "wv": _init_linear(ks[2], spec.h, spec.h, bias=bias),
+            "wo": _init_linear(ks[3], spec.h, spec.h, scale=out_scale, bias=bias),
+        },
+    }
+    if spec.family == "gpt":
+        p["ln1"] = {"g": jnp.ones((spec.h,)), "b": jnp.zeros((spec.h,))}
+        p["ln2"] = {"g": jnp.ones((spec.h,)), "b": jnp.zeros((spec.h,))}
+        p["ffn"] = {
+            "w1": _init_linear(ks[4], spec.h, spec.ffn_hidden),
+            "w2": _init_linear(ks[5], spec.ffn_hidden, spec.h, scale=out_scale),
+        }
+    else:
+        p["ln1"] = {"g": jnp.ones((spec.h,))}
+        p["ln2"] = {"g": jnp.ones((spec.h,))}
+        p["ffn"] = {
+            "w1": _init_linear(ks[4], spec.h, spec.ffn_hidden, bias=False),
+            "w3": _init_linear(ks[6], spec.h, spec.ffn_hidden, bias=False),
+            "w2": _init_linear(ks[5], spec.ffn_hidden, spec.h, scale=out_scale, bias=False),
+        }
+    return p
+
+
+def _init_stage(key, spec: ModelSpec, kind: str):
+    ks = jax.random.split(key, spec.layers_per_stage + 2)
+    p: dict[str, Any] = {
+        "blocks": [_init_block(ks[i], spec) for i in range(spec.layers_per_stage)]
+    }
+    if kind == "first":
+        p["tok_emb"] = jax.random.normal(ks[-1], (spec.v, spec.h), jnp.float32) * 0.02
+        if spec.family == "gpt":
+            p["pos_emb"] = jax.random.normal(ks[-2], (spec.s, spec.h), jnp.float32) * 0.01
+    elif kind == "last":
+        if spec.family == "gpt":
+            p["ln_f"] = {"g": jnp.ones((spec.h,)), "b": jnp.zeros((spec.h,))}
+        else:
+            p["ln_f"] = {"g": jnp.ones((spec.h,))}
+        p["head"] = _init_linear(ks[-1], spec.h, spec.v, bias=False)
+    elif kind != "mid":
+        raise ValueError(f"unknown stage kind {kind!r}")
+    return p
+
+
+# --------------------------------------------------------------------------
+# Forward pieces
+# --------------------------------------------------------------------------
+
+
+def _layernorm(x, p, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return y * p["g"] + p["b"]
+
+
+def _rmsnorm(x, p, eps=1e-5):
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * p["g"]
+
+
+def _norm(x, p, spec: ModelSpec):
+    if spec.family == "gpt":
+        return _layernorm(x, p)
+    if spec.fused_rmsnorm:
+        return fused_rmsnorm(x, p["g"])
+    return _rmsnorm(x, p)
+
+
+def _linear(x, p):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def _rotary(x: jnp.ndarray, base: float = 10000.0) -> jnp.ndarray:
+    """RoPE over (b, s, a, d): rotate consecutive feature pairs."""
+    b, s, a, d = x.shape
+    half = d // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = jnp.arange(s, dtype=jnp.float32)[:, None] * freqs[None, :]  # (s, half)
+    cos = jnp.cos(angles)[None, :, None, :]
+    sin = jnp.sin(angles)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attention(x, p, spec: ModelSpec):
+    b, s, h = x.shape
+    a, d = spec.a, spec.d_head
+    q = _linear(x, p["wq"]).reshape(b, s, a, d)
+    k = _linear(x, p["wk"]).reshape(b, s, a, d)
+    v = _linear(x, p["wv"]).reshape(b, s, a, d)
+    if spec.family == "llama":
+        q, k = _rotary(q), _rotary(k)
+    # (b, s, a, d) -> (b*a, s, d)
+    to_bh = lambda t: t.transpose(0, 2, 1, 3).reshape(b * a, s, d)
+    q, k, v = to_bh(q), to_bh(k), to_bh(v)
+    scale = 1.0 / (d**0.5)
+
+    if spec.attention == "flash":
+        o = flash_attention(
+            q, k, v, scale, True, FlashBlockSizes(spec.flash_block_q, spec.flash_block_k)
+        )
+    else:
+        scores = jnp.einsum("bqd,bkd->bqk", q, k)
+        if spec.attention == "fused":
+            probs = fused_scaled_softmax(scores, scale, True)
+        else:  # 'naive' — the unfused multi-kernel path of paper exp. (7)
+            probs = unfused_scaled_softmax(scores, scale, True)
+        o = jnp.einsum("bqk,bkd->bqd", probs, v)
+
+    o = o.reshape(b, a, s, d).transpose(0, 2, 1, 3).reshape(b, s, h)
+    return _linear(o, p["wo"])
+
+
+def _ffn(x, p, spec: ModelSpec):
+    if spec.family == "gpt":
+        return _linear(jax.nn.gelu(_linear(x, p["w1"])), p["w2"])
+    return _linear(jax.nn.silu(_linear(x, p["w1"])) * _linear(x, p["w3"]), p["w2"])
+
+
+def _block(x, p, spec: ModelSpec):
+    x = x + _attention(_norm(x, p["ln1"], spec), p["attn"], spec)
+    x = x + _ffn(_norm(x, p["ln2"], spec), p["ffn"], spec)
+    return x
+
+
+def _blocks(x, p, spec: ModelSpec):
+    for bp in p["blocks"]:
+        x = _block(x, bp, spec)
+    return x
+
+
+def _embed(tokens, p, spec: ModelSpec):
+    x = p["tok_emb"][tokens]
+    if spec.family == "gpt":
+        x = x + p["pos_emb"][None, : tokens.shape[1], :]
+    return x
+
+
+def _head_loss(x, targets, p, spec: ModelSpec):
+    x = _norm(x, p["ln_f"], spec)
+    logits = _linear(x, p["head"])  # (b, s, v)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# --------------------------------------------------------------------------
+# Stage-level API (flat parameter vectors)
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class StageFns:
+    """Pure functions for one stage kind over *flat* f32 param vectors.
+
+    fwd/bwd signatures (x: f32[b,s,h], tokens/targets: i32[b,s]):
+      first: fwd(flat, tokens) -> x          bwd(flat, tokens, dy) -> (dflat,)
+      mid:   fwd(flat, x) -> y               bwd(flat, x, dy) -> (dx, dflat)
+      last:  fwd(flat, x, targets) -> loss   bwd(flat, x, targets) -> (dx, dflat, loss)
+
+    ``bwd`` recomputes the forward from the stashed stage input (the
+    BPipe-evictable activation) — stage-granularity checkpointing.
+    """
+
+    kind: str
+    n_params: int
+    init: Callable  # (seed: i32) -> flat
+    fwd: Callable
+    bwd: Callable
+    unravel: Callable = field(repr=False, default=None)
+
+
+def make_stage_fns(spec: ModelSpec, kind: str) -> StageFns:
+    """Build flat-parameter stage functions for ``kind`` ∈ first|mid|last."""
+    template = _init_stage(jax.random.PRNGKey(0), spec, kind)
+    flat0, unravel = ravel_pytree(template)
+    n = flat0.size
+
+    def init(seed):
+        p = _init_stage(jax.random.PRNGKey(seed), spec, kind)
+        return (ravel_pytree(p)[0],)
+
+    if kind == "first":
+
+        def fwd(flat, tokens):
+            return (_blocks(_embed(tokens, unravel(flat), spec), unravel(flat), spec),)
+
+        def bwd(flat, tokens, dy):
+            _, vjp = jax.vjp(lambda f: fwd(f, tokens)[0], flat)
+            return (vjp(dy)[0],)
+
+    elif kind == "mid":
+
+        def fwd(flat, x):
+            return (_blocks(x, unravel(flat), spec),)
+
+        def bwd(flat, x, dy):
+            _, vjp = jax.vjp(lambda f, x_: fwd(f, x_)[0], flat, x)
+            dflat, dx = vjp(dy)
+            return (dx, dflat)
+
+    elif kind == "last":
+
+        def fwd(flat, x, targets):
+            p = unravel(flat)
+            return (_head_loss(_blocks(x, p, spec), targets, p, spec),)
+
+        def bwd(flat, x, targets):
+            loss, vjp = jax.vjp(lambda f, x_: fwd(f, x_, targets)[0], flat, x)
+            dflat, dx = vjp(jnp.float32(1.0))
+            return (dx, dflat, loss)
+
+    else:
+        raise ValueError(f"unknown stage kind {kind!r}")
+
+    return StageFns(kind=kind, n_params=int(n), init=init, fwd=fwd, bwd=bwd, unravel=unravel)
+
+
+# --------------------------------------------------------------------------
+# Optimizer (one artifact per flat-vector length)
+# --------------------------------------------------------------------------
+
+
+def adam_step(p, g, m, v, step, lr):
+    """Adam with bias correction; (β1, β2, ε) = (0.9, 0.95, 1e-8).
+
+    ``step`` is the 1-based update index (i32 scalar), ``lr`` an f32
+    scalar, everything else flat f32 vectors of equal length.  Returns
+    (p', m', v').  The paper's §4 model ignores optimizer cost; we still
+    run it for real so training actually converges.
+    """
+    b1, b2, eps = ADAM_HYPERS["b1"], ADAM_HYPERS["b2"], ADAM_HYPERS["eps"]
+    t = step.astype(jnp.float32)
+    m = b1 * m + (1.0 - b1) * g
+    v = b2 * v + (1.0 - b2) * jnp.square(g)
+    m_hat = m / (1.0 - b1**t)
+    v_hat = v / (1.0 - b2**t)
+    p = p - lr * m_hat / (jnp.sqrt(v_hat) + eps)
+    return (p, m, v)

@@ -1,0 +1,209 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes/block sizes; assert_allclose against
+ref.py.  This is the CORE correctness signal for the kernels that end up
+inside every AOT artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import (
+    FlashBlockSizes,
+    flash_attention,
+    fused_scaled_softmax,
+    ref,
+    vmem_analysis,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5), jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bh=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([64, 128, 256]),
+    d=st.sampled_from([16, 32, 64]),
+    causal=st.booleans(),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_flash_matches_ref(bh, s, d, causal, dtype):
+    q, k, v = (_rand(i, (bh, s, d), dtype) for i in range(3))
+    out = flash_attention(q, k, v, None, causal)
+    want = ref.ref_attention(q, k, v, None, causal)
+    assert out.dtype == dtype
+    assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), **TOL[dtype]
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    block_q=st.sampled_from([16, 32, 64, 128]),
+    block_k=st.sampled_from([16, 32, 64, 128]),
+)
+def test_flash_block_size_invariance(block_q, block_k):
+    """Result must not depend on the tiling (pure performance knob)."""
+    q, k, v = (_rand(i, (2, 128, 32), jnp.float32) for i in range(3))
+    out = flash_attention(q, k, v, None, True, FlashBlockSizes(block_q, block_k))
+    want = ref.ref_attention(q, k, v)
+    assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_custom_scale():
+    q, k, v = (_rand(i, (2, 64, 32), jnp.float32) for i in range(3))
+    out = flash_attention(q, k, v, 0.05, True)
+    want = ref.ref_attention(q, k, v, 0.05, True)
+    assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_rejects_indivisible_seq():
+    q, k, v = (_rand(i, (1, 96, 16), jnp.float32) for i in range(3))
+    with pytest.raises(ValueError, match="divisible"):
+        flash_attention(q, k, v, None, True, FlashBlockSizes(64, 64))
+
+
+def test_flash_grads_match_ref():
+    q, k, v = (_rand(i, (2, 128, 32), jnp.float32) for i in range(3))
+
+    def loss_flash(q, k, v):
+        return jnp.sum(flash_attention(q, k, v) ** 2)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(ref.ref_attention(q, k, v) ** 2)
+
+    g = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    gw = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for got, want in zip(g, gw):
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_flash_causality():
+    """Perturbing future keys must not change earlier outputs."""
+    q, k, v = (_rand(i, (1, 128, 16), jnp.float32) for i in range(3))
+    out = flash_attention(q, k, v, None, True)
+    k2 = k.at[:, 100:, :].add(7.0)
+    v2 = v.at[:, 100:, :].add(-3.0)
+    out2 = flash_attention(q, k2, v2, None, True)
+    assert_allclose(np.asarray(out[:, :100]), np.asarray(out2[:, :100]), rtol=1e-6, atol=1e-6)
+    assert not np.allclose(np.asarray(out[:, 100:]), np.asarray(out2[:, 100:]))
+
+
+def test_flash_rows_sum_via_uniform_v():
+    """With v = ones, output must be exactly ones (softmax rows sum to 1)."""
+    q, k = (_rand(i, (2, 64, 16), jnp.float32) for i in range(2))
+    v = jnp.ones((2, 64, 16), jnp.float32)
+    out = flash_attention(q, k, v, None, True)
+    assert_allclose(np.asarray(out), np.ones_like(out), rtol=1e-6, atol=1e-6)
+
+
+def test_flash_jit_and_lowerable():
+    q, k, v = (_rand(i, (2, 64, 16), jnp.float32) for i in range(3))
+    jitted = jax.jit(lambda q, k, v: flash_attention(q, k, v))
+    assert_allclose(
+        np.asarray(jitted(q, k, v)),
+        np.asarray(ref.ref_attention(q, k, v)),
+        rtol=2e-5,
+        atol=2e-5,
+    )
+    # and it lowers to HLO text (the AOT interchange format)
+    hlo = jax.jit(lambda q, k, v: (flash_attention(q, k, v),)).lower(q, k, v)
+    assert "ENTRY" in hlo.compiler_ir("hlo").as_hlo_text()
+
+
+# --------------------------------------------------------------------------
+# fused softmax
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bh=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([64, 128, 256]),
+    causal=st.booleans(),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    scale=st.sampled_from([1.0, 0.125, 0.08838834764831845]),
+)
+def test_fused_softmax_matches_ref(bh, s, causal, dtype, scale):
+    x = _rand(11, (bh, s, s), dtype)
+    out = fused_scaled_softmax(x, scale, causal)
+    want = ref.ref_scaled_softmax(x, scale, causal)
+    assert out.dtype == dtype
+    assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), **TOL[dtype]
+    )
+
+
+def test_fused_matches_unfused_baseline():
+    """The fused kernel and the paper's unfused path are numerically equal."""
+    x = _rand(3, (4, 128, 128), jnp.float32)
+    fused = fused_scaled_softmax(x, 0.125, True)
+    unfused = ref.unfused_scaled_softmax(x, 0.125, True)
+    assert_allclose(np.asarray(fused), np.asarray(unfused), rtol=1e-6, atol=1e-6)
+
+
+def test_fused_softmax_rows_sum_to_one():
+    x = _rand(5, (2, 128, 128), jnp.float32)
+    out = np.asarray(fused_scaled_softmax(x, 0.3, True))
+    assert_allclose(out.sum(-1), np.ones(out.shape[:-1]), rtol=1e-6, atol=1e-6)
+
+
+def test_fused_softmax_causal_zeros():
+    x = _rand(6, (1, 64, 64), jnp.float32)
+    out = np.asarray(fused_scaled_softmax(x, 1.0, True))
+    assert np.all(out[0][np.triu_indices(64, k=1)] == 0.0)
+
+
+def test_fused_softmax_grad_matches_ref():
+    x = _rand(7, (2, 64, 64), jnp.float32)
+    g = jax.grad(lambda x: jnp.sum(fused_scaled_softmax(x, 0.2, True) ** 3))(x)
+    gw = jax.grad(lambda x: jnp.sum(ref.ref_scaled_softmax(x, 0.2, True) ** 3))(x)
+    assert_allclose(np.asarray(g), np.asarray(gw), rtol=1e-4, atol=1e-5)
+
+
+def test_fused_softmax_rows_block_invariance():
+    x = _rand(8, (2, 128, 128), jnp.float32)
+    a = fused_scaled_softmax(x, 0.5, True, rows_block=16)
+    b = fused_scaled_softmax(x, 0.5, True, rows_block=128)
+    assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-7, atol=1e-7)
+
+
+def test_fused_softmax_extreme_values_stable():
+    """Large logits must not overflow (the f32-in-VMEM argument of §3.2)."""
+    x = jnp.full((1, 64, 64), 3e4, jnp.float32)
+    out = np.asarray(fused_scaled_softmax(x, 1.0, True))
+    assert np.isfinite(out).all()
+
+
+# --------------------------------------------------------------------------
+# structural / perf analysis
+# --------------------------------------------------------------------------
+
+
+def test_vmem_budget_default_blocks():
+    """Default flash tiles stay inside a 16 MiB VMEM budget at paper scale."""
+    for d in (64, 96, 128):
+        info = vmem_analysis(s=2048, d=d)
+        assert info["vmem_mib"] < 16.0, info
+
+
+def test_vmem_analysis_reports_score_matrix_saving():
+    info = vmem_analysis(s=2048, d=128)
+    # the avoided (s, s) score tensor dominates what non-flash stores
+    assert info["score_matrix_avoided_bytes"] == 2048 * 2048 * 2
+    assert info["arithmetic_intensity_flops_per_byte"] > 100

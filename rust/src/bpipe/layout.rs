@@ -1,0 +1,141 @@
+//! Device placement of pipeline stages — paper Figure 2.
+//!
+//! BPipe's evict/load traffic rides the evictor↔acceptor link.  If the
+//! pair lives inside one node it uses NVLink (~300 GB/s) and hides under
+//! compute; across nodes it shares InfiniBand (~25 GB/s per GPU) and may
+//! not.  The **pair-adjacent** assignment places stages so every
+//! (x, p−1−x) pair is intra-node: node `k` hosts the k-th quarter of
+//! stages from the *front* of the pipeline and the k-th quarter from the
+//! *back* (Figure 2's 16-way/2-node example: node 0 = {0..3, 12..15},
+//! node 1 = {4..11}).
+
+use super::pairing::partner;
+
+/// A stage → node assignment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Layout {
+    /// `node_of[stage]` = node index hosting that stage's devices.
+    pub node_of: Vec<u64>,
+    pub n_nodes: u64,
+    pub name: &'static str,
+}
+
+impl Layout {
+    pub fn node_of(&self, stage: u64) -> u64 {
+        self.node_of[stage as usize]
+    }
+
+    /// Is the (stage, partner) pair intra-node?
+    pub fn pair_intra_node(&self, p: u64, stage: u64) -> bool {
+        self.node_of(stage) == self.node_of(partner(p, stage))
+    }
+
+    /// Fraction of evictor/acceptor pairs that stay on-node.
+    pub fn intra_node_pair_fraction(&self, p: u64) -> f64 {
+        let pairs = p / 2;
+        if pairs == 0 {
+            return 1.0;
+        }
+        let ok = (0..pairs).filter(|&x| self.pair_intra_node(p, x)).count();
+        ok as f64 / pairs as f64
+    }
+
+    /// Stages hosted per node (for capacity checks / pretty-printing).
+    pub fn stages_per_node(&self) -> Vec<Vec<u64>> {
+        let mut out = vec![Vec::new(); self.n_nodes as usize];
+        for (stage, &node) in self.node_of.iter().enumerate() {
+            out[node as usize].push(stage as u64);
+        }
+        out
+    }
+}
+
+/// Naive sequential layout: stage `x` → node `x / (p / n_nodes)`.
+/// Pairs span nodes as soon as `n_nodes > 1`.
+pub fn sequential_layout(p: u64, n_nodes: u64) -> Layout {
+    assert!(p % n_nodes == 0, "p ({p}) must divide across nodes ({n_nodes})");
+    let per = p / n_nodes;
+    Layout {
+        node_of: (0..p).map(|x| x / per).collect(),
+        n_nodes,
+        name: "sequential",
+    }
+}
+
+/// Pair-adjacent layout (paper Figure 2): node `k` hosts the k-th slice
+/// of `per/2` stages from the front AND the matching slice from the back,
+/// so every (x, p−1−x) pair is intra-node.
+pub fn pair_adjacent_layout(p: u64, n_nodes: u64) -> Layout {
+    assert!(p % n_nodes == 0, "p ({p}) must divide across nodes ({n_nodes})");
+    let per = p / n_nodes;
+    assert!(per % 2 == 0 || n_nodes == 1, "need an even number of stages per node");
+    let mut node_of = vec![0u64; p as usize];
+    if n_nodes == 1 {
+        return Layout { node_of, n_nodes, name: "pair-adjacent" };
+    }
+    let half = per / 2;
+    for k in 0..n_nodes {
+        for i in 0..half {
+            let front = k * half + i;
+            node_of[front as usize] = k;
+            node_of[partner(p, front) as usize] = k;
+        }
+    }
+    Layout { node_of, n_nodes, name: "pair-adjacent" }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure2_sixteen_way_two_nodes() {
+        // paper Figure 2: p=16 on 2 × 8-GPU nodes
+        let l = pair_adjacent_layout(16, 2);
+        assert_eq!(l.stages_per_node()[0], vec![0, 1, 2, 3, 12, 13, 14, 15]);
+        assert_eq!(l.stages_per_node()[1], vec![4, 5, 6, 7, 8, 9, 10, 11]);
+        assert_eq!(l.intra_node_pair_fraction(16), 1.0);
+    }
+
+    #[test]
+    fn sequential_breaks_pairs() {
+        let l = sequential_layout(16, 2);
+        // every pair (x, 15−x) spans the node boundary
+        assert_eq!(l.intra_node_pair_fraction(16), 0.0);
+    }
+
+    #[test]
+    fn pair_adjacent_always_intra_node() {
+        for (p, n) in [(8u64, 2u64), (8, 4), (16, 2), (16, 4), (32, 4)] {
+            let l = pair_adjacent_layout(p, n);
+            assert_eq!(l.intra_node_pair_fraction(p), 1.0, "p={p} n={n}");
+            // every node hosts exactly p/n stages
+            for stages in l.stages_per_node() {
+                assert_eq!(stages.len() as u64, p / n);
+            }
+        }
+    }
+
+    #[test]
+    fn single_node_trivially_adjacent() {
+        let l = pair_adjacent_layout(8, 1);
+        assert_eq!(l.intra_node_pair_fraction(8), 1.0);
+        let l = sequential_layout(8, 1);
+        assert_eq!(l.intra_node_pair_fraction(8), 1.0);
+    }
+
+    #[test]
+    fn paper_config_p8_four_nodes() {
+        // the paper's main runs: t=4, p=8 on 4 nodes → 2 stages/node
+        let l = pair_adjacent_layout(8, 4);
+        assert_eq!(l.intra_node_pair_fraction(8), 1.0);
+        let seq = sequential_layout(8, 4);
+        assert!(seq.intra_node_pair_fraction(8) < 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "must divide")]
+    fn rejects_indivisible() {
+        sequential_layout(10, 4);
+    }
+}

@@ -1,0 +1,192 @@
+//! BPipe — memory-balanced pipeline parallelism (Kim et al. ICML'23,
+//! re-evaluated by the reproduced paper).
+//!
+//! Plain 1F1B leaves stage `x` holding `p − x` activation stashes.  BPipe
+//! pairs stage `x` (the **evictor**) with stage `p − 1 − x` (the
+//! **acceptor**): whenever the evictor's stash count is about to exceed
+//! `⌈(p+2)/2⌉`, it ships a stash to the acceptor, and loads it back in
+//! time for that microbatch's backward pass (paper §2.2, Figure 1).
+//!
+//! * [`pairing`] — the evictor/acceptor relation and per-stage bounds;
+//! * [`apply_bpipe`] — the schedule transform inserting Evict/Load ops
+//!   into a 1F1B schedule;
+//! * [`layout`] — pair-adjacent device placement so every pair stays
+//!   inside one NVLink island (paper Figure 2).
+
+pub mod layout;
+pub mod pairing;
+
+pub use layout::{pair_adjacent_layout, sequential_layout, Layout};
+pub use pairing::{acceptor_extra_stashes, bound, evictions_at, is_acceptor, is_evictor, partner};
+
+use crate::schedule::{Op, OpKind, Schedule, ScheduleKind};
+
+/// Transform a 1F1B schedule into a BPipe schedule by inserting
+/// Evict/Load ops on evictor stages.
+///
+/// Policy (matching the paper's description — "when the number of
+/// activations is *about to exceed* ⌈(p+2)/2⌉, it sends an activation"):
+///
+/// * **pre-evict**: immediately before a forward that would push the
+///   resident stash past the bound, the newest resident stash (largest
+///   microbatch id — in 1F1B backwards retire in FIFO order, so it is
+///   the one needed furthest in the future, giving the largest
+///   transfer-overlap window) is evicted.  The transfer then overlaps
+///   with that forward's compute, and the bound holds at *every* op
+///   boundary, never just in steady state;
+/// * **prefetch-load**: after a backward frees a slot, the oldest
+///   still-evicted microbatch is loaded back, which always lands before
+///   that microbatch's own backward (enforced by the validator and the
+///   proptests in rust/tests/).
+///
+/// `bound` defaults to [`pairing::bound`]`(p)`; tests inject tighter
+/// bounds to probe edge cases.
+pub fn apply_bpipe(base: &Schedule, bound_override: Option<u64>) -> Schedule {
+    assert_eq!(
+        base.kind,
+        ScheduleKind::OneFOneB,
+        "BPipe applies to the 1F1B schedule (paper §2.2)"
+    );
+    let p = base.p;
+    let k = bound_override.unwrap_or_else(|| pairing::bound(p));
+    assert!(k >= 2, "BPipe bound must be ≥ 2 (one live + one incoming stash)");
+    use std::collections::BTreeSet;
+    let programs = base
+        .programs
+        .iter()
+        .map(|prog| {
+            let mut ops: Vec<Op> = Vec::with_capacity(prog.ops.len() + 8);
+            let mut resident: BTreeSet<u64> = BTreeSet::new();
+            let mut evicted: BTreeSet<u64> = BTreeSet::new();
+            for op in &prog.ops {
+                match op.kind {
+                    OpKind::Fwd => {
+                        if resident.len() as u64 == k {
+                            // pre-evict the newest resident stash
+                            let victim = *resident.iter().next_back().unwrap();
+                            resident.remove(&victim);
+                            evicted.insert(victim);
+                            ops.push(Op::evict(victim));
+                        }
+                        ops.push(*op);
+                        resident.insert(op.mb);
+                    }
+                    OpKind::Bwd => {
+                        if !resident.contains(&op.mb) {
+                            // late load (only reachable with tiny bounds):
+                            // make room first if needed, then load
+                            if resident.len() as u64 == k {
+                                let victim = *resident.iter().next_back().unwrap();
+                                resident.remove(&victim);
+                                evicted.insert(victim);
+                                ops.push(Op::evict(victim));
+                            }
+                            assert!(evicted.remove(&op.mb), "bwd of unknown stash");
+                            resident.insert(op.mb);
+                            ops.push(Op::load(op.mb));
+                        }
+                        ops.push(*op);
+                        resident.remove(&op.mb);
+                        // slot freed: prefetch the oldest still-evicted
+                        if (resident.len() as u64) < k {
+                            if let Some(&mb) = evicted.iter().next() {
+                                evicted.remove(&mb);
+                                resident.insert(mb);
+                                ops.push(Op::load(mb));
+                            }
+                        }
+                    }
+                    OpKind::Evict | OpKind::Load => {
+                        unreachable!("base schedule must be plain 1F1B")
+                    }
+                }
+            }
+            crate::schedule::StageProgram { stage: prog.stage, ops }
+        })
+        .collect();
+    Schedule { p, m: base.m, kind: ScheduleKind::BPipe { bound: k }, programs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::{one_f_one_b, validate, OpKind};
+
+    #[test]
+    fn bounds_every_stage() {
+        let base = one_f_one_b(8, 64);
+        let bp = apply_bpipe(&base, None);
+        validate(&bp).unwrap();
+        for s in 0..8 {
+            assert!(bp.program(s).stash_high_water() <= pairing::bound(8) as i64);
+        }
+    }
+
+    #[test]
+    fn eviction_counts_match_pairing_formula() {
+        let (p, m) = (8, 64);
+        let bp = apply_bpipe(&one_f_one_b(p, m), None);
+        for s in 0..p {
+            let expect = pairing::evictions_at(p, s, m);
+            assert_eq!(bp.count(s, OpKind::Evict) as u64, expect, "stage {s}");
+            assert_eq!(bp.count(s, OpKind::Load) as u64, expect, "stage {s}");
+        }
+    }
+
+    #[test]
+    fn paper_figure1_shape_p4() {
+        // Figure 1: 4-way 1F1B; bound = ceil(6/2) = 3; only stage 0
+        // (natural in-flight 4) evicts.
+        let bp = apply_bpipe(&one_f_one_b(4, 8), None);
+        assert!(bp.count(0, OpKind::Evict) > 0);
+        for s in 1..4 {
+            assert_eq!(bp.count(s, OpKind::Evict), 0, "stage {s} must not evict");
+        }
+    }
+
+    #[test]
+    fn load_precedes_its_bwd() {
+        let bp = apply_bpipe(&one_f_one_b(8, 16), None);
+        for prog in &bp.programs {
+            for (i, op) in prog.ops.iter().enumerate() {
+                if op.kind == OpKind::Bwd {
+                    // if this mb was evicted, a Load must appear before
+                    let evict_pos =
+                        prog.ops.iter().position(|o| o.kind == OpKind::Evict && o.mb == op.mb);
+                    if let Some(e) = evict_pos {
+                        let load_pos = prog
+                            .ops
+                            .iter()
+                            .position(|o| o.kind == OpKind::Load && o.mb == op.mb)
+                            .expect("evicted mb never loaded");
+                        assert!(e < load_pos && load_pos < i);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn no_eviction_when_m_small() {
+        // m ≤ bound: nothing ever exceeds the cap
+        let bp = apply_bpipe(&one_f_one_b(8, 4), None);
+        for s in 0..8 {
+            assert_eq!(bp.count(s, OpKind::Evict), 0);
+        }
+    }
+
+    #[test]
+    fn tighter_override_bound() {
+        let bp = apply_bpipe(&one_f_one_b(8, 32), Some(3));
+        validate(&bp).unwrap();
+        for s in 0..8 {
+            assert!(bp.program(s).stash_high_water() <= 3);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "1F1B")]
+    fn rejects_non_1f1b_base() {
+        apply_bpipe(&crate::schedule::gpipe(4, 8), None);
+    }
+}

@@ -1,0 +1,110 @@
+//! Evictor/acceptor pairing arithmetic (paper §2.2).
+//!
+//! Stage `x` pairs with stage `p − 1 − x`; the pairing is an involution.
+//! Stages in the front half whose natural 1F1B stash count `p − x`
+//! exceeds the bound `⌈(p+2)/2⌉` are evictors; their partners accept.
+
+/// The BPipe per-device stash bound, `⌈(p+2)/2⌉`.
+pub fn bound(p: u64) -> u64 {
+    crate::model::memory::bpipe_bound(p)
+}
+
+/// The paired stage: `p − 1 − x`.
+pub fn partner(p: u64, stage: u64) -> u64 {
+    assert!(stage < p);
+    p - 1 - stage
+}
+
+/// Does `stage` evict under BPipe with `m` microbatches?
+/// True iff its natural 1F1B stash count `min(m, p − x)` exceeds the bound.
+pub fn is_evictor(p: u64, stage: u64, m: u64) -> bool {
+    crate::model::memory::one_f_one_b_in_flight(p, stage, m) > bound(p)
+}
+
+/// Does `stage` accept a partner's evictions?
+pub fn is_acceptor(p: u64, stage: u64, m: u64) -> bool {
+    is_evictor(p, partner(p, stage), m)
+}
+
+/// How many stashes stage `x` must evict over one iteration — the count
+/// of forwards that would push it past the bound.  Under 1F1B every
+/// forward beyond the first `bound` ones (while backwards haven't caught
+/// up) triggers exactly one eviction; in steady state each (Fwd, Bwd)
+/// pair cycles one (Evict, Load).  Total = `m − bound` clipped at 0 when
+/// the stage's warmup never reaches the bound.
+pub fn evictions_at(p: u64, stage: u64, m: u64) -> u64 {
+    let natural = crate::model::memory::one_f_one_b_in_flight(p, stage, m);
+    let k = bound(p);
+    if natural <= k {
+        0
+    } else {
+        // every fwd after the k-th and before the last (natural − k)
+        // backwards have retired pushes one stash out
+        m - k
+    }
+}
+
+/// Extra stashes the acceptor holds at its peak: its partner's overflow,
+/// `max(0, min(m, p − x) − bound)` — at most `⌊(p−2)/2⌋`, keeping the
+/// acceptor itself at ≤ the bound (the balancing theorem of §2.2).
+pub fn acceptor_extra_stashes(p: u64, stage: u64, m: u64) -> u64 {
+    let partner_natural =
+        crate::model::memory::one_f_one_b_in_flight(p, partner(p, stage), m);
+    partner_natural.saturating_sub(bound(p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pairing_is_involution() {
+        for p in [2u64, 4, 8, 16] {
+            for x in 0..p {
+                assert_eq!(partner(p, partner(p, x)), x);
+            }
+        }
+    }
+
+    #[test]
+    fn evictors_are_front_half() {
+        let (p, m) = (8, 64);
+        for x in 0..p {
+            if is_evictor(p, x, m) {
+                assert!(x < p / 2, "evictor {x} must be in the front half");
+                assert!(is_acceptor(p, partner(p, x), m));
+            }
+        }
+        // p=8: bound 5; stages 0,1,2 have natural 8,7,6 > 5 → evictors
+        assert!(is_evictor(8, 0, 64) && is_evictor(8, 2, 64));
+        assert!(!is_evictor(8, 3, 64)); // natural 5 == bound
+    }
+
+    #[test]
+    fn acceptor_total_never_exceeds_bound() {
+        for p in [4u64, 8, 16] {
+            let m = 4 * p;
+            for x in 0..p {
+                let own = crate::model::memory::one_f_one_b_in_flight(p, x, m);
+                let extra = acceptor_extra_stashes(p, x, m);
+                if own <= bound(p) {
+                    assert!(own + extra <= bound(p), "p={p} stage {x}: {own}+{extra}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn no_evictions_for_tiny_m() {
+        for x in 0..8 {
+            assert_eq!(evictions_at(8, x, 3), 0);
+        }
+    }
+
+    #[test]
+    fn eviction_count_example() {
+        // p=8, m=64, bound=5: stage 0 evicts m−5 = 59 stashes over the run
+        assert_eq!(evictions_at(8, 0, 64), 59);
+        assert_eq!(evictions_at(8, 3, 64), 0);
+    }
+}

@@ -1,0 +1,357 @@
+//! Configuration system: model shapes, parallelism, cluster hardware.
+//!
+//! Mirrors the paper's notation (Table 1): `h` hidden size, `a` heads,
+//! `s` sequence length, `l` layers, `v` vocabulary, `b` microbatch size,
+//! `B` global batch size, `t` tensor-parallel size, `p` pipeline stages.
+//!
+//! Experiment configs round-trip through a flat `key = value` config
+//! format so runs are launchable as `bpipe simulate --config f.cfg`.
+
+mod presets;
+
+pub use presets::*;
+
+
+/// Which attention implementation a run uses — the paper's Table 3
+/// "attention method" column.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AttentionMethod {
+    /// Original attention: unfused scale/softmax kernels with f32
+    /// round-trips (paper experiments (1), (7) profile these as the
+    /// slow path) and full activation storage.
+    None,
+    /// Selective activation checkpointing on the attention block
+    /// (Korthikanti et al.): the fused-softmax forward is re-run in the
+    /// backward pass; scores/probs are never stashed.
+    Recompute,
+    /// FlashAttention-2: online-softmax tiling; no (s, s) tensor is ever
+    /// materialized, and the backward recomputes from q/k/v.
+    FlashAttn2,
+}
+
+impl AttentionMethod {
+    pub const ALL: [AttentionMethod; 3] = [
+        AttentionMethod::None,
+        AttentionMethod::Recompute,
+        AttentionMethod::FlashAttn2,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            AttentionMethod::None => "none",
+            AttentionMethod::Recompute => "recompute",
+            AttentionMethod::FlashAttn2 => "flash attn 2",
+        }
+    }
+}
+
+/// Transformer model family; affects FFN structure, norms and the
+/// attention-softmax kernel mix (paper §3.1 / §3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelFamily {
+    /// GPT-3 style: LayerNorm, learned positions, 4h GELU FFN.
+    Gpt,
+    /// LLaMA style: RMSNorm, RoPE, SwiGLU FFN (3 matmuls, ~8h/3 wide —
+    /// same 16bsh² FLOPs as GPT's FFN, paper Eq. 1 discussion).
+    Llama,
+}
+
+/// Model architecture (paper Table 2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub family: ModelFamily,
+    /// hidden dimension size (h)
+    pub h: u64,
+    /// number of attention heads (a)
+    pub a: u64,
+    /// sequence length (s)
+    pub s: u64,
+    /// number of transformer layers (l)
+    pub l: u64,
+    /// vocabulary size (v)
+    pub v: u64,
+}
+
+impl ModelConfig {
+    /// Total parameter count: `12 l h² (1 + 13/(12h)) + v h + s h` — the
+    /// standard GPT estimate (Narayanan et al. 2021, Eq. "P").
+    pub fn total_params(&self) -> u64 {
+        let (h, l, v, s) = (self.h, self.l, self.v, self.s);
+        12 * l * h * h + 13 * l * h + v * h + s * h
+    }
+
+    /// Head dimension (h / a).
+    pub fn d_head(&self) -> u64 {
+        self.h / self.a
+    }
+}
+
+/// Parallelism strategy (paper §3.1: t=4, p=8, B=128).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ParallelConfig {
+    /// tensor parallel size (t)
+    pub t: u64,
+    /// pipeline parallel size (p)
+    pub p: u64,
+    /// global batch size (B), in sequences
+    pub global_batch: u64,
+    /// microbatch size (b), in sequences
+    pub microbatch: u64,
+    /// Megatron sequence parallelism (the paper enables it)
+    pub sequence_parallel: bool,
+}
+
+impl ParallelConfig {
+    /// Number of microbatches per iteration (B / b / dp); the paper runs
+    /// dp = 1 (32 GPUs = t·p = 4·8).
+    pub fn num_microbatches(&self) -> u64 {
+        assert!(
+            self.global_batch % self.microbatch == 0,
+            "B={} not divisible by b={}",
+            self.global_batch,
+            self.microbatch
+        );
+        self.global_batch / self.microbatch
+    }
+
+    /// Devices used by one model replica.
+    pub fn devices(&self) -> u64 {
+        self.t * self.p
+    }
+}
+
+/// Hardware description of the training cluster (paper §3.1: 4 nodes ×
+/// 8 × A100-80GB over NVLink, IB across nodes).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClusterConfig {
+    pub n_nodes: u64,
+    pub gpus_per_node: u64,
+    /// device memory capacity in bytes (80 GiB A100)
+    pub hbm_bytes: u64,
+    /// theoretical peak bf16 FLOP/s per device (A100: 312e12)
+    pub peak_flops: f64,
+    /// HBM bandwidth, bytes/s (A100: 2.0e12)
+    pub hbm_bw: f64,
+    /// NVLink bandwidth per direction, bytes/s (A100: 300e9)
+    pub nvlink_bw: f64,
+    /// inter-node (InfiniBand) bandwidth per GPU, bytes/s
+    pub ib_bw: f64,
+    /// fixed kernel-launch overhead, seconds
+    pub kernel_launch_s: f64,
+    /// memory reserved by framework/context/fragmentation, bytes
+    pub reserved_bytes: u64,
+}
+
+impl ClusterConfig {
+    pub fn total_gpus(&self) -> u64 {
+        self.n_nodes * self.gpus_per_node
+    }
+}
+
+/// One experiment row (paper Table 3): model + parallelism + BPipe flag +
+/// attention method, on a cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    /// paper experiment id ("(1)" … "(10)"), if reproducing a table row
+    pub id: Option<u32>,
+    pub model: ModelConfig,
+    pub parallel: ParallelConfig,
+    pub cluster: ClusterConfig,
+    pub bpipe: bool,
+    pub attention: AttentionMethod,
+}
+
+impl ExperimentConfig {
+    /// Serialize to the launchable flat `key = value` config format.
+    pub fn to_config_text(&self) -> String {
+        let m = &self.model;
+        let p = &self.parallel;
+        let c = &self.cluster;
+        format!(
+            "# bpipe experiment config\n\
+             id = {}\n\
+             model.name = {}\n\
+             model.family = {}\n\
+             model.h = {}\nmodel.a = {}\nmodel.s = {}\nmodel.l = {}\nmodel.v = {}\n\
+             parallel.t = {}\nparallel.p = {}\n\
+             parallel.global_batch = {}\nparallel.microbatch = {}\n\
+             parallel.sequence_parallel = {}\n\
+             cluster.n_nodes = {}\ncluster.gpus_per_node = {}\n\
+             cluster.hbm_bytes = {}\ncluster.peak_flops = {}\n\
+             cluster.hbm_bw = {}\ncluster.nvlink_bw = {}\ncluster.ib_bw = {}\n\
+             cluster.kernel_launch_s = {}\ncluster.reserved_bytes = {}\n\
+             bpipe = {}\nattention = {}\n",
+            self.id.map(|i| i.to_string()).unwrap_or_else(|| "none".into()),
+            m.name,
+            match m.family {
+                ModelFamily::Gpt => "gpt",
+                ModelFamily::Llama => "llama",
+            },
+            m.h, m.a, m.s, m.l, m.v,
+            p.t, p.p, p.global_batch, p.microbatch, p.sequence_parallel,
+            c.n_nodes, c.gpus_per_node, c.hbm_bytes, c.peak_flops,
+            c.hbm_bw, c.nvlink_bw, c.ib_bw, c.kernel_launch_s, c.reserved_bytes,
+            self.bpipe,
+            match self.attention {
+                AttentionMethod::None => "none",
+                AttentionMethod::Recompute => "recompute",
+                AttentionMethod::FlashAttn2 => "flash_attn2",
+            },
+        )
+    }
+
+    /// Parse the flat `key = value` config format ('#' starts a comment).
+    pub fn from_config_text(s: &str) -> anyhow::Result<Self> {
+        let mut kv = std::collections::HashMap::new();
+        for (lineno, raw) in s.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let get = |k: &str| {
+            kv.get(k).cloned().ok_or_else(|| anyhow::anyhow!("config missing key {k:?}"))
+        };
+        let get_u64 = |k: &str| -> anyhow::Result<u64> { Ok(get(k)?.parse()?) };
+        let get_f64 = |k: &str| -> anyhow::Result<f64> { Ok(get(k)?.parse()?) };
+        let get_bool = |k: &str| -> anyhow::Result<bool> { Ok(get(k)?.parse()?) };
+        let id = match get("id")?.as_str() {
+            "none" => None,
+            other => Some(other.parse()?),
+        };
+        Ok(ExperimentConfig {
+            id,
+            model: ModelConfig {
+                name: get("model.name")?,
+                family: match get("model.family")?.as_str() {
+                    "gpt" => ModelFamily::Gpt,
+                    "llama" => ModelFamily::Llama,
+                    other => anyhow::bail!("unknown model.family {other:?}"),
+                },
+                h: get_u64("model.h")?,
+                a: get_u64("model.a")?,
+                s: get_u64("model.s")?,
+                l: get_u64("model.l")?,
+                v: get_u64("model.v")?,
+            },
+            parallel: ParallelConfig {
+                t: get_u64("parallel.t")?,
+                p: get_u64("parallel.p")?,
+                global_batch: get_u64("parallel.global_batch")?,
+                microbatch: get_u64("parallel.microbatch")?,
+                sequence_parallel: get_bool("parallel.sequence_parallel")?,
+            },
+            cluster: ClusterConfig {
+                n_nodes: get_u64("cluster.n_nodes")?,
+                gpus_per_node: get_u64("cluster.gpus_per_node")?,
+                hbm_bytes: get_u64("cluster.hbm_bytes")?,
+                peak_flops: get_f64("cluster.peak_flops")?,
+                hbm_bw: get_f64("cluster.hbm_bw")?,
+                nvlink_bw: get_f64("cluster.nvlink_bw")?,
+                ib_bw: get_f64("cluster.ib_bw")?,
+                kernel_launch_s: get_f64("cluster.kernel_launch_s")?,
+                reserved_bytes: get_u64("cluster.reserved_bytes")?,
+            },
+            bpipe: get_bool("bpipe")?,
+            attention: match get("attention")?.as_str() {
+                "none" => AttentionMethod::None,
+                "recompute" => AttentionMethod::Recompute,
+                "flash_attn2" => AttentionMethod::FlashAttn2,
+                other => anyhow::bail!("unknown attention {other:?}"),
+            },
+        })
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+        Self::from_config_text(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        Ok(std::fs::write(path, self.to_config_text())?)
+    }
+
+    /// Human-readable one-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} t={} p={} b={} B={} bpipe={} attn={}",
+            self.model.name,
+            self.parallel.t,
+            self.parallel.p,
+            self.parallel.microbatch,
+            self.parallel.global_batch,
+            self.bpipe,
+            self.attention.label()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama_65b_params_close_to_65e9() {
+        let m = llama_65b();
+        let p = m.total_params() as f64;
+        assert!((p - 65e9).abs() / 65e9 < 0.05, "got {p:.3e}");
+    }
+
+    #[test]
+    fn gpt3_96b_params_close_to_96e9() {
+        let m = gpt3_96b();
+        let p = m.total_params() as f64;
+        assert!((p - 96e9).abs() / 96e9 < 0.05, "got {p:.3e}");
+    }
+
+    #[test]
+    fn microbatch_count() {
+        let p = ParallelConfig {
+            t: 4,
+            p: 8,
+            global_batch: 128,
+            microbatch: 2,
+            sequence_parallel: true,
+        };
+        assert_eq!(p.num_microbatches(), 64);
+        assert_eq!(p.devices(), 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn microbatch_must_divide() {
+        ParallelConfig {
+            t: 4,
+            p: 8,
+            global_batch: 128,
+            microbatch: 3,
+            sequence_parallel: true,
+        }
+        .num_microbatches();
+    }
+
+    #[test]
+    fn config_text_roundtrip() {
+        for id in [1u32, 8] {
+            let e = paper_experiment(id).unwrap();
+            let s = e.to_config_text();
+            let back = ExperimentConfig::from_config_text(&s).unwrap();
+            assert_eq!(e, back);
+        }
+    }
+
+    #[test]
+    fn config_text_rejects_garbage() {
+        assert!(ExperimentConfig::from_config_text("nonsense line").is_err());
+        assert!(ExperimentConfig::from_config_text("id = 1").is_err()); // missing keys
+    }
+
+    #[test]
+    fn paper_cluster_is_32_gpus() {
+        assert_eq!(paper_cluster().total_gpus(), 32);
+    }
+}

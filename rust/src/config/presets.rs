@@ -1,0 +1,183 @@
+//! Canonical configurations: the paper's models (Table 2), cluster
+//! (§3.1) and the ten Table-3 experiment rows.
+
+use super::*;
+
+/// LLaMA 65B (paper Table 2; architecture constants from Touvron et al.).
+pub fn llama_65b() -> ModelConfig {
+    ModelConfig {
+        name: "LLaMA 65B".into(),
+        family: ModelFamily::Llama,
+        h: 8192,
+        a: 64,
+        s: 2048,
+        l: 80,
+        v: 32000,
+    }
+}
+
+/// GPT-3 96B (paper Table 2: h=9984, a=104, s=2048, l=80).
+pub fn gpt3_96b() -> ModelConfig {
+    ModelConfig {
+        name: "GPT-3 96B".into(),
+        family: ModelFamily::Gpt,
+        h: 9984,
+        a: 104,
+        s: 2048,
+        l: 80,
+        v: 51200,
+    }
+}
+
+/// The paper's testbed: 4 nodes × 8 × NVIDIA A100-80GiB, NVLink inside a
+/// node, InfiniBand across nodes (§3.1).
+pub fn paper_cluster() -> ClusterConfig {
+    ClusterConfig {
+        n_nodes: 4,
+        gpus_per_node: 8,
+        hbm_bytes: 80 * (1 << 30),
+        peak_flops: 312e12, // A100 bf16 dense
+        hbm_bw: 2.0e12,     // HBM2e
+        nvlink_bw: 300e9,   // per direction
+        ib_bw: 25e9,        // 200 Gb/s HDR per GPU
+        kernel_launch_s: 4e-6,
+        // CUDA context + NCCL buffers + allocator fragmentation; tuned so
+        // the paper's feasibility pattern (which b fits without BPipe)
+        // reproduces — see EXPERIMENTS.md §Memory.
+        reserved_bytes: 6 * (1 << 30),
+    }
+}
+
+/// The paper's parallelism: t=4, p=8, B=128, sequence parallel on (§3.1).
+pub fn paper_parallel(microbatch: u64) -> ParallelConfig {
+    ParallelConfig {
+        t: 4,
+        p: 8,
+        global_batch: 128,
+        microbatch,
+        sequence_parallel: true,
+    }
+}
+
+/// Table 3, experiments (1)–(10).
+///
+/// | id | model | b | BPipe | attention | paper MFU % |
+/// |----|-----------|---|-------|-----------|-------------|
+/// | 1  | LLaMA 65B | 1 | no    | none      | 45.3 |
+/// | 2  | LLaMA 65B | 2 | no    | recompute | 46.0 |
+/// | 3  | LLaMA 65B | 4 | yes   | recompute | 42.7 |
+/// | 4  | LLaMA 65B | 1 | no    | flash     | 47.8 |
+/// | 5  | LLaMA 65B | 2 | no    | flash     | 49.2 |
+/// | 6  | LLaMA 65B | 4 | yes   | flash     | 44.0 |
+/// | 7  | GPT-3 96B | 1 | no    | recompute | 34.0 |
+/// | 8  | GPT-3 96B | 2 | yes   | recompute | 45.8 |
+/// | 9  | GPT-3 96B | 1 | no    | flash     | 52.0 |
+/// | 10 | GPT-3 96B | 2 | yes   | flash     | 51.7 |
+pub fn paper_experiment(id: u32) -> Option<ExperimentConfig> {
+    let (model, b, bpipe, attention) = match id {
+        1 => (llama_65b(), 1, false, AttentionMethod::None),
+        2 => (llama_65b(), 2, false, AttentionMethod::Recompute),
+        3 => (llama_65b(), 4, true, AttentionMethod::Recompute),
+        4 => (llama_65b(), 1, false, AttentionMethod::FlashAttn2),
+        5 => (llama_65b(), 2, false, AttentionMethod::FlashAttn2),
+        6 => (llama_65b(), 4, true, AttentionMethod::FlashAttn2),
+        7 => (gpt3_96b(), 1, false, AttentionMethod::Recompute),
+        8 => (gpt3_96b(), 2, true, AttentionMethod::Recompute),
+        9 => (gpt3_96b(), 1, false, AttentionMethod::FlashAttn2),
+        10 => (gpt3_96b(), 2, true, AttentionMethod::FlashAttn2),
+        _ => return None,
+    };
+    Some(ExperimentConfig {
+        id: Some(id),
+        model,
+        parallel: paper_parallel(b),
+        cluster: paper_cluster(),
+        bpipe,
+        attention,
+    })
+}
+
+/// Paper-reported whole-model MFU (Table 3), for paper-vs-ours reports.
+pub fn paper_table3_mfu(id: u32) -> Option<f64> {
+    Some(match id {
+        1 => 45.3,
+        2 => 46.0,
+        3 => 42.7,
+        4 => 47.8,
+        5 => 49.2,
+        6 => 44.0,
+        7 => 34.0,
+        8 => 45.8,
+        9 => 52.0,
+        10 => 51.7,
+        _ => return None,
+    })
+}
+
+/// Paper-reported single-stage MFU (Table 5).
+pub fn paper_table5_mfu(id: u32) -> Option<f64> {
+    Some(match id {
+        1 => 51.1,
+        2 => 54.5,
+        3 => 57.6,
+        4 => 53.6,
+        5 => 58.6,
+        6 => 61.9,
+        7 => 37.8,
+        8 => 55.2,
+        9 => 57.7,
+        10 => 62.4,
+        _ => return None,
+    })
+}
+
+/// All ten Table-3 experiment configs in order.
+pub fn paper_experiments() -> Vec<ExperimentConfig> {
+    (1..=10).map(|i| paper_experiment(i).unwrap()).collect()
+}
+
+/// A laptop-scale config matching the default AOT artifact set
+/// (python/compile/aot.py defaults) — used by the real runtime examples.
+pub fn tiny_model() -> ModelConfig {
+    ModelConfig {
+        name: "tiny-llama".into(),
+        family: ModelFamily::Llama,
+        h: 256,
+        a: 8,
+        s: 128,
+        l: 8,
+        v: 4096,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_ten_experiments_exist() {
+        for i in 1..=10 {
+            let e = paper_experiment(i).unwrap();
+            assert_eq!(e.id, Some(i));
+            assert!(paper_table3_mfu(i).is_some());
+            assert!(paper_table5_mfu(i).is_some());
+        }
+        assert!(paper_experiment(0).is_none());
+        assert!(paper_experiment(11).is_none());
+    }
+
+    #[test]
+    fn bpipe_rows_match_paper() {
+        // BPipe on exactly for experiments 3, 6, 8, 10
+        for i in 1..=10u32 {
+            let e = paper_experiment(i).unwrap();
+            assert_eq!(e.bpipe, matches!(i, 3 | 6 | 8 | 10), "exp {i}");
+        }
+    }
+
+    #[test]
+    fn experiment_summary_contains_key_fields() {
+        let s = paper_experiment(8).unwrap().summary();
+        assert!(s.contains("GPT-3 96B") && s.contains("bpipe=true"));
+    }
+}

@@ -1,0 +1,28 @@
+//! The real pipeline-parallel training coordinator (substrate S2).
+//!
+//! * [`pipeline`] — the leader: schedule planning, worker wiring, data
+//!   streaming, loss/stat collection;
+//! * [`stage_worker`] — one thread per pipeline stage executing its
+//!   [`crate::schedule::StageProgram`] against PJRT executables;
+//! * [`activation_store`] — the bounded stash + the BPipe remote store
+//!   (the acceptor's memory pool);
+//! * [`data`] — deterministic synthetic corpus with learnable structure;
+//! * [`stage_bench`] — single-stage timing for the paper-§4 estimator.
+//!
+//! The key BPipe property is tested end to end: a BPipe run computes
+//! **bit-identical losses** to the plain 1F1B run (eviction is pure data
+//! movement), while stage 0's stash high-water drops to the bound.
+
+pub mod activation_store;
+pub mod checkpoint;
+pub mod data;
+pub mod pipeline;
+pub mod stage_bench;
+pub mod stage_worker;
+
+pub use activation_store::{ActivationStore, HostTensor};
+pub use checkpoint::{CheckpointMeta, StageCheckpoint};
+pub use data::SyntheticCorpus;
+pub use pipeline::{plan_schedule, train, TrainConfig, TrainResult};
+pub use stage_bench::{measure_stage, StageTiming};
+pub use stage_worker::StageStats;

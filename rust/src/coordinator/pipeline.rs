@@ -1,0 +1,298 @@
+//! The training leader: builds the schedule, wires the stage workers,
+//! streams data, and collects losses/stats.
+//!
+//! This is substrate S2 of DESIGN.md — a *real* pipeline-parallel
+//! training run over AOT-compiled XLA artifacts, with BPipe activation
+//! balancing done on real buffers.  Stage workers are threads (the
+//! laptop-scale analogue of one rank per GPU); the leader is the analogue
+//! of the launcher + rank-0 logging in Megatron.
+
+use std::sync::mpsc::channel;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use super::activation_store::{spawn_remote_store, HostTensor};
+use super::checkpoint::CheckpointMeta;
+use super::data::SyntheticCorpus;
+use super::stage_worker::{worker_main, StageStats, WorkerChannels, WorkerConfig};
+use crate::bpipe::pairing;
+use crate::model::memory::{bpipe_bound, one_f_one_b_in_flight};
+use crate::runtime::Manifest;
+use crate::schedule::{validate, Schedule};
+
+/// Configuration of one real training run.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub artifacts_dir: PathBuf,
+    pub steps: u64,
+    /// microbatches per step (global batch = microbatches × artifact b)
+    pub microbatches: u64,
+    pub lr: f32,
+    pub bpipe: bool,
+    /// override the BPipe bound (default ⌈(p+2)/2⌉)
+    pub bound: Option<u64>,
+    pub seed: u64,
+    /// print a progress line every n steps (0 = silent)
+    pub log_every: u64,
+    /// checkpoint directory; state is saved per stage + run metadata
+    pub checkpoint_dir: Option<PathBuf>,
+    /// checkpoint every n steps (0 = only after the final step)
+    pub checkpoint_every: u64,
+    /// resume from `checkpoint_dir` (cfg.steps is the TOTAL step target)
+    pub resume: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: PathBuf::from("artifacts"),
+            steps: 20,
+            microbatches: 8,
+            lr: 1e-3,
+            bpipe: false,
+            bound: None,
+            seed: 0,
+            log_every: 0,
+            checkpoint_dir: None,
+            checkpoint_every: 0,
+            resume: false,
+        }
+    }
+}
+
+/// Output of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainResult {
+    /// mean loss per step
+    pub losses: Vec<f32>,
+    /// wall-clock per step (leader-observed, seconds)
+    pub step_times: Vec<f64>,
+    pub stage_stats: Vec<StageStats>,
+    pub schedule: Schedule,
+    /// total tokens consumed
+    pub tokens: u64,
+}
+
+impl TrainResult {
+    pub fn final_loss(&self) -> f32 {
+        *self.losses.last().unwrap_or(&f32::NAN)
+    }
+
+    pub fn mean_step_time(&self) -> f64 {
+        // skip the first (compile-warm) step when there are enough
+        let ts = if self.step_times.len() > 2 { &self.step_times[1..] } else { &self.step_times };
+        ts.iter().sum::<f64>() / ts.len().max(1) as f64
+    }
+}
+
+/// Build the schedule a run implies and the per-stage store capacities.
+pub fn plan_schedule(p: u64, m: u64, bpipe: bool, bound: Option<u64>) -> (Schedule, Vec<usize>) {
+    let base = crate::schedule::one_f_one_b(p, m);
+    let schedule = if bpipe { crate::bpipe::apply_bpipe(&base, bound) } else { base };
+    validate(&schedule).expect("generated schedule must validate");
+    let caps: Vec<usize> = (0..p)
+        .map(|s| {
+            let cap = if bpipe {
+                bound.unwrap_or_else(|| bpipe_bound(p)).min(m)
+            } else {
+                one_f_one_b_in_flight(p, s, m)
+            };
+            cap as usize
+        })
+        .collect();
+    (schedule, caps)
+}
+
+/// Run pipeline-parallel training end to end.  Blocks until done.
+pub fn train(cfg: &TrainConfig) -> anyhow::Result<TrainResult> {
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let p = manifest.spec.stages;
+    let m = cfg.microbatches;
+    anyhow::ensure!(p >= 2, "pipeline needs at least 2 stages");
+    let (schedule, caps) = plan_schedule(p, m, cfg.bpipe, cfg.bound);
+
+    // resume bookkeeping: cfg.steps is the TOTAL target; a resumed run
+    // executes the remainder and fast-forwards the corpus
+    let start_step = if cfg.resume {
+        let dir = cfg
+            .checkpoint_dir
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("--resume requires a checkpoint dir"))?;
+        let meta = CheckpointMeta::load(dir)?;
+        anyhow::ensure!(meta.stages == p, "checkpoint stages {} != {}", meta.stages, p);
+        anyhow::ensure!(
+            meta.microbatches == m && meta.seed == cfg.seed,
+            "checkpoint run shape (m={}, seed={}) differs from this run (m={m}, seed={})",
+            meta.microbatches,
+            meta.seed,
+            cfg.seed
+        );
+        meta.steps_done
+    } else {
+        0
+    };
+    let run_steps = cfg.steps.saturating_sub(start_step);
+    anyhow::ensure!(run_steps > 0, "nothing to do: {start_step} steps already done");
+
+    // -- channel topology ---------------------------------------------------
+    let mut act_txs = Vec::new();
+    let mut act_rxs = vec![None];
+    let mut grad_txs = vec![None];
+    let mut grad_rxs = Vec::new();
+    for _ in 0..p - 1 {
+        let (atx, arx) = channel();
+        act_txs.push(Some(atx));
+        act_rxs.push(Some(arx));
+        let (gtx, grx) = channel();
+        grad_txs.push(Some(gtx));
+        grad_rxs.push(Some(grx));
+    }
+    act_txs.push(None);
+    grad_rxs.push(None);
+    let (tok_tx, tok_rx) = channel();
+    let (tgt_tx, tgt_rx) = channel();
+    let (loss_tx, loss_rx) = channel();
+
+    // -- workers -------------------------------------------------------------
+    let mut handles = Vec::new();
+    let mut tok_rx = Some(tok_rx);
+    let mut tgt_rx = Some(tgt_rx);
+    for s in 0..p {
+        let needs_store = schedule
+            .program(s)
+            .ops
+            .iter()
+            .any(|o| matches!(o.kind, crate::schedule::OpKind::Evict | crate::schedule::OpKind::Load));
+        let remote = if needs_store {
+            // stage s evicts to acceptor stage pairing::partner(p, s)
+            let _ = pairing::partner(p, s);
+            let (client, _stats_rx) = spawn_remote_store();
+            Some(client)
+        } else {
+            None
+        };
+        let wcfg = WorkerConfig {
+            stage: s,
+            stages: p,
+            steps: run_steps,
+            microbatches: m,
+            lr: cfg.lr,
+            seed: cfg.seed as i32,
+            artifacts_dir: cfg.artifacts_dir.clone(),
+            program: schedule.program(s).clone(),
+            capacity: caps[s as usize],
+            checkpoint_dir: cfg.checkpoint_dir.clone(),
+            checkpoint_every: cfg.checkpoint_every,
+            resume: cfg.resume,
+            start_step,
+        };
+        let wch = WorkerChannels {
+            act_in: act_rxs[s as usize].take(),
+            act_out: act_txs[s as usize].take(),
+            grad_in: grad_rxs[s as usize].take(),
+            grad_out: grad_txs[s as usize].take(),
+            tokens_in: if s == 0 { tok_rx.take() } else { None },
+            targets_in: if s == p - 1 { tgt_rx.take() } else { None },
+            loss_out: if s == p - 1 { Some(loss_tx.clone()) } else { None },
+            remote,
+        };
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("stage-{s}"))
+                .spawn(move || worker_main(wcfg, wch))?,
+        );
+    }
+    drop(loss_tx);
+
+    // -- data feeding ----------------------------------------------------------
+    let spec = &manifest.spec;
+    let (b, s_len) = (spec.b as usize, spec.s as usize);
+    let mut corpus = SyntheticCorpus::new(spec.v as u32, cfg.seed);
+    let shape = vec![b as i64, s_len as i64];
+    // fast-forward past the data a resumed checkpoint already consumed
+    for _ in 0..start_step * m {
+        corpus.microbatch(b, s_len);
+    }
+    for _step in 0..run_steps {
+        for mb in 0..m {
+            let (tokens, targets) = corpus.microbatch(b, s_len);
+            tok_tx
+                .send((mb, HostTensor::I32 { data: tokens, shape: shape.clone() }))
+                .map_err(|_| anyhow::anyhow!("stage 0 died early"))?;
+            tgt_tx
+                .send((mb, HostTensor::I32 { data: targets, shape: shape.clone() }))
+                .map_err(|_| anyhow::anyhow!("last stage died early"))?;
+        }
+    }
+    drop(tok_tx);
+    drop(tgt_tx);
+
+    // -- loss collection ---------------------------------------------------------
+    let mut losses = Vec::with_capacity(run_steps as usize);
+    let mut step_times = Vec::with_capacity(run_steps as usize);
+    let mut t_prev = Instant::now();
+    for step in 1..=run_steps {
+        let mut sum = 0f32;
+        for _ in 0..m {
+            let (got_step, _mb, loss) =
+                loss_rx.recv().map_err(|_| anyhow::anyhow!("pipeline died mid-step {step}"))?;
+            anyhow::ensure!(got_step == step, "loss for step {got_step}, expected {step}");
+            sum += loss;
+        }
+        losses.push(sum / m as f32);
+        step_times.push(t_prev.elapsed().as_secs_f64());
+        t_prev = Instant::now();
+        if cfg.log_every > 0 && step % cfg.log_every == 0 {
+            println!(
+                "step {:>4}/{}  loss {:.4}  ({:.2}s/step)",
+                start_step + step,
+                cfg.steps,
+                losses.last().unwrap(),
+                step_times.last().unwrap()
+            );
+        }
+    }
+
+    // -- join ------------------------------------------------------------------
+    let mut stage_stats = Vec::new();
+    for h in handles {
+        stage_stats.push(h.join().map_err(|e| anyhow::anyhow!("worker panicked: {e:?}"))??);
+    }
+    if let Some(dir) = &cfg.checkpoint_dir {
+        CheckpointMeta {
+            steps_done: start_step + run_steps,
+            stages: p,
+            microbatches: m,
+            seed: cfg.seed,
+        }
+        .save(dir)?;
+    }
+    Ok(TrainResult {
+        losses,
+        step_times,
+        stage_stats,
+        schedule,
+        tokens: run_steps * m * (b * s_len) as u64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_schedule_capacities() {
+        let (sched, caps) = plan_schedule(4, 8, false, None);
+        assert_eq!(caps, vec![4, 3, 2, 1]);
+        assert_eq!(sched.kind, crate::schedule::ScheduleKind::OneFOneB);
+        let (sched_b, caps_b) = plan_schedule(4, 8, true, None);
+        assert_eq!(caps_b, vec![3, 3, 3, 3]);
+        assert!(matches!(sched_b.kind, crate::schedule::ScheduleKind::BPipe { bound: 3 }));
+    }
+
+    #[test]
+    fn plan_schedule_small_m_clips() {
+        let (_s, caps) = plan_schedule(4, 2, true, None);
+        assert_eq!(caps, vec![2, 2, 2, 2]);
+    }
+}

@@ -1,0 +1,116 @@
+//! Single-stage measurement — the runtime half of the paper's §4 recipe.
+//!
+//! "Evaluate a small part of the model with fewer resources" (paper §5):
+//! run ONE mid stage's fwd+bwd at several microbatch sizes through the
+//! real PJRT executables, time them, and feed the resulting
+//! `MFU_stage(b)` ratios into the Eq. 4 estimator.  On CPU the absolute
+//! peak is irrelevant — Eq. 4 only consumes *ratios* of stage MFUs, and
+//! throughput/time ratios are peak-independent.
+
+use std::path::Path;
+use std::time::Instant;
+
+use crate::runtime::{literal_f32, Manifest, Runtime};
+
+/// Timing of one stage at one microbatch size.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageTiming {
+    pub b: u64,
+    /// mean seconds per (fwd + bwd) of one microbatch
+    pub t_b: f64,
+    /// tokens processed per second by the stage
+    pub tokens_per_s: f64,
+    /// stage model FLOPs per second (from the analytic per-token count)
+    pub flops_per_s: f64,
+}
+
+/// Measure `mid_fwd_b{b}` + `mid_bwd_b{b}` over `iters` repetitions
+/// (after one warmup) and return mean per-microbatch timing.
+pub fn measure_stage(
+    artifacts_dir: &Path,
+    b: u64,
+    iters: u32,
+) -> anyhow::Result<StageTiming> {
+    let manifest = Manifest::load(artifacts_dir)?;
+    anyhow::ensure!(
+        manifest.bs_sweep.contains(&b),
+        "b={b} not in the artifact sweep {:?}; re-run `make artifacts` with --bs-sweep",
+        manifest.bs_sweep
+    );
+    let rt = Runtime::cpu()?;
+    let fwd = rt.load(&manifest.path_of(&format!("mid_fwd_b{b}"))?)?;
+    let bwd = rt.load(&manifest.path_of(&format!("mid_bwd_b{b}"))?)?;
+    let spec = &manifest.spec;
+    let n = manifest.param_count("mid")? as usize;
+
+    // deterministic pseudo-random inputs (content doesn't affect timing)
+    let params: Vec<f32> = (0..n).map(|i| ((i * 2654435761) % 1000) as f32 * 1e-4 - 0.05).collect();
+    let act_len = (spec.b_override(b) * spec.s * spec.h) as usize;
+    let x: Vec<f32> = (0..act_len).map(|i| ((i * 40503) % 997) as f32 * 1e-3 - 0.5).collect();
+    let shape = [b as i64, spec.s as i64, spec.h as i64];
+    let params_lit = xla::Literal::vec1(&params);
+    let x_lit = literal_f32(&x, &shape)?;
+    let dy_lit = literal_f32(&x, &shape)?;
+
+    // warmup (first execution pays one-time costs)
+    let y = fwd.run1(&[&params_lit, &x_lit])?;
+    let _ = bwd.run(&[&params_lit, &x_lit, &dy_lit])?;
+    drop(y);
+
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let _y = fwd.run1(&[&params_lit, &x_lit])?;
+        let _g = bwd.run(&[&params_lit, &x_lit, &dy_lit])?;
+    }
+    let t_b = t0.elapsed().as_secs_f64() / iters as f64;
+
+    // analytic stage model-FLOPs for this artifact config (fwd+bwd = 3×fwd)
+    let tokens = b * spec.s;
+    let flops = stage_model_flops(spec, b);
+    Ok(StageTiming {
+        b,
+        t_b,
+        tokens_per_s: tokens as f64 / t_b,
+        flops_per_s: flops / t_b,
+    })
+}
+
+/// Analytic fwd+bwd model FLOPs of one mid stage of the tiny artifact
+/// model (matmul terms only, Eq. 1 style: 72·b·s·L·h²·(1+s/6h)).
+pub fn stage_model_flops(spec: &crate::runtime::artifact::SpecMeta, b: u64) -> f64 {
+    let (h, s) = (spec.h as f64, spec.s as f64);
+    72.0 * b as f64 * s * spec.layers_per_stage as f64 * h * h * (1.0 + s / (6.0 * h))
+}
+
+impl crate::runtime::artifact::SpecMeta {
+    /// the sweep artifacts share every dimension except b
+    fn b_override(&self, b: u64) -> u64 {
+        let _ = self.b;
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_model_flops_linear_in_b() {
+        let spec = crate::runtime::artifact::SpecMeta {
+            family: "llama".into(),
+            h: 256,
+            a: 8,
+            s: 128,
+            v: 4096,
+            layers_per_stage: 2,
+            stages: 4,
+            b: 2,
+            attention: "flash".into(),
+        };
+        let f1 = stage_model_flops(&spec, 1);
+        let f4 = stage_model_flops(&spec, 4);
+        assert!((f4 / f1 - 4.0).abs() < 1e-12);
+        // 72·128·2·256²·(1+128/1536) ≈ 1.3e9
+        assert!(f1 > 1e9 && f1 < 2e9, "{f1:e}");
+    }
+}

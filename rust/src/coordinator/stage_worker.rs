@@ -1,0 +1,280 @@
+//! One pipeline-stage worker: owns the stage's compiled executables,
+//! parameters and optimizer state, and executes its [`StageProgram`]
+//! op-by-op for every training step.
+//!
+//! Workers are plain OS threads connected by channels (activations
+//! downstream, gradients upstream, BPipe evict/load to the pair store).
+//! Each worker creates its own PJRT client — `xla` handles are not
+//! `Send`, and a per-worker client is also the honest analogue of
+//! one-process-per-GPU.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::path::PathBuf;
+use std::time::Instant;
+
+use super::activation_store::{ActivationStore, HostTensor, RemoteStoreClient};
+use super::checkpoint::StageCheckpoint;
+use crate::runtime::{to_f32_vec, Manifest, Runtime};
+use crate::schedule::{OpKind, StageProgram};
+
+/// Static configuration for one worker.
+pub struct WorkerConfig {
+    pub stage: u64,
+    pub stages: u64,
+    pub steps: u64,
+    pub microbatches: u64,
+    pub lr: f32,
+    pub seed: i32,
+    pub artifacts_dir: PathBuf,
+    pub program: StageProgram,
+    /// activation-store capacity this schedule was built for
+    pub capacity: usize,
+    /// checkpoint directory (params + Adam moments per stage)
+    pub checkpoint_dir: Option<PathBuf>,
+    /// save every n steps (0 = only after the final step)
+    pub checkpoint_every: u64,
+    /// load state from the checkpoint dir instead of initializing
+    pub resume: bool,
+    /// global step offset (steps already done before this run)
+    pub start_step: u64,
+}
+
+/// Channel endpoints for one worker (None where the topology has no edge).
+pub struct WorkerChannels {
+    pub act_in: Option<Receiver<(u64, HostTensor)>>,
+    pub act_out: Option<Sender<(u64, HostTensor)>>,
+    pub grad_in: Option<Receiver<(u64, HostTensor)>>,
+    pub grad_out: Option<Sender<(u64, HostTensor)>>,
+    /// leader → stage 0: input tokens per microbatch
+    pub tokens_in: Option<Receiver<(u64, HostTensor)>>,
+    /// leader → last stage: target tokens per microbatch
+    pub targets_in: Option<Receiver<(u64, HostTensor)>>,
+    /// last stage → leader: (step, microbatch, loss)
+    pub loss_out: Option<Sender<(u64, u64, f32)>>,
+    /// BPipe pair store (present iff the program contains Evict/Load)
+    pub remote: Option<RemoteStoreClient>,
+}
+
+/// What a worker reports when it finishes.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StageStats {
+    pub stage: u64,
+    pub param_count: usize,
+    pub compile_s: f64,
+    pub fwd_s: f64,
+    pub bwd_s: f64,
+    pub adam_s: f64,
+    /// time blocked waiting for BPipe loads (the technique's overhead)
+    pub load_wait_s: f64,
+    pub evictions: u64,
+    pub stash_high_water: usize,
+    pub stash_high_water_bytes: usize,
+}
+
+fn recv_expect(
+    rx: &Receiver<(u64, HostTensor)>,
+    mb: u64,
+    what: &str,
+    stage: u64,
+) -> anyhow::Result<HostTensor> {
+    let (got, t) = rx
+        .recv()
+        .map_err(|_| anyhow::anyhow!("stage {stage}: {what} channel closed early"))?;
+    anyhow::ensure!(got == mb, "stage {stage}: expected {what} for mb {mb}, got {got}");
+    Ok(t)
+}
+
+/// Worker entry point; runs `cfg.steps` iterations of `cfg.program`.
+pub fn worker_main(cfg: WorkerConfig, ch: WorkerChannels) -> anyhow::Result<StageStats> {
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let kind = manifest.stage_kind(cfg.stage);
+    let n_params = manifest.param_count(kind)? as usize;
+    let spec = &manifest.spec;
+    let act_shape = vec![spec.b as i64, spec.s as i64, spec.h as i64];
+
+    let t0 = Instant::now();
+    let init = rt.load(&manifest.path_of(&format!("{kind}_init"))?)?;
+    // the last stage computes loss+grads in one bwd artifact; no fwd exe
+    let fwd = if kind == "last" {
+        None
+    } else {
+        Some(rt.load(&manifest.path_of(&format!("{kind}_fwd"))?)?)
+    };
+    let bwd = rt.load(&manifest.path_of(&format!("{kind}_bwd"))?)?;
+    let adam = rt.load(&manifest.path_of(&format!("adam_{kind}"))?)?;
+    let compile_s = t0.elapsed().as_secs_f64();
+
+    // Parameters live as a DEVICE-RESIDENT buffer within a step (they
+    // only change at the optimizer boundary), so the per-op hot path
+    // uploads just the activation; optimizer state stays host-side.
+    let (mut params, mut m_state, mut v_state) = if cfg.resume {
+        let dir = cfg.checkpoint_dir.as_ref().expect("resume without checkpoint dir");
+        let ck = StageCheckpoint::load(dir, cfg.stage, n_params)?;
+        (
+            xla::Literal::vec1(&ck.params),
+            xla::Literal::vec1(&ck.m),
+            xla::Literal::vec1(&ck.v),
+        )
+    } else {
+        let params = init.run1(&[xla::Literal::scalar(cfg.seed + cfg.stage as i32)])?;
+        let zeros = vec![0f32; n_params];
+        (params, xla::Literal::vec1(&zeros), xla::Literal::vec1(&zeros))
+    };
+    let mut params_buf = rt.upload_literal(&params)?;
+    let mut grad_acc = vec![0f32; n_params];
+    let inv_m = 1.0f32 / cfg.microbatches as f32;
+
+    let mut stash = ActivationStore::new(cfg.capacity);
+    let mut stats = StageStats {
+        stage: cfg.stage,
+        param_count: n_params,
+        compile_s,
+        ..Default::default()
+    };
+
+    for step in 1..=cfg.steps {
+        for op in &cfg.program.ops {
+            match op.kind {
+                OpKind::Fwd => {
+                    let t = Instant::now();
+                    if kind == "last" {
+                        // last stage: stash (x, targets); loss+grads run in Bwd
+                        let x = recv_expect(ch.act_in.as_ref().unwrap(), op.mb, "act", cfg.stage)?;
+                        let tgt = recv_expect(
+                            ch.targets_in.as_ref().unwrap(),
+                            op.mb,
+                            "targets",
+                            cfg.stage,
+                        )?;
+                        stash.put(op.mb, vec![x, tgt]);
+                    } else {
+                        let x = if cfg.stage == 0 {
+                            recv_expect(ch.tokens_in.as_ref().unwrap(), op.mb, "tokens", cfg.stage)?
+                        } else {
+                            recv_expect(ch.act_in.as_ref().unwrap(), op.mb, "act", cfg.stage)?
+                        };
+                        let x_buf = x.to_buffer(&rt)?;
+                        let y = fwd.as_ref().unwrap().run1_buffers(&[&params_buf, &x_buf])?;
+                        stash.put(op.mb, vec![x]);
+                        ch.act_out
+                            .as_ref()
+                            .unwrap()
+                            .send((op.mb, HostTensor::F32 {
+                                data: to_f32_vec(&y)?,
+                                shape: act_shape.clone(),
+                            }))
+                            .map_err(|_| anyhow::anyhow!("act_out closed"))?;
+                    }
+                    stats.fwd_s += t.elapsed().as_secs_f64();
+                }
+                OpKind::Bwd => {
+                    let t = Instant::now();
+                    let dflat = match kind {
+                        "last" => {
+                            let ts = stash.take(op.mb);
+                            let x_buf = ts[0].to_buffer(&rt)?;
+                            let tgt_buf = ts[1].to_buffer(&rt)?;
+                            let outs = bwd.run_buffers(&[&params_buf, &x_buf, &tgt_buf])?;
+                            let (dx, dflat, loss) = (&outs[0], &outs[1], &outs[2]);
+                            ch.grad_out
+                                .as_ref()
+                                .unwrap()
+                                .send((op.mb, HostTensor::F32 {
+                                    data: to_f32_vec(dx)?,
+                                    shape: act_shape.clone(),
+                                }))
+                                .map_err(|_| anyhow::anyhow!("grad_out closed"))?;
+                            ch.loss_out
+                                .as_ref()
+                                .unwrap()
+                                .send((step, op.mb, loss.get_first_element::<f32>()?))
+                                .map_err(|_| anyhow::anyhow!("loss_out closed"))?;
+                            to_f32_vec(dflat)?
+                        }
+                        "mid" => {
+                            let dy =
+                                recv_expect(ch.grad_in.as_ref().unwrap(), op.mb, "grad", cfg.stage)?;
+                            let x_buf = stash.take(op.mb)[0].to_buffer(&rt)?;
+                            let dy_buf = dy.to_buffer(&rt)?;
+                            let outs = bwd.run_buffers(&[&params_buf, &x_buf, &dy_buf])?;
+                            ch.grad_out
+                                .as_ref()
+                                .unwrap()
+                                .send((op.mb, HostTensor::F32 {
+                                    data: to_f32_vec(&outs[0])?,
+                                    shape: act_shape.clone(),
+                                }))
+                                .map_err(|_| anyhow::anyhow!("grad_out closed"))?;
+                            to_f32_vec(&outs[1])?
+                        }
+                        _ => {
+                            // first
+                            let dy =
+                                recv_expect(ch.grad_in.as_ref().unwrap(), op.mb, "grad", cfg.stage)?;
+                            let tok_buf = stash.take(op.mb)[0].to_buffer(&rt)?;
+                            let dy_buf = dy.to_buffer(&rt)?;
+                            let outs = bwd.run_buffers(&[&params_buf, &tok_buf, &dy_buf])?;
+                            to_f32_vec(&outs[0])?
+                        }
+                    };
+                    for (a, g) in grad_acc.iter_mut().zip(dflat.iter()) {
+                        *a += g * inv_m;
+                    }
+                    stats.bwd_s += t.elapsed().as_secs_f64();
+                }
+                OpKind::Evict => {
+                    let tensors = stash.take(op.mb);
+                    ch.remote.as_ref().expect("evict without remote store").evict(op.mb, tensors);
+                    stats.evictions += 1;
+                }
+                OpKind::Load => {
+                    let t = Instant::now();
+                    let tensors = ch.remote.as_ref().expect("load without remote store").load(op.mb);
+                    stats.load_wait_s += t.elapsed().as_secs_f64();
+                    stash.put(op.mb, tensors);
+                }
+            }
+        }
+        anyhow::ensure!(stash.is_empty(), "stage {}: stashes leaked across steps", cfg.stage);
+
+        // optimizer step
+        let t = Instant::now();
+        let g_lit = xla::Literal::vec1(&grad_acc);
+        let outs = adam.run(&[
+            &params,
+            &g_lit,
+            &m_state,
+            &v_state,
+            &xla::Literal::scalar((cfg.start_step + step) as i32),
+            &xla::Literal::scalar(cfg.lr),
+        ])?;
+        let mut it = outs.into_iter();
+        params = it.next().unwrap();
+        m_state = it.next().unwrap();
+        v_state = it.next().unwrap();
+        params_buf = rt.upload_literal(&params)?; // refresh the device copy
+        grad_acc.iter_mut().for_each(|g| *g = 0.0);
+        stats.adam_s += t.elapsed().as_secs_f64();
+
+        // checkpoint (atomic; every n steps and always after the last)
+        if let Some(dir) = &cfg.checkpoint_dir {
+            let due = cfg.checkpoint_every > 0 && step % cfg.checkpoint_every == 0;
+            if due || step == cfg.steps {
+                StageCheckpoint {
+                    params: crate::runtime::to_f32_vec(&params)?,
+                    m: crate::runtime::to_f32_vec(&m_state)?,
+                    v: crate::runtime::to_f32_vec(&v_state)?,
+                }
+                .save(dir, cfg.stage)?;
+            }
+        }
+    }
+
+    if let Some(remote) = &ch.remote {
+        remote.shutdown();
+    }
+    stats.stash_high_water = stash.high_water;
+    stats.stash_high_water_bytes = stash.high_water_bytes;
+    Ok(stats)
+}

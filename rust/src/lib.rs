@@ -1,0 +1,37 @@
+//! # bpipe — Re-evaluating Memory-balanced Pipeline Parallelism
+//!
+//! A reproduction of *"Re-evaluating the Memory-balanced Pipeline
+//! Parallelism: BPipe"* (Huang et al., Meituan 2024) as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — pipeline-parallel training coordination: the
+//!   1F1B/GPipe/interleaved schedules, the BPipe activation-balancing
+//!   transformation ([`bpipe`]), a calibrated discrete-event cluster
+//!   simulator ([`sim`]) that regenerates every table/figure of the paper
+//!   at A100-cluster scale, the paper-§4 analytical estimator
+//!   ([`estimator`]), and a *real* pipeline runtime ([`coordinator`],
+//!   [`runtime`]) that trains an actual transformer through AOT-compiled
+//!   XLA artifacts on the PJRT CPU client.
+//! * **L2 (python/compile/model.py)** — JAX stage graphs (GPT-3 and
+//!   LLaMA families), lowered once to HLO text at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas flash-attention and fused
+//!   scale+mask+softmax kernels.
+//!
+//! Python never runs on the training path: `make artifacts` lowers the
+//! model once; the `bpipe` binary is self-contained afterwards.
+
+pub mod bpipe;
+pub mod config;
+pub mod coordinator;
+pub mod estimator;
+pub mod metrics;
+pub mod model;
+pub mod report;
+pub mod runtime;
+pub mod schedule;
+pub mod sim;
+pub mod util;
+
+pub use config::{
+    AttentionMethod, ClusterConfig, ExperimentConfig, ModelConfig, ParallelConfig,
+};

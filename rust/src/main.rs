@@ -1,0 +1,318 @@
+//! `bpipe` — CLI launcher for the BPipe re-evaluation stack.
+//!
+//! Subcommands map one-to-one onto the paper's artifacts:
+//!
+//! * `tables  --which 2|3|5` — regenerate paper Tables 2/3/5 (simulator);
+//! * `figures --which 1|2`   — Figure 1 (BPipe 1F1B timeline) and
+//!   Figure 2 (pair-adjacent layout);
+//! * `simulate`              — one experiment through the DES, full report;
+//! * `estimate`              — the §4 Eq. 4 estimator (analytic or from
+//!   real single-stage runtime measurements);
+//! * `memory`                — per-stage memory profile, ±BPipe;
+//! * `schedule`              — print a schedule program;
+//! * `train`                 — REAL pipeline training over PJRT artifacts.
+//!
+//! Argument parsing is in-tree ([`Args`]) — the build is fully offline.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use bpipe::bpipe as bpipe_mod;
+use bpipe::config::{self, ExperimentConfig};
+use bpipe::coordinator;
+use bpipe::estimator::{self, StageMeasurement};
+use bpipe::model::memory::MemoryModel;
+use bpipe::report;
+use bpipe::sim;
+
+const USAGE: &str = "\
+bpipe — Re-evaluating Memory-balanced Pipeline Parallelism (BPipe)
+
+USAGE: bpipe <COMMAND> [--flag value]...
+
+COMMANDS:
+  tables    --which 2|3|5                regenerate a paper table
+  figures   --which 1|2 [--p N --nodes N] regenerate a paper figure
+  simulate  [--experiment 1..10 | --config f.cfg] [--bpipe true|false]
+            [--timeline]                 simulate one experiment
+  estimate  [--global-batch B --p P --from b:mfu --to b:mfu]
+            [--runtime --artifacts DIR]  paper §4 Eq. 4 estimator
+  memory    [--experiment 1..10]         per-stage memory profile
+  schedule  [--p N --m N --kind 1f1b|gpipe|interleaved] [--bpipe]
+  train     [--artifacts DIR --steps N --microbatches M --lr F]
+            [--bpipe] [--seed N] [--log-every N]
+            [--checkpoint-dir D --checkpoint-every N] [--resume]
+                                         REAL pipeline training
+";
+
+/// Minimal flag parser: `--key value` pairs plus boolean `--key` flags.
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String], bool_flags: &[&str]) -> anyhow::Result<Self> {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow::anyhow!("expected --flag, got {a:?}"))?
+                .to_string();
+            if bool_flags.contains(&key.as_str())
+                && (i + 1 >= argv.len() || argv[i + 1].starts_with("--"))
+            {
+                flags.insert(key, "true".into());
+                i += 1;
+            } else {
+                let v = argv
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow::anyhow!("flag --{key} needs a value"))?;
+                flags.insert(key, v.clone());
+                i += 2;
+            }
+        }
+        Ok(Self { flags })
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    fn opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+}
+
+fn experiment_or_exit(id: u32) -> ExperimentConfig {
+    config::paper_experiment(id).unwrap_or_else(|| {
+        eprintln!("experiment id must be 1..=10");
+        std::process::exit(2);
+    })
+}
+
+fn parse_measurement(s: &str) -> anyhow::Result<StageMeasurement> {
+    let (b, mfu) = s
+        .split_once(':')
+        .ok_or_else(|| anyhow::anyhow!("expected b:mfu, e.g. 1:0.378, got {s:?}"))?;
+    Ok(StageMeasurement { b: b.trim().parse()?, mfu_stage: mfu.trim().parse()? })
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print!("{USAGE}");
+        std::process::exit(2);
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "tables" => {
+            let args = Args::parse(rest, &[])?;
+            match args.get("which", 3u32)? {
+                2 => print!("{}", report::render_table2()),
+                3 => print!("{}", report::render_table3()),
+                5 => print!("{}", report::render_table5()),
+                w => anyhow::bail!("no table {w} in the paper (2, 3 or 5)"),
+            }
+        }
+        "figures" => {
+            let args = Args::parse(rest, &[])?;
+            let which = args.get("which", 1u32)?;
+            let p = args.get("p", 16u64)?;
+            let nodes = args.get("nodes", 2u64)?;
+            match which {
+                1 => {
+                    let mut e4 = experiment_or_exit(8);
+                    let m = 8;
+                    e4.parallel.p = 4;
+                    e4.parallel.global_batch = m * e4.parallel.microbatch;
+                    let base = bpipe::schedule::one_f_one_b(4, m);
+                    let bp = bpipe_mod::apply_bpipe(&base, None);
+                    let layout = bpipe_mod::pair_adjacent_layout(4, 1);
+                    println!("== plain 1F1B (p=4, m={m}) ==");
+                    let r = sim::simulate(&e4, &base, &layout);
+                    print!("{}", report::render_timeline(&r.trace, 4, 110));
+                    println!("\n== with BPipe (bound {}) ==", bpipe_mod::pairing::bound(4));
+                    let r = sim::simulate(&e4, &bp, &layout);
+                    print!("{}", report::render_timeline(&r.trace, 4, 110));
+                    println!("\nprogram-order view:\n{}", report::timeline::render_program(&bp));
+                }
+                2 => {
+                    println!("== sequential (pairs cross nodes) ==");
+                    print!("{}", report::render_layout(&bpipe_mod::sequential_layout(p, nodes), p));
+                    println!("\n== pair-adjacent (paper Figure 2) ==");
+                    print!(
+                        "{}",
+                        report::render_layout(&bpipe_mod::pair_adjacent_layout(p, nodes), p)
+                    );
+                }
+                w => anyhow::bail!("no figure {w} in the paper (1 or 2)"),
+            }
+        }
+        "simulate" => {
+            let args = Args::parse(rest, &["timeline"])?;
+            let mut e = if let Some(path) = args.opt("config") {
+                ExperimentConfig::load(&PathBuf::from(path))?
+            } else {
+                experiment_or_exit(args.get("experiment", 8u32)?)
+            };
+            if let Some(b) = args.opt("bpipe") {
+                e.bpipe = b.parse()?;
+            }
+            println!("simulating: {}", e.summary());
+            let r = sim::simulate_experiment(&e);
+            println!("  makespan        : {:.3} s/iteration", r.makespan);
+            println!("  MFU             : {:.1} %", r.mfu_pct());
+            println!("  bubble fraction : {:.1} %", r.bubble_fraction * 100.0);
+            println!("  load stall      : {:.1} ms", r.load_stall * 1e3);
+            println!(
+                "  BPipe traffic   : {:.2} GiB",
+                r.transfer_bytes as f64 / (1u64 << 30) as f64
+            );
+            for (s, hw) in r.mem_high_water.iter().enumerate() {
+                let flag = if Some(s as u64) == r.oom_stage { "  << OOM" } else { "" };
+                println!(
+                    "  stage {s} peak mem: {:.1} GiB{flag}",
+                    *hw as f64 / (1u64 << 30) as f64
+                );
+            }
+            if args.opt("timeline").is_some() {
+                print!("{}", report::render_timeline(&r.trace, e.parallel.p, 110));
+            }
+        }
+        "estimate" => {
+            let args = Args::parse(rest, &["runtime"])?;
+            let global_batch = args.get("global-batch", 128u64)?;
+            let p = args.get("p", 8u64)?;
+            let from = args.opt("from").unwrap_or("1:0.378").to_string();
+            let to = args.opt("to").unwrap_or("2:0.552").to_string();
+            let artifacts = PathBuf::from(args.opt("artifacts").unwrap_or("artifacts"));
+            let (x, y) = if args.opt("runtime").is_some() {
+                let fx = parse_measurement(&from)?;
+                let fy = parse_measurement(&to)?;
+                println!("measuring single-stage timings from {artifacts:?} …");
+                let tx = coordinator::measure_stage(&artifacts, fx.b, 3)?;
+                let ty = coordinator::measure_stage(&artifacts, fy.b, 3)?;
+                println!(
+                    "  b={} : {:.1} ms/microbatch, {:.2e} FLOP/s",
+                    tx.b,
+                    tx.t_b * 1e3,
+                    tx.flops_per_s
+                );
+                println!(
+                    "  b={} : {:.1} ms/microbatch, {:.2e} FLOP/s",
+                    ty.b,
+                    ty.t_b * 1e3,
+                    ty.flops_per_s
+                );
+                let peak = tx.flops_per_s.max(ty.flops_per_s) * 1.25;
+                (
+                    StageMeasurement { b: tx.b, mfu_stage: tx.flops_per_s / peak },
+                    StageMeasurement { b: ty.b, mfu_stage: ty.flops_per_s / peak },
+                )
+            } else {
+                (parse_measurement(&from)?, parse_measurement(&to)?)
+            };
+            let est = estimator::estimate(global_batch, p, x, y);
+            println!("Eq. 4 estimate (B={global_batch}, p={p}):");
+            println!(
+                "  stage factor  : {:.3} (MFU_stage {:.1}% → {:.1}%)",
+                est.stage_factor,
+                x.mfu_stage * 100.0,
+                y.mfu_stage * 100.0
+            );
+            println!("  bubble factor : {:.3}", est.bubble_factor);
+            println!(
+                "  speedup bound : {:.3}x  {}",
+                est.speedup_bound,
+                if est.speedup_bound > 1.0 {
+                    "(worth raising b)"
+                } else {
+                    "(NOT worth it — the paper's LLaMA case)"
+                }
+            );
+        }
+        "memory" => {
+            let args = Args::parse(rest, &[])?;
+            let e = experiment_or_exit(args.get("experiment", 7u32)?);
+            let mm = MemoryModel::new(&e);
+            println!("memory profile: {}", e.summary());
+            println!(
+                "  HBM capacity: {:.0} GiB",
+                e.cluster.hbm_bytes as f64 / (1u64 << 30) as f64
+            );
+            let plain = mm.profile_gib(false);
+            let bal = mm.profile_gib(true);
+            println!("  stage |  1F1B (GiB) | BPipe (GiB)");
+            for s in 0..e.parallel.p as usize {
+                let cap = e.cluster.hbm_bytes as f64 / (1u64 << 30) as f64;
+                let oom = if plain[s] > cap { " OOM!" } else { "" };
+                println!("  {s:>5} | {:>10.1}{oom:<5} | {:>10.1}", plain[s], bal[s]);
+            }
+        }
+        "schedule" => {
+            let args = Args::parse(rest, &["bpipe"])?;
+            let p = args.get("p", 4u64)?;
+            let m = args.get("m", 8u64)?;
+            let kind = args.opt("kind").unwrap_or("1f1b");
+            let sched = match kind {
+                "1f1b" => bpipe::schedule::one_f_one_b(p, m),
+                "gpipe" => bpipe::schedule::gpipe(p, m),
+                "interleaved" => bpipe::schedule::interleaved(p, m, 2),
+                other => anyhow::bail!("unknown schedule kind {other:?}"),
+            };
+            let sched = if args.opt("bpipe").is_some() {
+                bpipe_mod::apply_bpipe(&sched, None)
+            } else {
+                sched
+            };
+            print!("{}", report::timeline::render_program(&sched));
+        }
+        "train" => {
+            let args = Args::parse(rest, &["bpipe", "resume"])?;
+            let cfg = coordinator::TrainConfig {
+                artifacts_dir: PathBuf::from(args.opt("artifacts").unwrap_or("artifacts")),
+                steps: args.get("steps", 20u64)?,
+                microbatches: args.get("microbatches", 8u64)?,
+                lr: args.get("lr", 1e-3f32)?,
+                bpipe: args.opt("bpipe").is_some(),
+                bound: None,
+                seed: args.get("seed", 0u64)?,
+                log_every: args.get("log-every", 5u64)?,
+                checkpoint_dir: args.opt("checkpoint-dir").map(PathBuf::from),
+                checkpoint_every: args.get("checkpoint-every", 0u64)?,
+                resume: args.opt("resume").is_some(),
+            };
+            println!(
+                "training: {} steps × {} microbatches, bpipe={}",
+                cfg.steps, cfg.microbatches, cfg.bpipe
+            );
+            let r = coordinator::train(&cfg)?;
+            println!(
+                "first loss {:.4} → final loss {:.4}",
+                r.losses.first().unwrap(),
+                r.final_loss()
+            );
+            println!("mean step time {:.2}s, tokens {}", r.mean_step_time(), r.tokens);
+            for st in &r.stage_stats {
+                println!(
+                    "  stage {}: fwd {:.1}s bwd {:.1}s adam {:.1}s load-wait {:.2}s evictions {} stash-hw {}",
+                    st.stage, st.fwd_s, st.bwd_s, st.adam_s, st.load_wait_s, st.evictions, st.stash_high_water
+                );
+            }
+        }
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        other => {
+            eprintln!("unknown command {other:?}\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,108 @@
+//! Metrics: MFU accounting, throughput, and run-level statistics shared
+//! by the simulator, the real runtime and the benches.
+
+use crate::config::ExperimentConfig;
+use crate::model::flops;
+
+/// Model-FLOPS-utilization bookkeeping for a run (paper §3.1: observed
+/// throughput over hardware maximum, counting only Eq. 1 model FLOPs —
+/// recompute FLOPs spend time but earn nothing).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MfuReport {
+    /// model FLOPs per iteration (Eq. 1 over the global batch)
+    pub model_flops: f64,
+    /// devices × per-device peak FLOP/s
+    pub aggregate_peak: f64,
+    /// measured/simulated iteration time, seconds
+    pub iter_time: f64,
+    /// MFU in 0..1
+    pub mfu: f64,
+    /// tokens per second across the replica
+    pub tokens_per_s: f64,
+}
+
+/// Compute an [`MfuReport`] for one iteration time.
+pub fn mfu_report(e: &ExperimentConfig, iter_time: f64) -> MfuReport {
+    let model_flops = flops::model_flops_per_iteration(&e.model, e.parallel.global_batch);
+    let aggregate_peak = e.parallel.devices() as f64 * e.cluster.peak_flops;
+    MfuReport {
+        model_flops,
+        aggregate_peak,
+        iter_time,
+        mfu: model_flops / (aggregate_peak * iter_time),
+        tokens_per_s: (e.parallel.global_batch * e.model.s) as f64 / iter_time,
+    }
+}
+
+/// Online mean/min/max/stddev accumulator for step timings and losses.
+#[derive(Debug, Clone, Default)]
+pub struct RunningStats {
+    pub n: u64,
+    pub mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl RunningStats {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    /// Welford update.
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::paper_experiment;
+
+    #[test]
+    fn mfu_report_scales_inverse_with_time() {
+        let e = paper_experiment(7).unwrap();
+        let fast = mfu_report(&e, 10.0);
+        let slow = mfu_report(&e, 20.0);
+        assert!((fast.mfu / slow.mfu - 2.0).abs() < 1e-12);
+        assert!((fast.tokens_per_s / slow.tokens_per_s - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mfu_report_paper_scale_sanity() {
+        // GPT-3 96B at 34% MFU on 32 A100s ⇒ iteration ≈ 45 s for B=128
+        let e = paper_experiment(7).unwrap();
+        let model_flops = flops::model_flops_per_iteration(&e.model, 128);
+        let t = model_flops / (32.0 * 312e12 * 0.34);
+        let rep = mfu_report(&e, t);
+        assert!((rep.mfu - 0.34).abs() < 1e-9);
+        assert!(t > 20.0 && t < 80.0, "iter time {t:.1}s");
+    }
+
+    #[test]
+    fn running_stats_welford() {
+        let mut s = RunningStats::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.push(x);
+        }
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.std() - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+}

@@ -1,0 +1,163 @@
+//! FLOPs accounting — paper Eq. 1 and its per-stage / per-component split.
+//!
+//! Eq. 1 (from Narayanan et al. 2021, adopted by the paper §3.1):
+//!
+//! ```text
+//! F = 72 b s l h² (1 + s/(6h) + v/(16 l h))
+//! ```
+//!
+//! is the fwd+bwd matmul FLOPs for one microbatch of `b` sequences, with
+//! the backward counted as 2× forward (72 = 3 × 24).  The paper shows
+//! (§3.1) LLaMA's SwiGLU FFN (three matmuls to/from 8h/3) has the same
+//! 16 b s h² FFN FLOPs as GPT-3's 4h GELU FFN, so one formula serves both
+//! families.
+
+use crate::config::{AttentionMethod, ModelConfig};
+
+/// Fwd+bwd model FLOPs for a microbatch of `b` sequences — paper Eq. 1.
+/// Excludes attention recomputation (see [`hardware_flops_per_microbatch`]).
+pub fn model_flops_per_microbatch(m: &ModelConfig, b: u64) -> f64 {
+    let (h, s, l, v) = (m.h as f64, m.s as f64, m.l as f64, m.v as f64);
+    let b = b as f64;
+    72.0 * b * s * l * h * h * (1.0 + s / (6.0 * h) + v / (16.0 * l * h))
+}
+
+/// Model FLOPs for a whole iteration over global batch `global_batch`.
+pub fn model_flops_per_iteration(m: &ModelConfig, global_batch: u64) -> f64 {
+    model_flops_per_microbatch(m, global_batch)
+}
+
+/// *Hardware* FLOPs actually executed per microbatch, including attention
+/// recomputation when the method re-runs the attention forward in the
+/// backward pass.  MFU per the paper divides *model* FLOPs (Eq. 1) by
+/// time — recompute FLOPs cost time but earn no MFU credit.
+pub fn hardware_flops_per_microbatch(m: &ModelConfig, b: u64, att: AttentionMethod) -> f64 {
+    let base = model_flops_per_microbatch(m, b);
+    match att {
+        AttentionMethod::None => base,
+        // Selective recompute re-runs the attention-core forward
+        // (scores + context: 4bs²h per layer) once in the backward.
+        AttentionMethod::Recompute => base + attention_core_flops(m, b),
+        // Flash-attn's backward also recomputes the attention core; we
+        // charge the same extra forward (flash-attn-2 does ~O(1) extra).
+        AttentionMethod::FlashAttn2 => base + attention_core_flops(m, b),
+    }
+}
+
+/// Attention-core (QKᵀ and PV matmuls) forward FLOPs for all layers:
+/// `4 b s² h` per layer (2 matmuls × 2 flops/MAC).
+pub fn attention_core_flops(m: &ModelConfig, b: u64) -> f64 {
+    let (h, s, l) = (m.h as f64, m.s as f64, m.l as f64);
+    4.0 * (b as f64) * s * s * h * l
+}
+
+/// Per-layer forward matmul FLOPs, split by component, for a microbatch
+/// of `b` sequences on ONE tensor-parallel rank of `t`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerFlops {
+    /// QKV projections: 6 b s h² / t
+    pub qkv: f64,
+    /// attention scores + context: 4 b s² h / t
+    pub attn_core: f64,
+    /// output projection: 2 b s h² / t
+    pub proj: f64,
+    /// FFN: 16 b s h² / t (both families, paper §3.1)
+    pub ffn: f64,
+}
+
+impl LayerFlops {
+    pub fn total(&self) -> f64 {
+        self.qkv + self.attn_core + self.proj + self.ffn
+    }
+}
+
+/// Forward matmul FLOPs of one transformer layer on one TP rank.
+pub fn layer_fwd_flops(m: &ModelConfig, b: u64, t: u64) -> LayerFlops {
+    let (h, s) = (m.h as f64, m.s as f64);
+    let b = b as f64;
+    let t = t as f64;
+    LayerFlops {
+        qkv: 6.0 * b * s * h * h / t,
+        attn_core: 4.0 * b * s * s * h / t,
+        proj: 2.0 * b * s * h * h / t,
+        ffn: 16.0 * b * s * h * h / t,
+    }
+}
+
+/// Model FLOPs of one pipeline stage (l/p layers), fwd+bwd, per
+/// microbatch — the `F_stage` of the paper's §4 notation (Table 4).
+/// The embedding/LM-head stages get the vocab-projection term.
+pub fn stage_flops_per_microbatch(m: &ModelConfig, b: u64, p: u64, stage: u64) -> f64 {
+    let (h, s, l, v) = (m.h as f64, m.s as f64, m.l as f64, m.v as f64);
+    let b = b as f64;
+    let layers = l / p as f64;
+    let mut f = 72.0 * b * s * layers * h * h * (1.0 + s / (6.0 * h));
+    if stage == p - 1 {
+        // LM head: 6 b s h v (fwd 2bshv, ×3 for fwd+bwd)
+        f += 6.0 * b * s * h * v;
+    }
+    f
+}
+
+/// `F_stage` for an interior stage — what §4's single-stage experiments
+/// (Table 5) measure.
+pub fn mid_stage_flops_per_microbatch(m: &ModelConfig, b: u64, p: u64) -> f64 {
+    stage_flops_per_microbatch(m, b, p, 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{gpt3_96b, llama_65b};
+
+    #[test]
+    fn eq1_matches_closed_form_gpt3() {
+        let m = gpt3_96b();
+        let f = model_flops_per_microbatch(&m, 1);
+        // hand-computed: 72 * 2048 * 80 * 9984^2 * (1 + 2048/(6*9984) + 51200/(16*80*9984))
+        let h = 9984f64;
+        let expect = 72.0 * 2048.0 * 80.0 * h * h
+            * (1.0 + 2048.0 / (6.0 * h) + 51200.0 / (16.0 * 80.0 * h));
+        assert!((f - expect).abs() / expect < 1e-12);
+        // ~1.2 PFLOPs per sequence microbatch
+        assert!(f > 1.0e15 && f < 2.0e15, "{f:e}");
+    }
+
+    #[test]
+    fn flops_linear_in_batch() {
+        let m = llama_65b();
+        let f1 = model_flops_per_microbatch(&m, 1);
+        let f4 = model_flops_per_microbatch(&m, 4);
+        assert!((f4 - 4.0 * f1).abs() / f4 < 1e-12);
+    }
+
+    #[test]
+    fn stage_flops_sum_close_to_eq1() {
+        // Sum over stages ≈ Eq. 1 (the s/6h attention term is spread
+        // uniformly; vocab term only on the last stage).
+        let m = gpt3_96b();
+        let p = 8;
+        let total: f64 = (0..p).map(|s| stage_flops_per_microbatch(&m, 2, p, s)).sum();
+        let eq1 = model_flops_per_microbatch(&m, 2);
+        assert!((total - eq1).abs() / eq1 < 0.02, "{total:e} vs {eq1:e}");
+    }
+
+    #[test]
+    fn recompute_adds_attention_core() {
+        let m = llama_65b();
+        let none = hardware_flops_per_microbatch(&m, 2, AttentionMethod::None);
+        let rec = hardware_flops_per_microbatch(&m, 2, AttentionMethod::Recompute);
+        assert!((rec - none - attention_core_flops(&m, 2)).abs() < 1.0);
+    }
+
+    #[test]
+    fn layer_flops_components() {
+        let m = llama_65b();
+        let lf = layer_fwd_flops(&m, 1, 1);
+        // FFN dominates at s << h
+        assert!(lf.ffn > lf.qkv && lf.qkv > lf.attn_core);
+        // per-rank division
+        let lf4 = layer_fwd_flops(&m, 1, 4);
+        assert!((lf.total() / lf4.total() - 4.0).abs() < 1e-9);
+    }
+}

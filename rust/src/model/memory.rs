@@ -1,0 +1,292 @@
+//! Device-memory model: weights/gradients/optimizer state + activations.
+//!
+//! This model decides the crux of Table 3: **which microbatch sizes fit
+//! without BPipe**.  Constants follow Megatron-LM mixed-precision
+//! training and the activation formulas of Korthikanti et al. 2023
+//! ("Reducing Activation Recomputation…", the paper's ref [6]):
+//!
+//! * 18 bytes/param: bf16 weight (2) + fp32 grad (4) + fp32 master copy
+//!   (4) + Adam m (4) + Adam v (4);
+//! * full activations per layer per microbatch: `s·b·h·(34 + 5·a·s/h)/t`
+//!   bytes (sequence parallelism divides both terms by `t`);
+//! * selective attention recompute (or flash attention) drops the
+//!   `5·a·s/h` score/softmax term, leaving `34·s·b·h/t`.
+//!
+//! Under 1F1B, stage `x` keeps up to `p − x` microbatch activation sets
+//! alive (paper §2.2); BPipe bounds every stage to `⌈(p+2)/2⌉`.
+
+use crate::config::{
+    AttentionMethod, ClusterConfig, ExperimentConfig, ModelConfig, ModelFamily, ParallelConfig,
+};
+
+/// Mixed-precision Adam bytes per parameter (Megatron-LM layout).
+pub const BYTES_PER_PARAM: u64 = 18;
+
+/// Activation element factor without the attention score term
+/// (Korthikanti Eq. 2 family, bytes per `s·b·h` per layer).
+pub const ACT_FACTOR_BASE: f64 = 34.0;
+
+/// BPipe's per-device in-flight activation bound: `⌈(p+2)/2⌉` (paper §2.2).
+pub fn bpipe_bound(p: u64) -> u64 {
+    (p + 2).div_ceil(2)
+}
+
+/// Natural 1F1B in-flight activation count at stage `x` of `p`, with `m`
+/// microbatches per iteration: `min(m, p − x)` (paper §2.2: "stage x …
+/// needs to store p−x activations").
+pub fn one_f_one_b_in_flight(p: u64, stage: u64, m: u64) -> u64 {
+    (p - stage).min(m)
+}
+
+/// Per-device memory model for one experiment configuration.
+#[derive(Debug, Clone)]
+pub struct MemoryModel {
+    pub model: ModelConfig,
+    pub parallel: ParallelConfig,
+    pub cluster: ClusterConfig,
+    pub attention: AttentionMethod,
+}
+
+impl MemoryModel {
+    pub fn new(e: &ExperimentConfig) -> Self {
+        Self {
+            model: e.model.clone(),
+            parallel: e.parallel,
+            cluster: e.cluster,
+            attention: e.attention,
+        }
+    }
+
+    /// Transformer layers owned by each pipeline stage.
+    pub fn layers_per_stage(&self) -> u64 {
+        self.model.l / self.parallel.p
+    }
+
+    /// Parameters held by one device (one TP rank of one stage).
+    pub fn params_per_device(&self, stage: u64) -> u64 {
+        let m = &self.model;
+        let t = self.parallel.t;
+        let per_layer = 12 * m.h * m.h + 13 * m.h;
+        let mut params = self.layers_per_stage() * per_layer / t;
+        if stage == 0 {
+            params += m.v * m.h / t; // token embedding
+            if m.family == ModelFamily::Gpt {
+                params += m.s * m.h / t; // learned positions
+            }
+        }
+        if stage == self.parallel.p - 1 {
+            params += m.v * m.h / t + m.h; // LM head + final norm
+        }
+        params
+    }
+
+    /// Weight + gradient + optimizer bytes on one device.
+    pub fn weight_opt_bytes(&self, stage: u64) -> u64 {
+        self.params_per_device(stage) * BYTES_PER_PARAM
+    }
+
+    /// Activation bytes one microbatch pins on one device of `stage`
+    /// while it waits for its backward pass (the BPipe-evictable stash).
+    pub fn activation_bytes_per_microbatch(&self, _stage: u64) -> u64 {
+        let m = &self.model;
+        let b = self.parallel.microbatch as f64;
+        let t = self.parallel.t as f64;
+        let (s, h, a) = (m.s as f64, m.h as f64, m.a as f64);
+        let factor = match self.attention {
+            // full activations: keep the 5·a·s/h softmax/score term
+            AttentionMethod::None => ACT_FACTOR_BASE + 5.0 * a * s / h,
+            // selective recompute / flash: score tensor never stashed
+            AttentionMethod::Recompute | AttentionMethod::FlashAttn2 => ACT_FACTOR_BASE,
+        };
+        (self.layers_per_stage() as f64 * s * b * h * factor / t) as u64
+    }
+
+    /// Peak bytes on one device of `stage` holding `in_flight` stashes.
+    pub fn peak_bytes(&self, stage: u64, in_flight: u64) -> u64 {
+        self.weight_opt_bytes(stage)
+            + in_flight * self.activation_bytes_per_microbatch(stage)
+            + self.cluster.reserved_bytes
+    }
+
+    /// Peak bytes at `stage` under plain 1F1B.
+    pub fn peak_bytes_1f1b(&self, stage: u64) -> u64 {
+        let m = self.parallel.num_microbatches();
+        self.peak_bytes(stage, one_f_one_b_in_flight(self.parallel.p, stage, m))
+    }
+
+    /// Peak bytes at `stage` under BPipe.  An acceptor stage `p−1−x`
+    /// additionally hosts the stashes its evictor partner `x` pushed out:
+    /// `(p−x) − bound` of them, bringing both sides to ≤ the bound (the
+    /// balancing property the technique is named for).
+    pub fn peak_bytes_bpipe(&self, stage: u64) -> u64 {
+        let p = self.parallel.p;
+        let m = self.parallel.num_microbatches();
+        let natural = one_f_one_b_in_flight(p, stage, m);
+        let bound = bpipe_bound(p).min(m);
+        let partner = p - 1 - stage;
+        let in_flight = if natural > bound {
+            bound // evictor: BPipe caps it
+        } else {
+            // acceptor: own stashes + partner's overflow
+            let partner_natural = one_f_one_b_in_flight(p, partner, m);
+            natural + partner_natural.saturating_sub(bound)
+        };
+        self.peak_bytes(stage, in_flight)
+    }
+
+    /// Does the configuration fit on every device?
+    pub fn fits(&self, bpipe: bool) -> bool {
+        self.max_peak_bytes(bpipe) <= self.cluster.hbm_bytes
+    }
+
+    /// Highest per-device peak across stages.
+    pub fn max_peak_bytes(&self, bpipe: bool) -> u64 {
+        (0..self.parallel.p)
+            .map(|s| {
+                if bpipe {
+                    self.peak_bytes_bpipe(s)
+                } else {
+                    self.peak_bytes_1f1b(s)
+                }
+            })
+            .max()
+            .unwrap()
+    }
+
+    /// Per-stage peak memory profile (GiB), for the memory-imbalance
+    /// example and reports.
+    pub fn profile_gib(&self, bpipe: bool) -> Vec<f64> {
+        (0..self.parallel.p)
+            .map(|s| {
+                let b = if bpipe {
+                    self.peak_bytes_bpipe(s)
+                } else {
+                    self.peak_bytes_1f1b(s)
+                };
+                b as f64 / (1u64 << 30) as f64
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{paper_experiment, paper_experiments};
+
+    #[test]
+    fn bpipe_bound_formula() {
+        assert_eq!(bpipe_bound(4), 3);
+        assert_eq!(bpipe_bound(8), 5);
+        assert_eq!(bpipe_bound(16), 9);
+        assert_eq!(bpipe_bound(7), 5); // ceil(9/2)
+    }
+
+    #[test]
+    fn in_flight_monotone_decreasing_in_stage() {
+        for s in 0..8 {
+            assert_eq!(one_f_one_b_in_flight(8, s, 64), 8 - s);
+        }
+        // few microbatches clip it
+        assert_eq!(one_f_one_b_in_flight(8, 0, 3), 3);
+    }
+
+    /// The paper's Table-3 feasibility pattern must emerge from the
+    /// memory model: every listed experiment fits in 80 GiB as run, and
+    /// the BPipe rows would NOT fit without BPipe.
+    #[test]
+    fn paper_feasibility_pattern() {
+        for e in paper_experiments() {
+            let mm = MemoryModel::new(&e);
+            assert!(
+                mm.fits(e.bpipe),
+                "exp {:?} should fit as configured: peak {:.1} GiB",
+                e.id,
+                mm.max_peak_bytes(e.bpipe) as f64 / (1 << 30) as f64
+            );
+            if e.bpipe {
+                assert!(
+                    !mm.fits(false),
+                    "exp {:?} should OOM without BPipe (that's why BPipe is on)",
+                    e.id
+                );
+            }
+        }
+    }
+
+    /// The next-larger microbatch must OOM even WITH BPipe for the rows
+    /// where the paper stopped (BPipe rows are at the BPipe-enabled max).
+    #[test]
+    fn bpipe_rows_are_at_the_limit() {
+        for id in [3u32, 8] {
+            let mut e = paper_experiment(id).unwrap();
+            e.parallel.microbatch *= 2;
+            let mm = MemoryModel::new(&e);
+            assert!(!mm.fits(true), "exp {id} with 2b should OOM even with BPipe");
+        }
+    }
+
+    #[test]
+    fn memory_imbalance_shape() {
+        let e = paper_experiment(7).unwrap();
+        let mm = MemoryModel::new(&e);
+        let prof = mm.profile_gib(false);
+        // monotone non-increasing activation pressure across stages …
+        for w in prof.windows(2) {
+            // (last stage has the LM head weights, allow it to bump up)
+            if w[1] > w[0] {
+                assert!(w[1] - w[0] < 3.0, "only the head stage may bump: {prof:?}");
+            }
+        }
+        // … and BPipe flattens it
+        let prof_b = mm.profile_gib(true);
+        let spread = |v: &[f64]| {
+            v.iter().cloned().fold(f64::MIN, f64::max)
+                - v.iter().cloned().fold(f64::MAX, f64::min)
+        };
+        assert!(spread(&prof_b) < spread(&prof));
+    }
+
+    #[test]
+    fn bpipe_balances_to_bound() {
+        let e = paper_experiment(8).unwrap();
+        let mm = MemoryModel::new(&e);
+        let p = e.parallel.p;
+        for s in 0..p {
+            let act = mm.activation_bytes_per_microbatch(s);
+            let peak = mm.peak_bytes_bpipe(s) - mm.weight_opt_bytes(s) - e.cluster.reserved_bytes;
+            assert!(
+                peak / act <= bpipe_bound(p),
+                "stage {s}: {} stashes > bound {}",
+                peak / act,
+                bpipe_bound(p)
+            );
+        }
+    }
+
+    #[test]
+    fn evictor_acceptor_conservation() {
+        // total stashes with BPipe == total without (nothing is dropped)
+        let e = paper_experiment(8).unwrap();
+        let mm = MemoryModel::new(&e);
+        let p = e.parallel.p;
+        let m = e.parallel.num_microbatches();
+        let act = mm.activation_bytes_per_microbatch(0);
+        let total_1f1b: u64 = (0..p).map(|s| one_f_one_b_in_flight(p, s, m)).sum();
+        let total_bpipe: u64 = (0..p)
+            .map(|s| {
+                (mm.peak_bytes_bpipe(s) - mm.weight_opt_bytes(s) - e.cluster.reserved_bytes) / act
+            })
+            .sum();
+        assert_eq!(total_1f1b, total_bpipe);
+    }
+
+    #[test]
+    fn weight_bytes_example_gpt3() {
+        // GPT-3 96B, t=4, p=8: ~54 GiB of weights+opt on a mid-stage device
+        let e = paper_experiment(7).unwrap();
+        let mm = MemoryModel::new(&e);
+        let gib = mm.weight_opt_bytes(3) as f64 / (1 << 30) as f64;
+        assert!((45.0..60.0).contains(&gib), "{gib}");
+    }
+}

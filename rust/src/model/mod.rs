@@ -1,0 +1,12 @@
+//! Analytical model of the transformer workload: FLOPs (paper Eq. 1) and
+//! device-memory footprints (weights/optimizer + activations).
+//!
+//! These closed forms drive both the simulator's cost model ([`crate::sim`])
+//! and the feasibility analysis (which microbatch sizes OOM without BPipe —
+//! the crux of Table 3).
+
+pub mod flops;
+pub mod memory;
+
+pub use flops::*;
+pub use memory::*;

@@ -1,0 +1,7 @@
+//! Rendering: paper-style tables and ASCII schedule timelines.
+
+pub mod tables;
+pub mod timeline;
+
+pub use tables::{render_table2, render_table3, render_table5, Table};
+pub use timeline::{render_layout, render_timeline};

@@ -1,0 +1,146 @@
+//! Paper-table regeneration: Markdown-ish fixed-width tables with
+//! paper-reported vs simulated columns.
+
+use crate::config::{paper_experiment, paper_table3_mfu, paper_table5_mfu};
+use crate::sim::{simulate_experiment, CostModel};
+
+/// A generic fixed-width text table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn push(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.header.len());
+        self.rows.push(row);
+    }
+
+    pub fn render(&self) -> String {
+        let cols = self.header.len();
+        let mut w = vec![0usize; cols];
+        for c in 0..cols {
+            w[c] = self.header[c].len();
+            for r in &self.rows {
+                w[c] = w[c].max(r[c].len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (c, cell) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<width$} |", cell, width = w[c]));
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = line(&self.header);
+        out.push('|');
+        for width in &w {
+            out.push_str(&format!("{:-<width$}|", "", width = width + 2));
+        }
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r));
+        }
+        out
+    }
+}
+
+/// Table 2: model configurations.
+pub fn render_table2() -> String {
+    let mut t = Table::new(&["Model", "h", "a", "s", "l", "v", "params"]);
+    for m in [crate::config::llama_65b(), crate::config::gpt3_96b()] {
+        t.push(vec![
+            m.name.clone(),
+            m.h.to_string(),
+            m.a.to_string(),
+            m.s.to_string(),
+            m.l.to_string(),
+            m.v.to_string(),
+            format!("{:.1}B", m.total_params() as f64 / 1e9),
+        ]);
+    }
+    t.render()
+}
+
+/// Table 3: the ten whole-model experiments — paper MFU vs simulated MFU,
+/// with the softmax kernel the cost model selected (the §3.2 mechanism).
+pub fn render_table3() -> String {
+    let mut t = Table::new(&[
+        "ID", "Model", "b", "BPipe", "attention", "kernel", "paper MFU %", "sim MFU %",
+    ]);
+    for id in 1..=10u32 {
+        let e = paper_experiment(id).unwrap();
+        let r = simulate_experiment(&e);
+        let kernel = format!("{:?}", CostModel::new(&e).softmax_kernel());
+        t.push(vec![
+            format!("({id})"),
+            e.model.name.clone(),
+            e.parallel.microbatch.to_string(),
+            if e.bpipe { "Yes" } else { "No" }.into(),
+            e.attention.label().into(),
+            kernel,
+            format!("{:.1}", paper_table3_mfu(id).unwrap()),
+            format!("{:.1}", r.mfu_pct()),
+        ]);
+    }
+    t.render()
+}
+
+/// Table 5: single-stage MFU — paper vs cost model.
+pub fn render_table5() -> String {
+    let mut t = Table::new(&["ID", "Model", "b", "attention", "paper MFU %", "sim MFU %"]);
+    for id in 1..=10u32 {
+        let e = paper_experiment(id).unwrap();
+        let cm = CostModel::new(&e);
+        t.push(vec![
+            format!("({id})"),
+            e.model.name.clone(),
+            e.parallel.microbatch.to_string(),
+            e.attention.label().into(),
+            format!("{:.1}", paper_table5_mfu(id).unwrap()),
+            format!("{:.1}", cm.single_stage_mfu() * 100.0),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.push(vec!["xxx".into(), "y".into()]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.push(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn table2_contains_both_models() {
+        let r = render_table2();
+        assert!(r.contains("LLaMA 65B") && r.contains("GPT-3 96B"));
+        assert!(r.contains("9984"));
+    }
+
+    #[test]
+    fn table5_has_ten_rows() {
+        let r = render_table5();
+        assert_eq!(r.lines().count(), 12); // header + rule + 10
+    }
+}

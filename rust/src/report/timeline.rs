@@ -1,0 +1,145 @@
+//! ASCII renderings of schedules (paper Figure 1) and device layouts
+//! (paper Figure 2).
+
+use crate::bpipe::Layout;
+use crate::schedule::{OpKind, Schedule};
+use crate::sim::TraceEvent;
+
+/// Render a schedule as per-stage op rows, Figure-1 style:
+///
+/// ```text
+/// stage 0 | F0 F1 F2 F3 E3 F4 E4 B0 L3 B1 L4 ...
+/// stage 1 |    F0 F1 F2 F3 B0 F4 B1 ...
+/// ```
+///
+/// `F`=forward, `B`=backward, `E`=BPipe evict, `L`=BPipe load; digits are
+/// microbatch ids.  Purely program-order (no timing); for a timed
+/// rendering use [`render_timeline`].
+pub fn render_program(s: &Schedule) -> String {
+    let mut out = String::new();
+    for prog in &s.programs {
+        out.push_str(&format!("stage {} |", prog.stage));
+        for op in &prog.ops {
+            let c = match op.kind {
+                OpKind::Fwd => 'F',
+                OpKind::Bwd => 'B',
+                OpKind::Evict => 'E',
+                OpKind::Load => 'L',
+            };
+            out.push_str(&format!(" {c}{}", op.mb));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Render a simulated trace as a time-bucketed Gantt chart, one row per
+/// stage — the timed version of paper Figure 1.  `width` = character
+/// columns for the whole makespan.
+pub fn render_timeline(trace: &[TraceEvent], p: u64, width: usize) -> String {
+    let makespan = trace.iter().map(|t| t.end).fold(0.0, f64::max);
+    if makespan <= 0.0 {
+        return String::new();
+    }
+    let scale = width as f64 / makespan;
+    let mut rows = vec![vec![' '; width]; p as usize];
+    // compute ops paint F/B; transfers paint e/l *over* idle cells only,
+    // visualizing that they ride a separate stream.
+    let mut paint = |ev: &TraceEvent, fill_over_idle_only: bool| {
+        let row = &mut rows[ev.stage as usize];
+        let a = (ev.start * scale).floor() as usize;
+        let b = ((ev.end * scale).ceil() as usize).min(width).max(a + 1);
+        let ch = match ev.kind {
+            OpKind::Fwd => char::from_digit((ev.mb % 10) as u32, 10).unwrap(),
+            OpKind::Bwd => {
+                // backwards render as letters a..j cycling by microbatch
+                (b'a' + (ev.mb % 10) as u8) as char
+            }
+            OpKind::Evict => '>',
+            OpKind::Load => '<',
+        };
+        for cell in row.iter_mut().take(b.min(width)).skip(a) {
+            if !fill_over_idle_only || *cell == ' ' {
+                *cell = ch;
+            }
+        }
+    };
+    for ev in trace {
+        if matches!(ev.kind, OpKind::Fwd | OpKind::Bwd) {
+            paint(ev, false);
+        }
+    }
+    for ev in trace {
+        if matches!(ev.kind, OpKind::Evict | OpKind::Load) {
+            paint(ev, true);
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "time → (makespan {:.3}s; digits=fwd mb, letters=bwd mb, >=evict, <=load)\n",
+        makespan
+    ));
+    for (s, row) in rows.iter().enumerate() {
+        out.push_str(&format!("stage {s} |"));
+        out.extend(row.iter());
+        out.push_str("|\n");
+    }
+    out
+}
+
+/// Render a stage→node layout, Figure-2 style, marking evictor/acceptor
+/// pairs.
+pub fn render_layout(layout: &Layout, p: u64) -> String {
+    let mut out = format!("layout: {} ({} nodes)\n", layout.name, layout.n_nodes);
+    for (node, stages) in layout.stages_per_node().iter().enumerate() {
+        let tags: Vec<String> = stages
+            .iter()
+            .map(|&s| {
+                let partner = crate::bpipe::partner(p, s);
+                let mark = if layout.pair_intra_node(p, s) { "" } else { "!" };
+                format!("s{s}{mark}(↔{partner})")
+            })
+            .collect();
+        out.push_str(&format!("  node {node}: {}\n", tags.join(" ")));
+    }
+    let frac = layout.intra_node_pair_fraction(p);
+    out.push_str(&format!(
+        "  intra-node pairs: {:.0}% {}\n",
+        frac * 100.0,
+        if frac == 1.0 { "(all evict/load traffic on NVLink)" } else { "(! pairs cross IB)" }
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bpipe::{apply_bpipe, pair_adjacent_layout, sequential_layout};
+    use crate::schedule::one_f_one_b;
+
+    #[test]
+    fn program_rendering_contains_evicts_for_bpipe() {
+        let s = apply_bpipe(&one_f_one_b(4, 8), None);
+        let r = render_program(&s);
+        assert!(r.contains('E') && r.contains('L'));
+        assert!(r.lines().count() == 4);
+    }
+
+    #[test]
+    fn timeline_rendering_has_all_stages() {
+        let e = crate::config::paper_experiment(8).unwrap();
+        let r = crate::sim::simulate_experiment(&e);
+        let txt = render_timeline(&r.trace, e.parallel.p, 100);
+        assert_eq!(txt.lines().count() as u64, e.parallel.p + 1);
+        assert!(txt.contains("makespan"));
+    }
+
+    #[test]
+    fn layout_rendering_marks_cross_node_pairs() {
+        let bad = render_layout(&sequential_layout(16, 2), 16);
+        assert!(bad.contains('!'));
+        let good = render_layout(&pair_adjacent_layout(16, 2), 16);
+        assert!(!good.contains('!'));
+        assert!(good.contains("100%"));
+    }
+}

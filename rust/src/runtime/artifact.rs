@@ -1,0 +1,245 @@
+//! `artifacts/manifest.json` — the python→rust interchange contract.
+//!
+//! The manifest describes every lowered artifact (file, input/output
+//! shapes and dtypes) plus the model spec and per-stage-kind parameter
+//! counts.  The rust side trusts it verbatim; the pytest suite
+//! (`python/tests/test_aot.py`) guards its consistency at build time.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Shape+dtype of one artifact input or output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorMeta {
+    pub shape: Vec<u64>,
+    pub dtype: String,
+}
+
+impl TensorMeta {
+    pub fn elements(&self) -> u64 {
+        self.shape.iter().product::<u64>().max(1)
+    }
+
+    pub fn shape_i64(&self) -> Vec<i64> {
+        self.shape.iter().map(|&d| d as i64).collect()
+    }
+}
+
+/// One lowered artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+}
+
+/// The model spec the artifacts were lowered for (mirror of
+/// `python/compile/model.py::ModelSpec`).
+#[derive(Debug, Clone)]
+pub struct SpecMeta {
+    pub family: String,
+    pub h: u64,
+    pub a: u64,
+    pub s: u64,
+    pub v: u64,
+    pub layers_per_stage: u64,
+    pub stages: u64,
+    pub b: u64,
+    pub attention: String,
+}
+
+impl SpecMeta {
+    /// Total parameters across the pipeline (first + mids + last).
+    pub fn total_params(&self, params: &HashMap<String, u64>) -> u64 {
+        params["first"] + (self.stages - 2) * params["mid"] + params["last"]
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub spec: SpecMeta,
+    pub params: HashMap<String, u64>,
+    pub bs_sweep: Vec<u64>,
+    pub artifacts: HashMap<String, ArtifactMeta>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read {path:?}: {e}. Run `make artifacts` first."))?;
+        let mut m = Self::parse(&text)?;
+        m.dir = dir.to_path_buf();
+        Ok(m)
+    }
+
+    /// Parse a manifest JSON document (via the in-tree JSON parser).
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        use crate::util::Json;
+        let doc = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let need = |v: Option<&Json>, what: &str| {
+            v.cloned().ok_or_else(|| anyhow::anyhow!("manifest missing {what}"))
+        };
+        let u64_of = |v: &Json, what: &str| {
+            v.as_u64().ok_or_else(|| anyhow::anyhow!("manifest: {what} not a u64"))
+        };
+        let str_of = |v: &Json, what: &str| -> anyhow::Result<String> {
+            Ok(v.as_str().ok_or_else(|| anyhow::anyhow!("manifest: {what} not a string"))?.into())
+        };
+
+        let spec_j = need(doc.get("spec"), "spec")?;
+        let sg = |k: &str| -> anyhow::Result<u64> {
+            u64_of(&need(spec_j.get(k), &format!("spec.{k}"))?, k)
+        };
+        let spec = SpecMeta {
+            family: str_of(&need(spec_j.get("family"), "spec.family")?, "family")?,
+            h: sg("h")?,
+            a: sg("a")?,
+            s: sg("s")?,
+            v: sg("v")?,
+            layers_per_stage: sg("layers_per_stage")?,
+            stages: sg("stages")?,
+            b: sg("b")?,
+            attention: str_of(&need(spec_j.get("attention"), "spec.attention")?, "attention")?,
+        };
+
+        let mut params = HashMap::new();
+        for (k, v) in need(doc.get("params"), "params")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("params not an object"))?
+        {
+            params.insert(k.clone(), u64_of(v, k)?);
+        }
+
+        let bs_sweep = doc
+            .get("bs_sweep")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_u64()).collect())
+            .unwrap_or_default();
+
+        let tensor_of = |v: &Json| -> anyhow::Result<TensorMeta> {
+            let shape = v
+                .get("shape")
+                .and_then(|s| s.as_arr())
+                .ok_or_else(|| anyhow::anyhow!("tensor missing shape"))?
+                .iter()
+                .map(|d| d.as_u64().ok_or_else(|| anyhow::anyhow!("bad shape dim")))
+                .collect::<anyhow::Result<Vec<u64>>>()?;
+            let dtype = str_of(&need(v.get("dtype"), "tensor.dtype")?, "dtype")?;
+            Ok(TensorMeta { shape, dtype })
+        };
+        let mut artifacts = HashMap::new();
+        for (name, v) in need(doc.get("artifacts"), "artifacts")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("artifacts not an object"))?
+        {
+            let inputs = need(v.get("inputs"), "inputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("inputs not an array"))?
+                .iter()
+                .map(tensor_of)
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let outputs = need(v.get("outputs"), "outputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("outputs not an array"))?
+                .iter()
+                .map(tensor_of)
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta { file: str_of(&need(v.get("file"), "file")?, "file")?, inputs, outputs },
+            );
+        }
+        Ok(Manifest { spec, params, bs_sweep, artifacts, dir: PathBuf::new() })
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, name: &str) -> anyhow::Result<PathBuf> {
+        let meta = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name:?} not in manifest"))?;
+        Ok(self.dir.join(&meta.file))
+    }
+
+    pub fn meta(&self, name: &str) -> anyhow::Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    /// Parameter count for a stage kind ("first" | "mid" | "last").
+    pub fn param_count(&self, kind: &str) -> anyhow::Result<u64> {
+        self.params
+            .get(kind)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unknown stage kind {kind:?}"))
+    }
+
+    /// Stage kind for pipeline stage index.
+    pub fn stage_kind(&self, stage: u64) -> &'static str {
+        if stage == 0 {
+            "first"
+        } else if stage + 1 == self.spec.stages {
+            "last"
+        } else {
+            "mid"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "spec": {"family": "llama", "h": 64, "a": 4, "s": 64, "v": 256,
+                 "layers_per_stage": 1, "stages": 4, "b": 2,
+                 "attention": "fused", "flash_block_q": 64, "flash_block_k": 64},
+        "params": {"first": 100, "mid": 80, "last": 120},
+        "bs_sweep": [1, 2],
+        "artifacts": {
+            "mid_fwd": {"file": "mid_fwd.hlo.txt",
+                         "inputs": [{"shape": [80], "dtype": "f32"},
+                                    {"shape": [2, 64, 64], "dtype": "f32"}],
+                         "outputs": [{"shape": [2, 64, 64], "dtype": "f32"}]}
+        }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.spec.h, 64);
+        assert_eq!(m.param_count("mid").unwrap(), 80);
+        assert_eq!(m.meta("mid_fwd").unwrap().inputs[1].elements(), 2 * 64 * 64);
+        assert_eq!(m.spec.total_params(&m.params), 100 + 2 * 80 + 120);
+    }
+
+    #[test]
+    fn stage_kinds() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.stage_kind(0), "first");
+        assert_eq!(m.stage_kind(1), "mid");
+        assert_eq!(m.stage_kind(2), "mid");
+        assert_eq!(m.stage_kind(3), "last");
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.meta("nope").is_err());
+        assert!(m.param_count("nope").is_err());
+    }
+
+    #[test]
+    fn tensor_meta_helpers() {
+        let t = TensorMeta { shape: vec![2, 3, 4], dtype: "f32".into() };
+        assert_eq!(t.elements(), 24);
+        assert_eq!(t.shape_i64(), vec![2i64, 3, 4]);
+        let scalar = TensorMeta { shape: vec![], dtype: "i32".into() };
+        assert_eq!(scalar.elements(), 1);
+    }
+}

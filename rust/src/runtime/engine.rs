@@ -1,0 +1,194 @@
+//! PJRT client + compiled-executable wrappers.
+//!
+//! Pattern from /opt/xla-example/load_hlo: HLO text →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`.  Artifacts are lowered with
+//! `return_tuple=True`, so every execution returns one tuple literal we
+//! decompose into per-output literals.
+
+use std::path::Path;
+use std::time::Instant;
+
+/// A PJRT client (CPU) plus compile statistics.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> anyhow::Result<Self> {
+        Ok(Self { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load(&self, path: &Path) -> anyhow::Result<Executable> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path {path:?}"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executable {
+            exe,
+            name: path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default(),
+            compile_time: t0.elapsed(),
+        })
+    }
+
+    /// Upload host data to a device-resident buffer.  Buffers are
+    /// RAII-managed (`PjRtBuffer: Drop`) — this path, together with
+    /// [`Executable::run_buffers`], avoids the upstream `xla` crate's
+    /// `execute()` input-buffer leak (its C shim `release()`s every
+    /// uploaded input device buffer and never frees it; ~600 MB/step at
+    /// tiny scale, OOM within ~60 steps).
+    ///
+    /// Uses `buffer_from_host_buffer` (synchronous
+    /// `kImmutableOnlyDuringCall` semantics) — NOT
+    /// `buffer_from_host_literal`, whose underlying
+    /// `BufferFromHostLiteral` copies *asynchronously* and races with the
+    /// literal's Drop (observed as a PJRT size-mismatch CHECK crash).
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// See [`Self::upload_f32`].
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload a literal by copying through a host slice (dtype-dispatched;
+    /// safe-synchronous, see [`Self::upload_f32`]).
+    pub fn upload_literal(&self, lit: &xla::Literal) -> anyhow::Result<xla::PjRtBuffer> {
+        upload_literal_via(&self.client, lit)
+    }
+
+    /// Load every named artifact from a manifest directory.
+    pub fn load_named(
+        &self,
+        manifest: &super::Manifest,
+        names: &[&str],
+    ) -> anyhow::Result<std::collections::HashMap<String, Executable>> {
+        let mut out = std::collections::HashMap::new();
+        for &name in names {
+            let exe = self.load(&manifest.path_of(name)?)?;
+            out.insert(name.to_string(), exe);
+        }
+        Ok(out)
+    }
+}
+
+/// Synchronous literal upload through a host-slice copy (see
+/// [`Runtime::upload_f32`] for why the literal path is unsafe).
+fn upload_literal_via(
+    client: &xla::PjRtClient,
+    lit: &xla::Literal,
+) -> anyhow::Result<xla::PjRtBuffer> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match lit.element_type()? {
+        xla::ElementType::F32 => {
+            Ok(client.buffer_from_host_buffer(&lit.to_vec::<f32>()?, &dims, None)?)
+        }
+        xla::ElementType::S32 => {
+            Ok(client.buffer_from_host_buffer(&lit.to_vec::<i32>()?, &dims, None)?)
+        }
+        other => anyhow::bail!("unsupported input dtype {other:?}"),
+    }
+}
+
+/// One compiled stage function.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+    pub compile_time: std::time::Duration,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the decomposed output tuple.
+    ///
+    /// Inputs are uploaded to RAII-managed device buffers and executed
+    /// via `execute_b` — NOT via the crate's `execute()`, whose C shim
+    /// leaks every input device buffer (see [`Runtime::upload_f32`]).
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> anyhow::Result<Vec<xla::Literal>> {
+        let client = self.exe.client();
+        let bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|l| upload_literal_via(client, l.borrow()))
+            .collect::<anyhow::Result<_>>()?;
+        self.run_buffers(&bufs)
+    }
+
+    /// Execute with device-resident inputs (e.g. parameters kept on
+    /// device across a whole step); returns the decomposed output tuple.
+    pub fn run_buffers<B: std::borrow::Borrow<xla::PjRtBuffer>>(
+        &self,
+        inputs: &[B],
+    ) -> anyhow::Result<Vec<xla::Literal>> {
+        let bufs = self.exe.execute_b::<B>(inputs)?;
+        let tuple = bufs[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    /// Execute and return the single output (artifacts like `*_fwd`).
+    pub fn run1<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> anyhow::Result<xla::Literal> {
+        let mut out = self.run(inputs)?;
+        anyhow::ensure!(out.len() == 1, "{}: expected 1 output, got {}", self.name, out.len());
+        Ok(out.pop().unwrap())
+    }
+
+    /// [`Self::run_buffers`] for single-output artifacts.
+    pub fn run1_buffers<B: std::borrow::Borrow<xla::PjRtBuffer>>(
+        &self,
+        inputs: &[B],
+    ) -> anyhow::Result<xla::Literal> {
+        let mut out = self.run_buffers(inputs)?;
+        anyhow::ensure!(out.len() == 1, "{}: expected 1 output, got {}", self.name, out.len());
+        Ok(out.pop().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    /// Minimal HLO-text module: f(x) = (x + x,) over f32[4].
+    const ADD_HLO: &str = r#"HloModule jit_fn, entry_computation_layout={(f32[4]{0})->(f32[4]{0})}
+
+ENTRY main.4 {
+  Arg_0.1 = f32[4]{0} parameter(0)
+  add.2 = f32[4]{0} add(Arg_0.1, Arg_0.1)
+  ROOT tuple.3 = (f32[4]{0}) tuple(add.2)
+}
+"#;
+
+    #[test]
+    fn cpu_client_loads_and_runs_hlo_text() {
+        let dir = std::env::temp_dir().join(format!("bpipe-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("add.hlo.txt");
+        std::fs::File::create(&path).unwrap().write_all(ADD_HLO.as_bytes()).unwrap();
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+        let exe = rt.load(&path).unwrap();
+        let x = xla::Literal::vec1(&[1f32, 2., 3., 4.]);
+        let out = exe.run1(&[x]).unwrap();
+        assert_eq!(out.to_vec::<f32>().unwrap(), vec![2f32, 4., 6., 8.]);
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.load(Path::new("/nonexistent/x.hlo.txt")).is_err());
+    }
+}

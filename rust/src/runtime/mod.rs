@@ -1,0 +1,33 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! This is the only module that touches the `xla` crate.  The python
+//! side (`python/compile/aot.py`) lowers every stage function ONCE to
+//! HLO text (the interchange format xla_extension 0.5.1 can parse — see
+//! DESIGN.md); everything here is pure rust and runs on the request
+//! path with no Python anywhere.
+
+pub mod artifact;
+pub mod engine;
+
+pub use artifact::{ArtifactMeta, Manifest, TensorMeta};
+pub use engine::{Executable, Runtime};
+
+/// Convert a flat f32 slice into a Literal of the given shape.
+pub fn literal_f32(data: &[f32], shape: &[i64]) -> anyhow::Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(lit);
+    }
+    Ok(lit.reshape(shape)?)
+}
+
+/// Convert a token slice into an i32 Literal of shape `[b, s]`.
+pub fn literal_tokens(tokens: &[i32], b: i64, s: i64) -> anyhow::Result<xla::Literal> {
+    anyhow::ensure!(tokens.len() as i64 == b * s, "token count mismatch");
+    Ok(xla::Literal::vec1(tokens).reshape(&[b, s])?)
+}
+
+/// Extract an f32 vector from a Literal.
+pub fn to_f32_vec(lit: &xla::Literal) -> anyhow::Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}

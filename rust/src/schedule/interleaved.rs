@@ -1,0 +1,134 @@
+//! Interleaved 1F1B (virtual pipeline) — Megatron-LM's
+//! `forward_backward_pipelining_with_interleaving`.
+//!
+//! Each physical stage hosts `v` model *chunks* (virtual stages), cutting
+//! the bubble from `(p−1)/m` to `(p−1)/(v·m)` at the price of more
+//! p2p communication and a *higher* activation stash count — which is why
+//! the memory-imbalance story (and BPipe) still matters.  Included as the
+//! schedule-comparison ablation baseline; BPipe itself applies to plain
+//! 1F1B (paper §2.2).
+
+use super::{Op, OpKind, Schedule, ScheduleKind, StageProgram};
+
+/// Map forward-slot index `k` to (microbatch, chunk) — microbatches run
+/// in groups of `p`; within a group, the chunk advances every `p` slots.
+fn fwd_slot(k: u64, p: u64, v: u64) -> (u64, u64) {
+    let group = k / (p * v);
+    let chunk = (k % (p * v)) / p;
+    let mb = group * p + (k % p);
+    (mb, chunk)
+}
+
+/// Backward slots retire chunks in reverse order.
+fn bwd_slot(k: u64, p: u64, v: u64) -> (u64, u64) {
+    let (mb, chunk) = fwd_slot(k, p, v);
+    (mb, v - 1 - chunk)
+}
+
+/// Generate the interleaved-1F1B schedule: `p` stages, `m` microbatches,
+/// `v` chunks per stage.  Megatron requires `m % p == 0`.
+pub fn interleaved(p: u64, m: u64, v: u64) -> Schedule {
+    assert!(v >= 1, "need at least one chunk");
+    assert!(m % p == 0, "interleaved schedule requires m ({m}) % p ({p}) == 0");
+    let total = m * v;
+    let programs = (0..p)
+        .map(|s| {
+            let mut warmup = (p - s - 1) * 2 + (v - 1) * p;
+            warmup = warmup.min(total);
+            let mut ops = Vec::with_capacity(2 * total as usize);
+            for k in 0..warmup {
+                let (mb, chunk) = fwd_slot(k, p, v);
+                ops.push(Op { kind: OpKind::Fwd, mb, chunk });
+            }
+            let steady = total - warmup;
+            for i in 0..steady {
+                let (mb, chunk) = fwd_slot(warmup + i, p, v);
+                ops.push(Op { kind: OpKind::Fwd, mb, chunk });
+                let (mb, chunk) = bwd_slot(i, p, v);
+                ops.push(Op { kind: OpKind::Bwd, mb, chunk });
+            }
+            for i in steady..total {
+                let (mb, chunk) = bwd_slot(i, p, v);
+                ops.push(Op { kind: OpKind::Bwd, mb, chunk });
+            }
+            StageProgram { stage: s, ops }
+        })
+        .collect();
+    Schedule { p, m, kind: ScheduleKind::Interleaved { chunks: v }, programs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::validate;
+    use std::collections::HashSet;
+
+    #[test]
+    fn v1_reduces_to_something_1f1b_shaped() {
+        let s = interleaved(4, 8, 1);
+        let base = crate::schedule::one_f_one_b(4, 8);
+        // same op multiset per stage and same warmup depth ±1
+        for st in 0..4 {
+            assert_eq!(s.count(st, OpKind::Fwd), base.count(st, OpKind::Fwd));
+            assert_eq!(s.count(st, OpKind::Bwd), base.count(st, OpKind::Bwd));
+        }
+        validate(&s).unwrap();
+    }
+
+    #[test]
+    fn every_mb_chunk_pair_once() {
+        let (p, m, v) = (4, 8, 2);
+        let s = interleaved(p, m, v);
+        for st in 0..p {
+            let mut fwd = HashSet::new();
+            let mut bwd = HashSet::new();
+            for op in &s.program(st).ops {
+                let set = if op.kind == OpKind::Fwd { &mut fwd } else { &mut bwd };
+                assert!(set.insert((op.mb, op.chunk)), "dup {op:?} on stage {st}");
+            }
+            assert_eq!(fwd.len() as u64, m * v);
+            assert_eq!(bwd.len() as u64, m * v);
+        }
+    }
+
+    #[test]
+    fn bwd_follows_fwd_per_chunk() {
+        let s = interleaved(4, 8, 2);
+        for st in 0..4 {
+            let ops = &s.program(st).ops;
+            for (i, op) in ops.iter().enumerate() {
+                if op.kind == OpKind::Bwd {
+                    let fwd_pos = ops
+                        .iter()
+                        .position(|o| o.kind == OpKind::Fwd && o.mb == op.mb && o.chunk == op.chunk)
+                        .expect("bwd without fwd");
+                    assert!(fwd_pos < i, "stage {st}: bwd {op:?} before its fwd");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn higher_stash_high_water_than_plain() {
+        // interleaving trades memory for bubble: stash HW grows with v
+        let plain = crate::schedule::one_f_one_b(4, 16);
+        let il = interleaved(4, 16, 2);
+        assert!(
+            il.program(0).stash_high_water() > plain.program(0).stash_high_water()
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "m (6) % p (4)")]
+    fn requires_divisibility() {
+        interleaved(4, 6, 2);
+    }
+
+    #[test]
+    fn validates() {
+        for v in 1..=3 {
+            validate(&interleaved(4, 8, v)).unwrap();
+            validate(&interleaved(8, 16, v)).unwrap();
+        }
+    }
+}

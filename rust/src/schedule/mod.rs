@@ -1,0 +1,146 @@
+//! Pipeline-parallel schedule generators.
+//!
+//! A [`Schedule`] is one op-list per stage ([`StageProgram`]), in program
+//! order.  Generators:
+//!
+//! * [`gpipe`] — all forwards, then all backwards (GPipe);
+//! * [`one_f_one_b`] — the 1F1B/DAPPLE schedule Megatron-LM uses and the
+//!   paper builds on (§2.2);
+//! * [`interleaved`] — Megatron's interleaved-1F1B (virtual pipeline),
+//!   for the schedule-comparison ablation;
+//! * [`crate::bpipe::apply_bpipe`] — transforms a 1F1B schedule by
+//!   inserting activation Evict/Load ops (paper Figure 1).
+//!
+//! Schedules are *data*: the simulator executes them against a cost
+//! model, and the real coordinator executes them against PJRT
+//! executables — one source of truth for both.
+
+pub mod gpipe;
+pub mod interleaved;
+pub mod one_f_one_b;
+pub mod validate;
+
+pub use gpipe::gpipe;
+pub use interleaved::interleaved;
+pub use one_f_one_b::one_f_one_b;
+pub use validate::{validate, ValidationError};
+
+
+/// What a stage does at one program step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// Forward pass of one microbatch through this stage's layers.
+    Fwd,
+    /// Backward pass (consumes the stashed stage input).
+    Bwd,
+    /// BPipe: push the stash of a microbatch to the paired acceptor
+    /// stage (frees local memory once the transfer completes).
+    Evict,
+    /// BPipe: fetch an evicted stash back before its backward.
+    Load,
+}
+
+/// One scheduled operation on one stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Op {
+    pub kind: OpKind,
+    /// Microbatch index within the iteration (0-based).
+    pub mb: u64,
+    /// Virtual-pipeline chunk (always 0 except for interleaved).
+    pub chunk: u64,
+}
+
+impl Op {
+    pub fn fwd(mb: u64) -> Self {
+        Op { kind: OpKind::Fwd, mb, chunk: 0 }
+    }
+    pub fn bwd(mb: u64) -> Self {
+        Op { kind: OpKind::Bwd, mb, chunk: 0 }
+    }
+    pub fn evict(mb: u64) -> Self {
+        Op { kind: OpKind::Evict, mb, chunk: 0 }
+    }
+    pub fn load(mb: u64) -> Self {
+        Op { kind: OpKind::Load, mb, chunk: 0 }
+    }
+}
+
+/// The op sequence one pipeline stage executes for one iteration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageProgram {
+    pub stage: u64,
+    pub ops: Vec<Op>,
+}
+
+impl StageProgram {
+    /// In-flight stash high-water mark implied by this program: +1 per
+    /// Fwd, −1 per Evict, +1 per Load, −1 per Bwd.
+    pub fn stash_high_water(&self) -> i64 {
+        let mut cur = 0i64;
+        let mut hw = 0i64;
+        for op in &self.ops {
+            match op.kind {
+                OpKind::Fwd | OpKind::Load => cur += 1,
+                OpKind::Bwd | OpKind::Evict => cur -= 1,
+            }
+            hw = hw.max(cur);
+        }
+        hw
+    }
+}
+
+/// Which generator produced a schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScheduleKind {
+    GPipe,
+    OneFOneB,
+    Interleaved { chunks: u64 },
+    BPipe { bound: u64 },
+}
+
+/// A complete pipeline schedule: one program per stage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Schedule {
+    /// pipeline depth (number of stages)
+    pub p: u64,
+    /// microbatches per iteration
+    pub m: u64,
+    pub kind: ScheduleKind,
+    pub programs: Vec<StageProgram>,
+}
+
+impl Schedule {
+    pub fn program(&self, stage: u64) -> &StageProgram {
+        &self.programs[stage as usize]
+    }
+
+    /// Total op count across stages.
+    pub fn num_ops(&self) -> usize {
+        self.programs.iter().map(|p| p.ops.len()).sum()
+    }
+
+    /// Count ops of a kind on a stage.
+    pub fn count(&self, stage: u64, kind: OpKind) -> usize {
+        self.program(stage).ops.iter().filter(|o| o.kind == kind).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_constructors() {
+        assert_eq!(Op::fwd(3), Op { kind: OpKind::Fwd, mb: 3, chunk: 0 });
+        assert_eq!(Op::evict(1).kind, OpKind::Evict);
+    }
+
+    #[test]
+    fn stash_high_water_counts() {
+        let prog = StageProgram {
+            stage: 0,
+            ops: vec![Op::fwd(0), Op::fwd(1), Op::evict(1), Op::fwd(2), Op::bwd(0), Op::load(1), Op::bwd(1), Op::bwd(2)],
+        };
+        assert_eq!(prog.stash_high_water(), 2);
+    }
+}

@@ -1,0 +1,109 @@
+//! The 1F1B (one-forward-one-backward) schedule — DAPPLE / PipeDream-flush,
+//! as implemented in Megatron-LM and assumed throughout the paper (§2.2).
+//!
+//! Stage `s` (0-based) of `p` runs:
+//!
+//! 1. **warmup** — `min(m, p − 1 − s)` forwards;
+//! 2. **steady state** — alternating (Fwd, Bwd) pairs until all `m`
+//!    forwards are issued (one backward retires for each new forward, so
+//!    in-flight stashes stay at `p − s`);
+//! 3. **cooldown** — the remaining backwards.
+//!
+//! This keeps stage 0 holding up to `p` microbatch stashes — the memory
+//! imbalance BPipe exists to fix.
+
+use super::{Op, Schedule, ScheduleKind, StageProgram};
+
+/// Number of warmup forwards at `stage` (0-based) of `p` with `m`
+/// microbatches.
+pub fn warmup_fwds(p: u64, stage: u64, m: u64) -> u64 {
+    (p - 1 - stage).min(m)
+}
+
+/// Generate the 1F1B schedule for `p` stages and `m` microbatches.
+pub fn one_f_one_b(p: u64, m: u64) -> Schedule {
+    assert!(p >= 1, "need at least one stage");
+    assert!(m >= 1, "need at least one microbatch");
+    let programs = (0..p)
+        .map(|s| {
+            let warmup = warmup_fwds(p, s, m);
+            let mut ops = Vec::with_capacity(2 * m as usize);
+            for i in 0..warmup {
+                ops.push(Op::fwd(i));
+            }
+            // steady state: F(warmup), B(0), F(warmup+1), B(1), …
+            let steady = m - warmup;
+            for i in 0..steady {
+                ops.push(Op::fwd(warmup + i));
+                ops.push(Op::bwd(i));
+            }
+            // cooldown: remaining backwards
+            for i in steady..m {
+                ops.push(Op::bwd(i));
+            }
+            StageProgram { stage: s, ops }
+        })
+        .collect();
+    Schedule { p, m, kind: ScheduleKind::OneFOneB, programs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::{validate, OpKind};
+
+    #[test]
+    fn last_stage_strictly_alternates() {
+        let s = one_f_one_b(4, 8);
+        let ops = &s.program(3).ops;
+        for (i, op) in ops.iter().enumerate() {
+            let want = if i % 2 == 0 { OpKind::Fwd } else { OpKind::Bwd };
+            assert_eq!(op.kind, want, "op {i}");
+        }
+    }
+
+    #[test]
+    fn stage0_warmup_is_p_minus_1() {
+        let s = one_f_one_b(8, 64);
+        let ops = &s.program(0).ops;
+        assert!(ops[..7].iter().all(|o| o.kind == OpKind::Fwd));
+        assert_eq!(ops[7], Op::fwd(7));
+        assert_eq!(ops[8], Op::bwd(0));
+    }
+
+    #[test]
+    fn op_counts() {
+        let s = one_f_one_b(8, 64);
+        for st in 0..8 {
+            assert_eq!(s.count(st, OpKind::Fwd), 64);
+            assert_eq!(s.count(st, OpKind::Bwd), 64);
+        }
+    }
+
+    #[test]
+    fn in_flight_high_water_is_p_minus_s() {
+        // the paper's §2.2 claim: stage x stores p−x activations
+        let p = 8;
+        let s = one_f_one_b(p, 64);
+        for st in 0..p {
+            assert_eq!(s.program(st).stash_high_water(), (p - st) as i64);
+        }
+    }
+
+    #[test]
+    fn few_microbatches_clip_warmup() {
+        let s = one_f_one_b(8, 2);
+        for st in 0..8 {
+            assert_eq!(s.count(st, OpKind::Fwd), 2);
+            assert!(s.program(st).stash_high_water() <= 2);
+        }
+        validate(&s).unwrap();
+    }
+
+    #[test]
+    fn validates() {
+        for (p, m) in [(1, 1), (2, 3), (4, 8), (8, 64), (16, 128)] {
+            validate(&one_f_one_b(p, m)).unwrap();
+        }
+    }
+}

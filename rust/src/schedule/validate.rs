@@ -1,0 +1,211 @@
+//! Schedule invariant checking — the contract every generator (and the
+//! BPipe transform) must uphold, enforced in unit tests, proptests and
+//! defensively by the simulator/coordinator before executing a schedule.
+
+use super::{OpKind, Schedule, ScheduleKind};
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+
+/// Why a schedule is malformed.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ValidationError {
+    WrongStageCount { expected: u64, got: usize },
+    StageIdMismatch { index: usize, stage: u64 },
+    DuplicateOp { stage: u64, kind: OpKind, mb: u64, chunk: u64 },
+    MissingBwd { stage: u64, mb: u64, chunk: u64 },
+    MissingFwd { stage: u64, mb: u64, chunk: u64 },
+    BwdBeforeFwd { stage: u64, mb: u64, chunk: u64 },
+    EvictWithoutFwd { stage: u64, mb: u64 },
+    LoadWithoutEvict { stage: u64, mb: u64 },
+    EvictNotReloaded { stage: u64, mb: u64 },
+    BwdWhileEvicted { stage: u64, mb: u64 },
+    NegativeStash { stage: u64, at_op: usize },
+    BoundExceeded { stage: u64, bound: u64, high_water: i64 },
+    UnknownMicrobatch { stage: u64, mb: u64, m: u64 },
+}
+
+impl fmt::Display for ValidationError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+impl std::error::Error for ValidationError {}
+
+/// Validate a schedule against the structural invariants:
+///
+/// 1. one program per stage, ids in order;
+/// 2. every (mb, chunk) has exactly one Fwd and one Bwd per stage, with
+///    Bwd after Fwd, and mb < m;
+/// 3. Evict only after the mb's Fwd, Load only after its Evict, Bwd only
+///    while the stash is resident (Load-ed back if evicted);
+/// 4. the on-device stash count never goes negative, and for
+///    `ScheduleKind::BPipe { bound }` never exceeds `bound`.
+pub fn validate(s: &Schedule) -> Result<(), ValidationError> {
+    if s.programs.len() != s.p as usize {
+        return Err(ValidationError::WrongStageCount { expected: s.p, got: s.programs.len() });
+    }
+    for (i, prog) in s.programs.iter().enumerate() {
+        if prog.stage != i as u64 {
+            return Err(ValidationError::StageIdMismatch { index: i, stage: prog.stage });
+        }
+        let st = prog.stage;
+        let mut fwd_seen: HashSet<(u64, u64)> = HashSet::new();
+        let mut bwd_seen: HashSet<(u64, u64)> = HashSet::new();
+        // stash residency: None = not forwarded, Some(true) = resident,
+        // Some(false) = evicted
+        let mut resident: HashMap<(u64, u64), bool> = HashMap::new();
+        let mut stash = 0i64;
+        let mut high_water = 0i64;
+        for (at, op) in prog.ops.iter().enumerate() {
+            if op.mb >= s.m {
+                return Err(ValidationError::UnknownMicrobatch { stage: st, mb: op.mb, m: s.m });
+            }
+            let key = (op.mb, op.chunk);
+            match op.kind {
+                OpKind::Fwd => {
+                    if !fwd_seen.insert(key) {
+                        return Err(ValidationError::DuplicateOp {
+                            stage: st, kind: OpKind::Fwd, mb: op.mb, chunk: op.chunk,
+                        });
+                    }
+                    resident.insert(key, true);
+                    stash += 1;
+                }
+                OpKind::Bwd => {
+                    if !fwd_seen.contains(&key) {
+                        return Err(ValidationError::BwdBeforeFwd {
+                            stage: st, mb: op.mb, chunk: op.chunk,
+                        });
+                    }
+                    if !bwd_seen.insert(key) {
+                        return Err(ValidationError::DuplicateOp {
+                            stage: st, kind: OpKind::Bwd, mb: op.mb, chunk: op.chunk,
+                        });
+                    }
+                    match resident.get(&key) {
+                        Some(true) => {}
+                        _ => return Err(ValidationError::BwdWhileEvicted { stage: st, mb: op.mb }),
+                    }
+                    resident.insert(key, false);
+                    stash -= 1;
+                }
+                OpKind::Evict => {
+                    if resident.get(&key) != Some(&true) {
+                        return Err(ValidationError::EvictWithoutFwd { stage: st, mb: op.mb });
+                    }
+                    resident.insert(key, false);
+                    stash -= 1;
+                }
+                OpKind::Load => {
+                    if resident.get(&key) != Some(&false) || bwd_seen.contains(&key) {
+                        return Err(ValidationError::LoadWithoutEvict { stage: st, mb: op.mb });
+                    }
+                    resident.insert(key, true);
+                    stash += 1;
+                }
+            }
+            if stash < 0 {
+                return Err(ValidationError::NegativeStash { stage: st, at_op: at });
+            }
+            high_water = high_water.max(stash);
+        }
+        // completeness: every fwd got a bwd …
+        for key in &fwd_seen {
+            if !bwd_seen.contains(key) {
+                return Err(ValidationError::MissingBwd { stage: st, mb: key.0, chunk: key.1 });
+            }
+        }
+        // … and vice versa (implied, but keep symmetric reporting)
+        for key in &bwd_seen {
+            if !fwd_seen.contains(key) {
+                return Err(ValidationError::MissingFwd { stage: st, mb: key.0, chunk: key.1 });
+            }
+        }
+        // every evicted stash must have been loaded back (Bwd-while-
+        // evicted already guards correctness; this guards op symmetry)
+        let evicts = prog.ops.iter().filter(|o| o.kind == OpKind::Evict).count();
+        let loads = prog.ops.iter().filter(|o| o.kind == OpKind::Load).count();
+        if evicts != loads {
+            let mb = prog.ops.iter().find(|o| o.kind == OpKind::Evict).map(|o| o.mb).unwrap_or(0);
+            return Err(ValidationError::EvictNotReloaded { stage: st, mb });
+        }
+        if let ScheduleKind::BPipe { bound } = s.kind {
+            if high_water > bound as i64 {
+                return Err(ValidationError::BoundExceeded { stage: st, bound, high_water });
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::{Op, Schedule, ScheduleKind, StageProgram};
+
+    fn sched(ops: Vec<Op>) -> Schedule {
+        Schedule {
+            p: 1,
+            m: 8,
+            kind: ScheduleKind::OneFOneB,
+            programs: vec![StageProgram { stage: 0, ops }],
+        }
+    }
+
+    #[test]
+    fn rejects_bwd_before_fwd() {
+        let s = sched(vec![Op::bwd(0), Op::fwd(0)]);
+        assert!(matches!(validate(&s), Err(ValidationError::BwdBeforeFwd { .. })));
+    }
+
+    #[test]
+    fn rejects_missing_bwd() {
+        let s = sched(vec![Op::fwd(0)]);
+        assert!(matches!(validate(&s), Err(ValidationError::MissingBwd { .. })));
+    }
+
+    #[test]
+    fn rejects_bwd_while_evicted() {
+        let s = sched(vec![Op::fwd(0), Op::evict(0), Op::bwd(0)]);
+        assert!(matches!(validate(&s), Err(ValidationError::BwdWhileEvicted { .. })));
+    }
+
+    #[test]
+    fn rejects_load_without_evict() {
+        let s = sched(vec![Op::fwd(0), Op::load(0), Op::bwd(0)]);
+        assert!(matches!(validate(&s), Err(ValidationError::LoadWithoutEvict { .. })));
+    }
+
+    #[test]
+    fn rejects_double_fwd() {
+        let s = sched(vec![Op::fwd(0), Op::fwd(0), Op::bwd(0)]);
+        assert!(matches!(validate(&s), Err(ValidationError::DuplicateOp { .. })));
+    }
+
+    #[test]
+    fn rejects_unknown_microbatch() {
+        let s = sched(vec![Op::fwd(99), Op::bwd(99)]);
+        assert!(matches!(validate(&s), Err(ValidationError::UnknownMicrobatch { .. })));
+    }
+
+    #[test]
+    fn accepts_evict_load_cycle() {
+        let s = sched(vec![Op::fwd(0), Op::evict(0), Op::load(0), Op::bwd(0)]);
+        validate(&s).unwrap();
+    }
+
+    #[test]
+    fn enforces_bpipe_bound() {
+        let mut s = sched(vec![
+            Op::fwd(0),
+            Op::fwd(1),
+            Op::fwd(2),
+            Op::bwd(0),
+            Op::bwd(1),
+            Op::bwd(2),
+        ]);
+        s.kind = ScheduleKind::BPipe { bound: 2 };
+        assert!(matches!(validate(&s), Err(ValidationError::BoundExceeded { .. })));
+    }
+}

@@ -1,0 +1,493 @@
+//! Discrete-event simulator: executes a [`Schedule`] against the
+//! [`CostModel`](super::costmodel::CostModel) on a modeled cluster.
+//!
+//! Each stage has a FIFO **compute stream** (Fwd/Bwd) and each
+//! evictor/acceptor pair a FIFO **transfer stream** (Evict/Load).  Ops
+//! form a DAG:
+//!
+//! * `Fwd(s, i)` needs `Fwd(s−1, i)` (activation arrival) and the
+//!   previous compute op on stage `s`;
+//! * `Bwd(s, i)` needs `Bwd(s+1, i)` (gradient arrival), its own
+//!   `Fwd(s, i)`, the previous compute op, and — if the stash was
+//!   evicted — `Load(s, i)` (BPipe's only coupling into compute);
+//! * `Evict/Load` need their triggering op and the previous transfer on
+//!   the pair's link.
+//!
+//! Completion times are computed by Kahn topological order; the engine
+//! also tracks per-device stash residency over time (memory high-water,
+//! OOM detection) and per-stream busy time (bubble fraction).
+
+use super::costmodel::CostModel;
+use crate::bpipe::{pairing, Layout};
+use crate::config::ExperimentConfig;
+use crate::model::{flops, memory::MemoryModel};
+use crate::schedule::{OpKind, Schedule};
+
+/// One executed op, for timeline rendering (paper Figure 1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    pub stage: u64,
+    pub kind: OpKind,
+    pub mb: u64,
+    pub chunk: u64,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// Simulation output for one training iteration.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// iteration wall-clock (seconds)
+    pub makespan: f64,
+    /// whole-model MFU (0..1), paper Eq. MFU definition
+    pub mfu: f64,
+    /// per-stage compute busy time (seconds)
+    pub busy: Vec<f64>,
+    /// 1 − mean(busy)/makespan
+    pub bubble_fraction: f64,
+    /// per-stage peak device memory, bytes (weights+opt+stash+reserved)
+    pub mem_high_water: Vec<u64>,
+    /// stage that exceeded HBM capacity, if any
+    pub oom_stage: Option<u64>,
+    /// total backward stall time waiting on BPipe loads (seconds)
+    pub load_stall: f64,
+    /// total bytes moved by BPipe transfers
+    pub transfer_bytes: u64,
+    /// executed-op timeline
+    pub trace: Vec<TraceEvent>,
+}
+
+impl SimResult {
+    pub fn mfu_pct(&self) -> f64 {
+        self.mfu * 100.0
+    }
+}
+
+/// Export a trace as CSV (`stage,kind,mb,chunk,start,end`) for external
+/// plotting — the machine-readable companion of the Figure-1 renderer.
+pub fn trace_to_csv(trace: &[TraceEvent]) -> String {
+    let mut out = String::from("stage,kind,mb,chunk,start,end\n");
+    for ev in trace {
+        out.push_str(&format!(
+            "{},{:?},{},{},{:.9},{:.9}\n",
+            ev.stage, ev.kind, ev.mb, ev.chunk, ev.start, ev.end
+        ));
+    }
+    out
+}
+
+#[derive(Clone, Copy)]
+struct Node {
+    stage: usize,
+    idx: usize,
+}
+
+/// Simulate one iteration of `schedule` for experiment `e` on `layout`.
+pub fn simulate(e: &ExperimentConfig, schedule: &Schedule, layout: &Layout) -> SimResult {
+    crate::schedule::validate(schedule).expect("refusing to simulate an invalid schedule");
+    let cm = CostModel::new(e);
+    let mm = MemoryModel::new(e);
+    let p = schedule.p as usize;
+    let chunks = match schedule.kind {
+        crate::schedule::ScheduleKind::Interleaved { chunks } => chunks,
+        _ => 1,
+    };
+
+    // -- global node ids ---------------------------------------------------
+    let mut base = vec![0usize; p + 1];
+    for s in 0..p {
+        base[s + 1] = base[s] + schedule.programs[s].ops.len();
+    }
+    let n = base[p];
+    let node_of = |s: usize, idx: usize| base[s] + idx;
+    let nodes: Vec<Node> = (0..p)
+        .flat_map(|s| (0..schedule.programs[s].ops.len()).map(move |idx| Node { stage: s, idx }))
+        .collect();
+
+    // index (stage, kind, mb, chunk) -> node id, for dependency lookups
+    let mut find: std::collections::HashMap<(usize, OpKind, u64, u64), usize> =
+        std::collections::HashMap::with_capacity(n);
+    for (id, nd) in nodes.iter().enumerate() {
+        let op = schedule.programs[nd.stage].ops[nd.idx];
+        find.insert((nd.stage, op.kind, op.mb, op.chunk), id);
+    }
+
+    // -- dependency edges ---------------------------------------------------
+    let mut deps: Vec<Vec<usize>> = vec![Vec::with_capacity(3); n];
+    // FIFO streams: previous compute op per stage; previous transfer per
+    // LINK.  An intra-node pair gets a dedicated NVLink p2p stream; every
+    // cross-node pair whose evictor sits on the same node contends for
+    // that node's single IB uplink (the effect paper Figure 2's
+    // pair-adjacent layout exists to avoid).
+    #[derive(Hash, PartialEq, Eq, Clone, Copy)]
+    enum LinkKey {
+        NvlinkPair(usize),
+        IbUplink(u64),
+    }
+    let link_of = |stage: usize| -> LinkKey {
+        if layout.pair_intra_node(p as u64, stage as u64) {
+            LinkKey::NvlinkPair(stage.min(p - 1 - stage))
+        } else {
+            LinkKey::IbUplink(layout.node_of(stage as u64))
+        }
+    };
+    let mut prev_compute: Vec<Option<usize>> = vec![None; p];
+    for (id, nd) in nodes.iter().enumerate() {
+        let s = nd.stage;
+        let op = schedule.programs[s].ops[nd.idx];
+        match op.kind {
+            OpKind::Fwd => {
+                if let Some(prev) = prev_compute[s] {
+                    deps[id].push(prev);
+                }
+                // activation arrival: previous (virtual) stage's fwd
+                if s > 0 {
+                    deps[id].push(find[&(s - 1, OpKind::Fwd, op.mb, op.chunk)]);
+                } else if op.chunk > 0 {
+                    // interleaved wrap: chunk c at stage 0 consumes
+                    // chunk c−1 at stage p−1
+                    deps[id].push(find[&(p - 1, OpKind::Fwd, op.mb, op.chunk - 1)]);
+                }
+                prev_compute[s] = Some(id);
+            }
+            OpKind::Bwd => {
+                if let Some(prev) = prev_compute[s] {
+                    deps[id].push(prev);
+                }
+                deps[id].push(find[&(s, OpKind::Fwd, op.mb, op.chunk)]);
+                if s + 1 < p {
+                    deps[id].push(find[&(s + 1, OpKind::Bwd, op.mb, op.chunk)]);
+                } else if op.chunk + 1 < chunks {
+                    // interleaved wrap: grad for chunk c at stage p−1
+                    // comes from chunk c+1 at stage 0
+                    deps[id].push(find[&(0, OpKind::Bwd, op.mb, op.chunk + 1)]);
+                }
+                if let Some(&load) = find.get(&(s, OpKind::Load, op.mb, op.chunk)) {
+                    deps[id].push(load);
+                }
+                prev_compute[s] = Some(id);
+            }
+            OpKind::Evict | OpKind::Load => {
+                // issue point: the op preceding it in program order
+                if nd.idx > 0 {
+                    deps[id].push(node_of(s, nd.idx - 1));
+                }
+                if op.kind == OpKind::Load {
+                    deps[id].push(find[&(s, OpKind::Evict, op.mb, op.chunk)]);
+                }
+                // link arbitration is time-based (FCFS per link) in the
+                // event loop below, not a static dependency — static
+                // chaining of a *shared* uplink across stages can create
+                // artificial cycles.
+            }
+        }
+    }
+
+    // -- durations ----------------------------------------------------------
+    let stage_times: Vec<_> = (0..p).map(|s| cm.stage_times(s as u64)).collect();
+    // interleaved chunks split a stage's layers v ways
+    let chunk_scale = 1.0 / chunks as f64;
+    let dur = |nd: &Node| -> f64 {
+        let op = schedule.programs[nd.stage].ops[nd.idx];
+        match op.kind {
+            OpKind::Fwd => stage_times[nd.stage].fwd * chunk_scale,
+            OpKind::Bwd => stage_times[nd.stage].bwd * chunk_scale,
+            OpKind::Evict | OpKind::Load => {
+                let intra = layout.pair_intra_node(p as u64, nd.stage as u64);
+                cm.transfer_time(intra)
+            }
+        }
+    };
+
+    // -- event-driven timing with FCFS link arbitration ----------------------
+    // Ops become READY when all logical deps complete; compute ops start
+    // at their ready time (program-order deps already serialize the
+    // stage's compute stream); transfer ops additionally queue FCFS on
+    // their link.  Events are processed in ready-time order, which makes
+    // the link free-time bookkeeping causally consistent.
+    let mut indeg = vec![0usize; n];
+    let mut rev: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (id, ds) in deps.iter().enumerate() {
+        indeg[id] = ds.len();
+        for &d in ds {
+            rev[d].push(id);
+        }
+    }
+    let mut start = vec![0f64; n];
+    let mut end = vec![0f64; n];
+    // BinaryHeap over (ready_time, id); f64 wrapped for total order
+    #[derive(PartialEq)]
+    struct Ev(f64, usize);
+    impl Eq for Ev {}
+    impl PartialOrd for Ev {
+        fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+    impl Ord for Ev {
+        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+            // min-heap: reverse on time, tie-break on id for determinism
+            other
+                .0
+                .partial_cmp(&self.0)
+                .unwrap()
+                .then(other.1.cmp(&self.1))
+        }
+    }
+    let mut heap: std::collections::BinaryHeap<Ev> = (0..n)
+        .filter(|&i| indeg[i] == 0)
+        .map(|i| Ev(0.0, i))
+        .collect();
+    let mut link_free: std::collections::HashMap<LinkKey, f64> = Default::default();
+    let mut done = 0usize;
+    let mut load_stall = 0f64;
+    while let Some(Ev(ready, id)) = heap.pop() {
+        done += 1;
+        let nd = nodes[id];
+        let op = schedule.programs[nd.stage].ops[nd.idx];
+        let t0 = match op.kind {
+            OpKind::Evict | OpKind::Load => {
+                let link = link_of(nd.stage);
+                let free = link_free.entry(link).or_insert(0.0);
+                let s = ready.max(*free);
+                *free = s + dur(&nd);
+                s
+            }
+            _ => ready,
+        };
+        start[id] = t0;
+        end[id] = t0 + dur(&nd);
+        if op.kind == OpKind::Bwd {
+            if let Some(&load) = find.get(&(nd.stage, OpKind::Load, op.mb, op.chunk)) {
+                let without: f64 = deps[id]
+                    .iter()
+                    .filter(|&&d| d != load)
+                    .map(|&d| end[d])
+                    .fold(0f64, f64::max);
+                load_stall += (end[load] - without).max(0.0);
+            }
+        }
+        for &nxt in &rev[id] {
+            indeg[nxt] -= 1;
+            if indeg[nxt] == 0 {
+                let r = deps[nxt].iter().map(|&d| end[d]).fold(0f64, f64::max);
+                heap.push(Ev(r, nxt));
+            }
+        }
+    }
+    assert_eq!(done, n, "dependency cycle in schedule DAG");
+
+    // -- aggregate ------------------------------------------------------------
+    let makespan = end.iter().cloned().fold(0f64, f64::max);
+    let mut busy = vec![0f64; p];
+    let mut trace = Vec::with_capacity(n);
+    for (id, nd) in nodes.iter().enumerate() {
+        let op = schedule.programs[nd.stage].ops[nd.idx];
+        if matches!(op.kind, OpKind::Fwd | OpKind::Bwd) {
+            busy[nd.stage] += end[id] - start[id];
+        }
+        trace.push(TraceEvent {
+            stage: nd.stage as u64,
+            kind: op.kind,
+            mb: op.mb,
+            chunk: op.chunk,
+            start: start[id],
+            end: end[id],
+        });
+    }
+    trace.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+
+    // -- memory timeline -------------------------------------------------------
+    // events: (time, stage, delta_stashes); stash bytes are uniform
+    let act = mm.activation_bytes_per_microbatch(0);
+    let mut events: Vec<(f64, usize, i64)> = Vec::new();
+    for (id, nd) in nodes.iter().enumerate() {
+        let op = schedule.programs[nd.stage].ops[nd.idx];
+        let partner = pairing::partner(p as u64, nd.stage as u64) as usize;
+        match op.kind {
+            OpKind::Fwd => events.push((end[id], nd.stage, 1)),
+            OpKind::Bwd => events.push((end[id], nd.stage, -1)),
+            OpKind::Evict => {
+                // freed locally only once the transfer lands; acceptor
+                // allocates at transfer start (conservative overlap)
+                events.push((end[id], nd.stage, -1));
+                events.push((start[id], partner, 1));
+            }
+            OpKind::Load => {
+                events.push((start[id], nd.stage, 1));
+                events.push((end[id], partner, -1));
+            }
+        }
+    }
+    events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.2.cmp(&b.2)));
+    let mut cur = vec![0i64; p];
+    let mut hw = vec![0i64; p];
+    for (_, s, d) in events {
+        cur[s] += d;
+        hw[s] = hw[s].max(cur[s]);
+    }
+    let mem_high_water: Vec<u64> = (0..p)
+        .map(|s| {
+            mm.weight_opt_bytes(s as u64) + e.cluster.reserved_bytes + hw[s] as u64 * act
+        })
+        .collect();
+    let oom_stage = mem_high_water
+        .iter()
+        .position(|&b| b > e.cluster.hbm_bytes)
+        .map(|s| s as u64);
+
+    let transfers = schedule
+        .programs
+        .iter()
+        .flat_map(|pr| pr.ops.iter())
+        .filter(|o| matches!(o.kind, OpKind::Evict | OpKind::Load))
+        .count() as u64;
+
+    let model_flops = flops::model_flops_per_iteration(&e.model, e.parallel.global_batch);
+    let devices = e.parallel.devices() as f64;
+    let mfu = model_flops / (devices * e.cluster.peak_flops * makespan);
+    let mean_busy: f64 = busy.iter().sum::<f64>() / p as f64;
+
+    SimResult {
+        makespan,
+        mfu,
+        bubble_fraction: 1.0 - mean_busy / makespan,
+        busy,
+        mem_high_water,
+        oom_stage,
+        load_stall,
+        transfer_bytes: transfers * act,
+        trace,
+    }
+}
+
+/// Build the schedule an experiment config implies (1F1B, +BPipe if
+/// enabled) with the pair-adjacent layout, simulate one iteration.
+pub fn simulate_experiment(e: &ExperimentConfig) -> SimResult {
+    let m = e.parallel.num_microbatches();
+    let base = crate::schedule::one_f_one_b(e.parallel.p, m);
+    let schedule = if e.bpipe {
+        crate::bpipe::apply_bpipe(&base, None)
+    } else {
+        base
+    };
+    let layout = crate::bpipe::pair_adjacent_layout(e.parallel.p, e.cluster.n_nodes);
+    simulate(e, &schedule, &layout)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{paper_experiment, paper_experiments};
+    use crate::schedule::{gpipe, one_f_one_b};
+
+    #[test]
+    fn makespan_exceeds_critical_path_lower_bound() {
+        let e = paper_experiment(7).unwrap();
+        let r = simulate_experiment(&e);
+        let cm = CostModel::new(&e);
+        let st = cm.stage_times(1);
+        let m = e.parallel.num_microbatches() as f64;
+        // lower bound: one stage's serial work
+        assert!(r.makespan >= m * st.total());
+        // upper bound sanity: and not 3× it
+        assert!(r.makespan < 3.0 * m * st.total());
+    }
+
+    #[test]
+    fn mfu_in_sane_range_for_all_rows() {
+        for e in paper_experiments() {
+            let r = simulate_experiment(&e);
+            assert!(
+                r.mfu_pct() > 20.0 && r.mfu_pct() < 70.0,
+                "exp {:?}: {:.1}%",
+                e.id,
+                r.mfu_pct()
+            );
+            assert!(r.oom_stage.is_none(), "exp {:?} must fit", e.id);
+        }
+    }
+
+    #[test]
+    fn gpipe_slower_than_1f1b_same_memory_model() {
+        let e = paper_experiment(9).unwrap();
+        let m = e.parallel.num_microbatches();
+        let layout = crate::bpipe::pair_adjacent_layout(e.parallel.p, e.cluster.n_nodes);
+        let g = simulate(&e, &gpipe(e.parallel.p, m), &layout);
+        let f = simulate(&e, &one_f_one_b(e.parallel.p, m), &layout);
+        // same bubble (flush at the end either way) but GPipe peaks at m stashes
+        assert!(g.mem_high_water[0] > f.mem_high_water[0]);
+        assert!((g.makespan - f.makespan) / f.makespan < 0.05);
+    }
+
+    #[test]
+    fn bpipe_reduces_stage0_memory() {
+        let mut e = paper_experiment(8).unwrap();
+        let r_bpipe = simulate_experiment(&e);
+        e.bpipe = false;
+        let r_plain = simulate_experiment(&e);
+        assert!(r_bpipe.mem_high_water[0] < r_plain.mem_high_water[0]);
+        // plain 1F1B at b=2 OOMs on GPT-3 96B (why exp (8) needs BPipe)
+        assert_eq!(r_plain.oom_stage, Some(0));
+        assert!(r_bpipe.oom_stage.is_none());
+    }
+
+    #[test]
+    fn bpipe_overhead_small_when_intra_node() {
+        // BPipe at the same b must cost only a little (overlapped xfers)
+        let mut e = paper_experiment(7).unwrap(); // b=1, fits without
+        e.bpipe = true;
+        let with = simulate_experiment(&e);
+        e.bpipe = false;
+        let without = simulate_experiment(&e);
+        let overhead = with.makespan / without.makespan - 1.0;
+        assert!(
+            (0.0..0.08).contains(&overhead),
+            "BPipe overhead {overhead:.3} out of range"
+        );
+    }
+
+    #[test]
+    fn memory_high_water_matches_analytical_model() {
+        let e = paper_experiment(7).unwrap();
+        let r = simulate_experiment(&e);
+        let mm = MemoryModel::new(&e);
+        for s in 0..e.parallel.p {
+            let analytic = mm.peak_bytes_1f1b(s);
+            let simulated = r.mem_high_water[s as usize];
+            assert_eq!(simulated, analytic, "stage {s}");
+        }
+    }
+
+    #[test]
+    fn trace_is_complete_and_ordered() {
+        let e = paper_experiment(7).unwrap();
+        let r = simulate_experiment(&e);
+        let m = e.parallel.num_microbatches() as usize;
+        assert_eq!(
+            r.trace.iter().filter(|t| t.kind == OpKind::Fwd).count(),
+            m * e.parallel.p as usize
+        );
+        for w in r.trace.windows(2) {
+            assert!(w[0].start <= w[1].start);
+        }
+    }
+
+    #[test]
+    fn load_stall_zero_when_no_bpipe() {
+        let e = paper_experiment(7).unwrap();
+        let r = simulate_experiment(&e);
+        assert_eq!(r.load_stall, 0.0);
+        assert_eq!(r.transfer_bytes, 0);
+    }
+
+    #[test]
+    fn interleaved_cuts_bubble() {
+        let e = paper_experiment(9).unwrap();
+        let m = e.parallel.num_microbatches();
+        let layout = crate::bpipe::pair_adjacent_layout(e.parallel.p, e.cluster.n_nodes);
+        let plain = simulate(&e, &one_f_one_b(e.parallel.p, m), &layout);
+        let il = simulate(&e, &crate::schedule::interleaved(e.parallel.p, m, 2), &layout);
+        assert!(il.bubble_fraction < plain.bubble_fraction);
+    }
+}

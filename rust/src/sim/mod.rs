@@ -1,0 +1,13 @@
+//! Discrete-event cluster simulator (substrate S1 of DESIGN.md).
+//!
+//! [`costmodel`] turns (model, parallelism, attention method) into per-op
+//! wall-clock times on a modeled A100; [`engine`] executes pipeline
+//! schedules against those times, tracking memory, bubbles, BPipe
+//! transfer overlap and MFU.  Together they regenerate the paper's
+//! Tables 3/5 and Figures 1/2 at the paper's scale on one CPU.
+
+pub mod costmodel;
+pub mod engine;
+
+pub use costmodel::{CostModel, SoftmaxKernel, StageTimes};
+pub use engine::{simulate, simulate_experiment, SimResult, TraceEvent};

@@ -1,0 +1,110 @@
+//! Tiny micro-benchmark harness (offline stand-in for criterion).
+//!
+//! Warms up, runs timed iterations until a wall-clock budget or max
+//! iteration count is hit, and reports mean/median/min/stddev.  Used by
+//! every file under `benches/` (all `harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub stddev: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12} median {:>12} mean {:>12} min  ±{:>10}  ({} iters)",
+            self.name,
+            fmt_dur(self.median),
+            fmt_dur(self.mean),
+            fmt_dur(self.min),
+            fmt_dur(self.stddev),
+            self.iters
+        )
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Benchmark `f`, printing and returning the stats.
+///
+/// Runs 1 warmup call, then up to `max_iters` timed calls or ~2 s of
+/// wall clock, whichever comes first (min 3 timed calls).
+pub fn bench<T>(name: &str, max_iters: u32, mut f: impl FnMut() -> T) -> BenchResult {
+    let _warm = f();
+    let budget = Duration::from_secs(2);
+    let mut samples = Vec::new();
+    let t_total = Instant::now();
+    while (samples.len() < 3 || t_total.elapsed() < budget) && (samples.len() as u32) < max_iters {
+        let t = Instant::now();
+        let out = f();
+        samples.push(t.elapsed());
+        std::hint::black_box(&out);
+    }
+    samples.sort();
+    let n = samples.len() as u32;
+    let sum: Duration = samples.iter().sum();
+    let mean = sum / n;
+    let median = samples[samples.len() / 2];
+    let min = samples[0];
+    let mean_ns = mean.as_secs_f64();
+    let var = samples
+        .iter()
+        .map(|s| (s.as_secs_f64() - mean_ns).powi(2))
+        .sum::<f64>()
+        / n.max(2).saturating_sub(1) as f64;
+    let result = BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean,
+        median,
+        min,
+        stddev: Duration::from_secs_f64(var.sqrt()),
+    };
+    println!("{}", result.report());
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let r = bench("noop", 50, || 1 + 1);
+        assert!(r.iters >= 3);
+        assert!(r.min <= r.median && r.median <= r.mean * 10);
+        assert!(r.report().contains("noop"));
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let r = bench("capped", 5, || std::thread::sleep(Duration::from_millis(1)));
+        assert!(r.iters <= 5);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500 ns");
+        assert!(fmt_dur(Duration::from_micros(1500)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).contains(" s"));
+    }
+}

@@ -1,0 +1,11 @@
+//! In-tree utility substrates (the build is fully offline: no serde, no
+//! rand, no criterion — these small, tested replacements cover what the
+//! stack needs).
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+pub use bench::{bench, BenchResult};
+pub use json::Json;
+pub use rng::SplitMix64;

@@ -1,0 +1,81 @@
+//! CLI integration: the `bpipe` binary's simulator-path subcommands are
+//! the user-facing regeneration interface for every table/figure, so
+//! each one must run and emit the expected structure.
+
+use std::process::Command;
+
+fn bpipe(args: &[&str]) -> (bool, String) {
+    let exe = env!("CARGO_BIN_EXE_bpipe");
+    let out = Command::new(exe).args(args).output().expect("spawn bpipe");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn tables_2_3_5_render() {
+    let (ok, t2) = bpipe(&["tables", "--which", "2"]);
+    assert!(ok && t2.contains("GPT-3 96B") && t2.contains("9984"));
+    let (ok, t3) = bpipe(&["tables", "--which", "3"]);
+    assert!(ok && t3.lines().count() == 12 && t3.contains("Unfused"));
+    let (ok, t5) = bpipe(&["tables", "--which", "5"]);
+    assert!(ok && t5.contains("37.") , "{t5}");
+}
+
+#[test]
+fn figures_render() {
+    let (ok, f1) = bpipe(&["figures", "--which", "1"]);
+    assert!(ok && f1.contains("E2") && f1.contains("L2"), "{f1}");
+    let (ok, f2) = bpipe(&["figures", "--which", "2"]);
+    assert!(ok && f2.contains("100%") && f2.contains("s12"));
+}
+
+#[test]
+fn simulate_reports_memory_and_mfu() {
+    let (ok, out) = bpipe(&["simulate", "--experiment", "8", "--timeline"]);
+    assert!(ok, "{out}");
+    for needle in ["MFU", "bubble fraction", "stage 0 peak mem", "makespan"] {
+        assert!(out.contains(needle), "missing {needle}: {out}");
+    }
+    // exp 8 without BPipe must flag the OOM
+    let (ok, out) = bpipe(&["simulate", "--experiment", "8", "--bpipe", "false"]);
+    assert!(ok && out.contains("OOM"), "{out}");
+}
+
+#[test]
+fn estimate_reproduces_worked_example() {
+    let (ok, out) = bpipe(&["estimate", "--from", "1:0.378", "--to", "2:0.552"]);
+    assert!(ok && out.contains("1.388"), "{out}");
+    // LLaMA case → NOT worth it
+    let (ok, out) = bpipe(&["estimate", "--from", "2:0.586", "--to", "4:0.619"]);
+    assert!(ok && out.contains("NOT worth it"), "{out}");
+}
+
+#[test]
+fn schedule_subcommand_prints_programs() {
+    let (ok, out) = bpipe(&["schedule", "--p", "4", "--m", "8", "--bpipe"]);
+    assert!(ok);
+    assert_eq!(out.lines().count(), 4);
+    assert!(out.contains('E') && out.contains('L'));
+    let (ok, out) = bpipe(&["schedule", "--p", "4", "--m", "8", "--kind", "gpipe"]);
+    assert!(ok && !out.contains('E'));
+}
+
+#[test]
+fn memory_subcommand_shows_imbalance() {
+    let (ok, out) = bpipe(&["memory", "--experiment", "8"]);
+    assert!(ok && out.contains("OOM!"), "{out}");
+}
+
+#[test]
+fn bad_input_fails_cleanly() {
+    let (ok, _) = bpipe(&["tables", "--which", "9"]);
+    assert!(!ok);
+    let (ok, _) = bpipe(&["bogus-subcommand"]);
+    assert!(!ok);
+    let (ok, _) = bpipe(&["estimate", "--from", "nonsense"]);
+    assert!(!ok);
+}

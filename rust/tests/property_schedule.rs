@@ -1,0 +1,209 @@
+//! Property-based tests over schedule generators and the BPipe transform.
+//!
+//! A hand-rolled property driver (the build is offline; no proptest):
+//! [`bpipe::util::SplitMix64`] generates hundreds of random (p, m, bound)
+//! cases per property; every case is checked against the full invariant
+//! set.  Failures print the seed + case for replay.
+
+use bpipe::bpipe::{apply_bpipe, pair_adjacent_layout, pairing, sequential_layout};
+use bpipe::model::memory::{bpipe_bound, one_f_one_b_in_flight};
+use bpipe::schedule::{gpipe, interleaved, one_f_one_b, validate, OpKind};
+use bpipe::util::SplitMix64;
+
+const CASES: u64 = 300;
+
+/// Random (p, m) with p ∈ [1, 24], m ∈ [1, 160].
+fn random_pm(rng: &mut SplitMix64) -> (u64, u64) {
+    (rng.range(1, 24), rng.range(1, 160))
+}
+
+#[test]
+fn prop_1f1b_always_validates_with_exact_high_water() {
+    let mut rng = SplitMix64::new(0xF1F1B);
+    for case in 0..CASES {
+        let (p, m) = random_pm(&mut rng);
+        let s = one_f_one_b(p, m);
+        validate(&s).unwrap_or_else(|e| panic!("case {case} (p={p}, m={m}): {e}"));
+        for st in 0..p {
+            assert_eq!(
+                s.program(st).stash_high_water(),
+                one_f_one_b_in_flight(p, st, m) as i64,
+                "case {case} (p={p}, m={m}) stage {st}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_gpipe_always_validates_with_m_high_water() {
+    let mut rng = SplitMix64::new(0x6717E);
+    for case in 0..CASES {
+        let (p, m) = random_pm(&mut rng);
+        let s = gpipe(p, m);
+        validate(&s).unwrap_or_else(|e| panic!("case {case} (p={p}, m={m}): {e}"));
+        for st in 0..p {
+            assert_eq!(s.program(st).stash_high_water(), m as i64);
+        }
+    }
+}
+
+#[test]
+fn prop_interleaved_validates_for_divisible_m() {
+    let mut rng = SplitMix64::new(0x1417);
+    for case in 0..CASES {
+        let p = rng.range(1, 12);
+        let m = p * rng.range(1, 12);
+        let v = rng.range(1, 4);
+        let s = interleaved(p, m, v);
+        validate(&s)
+            .unwrap_or_else(|e| panic!("case {case} (p={p}, m={m}, v={v}): {e}"));
+        // op-count identity: m·v forwards and backwards per stage
+        for st in 0..p {
+            assert_eq!(s.count(st, OpKind::Fwd) as u64, m * v);
+            assert_eq!(s.count(st, OpKind::Bwd) as u64, m * v);
+        }
+    }
+}
+
+#[test]
+fn prop_bpipe_bounds_and_validates() {
+    let mut rng = SplitMix64::new(0xB19E);
+    for case in 0..CASES {
+        let p = rng.range(2, 24);
+        let m = rng.range(1, 160);
+        // default bound, plus random tighter bounds ≥ 2
+        let bound = if rng.next_f64() < 0.5 {
+            None
+        } else {
+            Some(rng.range(2, bpipe_bound(p).max(2)))
+        };
+        let s = apply_bpipe(&one_f_one_b(p, m), bound);
+        validate(&s).unwrap_or_else(|e| panic!("case {case} (p={p}, m={m}, bound={bound:?}): {e}"));
+        let k = bound.unwrap_or_else(|| bpipe_bound(p)) as i64;
+        for st in 0..p {
+            assert!(
+                s.program(st).stash_high_water() <= k,
+                "case {case} (p={p}, m={m}, bound={bound:?}) stage {st}: hw {} > {k}",
+                s.program(st).stash_high_water()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_bpipe_preserves_compute_ops_exactly() {
+    // BPipe only ADDS Evict/Load; the Fwd/Bwd subsequence is untouched.
+    let mut rng = SplitMix64::new(0xC0DE);
+    for case in 0..CASES {
+        let p = rng.range(2, 16);
+        let m = rng.range(1, 96);
+        let base = one_f_one_b(p, m);
+        let bp = apply_bpipe(&base, None);
+        for st in 0..p {
+            let compute = |prog: &bpipe::schedule::StageProgram| {
+                prog.ops
+                    .iter()
+                    .filter(|o| matches!(o.kind, OpKind::Fwd | OpKind::Bwd))
+                    .cloned()
+                    .collect::<Vec<_>>()
+            };
+            assert_eq!(
+                compute(base.program(st)),
+                compute(bp.program(st)),
+                "case {case} (p={p}, m={m}) stage {st}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_bpipe_evict_load_symmetry_and_counts() {
+    let mut rng = SplitMix64::new(0x5EED);
+    for case in 0..CASES {
+        let p = rng.range(2, 20);
+        let m = rng.range(1, 120);
+        let bp = apply_bpipe(&one_f_one_b(p, m), None);
+        for st in 0..p {
+            let evicts = bp.count(st, OpKind::Evict) as u64;
+            let loads = bp.count(st, OpKind::Load) as u64;
+            assert_eq!(evicts, loads, "case {case} (p={p}, m={m}) stage {st}");
+            assert_eq!(
+                evicts,
+                pairing::evictions_at(p, st, m),
+                "case {case} (p={p}, m={m}) stage {st}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_pairing_involution_and_acceptor_bound() {
+    let mut rng = SplitMix64::new(0xAB1E);
+    for _ in 0..CASES {
+        let p = rng.range(2, 64);
+        let m = rng.range(1, 256);
+        for x in 0..p {
+            assert_eq!(pairing::partner(p, pairing::partner(p, x)), x);
+            // a stage never both evicts and accepts
+            assert!(!(pairing::is_evictor(p, x, m) && pairing::is_acceptor(p, x, m)));
+            // acceptor's total stays within the bound
+            let own = one_f_one_b_in_flight(p, x, m);
+            if own <= bpipe_bound(p) {
+                assert!(own + pairing::acceptor_extra_stashes(p, x, m) <= bpipe_bound(p));
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_pair_adjacent_layout_always_intra_node() {
+    let mut rng = SplitMix64::new(0x1A40);
+    for _ in 0..CASES {
+        let n_nodes = rng.range(1, 8);
+        let per = 2 * rng.range(1, 8); // even stages per node
+        let p = n_nodes * per;
+        let l = pair_adjacent_layout(p, n_nodes);
+        assert_eq!(l.intra_node_pair_fraction(p), 1.0, "p={p} nodes={n_nodes}");
+        // and each node hosts exactly per stages
+        for stages in l.stages_per_node() {
+            assert_eq!(stages.len() as u64, per);
+        }
+        // sequential only achieves that with one node
+        let seq = sequential_layout(p, n_nodes);
+        if n_nodes > 1 {
+            assert!(seq.intra_node_pair_fraction(p) < 1.0);
+        }
+    }
+}
+
+#[test]
+fn prop_loads_arrive_before_bwd_in_program_order() {
+    let mut rng = SplitMix64::new(0x10AD);
+    for case in 0..CASES {
+        let p = rng.range(2, 16);
+        let m = rng.range(1, 96);
+        let bp = apply_bpipe(&one_f_one_b(p, m), None);
+        for prog in &bp.programs {
+            let mut evicted = std::collections::HashSet::new();
+            for op in &prog.ops {
+                match op.kind {
+                    OpKind::Evict => {
+                        evicted.insert(op.mb);
+                    }
+                    OpKind::Load => {
+                        evicted.remove(&op.mb);
+                    }
+                    OpKind::Bwd => {
+                        assert!(
+                            !evicted.contains(&op.mb),
+                            "case {case}: bwd {} while evicted on stage {}",
+                            op.mb,
+                            prog.stage
+                        );
+                    }
+                    OpKind::Fwd => {}
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! Property-based tests over the discrete-event simulator: conservation
+//! and causality invariants that must hold for ANY valid schedule on ANY
+//! layout, checked across hundreds of randomized configurations.
+
+use bpipe::bpipe::{apply_bpipe, pair_adjacent_layout, sequential_layout, Layout};
+use bpipe::config::{paper_experiment, ExperimentConfig};
+use bpipe::schedule::{gpipe, interleaved, one_f_one_b, OpKind, Schedule};
+use bpipe::sim::{simulate, SimResult};
+use bpipe::util::SplitMix64;
+
+const CASES: u64 = 60;
+
+fn random_case(rng: &mut SplitMix64) -> (ExperimentConfig, Schedule, Layout) {
+    let mut e = paper_experiment(*rng.choose(&[1, 2, 5, 7, 8, 9, 10])).unwrap();
+    let p = *rng.choose(&[4u64, 8]);
+    e.parallel.p = p;
+    let m = p * rng.range(1, 6);
+    e.parallel.microbatch = 1;
+    e.parallel.global_batch = m;
+    let schedule = match rng.below(4) {
+        0 => gpipe(p, m),
+        1 => one_f_one_b(p, m),
+        2 => interleaved(p, m, rng.range(1, 3)),
+        _ => apply_bpipe(&one_f_one_b(p, m), None),
+    };
+    let nodes = if p == 8 && rng.next_f64() < 0.5 { 4 } else { 1 };
+    let layout = if rng.next_f64() < 0.5 {
+        pair_adjacent_layout(p, nodes)
+    } else {
+        sequential_layout(p, nodes)
+    };
+    (e, schedule, layout)
+}
+
+fn check_invariants(r: &SimResult, e: &ExperimentConfig, label: &str) {
+    // causality: every op has start ≤ end ≤ makespan, no negative times
+    for ev in &r.trace {
+        assert!(ev.start >= 0.0 && ev.start <= ev.end, "{label}: {ev:?}");
+        assert!(ev.end <= r.makespan + 1e-9, "{label}: op past makespan {ev:?}");
+    }
+    // per-stage compute ops never overlap (one compute stream per stage)
+    for stage in 0..e.parallel.p {
+        let mut ops: Vec<_> = r
+            .trace
+            .iter()
+            .filter(|t| t.stage == stage && matches!(t.kind, OpKind::Fwd | OpKind::Bwd))
+            .collect();
+        ops.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+        for w in ops.windows(2) {
+            assert!(
+                w[1].start >= w[0].end - 1e-9,
+                "{label}: overlapping compute on stage {stage}: {:?} then {:?}",
+                w[0],
+                w[1]
+            );
+        }
+        // busy time == sum of compute durations
+        let sum: f64 = ops.iter().map(|t| t.end - t.start).sum();
+        assert!(
+            (sum - r.busy[stage as usize]).abs() < 1e-6,
+            "{label}: busy-time accounting off on stage {stage}"
+        );
+        assert!(r.busy[stage as usize] <= r.makespan + 1e-9, "{label}");
+    }
+    // cross-stage fwd causality: Fwd(s, i, c) starts after Fwd(s−1, i, c) ends
+    for ev in &r.trace {
+        if ev.kind == OpKind::Fwd && ev.stage > 0 {
+            let up = r
+                .trace
+                .iter()
+                .find(|t| {
+                    t.kind == OpKind::Fwd
+                        && t.stage == ev.stage - 1
+                        && t.mb == ev.mb
+                        && t.chunk == ev.chunk
+                })
+                .expect("missing upstream fwd");
+            assert!(ev.start >= up.end - 1e-9, "{label}: fwd before its input arrived");
+        }
+    }
+    assert!(r.bubble_fraction >= -1e-9 && r.bubble_fraction < 1.0, "{label}");
+    assert!(r.mfu > 0.0 && r.mfu < 1.0, "{label}: mfu {}", r.mfu);
+}
+
+#[test]
+fn prop_des_invariants_hold_for_random_cases() {
+    let mut rng = SplitMix64::new(0xDE5);
+    for case in 0..CASES {
+        let (e, schedule, layout) = random_case(&mut rng);
+        let r = simulate(&e, &schedule, &layout);
+        check_invariants(&r, &e, &format!("case {case} ({:?})", schedule.kind));
+    }
+}
+
+#[test]
+fn prop_bpipe_never_slower_than_oom() {
+    // BPipe's makespan overhead vs plain 1F1B stays bounded (< 10%) for
+    // every feasible paper config on the pair-adjacent layout.
+    let mut rng = SplitMix64::new(0xBEEF);
+    for _ in 0..CASES {
+        let e = paper_experiment(*rng.choose(&[1u32, 2, 4, 5, 7, 9])).unwrap();
+        let m = e.parallel.num_microbatches();
+        let layout = pair_adjacent_layout(e.parallel.p, e.cluster.n_nodes);
+        let plain = simulate(&e, &one_f_one_b(e.parallel.p, m), &layout);
+        let bp = simulate(&e, &apply_bpipe(&one_f_one_b(e.parallel.p, m), None), &layout);
+        let overhead = bp.makespan / plain.makespan - 1.0;
+        assert!(
+            (-1e-9..0.10).contains(&overhead),
+            "exp {:?}: BPipe overhead {overhead:.4}",
+            e.id
+        );
+    }
+}
+
+#[test]
+fn prop_memory_never_exceeds_1f1b_model() {
+    // DES-tracked high-water ≤ the analytic worst case for every stage.
+    let mut rng = SplitMix64::new(0x314159);
+    for _ in 0..CASES {
+        let e = paper_experiment(rng.range(1, 10) as u32).unwrap();
+        let r = bpipe::sim::simulate_experiment(&e);
+        let mm = bpipe::model::memory::MemoryModel::new(&e);
+        for s in 0..e.parallel.p {
+            let cap = if e.bpipe { mm.peak_bytes_bpipe(s) } else { mm.peak_bytes_1f1b(s) };
+            assert!(
+                r.mem_high_water[s as usize] <= cap,
+                "exp {:?} stage {s}: {} > {}",
+                e.id,
+                r.mem_high_water[s as usize],
+                cap
+            );
+        }
+    }
+}
+
+#[test]
+fn trace_csv_is_complete() {
+    let e = paper_experiment(8).unwrap();
+    let r = bpipe::sim::simulate_experiment(&e);
+    let csv = bpipe::sim::engine::trace_to_csv(&r.trace);
+    assert_eq!(csv.lines().count(), r.trace.len() + 1);
+    assert!(csv.starts_with("stage,kind,mb,chunk,start,end"));
+    assert!(csv.contains("Evict"));
+}
