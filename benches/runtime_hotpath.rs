@@ -1,59 +1,56 @@
-//! L3 hot-path benches over the REAL runtime: PJRT execute latency per
-//! stage op, coordinator overhead (channel + literal plumbing) vs pure
-//! execute time, and end-to-end step latency ±BPipe at tiny scale.
+//! Hot-path benches for the sweep engine: the DES inner loop is the cost
+//! of every cell in `sim::sweep`'s experiment × schedule × layout grid,
+//! so this bench times (a) single simulations per schedule family —
+//! exercising the dense compute-op index that replaced the per-op
+//! `HashMap` lookups — (b) the schedule generators + rebalance transform
+//! that build the grid, and (c) the full paper grid end to end through
+//! the parallel driver.
 //!
-//! Requires `make artifacts` (skips gracefully if absent, so `cargo
-//! bench` works in a fresh checkout).
+//! (The PJRT execute-latency benches this file used to hold need the
+//! `pjrt` feature + AOT artifacts; the simulator path is the default
+//! build's hot path now that the sweep is the headline workload.)
 
+use bpipe::bpipe::{pair_adjacent_layout, rebalance};
+use bpipe::config::paper_experiment;
+use bpipe::schedule::{interleaved, one_f_one_b, v_shaped};
+use bpipe::sim::{paper_grid, simulate, sweep};
 use bpipe::util::bench;
-use std::path::Path;
-
-use bpipe::coordinator::{self, TrainConfig};
-use bpipe::runtime::{literal_f32, Manifest, Runtime};
 
 fn main() {
-    let dir = Path::new("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("runtime_hotpath: artifacts/ missing — run `make artifacts`; skipping");
-        return;
-    }
-    let manifest = Manifest::load(dir).unwrap();
-    let rt = Runtime::cpu().unwrap();
-    let spec = &manifest.spec;
-    let n = manifest.param_count("mid").unwrap() as usize;
-    let fwd = rt.load(&manifest.path_of("mid_fwd").unwrap()).unwrap();
-    let bwd = rt.load(&manifest.path_of("mid_bwd").unwrap()).unwrap();
-    let params = xla::Literal::vec1(&vec![0.01f32; n]);
-    let act_len = (spec.b * spec.s * spec.h) as usize;
-    let shape = [spec.b as i64, spec.s as i64, spec.h as i64];
-    let x = literal_f32(&vec![0.1f32; act_len], &shape).unwrap();
-    let dy = literal_f32(&vec![0.05f32; act_len], &shape).unwrap();
+    let e = paper_experiment(8).unwrap();
+    let p = e.parallel.p;
+    let m = e.parallel.num_microbatches();
+    let layout = pair_adjacent_layout(p, e.cluster.n_nodes);
 
-    bench("runtime/mid_fwd_execute", 30, || fwd.run1(&[&params, &x]).unwrap());
-    bench("runtime/mid_bwd_execute", 30, || bwd.run(&[&params, &x, &dy]).unwrap());
-    let host = vec![0.1f32; act_len];
-    bench("runtime/literal_upload_act", 1000, || {
-        literal_f32(std::hint::black_box(&host), &shape).unwrap()
+    println!("=== DES engine inner loop (one sweep cell each) ===");
+    let s_1f1b = one_f_one_b(p, m);
+    let s_bp = rebalance(&s_1f1b, None);
+    let s_il = interleaved(p, m, 2);
+    let s_il_rb = rebalance(&s_il, None);
+    let s_v = v_shaped(p, m);
+    bench("hotpath/sim_1f1b_p8_m64", 200, || {
+        simulate(std::hint::black_box(&e), &s_1f1b, &layout)
+    });
+    bench("hotpath/sim_1f1b_rebalanced", 200, || {
+        simulate(std::hint::black_box(&e), &s_bp, &layout)
+    });
+    bench("hotpath/sim_interleaved_v2", 200, || {
+        simulate(std::hint::black_box(&e), &s_il, &layout)
+    });
+    bench("hotpath/sim_interleaved_v2_rebalanced", 200, || {
+        simulate(std::hint::black_box(&e), &s_il_rb, &layout)
+    });
+    bench("hotpath/sim_v_shaped", 200, || {
+        simulate(std::hint::black_box(&e), &s_v, &layout)
     });
 
-    // end-to-end short training run ±BPipe: BPipe overhead at tiny scale
-    println!("\n=== e2e step latency ±BPipe (tiny model, 2 steps × 8 microbatches) ===");
-    for bpipe in [false, true] {
-        let cfg = TrainConfig {
-            artifacts_dir: dir.to_path_buf(),
-            steps: 2,
-            microbatches: 8,
-            bpipe,
-            ..Default::default()
-        };
-        let r = coordinator::train(&cfg).unwrap();
-        let stalls: f64 = r.stage_stats.iter().map(|s| s.load_wait_s).sum();
-        println!(
-            "bpipe={bpipe:<5} mean step {:.2}s, stage0 stash hw {}, total load-wait {:.3}s, final loss {:.4}",
-            r.mean_step_time(),
-            r.stage_stats[0].stash_high_water,
-            stalls,
-            r.final_loss()
-        );
-    }
+    println!("\n=== grid construction (generators + transform) ===");
+    bench("hotpath/gen_interleaved_p8_m64_v2", 20_000, || interleaved(p, m, 2));
+    bench("hotpath/gen_v_shaped_p8_m64", 2_000, || v_shaped(p, m));
+    bench("hotpath/rebalance_interleaved", 10_000, || {
+        rebalance(std::hint::black_box(&s_il), None)
+    });
+
+    println!("\n=== full paper grid through the parallel sweep driver ===");
+    bench("hotpath/sweep_paper_grid_140_cells", 5, || sweep(paper_grid(2), 0));
 }

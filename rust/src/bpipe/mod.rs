@@ -8,103 +8,39 @@
 //! time for that microbatch's backward pass (paper §2.2, Figure 1).
 //!
 //! * [`pairing`] — the evictor/acceptor relation and per-stage bounds;
-//! * [`apply_bpipe`] — the schedule transform inserting Evict/Load ops
-//!   into a 1F1B schedule;
+//! * [`rebalance`] — the schedule-agnostic transform inserting Evict/Load
+//!   ops into ANY schedule, keyed by `(mb, chunk)` — composes with
+//!   interleaved and V-shaped bases;
+//! * [`apply_bpipe`] — the paper's 1F1B-specific wrapper around
+//!   [`rebalance`] with the `⌈(p+2)/2⌉` bound;
 //! * [`layout`] — pair-adjacent device placement so every pair stays
 //!   inside one NVLink island (paper Figure 2).
 
 pub mod layout;
 pub mod pairing;
+pub mod rebalance;
 
 pub use layout::{pair_adjacent_layout, sequential_layout, Layout};
 pub use pairing::{acceptor_extra_stashes, bound, evictions_at, is_acceptor, is_evictor, partner};
+pub use rebalance::{derived_bound, rebalance};
 
-use crate::schedule::{Op, OpKind, Schedule, ScheduleKind};
+use crate::schedule::{Schedule, ScheduleKind};
 
-/// Transform a 1F1B schedule into a BPipe schedule by inserting
-/// Evict/Load ops on evictor stages.
+/// Transform a 1F1B schedule into the paper's BPipe schedule by
+/// inserting Evict/Load ops on evictor stages — a thin wrapper over the
+/// schedule-agnostic [`rebalance`] pass that pins the paper's bound.
 ///
-/// Policy (matching the paper's description — "when the number of
-/// activations is *about to exceed* ⌈(p+2)/2⌉, it sends an activation"):
-///
-/// * **pre-evict**: immediately before a forward that would push the
-///   resident stash past the bound, the newest resident stash (largest
-///   microbatch id — in 1F1B backwards retire in FIFO order, so it is
-///   the one needed furthest in the future, giving the largest
-///   transfer-overlap window) is evicted.  The transfer then overlaps
-///   with that forward's compute, and the bound holds at *every* op
-///   boundary, never just in steady state;
-/// * **prefetch-load**: after a backward frees a slot, the oldest
-///   still-evicted microbatch is loaded back, which always lands before
-///   that microbatch's own backward (enforced by the validator and the
-///   proptests in rust/tests/).
-///
-/// `bound` defaults to [`pairing::bound`]`(p)`; tests inject tighter
-/// bounds to probe edge cases.
+/// `bound` defaults to [`pairing::bound`]`(p)` (= `⌈(p+2)/2⌉`); tests
+/// inject tighter bounds to probe edge cases.  For non-1F1B bases call
+/// [`rebalance`] directly.
 pub fn apply_bpipe(base: &Schedule, bound_override: Option<u64>) -> Schedule {
     assert_eq!(
         base.kind,
         ScheduleKind::OneFOneB,
-        "BPipe applies to the 1F1B schedule (paper §2.2)"
+        "BPipe applies to the 1F1B schedule (paper §2.2); use rebalance() for other bases"
     );
-    let p = base.p;
-    let k = bound_override.unwrap_or_else(|| pairing::bound(p));
-    assert!(k >= 2, "BPipe bound must be ≥ 2 (one live + one incoming stash)");
-    use std::collections::BTreeSet;
-    let programs = base
-        .programs
-        .iter()
-        .map(|prog| {
-            let mut ops: Vec<Op> = Vec::with_capacity(prog.ops.len() + 8);
-            let mut resident: BTreeSet<u64> = BTreeSet::new();
-            let mut evicted: BTreeSet<u64> = BTreeSet::new();
-            for op in &prog.ops {
-                match op.kind {
-                    OpKind::Fwd => {
-                        if resident.len() as u64 == k {
-                            // pre-evict the newest resident stash
-                            let victim = *resident.iter().next_back().unwrap();
-                            resident.remove(&victim);
-                            evicted.insert(victim);
-                            ops.push(Op::evict(victim));
-                        }
-                        ops.push(*op);
-                        resident.insert(op.mb);
-                    }
-                    OpKind::Bwd => {
-                        if !resident.contains(&op.mb) {
-                            // late load (only reachable with tiny bounds):
-                            // make room first if needed, then load
-                            if resident.len() as u64 == k {
-                                let victim = *resident.iter().next_back().unwrap();
-                                resident.remove(&victim);
-                                evicted.insert(victim);
-                                ops.push(Op::evict(victim));
-                            }
-                            assert!(evicted.remove(&op.mb), "bwd of unknown stash");
-                            resident.insert(op.mb);
-                            ops.push(Op::load(op.mb));
-                        }
-                        ops.push(*op);
-                        resident.remove(&op.mb);
-                        // slot freed: prefetch the oldest still-evicted
-                        if (resident.len() as u64) < k {
-                            if let Some(&mb) = evicted.iter().next() {
-                                evicted.remove(&mb);
-                                resident.insert(mb);
-                                ops.push(Op::load(mb));
-                            }
-                        }
-                    }
-                    OpKind::Evict | OpKind::Load => {
-                        unreachable!("base schedule must be plain 1F1B")
-                    }
-                }
-            }
-            crate::schedule::StageProgram { stage: prog.stage, ops }
-        })
-        .collect();
-    Schedule { p, m: base.m, kind: ScheduleKind::BPipe { bound: k }, programs }
+    let k = bound_override.unwrap_or_else(|| pairing::bound(base.p));
+    rebalance(base, Some(k))
 }
 
 #[cfg(test)]

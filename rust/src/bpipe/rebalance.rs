@@ -1,0 +1,259 @@
+//! The schedule-agnostic memory rebalancing transform — BPipe's
+//! evict/load insertion generalized beyond 1F1B.
+//!
+//! [`rebalance`] takes ANY valid schedule (1F1B, GPipe, interleaved,
+//! V-shaped) and inserts Evict/Load ops so every stage's own resident
+//! stash count never exceeds a bound, at every op boundary.  All state is
+//! keyed by `(mb, chunk)`, so virtual-pipeline chunks are first-class.
+//!
+//! Policy (the paper's §2.2 "about to exceed" rule, generalized):
+//!
+//! * **pre-evict** — immediately before a forward that would push the
+//!   resident set past the bound, evict the resident stash whose backward
+//!   lies *furthest in program order* (the classic Belady victim; for
+//!   1F1B this is the newest microbatch, reproducing `apply_bpipe`'s
+//!   output op-for-op).  The transfer overlaps that forward's compute;
+//! * **prefetch-load** — after a backward frees a slot, load back the
+//!   evicted stash needed *soonest*, which always lands before its own
+//!   backward.  A prefetched stash may be re-evicted under later
+//!   pressure; the validator and simulator both support repeated
+//!   Evict→Load cycles per key.
+//!
+//! ## Choosing the bound
+//!
+//! With no override, [`derived_bound`] balances each evictor/acceptor
+//! pair `(x, p−1−x)` to its mean residency and takes the max over pairs:
+//! `max_x ⌈(hw_x + hw_{p−1−x}) / 2⌉`.  For 1F1B with even `p` this is
+//! exactly the paper's `⌈(p+2)/2⌉`; for interleaved schedules (whose
+//! high-water ramps from `~2pv/…` at stage 0 down the pipe) it is the
+//! unique uniform bound that flattens every pair without forcing the two
+//! sides of a pair to evict into each other simultaneously.
+
+use super::pairing;
+use crate::schedule::{Op, OpKind, Schedule, ScheduleKind, StageProgram};
+
+/// Default bound for [`rebalance`]: balance every `(x, p−1−x)` pair to
+/// its mean stash high-water, `max_x ⌈(hw_x + hw_{p−1−x}) / 2⌉` (≥ 2).
+/// Reduces to the paper's `⌈(p+2)/2⌉` for 1F1B with even `p`.
+pub fn derived_bound(base: &Schedule) -> u64 {
+    let p = base.p;
+    let hw: Vec<i64> = (0..p).map(|s| base.program(s).stash_high_water()).collect();
+    let k = (0..p)
+        .map(|x| {
+            let px = pairing::partner(p, x);
+            let sum = (hw[x as usize] + hw[px as usize]) as u64;
+            sum.div_ceil(2)
+        })
+        .max()
+        .unwrap_or(2);
+    k.max(2)
+}
+
+/// Rebalance `base` so every stage's own resident stash count stays ≤
+/// the bound at every op boundary, by inserting Evict/Load transfer ops
+/// keyed by `(mb, chunk)`.  `bound_override` defaults to
+/// [`derived_bound`]`(base)`.
+///
+/// The base must be transfer-free (no Evict/Load); the result carries
+/// `ScheduleKind::BPipe { bound }` so [`crate::schedule::validate`]
+/// enforces the bound, and inherits the base's `chunks`/`placement` so
+/// the simulator keeps the right dataflow.
+pub fn rebalance(base: &Schedule, bound_override: Option<u64>) -> Schedule {
+    let p = base.p;
+    let k = bound_override.unwrap_or_else(|| derived_bound(base));
+    assert!(k >= 2, "rebalance bound must be ≥ 2 (one live + one incoming stash)");
+    let key_count = (base.m * base.chunks) as usize;
+    let key_of = |op: &Op| (op.mb * base.chunks + op.chunk) as usize;
+
+    let programs = base
+        .programs
+        .iter()
+        .map(|prog| {
+            // program-order position of each key's backward: the victim
+            // metric (evict whoever is needed furthest in the future)
+            let mut bwd_pos = vec![usize::MAX; key_count];
+            for (j, op) in prog.ops.iter().enumerate() {
+                if op.kind == OpKind::Bwd {
+                    bwd_pos[key_of(op)] = j;
+                }
+            }
+            let mut ops: Vec<Op> = Vec::with_capacity(prog.ops.len() + 8);
+            // members carry (mb, chunk); sets stay ≤ max(k, evicted peak)
+            let mut resident: Vec<(u64, u64)> = Vec::new();
+            let mut evicted: Vec<(u64, u64)> = Vec::new();
+            let pos = |key: (u64, u64)| bwd_pos[(key.0 * base.chunks + key.1) as usize];
+            for op in &prog.ops {
+                let key = (op.mb, op.chunk);
+                match op.kind {
+                    OpKind::Fwd => {
+                        if resident.len() as u64 == k {
+                            evict_furthest(&mut resident, &mut evicted, &mut ops, pos);
+                        }
+                        ops.push(*op);
+                        resident.push(key);
+                    }
+                    OpKind::Bwd => {
+                        if !resident.contains(&key) {
+                            // late load (tight bounds): make room, load
+                            // back (key is off-device here, so the victim
+                            // can never be the stash being loaded)
+                            if resident.len() as u64 == k {
+                                evict_furthest(&mut resident, &mut evicted, &mut ops, pos);
+                            }
+                            let at = evicted
+                                .iter()
+                                .position(|&e| e == key)
+                                .expect("bwd of a stash that was never forwarded");
+                            evicted.swap_remove(at);
+                            resident.push(key);
+                            ops.push(Op { kind: OpKind::Load, mb: key.0, chunk: key.1 });
+                        }
+                        ops.push(*op);
+                        let at = resident.iter().position(|&r| r == key).unwrap();
+                        resident.swap_remove(at);
+                        // slot freed: prefetch the soonest-needed evictee
+                        if (resident.len() as u64) < k && !evicted.is_empty() {
+                            let at = (0..evicted.len())
+                                .min_by_key(|&i| pos(evicted[i]))
+                                .unwrap();
+                            let nxt = evicted.swap_remove(at);
+                            resident.push(nxt);
+                            ops.push(Op { kind: OpKind::Load, mb: nxt.0, chunk: nxt.1 });
+                        }
+                    }
+                    OpKind::Evict | OpKind::Load => {
+                        panic!("rebalance base must be transfer-free (got {:?})", op.kind)
+                    }
+                }
+            }
+            StageProgram { stage: prog.stage, ops }
+        })
+        .collect();
+    Schedule {
+        p,
+        m: base.m,
+        chunks: base.chunks,
+        placement: base.placement,
+        kind: ScheduleKind::BPipe { bound: k },
+        programs,
+    }
+}
+
+/// Evict the resident stash whose backward is furthest in program
+/// order, appending the Evict op.
+fn evict_furthest(
+    resident: &mut Vec<(u64, u64)>,
+    evicted: &mut Vec<(u64, u64)>,
+    ops: &mut Vec<Op>,
+    pos: impl Fn((u64, u64)) -> usize,
+) {
+    let at = (0..resident.len())
+        .max_by_key(|&i| pos(resident[i]))
+        .expect("nothing evictable below the bound");
+    let victim = resident.swap_remove(at);
+    evicted.push(victim);
+    ops.push(Op { kind: OpKind::Evict, mb: victim.0, chunk: victim.1 });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::{gpipe, interleaved, one_f_one_b, v_shaped, validate, OpKind};
+
+    #[test]
+    fn derived_bound_matches_paper_for_1f1b() {
+        for p in [2u64, 4, 8, 16] {
+            let b = derived_bound(&one_f_one_b(p, 8 * p));
+            assert_eq!(b, crate::model::memory::bpipe_bound(p), "p={p}");
+        }
+    }
+
+    #[test]
+    fn derived_bound_flattens_interleaved_pairs() {
+        // interleaved(8, 64, 2): per-stage hw ramps 23..9; every pair
+        // sums to 32, so the derived bound is 16
+        let il = interleaved(8, 64, 2);
+        assert_eq!(derived_bound(&il), 16);
+    }
+
+    #[test]
+    fn rebalanced_interleaved_validates_and_bounds() {
+        for (p, mult, v) in [(4u64, 2u64, 2u64), (8, 4, 2), (8, 8, 2), (4, 4, 3)] {
+            let base = interleaved(p, p * mult, v);
+            let rb = rebalance(&base, None);
+            validate(&rb).unwrap_or_else(|e| panic!("p={p} m={} v={v}: {e}", p * mult));
+            let k = derived_bound(&base) as i64;
+            for s in 0..p {
+                assert!(rb.program(s).stash_high_water() <= k);
+            }
+        }
+    }
+
+    #[test]
+    fn rebalance_matches_golden_1f1b_sequence() {
+        // Pin the paper's Figure-1 policy as a golden op sequence so a
+        // future change to the generalized victim/prefetch rules that
+        // diverges from the 1F1B-specific behavior (newest-mb victim,
+        // oldest-mb prefetch) fails loudly.  p=4, m=8, bound 3.
+        let bp = rebalance(&one_f_one_b(4, 8), Some(crate::model::memory::bpipe_bound(4)));
+        let render = |stage: u64| -> String {
+            bp.program(stage)
+                .ops
+                .iter()
+                .map(|o| {
+                    let c = match o.kind {
+                        OpKind::Fwd => 'F',
+                        OpKind::Bwd => 'B',
+                        OpKind::Evict => 'E',
+                        OpKind::Load => 'L',
+                    };
+                    format!("{c}{}", o.mb)
+                })
+                .collect::<Vec<_>>()
+                .join(" ")
+        };
+        assert_eq!(
+            render(0),
+            "F0 F1 F2 E2 F3 B0 L2 E3 F4 B1 L3 E4 F5 B2 L4 E5 F6 B3 L5 E6 F7 B4 L6 B5 B6 B7"
+        );
+        // stage 1's natural in-flight (3) equals the bound: untouched
+        assert_eq!(render(1), "F0 F1 F2 B0 F3 B1 F4 B2 F5 B3 F6 B4 F7 B5 B6 B7");
+    }
+
+    #[test]
+    fn rebalance_handles_gpipe_and_vshaped() {
+        let g = rebalance(&gpipe(4, 12), Some(4));
+        validate(&g).unwrap();
+        for s in 0..4 {
+            assert!(g.program(s).stash_high_water() <= 4);
+        }
+        let v = rebalance(&v_shaped(8, 32), Some(8));
+        validate(&v).unwrap();
+        for s in 0..8 {
+            assert!(v.program(s).stash_high_water() <= 8);
+        }
+    }
+
+    #[test]
+    fn preserves_compute_subsequence() {
+        let base = interleaved(8, 32, 2);
+        let rb = rebalance(&base, Some(4));
+        for s in 0..8 {
+            let compute = |prog: &crate::schedule::StageProgram| {
+                prog.ops
+                    .iter()
+                    .filter(|o| matches!(o.kind, OpKind::Fwd | OpKind::Bwd))
+                    .cloned()
+                    .collect::<Vec<_>>()
+            };
+            assert_eq!(compute(base.program(s)), compute(rb.program(s)), "stage {s}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "transfer-free")]
+    fn rejects_already_rebalanced_base() {
+        let once = rebalance(&one_f_one_b(8, 64), None);
+        rebalance(&once, None);
+    }
+}

@@ -9,8 +9,9 @@
 //!   transformation ([`bpipe`]), a calibrated discrete-event cluster
 //!   simulator ([`sim`]) that regenerates every table/figure of the paper
 //!   at A100-cluster scale, the paper-§4 analytical estimator
-//!   ([`estimator`]), and a *real* pipeline runtime ([`coordinator`],
-//!   [`runtime`]) that trains an actual transformer through AOT-compiled
+//!   ([`estimator`]), and a *real* pipeline runtime (`coordinator`,
+//!   `runtime`; behind the `pjrt` feature, which additionally needs the
+//!   `xla` crate) that trains an actual transformer through AOT-compiled
 //!   XLA artifacts on the PJRT CPU client.
 //! * **L2 (python/compile/model.py)** — JAX stage graphs (GPT-3 and
 //!   LLaMA families), lowered once to HLO text at build time.
@@ -22,11 +23,13 @@
 
 pub mod bpipe;
 pub mod config;
+#[cfg(feature = "pjrt")]
 pub mod coordinator;
 pub mod estimator;
 pub mod metrics;
 pub mod model;
 pub mod report;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod schedule;
 pub mod sim;

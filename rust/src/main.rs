@@ -6,11 +6,16 @@
 //! * `figures --which 1|2`   — Figure 1 (BPipe 1F1B timeline) and
 //!   Figure 2 (pair-adjacent layout);
 //! * `simulate`              — one experiment through the DES, full report;
+//! * `sweep`                 — the full experiment × schedule × layout
+//!   grid through the parallel sweep driver, ranked by MFU;
 //! * `estimate`              — the §4 Eq. 4 estimator (analytic or from
-//!   real single-stage runtime measurements);
+//!   real single-stage runtime measurements; the latter needs the `pjrt`
+//!   build feature);
 //! * `memory`                — per-stage memory profile, ±BPipe;
-//! * `schedule`              — print a schedule program;
-//! * `train`                 — REAL pipeline training over PJRT artifacts.
+//! * `schedule`              — print a schedule program (any generator,
+//!   optionally rebalanced);
+//! * `train`                 — REAL pipeline training over PJRT artifacts
+//!   (`pjrt` feature).
 //!
 //! Argument parsing is in-tree ([`Args`]) — the build is fully offline.
 
@@ -19,7 +24,6 @@ use std::path::PathBuf;
 
 use bpipe::bpipe as bpipe_mod;
 use bpipe::config::{self, ExperimentConfig};
-use bpipe::coordinator;
 use bpipe::estimator::{self, StageMeasurement};
 use bpipe::model::memory::MemoryModel;
 use bpipe::report;
@@ -35,14 +39,18 @@ COMMANDS:
   figures   --which 1|2 [--p N --nodes N] regenerate a paper figure
   simulate  [--experiment 1..10 | --config f.cfg] [--bpipe true|false]
             [--timeline]                 simulate one experiment
+  sweep     [--experiment 1..10] [--v N] [--threads N]
+                                         rank the experiment x schedule
+                                         x layout grid (parallel DES)
   estimate  [--global-batch B --p P --from b:mfu --to b:mfu]
             [--runtime --artifacts DIR]  paper §4 Eq. 4 estimator
   memory    [--experiment 1..10]         per-stage memory profile
-  schedule  [--p N --m N --kind 1f1b|gpipe|interleaved] [--bpipe]
+  schedule  [--p N --m N --kind 1f1b|gpipe|interleaved|vshaped]
+            [--bpipe | --rebalance [--bound K]]
   train     [--artifacts DIR --steps N --microbatches M --lr F]
             [--bpipe] [--seed N] [--log-every N]
             [--checkpoint-dir D --checkpoint-every N] [--resume]
-                                         REAL pipeline training
+                                         REAL pipeline training (pjrt)
 ";
 
 /// Minimal flag parser: `--key value` pairs plus boolean `--key` flags.
@@ -103,6 +111,44 @@ fn parse_measurement(s: &str) -> anyhow::Result<StageMeasurement> {
         .split_once(':')
         .ok_or_else(|| anyhow::anyhow!("expected b:mfu, e.g. 1:0.378, got {s:?}"))?;
     Ok(StageMeasurement { b: b.trim().parse()?, mfu_stage: mfu.trim().parse()? })
+}
+
+/// Measure single-stage timings over the real PJRT runtime (Eq. 4's
+/// input) — only available with the `pjrt` build feature.
+#[cfg(feature = "pjrt")]
+fn runtime_measurements(
+    artifacts: &std::path::Path,
+    fx: StageMeasurement,
+    fy: StageMeasurement,
+) -> anyhow::Result<(StageMeasurement, StageMeasurement)> {
+    println!("measuring single-stage timings from {artifacts:?} …");
+    let tx = bpipe::coordinator::measure_stage(artifacts, fx.b, 3)?;
+    let ty = bpipe::coordinator::measure_stage(artifacts, fy.b, 3)?;
+    for t in [&tx, &ty] {
+        println!(
+            "  b={} : {:.1} ms/microbatch, {:.2e} FLOP/s",
+            t.b,
+            t.t_b * 1e3,
+            t.flops_per_s
+        );
+    }
+    let peak = tx.flops_per_s.max(ty.flops_per_s) * 1.25;
+    Ok((
+        StageMeasurement { b: tx.b, mfu_stage: tx.flops_per_s / peak },
+        StageMeasurement { b: ty.b, mfu_stage: ty.flops_per_s / peak },
+    ))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn runtime_measurements(
+    _artifacts: &std::path::Path,
+    _fx: StageMeasurement,
+    _fy: StageMeasurement,
+) -> anyhow::Result<(StageMeasurement, StageMeasurement)> {
+    anyhow::bail!(
+        "--runtime needs the real PJRT runtime: rebuild with --features pjrt \
+         (and the xla crate available)"
+    )
 }
 
 fn main() -> anyhow::Result<()> {
@@ -187,6 +233,26 @@ fn main() -> anyhow::Result<()> {
                 print!("{}", report::render_timeline(&r.trace, e.parallel.p, 110));
             }
         }
+        "sweep" => {
+            let args = Args::parse(rest, &[])?;
+            let v = args.get("v", 2u64)?;
+            let threads = args.get("threads", 0usize)?;
+            let tasks = if let Some(id) = args.opt("experiment") {
+                sim::experiment_tasks(&experiment_or_exit(id.parse()?), v)
+            } else {
+                sim::paper_grid(v)
+            };
+            let count = tasks.len();
+            let t0 = std::time::Instant::now();
+            let outcomes = sim::sweep(tasks, threads);
+            let dt = t0.elapsed();
+            print!("{}", sim::render_sweep(&outcomes));
+            println!(
+                "\n{count} grid cells simulated in {:.2}s ({:.1} cells/s)",
+                dt.as_secs_f64(),
+                count as f64 / dt.as_secs_f64()
+            );
+        }
         "estimate" => {
             let args = Args::parse(rest, &["runtime"])?;
             let global_batch = args.get("global-batch", 128u64)?;
@@ -194,31 +260,12 @@ fn main() -> anyhow::Result<()> {
             let from = args.opt("from").unwrap_or("1:0.378").to_string();
             let to = args.opt("to").unwrap_or("2:0.552").to_string();
             let artifacts = PathBuf::from(args.opt("artifacts").unwrap_or("artifacts"));
+            let fx = parse_measurement(&from)?;
+            let fy = parse_measurement(&to)?;
             let (x, y) = if args.opt("runtime").is_some() {
-                let fx = parse_measurement(&from)?;
-                let fy = parse_measurement(&to)?;
-                println!("measuring single-stage timings from {artifacts:?} …");
-                let tx = coordinator::measure_stage(&artifacts, fx.b, 3)?;
-                let ty = coordinator::measure_stage(&artifacts, fy.b, 3)?;
-                println!(
-                    "  b={} : {:.1} ms/microbatch, {:.2e} FLOP/s",
-                    tx.b,
-                    tx.t_b * 1e3,
-                    tx.flops_per_s
-                );
-                println!(
-                    "  b={} : {:.1} ms/microbatch, {:.2e} FLOP/s",
-                    ty.b,
-                    ty.t_b * 1e3,
-                    ty.flops_per_s
-                );
-                let peak = tx.flops_per_s.max(ty.flops_per_s) * 1.25;
-                (
-                    StageMeasurement { b: tx.b, mfu_stage: tx.flops_per_s / peak },
-                    StageMeasurement { b: ty.b, mfu_stage: ty.flops_per_s / peak },
-                )
+                runtime_measurements(&artifacts, fx, fy)?
             } else {
-                (parse_measurement(&from)?, parse_measurement(&to)?)
+                (fx, fy)
             };
             let est = estimator::estimate(global_batch, p, x, y);
             println!("Eq. 4 estimate (B={global_batch}, p={p}):");
@@ -258,7 +305,7 @@ fn main() -> anyhow::Result<()> {
             }
         }
         "schedule" => {
-            let args = Args::parse(rest, &["bpipe"])?;
+            let args = Args::parse(rest, &["bpipe", "rebalance"])?;
             let p = args.get("p", 4u64)?;
             let m = args.get("m", 8u64)?;
             let kind = args.opt("kind").unwrap_or("1f1b");
@@ -266,46 +313,64 @@ fn main() -> anyhow::Result<()> {
                 "1f1b" => bpipe::schedule::one_f_one_b(p, m),
                 "gpipe" => bpipe::schedule::gpipe(p, m),
                 "interleaved" => bpipe::schedule::interleaved(p, m, 2),
+                "vshaped" => bpipe::schedule::v_shaped(p, m),
                 other => anyhow::bail!("unknown schedule kind {other:?}"),
             };
             let sched = if args.opt("bpipe").is_some() {
                 bpipe_mod::apply_bpipe(&sched, None)
+            } else if args.opt("rebalance").is_some() {
+                let bound = match args.opt("bound") {
+                    Some(b) => Some(b.parse()?),
+                    None => None,
+                };
+                bpipe_mod::rebalance(&sched, bound)
             } else {
                 sched
             };
             print!("{}", report::timeline::render_program(&sched));
         }
         "train" => {
-            let args = Args::parse(rest, &["bpipe", "resume"])?;
-            let cfg = coordinator::TrainConfig {
-                artifacts_dir: PathBuf::from(args.opt("artifacts").unwrap_or("artifacts")),
-                steps: args.get("steps", 20u64)?,
-                microbatches: args.get("microbatches", 8u64)?,
-                lr: args.get("lr", 1e-3f32)?,
-                bpipe: args.opt("bpipe").is_some(),
-                bound: None,
-                seed: args.get("seed", 0u64)?,
-                log_every: args.get("log-every", 5u64)?,
-                checkpoint_dir: args.opt("checkpoint-dir").map(PathBuf::from),
-                checkpoint_every: args.get("checkpoint-every", 0u64)?,
-                resume: args.opt("resume").is_some(),
-            };
-            println!(
-                "training: {} steps × {} microbatches, bpipe={}",
-                cfg.steps, cfg.microbatches, cfg.bpipe
-            );
-            let r = coordinator::train(&cfg)?;
-            println!(
-                "first loss {:.4} → final loss {:.4}",
-                r.losses.first().unwrap(),
-                r.final_loss()
-            );
-            println!("mean step time {:.2}s, tokens {}", r.mean_step_time(), r.tokens);
-            for st in &r.stage_stats {
+            #[cfg(feature = "pjrt")]
+            {
+                let args = Args::parse(rest, &["bpipe", "resume"])?;
+                let cfg = bpipe::coordinator::TrainConfig {
+                    artifacts_dir: PathBuf::from(args.opt("artifacts").unwrap_or("artifacts")),
+                    steps: args.get("steps", 20u64)?,
+                    microbatches: args.get("microbatches", 8u64)?,
+                    lr: args.get("lr", 1e-3f32)?,
+                    bpipe: args.opt("bpipe").is_some(),
+                    bound: None,
+                    seed: args.get("seed", 0u64)?,
+                    log_every: args.get("log-every", 5u64)?,
+                    checkpoint_dir: args.opt("checkpoint-dir").map(PathBuf::from),
+                    checkpoint_every: args.get("checkpoint-every", 0u64)?,
+                    resume: args.opt("resume").is_some(),
+                };
                 println!(
-                    "  stage {}: fwd {:.1}s bwd {:.1}s adam {:.1}s load-wait {:.2}s evictions {} stash-hw {}",
-                    st.stage, st.fwd_s, st.bwd_s, st.adam_s, st.load_wait_s, st.evictions, st.stash_high_water
+                    "training: {} steps × {} microbatches, bpipe={}",
+                    cfg.steps, cfg.microbatches, cfg.bpipe
                 );
+                let r = bpipe::coordinator::train(&cfg)?;
+                println!(
+                    "first loss {:.4} → final loss {:.4}",
+                    r.losses.first().unwrap(),
+                    r.final_loss()
+                );
+                println!("mean step time {:.2}s, tokens {}", r.mean_step_time(), r.tokens);
+                for st in &r.stage_stats {
+                    println!(
+                        "  stage {}: fwd {:.1}s bwd {:.1}s adam {:.1}s load-wait {:.2}s evictions {} stash-hw {}",
+                        st.stage, st.fwd_s, st.bwd_s, st.adam_s, st.load_wait_s, st.evictions, st.stash_high_water
+                    );
+                }
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                eprintln!(
+                    "train needs the real PJRT runtime: rebuild with --features pjrt \
+                     (and the xla crate available)"
+                );
+                std::process::exit(2);
             }
         }
         "help" | "--help" | "-h" => print!("{USAGE}"),

@@ -4,7 +4,7 @@
 //! progressively improves on.  Included as the schedule-comparison
 //! baseline ablation.
 
-use super::{Op, Schedule, ScheduleKind, StageProgram};
+use super::{Op, Placement, Schedule, ScheduleKind, StageProgram};
 
 /// Generate the GPipe schedule for `p` stages and `m` microbatches.
 pub fn gpipe(p: u64, m: u64) -> Schedule {
@@ -20,7 +20,7 @@ pub fn gpipe(p: u64, m: u64) -> Schedule {
             StageProgram { stage: s, ops }
         })
         .collect();
-    Schedule { p, m, kind: ScheduleKind::GPipe, programs }
+    Schedule { p, m, chunks: 1, placement: Placement::Sequential, kind: ScheduleKind::GPipe, programs }
 }
 
 #[cfg(test)]

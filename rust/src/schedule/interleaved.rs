@@ -8,7 +8,7 @@
 //! schedule-comparison ablation baseline; BPipe itself applies to plain
 //! 1F1B (paper §2.2).
 
-use super::{Op, OpKind, Schedule, ScheduleKind, StageProgram};
+use super::{Op, OpKind, Placement, Schedule, ScheduleKind, StageProgram};
 
 /// Map forward-slot index `k` to (microbatch, chunk) — microbatches run
 /// in groups of `p`; within a group, the chunk advances every `p` slots.
@@ -54,7 +54,14 @@ pub fn interleaved(p: u64, m: u64, v: u64) -> Schedule {
             StageProgram { stage: s, ops }
         })
         .collect();
-    Schedule { p, m, kind: ScheduleKind::Interleaved { chunks: v }, programs }
+    Schedule {
+        p,
+        m,
+        chunks: v,
+        placement: Placement::Sequential,
+        kind: ScheduleKind::Interleaved { chunks: v },
+        programs,
+    }
 }
 
 #[cfg(test)]

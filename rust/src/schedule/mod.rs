@@ -8,8 +8,15 @@
 //!   paper builds on (§2.2);
 //! * [`interleaved`] — Megatron's interleaved-1F1B (virtual pipeline),
 //!   for the schedule-comparison ablation;
-//! * [`crate::bpipe::apply_bpipe`] — transforms a 1F1B schedule by
-//!   inserting activation Evict/Load ops (paper Figure 1).
+//! * [`v_shaped`] — a V-shaped two-chunk virtual pipeline in the
+//!   controllable-memory family (Qi et al. 2024): chunk 0 flows
+//!   stage 0→p−1, chunk 1 flows back p−1→0, equalizing stash pressure
+//!   across stages by placement instead of by transfers;
+//! * [`crate::bpipe::rebalance`] — the schedule-agnostic memory
+//!   rebalancing transform (BPipe generalized beyond 1F1B), inserting
+//!   activation Evict/Load ops keyed by `(mb, chunk)`;
+//! * [`crate::bpipe::apply_bpipe`] — the paper's 1F1B-specific BPipe
+//!   wrapper around `rebalance` (paper Figure 1).
 //!
 //! Schedules are *data*: the simulator executes them against a cost
 //! model, and the real coordinator executes them against PJRT
@@ -18,11 +25,13 @@
 pub mod gpipe;
 pub mod interleaved;
 pub mod one_f_one_b;
+pub mod v_shaped;
 pub mod validate;
 
 pub use gpipe::gpipe;
 pub use interleaved::interleaved;
 pub use one_f_one_b::one_f_one_b;
+pub use v_shaped::v_shaped;
 pub use validate::{validate, ValidationError};
 
 
@@ -46,7 +55,7 @@ pub struct Op {
     pub kind: OpKind,
     /// Microbatch index within the iteration (0-based).
     pub mb: u64,
-    /// Virtual-pipeline chunk (always 0 except for interleaved).
+    /// Virtual-pipeline chunk (always 0 except for interleaved/V-shaped).
     pub chunk: u64,
 }
 
@@ -95,7 +104,22 @@ pub enum ScheduleKind {
     GPipe,
     OneFOneB,
     Interleaved { chunks: u64 },
+    /// V-shaped two-chunk virtual pipeline (controllable-memory family).
+    VShaped,
+    /// A rebalanced schedule (BPipe generalized): Evict/Load ops keep
+    /// every stage's own resident stash count ≤ `bound`.
     BPipe { bound: u64 },
+}
+
+/// How virtual-pipeline chunks map onto physical stages — the forward
+/// dataflow direction the simulator derives cross-stage deps from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// Every chunk flows stage 0→p−1; chunk c+1 starts where chunk c
+    /// wrapped (plain + Megatron interleaved).
+    Sequential,
+    /// Two chunks; chunk 0 flows 0→p−1, chunk 1 flows p−1→0 (V shape).
+    VShape,
 }
 
 /// A complete pipeline schedule: one program per stage.
@@ -105,6 +129,11 @@ pub struct Schedule {
     pub p: u64,
     /// microbatches per iteration
     pub m: u64,
+    /// virtual-pipeline chunks hosted per stage (1 unless interleaved /
+    /// V-shaped) — op `chunk` fields range over `0..chunks`
+    pub chunks: u64,
+    /// chunk→stage dataflow layout
+    pub placement: Placement,
     pub kind: ScheduleKind,
     pub programs: Vec<StageProgram>,
 }

@@ -12,7 +12,7 @@
 //! This keeps stage 0 holding up to `p` microbatch stashes — the memory
 //! imbalance BPipe exists to fix.
 
-use super::{Op, Schedule, ScheduleKind, StageProgram};
+use super::{Op, Placement, Schedule, ScheduleKind, StageProgram};
 
 /// Number of warmup forwards at `stage` (0-based) of `p` with `m`
 /// microbatches.
@@ -44,7 +44,7 @@ pub fn one_f_one_b(p: u64, m: u64) -> Schedule {
             StageProgram { stage: s, ops }
         })
         .collect();
-    Schedule { p, m, kind: ScheduleKind::OneFOneB, programs }
+    Schedule { p, m, chunks: 1, placement: Placement::Sequential, kind: ScheduleKind::OneFOneB, programs }
 }
 
 #[cfg(test)]

@@ -1,6 +1,14 @@
 //! Schedule invariant checking — the contract every generator (and the
-//! BPipe transform) must uphold, enforced in unit tests, proptests and
-//! defensively by the simulator/coordinator before executing a schedule.
+//! rebalance transform) must uphold, enforced in unit tests, proptests
+//! and defensively by the simulator/coordinator before executing a
+//! schedule.
+//!
+//! All stash-residency invariants are tracked per `(mb, chunk)` key, so
+//! rebalanced interleaved / V-shaped schedules are validated as strictly
+//! as plain 1F1B ones.  A key may cycle Evict→Load more than once (the
+//! generalized transform prefetches and may re-evict under pressure);
+//! the state machine below permits that while still rejecting every
+//! out-of-order combination.
 
 use super::{OpKind, Schedule, ScheduleKind};
 use std::collections::{HashMap, HashSet};
@@ -15,13 +23,14 @@ pub enum ValidationError {
     MissingBwd { stage: u64, mb: u64, chunk: u64 },
     MissingFwd { stage: u64, mb: u64, chunk: u64 },
     BwdBeforeFwd { stage: u64, mb: u64, chunk: u64 },
-    EvictWithoutFwd { stage: u64, mb: u64 },
-    LoadWithoutEvict { stage: u64, mb: u64 },
-    EvictNotReloaded { stage: u64, mb: u64 },
-    BwdWhileEvicted { stage: u64, mb: u64 },
+    EvictWithoutFwd { stage: u64, mb: u64, chunk: u64 },
+    LoadWithoutEvict { stage: u64, mb: u64, chunk: u64 },
+    EvictNotReloaded { stage: u64, mb: u64, chunk: u64 },
+    BwdWhileEvicted { stage: u64, mb: u64, chunk: u64 },
     NegativeStash { stage: u64, at_op: usize },
     BoundExceeded { stage: u64, bound: u64, high_water: i64 },
     UnknownMicrobatch { stage: u64, mb: u64, m: u64 },
+    UnknownChunk { stage: u64, chunk: u64, chunks: u64 },
 }
 
 impl fmt::Display for ValidationError {
@@ -36,9 +45,10 @@ impl std::error::Error for ValidationError {}
 ///
 /// 1. one program per stage, ids in order;
 /// 2. every (mb, chunk) has exactly one Fwd and one Bwd per stage, with
-///    Bwd after Fwd, and mb < m;
-/// 3. Evict only after the mb's Fwd, Load only after its Evict, Bwd only
-///    while the stash is resident (Load-ed back if evicted);
+///    Bwd after Fwd, and mb < m, chunk < chunks;
+/// 3. per (mb, chunk): Evict only while the stash is resident, Load only
+///    while it is evicted (possibly repeatedly), Bwd only while resident,
+///    and nothing stays evicted at the end;
 /// 4. the on-device stash count never goes negative, and for
 ///    `ScheduleKind::BPipe { bound }` never exceeds `bound`.
 pub fn validate(s: &Schedule) -> Result<(), ValidationError> {
@@ -60,6 +70,11 @@ pub fn validate(s: &Schedule) -> Result<(), ValidationError> {
         for (at, op) in prog.ops.iter().enumerate() {
             if op.mb >= s.m {
                 return Err(ValidationError::UnknownMicrobatch { stage: st, mb: op.mb, m: s.m });
+            }
+            if op.chunk >= s.chunks {
+                return Err(ValidationError::UnknownChunk {
+                    stage: st, chunk: op.chunk, chunks: s.chunks,
+                });
             }
             let key = (op.mb, op.chunk);
             match op.kind {
@@ -85,21 +100,29 @@ pub fn validate(s: &Schedule) -> Result<(), ValidationError> {
                     }
                     match resident.get(&key) {
                         Some(true) => {}
-                        _ => return Err(ValidationError::BwdWhileEvicted { stage: st, mb: op.mb }),
+                        _ => {
+                            return Err(ValidationError::BwdWhileEvicted {
+                                stage: st, mb: op.mb, chunk: op.chunk,
+                            })
+                        }
                     }
                     resident.insert(key, false);
                     stash -= 1;
                 }
                 OpKind::Evict => {
-                    if resident.get(&key) != Some(&true) {
-                        return Err(ValidationError::EvictWithoutFwd { stage: st, mb: op.mb });
+                    if bwd_seen.contains(&key) || resident.get(&key) != Some(&true) {
+                        return Err(ValidationError::EvictWithoutFwd {
+                            stage: st, mb: op.mb, chunk: op.chunk,
+                        });
                     }
                     resident.insert(key, false);
                     stash -= 1;
                 }
                 OpKind::Load => {
-                    if resident.get(&key) != Some(&false) || bwd_seen.contains(&key) {
-                        return Err(ValidationError::LoadWithoutEvict { stage: st, mb: op.mb });
+                    if bwd_seen.contains(&key) || resident.get(&key) != Some(&false) {
+                        return Err(ValidationError::LoadWithoutEvict {
+                            stage: st, mb: op.mb, chunk: op.chunk,
+                        });
                     }
                     resident.insert(key, true);
                     stash += 1;
@@ -122,13 +145,19 @@ pub fn validate(s: &Schedule) -> Result<(), ValidationError> {
                 return Err(ValidationError::MissingFwd { stage: st, mb: key.0, chunk: key.1 });
             }
         }
-        // every evicted stash must have been loaded back (Bwd-while-
-        // evicted already guards correctness; this guards op symmetry)
+        // per-key evict/load symmetry: every evicted stash must have come
+        // back before its backward, so per key the counts match and the
+        // stage-total Evict/Load counts match too
         let evicts = prog.ops.iter().filter(|o| o.kind == OpKind::Evict).count();
         let loads = prog.ops.iter().filter(|o| o.kind == OpKind::Load).count();
         if evicts != loads {
-            let mb = prog.ops.iter().find(|o| o.kind == OpKind::Evict).map(|o| o.mb).unwrap_or(0);
-            return Err(ValidationError::EvictNotReloaded { stage: st, mb });
+            let key = prog
+                .ops
+                .iter()
+                .find(|o| o.kind == OpKind::Evict)
+                .map(|o| (o.mb, o.chunk))
+                .unwrap_or((0, 0));
+            return Err(ValidationError::EvictNotReloaded { stage: st, mb: key.0, chunk: key.1 });
         }
         if let ScheduleKind::BPipe { bound } = s.kind {
             if high_water > bound as i64 {
@@ -142,12 +171,14 @@ pub fn validate(s: &Schedule) -> Result<(), ValidationError> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::schedule::{Op, Schedule, ScheduleKind, StageProgram};
+    use crate::schedule::{Op, OpKind, Placement, Schedule, ScheduleKind, StageProgram};
 
     fn sched(ops: Vec<Op>) -> Schedule {
         Schedule {
             p: 1,
             m: 8,
+            chunks: 1,
+            placement: Placement::Sequential,
             kind: ScheduleKind::OneFOneB,
             programs: vec![StageProgram { stage: 0, ops }],
         }
@@ -190,9 +221,57 @@ mod tests {
     }
 
     #[test]
+    fn rejects_unknown_chunk() {
+        let s = sched(vec![
+            Op { kind: OpKind::Fwd, mb: 0, chunk: 1 },
+            Op { kind: OpKind::Bwd, mb: 0, chunk: 1 },
+        ]);
+        assert!(matches!(validate(&s), Err(ValidationError::UnknownChunk { .. })));
+    }
+
+    #[test]
+    fn rejects_evict_after_bwd() {
+        let s = sched(vec![Op::fwd(0), Op::bwd(0), Op::evict(0), Op::load(0)]);
+        assert!(matches!(validate(&s), Err(ValidationError::EvictWithoutFwd { .. })));
+    }
+
+    #[test]
     fn accepts_evict_load_cycle() {
         let s = sched(vec![Op::fwd(0), Op::evict(0), Op::load(0), Op::bwd(0)]);
         validate(&s).unwrap();
+    }
+
+    #[test]
+    fn accepts_repeated_evict_load_cycles() {
+        // the generalized transform may prefetch a stash back and re-evict
+        // it under pressure — two full cycles on one key are legal
+        let s = sched(vec![
+            Op::fwd(0),
+            Op::evict(0),
+            Op::load(0),
+            Op::evict(0),
+            Op::load(0),
+            Op::bwd(0),
+        ]);
+        validate(&s).unwrap();
+    }
+
+    #[test]
+    fn chunk_keys_are_independent() {
+        // evicting (mb 0, chunk 0) must not satisfy a load of (mb 0, chunk 1)
+        let mut s = sched(vec![
+            Op { kind: OpKind::Fwd, mb: 0, chunk: 0 },
+            Op { kind: OpKind::Fwd, mb: 0, chunk: 1 },
+            Op { kind: OpKind::Evict, mb: 0, chunk: 0 },
+            Op { kind: OpKind::Load, mb: 0, chunk: 1 },
+            Op { kind: OpKind::Bwd, mb: 0, chunk: 1 },
+            Op { kind: OpKind::Bwd, mb: 0, chunk: 0 },
+        ]);
+        s.chunks = 2;
+        assert!(matches!(
+            validate(&s),
+            Err(ValidationError::LoadWithoutEvict { stage: 0, mb: 0, chunk: 1 })
+        ));
     }
 
     #[test]

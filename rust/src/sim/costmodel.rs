@@ -284,8 +284,15 @@ impl CostModel {
 
     /// BPipe evict/load transfer time for one stash (one direction).
     pub fn transfer_time(&self, intra_node: bool) -> f64 {
+        self.transfer_time_chunked(intra_node, 1)
+    }
+
+    /// Transfer time of one stash of a `chunks`-way virtual pipeline: a
+    /// chunk stash holds only `1/chunks` of a stage's layers, so the
+    /// payload (and hence the wire time) scales down with the chunk count.
+    pub fn transfer_time_chunked(&self, intra_node: bool, chunks: u64) -> f64 {
         let mm = crate::model::memory::MemoryModel::new(&self.e);
-        let bytes = mm.activation_bytes_per_microbatch(0) as f64;
+        let bytes = (mm.activation_bytes_per_microbatch(0) / chunks.max(1)) as f64;
         let bw = if intra_node {
             self.e.cluster.nvlink_bw * LINK_EFF
         } else {

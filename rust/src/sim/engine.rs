@@ -5,23 +5,36 @@
 //! evictor/acceptor pair a FIFO **transfer stream** (Evict/Load).  Ops
 //! form a DAG:
 //!
-//! * `Fwd(s, i)` needs `Fwd(s−1, i)` (activation arrival) and the
-//!   previous compute op on stage `s`;
-//! * `Bwd(s, i)` needs `Bwd(s+1, i)` (gradient arrival), its own
-//!   `Fwd(s, i)`, the previous compute op, and — if the stash was
-//!   evicted — `Load(s, i)` (BPipe's only coupling into compute);
+//! * `Fwd(s, i, c)` needs the previous hop of chunk `c`'s dataflow
+//!   (`Fwd(s−1, i, c)` for sequential placement, the V path for
+//!   [`Placement::VShape`]) and the previous compute op on stage `s`;
+//! * `Bwd(s, i, c)` needs the downstream gradient along the reverse of
+//!   that dataflow, its own `Fwd(s, i, c)`, the previous compute op, and
+//!   — if the stash was evicted — the most recent `Load(s, i, c)`
+//!   (rebalancing's only coupling into compute);
 //! * `Evict/Load` need their triggering op and the previous transfer on
-//!   the pair's link.
+//!   the pair's link; a key may cycle Evict→Load repeatedly, so those
+//!   deps are resolved by walking each program in order rather than by a
+//!   unique per-key lookup.
 //!
 //! Completion times are computed by Kahn topological order; the engine
 //! also tracks per-device stash residency over time (memory high-water,
 //! OOM detection) and per-stream busy time (bubble fraction).
+//!
+//! ## Hot path
+//!
+//! All dependency lookups go through a **dense precomputed index**
+//! (`stage × {Fwd,Bwd} × mb × chunk → node id`) instead of a `HashMap`,
+//! and link arbitration state is a dense per-link array — this is the
+//! inner loop of [`super::sweep`], which simulates the full
+//! schedule × bound × layout × experiment grid (see
+//! `benches/runtime_hotpath.rs`).
 
 use super::costmodel::CostModel;
 use crate::bpipe::{pairing, Layout};
 use crate::config::ExperimentConfig;
 use crate::model::{flops, memory::MemoryModel};
-use crate::schedule::{OpKind, Schedule};
+use crate::schedule::{OpKind, Placement, Schedule};
 
 /// One executed op, for timeline rendering (paper Figure 1).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -47,6 +60,8 @@ pub struct SimResult {
     pub bubble_fraction: f64,
     /// per-stage peak device memory, bytes (weights+opt+stash+reserved)
     pub mem_high_water: Vec<u64>,
+    /// per-stage peak resident stash count (own + accepted from partner)
+    pub stash_high_water: Vec<i64>,
     /// stage that exceeded HBM capacity, if any
     pub oom_stage: Option<u64>,
     /// total backward stall time waiting on BPipe loads (seconds)
@@ -82,16 +97,56 @@ struct Node {
     idx: usize,
 }
 
+const NONE: u32 = u32::MAX;
+
+/// Dense `(stage, Fwd|Bwd, mb, chunk) → node id` index — the hot-path
+/// replacement for the old per-op `HashMap` (compute ops are unique per
+/// key by validation, so a flat array slot each suffices).
+struct ComputeIndex {
+    ids: Vec<u32>,
+    m: usize,
+    chunks: usize,
+}
+
+impl ComputeIndex {
+    fn new(p: usize, m: usize, chunks: usize) -> Self {
+        ComputeIndex { ids: vec![NONE; p * 2 * m * chunks], m, chunks }
+    }
+
+    #[inline]
+    fn slot(&self, stage: usize, kind: OpKind, mb: u64, chunk: u64) -> usize {
+        let k = match kind {
+            OpKind::Fwd => 0,
+            OpKind::Bwd => 1,
+            _ => unreachable!("only compute ops are indexed"),
+        };
+        ((stage * 2 + k) * self.m + mb as usize) * self.chunks + chunk as usize
+    }
+
+    #[inline]
+    fn set(&mut self, stage: usize, kind: OpKind, mb: u64, chunk: u64, id: u32) {
+        let s = self.slot(stage, kind, mb, chunk);
+        self.ids[s] = id;
+    }
+
+    /// Node id of a compute op that validation guarantees to exist.
+    #[inline]
+    fn get(&self, stage: usize, kind: OpKind, mb: u64, chunk: u64) -> usize {
+        let id = self.ids[self.slot(stage, kind, mb, chunk)];
+        debug_assert_ne!(id, NONE, "missing compute op in validated schedule");
+        id as usize
+    }
+}
+
 /// Simulate one iteration of `schedule` for experiment `e` on `layout`.
 pub fn simulate(e: &ExperimentConfig, schedule: &Schedule, layout: &Layout) -> SimResult {
     crate::schedule::validate(schedule).expect("refusing to simulate an invalid schedule");
     let cm = CostModel::new(e);
     let mm = MemoryModel::new(e);
     let p = schedule.p as usize;
-    let chunks = match schedule.kind {
-        crate::schedule::ScheduleKind::Interleaved { chunks } => chunks,
-        _ => 1,
-    };
+    let m = schedule.m as usize;
+    let chunks = schedule.chunks.max(1) as usize;
+    let vshape = schedule.placement == Placement::VShape;
 
     // -- global node ids ---------------------------------------------------
     let mut base = vec![0usize; p + 1];
@@ -99,93 +154,130 @@ pub fn simulate(e: &ExperimentConfig, schedule: &Schedule, layout: &Layout) -> S
         base[s + 1] = base[s] + schedule.programs[s].ops.len();
     }
     let n = base[p];
-    let node_of = |s: usize, idx: usize| base[s] + idx;
     let nodes: Vec<Node> = (0..p)
         .flat_map(|s| (0..schedule.programs[s].ops.len()).map(move |idx| Node { stage: s, idx }))
         .collect();
 
-    // index (stage, kind, mb, chunk) -> node id, for dependency lookups
-    let mut find: std::collections::HashMap<(usize, OpKind, u64, u64), usize> =
-        std::collections::HashMap::with_capacity(n);
+    // dense compute-op index (hot path: no hashing)
+    let mut cix = ComputeIndex::new(p, m, chunks);
     for (id, nd) in nodes.iter().enumerate() {
         let op = schedule.programs[nd.stage].ops[nd.idx];
-        find.insert((nd.stage, op.kind, op.mb, op.chunk), id);
+        if matches!(op.kind, OpKind::Fwd | OpKind::Bwd) {
+            cix.set(nd.stage, op.kind, op.mb, op.chunk, id as u32);
+        }
     }
 
-    // -- dependency edges ---------------------------------------------------
-    let mut deps: Vec<Vec<usize>> = vec![Vec::with_capacity(3); n];
-    // FIFO streams: previous compute op per stage; previous transfer per
-    // LINK.  An intra-node pair gets a dedicated NVLink p2p stream; every
-    // cross-node pair whose evictor sits on the same node contends for
-    // that node's single IB uplink (the effect paper Figure 2's
-    // pair-adjacent layout exists to avoid).
-    #[derive(Hash, PartialEq, Eq, Clone, Copy)]
-    enum LinkKey {
-        NvlinkPair(usize),
-        IbUplink(u64),
-    }
-    let link_of = |stage: usize| -> LinkKey {
-        if layout.pair_intra_node(p as u64, stage as u64) {
-            LinkKey::NvlinkPair(stage.min(p - 1 - stage))
+    // previous virtual-pipeline hop of chunk `c`'s forward dataflow at
+    // stage `s` (backward deps are the reverse of this path)
+    let fwd_dep = |s: usize, mb: u64, chunk: u64| -> Option<usize> {
+        if !vshape {
+            if s > 0 {
+                Some(cix.get(s - 1, OpKind::Fwd, mb, chunk))
+            } else if chunk > 0 {
+                // interleaved wrap: chunk c at stage 0 consumes
+                // chunk c−1 at stage p−1
+                Some(cix.get(p - 1, OpKind::Fwd, mb, chunk - 1))
+            } else {
+                None
+            }
+        } else if chunk == 0 {
+            if s > 0 { Some(cix.get(s - 1, OpKind::Fwd, mb, 0)) } else { None }
+        } else if s == p - 1 {
+            // V junction: chunk 1 starts where chunk 0 ends
+            Some(cix.get(p - 1, OpKind::Fwd, mb, 0))
         } else {
-            LinkKey::IbUplink(layout.node_of(stage as u64))
+            // chunk 1 flows p−1 → 0
+            Some(cix.get(s + 1, OpKind::Fwd, mb, 1))
         }
     };
-    let mut prev_compute: Vec<Option<usize>> = vec![None; p];
-    for (id, nd) in nodes.iter().enumerate() {
-        let s = nd.stage;
-        let op = schedule.programs[s].ops[nd.idx];
-        match op.kind {
-            OpKind::Fwd => {
-                if let Some(prev) = prev_compute[s] {
-                    deps[id].push(prev);
-                }
-                // activation arrival: previous (virtual) stage's fwd
-                if s > 0 {
-                    deps[id].push(find[&(s - 1, OpKind::Fwd, op.mb, op.chunk)]);
-                } else if op.chunk > 0 {
-                    // interleaved wrap: chunk c at stage 0 consumes
-                    // chunk c−1 at stage p−1
-                    deps[id].push(find[&(p - 1, OpKind::Fwd, op.mb, op.chunk - 1)]);
-                }
-                prev_compute[s] = Some(id);
+    let bwd_dep = |s: usize, mb: u64, chunk: u64| -> Option<usize> {
+        if !vshape {
+            if s + 1 < p {
+                Some(cix.get(s + 1, OpKind::Bwd, mb, chunk))
+            } else if chunk + 1 < chunks as u64 {
+                // interleaved wrap: grad for chunk c at stage p−1
+                // comes from chunk c+1 at stage 0
+                Some(cix.get(0, OpKind::Bwd, mb, chunk + 1))
+            } else {
+                None
             }
-            OpKind::Bwd => {
-                if let Some(prev) = prev_compute[s] {
-                    deps[id].push(prev);
+        } else if chunk == 1 {
+            if s > 0 { Some(cix.get(s - 1, OpKind::Bwd, mb, 1)) } else { None }
+        } else if s + 1 < p {
+            Some(cix.get(s + 1, OpKind::Bwd, mb, 0))
+        } else {
+            // V junction in reverse: chunk 0's grad at stage p−1 comes
+            // from chunk 1 at stage p−1
+            Some(cix.get(p - 1, OpKind::Bwd, mb, 1))
+        }
+    };
+
+    // -- dependency edges ---------------------------------------------------
+    // Evict/Load deps are walk-local: a key may be evicted and reloaded
+    // repeatedly, so each Load binds to the most recent Evict of its key
+    // and each Bwd to the most recent Load (dense per-key scratch, reset
+    // per stage).
+    let mut deps: Vec<Vec<usize>> = vec![Vec::with_capacity(3); n];
+    let mut bwd_load_dep: Vec<u32> = vec![NONE; n];
+    let mut prev_compute: Option<usize>;
+    let key_count = m * chunks;
+    let mut last_evict = vec![NONE; key_count];
+    let mut last_load = vec![NONE; key_count];
+    for s in 0..p {
+        prev_compute = None;
+        last_evict.fill(NONE);
+        last_load.fill(NONE);
+        for (idx, op) in schedule.programs[s].ops.iter().enumerate() {
+            let id = base[s] + idx;
+            let key = op.mb as usize * chunks + op.chunk as usize;
+            match op.kind {
+                OpKind::Fwd => {
+                    if let Some(prev) = prev_compute {
+                        deps[id].push(prev);
+                    }
+                    if let Some(d) = fwd_dep(s, op.mb, op.chunk) {
+                        deps[id].push(d);
+                    }
+                    prev_compute = Some(id);
                 }
-                deps[id].push(find[&(s, OpKind::Fwd, op.mb, op.chunk)]);
-                if s + 1 < p {
-                    deps[id].push(find[&(s + 1, OpKind::Bwd, op.mb, op.chunk)]);
-                } else if op.chunk + 1 < chunks {
-                    // interleaved wrap: grad for chunk c at stage p−1
-                    // comes from chunk c+1 at stage 0
-                    deps[id].push(find[&(0, OpKind::Bwd, op.mb, op.chunk + 1)]);
+                OpKind::Bwd => {
+                    if let Some(prev) = prev_compute {
+                        deps[id].push(prev);
+                    }
+                    deps[id].push(cix.get(s, OpKind::Fwd, op.mb, op.chunk));
+                    if let Some(d) = bwd_dep(s, op.mb, op.chunk) {
+                        deps[id].push(d);
+                    }
+                    if last_load[key] != NONE {
+                        deps[id].push(last_load[key] as usize);
+                        bwd_load_dep[id] = last_load[key];
+                    }
+                    prev_compute = Some(id);
                 }
-                if let Some(&load) = find.get(&(s, OpKind::Load, op.mb, op.chunk)) {
-                    deps[id].push(load);
+                OpKind::Evict | OpKind::Load => {
+                    // issue point: the op preceding it in program order
+                    if idx > 0 {
+                        deps[id].push(base[s] + idx - 1);
+                    }
+                    if op.kind == OpKind::Load {
+                        deps[id].push(last_evict[key] as usize);
+                        last_load[key] = id as u32;
+                    } else {
+                        last_evict[key] = id as u32;
+                        last_load[key] = NONE;
+                    }
+                    // link arbitration is time-based (FCFS per link) in
+                    // the event loop below, not a static dependency —
+                    // static chaining of a *shared* uplink across stages
+                    // can create artificial cycles.
                 }
-                prev_compute[s] = Some(id);
-            }
-            OpKind::Evict | OpKind::Load => {
-                // issue point: the op preceding it in program order
-                if nd.idx > 0 {
-                    deps[id].push(node_of(s, nd.idx - 1));
-                }
-                if op.kind == OpKind::Load {
-                    deps[id].push(find[&(s, OpKind::Evict, op.mb, op.chunk)]);
-                }
-                // link arbitration is time-based (FCFS per link) in the
-                // event loop below, not a static dependency — static
-                // chaining of a *shared* uplink across stages can create
-                // artificial cycles.
             }
         }
     }
 
     // -- durations ----------------------------------------------------------
     let stage_times: Vec<_> = (0..p).map(|s| cm.stage_times(s as u64)).collect();
-    // interleaved chunks split a stage's layers v ways
+    // interleaved/V chunks split a stage's layers `chunks` ways
     let chunk_scale = 1.0 / chunks as f64;
     let dur = |nd: &Node| -> f64 {
         let op = schedule.programs[nd.stage].ops[nd.idx];
@@ -194,7 +286,7 @@ pub fn simulate(e: &ExperimentConfig, schedule: &Schedule, layout: &Layout) -> S
             OpKind::Bwd => stage_times[nd.stage].bwd * chunk_scale,
             OpKind::Evict | OpKind::Load => {
                 let intra = layout.pair_intra_node(p as u64, nd.stage as u64);
-                cm.transfer_time(intra)
+                cm.transfer_time_chunked(intra, chunks as u64)
             }
         }
     };
@@ -238,7 +330,16 @@ pub fn simulate(e: &ExperimentConfig, schedule: &Schedule, layout: &Layout) -> S
         .filter(|&i| indeg[i] == 0)
         .map(|i| Ev(0.0, i))
         .collect();
-    let mut link_free: std::collections::HashMap<LinkKey, f64> = Default::default();
+    // dense per-link free-time: nvlink pair k < p, then IB uplink per node
+    let n_nodes = layout.n_nodes as usize;
+    let mut link_free = vec![0f64; p + n_nodes];
+    let link_of = |stage: usize| -> usize {
+        if layout.pair_intra_node(p as u64, stage as u64) {
+            stage.min(p - 1 - stage)
+        } else {
+            p + layout.node_of(stage as u64) as usize
+        }
+    };
     let mut done = 0usize;
     let mut load_stall = 0f64;
     while let Some(Ev(ready, id)) = heap.pop() {
@@ -247,8 +348,7 @@ pub fn simulate(e: &ExperimentConfig, schedule: &Schedule, layout: &Layout) -> S
         let op = schedule.programs[nd.stage].ops[nd.idx];
         let t0 = match op.kind {
             OpKind::Evict | OpKind::Load => {
-                let link = link_of(nd.stage);
-                let free = link_free.entry(link).or_insert(0.0);
+                let free = &mut link_free[link_of(nd.stage)];
                 let s = ready.max(*free);
                 *free = s + dur(&nd);
                 s
@@ -257,15 +357,14 @@ pub fn simulate(e: &ExperimentConfig, schedule: &Schedule, layout: &Layout) -> S
         };
         start[id] = t0;
         end[id] = t0 + dur(&nd);
-        if op.kind == OpKind::Bwd {
-            if let Some(&load) = find.get(&(nd.stage, OpKind::Load, op.mb, op.chunk)) {
-                let without: f64 = deps[id]
-                    .iter()
-                    .filter(|&&d| d != load)
-                    .map(|&d| end[d])
-                    .fold(0f64, f64::max);
-                load_stall += (end[load] - without).max(0.0);
-            }
+        if op.kind == OpKind::Bwd && bwd_load_dep[id] != NONE {
+            let load = bwd_load_dep[id] as usize;
+            let without: f64 = deps[id]
+                .iter()
+                .filter(|&&d| d != load)
+                .map(|&d| end[d])
+                .fold(0f64, f64::max);
+            load_stall += (end[load] - without).max(0.0);
         }
         for &nxt in &rev[id] {
             indeg[nxt] -= 1;
@@ -298,8 +397,10 @@ pub fn simulate(e: &ExperimentConfig, schedule: &Schedule, layout: &Layout) -> S
     trace.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
 
     // -- memory timeline -------------------------------------------------------
-    // events: (time, stage, delta_stashes); stash bytes are uniform
-    let act = mm.activation_bytes_per_microbatch(0);
+    // events: (time, stage, delta_stashes); a stash of a chunked schedule
+    // holds only 1/chunks of the stage's layers, so stash (and transfer)
+    // bytes scale by the chunk count
+    let act = mm.activation_bytes_per_microbatch(0) / chunks as u64;
     let mut events: Vec<(f64, usize, i64)> = Vec::new();
     for (id, nd) in nodes.iter().enumerate() {
         let op = schedule.programs[nd.stage].ops[nd.idx];
@@ -354,6 +455,7 @@ pub fn simulate(e: &ExperimentConfig, schedule: &Schedule, layout: &Layout) -> S
         bubble_fraction: 1.0 - mean_busy / makespan,
         busy,
         mem_high_water,
+        stash_high_water: hw,
         oom_stage,
         load_stall,
         transfer_bytes: transfers * act,
@@ -378,8 +480,9 @@ pub fn simulate_experiment(e: &ExperimentConfig) -> SimResult {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bpipe::{derived_bound, rebalance};
     use crate::config::{paper_experiment, paper_experiments};
-    use crate::schedule::{gpipe, one_f_one_b};
+    use crate::schedule::{gpipe, interleaved, one_f_one_b, v_shaped};
 
     #[test]
     fn makespan_exceeds_critical_path_lower_bound() {
@@ -489,5 +592,70 @@ mod tests {
         let plain = simulate(&e, &one_f_one_b(e.parallel.p, m), &layout);
         let il = simulate(&e, &crate::schedule::interleaved(e.parallel.p, m, 2), &layout);
         assert!(il.bubble_fraction < plain.bubble_fraction);
+    }
+
+    #[test]
+    fn rebalanced_interleaved_flattens_memory() {
+        // the tentpole end-to-end: rebalance(interleaved) simulates, and
+        // the derived bound flattens the 23..9 stash ramp to a uniform
+        // pair mean (16 per stage for p=8, m=64, v=2)
+        let e = paper_experiment(8).unwrap();
+        let m = e.parallel.num_microbatches();
+        let layout = crate::bpipe::pair_adjacent_layout(e.parallel.p, e.cluster.n_nodes);
+        let il = interleaved(e.parallel.p, m, 2);
+        let plain = simulate(&e, &il, &layout);
+        let rb = rebalance(&il, None);
+        let r = simulate(&e, &rb, &layout);
+        let spread = |hw: &[i64]| hw.iter().max().unwrap() - hw.iter().min().unwrap();
+        assert!(
+            spread(&r.stash_high_water) < spread(&plain.stash_high_water),
+            "{:?} vs {:?}",
+            r.stash_high_water,
+            plain.stash_high_water
+        );
+        let peak = |v: &[u64]| *v.iter().max().unwrap();
+        assert!(peak(&r.mem_high_water) < peak(&plain.mem_high_water));
+        // transfers hide under compute on the pair-adjacent layout
+        assert!(r.makespan / plain.makespan < 1.05);
+    }
+
+    #[test]
+    fn chunked_stash_bytes_scale_with_chunk_count() {
+        // satellite fix: a v-chunk stash pins 1/v of a stage's layers —
+        // the interleaved timeline must account act/v per stash
+        let e = paper_experiment(9).unwrap();
+        let m = e.parallel.num_microbatches();
+        let layout = crate::bpipe::pair_adjacent_layout(e.parallel.p, e.cluster.n_nodes);
+        let r = simulate(&e, &interleaved(e.parallel.p, m, 2), &layout);
+        let mm = MemoryModel::new(&e);
+        let act = mm.activation_bytes_per_microbatch(0);
+        for s in 0..e.parallel.p as usize {
+            let stash_bytes =
+                r.mem_high_water[s] - mm.weight_opt_bytes(s as u64) - e.cluster.reserved_bytes;
+            assert_eq!(stash_bytes, r.stash_high_water[s] as u64 * (act / 2), "stage {s}");
+        }
+    }
+
+    #[test]
+    fn v_shaped_simulates_with_balanced_stashes() {
+        let e = paper_experiment(8).unwrap();
+        let m = e.parallel.num_microbatches();
+        let layout = crate::bpipe::pair_adjacent_layout(e.parallel.p, e.cluster.n_nodes);
+        let r = simulate(&e, &v_shaped(e.parallel.p, m), &layout);
+        assert!(r.makespan > 0.0 && r.mfu > 0.0);
+        let spread = r.stash_high_water.iter().max().unwrap()
+            - r.stash_high_water.iter().min().unwrap();
+        assert!(spread <= 1, "V-shaped per-device stash {:?}", r.stash_high_water);
+    }
+
+    #[test]
+    fn rebalance_composes_with_v_shaped_in_sim() {
+        let e = paper_experiment(8).unwrap();
+        let m = e.parallel.num_microbatches();
+        let layout = crate::bpipe::pair_adjacent_layout(e.parallel.p, e.cluster.n_nodes);
+        let base = v_shaped(e.parallel.p, m);
+        let bound = derived_bound(&base);
+        let r = simulate(&e, &rebalance(&base, Some(bound)), &layout);
+        assert!(r.makespan > 0.0, "rebalanced V-shaped must execute");
     }
 }

@@ -3,11 +3,19 @@
 //! [`costmodel`] turns (model, parallelism, attention method) into per-op
 //! wall-clock times on a modeled A100; [`engine`] executes pipeline
 //! schedules against those times, tracking memory, bubbles, BPipe
-//! transfer overlap and MFU.  Together they regenerate the paper's
-//! Tables 3/5 and Figures 1/2 at the paper's scale on one CPU.
+//! transfer overlap and MFU; [`sweep`] fans the full
+//! schedule × bound × layout × experiment grid out over a thread pool
+//! and ranks the outcomes.  Together they regenerate the paper's
+//! Tables 3/5 and Figures 1/2 at the paper's scale on one CPU — and
+//! answer the generalized question the paper stops short of: *which*
+//! schedule family wins once rebalancing composes with all of them.
 
 pub mod costmodel;
 pub mod engine;
+pub mod sweep;
 
 pub use costmodel::{CostModel, SoftmaxKernel, StageTimes};
 pub use engine::{simulate, simulate_experiment, SimResult, TraceEvent};
+pub use sweep::{
+    experiment_tasks, paper_grid, render_sweep, scenarios, sweep, SweepOutcome, SweepTask,
+};

@@ -1,0 +1,252 @@
+//! `sim::sweep` — the parallel design-space sweep driver.
+//!
+//! The paper answers "does memory rebalancing pay off?" for exactly one
+//! schedule (1F1B).  With [`crate::bpipe::rebalance`] schedule-agnostic,
+//! the interesting space is the grid
+//!
+//! ```text
+//! experiment (Table 3 rows) × schedule scenario × device layout
+//! ```
+//!
+//! where the scenarios cover the three memory-management families:
+//! imbalanced (1F1B, GPipe), anti-balanced virtual pipelines
+//! (interleaved), balanced-by-placement (V-shaped), each ± the
+//! rebalancing transform at its derived bound.
+//!
+//! [`sweep`] fans the grid out over a pool of OS threads (scoped; the
+//! build is offline, so no rayon — a work-stealing index over a shared
+//! task list gives the same shape), simulates every cell through the
+//! dense-index DES engine, and [`render_sweep`] emits one ranked report
+//! table: feasible cells sorted by MFU, infeasible (OOM) cells flagged
+//! at the bottom with the stage that burst.
+//!
+//! `bpipe sweep` on the CLI runs the whole grid in one command.
+
+use super::engine::simulate;
+use crate::bpipe::{pair_adjacent_layout, rebalance, sequential_layout, Layout};
+use crate::config::{paper_experiments, ExperimentConfig};
+use crate::report::Table;
+use crate::schedule::{gpipe, interleaved, one_f_one_b, v_shaped, Schedule};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One cell of the sweep grid, before simulation.
+pub struct SweepTask {
+    pub experiment: ExperimentConfig,
+    pub scenario: &'static str,
+    pub layout: Layout,
+    pub schedule: Schedule,
+}
+
+/// One simulated cell of the grid.
+#[derive(Debug, Clone)]
+pub struct SweepOutcome {
+    pub exp_id: Option<u32>,
+    pub model: String,
+    pub microbatch: u64,
+    pub scenario: &'static str,
+    pub layout: &'static str,
+    pub mfu_pct: f64,
+    pub makespan: f64,
+    pub bubble_pct: f64,
+    pub peak_mem_gib: f64,
+    pub oom_stage: Option<u64>,
+    pub load_stall_ms: f64,
+    pub transfer_gib: f64,
+}
+
+/// The schedule scenarios swept for one experiment: the three scheduling
+/// families ± rebalancing (GPipe as the memory-worst-case baseline).
+pub fn scenarios(p: u64, m: u64, v: u64) -> Vec<(&'static str, Schedule)> {
+    let base_1f1b = one_f_one_b(p, m);
+    let base_il = interleaved(p, m, v);
+    let base_v = v_shaped(p, m);
+    vec![
+        ("1F1B", base_1f1b.clone()),
+        ("1F1B+rebalance", rebalance(&base_1f1b, None)),
+        ("GPipe", gpipe(p, m)),
+        ("interleaved", base_il.clone()),
+        ("interleaved+rebalance", rebalance(&base_il, None)),
+        ("V-shaped", base_v.clone()),
+        ("V-shaped+rebalance", rebalance(&base_v, None)),
+    ]
+}
+
+/// All sweep tasks for one experiment: every scenario × the
+/// {pair-adjacent, sequential} layouts — the one place the grid's inner
+/// dimensions are defined (paper_grid, the CLI and the tests all build
+/// on it).
+pub fn experiment_tasks(e: &ExperimentConfig, v: u64) -> Vec<SweepTask> {
+    let p = e.parallel.p;
+    let m = e.parallel.num_microbatches();
+    let mut tasks = Vec::new();
+    for (scenario, schedule) in scenarios(p, m, v) {
+        for layout in [
+            pair_adjacent_layout(p, e.cluster.n_nodes),
+            sequential_layout(p, e.cluster.n_nodes),
+        ] {
+            tasks.push(SweepTask {
+                experiment: e.clone(),
+                scenario,
+                layout,
+                schedule: schedule.clone(),
+            });
+        }
+    }
+    tasks
+}
+
+/// Build the full paper grid: every Table-3 experiment × every scenario ×
+/// {pair-adjacent, sequential} layout.
+pub fn paper_grid(v: u64) -> Vec<SweepTask> {
+    paper_experiments().iter().flat_map(|e| experiment_tasks(e, v)).collect()
+}
+
+/// Simulate every task of the grid across `threads` OS threads (0 =
+/// auto).  Results come back in task order regardless of which worker
+/// ran them.
+pub fn sweep(tasks: Vec<SweepTask>, threads: usize) -> Vec<SweepOutcome> {
+    let threads = if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    } else {
+        threads
+    };
+    let threads = threads.min(tasks.len().max(1));
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<(usize, SweepOutcome)>> = Mutex::new(Vec::with_capacity(tasks.len()));
+    let tasks_ref = &tasks;
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= tasks_ref.len() {
+                    break;
+                }
+                let t = &tasks_ref[i];
+                let out = run_task(t);
+                results.lock().unwrap().push((i, out));
+            });
+        }
+    });
+    let mut results = results.into_inner().unwrap();
+    results.sort_by_key(|(i, _)| *i);
+    results.into_iter().map(|(_, o)| o).collect()
+}
+
+fn run_task(t: &SweepTask) -> SweepOutcome {
+    let gib = (1u64 << 30) as f64;
+    let r = simulate(&t.experiment, &t.schedule, &t.layout);
+    SweepOutcome {
+        exp_id: t.experiment.id,
+        model: t.experiment.model.name.clone(),
+        microbatch: t.experiment.parallel.microbatch,
+        scenario: t.scenario,
+        layout: t.layout.name,
+        mfu_pct: r.mfu_pct(),
+        makespan: r.makespan,
+        bubble_pct: r.bubble_fraction * 100.0,
+        peak_mem_gib: *r.mem_high_water.iter().max().unwrap() as f64 / gib,
+        oom_stage: r.oom_stage,
+        load_stall_ms: r.load_stall * 1e3,
+        transfer_gib: r.transfer_bytes as f64 / gib,
+    }
+}
+
+/// Render the grid as one ranked table: feasible cells by MFU
+/// (descending), then OOM cells flagged with the bursting stage.
+pub fn render_sweep(outcomes: &[SweepOutcome]) -> String {
+    let mut ranked: Vec<&SweepOutcome> = outcomes.iter().collect();
+    ranked.sort_by(|a, b| {
+        (a.oom_stage.is_some())
+            .cmp(&b.oom_stage.is_some())
+            .then(b.mfu_pct.partial_cmp(&a.mfu_pct).unwrap())
+    });
+    let mut t = Table::new(&[
+        "rank", "exp", "model", "b", "scenario", "layout", "MFU %", "iter s", "bubble %",
+        "peak GiB", "stall ms", "xfer GiB", "verdict",
+    ]);
+    for (rank, o) in ranked.iter().enumerate() {
+        let verdict = match o.oom_stage {
+            Some(s) => format!("OOM @ stage {s}"),
+            None => "fits".to_string(),
+        };
+        t.push(vec![
+            (rank + 1).to_string(),
+            o.exp_id.map(|i| format!("({i})")).unwrap_or_default(),
+            o.model.clone(),
+            o.microbatch.to_string(),
+            o.scenario.to_string(),
+            o.layout.to_string(),
+            format!("{:.1}", o.mfu_pct),
+            format!("{:.2}", o.makespan),
+            format!("{:.1}", o.bubble_pct),
+            format!("{:.1}", o.peak_mem_gib),
+            format!("{:.1}", o.load_stall_ms),
+            format!("{:.2}", o.transfer_gib),
+            verdict,
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::paper_experiment;
+
+    fn small_grid() -> Vec<SweepTask> {
+        // one experiment, all scenarios, both layouts — cheap enough for CI
+        experiment_tasks(&paper_experiment(8).unwrap(), 2)
+    }
+
+    #[test]
+    fn parallel_sweep_matches_serial() {
+        let serial: Vec<f64> = small_grid().into_iter().map(|t| run_task(&t).mfu_pct).collect();
+        let parallel: Vec<f64> = sweep(small_grid(), 4).into_iter().map(|o| o.mfu_pct).collect();
+        assert_eq!(serial, parallel, "sweep must be deterministic and order-stable");
+    }
+
+    #[test]
+    fn grid_covers_all_scenarios_and_layouts() {
+        let outs = sweep(small_grid(), 0);
+        assert_eq!(outs.len(), 7 * 2);
+        for scenario in [
+            "1F1B", "1F1B+rebalance", "GPipe", "interleaved", "interleaved+rebalance",
+            "V-shaped", "V-shaped+rebalance",
+        ] {
+            assert_eq!(outs.iter().filter(|o| o.scenario == scenario).count(), 2, "{scenario}");
+        }
+    }
+
+    #[test]
+    fn rebalance_rescues_exp8_1f1b() {
+        // the sweep must show the paper's core claim as a ranking fact:
+        // plain 1F1B OOMs on exp (8), 1F1B+rebalance fits
+        let outs = sweep(small_grid(), 0);
+        let find = |scenario: &str, layout: &str| {
+            outs.iter()
+                .find(|o| o.scenario == scenario && o.layout == layout)
+                .unwrap()
+        };
+        assert_eq!(find("1F1B", "pair-adjacent").oom_stage, Some(0));
+        assert!(find("1F1B+rebalance", "pair-adjacent").oom_stage.is_none());
+    }
+
+    #[test]
+    fn render_ranks_fits_above_oom() {
+        let outs = sweep(small_grid(), 0);
+        let txt = render_sweep(&outs);
+        assert!(txt.contains("OOM @ stage"));
+        assert!(txt.contains("fits"));
+        // every OOM row ranks below every fitting row
+        let lines: Vec<&str> = txt.lines().collect();
+        let first_oom = lines.iter().position(|l| l.contains("OOM @")).unwrap();
+        assert!(lines[first_oom..].iter().all(|l| !l.contains("| fits")));
+    }
+
+    #[test]
+    fn paper_grid_is_full_size() {
+        let tasks = paper_grid(2);
+        assert_eq!(tasks.len(), 10 * 7 * 2);
+    }
+}

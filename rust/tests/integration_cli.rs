@@ -46,6 +46,31 @@ fn simulate_reports_memory_and_mfu() {
 }
 
 #[test]
+fn sweep_ranks_one_experiment_grid() {
+    // exp (8) × 7 scenarios × 2 layouts through the parallel driver
+    let (ok, out) = bpipe(&["sweep", "--experiment", "8"]);
+    assert!(ok, "{out}");
+    for needle in [
+        "1F1B+rebalance", "interleaved+rebalance", "V-shaped", "GPipe",
+        "pair-adjacent", "sequential", "OOM @ stage", "fits",
+        "14 grid cells simulated",
+    ] {
+        assert!(out.contains(needle), "missing {needle}: {out}");
+    }
+}
+
+#[test]
+fn schedule_subcommand_rebalances_any_kind() {
+    let (ok, out) = bpipe(&[
+        "schedule", "--p", "8", "--m", "16", "--kind", "interleaved", "--rebalance",
+    ]);
+    assert!(ok, "{out}");
+    assert!(out.contains('E') && out.contains('L'), "{out}");
+    let (ok, out) = bpipe(&["schedule", "--p", "4", "--m", "8", "--kind", "vshaped"]);
+    assert!(ok && out.lines().count() == 4, "{out}");
+}
+
+#[test]
 fn estimate_reproduces_worked_example() {
     let (ok, out) = bpipe(&["estimate", "--from", "1:0.378", "--to", "2:0.552"]);
     assert!(ok && out.contains("1.388"), "{out}");

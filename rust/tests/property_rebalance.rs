@@ -1,0 +1,161 @@
+//! Grid + property tests for the generalized rebalancing transform: for
+//! every (p, m, v, bound) cell the rebalanced schedule must validate,
+//! hold the bound at EVERY op boundary on EVERY stage, and never run a
+//! backward while its stash is evicted — on interleaved and V-shaped
+//! bases, not just 1F1B.
+
+use bpipe::bpipe::{derived_bound, pair_adjacent_layout, rebalance};
+use bpipe::config::paper_experiment;
+use bpipe::model::memory::bpipe_bound;
+use bpipe::schedule::{interleaved, one_f_one_b, v_shaped, validate, OpKind, Schedule};
+use bpipe::sim::simulate;
+
+/// Running stash count ≤ bound after every single op (stronger phrasing
+/// of `stash_high_water() ≤ bound`: checked boundary by boundary).
+fn assert_bounded_at_every_boundary(s: &Schedule, bound: i64) {
+    for prog in &s.programs {
+        let mut cur = 0i64;
+        for (at, op) in prog.ops.iter().enumerate() {
+            match op.kind {
+                OpKind::Fwd | OpKind::Load => cur += 1,
+                OpKind::Bwd | OpKind::Evict => cur -= 1,
+            }
+            assert!(
+                cur <= bound,
+                "stage {} op {at} ({op:?}): resident {cur} > bound {bound}",
+                prog.stage
+            );
+            assert!(cur >= 0, "stage {} op {at}: negative residency", prog.stage);
+        }
+    }
+}
+
+/// No backward may run while its (mb, chunk) stash is off-device.
+fn assert_load_precedes_bwd(s: &Schedule) {
+    for prog in &s.programs {
+        let mut evicted = std::collections::HashSet::new();
+        for op in &prog.ops {
+            let key = (op.mb, op.chunk);
+            match op.kind {
+                OpKind::Evict => {
+                    evicted.insert(key);
+                }
+                OpKind::Load => {
+                    evicted.remove(&key);
+                }
+                OpKind::Bwd => {
+                    assert!(
+                        !evicted.contains(&key),
+                        "stage {}: bwd {key:?} while evicted",
+                        prog.stage
+                    );
+                }
+                OpKind::Fwd => {}
+            }
+        }
+    }
+}
+
+#[test]
+fn grid_interleaved_bases_hold_any_bound() {
+    for p in [2u64, 4, 8] {
+        for mult in [1u64, 2, 4] {
+            let m = p * mult;
+            for v in [1u64, 2, 4] {
+                let base = interleaved(p, m, v);
+                let natural: i64 =
+                    (0..p).map(|s| base.program(s).stash_high_water()).max().unwrap();
+                let candidates = [
+                    Some(bpipe_bound(p)),
+                    Some(2),
+                    Some(3),
+                    Some((natural - 1).max(2) as u64),
+                    Some((natural + 1) as u64),
+                    None, // derived pair-mean default
+                ];
+                for bound in candidates {
+                    let rb = rebalance(&base, bound);
+                    validate(&rb).unwrap_or_else(|e| {
+                        panic!("p={p} m={m} v={v} bound={bound:?}: {e}")
+                    });
+                    let k = bound.unwrap_or_else(|| derived_bound(&base)) as i64;
+                    assert_bounded_at_every_boundary(&rb, k);
+                    assert_load_precedes_bwd(&rb);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn grid_v_shaped_bases_hold_any_bound() {
+    for p in [2u64, 4, 8] {
+        for mult in [1u64, 2, 4] {
+            let m = p * mult;
+            let base = v_shaped(p, m);
+            for bound in [Some(3u64), Some(bpipe_bound(p)), None] {
+                let rb = rebalance(&base, bound);
+                validate(&rb)
+                    .unwrap_or_else(|e| panic!("p={p} m={m} bound={bound:?}: {e}"));
+                let k = bound.unwrap_or_else(|| derived_bound(&base)) as i64;
+                assert_bounded_at_every_boundary(&rb, k);
+                assert_load_precedes_bwd(&rb);
+            }
+        }
+    }
+}
+
+#[test]
+fn grid_1f1b_bases_match_paper_bound_semantics() {
+    for p in [2u64, 4, 8, 16] {
+        for m in [1u64, p, 4 * p, 100] {
+            let base = one_f_one_b(p, m);
+            let rb = rebalance(&base, None);
+            validate(&rb).unwrap();
+            // derived default == paper bound for even p (unit-tested in
+            // bpipe::rebalance); the schedule must hold it everywhere
+            assert_bounded_at_every_boundary(&rb, derived_bound(&base) as i64);
+        }
+    }
+}
+
+/// The ISSUE's acceptance scenario, end to end: rebalance(interleaved(8,
+/// 32, 2), bound) validates and simulates with every stage's own
+/// residency ≤ bound at every boundary, and loads always precede bwds.
+#[test]
+fn acceptance_rebalanced_interleaved_8_32_2_end_to_end() {
+    let mut e = paper_experiment(8).unwrap();
+    e.parallel.global_batch = 32 * e.parallel.microbatch; // m = 32
+    let base = interleaved(8, 32, 2);
+    let layout = pair_adjacent_layout(8, e.cluster.n_nodes);
+    for bound in [Some(4u64), Some(8), None] {
+        let rb = rebalance(&base, bound);
+        validate(&rb).unwrap();
+        let k = bound.unwrap_or_else(|| derived_bound(&base)) as i64;
+        assert_bounded_at_every_boundary(&rb, k);
+        assert_load_precedes_bwd(&rb);
+        let r = simulate(&e, &rb, &layout);
+        assert!(r.makespan > 0.0 && r.mfu > 0.0 && r.mfu < 1.0);
+        // the DAG executed completely (simulate would panic on a cycle);
+        // the trace holds one timed event per scheduled op
+        assert_eq!(r.trace.len(), rb.num_ops());
+    }
+}
+
+/// Rebalancing an interleaved schedule with the derived bound must
+/// strictly flatten the per-stage residency ramp.
+#[test]
+fn derived_bound_flattens_interleaved_ramp() {
+    let base = interleaved(8, 64, 2);
+    let rb = rebalance(&base, None);
+    let hw = |s: &Schedule| -> Vec<i64> {
+        (0..8).map(|st| s.program(st).stash_high_water()).collect()
+    };
+    let spread = |v: &[i64]| v.iter().max().unwrap() - v.iter().min().unwrap();
+    assert!(
+        spread(&hw(&rb)) < spread(&hw(&base)),
+        "{:?} vs {:?}",
+        hw(&rb),
+        hw(&base)
+    );
+}

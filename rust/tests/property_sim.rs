@@ -2,7 +2,7 @@
 //! and causality invariants that must hold for ANY valid schedule on ANY
 //! layout, checked across hundreds of randomized configurations.
 
-use bpipe::bpipe::{apply_bpipe, pair_adjacent_layout, sequential_layout, Layout};
+use bpipe::bpipe::{apply_bpipe, pair_adjacent_layout, rebalance, sequential_layout, Layout};
 use bpipe::config::{paper_experiment, ExperimentConfig};
 use bpipe::schedule::{gpipe, interleaved, one_f_one_b, OpKind, Schedule};
 use bpipe::sim::{simulate, SimResult};
@@ -17,11 +17,14 @@ fn random_case(rng: &mut SplitMix64) -> (ExperimentConfig, Schedule, Layout) {
     let m = p * rng.range(1, 6);
     e.parallel.microbatch = 1;
     e.parallel.global_batch = m;
-    let schedule = match rng.below(4) {
+    let schedule = match rng.below(6) {
         0 => gpipe(p, m),
         1 => one_f_one_b(p, m),
         2 => interleaved(p, m, rng.range(1, 3)),
-        _ => apply_bpipe(&one_f_one_b(p, m), None),
+        3 => apply_bpipe(&one_f_one_b(p, m), None),
+        // the generalized transform on non-1F1B bases (derived bound)
+        4 => rebalance(&interleaved(p, m, rng.range(1, 3)), None),
+        _ => rebalance(&gpipe(p, m), Some(rng.range(2, m.max(2)))),
     };
     let nodes = if p == 8 && rng.next_f64() < 0.5 { 4 } else { 1 };
     let layout = if rng.next_f64() < 0.5 {

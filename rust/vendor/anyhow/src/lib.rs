@@ -1,0 +1,110 @@
+//! Minimal, offline drop-in replacement for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored crate
+//! provides exactly the subset the `bpipe` stack uses: [`Error`],
+//! [`Result`], and the [`anyhow!`], [`bail!`], [`ensure!`] macros.
+//! Like the real crate, [`Error`] deliberately does NOT implement
+//! `std::error::Error` itself so the blanket `From<E>` conversion (what
+//! makes `?` work on any std error) does not conflict with the reflexive
+//! `From<Error>` impl.
+
+use std::fmt;
+
+/// A boxed dynamic error with Display/Debug passthrough.
+pub struct Error(Box<dyn std::error::Error + Send + Sync + 'static>);
+
+impl Error {
+    /// Construct an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error(message.to_string().into())
+    }
+
+    /// The root error chain, starting at this error's cause.
+    pub fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        self.0.source()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // main() exits through Debug; render the human-readable message
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error(Box::new(e))
+    }
+}
+
+/// `std::result::Result` specialized to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u32> {
+        let n: u32 = s.parse()?; // From<ParseIntError> via the blanket impl
+        ensure!(n < 100, "too big: {n}");
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_and_ensure() {
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+        let e = parse("1000").unwrap_err();
+        assert_eq!(e.to_string(), "too big: 1000");
+    }
+
+    #[test]
+    fn bail_and_format() {
+        fn f(flag: bool) -> Result<()> {
+            if flag {
+                bail!("flag was {flag:?}");
+            }
+            Ok(())
+        }
+        assert!(f(false).is_ok());
+        assert_eq!(f(true).unwrap_err().to_string(), "flag was true");
+        let e: Error = anyhow!("plain");
+        assert_eq!(format!("{e:?}"), "plain");
+    }
+}
