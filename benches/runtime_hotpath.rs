@@ -1,56 +1,83 @@
 //! Hot-path benches for the sweep engine: the DES inner loop is the cost
-//! of every cell in `sim::sweep`'s experiment × schedule × layout grid,
-//! so this bench times (a) single simulations per schedule family —
-//! exercising the dense compute-op index that replaced the per-op
-//! `HashMap` lookups — (b) the schedule generators + rebalance transform
-//! that build the grid, and (c) the full paper grid end to end through
-//! the parallel driver.
+//! of every cell in `sim::sweep`'s grids, so this bench times
 //!
-//! (The PJRT execute-latency benches this file used to hold need the
-//! `pjrt` feature + AOT artifacts; the simulator path is the default
-//! build's hot path now that the sweep is the headline workload.)
+//! * (a) single sweep cells per schedule family through a reused
+//!   [`SimWorkspace`] — the zero-allocation steady state (CSR edges,
+//!   dense op index, opt-in trace) that replaced the per-cell
+//!   `Vec<Vec<usize>>`/`BinaryHeap`/trace allocations;
+//! * (b) the same cell through the allocating `simulate` wrapper, so the
+//!   workspace win stays visible as a ratio in one report;
+//! * (c) the schedule generators + rebalance transform that build grid
+//!   cells lazily on the worker threads;
+//! * (d) the full 140-cell ranking grid and the ~2300-cell
+//!   bound-sensitivity grid end to end through the parallel driver.
+//!
+//! `BPIPE_BENCH_SMOKE=1` caps iteration counts so CI can run this as a
+//! non-blocking smoke step (hot-path regressions show up in PR logs
+//! without gating merges).
 
 use bpipe::bpipe::{pair_adjacent_layout, rebalance};
 use bpipe::config::paper_experiment;
 use bpipe::schedule::{interleaved, one_f_one_b, v_shaped};
-use bpipe::sim::{paper_grid, simulate, sweep};
+use bpipe::sim::{bounds_grid, paper_grid, simulate, sweep, SimOptions, SimWorkspace};
 use bpipe::util::bench;
 
 fn main() {
+    let smoke = std::env::var("BPIPE_BENCH_SMOKE")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    let iters = |n: u32| if smoke { n.min(3) } else { n };
+
     let e = paper_experiment(8).unwrap();
     let p = e.parallel.p;
     let m = e.parallel.num_microbatches();
     let layout = pair_adjacent_layout(p, e.cluster.n_nodes);
 
-    println!("=== DES engine inner loop (one sweep cell each) ===");
+    println!("=== DES engine inner loop (one sweep cell each, reused workspace) ===");
     let s_1f1b = one_f_one_b(p, m);
     let s_bp = rebalance(&s_1f1b, None);
     let s_il = interleaved(p, m, 2);
     let s_il_rb = rebalance(&s_il, None);
     let s_v = v_shaped(p, m);
-    bench("hotpath/sim_1f1b_p8_m64", 200, || {
-        simulate(std::hint::black_box(&e), &s_1f1b, &layout)
+    let mut ws = SimWorkspace::new();
+    let opts = SimOptions { trace: false };
+    bench("hotpath/sim_1f1b_p8_m64", iters(500), || {
+        ws.run(std::hint::black_box(&e), &s_1f1b, &layout, opts)
     });
-    bench("hotpath/sim_1f1b_rebalanced", 200, || {
-        simulate(std::hint::black_box(&e), &s_bp, &layout)
+    bench("hotpath/sim_1f1b_rebalanced", iters(500), || {
+        ws.run(std::hint::black_box(&e), &s_bp, &layout, opts)
     });
-    bench("hotpath/sim_interleaved_v2", 200, || {
-        simulate(std::hint::black_box(&e), &s_il, &layout)
+    bench("hotpath/sim_interleaved_v2", iters(500), || {
+        ws.run(std::hint::black_box(&e), &s_il, &layout, opts)
     });
-    bench("hotpath/sim_interleaved_v2_rebalanced", 200, || {
-        simulate(std::hint::black_box(&e), &s_il_rb, &layout)
+    bench("hotpath/sim_interleaved_v2_rebalanced", iters(500), || {
+        ws.run(std::hint::black_box(&e), &s_il_rb, &layout, opts)
     });
-    bench("hotpath/sim_v_shaped", 200, || {
-        simulate(std::hint::black_box(&e), &s_v, &layout)
+    bench("hotpath/sim_v_shaped", iters(500), || {
+        ws.run(std::hint::black_box(&e), &s_v, &layout, opts)
     });
 
-    println!("\n=== grid construction (generators + transform) ===");
-    bench("hotpath/gen_interleaved_p8_m64_v2", 20_000, || interleaved(p, m, 2));
-    bench("hotpath/gen_v_shaped_p8_m64", 2_000, || v_shaped(p, m));
-    bench("hotpath/rebalance_interleaved", 10_000, || {
+    println!("\n=== allocating wrapper (fresh workspace + trace per call), for the ratio ===");
+    bench("hotpath/sim_1f1b_alloc_wrapper", iters(200), || {
+        simulate(std::hint::black_box(&e), &s_1f1b, &layout)
+    });
+    bench("hotpath/sim_interleaved_rb_alloc_wrapper", iters(200), || {
+        simulate(std::hint::black_box(&e), &s_il_rb, &layout)
+    });
+
+    println!("\n=== grid construction (generators + transform, per lazy cell) ===");
+    bench("hotpath/gen_interleaved_p8_m64_v2", iters(20_000), || interleaved(p, m, 2));
+    bench("hotpath/gen_v_shaped_p8_m64", iters(2_000), || v_shaped(p, m));
+    bench("hotpath/rebalance_interleaved", iters(10_000), || {
         rebalance(std::hint::black_box(&s_il), None)
     });
 
-    println!("\n=== full paper grid through the parallel sweep driver ===");
-    bench("hotpath/sweep_paper_grid_140_cells", 5, || sweep(paper_grid(2), 0));
+    println!("\n=== full grids through the parallel sweep driver ===");
+    bench("hotpath/sweep_paper_grid_140_cells", iters(5), || sweep(paper_grid(2), 0));
+    let bounds_cells = bounds_grid(2).len();
+    bench(
+        &format!("hotpath/sweep_bounds_grid_{bounds_cells}_cells"),
+        iters(3),
+        || sweep(bounds_grid(2), 0),
+    );
 }

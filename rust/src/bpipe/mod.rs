@@ -22,7 +22,7 @@ pub mod rebalance;
 
 pub use layout::{pair_adjacent_layout, sequential_layout, Layout};
 pub use pairing::{acceptor_extra_stashes, bound, evictions_at, is_acceptor, is_evictor, partner};
-pub use rebalance::{derived_bound, rebalance};
+pub use rebalance::{bound_range, derived_bound, rebalance};
 
 use crate::schedule::{Schedule, ScheduleKind};
 

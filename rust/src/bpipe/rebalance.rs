@@ -49,6 +49,14 @@ pub fn derived_bound(base: &Schedule) -> u64 {
     k.max(2)
 }
 
+/// The feasible rebalance-bound range for a base schedule: from the
+/// derived pair-mean value down to 2 (one live + one incoming stash, the
+/// tightest the transform admits).  The sweep's bound-sensitivity grid
+/// walks this range high→low to trace the memory/stall frontier.
+pub fn bound_range(base: &Schedule) -> std::ops::RangeInclusive<u64> {
+    2..=derived_bound(base)
+}
+
 /// Rebalance `base` so every stage's own resident stash count stays ≤
 /// the bound at every op boundary, by inserting Evict/Load transfer ops
 /// keyed by `(mb, chunk)`.  `bound_override` defaults to
@@ -165,6 +173,44 @@ mod tests {
         for p in [2u64, 4, 8, 16] {
             let b = derived_bound(&one_f_one_b(p, 8 * p));
             assert_eq!(b, crate::model::memory::bpipe_bound(p), "p={p}");
+        }
+    }
+
+    #[test]
+    fn bound_range_spans_derived_down_to_two() {
+        let il = interleaved(8, 64, 2);
+        assert_eq!(bound_range(&il), 2..=16);
+        // every bound in the range produces a valid schedule
+        for k in bound_range(&il) {
+            validate(&rebalance(&il, Some(k))).unwrap_or_else(|e| panic!("k={k}: {e}"));
+        }
+    }
+
+    #[test]
+    fn every_family_validates_across_its_full_bound_range() {
+        // the bound-sensitivity sweep feeds rebalance(base, k) for every
+        // k in bound_range to the non-validating workspace hot path, so
+        // pin validity for ALL four base families here — including
+        // GPipe, whose all-Fwd-then-all-Bwd programs stress the
+        // late-load path hardest at tight bounds
+        let bases = [
+            one_f_one_b(8, 24),
+            gpipe(8, 24),
+            interleaved(8, 24, 2),
+            v_shaped(8, 24),
+        ];
+        for base in &bases {
+            for k in bound_range(base) {
+                let rb = rebalance(base, Some(k));
+                validate(&rb).unwrap_or_else(|e| panic!("{:?} k={k}: {e}", base.kind));
+                for s in 0..base.p {
+                    assert!(
+                        rb.program(s).stash_high_water() <= k as i64,
+                        "{:?} k={k} stage {s}",
+                        base.kind
+                    );
+                }
+            }
         }
     }
 

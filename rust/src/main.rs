@@ -7,7 +7,10 @@
 //!   Figure 2 (pair-adjacent layout);
 //! * `simulate`              — one experiment through the DES, full report;
 //! * `sweep`                 — the full experiment × schedule × layout
-//!   grid through the parallel sweep driver, ranked by MFU;
+//!   grid through the parallel sweep driver, ranked by MFU; `--bounds`
+//!   runs the bound × load_stall sensitivity grid (every rebalance bound
+//!   from derived down to the knee) and prints the per-scenario
+//!   frontier; `--csv`/`--json` export every cell;
 //! * `estimate`              — the §4 Eq. 4 estimator (analytic or from
 //!   real single-stage runtime measurements; the latter needs the `pjrt`
 //!   build feature);
@@ -40,8 +43,11 @@ COMMANDS:
   simulate  [--experiment 1..10 | --config f.cfg] [--bpipe true|false]
             [--timeline]                 simulate one experiment
   sweep     [--experiment 1..10] [--v N] [--threads N]
+            [--bounds] [--csv f.csv] [--json f.json]
                                          rank the experiment x schedule
-                                         x layout grid (parallel DES)
+                                         x layout grid (parallel DES);
+                                         --bounds sweeps every rebalance
+                                         bound down to the knee instead
   estimate  [--global-batch B --p P --from b:mfu --to b:mfu]
             [--runtime --artifacts DIR]  paper §4 Eq. 4 estimator
   memory    [--experiment 1..10]         per-stage memory profile
@@ -234,19 +240,35 @@ fn main() -> anyhow::Result<()> {
             }
         }
         "sweep" => {
-            let args = Args::parse(rest, &[])?;
+            let args = Args::parse(rest, &["bounds"])?;
             let v = args.get("v", 2u64)?;
             let threads = args.get("threads", 0usize)?;
-            let tasks = if let Some(id) = args.opt("experiment") {
-                sim::experiment_tasks(&experiment_or_exit(id.parse()?), v)
-            } else {
-                sim::paper_grid(v)
+            let bounds_mode = args.opt("bounds").is_some();
+            let tasks = match (bounds_mode, args.opt("experiment")) {
+                (false, Some(id)) => sim::experiment_tasks(&experiment_or_exit(id.parse()?), v),
+                (false, None) => sim::paper_grid(v),
+                (true, Some(id)) => {
+                    sim::bound_sensitivity_tasks(&experiment_or_exit(id.parse()?), v)
+                }
+                (true, None) => sim::bounds_grid(v),
             };
             let count = tasks.len();
             let t0 = std::time::Instant::now();
             let outcomes = sim::sweep(tasks, threads);
             let dt = t0.elapsed();
-            print!("{}", sim::render_sweep(&outcomes));
+            if bounds_mode {
+                print!("{}", sim::render_bound_frontier(&outcomes));
+            } else {
+                print!("{}", sim::render_sweep(&outcomes));
+            }
+            if let Some(path) = args.opt("csv") {
+                std::fs::write(path, sim::sweep_to_csv(&outcomes))?;
+                println!("wrote {} CSV rows to {path}", outcomes.len());
+            }
+            if let Some(path) = args.opt("json") {
+                std::fs::write(path, sim::sweep_to_json(&outcomes).to_string())?;
+                println!("wrote {} JSON records to {path}", outcomes.len());
+            }
             println!(
                 "\n{count} grid cells simulated in {:.2}s ({:.1} cells/s)",
                 dt.as_secs_f64(),

@@ -15,9 +15,7 @@
 //! Under 1F1B, stage `x` keeps up to `p − x` microbatch activation sets
 //! alive (paper §2.2); BPipe bounds every stage to `⌈(p+2)/2⌉`.
 
-use crate::config::{
-    AttentionMethod, ClusterConfig, ExperimentConfig, ModelConfig, ModelFamily, ParallelConfig,
-};
+use crate::config::{AttentionMethod, ExperimentConfig, ModelFamily};
 
 /// Mixed-precision Adam bytes per parameter (Megatron-LM layout).
 pub const BYTES_PER_PARAM: u64 = 18;
@@ -39,33 +37,29 @@ pub fn one_f_one_b_in_flight(p: u64, stage: u64, m: u64) -> u64 {
 }
 
 /// Per-device memory model for one experiment configuration.
-#[derive(Debug, Clone)]
-pub struct MemoryModel {
-    pub model: ModelConfig,
-    pub parallel: ParallelConfig,
-    pub cluster: ClusterConfig,
-    pub attention: AttentionMethod,
+///
+/// Borrows the config instead of cloning it so constructing one is free —
+/// the DES engine builds a `MemoryModel` per simulated sweep cell and must
+/// not touch the heap (see [`crate::sim::engine::SimWorkspace`]).
+#[derive(Debug, Clone, Copy)]
+pub struct MemoryModel<'a> {
+    pub e: &'a ExperimentConfig,
 }
 
-impl MemoryModel {
-    pub fn new(e: &ExperimentConfig) -> Self {
-        Self {
-            model: e.model.clone(),
-            parallel: e.parallel,
-            cluster: e.cluster,
-            attention: e.attention,
-        }
+impl<'a> MemoryModel<'a> {
+    pub fn new(e: &'a ExperimentConfig) -> Self {
+        Self { e }
     }
 
     /// Transformer layers owned by each pipeline stage.
     pub fn layers_per_stage(&self) -> u64 {
-        self.model.l / self.parallel.p
+        self.e.model.l / self.e.parallel.p
     }
 
     /// Parameters held by one device (one TP rank of one stage).
     pub fn params_per_device(&self, stage: u64) -> u64 {
-        let m = &self.model;
-        let t = self.parallel.t;
+        let m = &self.e.model;
+        let t = self.e.parallel.t;
         let per_layer = 12 * m.h * m.h + 13 * m.h;
         let mut params = self.layers_per_stage() * per_layer / t;
         if stage == 0 {
@@ -74,7 +68,7 @@ impl MemoryModel {
                 params += m.s * m.h / t; // learned positions
             }
         }
-        if stage == self.parallel.p - 1 {
+        if stage == self.e.parallel.p - 1 {
             params += m.v * m.h / t + m.h; // LM head + final norm
         }
         params
@@ -88,11 +82,11 @@ impl MemoryModel {
     /// Activation bytes one microbatch pins on one device of `stage`
     /// while it waits for its backward pass (the BPipe-evictable stash).
     pub fn activation_bytes_per_microbatch(&self, _stage: u64) -> u64 {
-        let m = &self.model;
-        let b = self.parallel.microbatch as f64;
-        let t = self.parallel.t as f64;
+        let m = &self.e.model;
+        let b = self.e.parallel.microbatch as f64;
+        let t = self.e.parallel.t as f64;
         let (s, h, a) = (m.s as f64, m.h as f64, m.a as f64);
-        let factor = match self.attention {
+        let factor = match self.e.attention {
             // full activations: keep the 5·a·s/h softmax/score term
             AttentionMethod::None => ACT_FACTOR_BASE + 5.0 * a * s / h,
             // selective recompute / flash: score tensor never stashed
@@ -105,13 +99,13 @@ impl MemoryModel {
     pub fn peak_bytes(&self, stage: u64, in_flight: u64) -> u64 {
         self.weight_opt_bytes(stage)
             + in_flight * self.activation_bytes_per_microbatch(stage)
-            + self.cluster.reserved_bytes
+            + self.e.cluster.reserved_bytes
     }
 
     /// Peak bytes at `stage` under plain 1F1B.
     pub fn peak_bytes_1f1b(&self, stage: u64) -> u64 {
-        let m = self.parallel.num_microbatches();
-        self.peak_bytes(stage, one_f_one_b_in_flight(self.parallel.p, stage, m))
+        let m = self.e.parallel.num_microbatches();
+        self.peak_bytes(stage, one_f_one_b_in_flight(self.e.parallel.p, stage, m))
     }
 
     /// Peak bytes at `stage` under BPipe.  An acceptor stage `p−1−x`
@@ -119,8 +113,8 @@ impl MemoryModel {
     /// `(p−x) − bound` of them, bringing both sides to ≤ the bound (the
     /// balancing property the technique is named for).
     pub fn peak_bytes_bpipe(&self, stage: u64) -> u64 {
-        let p = self.parallel.p;
-        let m = self.parallel.num_microbatches();
+        let p = self.e.parallel.p;
+        let m = self.e.parallel.num_microbatches();
         let natural = one_f_one_b_in_flight(p, stage, m);
         let bound = bpipe_bound(p).min(m);
         let partner = p - 1 - stage;
@@ -136,12 +130,12 @@ impl MemoryModel {
 
     /// Does the configuration fit on every device?
     pub fn fits(&self, bpipe: bool) -> bool {
-        self.max_peak_bytes(bpipe) <= self.cluster.hbm_bytes
+        self.max_peak_bytes(bpipe) <= self.e.cluster.hbm_bytes
     }
 
     /// Highest per-device peak across stages.
     pub fn max_peak_bytes(&self, bpipe: bool) -> u64 {
-        (0..self.parallel.p)
+        (0..self.e.parallel.p)
             .map(|s| {
                 if bpipe {
                     self.peak_bytes_bpipe(s)
@@ -156,7 +150,7 @@ impl MemoryModel {
     /// Per-stage peak memory profile (GiB), for the memory-imbalance
     /// example and reports.
     pub fn profile_gib(&self, bpipe: bool) -> Vec<f64> {
-        (0..self.parallel.p)
+        (0..self.e.parallel.p)
             .map(|s| {
                 let b = if bpipe {
                     self.peak_bytes_bpipe(s)

@@ -21,6 +21,29 @@ impl Table {
         self.rows.push(row);
     }
 
+    /// Render as RFC-4180-ish CSV: header row + data rows, fields quoted
+    /// only when they contain a comma, quote or newline.  The
+    /// machine-readable sibling of [`Table::render`] (sweep `--csv`).
+    pub fn render_csv(&self) -> String {
+        let field = |s: &str| -> String {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let line = |cells: &[String]| -> String {
+            cells.iter().map(|c| field(c)).collect::<Vec<_>>().join(",")
+        };
+        let mut out = line(&self.header);
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r));
+            out.push('\n');
+        }
+        out
+    }
+
     pub fn render(&self) -> String {
         let cols = self.header.len();
         let mut w = vec![0usize; cols];
@@ -122,6 +145,18 @@ mod tests {
         let lines: Vec<&str> = r.lines().collect();
         assert_eq!(lines.len(), 3);
         assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+    }
+
+    #[test]
+    fn table_renders_csv_with_quoting() {
+        let mut t = Table::new(&["a", "b"]);
+        t.push(vec!["plain".into(), "with,comma".into()]);
+        t.push(vec!["has \"quotes\"".into(), "x".into()]);
+        let csv = t.render_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "a,b");
+        assert_eq!(lines[1], "plain,\"with,comma\"");
+        assert_eq!(lines[2], "\"has \"\"quotes\"\"\",x");
     }
 
     #[test]

@@ -98,6 +98,52 @@ impl StageProgram {
     }
 }
 
+/// A schedule *family*: which generator to run — the lazy handle the
+/// sweep stores per grid cell instead of a materialized (cloned)
+/// [`Schedule`].  Building from the family on the worker thread keeps
+/// [`crate::sim::sweep::SweepTask`]s tiny and the grid construction
+/// allocation-light.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    OneFOneB,
+    GPipe,
+    /// Megatron interleaved-1F1B with `v` chunks per stage.
+    Interleaved { v: u64 },
+    VShaped,
+}
+
+impl Family {
+    /// Run the family's generator for `p` stages and `m` microbatches.
+    pub fn build(&self, p: u64, m: u64) -> Schedule {
+        match *self {
+            Family::OneFOneB => one_f_one_b(p, m),
+            Family::GPipe => gpipe(p, m),
+            Family::Interleaved { v } => interleaved(p, m, v),
+            Family::VShaped => v_shaped(p, m),
+        }
+    }
+
+    /// Display name (sweep-report scenario column).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Family::OneFOneB => "1F1B",
+            Family::GPipe => "GPipe",
+            Family::Interleaved { .. } => "interleaved",
+            Family::VShaped => "V-shaped",
+        }
+    }
+
+    /// Display name of the family composed with the rebalance transform.
+    pub fn rebalanced_label(&self) -> &'static str {
+        match self {
+            Family::OneFOneB => "1F1B+rebalance",
+            Family::GPipe => "GPipe+rebalance",
+            Family::Interleaved { .. } => "interleaved+rebalance",
+            Family::VShaped => "V-shaped+rebalance",
+        }
+    }
+}
+
 /// Which generator produced a schedule.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ScheduleKind {
@@ -162,6 +208,19 @@ mod tests {
     fn op_constructors() {
         assert_eq!(Op::fwd(3), Op { kind: OpKind::Fwd, mb: 3, chunk: 0 });
         assert_eq!(Op::evict(1).kind, OpKind::Evict);
+    }
+
+    #[test]
+    fn family_builds_every_generator() {
+        for fam in
+            [Family::OneFOneB, Family::GPipe, Family::Interleaved { v: 2 }, Family::VShaped]
+        {
+            let s = fam.build(4, 8);
+            validate(&s).unwrap_or_else(|e| panic!("{fam:?}: {e}"));
+            assert!(!fam.label().is_empty());
+            assert!(fam.rebalanced_label().ends_with("+rebalance"), "{fam:?}");
+        }
+        assert_eq!(Family::Interleaved { v: 3 }.build(4, 8).chunks, 3);
     }
 
     #[test]

@@ -107,14 +107,18 @@ impl StageTimes {
 }
 
 /// The calibrated cost model for one experiment configuration.
-#[derive(Debug, Clone)]
-pub struct CostModel {
-    pub e: ExperimentConfig,
+///
+/// Borrows the config instead of cloning it so constructing one is free —
+/// the sweep's inner loop builds a `CostModel` per simulated cell and must
+/// not touch the heap (see [`super::engine::SimWorkspace`]).
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel<'a> {
+    pub e: &'a ExperimentConfig,
 }
 
-impl CostModel {
-    pub fn new(e: &ExperimentConfig) -> Self {
-        Self { e: e.clone() }
+impl<'a> CostModel<'a> {
+    pub fn new(e: &'a ExperimentConfig) -> Self {
+        Self { e }
     }
 
     fn peak(&self) -> f64 {
@@ -291,7 +295,7 @@ impl CostModel {
     /// chunk stash holds only `1/chunks` of a stage's layers, so the
     /// payload (and hence the wire time) scales down with the chunk count.
     pub fn transfer_time_chunked(&self, intra_node: bool, chunks: u64) -> f64 {
-        let mm = crate::model::memory::MemoryModel::new(&self.e);
+        let mm = crate::model::memory::MemoryModel::new(self.e);
         let bytes = (mm.activation_bytes_per_microbatch(0) / chunks.max(1)) as f64;
         let bw = if intra_node {
             self.e.cluster.nvlink_bw * LINK_EFF
@@ -341,7 +345,8 @@ mod tests {
 
     #[test]
     fn gemm_eff_monotone_in_rows() {
-        let cm = CostModel::new(&paper_experiment(1).unwrap());
+        let e = paper_experiment(1).unwrap();
+        let cm = CostModel::new(&e);
         assert!(cm.gemm_eff(4096.0) > cm.gemm_eff(2048.0));
         assert!(cm.gemm_eff(2048.0) < GEMM_EFF_MAX);
     }
@@ -349,7 +354,8 @@ mod tests {
     #[test]
     fn bwd_slower_than_fwd() {
         for id in 1..=10 {
-            let cm = CostModel::new(&paper_experiment(id).unwrap());
+            let e = paper_experiment(id).unwrap();
+            let cm = CostModel::new(&e);
             let st = cm.stage_times(1);
             assert!(st.bwd > st.fwd, "exp {id}");
             assert!(st.bwd < 3.5 * st.fwd, "exp {id}");
@@ -358,7 +364,8 @@ mod tests {
 
     #[test]
     fn head_stage_slower_than_mid() {
-        let cm = CostModel::new(&paper_experiment(7).unwrap());
+        let e = paper_experiment(7).unwrap();
+        let cm = CostModel::new(&e);
         assert!(cm.stage_times(7).total() > cm.stage_times(3).total());
     }
 
@@ -388,7 +395,8 @@ mod tests {
     #[test]
     fn transfer_overlaps_under_compute() {
         // paper §2.2: intra-node transfer ≪ fwd/bwd compute time
-        let cm = CostModel::new(&paper_experiment(8).unwrap());
+        let e = paper_experiment(8).unwrap();
+        let cm = CostModel::new(&e);
         let st = cm.stage_times(1);
         assert!(cm.transfer_time(true) < st.fwd);
         // inter-node, it would NOT hide — the reason Figure 2 exists

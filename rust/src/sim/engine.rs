@@ -19,22 +19,38 @@
 //!
 //! Completion times are computed by Kahn topological order; the engine
 //! also tracks per-device stash residency over time (memory high-water,
-//! OOM detection) and per-stream busy time (bubble fraction).
+//! OOM detection, with allocations applied before frees at equal
+//! timestamps — conservative) and per-stream busy time (bubble fraction).
 //!
-//! ## Hot path
+//! ## Hot path: the zero-allocation workspace
 //!
-//! All dependency lookups go through a **dense precomputed index**
-//! (`stage × {Fwd,Bwd} × mb × chunk → node id`) instead of a `HashMap`,
-//! and link arbitration state is a dense per-link array — this is the
-//! inner loop of [`super::sweep`], which simulates the full
-//! schedule × bound × layout × experiment grid (see
-//! `benches/runtime_hotpath.rs`).
+//! The DES inner loop is the cost of every cell in [`super::sweep`]'s
+//! experiment × schedule × bound × layout grid, so all per-run state
+//! lives in a reusable [`SimWorkspace`] owned by each sweep worker:
+//!
+//! * dependency and reverse edges are flat **CSR arrays**
+//!   (`dep_off`/`dep_edges`, plus a counts→prefix-sum→fill counting sort
+//!   for the reverse direction) instead of per-node `Vec<Vec<usize>>`;
+//! * compute-op lookups go through a dense precomputed index
+//!   (`stage × {Fwd,Bwd} × mb × chunk → node id`) instead of a `HashMap`;
+//! * the ready-event `BinaryHeap`, per-link free-times, per-node
+//!   durations and the memory-event timeline are all workspace buffers
+//!   cleared (capacity kept) between runs;
+//! * trace collection is opt-in via [`SimOptions`] — steady-state sweep
+//!   cells allocate **nothing** after warm-up (pinned by the
+//!   counting-allocator test in `rust/tests/alloc_steady_state.rs`).
+//!
+//! [`SimWorkspace::run`] returns a heap-free [`SimStats`]; the
+//! convenience wrapper [`simulate`] materializes the classic
+//! [`SimResult`] (per-stage vectors + trace) from a throwaway workspace.
+//! All float orderings go through `f64::total_cmp`, so a NaN (degenerate
+//! zero-duration config) can never poison a comparator.
 
-use super::costmodel::CostModel;
+use super::costmodel::{CostModel, StageTimes};
 use crate::bpipe::{pairing, Layout};
 use crate::config::ExperimentConfig;
 use crate::model::{flops, memory::MemoryModel};
-use crate::schedule::{OpKind, Placement, Schedule};
+use crate::schedule::{Op, OpKind, Placement, Schedule};
 
 /// One executed op, for timeline rendering (paper Figure 1).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -91,376 +107,683 @@ pub fn trace_to_csv(trace: &[TraceEvent]) -> String {
     out
 }
 
-#[derive(Clone, Copy)]
-struct Node {
-    stage: usize,
-    idx: usize,
+/// Per-run output options: what the workspace collects beyond timings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SimOptions {
+    /// Collect the per-op [`TraceEvent`] timeline (Figure-1 renderer,
+    /// `--timeline`).  Sweep cells turn this off; the memory timeline is
+    /// always tracked (it feeds OOM detection) but lives in reused
+    /// workspace buffers either way.
+    pub trace: bool,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions { trace: true }
+    }
+}
+
+/// Heap-free summary of one simulated iteration — everything a sweep
+/// cell needs.  Per-stage vectors stay in the [`SimWorkspace`]
+/// (accessors: [`SimWorkspace::busy`], [`SimWorkspace::mem_high_water`],
+/// [`SimWorkspace::stash_high_water`], [`SimWorkspace::trace`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimStats {
+    pub makespan: f64,
+    pub mfu: f64,
+    pub bubble_fraction: f64,
+    /// max over stages of the per-stage peak device memory
+    pub peak_mem_bytes: u64,
+    /// max over stages of the per-stage peak resident stash count
+    pub peak_stash: i64,
+    pub oom_stage: Option<u64>,
+    pub load_stall: f64,
+    pub transfer_bytes: u64,
+}
+
+impl SimStats {
+    pub fn mfu_pct(&self) -> f64 {
+        self.mfu * 100.0
+    }
 }
 
 const NONE: u32 = u32::MAX;
 
-/// Dense `(stage, Fwd|Bwd, mb, chunk) → node id` index — the hot-path
-/// replacement for the old per-op `HashMap` (compute ops are unique per
-/// key by validation, so a flat array slot each suffices).
-struct ComputeIndex {
-    ids: Vec<u32>,
-    m: usize,
-    chunks: usize,
+/// Dense `(stage, Fwd|Bwd, mb, chunk) → node id` slot — the hot-path
+/// replacement for a per-op `HashMap` (compute ops are unique per key by
+/// validation, so a flat array slot each suffices).
+#[inline]
+fn cix_slot(stage: usize, kind: OpKind, mb: u64, chunk: u64, m: usize, chunks: usize) -> usize {
+    let k = match kind {
+        OpKind::Fwd => 0,
+        OpKind::Bwd => 1,
+        _ => unreachable!("only compute ops are indexed"),
+    };
+    ((stage * 2 + k) * m + mb as usize) * chunks + chunk as usize
 }
 
-impl ComputeIndex {
-    fn new(p: usize, m: usize, chunks: usize) -> Self {
-        ComputeIndex { ids: vec![NONE; p * 2 * m * chunks], m, chunks }
+/// Node id of a compute op that validation guarantees to exist.
+#[inline]
+fn cix_get(
+    cix: &[u32],
+    stage: usize,
+    kind: OpKind,
+    mb: u64,
+    chunk: u64,
+    m: usize,
+    chunks: usize,
+) -> u32 {
+    let id = cix[cix_slot(stage, kind, mb, chunk, m, chunks)];
+    debug_assert_ne!(id, NONE, "missing compute op in validated schedule");
+    id
+}
+
+/// Previous virtual-pipeline hop of chunk `chunk`'s forward dataflow at
+/// stage `s` (backward deps are the reverse of this path).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn fwd_dep(
+    cix: &[u32],
+    p: usize,
+    m: usize,
+    chunks: usize,
+    vshape: bool,
+    s: usize,
+    mb: u64,
+    chunk: u64,
+) -> Option<u32> {
+    if !vshape {
+        if s > 0 {
+            Some(cix_get(cix, s - 1, OpKind::Fwd, mb, chunk, m, chunks))
+        } else if chunk > 0 {
+            // interleaved wrap: chunk c at stage 0 consumes
+            // chunk c−1 at stage p−1
+            Some(cix_get(cix, p - 1, OpKind::Fwd, mb, chunk - 1, m, chunks))
+        } else {
+            None
+        }
+    } else if chunk == 0 {
+        if s > 0 {
+            Some(cix_get(cix, s - 1, OpKind::Fwd, mb, 0, m, chunks))
+        } else {
+            None
+        }
+    } else if s == p - 1 {
+        // V junction: chunk 1 starts where chunk 0 ends
+        Some(cix_get(cix, p - 1, OpKind::Fwd, mb, 0, m, chunks))
+    } else {
+        // chunk 1 flows p−1 → 0
+        Some(cix_get(cix, s + 1, OpKind::Fwd, mb, 1, m, chunks))
+    }
+}
+
+/// Downstream gradient source for `Bwd(s, mb, chunk)`.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn bwd_dep(
+    cix: &[u32],
+    p: usize,
+    m: usize,
+    chunks: usize,
+    vshape: bool,
+    s: usize,
+    mb: u64,
+    chunk: u64,
+) -> Option<u32> {
+    if !vshape {
+        if s + 1 < p {
+            Some(cix_get(cix, s + 1, OpKind::Bwd, mb, chunk, m, chunks))
+        } else if chunk + 1 < chunks as u64 {
+            // interleaved wrap: grad for chunk c at stage p−1
+            // comes from chunk c+1 at stage 0
+            Some(cix_get(cix, 0, OpKind::Bwd, mb, chunk + 1, m, chunks))
+        } else {
+            None
+        }
+    } else if chunk == 1 {
+        if s > 0 {
+            Some(cix_get(cix, s - 1, OpKind::Bwd, mb, 1, m, chunks))
+        } else {
+            None
+        }
+    } else if s + 1 < p {
+        Some(cix_get(cix, s + 1, OpKind::Bwd, mb, 0, m, chunks))
+    } else {
+        // V junction in reverse: chunk 0's grad at stage p−1 comes
+        // from chunk 1 at stage p−1
+        Some(cix_get(cix, p - 1, OpKind::Bwd, mb, 1, m, chunks))
+    }
+}
+
+/// `(ready_time, node id)` min-heap entry.  The total order goes through
+/// `f64::total_cmp` (never panics, NaN-safe) with the id as a
+/// deterministic tie-break.
+struct Ev(f64, u32);
+
+impl PartialEq for Ev {
+    fn eq(&self, other: &Self) -> bool {
+        // keep == consistent with the total_cmp-based Ord (a derived
+        // f64 == would disagree on -0.0/NaN and break the Eq contract)
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for Ev {}
+
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // min-heap: reverse on time, tie-break on id for determinism
+        other.0.total_cmp(&self.0).then(other.1.cmp(&self.1))
+    }
+}
+
+/// One stash-residency delta on one stage's memory timeline.
+#[derive(Debug, Clone, Copy)]
+struct MemEvent {
+    t: f64,
+    stage: u32,
+    delta: i32,
+}
+
+/// Reusable per-thread simulation arena: every buffer the DES needs,
+/// cleared (capacity kept) between runs so repeated [`SimWorkspace::run`]
+/// calls on same-shaped schedules perform **zero heap allocations**.
+///
+/// One workspace per sweep worker thread; a workspace is `Send` (all
+/// plain buffers) but deliberately not shared — each worker owns its own.
+#[derive(Default)]
+pub struct SimWorkspace {
+    // -- topology (rebuilt per run) --------------------------------------
+    /// stage → first node id (len p+1)
+    base: Vec<u32>,
+    /// node id → op (flattened programs, id order == program order)
+    ops: Vec<Op>,
+    /// node id → stage
+    stage_of: Vec<u32>,
+    /// dense compute index: `(stage, F|B, mb, chunk) → node id`
+    cix: Vec<u32>,
+    // -- CSR dependency edges (built in one walk: ids ascend, so the
+    // offsets come out sorted for free) and the counting-sorted reverse --
+    dep_off: Vec<u32>,
+    dep_edges: Vec<u32>,
+    rev_off: Vec<u32>,
+    rev_edges: Vec<u32>,
+    rev_cursor: Vec<u32>,
+    /// node id of the Load a Bwd waits on (`NONE` if its stash never left)
+    bwd_load_dep: Vec<u32>,
+    // per-stage walk scratch, keyed by `mb·chunks + chunk`
+    last_evict: Vec<u32>,
+    last_load: Vec<u32>,
+    // -- event-loop state -------------------------------------------------
+    indeg: Vec<u32>,
+    /// node id → duration (precomputed; the loop reads it twice per node)
+    dur: Vec<f64>,
+    start: Vec<f64>,
+    end: Vec<f64>,
+    heap: std::collections::BinaryHeap<Ev>,
+    /// dense per-link free-time: nvlink pair k < p, then IB uplink per node
+    link_free: Vec<f64>,
+    link_of: Vec<u32>,
+    intra: Vec<bool>,
+    stage_times: Vec<StageTimes>,
+    // -- aggregation ------------------------------------------------------
+    busy: Vec<f64>,
+    order: Vec<u32>,
+    trace: Vec<TraceEvent>,
+    events: Vec<MemEvent>,
+    cur: Vec<i64>,
+    stash_hw: Vec<i64>,
+    mem_hw: Vec<u64>,
+}
+
+impl SimWorkspace {
+    pub fn new() -> Self {
+        Self::default()
     }
 
-    #[inline]
-    fn slot(&self, stage: usize, kind: OpKind, mb: u64, chunk: u64) -> usize {
-        let k = match kind {
-            OpKind::Fwd => 0,
-            OpKind::Bwd => 1,
-            _ => unreachable!("only compute ops are indexed"),
-        };
-        ((stage * 2 + k) * self.m + mb as usize) * self.chunks + chunk as usize
+    /// Per-stage compute busy time of the last run (seconds).
+    pub fn busy(&self) -> &[f64] {
+        &self.busy
     }
 
-    #[inline]
-    fn set(&mut self, stage: usize, kind: OpKind, mb: u64, chunk: u64, id: u32) {
-        let s = self.slot(stage, kind, mb, chunk);
-        self.ids[s] = id;
+    /// Per-stage peak device memory of the last run (bytes).
+    pub fn mem_high_water(&self) -> &[u64] {
+        &self.mem_hw
     }
 
-    /// Node id of a compute op that validation guarantees to exist.
-    #[inline]
-    fn get(&self, stage: usize, kind: OpKind, mb: u64, chunk: u64) -> usize {
-        let id = self.ids[self.slot(stage, kind, mb, chunk)];
-        debug_assert_ne!(id, NONE, "missing compute op in validated schedule");
-        id as usize
+    /// Per-stage peak resident stash count of the last run.
+    pub fn stash_high_water(&self) -> &[i64] {
+        &self.stash_hw
+    }
+
+    /// Executed-op timeline of the last run (empty unless
+    /// `SimOptions::trace` was set).
+    pub fn trace(&self) -> &[TraceEvent] {
+        &self.trace
+    }
+
+    /// Materialize the last run's full [`SimResult`] (allocates — the
+    /// sweep reads [`SimStats`] + slices instead).
+    pub fn to_result(&self, stats: &SimStats) -> SimResult {
+        SimResult {
+            makespan: stats.makespan,
+            mfu: stats.mfu,
+            busy: self.busy.clone(),
+            bubble_fraction: stats.bubble_fraction,
+            mem_high_water: self.mem_hw.clone(),
+            stash_high_water: self.stash_hw.clone(),
+            oom_stage: stats.oom_stage,
+            load_stall: stats.load_stall,
+            transfer_bytes: stats.transfer_bytes,
+            trace: self.trace.clone(),
+        }
+    }
+
+    /// Simulate one iteration of `schedule` for experiment `e` on
+    /// `layout`, reusing this workspace's buffers.  Deterministic: the
+    /// same inputs produce bit-identical stats regardless of what ran in
+    /// the workspace before.
+    ///
+    /// The hot path trusts its (generator-produced, test-validated)
+    /// schedules and does NOT re-validate — validation allocates, and
+    /// this loop must not.  A malformed schedule cannot hang the engine
+    /// but will panic: a dependency cycle trips the Kahn-completeness
+    /// assert, a Load whose key was never evicted trips a labeled
+    /// assert, and other structural violations (e.g. a Bwd with no
+    /// matching Fwd) can surface as an unspecific index-out-of-bounds.
+    /// Callers holding untrusted schedules should use the [`simulate`]
+    /// wrapper, which always runs the full validator first.
+    pub fn run(
+        &mut self,
+        e: &ExperimentConfig,
+        schedule: &Schedule,
+        layout: &Layout,
+        opts: SimOptions,
+    ) -> SimStats {
+        let cm = CostModel::new(e);
+        let mm = MemoryModel::new(e);
+        let p = schedule.p as usize;
+        let m = schedule.m as usize;
+        let chunks = schedule.chunks.max(1) as usize;
+        let vshape = schedule.placement == Placement::VShape;
+
+        // -- flatten: global node ids + dense compute index ---------------
+        self.base.clear();
+        self.base.push(0);
+        self.ops.clear();
+        self.stage_of.clear();
+        for s in 0..p {
+            for op in &schedule.programs[s].ops {
+                self.ops.push(*op);
+                self.stage_of.push(s as u32);
+            }
+            self.base.push(self.ops.len() as u32);
+        }
+        let n = self.ops.len();
+
+        self.cix.clear();
+        self.cix.resize(p * 2 * m * chunks, NONE);
+        for id in 0..n {
+            let op = self.ops[id];
+            if matches!(op.kind, OpKind::Fwd | OpKind::Bwd) {
+                let slot =
+                    cix_slot(self.stage_of[id] as usize, op.kind, op.mb, op.chunk, m, chunks);
+                self.cix[slot] = id as u32;
+            }
+        }
+
+        // -- dependency edges: one walk in id order fills the CSR
+        // directly (offsets ascend with the walk).  Evict/Load deps are
+        // walk-local: a key may be evicted and reloaded repeatedly, so
+        // each Load binds to the most recent Evict of its key and each
+        // Bwd to the most recent Load (dense per-key scratch, reset per
+        // stage).
+        self.dep_off.clear();
+        self.dep_edges.clear();
+        self.bwd_load_dep.clear();
+        self.bwd_load_dep.resize(n, NONE);
+        let key_count = m * chunks;
+        self.last_evict.clear();
+        self.last_evict.resize(key_count, NONE);
+        self.last_load.clear();
+        self.last_load.resize(key_count, NONE);
+        for s in 0..p {
+            let mut prev_compute = NONE;
+            self.last_evict.fill(NONE);
+            self.last_load.fill(NONE);
+            let lo = self.base[s] as usize;
+            let hi = self.base[s + 1] as usize;
+            for id in lo..hi {
+                self.dep_off.push(self.dep_edges.len() as u32);
+                let op = self.ops[id];
+                let key = op.mb as usize * chunks + op.chunk as usize;
+                match op.kind {
+                    OpKind::Fwd => {
+                        if prev_compute != NONE {
+                            self.dep_edges.push(prev_compute);
+                        }
+                        if let Some(d) =
+                            fwd_dep(&self.cix, p, m, chunks, vshape, s, op.mb, op.chunk)
+                        {
+                            self.dep_edges.push(d);
+                        }
+                        prev_compute = id as u32;
+                    }
+                    OpKind::Bwd => {
+                        if prev_compute != NONE {
+                            self.dep_edges.push(prev_compute);
+                        }
+                        self.dep_edges.push(cix_get(
+                            &self.cix,
+                            s,
+                            OpKind::Fwd,
+                            op.mb,
+                            op.chunk,
+                            m,
+                            chunks,
+                        ));
+                        if let Some(d) =
+                            bwd_dep(&self.cix, p, m, chunks, vshape, s, op.mb, op.chunk)
+                        {
+                            self.dep_edges.push(d);
+                        }
+                        if self.last_load[key] != NONE {
+                            self.dep_edges.push(self.last_load[key]);
+                            self.bwd_load_dep[id] = self.last_load[key];
+                        }
+                        prev_compute = id as u32;
+                    }
+                    OpKind::Evict | OpKind::Load => {
+                        // issue point: the op preceding it in program order
+                        if id > lo {
+                            self.dep_edges.push(id as u32 - 1);
+                        }
+                        if op.kind == OpKind::Load {
+                            let le = self.last_evict[key];
+                            assert_ne!(
+                                le, NONE,
+                                "Load of a stash that was never evicted (invalid schedule)"
+                            );
+                            self.dep_edges.push(le);
+                            self.last_load[key] = id as u32;
+                        } else {
+                            self.last_evict[key] = id as u32;
+                            self.last_load[key] = NONE;
+                        }
+                        // link arbitration is time-based (FCFS per link)
+                        // in the event loop below, not a static
+                        // dependency — static chaining of a *shared*
+                        // uplink across stages can create artificial
+                        // cycles.
+                    }
+                }
+            }
+        }
+        self.dep_off.push(self.dep_edges.len() as u32);
+
+        // -- reverse CSR: counts → prefix sum → counting-sort fill --------
+        self.indeg.clear();
+        self.indeg.resize(n, 0);
+        self.rev_off.clear();
+        self.rev_off.resize(n + 1, 0);
+        for &d in &self.dep_edges {
+            self.rev_off[d as usize + 1] += 1;
+        }
+        for i in 0..n {
+            self.rev_off[i + 1] += self.rev_off[i];
+        }
+        self.rev_cursor.clear();
+        self.rev_cursor.extend_from_slice(&self.rev_off[..n]);
+        self.rev_edges.clear();
+        self.rev_edges.resize(self.dep_edges.len(), 0);
+        for id in 0..n {
+            self.indeg[id] = self.dep_off[id + 1] - self.dep_off[id];
+            for ei in self.dep_off[id] as usize..self.dep_off[id + 1] as usize {
+                let d = self.dep_edges[ei] as usize;
+                let c = self.rev_cursor[d] as usize;
+                self.rev_edges[c] = id as u32;
+                self.rev_cursor[d] = c as u32 + 1;
+            }
+        }
+
+        // -- per-node durations -------------------------------------------
+        // interleaved/V chunks split a stage's layers `chunks` ways
+        self.stage_times.clear();
+        for s in 0..p {
+            self.stage_times.push(cm.stage_times(s as u64));
+        }
+        let chunk_scale = 1.0 / chunks as f64;
+        let t_intra = cm.transfer_time_chunked(true, chunks as u64);
+        let t_inter = cm.transfer_time_chunked(false, chunks as u64);
+        let n_nodes = layout.n_nodes as usize;
+        self.intra.clear();
+        self.link_of.clear();
+        for s in 0..p {
+            let intra = layout.pair_intra_node(p as u64, s as u64);
+            self.intra.push(intra);
+            self.link_of.push(if intra {
+                s.min(p - 1 - s) as u32
+            } else {
+                (p + layout.node_of(s as u64) as usize) as u32
+            });
+        }
+        self.dur.clear();
+        for id in 0..n {
+            let s = self.stage_of[id] as usize;
+            self.dur.push(match self.ops[id].kind {
+                OpKind::Fwd => self.stage_times[s].fwd * chunk_scale,
+                OpKind::Bwd => self.stage_times[s].bwd * chunk_scale,
+                OpKind::Evict | OpKind::Load => {
+                    if self.intra[s] {
+                        t_intra
+                    } else {
+                        t_inter
+                    }
+                }
+            });
+        }
+
+        // -- event-driven timing with FCFS link arbitration ---------------
+        // Ops become READY when all logical deps complete; compute ops
+        // start at their ready time (program-order deps already serialize
+        // the stage's compute stream); transfer ops additionally queue
+        // FCFS on their link.  Events are processed in ready-time order,
+        // which makes the link free-time bookkeeping causally consistent.
+        self.start.clear();
+        self.start.resize(n, 0.0);
+        self.end.clear();
+        self.end.resize(n, 0.0);
+        self.link_free.clear();
+        self.link_free.resize(p + n_nodes, 0.0);
+        self.heap.clear();
+        for id in 0..n {
+            if self.indeg[id] == 0 {
+                self.heap.push(Ev(0.0, id as u32));
+            }
+        }
+        let mut done = 0usize;
+        let mut load_stall = 0f64;
+        while let Some(Ev(ready, idu)) = self.heap.pop() {
+            done += 1;
+            let id = idu as usize;
+            let kind = self.ops[id].kind;
+            let t0 = match kind {
+                OpKind::Evict | OpKind::Load => {
+                    let l = self.link_of[self.stage_of[id] as usize] as usize;
+                    let s0 = ready.max(self.link_free[l]);
+                    self.link_free[l] = s0 + self.dur[id];
+                    s0
+                }
+                _ => ready,
+            };
+            self.start[id] = t0;
+            self.end[id] = t0 + self.dur[id];
+            if kind == OpKind::Bwd && self.bwd_load_dep[id] != NONE {
+                let load = self.bwd_load_dep[id];
+                let mut without = 0f64;
+                for ei in self.dep_off[id] as usize..self.dep_off[id + 1] as usize {
+                    let d = self.dep_edges[ei];
+                    if d != load {
+                        without = without.max(self.end[d as usize]);
+                    }
+                }
+                load_stall += (self.end[load as usize] - without).max(0.0);
+            }
+            for ei in self.rev_off[id] as usize..self.rev_off[id + 1] as usize {
+                let nxt = self.rev_edges[ei] as usize;
+                self.indeg[nxt] -= 1;
+                if self.indeg[nxt] == 0 {
+                    let mut r = 0f64;
+                    for dj in self.dep_off[nxt] as usize..self.dep_off[nxt + 1] as usize {
+                        r = r.max(self.end[self.dep_edges[dj] as usize]);
+                    }
+                    self.heap.push(Ev(r, nxt as u32));
+                }
+            }
+        }
+        assert_eq!(done, n, "dependency cycle in schedule DAG");
+
+        // -- aggregate -----------------------------------------------------
+        let mut makespan = 0f64;
+        for &t in &self.end {
+            makespan = makespan.max(t);
+        }
+        self.busy.clear();
+        self.busy.resize(p, 0.0);
+        for id in 0..n {
+            if matches!(self.ops[id].kind, OpKind::Fwd | OpKind::Bwd) {
+                self.busy[self.stage_of[id] as usize] += self.end[id] - self.start[id];
+            }
+        }
+
+        self.trace.clear();
+        if opts.trace {
+            // stable-by-start order without a stable sort's scratch
+            // allocation: ids ascend initially, so (start, id) reproduces
+            // the program-order tie-break exactly
+            self.order.clear();
+            self.order.extend(0..n as u32);
+            let start = &self.start;
+            self.order.sort_unstable_by(|&a, &b| {
+                start[a as usize].total_cmp(&start[b as usize]).then(a.cmp(&b))
+            });
+            for &idu in &self.order {
+                let id = idu as usize;
+                let op = self.ops[id];
+                self.trace.push(TraceEvent {
+                    stage: self.stage_of[id] as u64,
+                    kind: op.kind,
+                    mb: op.mb,
+                    chunk: op.chunk,
+                    start: self.start[id],
+                    end: self.end[id],
+                });
+            }
+        }
+
+        // -- memory timeline ----------------------------------------------
+        // a stash of a chunked schedule holds only 1/chunks of the
+        // stage's layers, so stash (and transfer) bytes scale by the
+        // chunk count
+        let act = mm.activation_bytes_per_microbatch(0) / chunks as u64;
+        self.events.clear();
+        for id in 0..n {
+            let s = self.stage_of[id];
+            let partner = pairing::partner(p as u64, s as u64) as u32;
+            match self.ops[id].kind {
+                OpKind::Fwd => self.events.push(MemEvent { t: self.end[id], stage: s, delta: 1 }),
+                OpKind::Bwd => self.events.push(MemEvent { t: self.end[id], stage: s, delta: -1 }),
+                OpKind::Evict => {
+                    // freed locally only once the transfer lands; acceptor
+                    // allocates at transfer start (conservative overlap)
+                    self.events.push(MemEvent { t: self.end[id], stage: s, delta: -1 });
+                    self.events.push(MemEvent { t: self.start[id], stage: partner, delta: 1 });
+                }
+                OpKind::Load => {
+                    self.events.push(MemEvent { t: self.start[id], stage: s, delta: 1 });
+                    self.events.push(MemEvent { t: self.end[id], stage: partner, delta: -1 });
+                }
+            }
+        }
+        // allocations apply before frees at equal timestamps, so a load
+        // starting exactly when a backward retires (or an evict lands)
+        // counts both stashes resident — conservative peak accounting
+        self.events.sort_unstable_by(|a, b| a.t.total_cmp(&b.t).then(b.delta.cmp(&a.delta)));
+        self.cur.clear();
+        self.cur.resize(p, 0);
+        self.stash_hw.clear();
+        self.stash_hw.resize(p, 0);
+        for ev in &self.events {
+            let s = ev.stage as usize;
+            self.cur[s] += ev.delta as i64;
+            self.stash_hw[s] = self.stash_hw[s].max(self.cur[s]);
+        }
+        self.mem_hw.clear();
+        for s in 0..p {
+            self.mem_hw.push(
+                mm.weight_opt_bytes(s as u64)
+                    + e.cluster.reserved_bytes
+                    + self.stash_hw[s] as u64 * act,
+            );
+        }
+
+        let mut oom_stage = None;
+        let mut peak_mem = 0u64;
+        let mut peak_stash = 0i64;
+        for s in 0..p {
+            if oom_stage.is_none() && self.mem_hw[s] > e.cluster.hbm_bytes {
+                oom_stage = Some(s as u64);
+            }
+            peak_mem = peak_mem.max(self.mem_hw[s]);
+            peak_stash = peak_stash.max(self.stash_hw[s]);
+        }
+
+        let mut transfers = 0u64;
+        for op in &self.ops {
+            if matches!(op.kind, OpKind::Evict | OpKind::Load) {
+                transfers += 1;
+            }
+        }
+
+        let model_flops = flops::model_flops_per_iteration(&e.model, e.parallel.global_batch);
+        let devices = e.parallel.devices() as f64;
+        let mfu = model_flops / (devices * e.cluster.peak_flops * makespan);
+        let mut mean_busy = 0f64;
+        for &b in &self.busy {
+            mean_busy += b;
+        }
+        let mean_busy = mean_busy / p as f64;
+
+        SimStats {
+            makespan,
+            mfu,
+            bubble_fraction: 1.0 - mean_busy / makespan,
+            peak_mem_bytes: peak_mem,
+            peak_stash,
+            oom_stage,
+            load_stall,
+            transfer_bytes: transfers * act,
+        }
     }
 }
 
 /// Simulate one iteration of `schedule` for experiment `e` on `layout`.
+///
+/// Convenience wrapper: validates, runs a throwaway [`SimWorkspace`]
+/// with trace collection on, and materializes the full [`SimResult`].
+/// Sweep-style callers that simulate many cells should hold a workspace
+/// and call [`SimWorkspace::run`] instead.
 pub fn simulate(e: &ExperimentConfig, schedule: &Schedule, layout: &Layout) -> SimResult {
     crate::schedule::validate(schedule).expect("refusing to simulate an invalid schedule");
-    let cm = CostModel::new(e);
-    let mm = MemoryModel::new(e);
-    let p = schedule.p as usize;
-    let m = schedule.m as usize;
-    let chunks = schedule.chunks.max(1) as usize;
-    let vshape = schedule.placement == Placement::VShape;
-
-    // -- global node ids ---------------------------------------------------
-    let mut base = vec![0usize; p + 1];
-    for s in 0..p {
-        base[s + 1] = base[s] + schedule.programs[s].ops.len();
-    }
-    let n = base[p];
-    let nodes: Vec<Node> = (0..p)
-        .flat_map(|s| (0..schedule.programs[s].ops.len()).map(move |idx| Node { stage: s, idx }))
-        .collect();
-
-    // dense compute-op index (hot path: no hashing)
-    let mut cix = ComputeIndex::new(p, m, chunks);
-    for (id, nd) in nodes.iter().enumerate() {
-        let op = schedule.programs[nd.stage].ops[nd.idx];
-        if matches!(op.kind, OpKind::Fwd | OpKind::Bwd) {
-            cix.set(nd.stage, op.kind, op.mb, op.chunk, id as u32);
-        }
-    }
-
-    // previous virtual-pipeline hop of chunk `c`'s forward dataflow at
-    // stage `s` (backward deps are the reverse of this path)
-    let fwd_dep = |s: usize, mb: u64, chunk: u64| -> Option<usize> {
-        if !vshape {
-            if s > 0 {
-                Some(cix.get(s - 1, OpKind::Fwd, mb, chunk))
-            } else if chunk > 0 {
-                // interleaved wrap: chunk c at stage 0 consumes
-                // chunk c−1 at stage p−1
-                Some(cix.get(p - 1, OpKind::Fwd, mb, chunk - 1))
-            } else {
-                None
-            }
-        } else if chunk == 0 {
-            if s > 0 { Some(cix.get(s - 1, OpKind::Fwd, mb, 0)) } else { None }
-        } else if s == p - 1 {
-            // V junction: chunk 1 starts where chunk 0 ends
-            Some(cix.get(p - 1, OpKind::Fwd, mb, 0))
-        } else {
-            // chunk 1 flows p−1 → 0
-            Some(cix.get(s + 1, OpKind::Fwd, mb, 1))
-        }
-    };
-    let bwd_dep = |s: usize, mb: u64, chunk: u64| -> Option<usize> {
-        if !vshape {
-            if s + 1 < p {
-                Some(cix.get(s + 1, OpKind::Bwd, mb, chunk))
-            } else if chunk + 1 < chunks as u64 {
-                // interleaved wrap: grad for chunk c at stage p−1
-                // comes from chunk c+1 at stage 0
-                Some(cix.get(0, OpKind::Bwd, mb, chunk + 1))
-            } else {
-                None
-            }
-        } else if chunk == 1 {
-            if s > 0 { Some(cix.get(s - 1, OpKind::Bwd, mb, 1)) } else { None }
-        } else if s + 1 < p {
-            Some(cix.get(s + 1, OpKind::Bwd, mb, 0))
-        } else {
-            // V junction in reverse: chunk 0's grad at stage p−1 comes
-            // from chunk 1 at stage p−1
-            Some(cix.get(p - 1, OpKind::Bwd, mb, 1))
-        }
-    };
-
-    // -- dependency edges ---------------------------------------------------
-    // Evict/Load deps are walk-local: a key may be evicted and reloaded
-    // repeatedly, so each Load binds to the most recent Evict of its key
-    // and each Bwd to the most recent Load (dense per-key scratch, reset
-    // per stage).
-    let mut deps: Vec<Vec<usize>> = vec![Vec::with_capacity(3); n];
-    let mut bwd_load_dep: Vec<u32> = vec![NONE; n];
-    let mut prev_compute: Option<usize>;
-    let key_count = m * chunks;
-    let mut last_evict = vec![NONE; key_count];
-    let mut last_load = vec![NONE; key_count];
-    for s in 0..p {
-        prev_compute = None;
-        last_evict.fill(NONE);
-        last_load.fill(NONE);
-        for (idx, op) in schedule.programs[s].ops.iter().enumerate() {
-            let id = base[s] + idx;
-            let key = op.mb as usize * chunks + op.chunk as usize;
-            match op.kind {
-                OpKind::Fwd => {
-                    if let Some(prev) = prev_compute {
-                        deps[id].push(prev);
-                    }
-                    if let Some(d) = fwd_dep(s, op.mb, op.chunk) {
-                        deps[id].push(d);
-                    }
-                    prev_compute = Some(id);
-                }
-                OpKind::Bwd => {
-                    if let Some(prev) = prev_compute {
-                        deps[id].push(prev);
-                    }
-                    deps[id].push(cix.get(s, OpKind::Fwd, op.mb, op.chunk));
-                    if let Some(d) = bwd_dep(s, op.mb, op.chunk) {
-                        deps[id].push(d);
-                    }
-                    if last_load[key] != NONE {
-                        deps[id].push(last_load[key] as usize);
-                        bwd_load_dep[id] = last_load[key];
-                    }
-                    prev_compute = Some(id);
-                }
-                OpKind::Evict | OpKind::Load => {
-                    // issue point: the op preceding it in program order
-                    if idx > 0 {
-                        deps[id].push(base[s] + idx - 1);
-                    }
-                    if op.kind == OpKind::Load {
-                        deps[id].push(last_evict[key] as usize);
-                        last_load[key] = id as u32;
-                    } else {
-                        last_evict[key] = id as u32;
-                        last_load[key] = NONE;
-                    }
-                    // link arbitration is time-based (FCFS per link) in
-                    // the event loop below, not a static dependency —
-                    // static chaining of a *shared* uplink across stages
-                    // can create artificial cycles.
-                }
-            }
-        }
-    }
-
-    // -- durations ----------------------------------------------------------
-    let stage_times: Vec<_> = (0..p).map(|s| cm.stage_times(s as u64)).collect();
-    // interleaved/V chunks split a stage's layers `chunks` ways
-    let chunk_scale = 1.0 / chunks as f64;
-    let dur = |nd: &Node| -> f64 {
-        let op = schedule.programs[nd.stage].ops[nd.idx];
-        match op.kind {
-            OpKind::Fwd => stage_times[nd.stage].fwd * chunk_scale,
-            OpKind::Bwd => stage_times[nd.stage].bwd * chunk_scale,
-            OpKind::Evict | OpKind::Load => {
-                let intra = layout.pair_intra_node(p as u64, nd.stage as u64);
-                cm.transfer_time_chunked(intra, chunks as u64)
-            }
-        }
-    };
-
-    // -- event-driven timing with FCFS link arbitration ----------------------
-    // Ops become READY when all logical deps complete; compute ops start
-    // at their ready time (program-order deps already serialize the
-    // stage's compute stream); transfer ops additionally queue FCFS on
-    // their link.  Events are processed in ready-time order, which makes
-    // the link free-time bookkeeping causally consistent.
-    let mut indeg = vec![0usize; n];
-    let mut rev: Vec<Vec<usize>> = vec![Vec::new(); n];
-    for (id, ds) in deps.iter().enumerate() {
-        indeg[id] = ds.len();
-        for &d in ds {
-            rev[d].push(id);
-        }
-    }
-    let mut start = vec![0f64; n];
-    let mut end = vec![0f64; n];
-    // BinaryHeap over (ready_time, id); f64 wrapped for total order
-    #[derive(PartialEq)]
-    struct Ev(f64, usize);
-    impl Eq for Ev {}
-    impl PartialOrd for Ev {
-        fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-            Some(self.cmp(other))
-        }
-    }
-    impl Ord for Ev {
-        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-            // min-heap: reverse on time, tie-break on id for determinism
-            other
-                .0
-                .partial_cmp(&self.0)
-                .unwrap()
-                .then(other.1.cmp(&self.1))
-        }
-    }
-    let mut heap: std::collections::BinaryHeap<Ev> = (0..n)
-        .filter(|&i| indeg[i] == 0)
-        .map(|i| Ev(0.0, i))
-        .collect();
-    // dense per-link free-time: nvlink pair k < p, then IB uplink per node
-    let n_nodes = layout.n_nodes as usize;
-    let mut link_free = vec![0f64; p + n_nodes];
-    let link_of = |stage: usize| -> usize {
-        if layout.pair_intra_node(p as u64, stage as u64) {
-            stage.min(p - 1 - stage)
-        } else {
-            p + layout.node_of(stage as u64) as usize
-        }
-    };
-    let mut done = 0usize;
-    let mut load_stall = 0f64;
-    while let Some(Ev(ready, id)) = heap.pop() {
-        done += 1;
-        let nd = nodes[id];
-        let op = schedule.programs[nd.stage].ops[nd.idx];
-        let t0 = match op.kind {
-            OpKind::Evict | OpKind::Load => {
-                let free = &mut link_free[link_of(nd.stage)];
-                let s = ready.max(*free);
-                *free = s + dur(&nd);
-                s
-            }
-            _ => ready,
-        };
-        start[id] = t0;
-        end[id] = t0 + dur(&nd);
-        if op.kind == OpKind::Bwd && bwd_load_dep[id] != NONE {
-            let load = bwd_load_dep[id] as usize;
-            let without: f64 = deps[id]
-                .iter()
-                .filter(|&&d| d != load)
-                .map(|&d| end[d])
-                .fold(0f64, f64::max);
-            load_stall += (end[load] - without).max(0.0);
-        }
-        for &nxt in &rev[id] {
-            indeg[nxt] -= 1;
-            if indeg[nxt] == 0 {
-                let r = deps[nxt].iter().map(|&d| end[d]).fold(0f64, f64::max);
-                heap.push(Ev(r, nxt));
-            }
-        }
-    }
-    assert_eq!(done, n, "dependency cycle in schedule DAG");
-
-    // -- aggregate ------------------------------------------------------------
-    let makespan = end.iter().cloned().fold(0f64, f64::max);
-    let mut busy = vec![0f64; p];
-    let mut trace = Vec::with_capacity(n);
-    for (id, nd) in nodes.iter().enumerate() {
-        let op = schedule.programs[nd.stage].ops[nd.idx];
-        if matches!(op.kind, OpKind::Fwd | OpKind::Bwd) {
-            busy[nd.stage] += end[id] - start[id];
-        }
-        trace.push(TraceEvent {
-            stage: nd.stage as u64,
-            kind: op.kind,
-            mb: op.mb,
-            chunk: op.chunk,
-            start: start[id],
-            end: end[id],
-        });
-    }
-    trace.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
-
-    // -- memory timeline -------------------------------------------------------
-    // events: (time, stage, delta_stashes); a stash of a chunked schedule
-    // holds only 1/chunks of the stage's layers, so stash (and transfer)
-    // bytes scale by the chunk count
-    let act = mm.activation_bytes_per_microbatch(0) / chunks as u64;
-    let mut events: Vec<(f64, usize, i64)> = Vec::new();
-    for (id, nd) in nodes.iter().enumerate() {
-        let op = schedule.programs[nd.stage].ops[nd.idx];
-        let partner = pairing::partner(p as u64, nd.stage as u64) as usize;
-        match op.kind {
-            OpKind::Fwd => events.push((end[id], nd.stage, 1)),
-            OpKind::Bwd => events.push((end[id], nd.stage, -1)),
-            OpKind::Evict => {
-                // freed locally only once the transfer lands; acceptor
-                // allocates at transfer start (conservative overlap)
-                events.push((end[id], nd.stage, -1));
-                events.push((start[id], partner, 1));
-            }
-            OpKind::Load => {
-                events.push((start[id], nd.stage, 1));
-                events.push((end[id], partner, -1));
-            }
-        }
-    }
-    events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.2.cmp(&b.2)));
-    let mut cur = vec![0i64; p];
-    let mut hw = vec![0i64; p];
-    for (_, s, d) in events {
-        cur[s] += d;
-        hw[s] = hw[s].max(cur[s]);
-    }
-    let mem_high_water: Vec<u64> = (0..p)
-        .map(|s| {
-            mm.weight_opt_bytes(s as u64) + e.cluster.reserved_bytes + hw[s] as u64 * act
-        })
-        .collect();
-    let oom_stage = mem_high_water
-        .iter()
-        .position(|&b| b > e.cluster.hbm_bytes)
-        .map(|s| s as u64);
-
-    let transfers = schedule
-        .programs
-        .iter()
-        .flat_map(|pr| pr.ops.iter())
-        .filter(|o| matches!(o.kind, OpKind::Evict | OpKind::Load))
-        .count() as u64;
-
-    let model_flops = flops::model_flops_per_iteration(&e.model, e.parallel.global_batch);
-    let devices = e.parallel.devices() as f64;
-    let mfu = model_flops / (devices * e.cluster.peak_flops * makespan);
-    let mean_busy: f64 = busy.iter().sum::<f64>() / p as f64;
-
-    SimResult {
-        makespan,
-        mfu,
-        bubble_fraction: 1.0 - mean_busy / makespan,
-        busy,
-        mem_high_water,
-        stash_high_water: hw,
-        oom_stage,
-        load_stall,
-        transfer_bytes: transfers * act,
-        trace,
-    }
+    let mut ws = SimWorkspace::new();
+    let stats = ws.run(e, schedule, layout, SimOptions { trace: true });
+    ws.to_result(&stats)
 }
 
 /// Build the schedule an experiment config implies (1F1B, +BPipe if
@@ -598,7 +921,8 @@ mod tests {
     fn rebalanced_interleaved_flattens_memory() {
         // the tentpole end-to-end: rebalance(interleaved) simulates, and
         // the derived bound flattens the 23..9 stash ramp to a uniform
-        // pair mean (16 per stage for p=8, m=64, v=2)
+        // pair mean (16 per stage for p=8, m=64, v=2; +1 transient slot
+        // from the conservative load/retire overlap accounting)
         let e = paper_experiment(8).unwrap();
         let m = e.parallel.num_microbatches();
         let layout = crate::bpipe::pair_adjacent_layout(e.parallel.p, e.cluster.n_nodes);
@@ -657,5 +981,47 @@ mod tests {
         let bound = derived_bound(&base);
         let r = simulate(&e, &rebalance(&base, Some(bound)), &layout);
         assert!(r.makespan > 0.0, "rebalanced V-shaped must execute");
+    }
+
+    #[test]
+    fn trace_collection_is_opt_in() {
+        let e = paper_experiment(8).unwrap();
+        let m = e.parallel.num_microbatches();
+        let layout = crate::bpipe::pair_adjacent_layout(e.parallel.p, e.cluster.n_nodes);
+        let sched = one_f_one_b(e.parallel.p, m);
+        let mut ws = SimWorkspace::new();
+        let with = ws.run(&e, &sched, &layout, SimOptions { trace: true });
+        assert_eq!(ws.trace().len(), sched.num_ops());
+        let without = ws.run(&e, &sched, &layout, SimOptions { trace: false });
+        assert!(ws.trace().is_empty(), "trace must be skipped when opted out");
+        // ... with identical stats either way
+        assert_eq!(with, without);
+    }
+
+    #[test]
+    fn workspace_reuse_matches_fresh_simulate() {
+        // one workspace across schedules of very different shapes must
+        // produce the same numbers as a fresh engine every time
+        let e = paper_experiment(8).unwrap();
+        let m = e.parallel.num_microbatches();
+        let layout = crate::bpipe::pair_adjacent_layout(e.parallel.p, e.cluster.n_nodes);
+        let scheds = [
+            one_f_one_b(e.parallel.p, m),
+            rebalance(&interleaved(e.parallel.p, m, 2), None),
+            gpipe(e.parallel.p, m),
+            v_shaped(e.parallel.p, m),
+            one_f_one_b(e.parallel.p, m),
+        ];
+        let mut ws = SimWorkspace::new();
+        for sched in &scheds {
+            let stats = ws.run(&e, sched, &layout, SimOptions { trace: true });
+            let fresh = simulate(&e, sched, &layout);
+            assert_eq!(stats.makespan, fresh.makespan);
+            assert_eq!(stats.load_stall, fresh.load_stall);
+            assert_eq!(ws.mem_high_water(), &fresh.mem_high_water[..]);
+            assert_eq!(ws.stash_high_water(), &fresh.stash_high_water[..]);
+            assert_eq!(ws.trace(), &fresh.trace[..]);
+            assert_eq!(ws.busy(), &fresh.busy[..]);
+        }
     }
 }

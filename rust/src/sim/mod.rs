@@ -2,20 +2,28 @@
 //!
 //! [`costmodel`] turns (model, parallelism, attention method) into per-op
 //! wall-clock times on a modeled A100; [`engine`] executes pipeline
-//! schedules against those times, tracking memory, bubbles, BPipe
-//! transfer overlap and MFU; [`sweep`] fans the full
-//! schedule × bound × layout × experiment grid out over a thread pool
-//! and ranks the outcomes.  Together they regenerate the paper's
-//! Tables 3/5 and Figures 1/2 at the paper's scale on one CPU — and
-//! answer the generalized question the paper stops short of: *which*
-//! schedule family wins once rebalancing composes with all of them.
+//! schedules against those times in a reusable zero-allocation
+//! [`SimWorkspace`] (flat CSR dependency edges, dense op index, opt-in
+//! trace), tracking memory, bubbles, BPipe transfer overlap and MFU;
+//! [`sweep`] fans the full schedule × bound × layout × experiment grid
+//! out over a thread pool — one workspace per worker — ranks the
+//! outcomes, and exports them as CSV/JSON.  Together they regenerate the
+//! paper's Tables 3/5 and Figures 1/2 at the paper's scale on one CPU —
+//! and answer the generalized questions the paper stops short of:
+//! *which* schedule family wins once rebalancing composes with all of
+//! them, and *how low can the bound go* before load stalls or acceptor
+//! overflow take the win back (the bound × load_stall frontier).
 
 pub mod costmodel;
 pub mod engine;
 pub mod sweep;
 
 pub use costmodel::{CostModel, SoftmaxKernel, StageTimes};
-pub use engine::{simulate, simulate_experiment, SimResult, TraceEvent};
+pub use engine::{
+    simulate, simulate_experiment, SimOptions, SimResult, SimStats, SimWorkspace, TraceEvent,
+};
 pub use sweep::{
-    experiment_tasks, paper_grid, render_sweep, scenarios, sweep, SweepOutcome, SweepTask,
+    bound_sensitivity_tasks, bounds_grid, experiment_tasks, paper_grid, render_bound_frontier,
+    render_sweep, scenario_specs, sweep, sweep_to_csv, sweep_to_json, ScenarioSpec, SweepOutcome,
+    SweepTask,
 };

@@ -2,40 +2,101 @@
 //!
 //! The paper answers "does memory rebalancing pay off?" for exactly one
 //! schedule (1F1B).  With [`crate::bpipe::rebalance`] schedule-agnostic,
-//! the interesting space is the grid
+//! the interesting spaces are two grids:
 //!
 //! ```text
 //! experiment (Table 3 rows) × schedule scenario × device layout
+//! experiment × rebalanceable family × bound (derived → 2) × layout
 //! ```
 //!
-//! where the scenarios cover the three memory-management families:
-//! imbalanced (1F1B, GPipe), anti-balanced virtual pipelines
-//! (interleaved), balanced-by-placement (V-shaped), each ± the
-//! rebalancing transform at its derived bound.
+//! The first ranks the scheduling families — imbalanced (1F1B, GPipe),
+//! anti-balanced virtual pipelines (interleaved), balanced-by-placement
+//! (V-shaped), each ± the rebalancing transform at its derived bound.
+//! The second ([`bounds_grid`], `bpipe sweep --bounds`) traces the
+//! **bound × load_stall sensitivity frontier**: for every scenario,
+//! rebalance at every bound from the derived value down to the
+//! infeasibility knee, showing where tighter memory starts costing
+//! stalls (and where the acceptor side OOMs) — ~2300 cells at paper
+//! scale, ~17× the ranking grid.
 //!
-//! [`sweep`] fans the grid out over a pool of OS threads (scoped; the
-//! build is offline, so no rayon — a work-stealing index over a shared
-//! task list gives the same shape), simulates every cell through the
-//! dense-index DES engine, and [`render_sweep`] emits one ranked report
-//! table: feasible cells sorted by MFU, infeasible (OOM) cells flagged
-//! at the bottom with the stage that burst.
+//! ## Execution model
 //!
-//! `bpipe sweep` on the CLI runs the whole grid in one command.
+//! A [`SweepTask`] is **lazy**: it carries a tiny [`ScenarioSpec`]
+//! (family + optional bound), not a materialized `Schedule` clone — the
+//! worker thread generates the schedule per cell.  [`sweep`] fans tasks
+//! out over scoped OS threads (the build is offline, so no rayon; a
+//! shared atomic index gives the same work-stealing shape).  Each worker
+//! owns one reusable [`SimWorkspace`], so steady-state cells run the DES
+//! with **zero heap allocation**; results land in indexed `OnceLock`
+//! slots (no `Mutex<Vec>` push, no reordering pass).
+//!
+//! [`render_sweep`] emits one ranked table (feasible cells by MFU, OOM
+//! cells flagged at the bottom); [`render_bound_frontier`] condenses the
+//! bounds grid per scenario; [`sweep_to_csv`] / [`sweep_to_json`] export
+//! every cell for external plotting (`--csv` / `--json`).
 
-use super::engine::simulate;
-use crate::bpipe::{pair_adjacent_layout, rebalance, sequential_layout, Layout};
+use super::engine::{SimOptions, SimWorkspace};
+use crate::bpipe::{bound_range, pair_adjacent_layout, sequential_layout, Layout};
 use crate::config::{paper_experiments, ExperimentConfig};
 use crate::report::Table;
-use crate::schedule::{gpipe, interleaved, one_f_one_b, v_shaped, Schedule};
+use crate::schedule::{Family, Schedule, ScheduleKind};
+use crate::util::Json;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, OnceLock};
 
-/// One cell of the sweep grid, before simulation.
+/// What to run in one cell, before the schedule exists: a generator
+/// family, optionally composed with the rebalance transform at a fixed
+/// or derived bound.  `Copy`-small on purpose — the grid holds thousands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScenarioSpec {
+    pub family: Family,
+    /// compose with [`crate::bpipe::rebalance`]?
+    pub rebalance: bool,
+    /// explicit rebalance bound; `None` = the derived pair-mean bound
+    pub bound: Option<u64>,
+}
+
+impl ScenarioSpec {
+    /// The family alone.
+    pub fn base(family: Family) -> Self {
+        ScenarioSpec { family, rebalance: false, bound: None }
+    }
+
+    /// The family composed with rebalancing (derived bound if `None`).
+    pub fn rebalanced(family: Family, bound: Option<u64>) -> Self {
+        ScenarioSpec { family, rebalance: true, bound }
+    }
+
+    /// Display name ("1F1B", "1F1B+rebalance", …) — derived so it can
+    /// never desync from the flags it labels.
+    pub fn name(&self) -> &'static str {
+        if self.rebalance {
+            self.family.rebalanced_label()
+        } else {
+            self.family.label()
+        }
+    }
+
+    /// Materialize the schedule this spec describes.
+    pub fn build(&self, p: u64, m: u64) -> Schedule {
+        let base = self.family.build(p, m);
+        if self.rebalance {
+            crate::bpipe::rebalance(&base, self.bound)
+        } else {
+            base
+        }
+    }
+}
+
+/// One cell of the sweep grid, before simulation.  The experiment config
+/// is shared (`Arc`) across all of one experiment's cells — with ~2.3k
+/// bounds-grid tasks, per-task deep clones would dominate grid
+/// construction.
 pub struct SweepTask {
-    pub experiment: ExperimentConfig,
-    pub scenario: &'static str,
+    pub experiment: Arc<ExperimentConfig>,
+    pub spec: ScenarioSpec,
     pub layout: Layout,
-    pub schedule: Schedule,
 }
 
 /// One simulated cell of the grid.
@@ -45,6 +106,8 @@ pub struct SweepOutcome {
     pub model: String,
     pub microbatch: u64,
     pub scenario: &'static str,
+    /// the rebalance bound actually applied (derived or explicit), if any
+    pub bound: Option<u64>,
     pub layout: &'static str,
     pub mfu_pct: f64,
     pub makespan: f64,
@@ -55,56 +118,84 @@ pub struct SweepOutcome {
     pub transfer_gib: f64,
 }
 
-/// The schedule scenarios swept for one experiment: the three scheduling
-/// families ± rebalancing (GPipe as the memory-worst-case baseline).
-pub fn scenarios(p: u64, m: u64, v: u64) -> Vec<(&'static str, Schedule)> {
-    let base_1f1b = one_f_one_b(p, m);
-    let base_il = interleaved(p, m, v);
-    let base_v = v_shaped(p, m);
+/// The seven schedule scenarios of the ranking grid: the three
+/// scheduling families ± rebalancing at the derived bound (GPipe as the
+/// memory-worst-case baseline).
+pub fn scenario_specs(v: u64) -> Vec<ScenarioSpec> {
     vec![
-        ("1F1B", base_1f1b.clone()),
-        ("1F1B+rebalance", rebalance(&base_1f1b, None)),
-        ("GPipe", gpipe(p, m)),
-        ("interleaved", base_il.clone()),
-        ("interleaved+rebalance", rebalance(&base_il, None)),
-        ("V-shaped", base_v.clone()),
-        ("V-shaped+rebalance", rebalance(&base_v, None)),
+        ScenarioSpec::base(Family::OneFOneB),
+        ScenarioSpec::rebalanced(Family::OneFOneB, None),
+        ScenarioSpec::base(Family::GPipe),
+        ScenarioSpec::base(Family::Interleaved { v }),
+        ScenarioSpec::rebalanced(Family::Interleaved { v }, None),
+        ScenarioSpec::base(Family::VShaped),
+        ScenarioSpec::rebalanced(Family::VShaped, None),
     ]
 }
 
-/// All sweep tasks for one experiment: every scenario × the
+/// All ranking-grid tasks for one experiment: every scenario × the
 /// {pair-adjacent, sequential} layouts — the one place the grid's inner
 /// dimensions are defined (paper_grid, the CLI and the tests all build
 /// on it).
 pub fn experiment_tasks(e: &ExperimentConfig, v: u64) -> Vec<SweepTask> {
     let p = e.parallel.p;
-    let m = e.parallel.num_microbatches();
+    let shared = Arc::new(e.clone());
     let mut tasks = Vec::new();
-    for (scenario, schedule) in scenarios(p, m, v) {
+    for spec in scenario_specs(v) {
         for layout in [
             pair_adjacent_layout(p, e.cluster.n_nodes),
             sequential_layout(p, e.cluster.n_nodes),
         ] {
-            tasks.push(SweepTask {
-                experiment: e.clone(),
-                scenario,
-                layout,
-                schedule: schedule.clone(),
-            });
+            tasks.push(SweepTask { experiment: Arc::clone(&shared), spec, layout });
         }
     }
     tasks
 }
 
-/// Build the full paper grid: every Table-3 experiment × every scenario ×
-/// {pair-adjacent, sequential} layout.
+/// Build the full ranking grid: every Table-3 experiment × every
+/// scenario × {pair-adjacent, sequential} layout.
 pub fn paper_grid(v: u64) -> Vec<SweepTask> {
     paper_experiments().iter().flat_map(|e| experiment_tasks(e, v)).collect()
 }
 
+/// Bound-sensitivity tasks for one experiment: every rebalanceable
+/// family (1F1B, GPipe, interleaved, V-shaped) at **every** bound from
+/// its derived pair-mean value down to the infeasibility knee (2, the
+/// smallest the transform admits: one live + one incoming stash), on
+/// both layouts.  Sweeping the whole range — instead of the single
+/// derived point — exposes the memory/throughput frontier: `load_stall`
+/// grows and the acceptor side eventually OOMs as the bound tightens.
+pub fn bound_sensitivity_tasks(e: &ExperimentConfig, v: u64) -> Vec<SweepTask> {
+    let p = e.parallel.p;
+    let m = e.parallel.num_microbatches();
+    let shared = Arc::new(e.clone());
+    let mut tasks = Vec::new();
+    for family in
+        [Family::OneFOneB, Family::GPipe, Family::Interleaved { v }, Family::VShaped]
+    {
+        for bound in bound_range(&family.build(p, m)).rev() {
+            let spec = ScenarioSpec::rebalanced(family, Some(bound));
+            for layout in [
+                pair_adjacent_layout(p, e.cluster.n_nodes),
+                sequential_layout(p, e.cluster.n_nodes),
+            ] {
+                tasks.push(SweepTask { experiment: Arc::clone(&shared), spec, layout });
+            }
+        }
+    }
+    tasks
+}
+
+/// The full bound-sensitivity grid over every Table-3 experiment
+/// (~2300 cells at paper scale; `bpipe sweep --bounds`).
+pub fn bounds_grid(v: u64) -> Vec<SweepTask> {
+    paper_experiments().iter().flat_map(|e| bound_sensitivity_tasks(e, v)).collect()
+}
+
 /// Simulate every task of the grid across `threads` OS threads (0 =
-/// auto).  Results come back in task order regardless of which worker
-/// ran them.
+/// auto).  Each worker owns one [`SimWorkspace`] (reused cell to cell)
+/// and writes into its task's indexed slot, so results come back in task
+/// order with no post-hoc sort.
 pub fn sweep(tasks: Vec<SweepTask>, threads: usize) -> Vec<SweepOutcome> {
     let threads = if threads == 0 {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
@@ -113,56 +204,71 @@ pub fn sweep(tasks: Vec<SweepTask>, threads: usize) -> Vec<SweepOutcome> {
     };
     let threads = threads.min(tasks.len().max(1));
     let next = AtomicUsize::new(0);
-    let results: Mutex<Vec<(usize, SweepOutcome)>> = Mutex::new(Vec::with_capacity(tasks.len()));
+    let slots: Vec<OnceLock<SweepOutcome>> = (0..tasks.len()).map(|_| OnceLock::new()).collect();
     let tasks_ref = &tasks;
+    let slots_ref = &slots;
     std::thread::scope(|scope| {
         for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= tasks_ref.len() {
-                    break;
+            scope.spawn(|| {
+                let mut ws = SimWorkspace::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= tasks_ref.len() {
+                        break;
+                    }
+                    let out = run_task_in(&mut ws, &tasks_ref[i]);
+                    let _ = slots_ref[i].set(out);
                 }
-                let t = &tasks_ref[i];
-                let out = run_task(t);
-                results.lock().unwrap().push((i, out));
             });
         }
     });
-    let mut results = results.into_inner().unwrap();
-    results.sort_by_key(|(i, _)| *i);
-    results.into_iter().map(|(_, o)| o).collect()
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().expect("every sweep slot is filled exactly once"))
+        .collect()
 }
 
-fn run_task(t: &SweepTask) -> SweepOutcome {
+/// Simulate one cell in the given workspace (the worker inner loop).
+fn run_task_in(ws: &mut SimWorkspace, t: &SweepTask) -> SweepOutcome {
     let gib = (1u64 << 30) as f64;
-    let r = simulate(&t.experiment, &t.schedule, &t.layout);
+    let p = t.experiment.parallel.p;
+    let m = t.experiment.parallel.num_microbatches();
+    let schedule = t.spec.build(p, m);
+    let stats = ws.run(&t.experiment, &schedule, &t.layout, SimOptions { trace: false });
+    let bound = match schedule.kind {
+        ScheduleKind::BPipe { bound } => Some(bound),
+        _ => None,
+    };
     SweepOutcome {
         exp_id: t.experiment.id,
         model: t.experiment.model.name.clone(),
         microbatch: t.experiment.parallel.microbatch,
-        scenario: t.scenario,
+        scenario: t.spec.name(),
+        bound,
         layout: t.layout.name,
-        mfu_pct: r.mfu_pct(),
-        makespan: r.makespan,
-        bubble_pct: r.bubble_fraction * 100.0,
-        peak_mem_gib: *r.mem_high_water.iter().max().unwrap() as f64 / gib,
-        oom_stage: r.oom_stage,
-        load_stall_ms: r.load_stall * 1e3,
-        transfer_gib: r.transfer_bytes as f64 / gib,
+        mfu_pct: stats.mfu_pct(),
+        makespan: stats.makespan,
+        bubble_pct: stats.bubble_fraction * 100.0,
+        peak_mem_gib: stats.peak_mem_bytes as f64 / gib,
+        oom_stage: stats.oom_stage,
+        load_stall_ms: stats.load_stall * 1e3,
+        transfer_gib: stats.transfer_bytes as f64 / gib,
     }
 }
 
 /// Render the grid as one ranked table: feasible cells by MFU
-/// (descending), then OOM cells flagged with the bursting stage.
+/// (descending), then OOM cells flagged with the bursting stage.  NaN
+/// MFUs (degenerate zero-makespan configs) order last among their
+/// feasibility class via `total_cmp`, never panicking the comparator.
 pub fn render_sweep(outcomes: &[SweepOutcome]) -> String {
     let mut ranked: Vec<&SweepOutcome> = outcomes.iter().collect();
     ranked.sort_by(|a, b| {
         (a.oom_stage.is_some())
             .cmp(&b.oom_stage.is_some())
-            .then(b.mfu_pct.partial_cmp(&a.mfu_pct).unwrap())
+            .then(b.mfu_pct.total_cmp(&a.mfu_pct))
     });
     let mut t = Table::new(&[
-        "rank", "exp", "model", "b", "scenario", "layout", "MFU %", "iter s", "bubble %",
+        "rank", "exp", "model", "b", "scenario", "k", "layout", "MFU %", "iter s", "bubble %",
         "peak GiB", "stall ms", "xfer GiB", "verdict",
     ]);
     for (rank, o) in ranked.iter().enumerate() {
@@ -176,6 +282,7 @@ pub fn render_sweep(outcomes: &[SweepOutcome]) -> String {
             o.model.clone(),
             o.microbatch.to_string(),
             o.scenario.to_string(),
+            o.bound.map(|k| k.to_string()).unwrap_or_else(|| "-".into()),
             o.layout.to_string(),
             format!("{:.1}", o.mfu_pct),
             format!("{:.2}", o.makespan),
@@ -189,6 +296,128 @@ pub fn render_sweep(outcomes: &[SweepOutcome]) -> String {
     t.render()
 }
 
+/// Condense a bounds grid into one frontier row per
+/// (experiment, scenario, layout): the swept bound range, the tightest
+/// bound that still fits, the knee (tightest bound within 0.5% of the
+/// group's best MFU), and the stall/memory cost at the extremes.
+pub fn render_bound_frontier(outcomes: &[SweepOutcome]) -> String {
+    // group by (experiment identity, scenario, layout), keeping cells
+    // sorted by bound desc; model + microbatch keep custom (id-less)
+    // experiment configs from collapsing into one group
+    type GroupKey<'a> = (Option<u32>, &'a str, u64, &'static str, &'static str);
+    let mut groups: BTreeMap<GroupKey<'_>, Vec<&SweepOutcome>> = BTreeMap::new();
+    for o in outcomes {
+        if o.bound.is_none() {
+            continue; // not a bound-sweep cell
+        }
+        groups
+            .entry((o.exp_id, o.model.as_str(), o.microbatch, o.scenario, o.layout))
+            .or_default()
+            .push(o);
+    }
+    let mut t = Table::new(&[
+        "exp", "model", "b", "scenario", "layout", "bounds", "fit ≥k", "knee k", "best k",
+        "best MFU %", "stall@knee ms", "peak@knee GiB",
+    ]);
+    for ((_, _, _, scenario, layout), mut cells) in groups {
+        cells.sort_by(|a, b| b.bound.cmp(&a.bound));
+        let hi = cells.first().and_then(|o| o.bound).unwrap_or(2);
+        let lo = cells.last().and_then(|o| o.bound).unwrap_or(2);
+        let fits: Vec<&&SweepOutcome> = cells.iter().filter(|o| o.oom_stage.is_none()).collect();
+        let min_fit = fits.iter().filter_map(|o| o.bound).min();
+        let best = fits
+            .iter()
+            .max_by(|a, b| a.mfu_pct.total_cmp(&b.mfu_pct).then(b.bound.cmp(&a.bound)));
+        let best_mfu = best.map(|o| o.mfu_pct).unwrap_or(f64::NAN);
+        let knee = fits
+            .iter()
+            .filter(|o| o.mfu_pct >= best_mfu * 0.995)
+            .filter_map(|o| o.bound)
+            .min();
+        let knee_cell = knee.and_then(|k| cells.iter().find(|o| o.bound == Some(k)));
+        let o0 = cells[0];
+        t.push(vec![
+            o0.exp_id.map(|i| format!("({i})")).unwrap_or_default(),
+            o0.model.clone(),
+            o0.microbatch.to_string(),
+            scenario.to_string(),
+            layout.to_string(),
+            format!("{hi}..{lo}"),
+            min_fit.map(|k| k.to_string()).unwrap_or_else(|| "never".into()),
+            knee.map(|k| k.to_string()).unwrap_or_else(|| "-".into()),
+            best.and_then(|o| o.bound).map(|k| k.to_string()).unwrap_or_else(|| "-".into()),
+            if best_mfu.is_finite() { format!("{best_mfu:.1}") } else { "-".into() },
+            knee_cell.map(|o| format!("{:.1}", o.load_stall_ms)).unwrap_or_else(|| "-".into()),
+            knee_cell.map(|o| format!("{:.1}", o.peak_mem_gib)).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t.render()
+}
+
+/// Export every cell as CSV (full precision, one row per outcome).
+/// Non-finite values become empty fields — the CSV cousin of the JSON
+/// writer's `null` (strict numeric consumers reject a literal "NaN").
+pub fn sweep_to_csv(outcomes: &[SweepOutcome]) -> String {
+    let num = |v: f64| if v.is_finite() { format!("{v}") } else { String::new() };
+    let mut t = Table::new(&[
+        "exp", "model", "microbatch", "scenario", "bound", "layout", "mfu_pct", "makespan_s",
+        "bubble_pct", "peak_mem_gib", "oom_stage", "load_stall_ms", "transfer_gib",
+    ]);
+    for o in outcomes {
+        t.push(vec![
+            o.exp_id.map(|i| i.to_string()).unwrap_or_default(),
+            o.model.clone(),
+            o.microbatch.to_string(),
+            o.scenario.to_string(),
+            o.bound.map(|k| k.to_string()).unwrap_or_default(),
+            o.layout.to_string(),
+            num(o.mfu_pct),
+            num(o.makespan),
+            num(o.bubble_pct),
+            num(o.peak_mem_gib),
+            o.oom_stage.map(|s| s.to_string()).unwrap_or_default(),
+            num(o.load_stall_ms),
+            num(o.transfer_gib),
+        ]);
+    }
+    t.render_csv()
+}
+
+/// Export every cell as a JSON array of objects (via [`crate::util::Json`]).
+pub fn sweep_to_json(outcomes: &[SweepOutcome]) -> Json {
+    Json::Arr(
+        outcomes
+            .iter()
+            .map(|o| {
+                Json::obj(vec![
+                    (
+                        "exp",
+                        o.exp_id.map(|i| Json::Num(i as f64)).unwrap_or(Json::Null),
+                    ),
+                    ("model", Json::str(&o.model)),
+                    ("microbatch", Json::Num(o.microbatch as f64)),
+                    ("scenario", Json::str(o.scenario)),
+                    (
+                        "bound",
+                        o.bound.map(|k| Json::Num(k as f64)).unwrap_or(Json::Null),
+                    ),
+                    ("layout", Json::str(o.layout)),
+                    ("mfu_pct", Json::Num(o.mfu_pct)),
+                    ("makespan_s", Json::Num(o.makespan)),
+                    ("bubble_pct", Json::Num(o.bubble_pct)),
+                    ("peak_mem_gib", Json::Num(o.peak_mem_gib)),
+                    (
+                        "oom_stage",
+                        o.oom_stage.map(|s| Json::Num(s as f64)).unwrap_or(Json::Null),
+                    ),
+                    ("load_stall_ms", Json::Num(o.load_stall_ms)),
+                    ("transfer_gib", Json::Num(o.transfer_gib)),
+                ])
+            })
+            .collect(),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -199,9 +428,14 @@ mod tests {
         experiment_tasks(&paper_experiment(8).unwrap(), 2)
     }
 
+    /// Simulate one cell with a throwaway workspace (serial reference).
+    fn run_task(t: &SweepTask) -> SweepOutcome {
+        run_task_in(&mut SimWorkspace::new(), t)
+    }
+
     #[test]
     fn parallel_sweep_matches_serial() {
-        let serial: Vec<f64> = small_grid().into_iter().map(|t| run_task(&t).mfu_pct).collect();
+        let serial: Vec<f64> = small_grid().iter().map(|t| run_task(t).mfu_pct).collect();
         let parallel: Vec<f64> = sweep(small_grid(), 4).into_iter().map(|o| o.mfu_pct).collect();
         assert_eq!(serial, parallel, "sweep must be deterministic and order-stable");
     }
@@ -215,6 +449,10 @@ mod tests {
             "V-shaped", "V-shaped+rebalance",
         ] {
             assert_eq!(outs.iter().filter(|o| o.scenario == scenario).count(), 2, "{scenario}");
+        }
+        // rebalanced cells report the bound that was applied
+        for o in &outs {
+            assert_eq!(o.bound.is_some(), o.scenario.ends_with("+rebalance"), "{}", o.scenario);
         }
     }
 
@@ -248,5 +486,80 @@ mod tests {
     fn paper_grid_is_full_size() {
         let tasks = paper_grid(2);
         assert_eq!(tasks.len(), 10 * 7 * 2);
+    }
+
+    #[test]
+    fn bounds_grid_is_ten_times_bigger() {
+        // the acceptance bar: ≥1000 bound-sensitivity cells, covering
+        // every bound from derived down to 2 for every family
+        let tasks = bounds_grid(2);
+        assert!(tasks.len() >= 1000, "only {} cells", tasks.len());
+        assert!(
+            tasks.len() >= 10 * paper_grid(2).len(),
+            "{} cells is not >=10x the {}-cell ranking grid",
+            tasks.len(),
+            paper_grid(2).len()
+        );
+        for t in &tasks {
+            assert!(t.spec.rebalance && t.spec.bound.unwrap() >= 2);
+        }
+        // every rebalanceable family contributes cells (dropping one —
+        // e.g. GPipe, the largest — would silently halve the grid)
+        for family in
+            [Family::OneFOneB, Family::GPipe, Family::Interleaved { v: 2 }, Family::VShaped]
+        {
+            assert!(
+                tasks.iter().any(|t| t.spec.family == family),
+                "{family:?} missing from the bounds grid"
+            );
+        }
+        // exp 8 interleaved v=2 derives bound 16 → bounds 16..2 × 2 layouts
+        let il2 = Family::Interleaved { v: 2 };
+        let e8_il: Vec<_> = tasks
+            .iter()
+            .filter(|t| t.experiment.id == Some(8) && t.spec.family == il2)
+            .collect();
+        assert_eq!(e8_il.len(), 15 * 2);
+    }
+
+    #[test]
+    fn bound_sensitivity_traces_the_stall_frontier() {
+        // one experiment end to end through the driver: tighter bounds on
+        // the sequential layout must (weakly) increase load stall, and
+        // the report + exports must carry the bound column
+        let e = paper_experiment(8).unwrap();
+        let tasks: Vec<SweepTask> = bound_sensitivity_tasks(&e, 2)
+            .into_iter()
+            .filter(|t| t.spec.family == Family::OneFOneB && t.layout.name == "sequential")
+            .collect();
+        let bounds: Vec<u64> = tasks.iter().map(|t| t.spec.bound.unwrap()).collect();
+        assert_eq!(bounds, vec![5, 4, 3, 2], "1F1B derives ⌈(p+2)/2⌉ = 5 at p=8");
+        let outs = sweep(tasks, 2);
+        let stall_hi = outs.first().unwrap().load_stall_ms; // bound 5
+        let stall_lo = outs.last().unwrap().load_stall_ms; // bound 2
+        assert!(
+            stall_lo > stall_hi,
+            "tightening 5→2 must add stall: {stall_hi:.1} → {stall_lo:.1} ms"
+        );
+        let frontier = render_bound_frontier(&outs);
+        assert!(frontier.contains("5..2"), "{frontier}");
+        let csv = sweep_to_csv(&outs);
+        assert!(csv.lines().count() == outs.len() + 1 && csv.contains("bound"));
+    }
+
+    #[test]
+    fn csv_and_json_exports_are_valid_and_complete() {
+        let outs = sweep(small_grid(), 0);
+        let csv = sweep_to_csv(&outs);
+        assert_eq!(csv.lines().count(), outs.len() + 1);
+        assert!(csv.starts_with("exp,model,microbatch,scenario,bound,layout,mfu_pct"));
+        let json = sweep_to_json(&outs);
+        let parsed = Json::parse(&json.to_string()).expect("export must be valid JSON");
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr.len(), outs.len());
+        let first = &arr[0];
+        assert_eq!(first.get("scenario").unwrap().as_str(), Some("1F1B"));
+        assert_eq!(first.get("exp").unwrap().as_u64(), Some(8));
+        assert!(first.get("mfu_pct").unwrap().as_f64().unwrap() > 0.0);
     }
 }

@@ -1,10 +1,17 @@
-//! Minimal JSON parser — enough for `artifacts/manifest.json`.
+//! Minimal JSON parser **and writer** — enough for
+//! `artifacts/manifest.json` and the sweep's `--json` export.
 //!
 //! Supports objects, arrays, strings (with \\-escapes), numbers, bools
 //! and null.  Strict enough to reject malformed documents; small enough
 //! to audit.  This is the rust half of the python→rust interchange
 //! contract (python/compile/aot.py writes the manifest with the standard
 //! library's `json.dumps`).
+//!
+//! Writing goes through [`Json`]'s `Display` impl: object keys are
+//! emitted in sorted order (deterministic output despite the `HashMap`
+//! storage), strings are escaped, and non-finite numbers serialize as
+//! `null` (JSON has no NaN/inf).  Every document the writer emits
+//! round-trips through [`Json::parse`].
 
 use std::collections::HashMap;
 use std::fmt;
@@ -93,6 +100,73 @@ impl Json {
                 None
             }
         })
+    }
+
+    /// Convenience constructor: an object from `(key, value)` pairs.
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Convenience constructor: a string value.
+    pub fn str(s: &str) -> Json {
+        Json::Str(s.to_string())
+    }
+}
+
+/// Escape a string into a JSON string literal (quotes included).
+fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    f.write_str("\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => f.write_str("\\\"")?,
+            '\\' => f.write_str("\\\\")?,
+            '\n' => f.write_str("\\n")?,
+            '\t' => f.write_str("\\t")?,
+            '\r' => f.write_str("\\r")?,
+            '\u{8}' => f.write_str("\\b")?,
+            '\u{c}' => f.write_str("\\f")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    f.write_str("\"")
+}
+
+impl fmt::Display for Json {
+    /// Compact JSON serialization; parseable by [`Json::parse`] (and any
+    /// other JSON parser).  Object keys are sorted for determinism.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => f.write_str("null"),
+            Json::Bool(b) => write!(f, "{b}"),
+            Json::Num(n) if !n.is_finite() => f.write_str("null"),
+            Json::Num(n) => write!(f, "{n}"),
+            Json::Str(s) => write_escaped(f, s),
+            Json::Arr(a) => {
+                f.write_str("[")?;
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                f.write_str("]")
+            }
+            Json::Obj(m) => {
+                let mut keys: Vec<&String> = m.keys().collect();
+                keys.sort();
+                f.write_str("{")?;
+                for (i, k) in keys.into_iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write_escaped(f, k)?;
+                    f.write_str(":")?;
+                    write!(f, "{}", m[k])?;
+                }
+                f.write_str("}")
+            }
+        }
     }
 }
 
@@ -319,6 +393,39 @@ mod tests {
         for bad in ["", "{", "[1,", "{\"a\" 1}", "tru", "1 2", "\"unterminated", "{,}"] {
             assert!(Json::parse(bad).is_err(), "{bad:?} should fail");
         }
+    }
+
+    #[test]
+    fn writer_round_trips_through_parser() {
+        let doc = Json::obj(vec![
+            ("name", Json::str("sweep \"cell\"\n")),
+            ("mfu", Json::Num(48.67321)),
+            ("oom", Json::Null),
+            ("fits", Json::Bool(true)),
+            ("hw", Json::Arr(vec![Json::Num(1.0), Json::Num(-2.5), Json::Num(0.0)])),
+        ]);
+        let text = doc.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), doc);
+    }
+
+    #[test]
+    fn writer_sorts_keys_deterministically() {
+        let doc = Json::obj(vec![("b", Json::Num(2.0)), ("a", Json::Num(1.0))]);
+        assert_eq!(doc.to_string(), r#"{"a":1,"b":2}"#);
+    }
+
+    #[test]
+    fn writer_maps_non_finite_to_null() {
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::Arr(vec![Json::Num(1.5)]).to_string(), "[1.5]");
+    }
+
+    #[test]
+    fn writer_escapes_control_characters() {
+        let s = Json::Str("a\u{1}b".into()).to_string();
+        assert_eq!(s, "\"a\\u0001b\"");
+        assert_eq!(Json::parse(&s).unwrap().as_str(), Some("a\u{1}b"));
     }
 
     #[test]

@@ -1,0 +1,120 @@
+//! Zero-allocation proof for the sweep hot path: after warm-up, repeated
+//! [`SimWorkspace::run`] calls must not touch the heap at all — that is
+//! the point of the CSR/arena rearchitecture (the seed engine allocated
+//! per-node `Vec<Vec<usize>>` edges, a fresh `BinaryHeap` and a full
+//! trace every cell).
+//!
+//! The proof is a thread-local counting `#[global_allocator]`: it counts
+//! this thread's `alloc`/`realloc`/`alloc_zeroed` calls (dealloc is
+//! free-side and irrelevant to "allocates nothing"), so other test
+//! threads can't pollute the measurement.  This lives in its own
+//! integration-test binary because a global allocator is process-wide.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+struct CountingAlloc;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(l)
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(p, l, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(l)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+use bpipe::bpipe::{pair_adjacent_layout, rebalance, sequential_layout};
+use bpipe::config::paper_experiment;
+use bpipe::schedule::{gpipe, interleaved, one_f_one_b, v_shaped};
+use bpipe::sim::{SimOptions, SimWorkspace};
+
+#[test]
+fn steady_state_sweep_cells_allocate_nothing() {
+    let e = paper_experiment(8).unwrap();
+    let p = e.parallel.p;
+    let m = e.parallel.num_microbatches();
+    let layouts = [
+        pair_adjacent_layout(p, e.cluster.n_nodes),
+        sequential_layout(p, e.cluster.n_nodes),
+    ];
+    // every schedule family the sweep simulates, including the largest
+    // (rebalanced interleaved) so warm-up reaches the high-water shape
+    let scheds = [
+        one_f_one_b(p, m),
+        rebalance(&one_f_one_b(p, m), None),
+        gpipe(p, m),
+        interleaved(p, m, 2),
+        rebalance(&interleaved(p, m, 2), None),
+        v_shaped(p, m),
+        rebalance(&v_shaped(p, m), None),
+    ];
+    let mut ws = SimWorkspace::new();
+    let opts = SimOptions { trace: false };
+
+    // warm-up: buffers grow to the largest shape in the working set
+    for s in &scheds {
+        for l in &layouts {
+            ws.run(&e, s, l, opts);
+        }
+    }
+
+    let before = allocs();
+    let mut sink = 0.0;
+    for _ in 0..3 {
+        for s in &scheds {
+            for l in &layouts {
+                let stats = ws.run(&e, s, l, opts);
+                sink += stats.makespan;
+            }
+        }
+    }
+    let after = allocs();
+    assert!(sink > 0.0, "cells must actually simulate");
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state sweep cells must perform zero heap allocations"
+    );
+}
+
+#[test]
+fn steady_state_trace_collection_reuses_its_buffer() {
+    let e = paper_experiment(8).unwrap();
+    let p = e.parallel.p;
+    let m = e.parallel.num_microbatches();
+    let layout = pair_adjacent_layout(p, e.cluster.n_nodes);
+    let sched = rebalance(&interleaved(p, m, 2), None);
+    let mut ws = SimWorkspace::new();
+    let opts = SimOptions { trace: true };
+    ws.run(&e, &sched, &layout, opts); // warm-up
+    let before = allocs();
+    for _ in 0..3 {
+        ws.run(&e, &sched, &layout, opts);
+    }
+    assert_eq!(allocs() - before, 0, "trace buffer must be reused across runs");
+    assert_eq!(ws.trace().len(), sched.num_ops());
+}

@@ -1,0 +1,237 @@
+//! Engine-equivalence goldens: the workspace/CSR engine must produce the
+//! same numbers as the reference implementation for every scenario ×
+//! layout cell of exp (8) — `makespan`, `load_stall`, `transfer_bytes`,
+//! `mem_high_water` and `stash_high_water` are pinned here (integer
+//! fields exactly, float fields to 1e-9 relative).  The values encode
+//! the conservative memory tie-break (allocations before frees at equal
+//! timestamps), so a regression in either the CSR dependency build, the
+//! FCFS link arbitration or the timeline accounting fails loudly.
+//!
+//! A second test runs all 14 cells twice through ONE workspace and
+//! demands bit-identical output — the arena reset must be complete.
+
+use bpipe::bpipe::{pair_adjacent_layout, sequential_layout, Layout};
+use bpipe::config::paper_experiment;
+use bpipe::schedule::Schedule;
+use bpipe::sim::{scenario_specs, simulate, SimOptions, SimWorkspace};
+
+struct Golden {
+    scenario: &'static str,
+    layout: &'static str,
+    makespan: f64,
+    load_stall: f64,
+    transfer_bytes: u64,
+    mem_high_water: [u64; 8],
+    stash_high_water: [i64; 8],
+}
+
+/// Pinned reference outputs for exp (8), v = 2 (generated from the
+/// reference engine; see the module doc).
+static GOLDENS: [Golden; 14] = [
+    Golden {
+        scenario: "1F1B",
+        layout: "pair-adjacent",
+        makespan: 32.15541465524464,
+        load_stall: 0.0,
+        transfer_bytes: 0,
+        mem_high_water: [90476191488, 84607835904, 81131806464, 77655777024, 74179747584, 70703718144, 67227688704, 66052152576],
+        stash_high_water: [8, 7, 6, 5, 4, 3, 2, 1],
+    },
+    Golden {
+        scenario: "1F1B",
+        layout: "sequential",
+        makespan: 32.15541465524464,
+        load_stall: 0.0,
+        transfer_bytes: 0,
+        mem_high_water: [90476191488, 84607835904, 81131806464, 77655777024, 74179747584, 70703718144, 67227688704, 66052152576],
+        stash_high_water: [8, 7, 6, 5, 4, 3, 2, 1],
+    },
+    Golden {
+        scenario: "1F1B+rebalance",
+        layout: "pair-adjacent",
+        makespan: 32.15541465524464,
+        load_stall: 0.0,
+        transfer_bytes: 1230514421760,
+        mem_high_water: [83524132608, 81131806464, 81131806464, 77655777024, 74179747584, 77655777024, 74179747584, 79956270336],
+        stash_high_water: [6, 6, 6, 5, 4, 5, 4, 5],
+    },
+    Golden {
+        scenario: "1F1B+rebalance",
+        layout: "sequential",
+        makespan: 42.028142066304845,
+        load_stall: 11.61674773849278,
+        transfer_bytes: 1230514421760,
+        mem_high_water: [90476191488, 84607835904, 81131806464, 77655777024, 74179747584, 77655777024, 77655777024, 76480240896],
+        stash_high_water: [8, 7, 6, 5, 4, 5, 5, 4],
+    },
+    Golden {
+        scenario: "GPipe",
+        layout: "pair-adjacent",
+        makespan: 32.1554146552447,
+        load_stall: 0.0,
+        transfer_bytes: 0,
+        mem_high_water: [285133840128, 282741513984, 282741513984, 282741513984, 282741513984, 282741513984, 282741513984, 285042007296],
+        stash_high_water: [64, 64, 64, 64, 64, 64, 64, 64],
+    },
+    Golden {
+        scenario: "GPipe",
+        layout: "sequential",
+        makespan: 32.1554146552447,
+        load_stall: 0.0,
+        transfer_bytes: 0,
+        mem_high_water: [285133840128, 282741513984, 282741513984, 282741513984, 282741513984, 282741513984, 282741513984, 285042007296],
+        stash_high_water: [64, 64, 64, 64, 64, 64, 64, 64],
+    },
+    Golden {
+        scenario: "interleaved",
+        layout: "pair-adjacent",
+        makespan: 30.622813512848893,
+        load_stall: 0.0,
+        transfer_bytes: 0,
+        mem_high_water: [102642294528, 96773938944, 93297909504, 89821880064, 86345850624, 82869821184, 79393791744, 78218255616],
+        stash_high_water: [23, 21, 19, 17, 15, 13, 11, 9],
+    },
+    Golden {
+        scenario: "interleaved",
+        layout: "sequential",
+        makespan: 30.622813512848893,
+        load_stall: 0.0,
+        transfer_bytes: 0,
+        mem_high_water: [102642294528, 96773938944, 93297909504, 89821880064, 86345850624, 82869821184, 79393791744, 78218255616],
+        stash_high_water: [23, 21, 19, 17, 15, 13, 11, 9],
+    },
+    Golden {
+        scenario: "interleaved+rebalance",
+        layout: "pair-adjacent",
+        makespan: 30.622813512848893,
+        load_stall: 0.0,
+        transfer_bytes: 1557261189120,
+        mem_high_water: [92214206208, 89821880064, 89821880064, 89821880064, 89821880064, 89821880064, 89821880064, 92122373376],
+        stash_high_water: [17, 17, 17, 17, 17, 17, 17, 17],
+    },
+    Golden {
+        scenario: "interleaved+rebalance",
+        layout: "sequential",
+        makespan: 38.872764214860325,
+        load_stall: 25.253041431191303,
+        transfer_bytes: 1557261189120,
+        mem_high_water: [99166265088, 96773938944, 93297909504, 91559894784, 88083865344, 88083865344, 89821880064, 90384358656],
+        stash_high_water: [21, 21, 19, 18, 16, 16, 17, 16],
+    },
+    Golden {
+        scenario: "V-shaped",
+        layout: "pair-adjacent",
+        makespan: 31.089752762057778,
+        load_stall: 0.0,
+        transfer_bytes: 0,
+        mem_high_water: [92214206208, 89821880064, 89821880064, 89821880064, 89821880064, 89821880064, 89821880064, 92122373376],
+        stash_high_water: [17, 17, 17, 17, 17, 17, 17, 17],
+    },
+    Golden {
+        scenario: "V-shaped",
+        layout: "sequential",
+        makespan: 31.089752762057778,
+        load_stall: 0.0,
+        transfer_bytes: 0,
+        mem_high_water: [92214206208, 89821880064, 89821880064, 89821880064, 89821880064, 89821880064, 89821880064, 92122373376],
+        stash_high_water: [17, 17, 17, 17, 17, 17, 17, 17],
+    },
+    // V-shaped's derived bound equals its (already balanced) natural
+    // high-water, so rebalancing it is a no-op: zero transfers
+    Golden {
+        scenario: "V-shaped+rebalance",
+        layout: "pair-adjacent",
+        makespan: 31.089752762057778,
+        load_stall: 0.0,
+        transfer_bytes: 0,
+        mem_high_water: [92214206208, 89821880064, 89821880064, 89821880064, 89821880064, 89821880064, 89821880064, 92122373376],
+        stash_high_water: [17, 17, 17, 17, 17, 17, 17, 17],
+    },
+    Golden {
+        scenario: "V-shaped+rebalance",
+        layout: "sequential",
+        makespan: 31.089752762057778,
+        load_stall: 0.0,
+        transfer_bytes: 0,
+        mem_high_water: [92214206208, 89821880064, 89821880064, 89821880064, 89821880064, 89821880064, 89821880064, 92122373376],
+        stash_high_water: [17, 17, 17, 17, 17, 17, 17, 17],
+    },
+];
+
+fn layout_of(name: &str, p: u64, n_nodes: u64) -> Layout {
+    match name {
+        "pair-adjacent" => pair_adjacent_layout(p, n_nodes),
+        "sequential" => sequential_layout(p, n_nodes),
+        other => panic!("unknown layout {other}"),
+    }
+}
+
+/// All 14 (schedule, layout, golden) cells, built through the SAME
+/// `scenario_specs` the sweep runs — a renamed label or changed
+/// generator composition in the production grid fails the lookup here
+/// instead of silently testing a stale hand-rolled mapping.
+fn golden_cells(p: u64, m: u64, n_nodes: u64) -> Vec<(&'static Golden, Schedule, Layout)> {
+    let mut cells = Vec::new();
+    for spec in scenario_specs(2) {
+        for layout_name in ["pair-adjacent", "sequential"] {
+            let g = GOLDENS
+                .iter()
+                .find(|g| g.scenario == spec.name() && g.layout == layout_name)
+                .unwrap_or_else(|| panic!("no golden for {} / {layout_name}", spec.name()));
+            cells.push((g, spec.build(p, m), layout_of(layout_name, p, n_nodes)));
+        }
+    }
+    assert_eq!(cells.len(), GOLDENS.len(), "every golden must be exercised");
+    cells
+}
+
+fn assert_close(got: f64, want: f64, what: &str, cell: &str) {
+    let tol = 1e-9 * want.abs().max(1e-9);
+    assert!(
+        (got - want).abs() <= tol,
+        "{cell}: {what} {got:?} != golden {want:?}"
+    );
+}
+
+#[test]
+fn engine_matches_goldens_across_all_scenarios_and_layouts() {
+    let e = paper_experiment(8).unwrap();
+    let p = e.parallel.p;
+    let m = e.parallel.num_microbatches();
+    for (g, schedule, layout) in golden_cells(p, m, e.cluster.n_nodes) {
+        let cell = format!("{} / {}", g.scenario, g.layout);
+        let r = simulate(&e, &schedule, &layout);
+        assert_close(r.makespan, g.makespan, "makespan", &cell);
+        assert_close(r.load_stall, g.load_stall, "load_stall", &cell);
+        assert_eq!(r.transfer_bytes, g.transfer_bytes, "{cell}: transfer_bytes");
+        assert_eq!(&r.mem_high_water[..], &g.mem_high_water[..], "{cell}: mem_high_water");
+        assert_eq!(&r.stash_high_water[..], &g.stash_high_water[..], "{cell}: stash_high_water");
+    }
+}
+
+#[test]
+fn repeated_runs_on_one_workspace_are_bit_identical() {
+    // all 14 golden cells, twice, through ONE workspace: every buffer
+    // reset must be complete or run N+1 leaks state from run N
+    let e = paper_experiment(8).unwrap();
+    let p = e.parallel.p;
+    let m = e.parallel.num_microbatches();
+    let cells = golden_cells(p, m, e.cluster.n_nodes);
+    let mut ws = SimWorkspace::new();
+    let opts = SimOptions { trace: true };
+    let first: Vec<_> = cells
+        .iter()
+        .map(|(_, s, l)| {
+            let stats = ws.run(&e, s, l, opts);
+            (stats, ws.mem_high_water().to_vec(), ws.stash_high_water().to_vec(), ws.trace().to_vec())
+        })
+        .collect();
+    for (i, (_, s, l)) in cells.iter().enumerate() {
+        let stats = ws.run(&e, s, l, opts);
+        let (f_stats, f_mem, f_stash, f_trace) = &first[i];
+        assert_eq!(&stats, f_stats, "cell {i}: stats drifted on reuse");
+        assert_eq!(ws.mem_high_water(), &f_mem[..], "cell {i}");
+        assert_eq!(ws.stash_high_water(), &f_stash[..], "cell {i}");
+        assert_eq!(ws.trace(), &f_trace[..], "cell {i}");
+    }
+}

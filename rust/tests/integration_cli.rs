@@ -60,6 +60,42 @@ fn sweep_ranks_one_experiment_grid() {
 }
 
 #[test]
+fn sweep_bounds_mode_renders_frontier_and_exports() {
+    let dir = std::env::temp_dir().join(format!("bpipe-cli-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv = dir.join("bounds.csv");
+    let json = dir.join("bounds.json");
+    // exp (8) bound-sensitivity grid: 4 families × every bound ≥ 2 × 2
+    // layouts, with CSV + JSON export
+    let (ok, out) = bpipe(&[
+        "sweep", "--experiment", "8", "--bounds",
+        "--csv", csv.to_str().unwrap(),
+        "--json", json.to_str().unwrap(),
+    ]);
+    assert!(ok, "{out}");
+    for needle in ["bounds", "knee k", "best MFU %", "16..2", "grid cells simulated", "wrote"] {
+        assert!(out.contains(needle), "missing {needle}: {out}");
+    }
+    let csv_text = std::fs::read_to_string(&csv).unwrap();
+    assert!(csv_text.starts_with("exp,model,microbatch,scenario,bound,layout,mfu_pct"));
+    assert!(csv_text.lines().count() > 100, "exp 8 alone sweeps >100 bound cells");
+    let json_text = std::fs::read_to_string(&json).unwrap();
+    assert!(json_text.starts_with('[') && json_text.trim_end().ends_with(']'));
+    assert!(json_text.contains("\"scenario\":\"GPipe+rebalance\""));
+}
+
+#[test]
+fn sweep_exports_ranking_grid_csv() {
+    let dir = std::env::temp_dir().join(format!("bpipe-cli-rank-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv = dir.join("rank.csv");
+    let (ok, out) = bpipe(&["sweep", "--experiment", "8", "--csv", csv.to_str().unwrap()]);
+    assert!(ok, "{out}");
+    let text = std::fs::read_to_string(&csv).unwrap();
+    assert_eq!(text.lines().count(), 14 + 1, "header + 14 cells");
+}
+
+#[test]
 fn schedule_subcommand_rebalances_any_kind() {
     let (ok, out) = bpipe(&[
         "schedule", "--p", "8", "--m", "16", "--kind", "interleaved", "--rebalance",
