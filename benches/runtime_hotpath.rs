@@ -9,16 +9,16 @@
 //!   workspace win stays visible as a ratio in one report;
 //! * (c) the schedule generators + rebalance transform that build grid
 //!   cells lazily on the worker threads;
-//! * (d) the full 140-cell ranking grid and the ~2300-cell
+//! * (d) the full 300-cell ranking grid and the ~3600-cell
 //!   bound-sensitivity grid end to end through the parallel driver.
 //!
 //! `BPIPE_BENCH_SMOKE=1` caps iteration counts so CI can run this as a
 //! non-blocking smoke step (hot-path regressions show up in PR logs
 //! without gating merges).
 
-use bpipe::bpipe::{pair_adjacent_layout, rebalance};
+use bpipe::bpipe::{capacity_stage_bounds, pair_adjacent_layout, rebalance, rebalance_bounded};
 use bpipe::config::paper_experiment;
-use bpipe::schedule::{interleaved, one_f_one_b, v_shaped};
+use bpipe::schedule::{interleaved, one_f_one_b, v_shaped, zigzag};
 use bpipe::sim::{bounds_grid, paper_grid, simulate, sweep, SimOptions, SimWorkspace};
 use bpipe::util::bench;
 
@@ -68,12 +68,22 @@ fn main() {
     println!("\n=== grid construction (generators + transform, per lazy cell) ===");
     bench("hotpath/gen_interleaved_p8_m64_v2", iters(20_000), || interleaved(p, m, 2));
     bench("hotpath/gen_v_shaped_p8_m64", iters(2_000), || v_shaped(p, m));
+    bench("hotpath/gen_zigzag_w_p8_m64", iters(1_000), || zigzag(p, m, 4));
     bench("hotpath/rebalance_interleaved", iters(10_000), || {
         rebalance(std::hint::black_box(&s_il), None)
     });
+    let cap_bounds = capacity_stage_bounds(&e, &s_1f1b);
+    bench("hotpath/rebalance_per_stage_1f1b", iters(10_000), || {
+        rebalance_bounded(std::hint::black_box(&s_1f1b), &cap_bounds)
+    });
 
     println!("\n=== full grids through the parallel sweep driver ===");
-    bench("hotpath/sweep_paper_grid_140_cells", iters(5), || sweep(paper_grid(2), 0));
+    let ranking_cells = paper_grid(2).len();
+    bench(
+        &format!("hotpath/sweep_paper_grid_{ranking_cells}_cells"),
+        iters(5),
+        || sweep(paper_grid(2), 0),
+    );
     let bounds_cells = bounds_grid(2).len();
     bench(
         &format!("hotpath/sweep_bounds_grid_{bounds_cells}_cells"),

@@ -8,11 +8,11 @@
 //! time for that microbatch's backward pass (paper §2.2, Figure 1).
 //!
 //! * [`pairing`] — the evictor/acceptor relation and per-stage bounds;
-//! * [`rebalance`] — the schedule-agnostic transform inserting Evict/Load
+//! * [`rebalance()`] — the schedule-agnostic transform inserting Evict/Load
 //!   ops into ANY schedule, keyed by `(mb, chunk)` — composes with
 //!   interleaved and V-shaped bases;
 //! * [`apply_bpipe`] — the paper's 1F1B-specific wrapper around
-//!   [`rebalance`] with the `⌈(p+2)/2⌉` bound;
+//!   [`rebalance()`] with the `⌈(p+2)/2⌉` bound;
 //! * [`layout`] — pair-adjacent device placement so every pair stays
 //!   inside one NVLink island (paper Figure 2).
 
@@ -22,17 +22,19 @@ pub mod rebalance;
 
 pub use layout::{pair_adjacent_layout, sequential_layout, Layout};
 pub use pairing::{acceptor_extra_stashes, bound, evictions_at, is_acceptor, is_evictor, partner};
-pub use rebalance::{bound_range, derived_bound, rebalance};
+pub use rebalance::{
+    bound_range, capacity_stage_bounds, derived_bound, rebalance, rebalance_bounded,
+};
 
 use crate::schedule::{Schedule, ScheduleKind};
 
 /// Transform a 1F1B schedule into the paper's BPipe schedule by
 /// inserting Evict/Load ops on evictor stages — a thin wrapper over the
-/// schedule-agnostic [`rebalance`] pass that pins the paper's bound.
+/// schedule-agnostic [`rebalance()`] pass that pins the paper's bound.
 ///
 /// `bound` defaults to [`pairing::bound`]`(p)` (= `⌈(p+2)/2⌉`); tests
 /// inject tighter bounds to probe edge cases.  For non-1F1B bases call
-/// [`rebalance`] directly.
+/// [`rebalance()`] directly.
 pub fn apply_bpipe(base: &Schedule, bound_override: Option<u64>) -> Schedule {
     assert_eq!(
         base.kind,

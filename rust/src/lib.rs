@@ -20,6 +20,24 @@
 //!
 //! Python never runs on the training path: `make artifacts` lowers the
 //! model once; the `bpipe` binary is self-contained afterwards.
+//!
+//! ## Paper section → module map
+//!
+//! | Paper artifact | Where it lives |
+//! |---|---|
+//! | §2.2 1F1B + BPipe transform (Fig. 1) | [`schedule::one_f_one_b()`], [`bpipe::apply_bpipe`], [`bpipe::rebalance()`] |
+//! | §2.2 evictor/acceptor pairing + bound | [`bpipe::pairing`], [`model::memory::bpipe_bound`] |
+//! | Fig. 2 pair-adjacent placement | [`bpipe::layout`], `bpipe figures --which 2` |
+//! | §3.1 models/cluster (Tables 1–2) | [`config`] presets |
+//! | §3.1 Eq. 1 FLOPs | [`model::flops`] |
+//! | §3.2 fused-softmax kernel switch | [`sim::costmodel::fused_softmax_eligible`] |
+//! | Table 3 / Table 5 regeneration | [`report::tables`], driven by [`sim`] |
+//! | §4 estimator (Eqs. 2–4, Table 4) | [`estimator`], `bpipe estimate` |
+//! | Figures 1/2 + estimator-vs-DES report | [`report::figures`], `bpipe report` |
+//! | Beyond the paper: schedule/bound/layout design space | [`mod@sim::sweep`], [`schedule::zigzag()`], [`bpipe::rebalance_bounded`] |
+//!
+//! `docs/ARCHITECTURE.md` has the crate-level data-flow diagram;
+//! [`sweep_schema`] documents (and doc-tests) the sweep export formats.
 
 pub mod bpipe;
 pub mod config;
@@ -38,3 +56,10 @@ pub mod util;
 pub use config::{
     AttentionMethod, ClusterConfig, ExperimentConfig, ModelConfig, ParallelConfig,
 };
+
+/// The sweep CSV/JSON export schema, doc-tested from
+/// `docs/SWEEP_SCHEMA.md`: the code blocks in that file compile and run
+/// as part of `cargo test`, so the documented schema cannot drift from
+/// the exporters without a test failure.
+#[doc = include_str!("../../docs/SWEEP_SCHEMA.md")]
+pub mod sweep_schema {}

@@ -11,6 +11,10 @@
 //!   runs the bound × load_stall sensitivity grid (every rebalance bound
 //!   from derived down to the knee) and prints the per-scenario
 //!   frontier; `--csv`/`--json` export every cell;
+//! * `report`                — the replication report: a self-contained
+//!   markdown file with embedded SVG figures (per-stage memory,
+//!   MFU ranking, bound frontier) and the estimator-vs-DES error
+//!   tables, built from sweep outcomes in-process;
 //! * `estimate`              — the §4 Eq. 4 estimator (analytic or from
 //!   real single-stage runtime measurements; the latter needs the `pjrt`
 //!   build feature);
@@ -48,6 +52,10 @@ COMMANDS:
                                          x layout grid (parallel DES);
                                          --bounds sweeps every rebalance
                                          bound down to the knee instead
+  report    [--experiment 1..10] [--v N] [--threads N]
+            [--out report.md]            replication report: markdown +
+                                         embedded SVG figures + the
+                                         estimator-vs-DES error tables
   estimate  [--global-batch B --p P --from b:mfu --to b:mfu]
             [--runtime --artifacts DIR]  paper §4 Eq. 4 estimator
   memory    [--experiment 1..10]         per-stage memory profile
@@ -273,6 +281,23 @@ fn main() -> anyhow::Result<()> {
                 "\n{count} grid cells simulated in {:.2}s ({:.1} cells/s)",
                 dt.as_secs_f64(),
                 count as f64 / dt.as_secs_f64()
+            );
+        }
+        "report" => {
+            let args = Args::parse(rest, &[])?;
+            let e = experiment_or_exit(args.get("experiment", 8u32)?);
+            let v = args.get("v", 2u64)?;
+            let threads = args.get("threads", 0usize)?;
+            let out = args.opt("out").unwrap_or("bpipe_report.md");
+            let t0 = std::time::Instant::now();
+            let md = report::replication_report(&e, v, threads);
+            std::fs::write(out, &md)?;
+            println!(
+                "wrote replication report for experiment {} to {out}: {} bytes, {} figures, {:.2}s",
+                e.id.map(|i| format!("({i})")).unwrap_or_default(),
+                md.len(),
+                md.matches("<svg").count(),
+                t0.elapsed().as_secs_f64()
             );
         }
         "estimate" => {

@@ -1,7 +1,26 @@
-//! Rendering: paper-style tables and ASCII schedule timelines.
+//! Rendering: paper-style tables, ASCII schedule timelines, and the SVG
+//! replication report.
+//!
+//! Three output layers, from rawest to most assembled:
+//!
+//! * [`tables`] — the generic fixed-width [`Table`] (text + RFC-4180
+//!   CSV) and the paper's Tables 2/3/5 regenerators;
+//! * [`timeline`] — program-order and time-bucketed ASCII renderings of
+//!   schedules (paper Figure 1) and device layouts (paper Figure 2);
+//! * [`figures`] — self-contained SVG charts consuming
+//!   [`crate::sim::SweepOutcome`]s directly, assembled into the
+//!   `bpipe report` markdown deliverable (Figures 1/2, the
+//!   bound-sensitivity frontier, and the estimator-vs-DES error tables).
+//!
+//! Everything here is pure string rendering over already-simulated data:
+//! no module in `report` runs the DES except [`figures`]'s top-level
+//! [`replication_report`] convenience entry point (which drives
+//! [`crate::sim::sweep()`] and then renders).
 
+pub mod figures;
 pub mod tables;
 pub mod timeline;
 
+pub use figures::{render_replication_report, replication_report};
 pub use tables::{render_table2, render_table3, render_table5, Table};
 pub use timeline::{render_layout, render_timeline};

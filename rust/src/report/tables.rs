@@ -22,11 +22,16 @@ impl Table {
     }
 
     /// Render as RFC-4180-ish CSV: header row + data rows, fields quoted
-    /// only when they contain a comma, quote or newline.  The
+    /// only when they contain a comma, quote, CR or LF.  The
     /// machine-readable sibling of [`Table::render`] (sweep `--csv`).
+    ///
+    /// Audited for the sweep exports (PR 3): commas now legitimately
+    /// appear in data fields (the `stage_bounds` / `per_stage_mem_gib`
+    /// vector columns are comma-joined), and RFC 4180 requires quoting
+    /// CR as well as LF — both covered here and pinned by tests.
     pub fn render_csv(&self) -> String {
         let field = |s: &str| -> String {
-            if s.contains(',') || s.contains('"') || s.contains('\n') {
+            if s.contains(',') || s.contains('"') || s.contains('\n') || s.contains('\r') {
                 format!("\"{}\"", s.replace('"', "\"\""))
             } else {
                 s.to_string()
@@ -157,6 +162,20 @@ mod tests {
         assert_eq!(lines[0], "a,b");
         assert_eq!(lines[1], "plain,\"with,comma\"");
         assert_eq!(lines[2], "\"has \"\"quotes\"\"\",x");
+    }
+
+    #[test]
+    fn csv_quotes_vector_fields_and_control_chars() {
+        // the sweep's stage_bounds / per_stage_mem_gib columns are
+        // comma-joined vectors: they must round-trip as ONE field
+        let mut t = Table::new(&["scenario", "stage_bounds"]);
+        t.push(vec!["1F1B+stage-bounds".into(), "5,6,6,5,4,3,2,2".into()]);
+        t.push(vec!["cr".into(), "em\rbedded".into()]);
+        let csv = t.render_csv();
+        let lines: Vec<&str> = csv.split('\n').collect();
+        assert_eq!(lines[1], "1F1B+stage-bounds,\"5,6,6,5,4,3,2,2\"");
+        // RFC 4180: CR forces quoting just like LF
+        assert_eq!(lines[2], "cr,\"em\rbedded\"");
     }
 
     #[test]

@@ -20,7 +20,15 @@ pub fn gpipe(p: u64, m: u64) -> Schedule {
             StageProgram { stage: s, ops }
         })
         .collect();
-    Schedule { p, m, chunks: 1, placement: Placement::Sequential, kind: ScheduleKind::GPipe, programs }
+    Schedule {
+        p,
+        m,
+        chunks: 1,
+        placement: Placement::Sequential,
+        kind: ScheduleKind::GPipe,
+        stage_bounds: None,
+        programs,
+    }
 }
 
 #[cfg(test)]

@@ -60,6 +60,7 @@ pub fn interleaved(p: u64, m: u64, v: u64) -> Schedule {
         chunks: v,
         placement: Placement::Sequential,
         kind: ScheduleKind::Interleaved { chunks: v },
+        stage_bounds: None,
         programs,
     }
 }

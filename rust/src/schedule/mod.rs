@@ -3,16 +3,20 @@
 //! A [`Schedule`] is one op-list per stage ([`StageProgram`]), in program
 //! order.  Generators:
 //!
-//! * [`gpipe`] — all forwards, then all backwards (GPipe);
-//! * [`one_f_one_b`] — the 1F1B/DAPPLE schedule Megatron-LM uses and the
-//!   paper builds on (§2.2);
-//! * [`interleaved`] — Megatron's interleaved-1F1B (virtual pipeline),
+//! * [`gpipe()`] — all forwards, then all backwards (GPipe);
+//! * [`one_f_one_b()`] — the 1F1B/DAPPLE schedule Megatron-LM uses and
+//!   the paper builds on (§2.2);
+//! * [`interleaved()`] — Megatron's interleaved-1F1B (virtual pipeline),
 //!   for the schedule-comparison ablation;
-//! * [`v_shaped`] — a V-shaped two-chunk virtual pipeline in the
+//! * [`v_shaped()`] — a V-shaped two-chunk virtual pipeline in the
 //!   controllable-memory family (Qi et al. 2024): chunk 0 flows
 //!   stage 0→p−1, chunk 1 flows back p−1→0, equalizing stash pressure
 //!   across stages by placement instead of by transfers;
-//! * [`crate::bpipe::rebalance`] — the schedule-agnostic memory
+//! * [`zigzag()`] — the general `v`-chunk zig-zag placement the V shape
+//!   is the `v = 2` case of: chunks alternate direction down the pipe
+//!   (`v = 4` is the W-shaped placement of the controllable-memory
+//!   paper's Figure 5 family);
+//! * [`crate::bpipe::rebalance()`] — the schedule-agnostic memory
 //!   rebalancing transform (BPipe generalized beyond 1F1B), inserting
 //!   activation Evict/Load ops keyed by `(mb, chunk)`;
 //! * [`crate::bpipe::apply_bpipe`] — the paper's 1F1B-specific BPipe
@@ -27,12 +31,14 @@ pub mod interleaved;
 pub mod one_f_one_b;
 pub mod v_shaped;
 pub mod validate;
+pub mod zigzag;
 
 pub use gpipe::gpipe;
 pub use interleaved::interleaved;
 pub use one_f_one_b::one_f_one_b;
 pub use v_shaped::v_shaped;
 pub use validate::{validate, ValidationError};
+pub use zigzag::zigzag;
 
 
 /// What a stage does at one program step.
@@ -110,6 +116,9 @@ pub enum Family {
     /// Megatron interleaved-1F1B with `v` chunks per stage.
     Interleaved { v: u64 },
     VShaped,
+    /// General `v`-chunk zig-zag placement (alternating chunk directions;
+    /// `v = 4` is the W-shaped placement, `v = 2` duplicates [`VShaped`]).
+    ZigZag { v: u64 },
 }
 
 impl Family {
@@ -120,6 +129,7 @@ impl Family {
             Family::GPipe => gpipe(p, m),
             Family::Interleaved { v } => interleaved(p, m, v),
             Family::VShaped => v_shaped(p, m),
+            Family::ZigZag { v } => zigzag(p, m, v),
         }
     }
 
@@ -130,6 +140,8 @@ impl Family {
             Family::GPipe => "GPipe",
             Family::Interleaved { .. } => "interleaved",
             Family::VShaped => "V-shaped",
+            Family::ZigZag { v: 4 } => "W-shaped",
+            Family::ZigZag { .. } => "zig-zag",
         }
     }
 
@@ -140,6 +152,21 @@ impl Family {
             Family::GPipe => "GPipe+rebalance",
             Family::Interleaved { .. } => "interleaved+rebalance",
             Family::VShaped => "V-shaped+rebalance",
+            Family::ZigZag { v: 4 } => "W-shaped+rebalance",
+            Family::ZigZag { .. } => "zig-zag+rebalance",
+        }
+    }
+
+    /// Display name of the family composed with the per-stage
+    /// (capacity-derived, non-uniform) rebalance transform.
+    pub fn stage_bounds_label(&self) -> &'static str {
+        match self {
+            Family::OneFOneB => "1F1B+stage-bounds",
+            Family::GPipe => "GPipe+stage-bounds",
+            Family::Interleaved { .. } => "interleaved+stage-bounds",
+            Family::VShaped => "V-shaped+stage-bounds",
+            Family::ZigZag { v: 4 } => "W-shaped+stage-bounds",
+            Family::ZigZag { .. } => "zig-zag+stage-bounds",
         }
     }
 }
@@ -152,8 +179,11 @@ pub enum ScheduleKind {
     Interleaved { chunks: u64 },
     /// V-shaped two-chunk virtual pipeline (controllable-memory family).
     VShaped,
+    /// General zig-zag `chunks`-way virtual pipeline (W shape at 4).
+    ZigZag { chunks: u64 },
     /// A rebalanced schedule (BPipe generalized): Evict/Load ops keep
-    /// every stage's own resident stash count ≤ `bound`.
+    /// every stage's own resident stash count ≤ `bound` (or, when
+    /// [`Schedule::stage_bounds`] is set, ≤ that stage's own bound).
     BPipe { bound: u64 },
 }
 
@@ -164,8 +194,10 @@ pub enum Placement {
     /// Every chunk flows stage 0→p−1; chunk c+1 starts where chunk c
     /// wrapped (plain + Megatron interleaved).
     Sequential,
-    /// Two chunks; chunk 0 flows 0→p−1, chunk 1 flows p−1→0 (V shape).
-    VShape,
+    /// Chunks alternate direction: even chunks flow 0→p−1, odd chunks
+    /// p−1→0, each starting on the physical stage where the previous
+    /// chunk ended.  Two chunks make the V shape, four make the W.
+    ZigZag,
 }
 
 /// A complete pipeline schedule: one program per stage.
@@ -176,11 +208,16 @@ pub struct Schedule {
     /// microbatches per iteration
     pub m: u64,
     /// virtual-pipeline chunks hosted per stage (1 unless interleaved /
-    /// V-shaped) — op `chunk` fields range over `0..chunks`
+    /// V-shaped / zig-zag) — op `chunk` fields range over `0..chunks`
     pub chunks: u64,
     /// chunk→stage dataflow layout
     pub placement: Placement,
     pub kind: ScheduleKind,
+    /// Per-stage resident-stash bounds, set only by
+    /// [`crate::bpipe::rebalance_bounded`] (non-uniform BPipe): the
+    /// validator enforces `stash_high_water(s) ≤ stage_bounds[s]` on top
+    /// of the uniform `BPipe { bound }` ceiling.
+    pub stage_bounds: Option<Vec<u64>>,
     pub programs: Vec<StageProgram>,
 }
 
@@ -212,15 +249,24 @@ mod tests {
 
     #[test]
     fn family_builds_every_generator() {
-        for fam in
-            [Family::OneFOneB, Family::GPipe, Family::Interleaved { v: 2 }, Family::VShaped]
-        {
+        for fam in [
+            Family::OneFOneB,
+            Family::GPipe,
+            Family::Interleaved { v: 2 },
+            Family::VShaped,
+            Family::ZigZag { v: 3 },
+            Family::ZigZag { v: 4 },
+        ] {
             let s = fam.build(4, 8);
             validate(&s).unwrap_or_else(|e| panic!("{fam:?}: {e}"));
             assert!(!fam.label().is_empty());
             assert!(fam.rebalanced_label().ends_with("+rebalance"), "{fam:?}");
+            assert!(fam.stage_bounds_label().ends_with("+stage-bounds"), "{fam:?}");
         }
         assert_eq!(Family::Interleaved { v: 3 }.build(4, 8).chunks, 3);
+        assert_eq!(Family::ZigZag { v: 4 }.build(4, 8).chunks, 4);
+        assert_eq!(Family::ZigZag { v: 4 }.label(), "W-shaped");
+        assert_eq!(Family::ZigZag { v: 3 }.label(), "zig-zag");
     }
 
     #[test]

@@ -44,7 +44,15 @@ pub fn one_f_one_b(p: u64, m: u64) -> Schedule {
             StageProgram { stage: s, ops }
         })
         .collect();
-    Schedule { p, m, chunks: 1, placement: Placement::Sequential, kind: ScheduleKind::OneFOneB, programs }
+    Schedule {
+        p,
+        m,
+        chunks: 1,
+        placement: Placement::Sequential,
+        kind: ScheduleKind::OneFOneB,
+        stage_bounds: None,
+        programs,
+    }
 }
 
 #[cfg(test)]

@@ -13,129 +13,25 @@
 //! sweep (plain 1F1B is imbalanced, interleaved is anti-balanced,
 //! V-shaped is balanced by construction).
 //!
-//! Construction: take the 1F1B schedule of the `2p`-deep *virtual*
-//! pipeline, assign each virtual op its completion slot under unit-time
-//! list scheduling (Kahn order over the virtual dependency DAG), and
-//! fold the two virtual programs of each physical stage into one op
-//! stream ordered by those slots.  The result validates under the
-//! standard per-stage invariants and carries `Placement::VShape` so the
-//! simulator derives chunk-1 dataflow in the reverse stage direction.
+//! Since PR 3 this is the `v = 2` case of the general zig-zag placement:
+//! [`v_shaped()`] is a thin wrapper over [`super::zigzag()`] that keeps the
+//! `ScheduleKind::VShaped` tag (op-for-op identical programs).  See
+//! [`super::zigzag()`] for the construction.
 
-use super::{Op, OpKind, Placement, Schedule, ScheduleKind, StageProgram};
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use super::{Schedule, ScheduleKind};
 
 /// Generate the V-shaped schedule for `p` stages and `m` microbatches
-/// (two chunks per stage).
+/// (two chunks per stage) — `zigzag(p, m, 2)` with the V-shaped kind tag.
 pub fn v_shaped(p: u64, m: u64) -> Schedule {
-    assert!(p >= 1, "need at least one stage");
-    assert!(m >= 1, "need at least one microbatch");
-    let vp = (2 * p) as usize;
-    let virt = super::one_f_one_b(2 * p, m);
-
-    // node ids over the virtual schedule, in (virtual stage, op index) order
-    let mut base = vec![0usize; vp + 1];
-    for d in 0..vp {
-        base[d + 1] = base[d] + virt.programs[d].ops.len();
-    }
-    let n = base[vp];
-    // dense (virtual stage, kind, mb) -> op index table: one O(ops)
-    // build instead of a linear scan per dependency lookup
-    let m_us = m as usize;
-    let mut pos_tab = vec![usize::MAX; vp * 2 * m_us];
-    for d in 0..vp {
-        for (j, op) in virt.programs[d].ops.iter().enumerate() {
-            let k = if op.kind == OpKind::Fwd { 0 } else { 1 };
-            pos_tab[(d * 2 + k) * m_us + op.mb as usize] = j;
-        }
-    }
-    let pos = |d: usize, kind: OpKind, mb: u64| -> usize {
-        let k = if kind == OpKind::Fwd { 0 } else { 1 };
-        pos_tab[(d * 2 + k) * m_us + mb as usize]
-    };
-
-    // dependency edges of the virtual 1F1B DAG (unit-time ops)
-    let mut deps: Vec<Vec<usize>> = vec![Vec::with_capacity(3); n];
-    for d in 0..vp {
-        for (j, op) in virt.programs[d].ops.iter().enumerate() {
-            let id = base[d] + j;
-            if j > 0 {
-                deps[id].push(base[d] + j - 1);
-            }
-            match op.kind {
-                OpKind::Fwd => {
-                    if d > 0 {
-                        deps[id].push(base[d - 1] + pos(d - 1, OpKind::Fwd, op.mb));
-                    }
-                }
-                OpKind::Bwd => {
-                    deps[id].push(base[d] + pos(d, OpKind::Fwd, op.mb));
-                    if d + 1 < vp {
-                        deps[id].push(base[d + 1] + pos(d + 1, OpKind::Bwd, op.mb));
-                    }
-                }
-                OpKind::Evict | OpKind::Load => unreachable!("1f1b base has no transfers"),
-            }
-        }
-    }
-
-    // unit-time list schedule: finish slot of each virtual op
-    let mut indeg = vec![0usize; n];
-    let mut rev: Vec<Vec<usize>> = vec![Vec::new(); n];
-    for (id, ds) in deps.iter().enumerate() {
-        indeg[id] = ds.len();
-        for &d in ds {
-            rev[d].push(id);
-        }
-    }
-    let mut finish = vec![0u64; n];
-    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = (0..n)
-        .filter(|&i| indeg[i] == 0)
-        .map(|i| Reverse((0, i)))
-        .collect();
-    let mut done = 0usize;
-    while let Some(Reverse((t, id))) = heap.pop() {
-        done += 1;
-        finish[id] = t + 1;
-        for &nxt in &rev[id] {
-            indeg[nxt] -= 1;
-            if indeg[nxt] == 0 {
-                let r = deps[nxt].iter().map(|&d| finish[d]).max().unwrap_or(0);
-                heap.push(Reverse((r, nxt)));
-            }
-        }
-    }
-    assert_eq!(done, n, "virtual 1f1b DAG must be acyclic");
-
-    // fold: physical stage s hosts virtual stages s (chunk 0) and
-    // 2p-1-s (chunk 1), merged in finish-slot order
-    let programs = (0..p as usize)
-        .map(|s| {
-            let mut items: Vec<(u64, usize, usize, Op)> = Vec::new();
-            for (chunk, d) in [(0u64, s), (1u64, vp - 1 - s)] {
-                for (j, op) in virt.programs[d].ops.iter().enumerate() {
-                    items.push((finish[base[d] + j], d, j, Op { kind: op.kind, mb: op.mb, chunk }));
-                }
-            }
-            items.sort_by_key(|&(f, d, j, _)| (f, d, j));
-            StageProgram { stage: s as u64, ops: items.into_iter().map(|it| it.3).collect() }
-        })
-        .collect();
-
-    Schedule {
-        p,
-        m,
-        chunks: 2,
-        placement: Placement::VShape,
-        kind: ScheduleKind::VShaped,
-        programs,
-    }
+    let mut s = super::zigzag(p, m, 2);
+    s.kind = ScheduleKind::VShaped;
+    s
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::schedule::{interleaved, one_f_one_b, validate};
+    use crate::schedule::{interleaved, one_f_one_b, validate, OpKind};
 
     #[test]
     fn validates_across_shapes() {
@@ -187,5 +83,13 @@ mod tests {
         let f1 = ops.iter().position(|o| o.kind == OpKind::Fwd && o.mb == 0 && o.chunk == 1).unwrap();
         assert!(f1 > f0);
         assert!(f1 - f0 <= 2, "chunk-1 fwd should closely follow chunk-0: {f0} vs {f1}");
+    }
+
+    #[test]
+    fn keeps_v_shaped_kind_tag() {
+        let s = v_shaped(4, 8);
+        assert_eq!(s.kind, ScheduleKind::VShaped);
+        assert_eq!(s.chunks, 2);
+        assert_eq!(s.placement, crate::schedule::Placement::ZigZag);
     }
 }

@@ -29,6 +29,10 @@ pub enum ValidationError {
     BwdWhileEvicted { stage: u64, mb: u64, chunk: u64 },
     NegativeStash { stage: u64, at_op: usize },
     BoundExceeded { stage: u64, bound: u64, high_water: i64 },
+    /// A per-stage (non-uniform) bound was exceeded on its own stage.
+    StageBoundExceeded { stage: u64, bound: u64, high_water: i64 },
+    /// `stage_bounds` is set but its length is not `p`.
+    StageBoundsWrongLength { expected: u64, got: usize },
     UnknownMicrobatch { stage: u64, mb: u64, m: u64 },
     UnknownChunk { stage: u64, chunk: u64, chunks: u64 },
 }
@@ -50,10 +54,20 @@ impl std::error::Error for ValidationError {}
 ///    while it is evicted (possibly repeatedly), Bwd only while resident,
 ///    and nothing stays evicted at the end;
 /// 4. the on-device stash count never goes negative, and for
-///    `ScheduleKind::BPipe { bound }` never exceeds `bound`.
+///    `ScheduleKind::BPipe { bound }` never exceeds `bound` — nor, when
+///    `stage_bounds` is set (non-uniform rebalance), the stage's own
+///    per-stage bound.
 pub fn validate(s: &Schedule) -> Result<(), ValidationError> {
     if s.programs.len() != s.p as usize {
         return Err(ValidationError::WrongStageCount { expected: s.p, got: s.programs.len() });
+    }
+    if let Some(bounds) = &s.stage_bounds {
+        if bounds.len() != s.p as usize {
+            return Err(ValidationError::StageBoundsWrongLength {
+                expected: s.p,
+                got: bounds.len(),
+            });
+        }
     }
     for (i, prog) in s.programs.iter().enumerate() {
         if prog.stage != i as u64 {
@@ -164,6 +178,18 @@ pub fn validate(s: &Schedule) -> Result<(), ValidationError> {
                 return Err(ValidationError::BoundExceeded { stage: st, bound, high_water });
             }
         }
+        // per-stage bounds are enforced whenever present, regardless of
+        // the kind tag (the field doc's contract)
+        if let Some(bounds) = &s.stage_bounds {
+            let k = bounds[i];
+            if high_water > k as i64 {
+                return Err(ValidationError::StageBoundExceeded {
+                    stage: st,
+                    bound: k,
+                    high_water,
+                });
+            }
+        }
     }
     Ok(())
 }
@@ -180,6 +206,7 @@ mod tests {
             chunks: 1,
             placement: Placement::Sequential,
             kind: ScheduleKind::OneFOneB,
+            stage_bounds: None,
             programs: vec![StageProgram { stage: 0, ops }],
         }
     }
@@ -286,5 +313,43 @@ mod tests {
         ]);
         s.kind = ScheduleKind::BPipe { bound: 2 };
         assert!(matches!(validate(&s), Err(ValidationError::BoundExceeded { .. })));
+    }
+
+    #[test]
+    fn enforces_per_stage_bounds() {
+        // high-water 3 passes the uniform bound (4) but violates the
+        // stage's own non-uniform bound (2)
+        let mut s = sched(vec![
+            Op::fwd(0),
+            Op::fwd(1),
+            Op::fwd(2),
+            Op::bwd(0),
+            Op::bwd(1),
+            Op::bwd(2),
+        ]);
+        s.kind = ScheduleKind::BPipe { bound: 4 };
+        validate(&s).unwrap();
+        s.stage_bounds = Some(vec![2]);
+        assert!(matches!(
+            validate(&s),
+            Err(ValidationError::StageBoundExceeded { stage: 0, bound: 2, high_water: 3 })
+        ));
+        s.stage_bounds = Some(vec![3]);
+        validate(&s).unwrap();
+        // enforced whenever present, regardless of the kind tag
+        s.kind = ScheduleKind::OneFOneB;
+        s.stage_bounds = Some(vec![2]);
+        assert!(matches!(validate(&s), Err(ValidationError::StageBoundExceeded { .. })));
+    }
+
+    #[test]
+    fn rejects_wrong_length_stage_bounds() {
+        let mut s = sched(vec![Op::fwd(0), Op::bwd(0)]);
+        s.kind = ScheduleKind::BPipe { bound: 2 };
+        s.stage_bounds = Some(vec![2, 2]);
+        assert!(matches!(
+            validate(&s),
+            Err(ValidationError::StageBoundsWrongLength { expected: 1, got: 2 })
+        ));
     }
 }

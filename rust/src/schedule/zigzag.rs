@@ -1,0 +1,231 @@
+//! General zig-zag virtual pipelines — the controllable-memory placement
+//! family (Qi et al. 2024, "Pipeline Parallelism with Controllable
+//! Memory") at arbitrary chunk counts.
+//!
+//! Each physical stage hosts `v` model chunks whose dataflow alternates
+//! direction: even chunks flow stage 0→p−1, odd chunks p−1→0, and chunk
+//! `c+1` begins on the physical stage where chunk `c` ended — so the
+//! virtual pipeline traces a zig-zag over the devices.  `v = 2` is the
+//! V shape ([`super::v_shaped()`] is a thin wrapper over this generator);
+//! `v = 4` is the W-shaped placement.  For even `v` every stage hosts a
+//! direction-balanced set of virtual stages, so stash lifetimes sum to
+//! ~constant across stages (balance by placement); odd `v` leaves the
+//! final down-sweep unpaired and re-introduces a front-loaded ramp —
+//! the sweep exposes both.
+//!
+//! Construction mirrors the V-shaped one: take the 1F1B schedule of the
+//! `v·p`-deep *virtual* pipeline, assign each virtual op its completion
+//! slot under unit-time list scheduling (Kahn order over the virtual
+//! dependency DAG), and fold each physical stage's `v` virtual programs
+//! into one op stream ordered by those slots.  Physical stage `s` hosts
+//! virtual stage `c·p + s` for even chunks and `c·p + (p−1−s)` for odd
+//! ones.  The result validates under the standard per-stage invariants
+//! and carries [`Placement::ZigZag`] so the simulator derives each
+//! chunk's dataflow in the right direction.
+
+use super::{Op, OpKind, Placement, Schedule, ScheduleKind, StageProgram};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Physical stage hosting virtual stage `c·p + off` of a zig-zag
+/// placement — the inverse of the fold below.
+#[inline]
+pub fn zigzag_offset(p: u64, stage: u64, chunk: u64) -> u64 {
+    if chunk % 2 == 0 {
+        stage
+    } else {
+        p - 1 - stage
+    }
+}
+
+/// Generate the `v`-chunk zig-zag schedule for `p` stages and `m`
+/// microbatches.  `v = 1` degenerates to plain 1F1B dataflow; `v = 2`
+/// is the V shape; `v = 4` the W.
+pub fn zigzag(p: u64, m: u64, v: u64) -> Schedule {
+    assert!(p >= 1, "need at least one stage");
+    assert!(m >= 1, "need at least one microbatch");
+    assert!(v >= 1, "need at least one chunk");
+    let vp = (v * p) as usize;
+    let virt = super::one_f_one_b(v * p, m);
+
+    // node ids over the virtual schedule, in (virtual stage, op index) order
+    let mut base = vec![0usize; vp + 1];
+    for d in 0..vp {
+        base[d + 1] = base[d] + virt.programs[d].ops.len();
+    }
+    let n = base[vp];
+    // dense (virtual stage, kind, mb) -> op index table: one O(ops)
+    // build instead of a linear scan per dependency lookup
+    let m_us = m as usize;
+    let mut pos_tab = vec![usize::MAX; vp * 2 * m_us];
+    for d in 0..vp {
+        for (j, op) in virt.programs[d].ops.iter().enumerate() {
+            let k = if op.kind == OpKind::Fwd { 0 } else { 1 };
+            pos_tab[(d * 2 + k) * m_us + op.mb as usize] = j;
+        }
+    }
+    let pos = |d: usize, kind: OpKind, mb: u64| -> usize {
+        let k = if kind == OpKind::Fwd { 0 } else { 1 };
+        pos_tab[(d * 2 + k) * m_us + mb as usize]
+    };
+
+    // dependency edges of the virtual 1F1B DAG (unit-time ops)
+    let mut deps: Vec<Vec<usize>> = vec![Vec::with_capacity(3); n];
+    for d in 0..vp {
+        for (j, op) in virt.programs[d].ops.iter().enumerate() {
+            let id = base[d] + j;
+            if j > 0 {
+                deps[id].push(base[d] + j - 1);
+            }
+            match op.kind {
+                OpKind::Fwd => {
+                    if d > 0 {
+                        deps[id].push(base[d - 1] + pos(d - 1, OpKind::Fwd, op.mb));
+                    }
+                }
+                OpKind::Bwd => {
+                    deps[id].push(base[d] + pos(d, OpKind::Fwd, op.mb));
+                    if d + 1 < vp {
+                        deps[id].push(base[d + 1] + pos(d + 1, OpKind::Bwd, op.mb));
+                    }
+                }
+                OpKind::Evict | OpKind::Load => unreachable!("1f1b base has no transfers"),
+            }
+        }
+    }
+
+    // unit-time list schedule: finish slot of each virtual op
+    let mut indeg = vec![0usize; n];
+    let mut rev: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (id, ds) in deps.iter().enumerate() {
+        indeg[id] = ds.len();
+        for &d in ds {
+            rev[d].push(id);
+        }
+    }
+    let mut finish = vec![0u64; n];
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = (0..n)
+        .filter(|&i| indeg[i] == 0)
+        .map(|i| Reverse((0, i)))
+        .collect();
+    let mut done = 0usize;
+    while let Some(Reverse((t, id))) = heap.pop() {
+        done += 1;
+        finish[id] = t + 1;
+        for &nxt in &rev[id] {
+            indeg[nxt] -= 1;
+            if indeg[nxt] == 0 {
+                let r = deps[nxt].iter().map(|&d| finish[d]).max().unwrap_or(0);
+                heap.push(Reverse((r, nxt)));
+            }
+        }
+    }
+    assert_eq!(done, n, "virtual 1f1b DAG must be acyclic");
+
+    // fold: physical stage s hosts virtual stage c·p + zigzag_offset per
+    // chunk, merged in finish-slot order
+    let programs = (0..p)
+        .map(|s| {
+            let mut items: Vec<(u64, usize, usize, Op)> = Vec::new();
+            for chunk in 0..v {
+                let d = (chunk * p + zigzag_offset(p, s, chunk)) as usize;
+                for (j, op) in virt.programs[d].ops.iter().enumerate() {
+                    items.push((finish[base[d] + j], d, j, Op { kind: op.kind, mb: op.mb, chunk }));
+                }
+            }
+            items.sort_by_key(|&(f, d, j, _)| (f, d, j));
+            StageProgram { stage: s, ops: items.into_iter().map(|it| it.3).collect() }
+        })
+        .collect();
+
+    Schedule {
+        p,
+        m,
+        chunks: v,
+        placement: Placement::ZigZag,
+        kind: ScheduleKind::ZigZag { chunks: v },
+        stage_bounds: None,
+        programs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::{interleaved, v_shaped, validate};
+
+    #[test]
+    fn validates_across_shapes_and_chunk_counts() {
+        for (p, m) in [(1u64, 1u64), (2, 2), (2, 4), (4, 4), (4, 8), (8, 16), (3, 5), (5, 7)] {
+            for v in 1..=5 {
+                let s = zigzag(p, m, v);
+                validate(&s).unwrap_or_else(|e| panic!("p={p} m={m} v={v}: {e}"));
+                for st in 0..p {
+                    assert_eq!(s.count(st, OpKind::Fwd) as u64, v * m, "p={p} m={m} v={v}");
+                    assert_eq!(s.count(st, OpKind::Bwd) as u64, v * m, "p={p} m={m} v={v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn v2_reproduces_v_shaped_exactly() {
+        // v_shaped is a thin wrapper: op-identical output, only the kind
+        // tag differs
+        for (p, m) in [(2u64, 4u64), (4, 8), (8, 32)] {
+            let z = zigzag(p, m, 2);
+            let v = v_shaped(p, m);
+            assert_eq!(z.programs, v.programs, "p={p} m={m}");
+            assert_eq!(z.kind, ScheduleKind::ZigZag { chunks: 2 });
+            assert_eq!(v.kind, ScheduleKind::VShaped);
+        }
+    }
+
+    #[test]
+    fn even_v_balances_stash_pressure() {
+        // even chunk counts pair each down-sweep with an up-sweep, so the
+        // per-stage stash high-water is (near-)uniform — the W keeps the
+        // V's balance property; interleaved at the same v does not
+        for v in [2i64, 4] {
+            let s = zigzag(8, 64, v as u64);
+            let hws: Vec<i64> = (0..8).map(|st| s.program(st).stash_high_water()).collect();
+            let spread = hws.iter().max().unwrap() - hws.iter().min().unwrap();
+            assert!(spread <= 1, "v={v} spread {spread}: {hws:?}");
+            let il = interleaved(8, 64, v as u64);
+            let il_hws: Vec<i64> = (0..8).map(|st| il.program(st).stash_high_water()).collect();
+            let il_spread = il_hws.iter().max().unwrap() - il_hws.iter().min().unwrap();
+            assert!(spread < il_spread, "v={v}: zigzag {hws:?} vs interleaved {il_hws:?}");
+        }
+    }
+
+    #[test]
+    fn odd_v_leaves_a_ramp() {
+        // an odd chunk count has one unpaired down-sweep: the front of
+        // the pipe carries more stash than the back (documented, and the
+        // reason the sweep's W scenario uses v = 4)
+        let s = zigzag(8, 64, 3);
+        let hws: Vec<i64> = (0..8).map(|st| s.program(st).stash_high_water()).collect();
+        assert!(hws[0] > hws[7], "{hws:?}");
+    }
+
+    #[test]
+    fn junction_stages_run_chunks_back_to_back() {
+        // chunk c ends and chunk c+1 begins on the same physical stage:
+        // stage p−1 for even c, stage 0 for odd c.  A microbatch's
+        // chunk-(c+1) forward closely follows its chunk-c forward there.
+        let s = zigzag(4, 8, 4);
+        for (c, stage) in [(0u64, 3u64), (1, 0), (2, 3)] {
+            let ops = &s.program(stage).ops;
+            let f0 = ops
+                .iter()
+                .position(|o| o.kind == OpKind::Fwd && o.mb == 0 && o.chunk == c)
+                .unwrap();
+            let f1 = ops
+                .iter()
+                .position(|o| o.kind == OpKind::Fwd && o.mb == 0 && o.chunk == c + 1)
+                .unwrap();
+            assert!(f1 > f0, "chunk {} before {} on stage {stage}", c + 1, c);
+            assert!(f1 - f0 <= 3, "chunk-{} fwd should closely follow chunk-{c}: {f0} vs {f1}", c + 1);
+        }
+    }
+}

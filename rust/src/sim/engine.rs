@@ -6,8 +6,9 @@
 //! form a DAG:
 //!
 //! * `Fwd(s, i, c)` needs the previous hop of chunk `c`'s dataflow
-//!   (`Fwd(s−1, i, c)` for sequential placement, the V path for
-//!   [`Placement::VShape`]) and the previous compute op on stage `s`;
+//!   (`Fwd(s−1, i, c)` for sequential placement, the alternating-sweep
+//!   path for [`Placement::ZigZag`] — V at 2 chunks, W at 4) and the
+//!   previous compute op on stage `s`;
 //! * `Bwd(s, i, c)` needs the downstream gradient along the reverse of
 //!   that dataflow, its own `Fwd(s, i, c)`, the previous compute op, and
 //!   — if the stash was evicted — the most recent `Load(s, i, c)`
@@ -24,7 +25,7 @@
 //!
 //! ## Hot path: the zero-allocation workspace
 //!
-//! The DES inner loop is the cost of every cell in [`super::sweep`]'s
+//! The DES inner loop is the cost of every cell in [`mod@super::sweep`]'s
 //! experiment × schedule × bound × layout grid, so all per-run state
 //! lives in a reusable [`SimWorkspace`] owned by each sweep worker:
 //!
@@ -180,6 +181,12 @@ fn cix_get(
 
 /// Previous virtual-pipeline hop of chunk `chunk`'s forward dataflow at
 /// stage `s` (backward deps are the reverse of this path).
+///
+/// Zig-zag placement: even chunks flow 0→p−1, odd chunks p−1→0; a
+/// chunk's *offset* along its own sweep is `s` (even) or `p−1−s` (odd).
+/// At offset 0 of chunk c > 0 the dep is the previous chunk's last hop,
+/// which the placement puts on the SAME physical stage (the V/W
+/// junction).  Two chunks reproduce the V shape exactly.
 #[inline]
 #[allow(clippy::too_many_arguments)]
 fn fwd_dep(
@@ -187,12 +194,12 @@ fn fwd_dep(
     p: usize,
     m: usize,
     chunks: usize,
-    vshape: bool,
+    zigzag: bool,
     s: usize,
     mb: u64,
     chunk: u64,
 ) -> Option<u32> {
-    if !vshape {
+    if !zigzag {
         if s > 0 {
             Some(cix_get(cix, s - 1, OpKind::Fwd, mb, chunk, m, chunks))
         } else if chunk > 0 {
@@ -202,22 +209,22 @@ fn fwd_dep(
         } else {
             None
         }
-    } else if chunk == 0 {
-        if s > 0 {
-            Some(cix_get(cix, s - 1, OpKind::Fwd, mb, 0, m, chunks))
+    } else {
+        let off = if chunk % 2 == 0 { s } else { p - 1 - s };
+        if off > 0 {
+            let prev_s = if chunk % 2 == 0 { s - 1 } else { s + 1 };
+            Some(cix_get(cix, prev_s, OpKind::Fwd, mb, chunk, m, chunks))
+        } else if chunk > 0 {
+            // zig-zag junction: chunk c starts where chunk c−1 ended
+            Some(cix_get(cix, s, OpKind::Fwd, mb, chunk - 1, m, chunks))
         } else {
             None
         }
-    } else if s == p - 1 {
-        // V junction: chunk 1 starts where chunk 0 ends
-        Some(cix_get(cix, p - 1, OpKind::Fwd, mb, 0, m, chunks))
-    } else {
-        // chunk 1 flows p−1 → 0
-        Some(cix_get(cix, s + 1, OpKind::Fwd, mb, 1, m, chunks))
     }
 }
 
-/// Downstream gradient source for `Bwd(s, mb, chunk)`.
+/// Downstream gradient source for `Bwd(s, mb, chunk)` — the reverse of
+/// the [`fwd_dep`] dataflow.
 #[inline]
 #[allow(clippy::too_many_arguments)]
 fn bwd_dep(
@@ -225,12 +232,12 @@ fn bwd_dep(
     p: usize,
     m: usize,
     chunks: usize,
-    vshape: bool,
+    zigzag: bool,
     s: usize,
     mb: u64,
     chunk: u64,
 ) -> Option<u32> {
-    if !vshape {
+    if !zigzag {
         if s + 1 < p {
             Some(cix_get(cix, s + 1, OpKind::Bwd, mb, chunk, m, chunks))
         } else if chunk + 1 < chunks as u64 {
@@ -240,18 +247,18 @@ fn bwd_dep(
         } else {
             None
         }
-    } else if chunk == 1 {
-        if s > 0 {
-            Some(cix_get(cix, s - 1, OpKind::Bwd, mb, 1, m, chunks))
+    } else {
+        let off = if chunk % 2 == 0 { s } else { p - 1 - s };
+        if off + 1 < p {
+            let nxt_s = if chunk % 2 == 0 { s + 1 } else { s - 1 };
+            Some(cix_get(cix, nxt_s, OpKind::Bwd, mb, chunk, m, chunks))
+        } else if chunk + 1 < chunks as u64 {
+            // zig-zag junction in reverse: chunk c's grad at its last hop
+            // comes from chunk c+1 on the same stage
+            Some(cix_get(cix, s, OpKind::Bwd, mb, chunk + 1, m, chunks))
         } else {
             None
         }
-    } else if s + 1 < p {
-        Some(cix_get(cix, s + 1, OpKind::Bwd, mb, 0, m, chunks))
-    } else {
-        // V junction in reverse: chunk 0's grad at stage p−1 comes
-        // from chunk 1 at stage p−1
-        Some(cix_get(cix, p - 1, OpKind::Bwd, mb, 1, m, chunks))
     }
 }
 
@@ -411,7 +418,7 @@ impl SimWorkspace {
         let p = schedule.p as usize;
         let m = schedule.m as usize;
         let chunks = schedule.chunks.max(1) as usize;
-        let vshape = schedule.placement == Placement::VShape;
+        let zigzag = schedule.placement == Placement::ZigZag;
 
         // -- flatten: global node ids + dense compute index ---------------
         self.base.clear();
@@ -469,7 +476,7 @@ impl SimWorkspace {
                             self.dep_edges.push(prev_compute);
                         }
                         if let Some(d) =
-                            fwd_dep(&self.cix, p, m, chunks, vshape, s, op.mb, op.chunk)
+                            fwd_dep(&self.cix, p, m, chunks, zigzag, s, op.mb, op.chunk)
                         {
                             self.dep_edges.push(d);
                         }
@@ -489,7 +496,7 @@ impl SimWorkspace {
                             chunks,
                         ));
                         if let Some(d) =
-                            bwd_dep(&self.cix, p, m, chunks, vshape, s, op.mb, op.chunk)
+                            bwd_dep(&self.cix, p, m, chunks, zigzag, s, op.mb, op.chunk)
                         {
                             self.dep_edges.push(d);
                         }
@@ -970,6 +977,39 @@ mod tests {
         let spread = r.stash_high_water.iter().max().unwrap()
             - r.stash_high_water.iter().min().unwrap();
         assert!(spread <= 1, "V-shaped per-device stash {:?}", r.stash_high_water);
+    }
+
+    #[test]
+    fn w_shaped_cuts_bubble_but_costs_memory() {
+        // zig-zag at v = 4 (the W placement): shorter iteration than the
+        // V (more chunks, smaller bubble), still balanced by placement,
+        // but four live chunks per stage cost more stash memory
+        let e = paper_experiment(8).unwrap();
+        let m = e.parallel.num_microbatches();
+        let layout = crate::bpipe::pair_adjacent_layout(e.parallel.p, e.cluster.n_nodes);
+        let w = simulate(&e, &crate::schedule::zigzag(e.parallel.p, m, 4), &layout);
+        let v = simulate(&e, &v_shaped(e.parallel.p, m), &layout);
+        assert!(w.makespan < v.makespan, "W {} vs V {}", w.makespan, v.makespan);
+        let spread = w.stash_high_water.iter().max().unwrap()
+            - w.stash_high_water.iter().min().unwrap();
+        assert!(spread <= 1, "W per-device stash {:?}", w.stash_high_water);
+        assert!(w.mem_high_water[3] > v.mem_high_water[3]);
+    }
+
+    #[test]
+    fn per_stage_bounds_simulate_and_flatten() {
+        // capacity-derived non-uniform bounds on exp (8)'s 1F1B: fits
+        // (uniform 1F1B OOMs at stage 0) with less transfer traffic than
+        // the uniform derived bound
+        let e = paper_experiment(8).unwrap();
+        let m = e.parallel.num_microbatches();
+        let layout = crate::bpipe::pair_adjacent_layout(e.parallel.p, e.cluster.n_nodes);
+        let base = one_f_one_b(e.parallel.p, m);
+        let bounds = crate::bpipe::capacity_stage_bounds(&e, &base);
+        let per = simulate(&e, &crate::bpipe::rebalance_bounded(&base, &bounds), &layout);
+        let uni = simulate(&e, &rebalance(&base, None), &layout);
+        assert_eq!(per.oom_stage, None, "{:?}", per.mem_high_water);
+        assert!(per.transfer_bytes < uni.transfer_bytes);
     }
 
     #[test]

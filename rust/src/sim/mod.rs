@@ -5,7 +5,7 @@
 //! schedules against those times in a reusable zero-allocation
 //! [`SimWorkspace`] (flat CSR dependency edges, dense op index, opt-in
 //! trace), tracking memory, bubbles, BPipe transfer overlap and MFU;
-//! [`sweep`] fans the full schedule × bound × layout × experiment grid
+//! [`sweep()`] fans the full schedule × bound × layout × experiment grid
 //! out over a thread pool — one workspace per worker — ranks the
 //! outcomes, and exports them as CSV/JSON.  Together they regenerate the
 //! paper's Tables 3/5 and Figures 1/2 at the paper's scale on one CPU —

@@ -1,7 +1,7 @@
 //! `sim::sweep` — the parallel design-space sweep driver.
 //!
 //! The paper answers "does memory rebalancing pay off?" for exactly one
-//! schedule (1F1B).  With [`crate::bpipe::rebalance`] schedule-agnostic,
+//! schedule (1F1B).  With [`crate::bpipe::rebalance()`] schedule-agnostic,
 //! the interesting spaces are two grids:
 //!
 //! ```text
@@ -11,13 +11,16 @@
 //!
 //! The first ranks the scheduling families — imbalanced (1F1B, GPipe),
 //! anti-balanced virtual pipelines (interleaved), balanced-by-placement
-//! (V-shaped), each ± the rebalancing transform at its derived bound.
-//! The second ([`bounds_grid`], `bpipe sweep --bounds`) traces the
-//! **bound × load_stall sensitivity frontier**: for every scenario,
-//! rebalance at every bound from the derived value down to the
-//! infeasibility knee, showing where tighter memory starts costing
-//! stalls (and where the acceptor side OOMs) — ~2300 cells at paper
-//! scale, ~17× the ranking grid.
+//! (V-shaped, and W-shaped = zig-zag at four chunks) — each bare,
+//! rebalanced at its derived uniform bound, and rebalanced at the
+//! capacity-derived **per-stage bounds** ([`ScenarioSpec::stage_bounded`],
+//! the SlimPipe-motivated non-uniform variant).  The second
+//! ([`bounds_grid`], `bpipe sweep --bounds`) traces the **bound ×
+//! load_stall sensitivity frontier**: for every scenario, rebalance at
+//! every uniform bound from the derived value down to the infeasibility
+//! knee, showing where tighter memory starts costing stalls (and where
+//! the acceptor side OOMs) — ~3600 cells at paper scale, ~12× the
+//! ranking grid.
 //!
 //! ## Execution model
 //!
@@ -46,45 +49,79 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, OnceLock};
 
 /// What to run in one cell, before the schedule exists: a generator
-/// family, optionally composed with the rebalance transform at a fixed
-/// or derived bound.  `Copy`-small on purpose — the grid holds thousands.
+/// family, optionally composed with the rebalance transform at a fixed,
+/// derived, or per-stage capacity-derived bound.  `Copy`-small on
+/// purpose — the grid holds thousands.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ScenarioSpec {
     pub family: Family,
-    /// compose with [`crate::bpipe::rebalance`]?
+    /// compose with [`crate::bpipe::rebalance()`]?
     pub rebalance: bool,
     /// explicit rebalance bound; `None` = the derived pair-mean bound
     pub bound: Option<u64>,
+    /// compose with [`crate::bpipe::rebalance_bounded`] at the
+    /// capacity-derived per-stage bounds instead of a uniform one
+    /// ([`crate::bpipe::capacity_stage_bounds`]; needs the experiment, so
+    /// only [`ScenarioSpec::build_for`] can materialize it)
+    pub per_stage: bool,
 }
 
 impl ScenarioSpec {
     /// The family alone.
     pub fn base(family: Family) -> Self {
-        ScenarioSpec { family, rebalance: false, bound: None }
+        ScenarioSpec { family, rebalance: false, bound: None, per_stage: false }
     }
 
     /// The family composed with rebalancing (derived bound if `None`).
     pub fn rebalanced(family: Family, bound: Option<u64>) -> Self {
-        ScenarioSpec { family, rebalance: true, bound }
+        ScenarioSpec { family, rebalance: true, bound, per_stage: false }
     }
 
-    /// Display name ("1F1B", "1F1B+rebalance", …) — derived so it can
-    /// never desync from the flags it labels.
+    /// The family composed with per-stage capacity-derived rebalancing.
+    pub fn stage_bounded(family: Family) -> Self {
+        ScenarioSpec { family, rebalance: true, bound: None, per_stage: true }
+    }
+
+    /// Display name ("1F1B", "1F1B+rebalance", "1F1B+stage-bounds", …) —
+    /// derived so it can never desync from the flags it labels.
     pub fn name(&self) -> &'static str {
-        if self.rebalance {
+        if self.per_stage {
+            self.family.stage_bounds_label()
+        } else if self.rebalance {
             self.family.rebalanced_label()
         } else {
             self.family.label()
         }
     }
 
-    /// Materialize the schedule this spec describes.
+    /// Materialize the schedule this spec describes, independent of any
+    /// experiment.  Per-stage specs need the experiment's memory model —
+    /// use [`ScenarioSpec::build_for`] for those.
     pub fn build(&self, p: u64, m: u64) -> Schedule {
+        assert!(
+            !self.per_stage,
+            "per-stage bounds are capacity-derived: build_for(experiment) required"
+        );
         let base = self.family.build(p, m);
         if self.rebalance {
             crate::bpipe::rebalance(&base, self.bound)
         } else {
             base
+        }
+    }
+
+    /// Materialize the schedule this spec describes for one experiment
+    /// (shape from its parallelism; per-stage bounds from its memory
+    /// model).
+    pub fn build_for(&self, e: &ExperimentConfig) -> Schedule {
+        let p = e.parallel.p;
+        let m = e.parallel.num_microbatches();
+        if self.per_stage {
+            let base = self.family.build(p, m);
+            let bounds = crate::bpipe::capacity_stage_bounds(e, &base);
+            crate::bpipe::rebalance_bounded(&base, &bounds)
+        } else {
+            self.build(p, m)
         }
     }
 }
@@ -106,31 +143,47 @@ pub struct SweepOutcome {
     pub model: String,
     pub microbatch: u64,
     pub scenario: &'static str,
-    /// the rebalance bound actually applied (derived or explicit), if any
+    /// the uniform rebalance bound actually applied (derived or
+    /// explicit), if any — `None` for base and per-stage-bounds cells
     pub bound: Option<u64>,
+    /// the per-stage bounds actually applied (capacity-derived), if any
+    pub stage_bounds: Option<Vec<u64>>,
     pub layout: &'static str,
     pub mfu_pct: f64,
     pub makespan: f64,
     pub bubble_pct: f64,
     pub peak_mem_gib: f64,
+    /// per-stage peak device memory (GiB) — Figure-1 renderer input
+    pub per_stage_mem_gib: Vec<f64>,
     pub oom_stage: Option<u64>,
     pub load_stall_ms: f64,
     pub transfer_gib: f64,
 }
 
-/// The seven schedule scenarios of the ranking grid: the three
-/// scheduling families ± rebalancing at the derived bound (GPipe as the
-/// memory-worst-case baseline).
+/// The fifteen schedule scenarios of the ranking grid: five scheduling
+/// families — imbalanced (1F1B), memory-worst-case (GPipe),
+/// anti-balanced virtual pipeline (interleaved), balanced-by-placement
+/// (V-shaped, W-shaped = zig-zag v=4) — each bare, rebalanced at the
+/// derived uniform bound, and rebalanced at the capacity-derived
+/// per-stage bounds.
 pub fn scenario_specs(v: u64) -> Vec<ScenarioSpec> {
-    vec![
-        ScenarioSpec::base(Family::OneFOneB),
-        ScenarioSpec::rebalanced(Family::OneFOneB, None),
-        ScenarioSpec::base(Family::GPipe),
-        ScenarioSpec::base(Family::Interleaved { v }),
-        ScenarioSpec::rebalanced(Family::Interleaved { v }, None),
-        ScenarioSpec::base(Family::VShaped),
-        ScenarioSpec::rebalanced(Family::VShaped, None),
-    ]
+    let families = [
+        Family::OneFOneB,
+        Family::GPipe,
+        Family::Interleaved { v },
+        Family::VShaped,
+        Family::ZigZag { v: 4 },
+    ];
+    families
+        .iter()
+        .flat_map(|&f| {
+            [
+                ScenarioSpec::base(f),
+                ScenarioSpec::rebalanced(f, None),
+                ScenarioSpec::stage_bounded(f),
+            ]
+        })
+        .collect()
 }
 
 /// All ranking-grid tasks for one experiment: every scenario × the
@@ -159,10 +212,10 @@ pub fn paper_grid(v: u64) -> Vec<SweepTask> {
 }
 
 /// Bound-sensitivity tasks for one experiment: every rebalanceable
-/// family (1F1B, GPipe, interleaved, V-shaped) at **every** bound from
-/// its derived pair-mean value down to the infeasibility knee (2, the
-/// smallest the transform admits: one live + one incoming stash), on
-/// both layouts.  Sweeping the whole range — instead of the single
+/// family (1F1B, GPipe, interleaved, V-shaped, W-shaped) at **every**
+/// bound from its derived pair-mean value down to the infeasibility
+/// knee (2, the smallest the transform admits: one live + one incoming
+/// stash), on both layouts.  Sweeping the whole range — instead of the single
 /// derived point — exposes the memory/throughput frontier: `load_stall`
 /// grows and the acceptor side eventually OOMs as the bound tightens.
 pub fn bound_sensitivity_tasks(e: &ExperimentConfig, v: u64) -> Vec<SweepTask> {
@@ -170,9 +223,13 @@ pub fn bound_sensitivity_tasks(e: &ExperimentConfig, v: u64) -> Vec<SweepTask> {
     let m = e.parallel.num_microbatches();
     let shared = Arc::new(e.clone());
     let mut tasks = Vec::new();
-    for family in
-        [Family::OneFOneB, Family::GPipe, Family::Interleaved { v }, Family::VShaped]
-    {
+    for family in [
+        Family::OneFOneB,
+        Family::GPipe,
+        Family::Interleaved { v },
+        Family::VShaped,
+        Family::ZigZag { v: 4 },
+    ] {
         for bound in bound_range(&family.build(p, m)).rev() {
             let spec = ScenarioSpec::rebalanced(family, Some(bound));
             for layout in [
@@ -187,7 +244,7 @@ pub fn bound_sensitivity_tasks(e: &ExperimentConfig, v: u64) -> Vec<SweepTask> {
 }
 
 /// The full bound-sensitivity grid over every Table-3 experiment
-/// (~2300 cells at paper scale; `bpipe sweep --bounds`).
+/// (~3600 cells at paper scale; `bpipe sweep --bounds`).
 pub fn bounds_grid(v: u64) -> Vec<SweepTask> {
     paper_experiments().iter().flat_map(|e| bound_sensitivity_tasks(e, v)).collect()
 }
@@ -231,12 +288,13 @@ pub fn sweep(tasks: Vec<SweepTask>, threads: usize) -> Vec<SweepOutcome> {
 /// Simulate one cell in the given workspace (the worker inner loop).
 fn run_task_in(ws: &mut SimWorkspace, t: &SweepTask) -> SweepOutcome {
     let gib = (1u64 << 30) as f64;
-    let p = t.experiment.parallel.p;
-    let m = t.experiment.parallel.num_microbatches();
-    let schedule = t.spec.build(p, m);
+    let schedule = t.spec.build_for(&t.experiment);
     let stats = ws.run(&t.experiment, &schedule, &t.layout, SimOptions { trace: false });
-    let bound = match schedule.kind {
-        ScheduleKind::BPipe { bound } => Some(bound),
+    // a per-stage-bounds cell reports its bound vector; a uniform
+    // rebalance cell its scalar bound; a base cell neither
+    let stage_bounds = schedule.stage_bounds.clone();
+    let bound = match (schedule.kind, &stage_bounds) {
+        (ScheduleKind::BPipe { bound }, None) => Some(bound),
         _ => None,
     };
     SweepOutcome {
@@ -245,14 +303,30 @@ fn run_task_in(ws: &mut SimWorkspace, t: &SweepTask) -> SweepOutcome {
         microbatch: t.experiment.parallel.microbatch,
         scenario: t.spec.name(),
         bound,
+        stage_bounds,
         layout: t.layout.name,
         mfu_pct: stats.mfu_pct(),
         makespan: stats.makespan,
         bubble_pct: stats.bubble_fraction * 100.0,
         peak_mem_gib: stats.peak_mem_bytes as f64 / gib,
+        per_stage_mem_gib: ws.mem_high_water().iter().map(|&b| b as f64 / gib).collect(),
         oom_stage: stats.oom_stage,
         load_stall_ms: stats.load_stall * 1e3,
         transfer_gib: stats.transfer_bytes as f64 / gib,
+    }
+}
+
+/// The "k" column of the ranked table: a scalar bound, a per-stage
+/// `min..max` range, or `-` for base cells.
+fn bound_column(o: &SweepOutcome) -> String {
+    match (&o.stage_bounds, o.bound) {
+        (Some(bs), _) => {
+            let lo = bs.iter().min().copied().unwrap_or(0);
+            let hi = bs.iter().max().copied().unwrap_or(0);
+            format!("{lo}..{hi}")
+        }
+        (None, Some(k)) => k.to_string(),
+        (None, None) => "-".into(),
     }
 }
 
@@ -282,7 +356,7 @@ pub fn render_sweep(outcomes: &[SweepOutcome]) -> String {
             o.model.clone(),
             o.microbatch.to_string(),
             o.scenario.to_string(),
-            o.bound.map(|k| k.to_string()).unwrap_or_else(|| "-".into()),
+            bound_column(o),
             o.layout.to_string(),
             format!("{:.1}", o.mfu_pct),
             format!("{:.2}", o.makespan),
@@ -357,11 +431,15 @@ pub fn render_bound_frontier(outcomes: &[SweepOutcome]) -> String {
 /// Export every cell as CSV (full precision, one row per outcome).
 /// Non-finite values become empty fields — the CSV cousin of the JSON
 /// writer's `null` (strict numeric consumers reject a literal "NaN").
+/// The two trailing vector columns (`stage_bounds`,
+/// `per_stage_mem_gib`) are comma-joined inside one field, so
+/// [`Table::render_csv`] quotes them per RFC 4180.
 pub fn sweep_to_csv(outcomes: &[SweepOutcome]) -> String {
     let num = |v: f64| if v.is_finite() { format!("{v}") } else { String::new() };
     let mut t = Table::new(&[
         "exp", "model", "microbatch", "scenario", "bound", "layout", "mfu_pct", "makespan_s",
         "bubble_pct", "peak_mem_gib", "oom_stage", "load_stall_ms", "transfer_gib",
+        "stage_bounds", "per_stage_mem_gib",
     ]);
     for o in outcomes {
         t.push(vec![
@@ -378,6 +456,17 @@ pub fn sweep_to_csv(outcomes: &[SweepOutcome]) -> String {
             o.oom_stage.map(|s| s.to_string()).unwrap_or_default(),
             num(o.load_stall_ms),
             num(o.transfer_gib),
+            o.stage_bounds
+                .as_ref()
+                .map(|bs| {
+                    bs.iter().map(|k| k.to_string()).collect::<Vec<_>>().join(",")
+                })
+                .unwrap_or_default(),
+            o.per_stage_mem_gib
+                .iter()
+                .map(|g| num(*g))
+                .collect::<Vec<_>>()
+                .join(","),
         ]);
     }
     t.render_csv()
@@ -401,6 +490,15 @@ pub fn sweep_to_json(outcomes: &[SweepOutcome]) -> Json {
                         "bound",
                         o.bound.map(|k| Json::Num(k as f64)).unwrap_or(Json::Null),
                     ),
+                    (
+                        "stage_bounds",
+                        o.stage_bounds
+                            .as_ref()
+                            .map(|bs| {
+                                Json::Arr(bs.iter().map(|&k| Json::Num(k as f64)).collect())
+                            })
+                            .unwrap_or(Json::Null),
+                    ),
                     ("layout", Json::str(o.layout)),
                     ("mfu_pct", Json::Num(o.mfu_pct)),
                     ("makespan_s", Json::Num(o.makespan)),
@@ -412,6 +510,10 @@ pub fn sweep_to_json(outcomes: &[SweepOutcome]) -> Json {
                     ),
                     ("load_stall_ms", Json::Num(o.load_stall_ms)),
                     ("transfer_gib", Json::Num(o.transfer_gib)),
+                    (
+                        "per_stage_mem_gib",
+                        Json::Arr(o.per_stage_mem_gib.iter().map(|&g| Json::Num(g)).collect()),
+                    ),
                 ])
             })
             .collect(),
@@ -443,16 +545,31 @@ mod tests {
     #[test]
     fn grid_covers_all_scenarios_and_layouts() {
         let outs = sweep(small_grid(), 0);
-        assert_eq!(outs.len(), 7 * 2);
+        assert_eq!(outs.len(), 15 * 2);
         for scenario in [
-            "1F1B", "1F1B+rebalance", "GPipe", "interleaved", "interleaved+rebalance",
-            "V-shaped", "V-shaped+rebalance",
+            "1F1B", "1F1B+rebalance", "1F1B+stage-bounds", "GPipe", "GPipe+rebalance",
+            "GPipe+stage-bounds", "interleaved", "interleaved+rebalance",
+            "interleaved+stage-bounds", "V-shaped", "V-shaped+rebalance",
+            "V-shaped+stage-bounds", "W-shaped", "W-shaped+rebalance", "W-shaped+stage-bounds",
         ] {
             assert_eq!(outs.iter().filter(|o| o.scenario == scenario).count(), 2, "{scenario}");
         }
-        // rebalanced cells report the bound that was applied
         for o in &outs {
+            // uniformly rebalanced cells report the scalar bound applied;
+            // per-stage cells report the full bound vector instead
             assert_eq!(o.bound.is_some(), o.scenario.ends_with("+rebalance"), "{}", o.scenario);
+            assert_eq!(
+                o.stage_bounds.is_some(),
+                o.scenario.ends_with("+stage-bounds"),
+                "{}",
+                o.scenario
+            );
+            assert_eq!(
+                o.per_stage_mem_gib.len() as u64,
+                paper_experiment(8).unwrap().parallel.p,
+                "{}",
+                o.scenario
+            );
         }
     }
 
@@ -485,7 +602,24 @@ mod tests {
     #[test]
     fn paper_grid_is_full_size() {
         let tasks = paper_grid(2);
-        assert_eq!(tasks.len(), 10 * 7 * 2);
+        assert_eq!(tasks.len(), 10 * 15 * 2);
+    }
+
+    #[test]
+    fn per_stage_cells_fit_where_uniform_base_ooms() {
+        // the stage-bounds scenario earns its grid slot: on exp (8) it
+        // rescues 1F1B (like the uniform rebalance) but moves less data
+        let outs = sweep(small_grid(), 0);
+        let find = |scenario: &str| {
+            outs.iter()
+                .find(|o| o.scenario == scenario && o.layout == "pair-adjacent")
+                .unwrap()
+        };
+        let per = find("1F1B+stage-bounds");
+        let uni = find("1F1B+rebalance");
+        assert_eq!(per.oom_stage, None);
+        assert!(per.transfer_gib < uni.transfer_gib);
+        assert_eq!(per.stage_bounds, Some(vec![5, 6, 6, 5, 4, 3, 2, 2]));
     }
 
     #[test]
@@ -504,10 +638,14 @@ mod tests {
             assert!(t.spec.rebalance && t.spec.bound.unwrap() >= 2);
         }
         // every rebalanceable family contributes cells (dropping one —
-        // e.g. GPipe, the largest — would silently halve the grid)
-        for family in
-            [Family::OneFOneB, Family::GPipe, Family::Interleaved { v: 2 }, Family::VShaped]
-        {
+        // e.g. GPipe, the largest — would silently shrink the grid)
+        for family in [
+            Family::OneFOneB,
+            Family::GPipe,
+            Family::Interleaved { v: 2 },
+            Family::VShaped,
+            Family::ZigZag { v: 4 },
+        ] {
             assert!(
                 tasks.iter().any(|t| t.spec.family == family),
                 "{family:?} missing from the bounds grid"

@@ -5,9 +5,12 @@
 //! fields exactly, float fields to 1e-9 relative).  The values encode
 //! the conservative memory tie-break (allocations before frees at equal
 //! timestamps), so a regression in either the CSR dependency build, the
-//! FCFS link arbitration or the timeline accounting fails loudly.
+//! FCFS link arbitration, the zig-zag dataflow derivation or the
+//! timeline accounting fails loudly.  All 15 ranking scenarios are
+//! covered — including the W-shaped (zig-zag v=4) placement and the
+//! per-stage capacity-bounds rebalance — on both layouts (30 cells).
 //!
-//! A second test runs all 14 cells twice through ONE workspace and
+//! A second test runs all 30 cells twice through ONE workspace and
 //! demands bit-identical output — the arena reset must be complete.
 
 use bpipe::bpipe::{pair_adjacent_layout, sequential_layout, Layout};
@@ -27,7 +30,7 @@ struct Golden {
 
 /// Pinned reference outputs for exp (8), v = 2 (generated from the
 /// reference engine; see the module doc).
-static GOLDENS: [Golden; 14] = [
+static GOLDENS: [Golden; 30] = [
     Golden {
         scenario: "1F1B",
         layout: "pair-adjacent",
@@ -65,6 +68,24 @@ static GOLDENS: [Golden; 14] = [
         stash_high_water: [8, 7, 6, 5, 4, 5, 5, 4],
     },
     Golden {
+        scenario: "1F1B+stage-bounds",
+        layout: "pair-adjacent",
+        makespan: 32.15541465524464,
+        load_stall: 0.0,
+        transfer_bytes: 813390888960,
+        mem_high_water: [83524132608, 84607835904, 81131806464, 77655777024, 74179747584, 70703718144, 70703718144, 79956270336],
+        stash_high_water: [6, 7, 6, 5, 4, 3, 3, 5],
+    },
+    Golden {
+        scenario: "1F1B+stage-bounds",
+        layout: "sequential",
+        makespan: 41.74556310759805,
+        load_stall: 11.327325617849485,
+        transfer_bytes: 813390888960,
+        mem_high_water: [87000162048, 84607835904, 81131806464, 77655777024, 74179747584, 70703718144, 74179747584, 76480240896],
+        stash_high_water: [7, 7, 6, 5, 4, 3, 4, 4],
+    },
+    Golden {
         scenario: "GPipe",
         layout: "pair-adjacent",
         makespan: 32.1554146552447,
@@ -81,6 +102,42 @@ static GOLDENS: [Golden; 14] = [
         transfer_bytes: 0,
         mem_high_water: [285133840128, 282741513984, 282741513984, 282741513984, 282741513984, 282741513984, 282741513984, 285042007296],
         stash_high_water: [64, 64, 64, 64, 64, 64, 64, 64],
+    },
+    Golden {
+        scenario: "GPipe+rebalance",
+        layout: "pair-adjacent",
+        makespan: 32.1554146552447,
+        load_stall: 0.0,
+        transfer_bytes: 0,
+        mem_high_water: [285133840128, 282741513984, 282741513984, 282741513984, 282741513984, 282741513984, 282741513984, 285042007296],
+        stash_high_water: [64, 64, 64, 64, 64, 64, 64, 64],
+    },
+    Golden {
+        scenario: "GPipe+rebalance",
+        layout: "sequential",
+        makespan: 32.1554146552447,
+        load_stall: 0.0,
+        transfer_bytes: 0,
+        mem_high_water: [285133840128, 282741513984, 282741513984, 282741513984, 282741513984, 282741513984, 282741513984, 285042007296],
+        stash_high_water: [64, 64, 64, 64, 64, 64, 64, 64],
+    },
+    Golden {
+        scenario: "GPipe+stage-bounds",
+        layout: "pair-adjacent",
+        makespan: 32.1554146552447,
+        load_stall: 0.0,
+        transfer_bytes: 3239659438080,
+        mem_high_water: [285133840128, 282741513984, 282741513984, 282741513984, 286217543424, 286217543424, 286217543424, 288518036736],
+        stash_high_water: [64, 64, 64, 64, 65, 65, 65, 65],
+    },
+    Golden {
+        scenario: "GPipe+stage-bounds",
+        layout: "sequential",
+        makespan: 42.691744137953194,
+        load_stall: 10.5363294827085,
+        transfer_bytes: 3239659438080,
+        mem_high_water: [285133840128, 282741513984, 282741513984, 286217543424, 286217543424, 289693572864, 293169602304, 305898183936],
+        stash_high_water: [64, 64, 64, 65, 65, 66, 67, 70],
     },
     Golden {
         scenario: "interleaved",
@@ -119,6 +176,24 @@ static GOLDENS: [Golden; 14] = [
         stash_high_water: [21, 21, 19, 18, 16, 16, 17, 16],
     },
     Golden {
+        scenario: "interleaved+stage-bounds",
+        layout: "pair-adjacent",
+        makespan: 30.622813512848893,
+        load_stall: 0.0,
+        transfer_bytes: 2002192957440,
+        mem_high_water: [85262147328, 84607835904, 84607835904, 88083865344, 91559894784, 95035924224, 95035924224, 99074432256],
+        stash_high_water: [13, 14, 14, 16, 18, 20, 20, 21],
+    },
+    Golden {
+        scenario: "interleaved+stage-bounds",
+        layout: "sequential",
+        makespan: 40.01140429639013,
+        load_stall: 22.343834273882557,
+        transfer_bytes: 2002192957440,
+        mem_high_water: [93952220928, 91559894784, 89821880064, 93297909504, 91559894784, 93297909504, 93297909504, 97336417536],
+        stash_high_water: [18, 18, 17, 19, 18, 19, 19, 20],
+    },
+    Golden {
         scenario: "V-shaped",
         layout: "pair-adjacent",
         makespan: 31.089752762057778,
@@ -136,8 +211,6 @@ static GOLDENS: [Golden; 14] = [
         mem_high_water: [92214206208, 89821880064, 89821880064, 89821880064, 89821880064, 89821880064, 89821880064, 92122373376],
         stash_high_water: [17, 17, 17, 17, 17, 17, 17, 17],
     },
-    // V-shaped's derived bound equals its (already balanced) natural
-    // high-water, so rebalancing it is a no-op: zero transfers
     Golden {
         scenario: "V-shaped+rebalance",
         layout: "pair-adjacent",
@@ -155,6 +228,78 @@ static GOLDENS: [Golden; 14] = [
         transfer_bytes: 0,
         mem_high_water: [92214206208, 89821880064, 89821880064, 89821880064, 89821880064, 89821880064, 89821880064, 92122373376],
         stash_high_water: [17, 17, 17, 17, 17, 17, 17, 17],
+    },
+    Golden {
+        scenario: "V-shaped+stage-bounds",
+        layout: "pair-adjacent",
+        makespan: 31.089752762057778,
+        load_stall: 0.0,
+        transfer_bytes: 3156234731520,
+        mem_high_water: [93952220928, 91559894784, 91559894784, 91559894784, 91559894784, 91559894784, 91559894784, 93860388096],
+        stash_high_water: [18, 18, 18, 18, 18, 18, 18, 18],
+    },
+    Golden {
+        scenario: "V-shaped+stage-bounds",
+        layout: "sequential",
+        makespan: 40.88502166459234,
+        load_stall: 10.862788791126235,
+        transfer_bytes: 3156234731520,
+        mem_high_water: [97428250368, 93297909504, 93297909504, 95035924224, 93297909504, 95035924224, 93297909504, 99074432256],
+        stash_high_water: [20, 19, 19, 20, 19, 20, 19, 21],
+    },
+    Golden {
+        scenario: "W-shaped",
+        layout: "pair-adjacent",
+        makespan: 30.023811671977107,
+        load_stall: 0.0,
+        transfer_bytes: 0,
+        mem_high_water: [120022441728, 117630115584, 117630115584, 117630115584, 117630115584, 117630115584, 117630115584, 119930608896],
+        stash_high_water: [66, 66, 66, 66, 66, 66, 66, 66],
+    },
+    Golden {
+        scenario: "W-shaped",
+        layout: "sequential",
+        makespan: 30.023811671977107,
+        load_stall: 0.0,
+        transfer_bytes: 0,
+        mem_high_water: [120022441728, 117630115584, 117630115584, 117630115584, 117630115584, 117630115584, 117630115584, 119930608896],
+        stash_high_water: [66, 66, 66, 66, 66, 66, 66, 66],
+    },
+    Golden {
+        scenario: "W-shaped+rebalance",
+        layout: "pair-adjacent",
+        makespan: 30.023811671977107,
+        load_stall: 0.0,
+        transfer_bytes: 0,
+        mem_high_water: [120022441728, 117630115584, 117630115584, 117630115584, 117630115584, 117630115584, 117630115584, 119930608896],
+        stash_high_water: [66, 66, 66, 66, 66, 66, 66, 66],
+    },
+    Golden {
+        scenario: "W-shaped+rebalance",
+        layout: "sequential",
+        makespan: 30.023811671977107,
+        load_stall: 0.0,
+        transfer_bytes: 0,
+        mem_high_water: [120022441728, 117630115584, 117630115584, 117630115584, 117630115584, 117630115584, 117630115584, 119930608896],
+        stash_high_water: [66, 66, 66, 66, 66, 66, 66, 66],
+    },
+    Golden {
+        scenario: "W-shaped+stage-bounds",
+        layout: "pair-adjacent",
+        makespan: 30.023811671977107,
+        load_stall: 0.0,
+        transfer_bytes: 3180566937600,
+        mem_high_water: [120891449088, 118499122944, 118499122944, 118499122944, 118499122944, 118499122944, 118499122944, 120799616256],
+        stash_high_water: [67, 67, 67, 67, 67, 67, 67, 67],
+    },
+    Golden {
+        scenario: "W-shaped+stage-bounds",
+        layout: "sequential",
+        makespan: 40.80997349202363,
+        load_stall: 16.19297814264887,
+        transfer_bytes: 3180566937600,
+        mem_high_water: [127843507968, 123713167104, 123713167104, 124582174464, 120237137664, 121106145024, 120237137664, 125144653056],
+        stash_high_water: [75, 73, 73, 74, 69, 70, 69, 72],
     },
 ];
 
@@ -166,11 +311,15 @@ fn layout_of(name: &str, p: u64, n_nodes: u64) -> Layout {
     }
 }
 
-/// All 14 (schedule, layout, golden) cells, built through the SAME
+/// All 30 (schedule, layout, golden) cells, built through the SAME
 /// `scenario_specs` the sweep runs — a renamed label or changed
 /// generator composition in the production grid fails the lookup here
-/// instead of silently testing a stale hand-rolled mapping.
-fn golden_cells(p: u64, m: u64, n_nodes: u64) -> Vec<(&'static Golden, Schedule, Layout)> {
+/// instead of silently testing a stale hand-rolled mapping.  Per-stage
+/// scenarios derive their capacity bounds from the experiment via
+/// `build_for`, exactly as the sweep worker does.
+fn golden_cells(e: &bpipe::config::ExperimentConfig) -> Vec<(&'static Golden, Schedule, Layout)> {
+    let p = e.parallel.p;
+    let n_nodes = e.cluster.n_nodes;
     let mut cells = Vec::new();
     for spec in scenario_specs(2) {
         for layout_name in ["pair-adjacent", "sequential"] {
@@ -178,7 +327,7 @@ fn golden_cells(p: u64, m: u64, n_nodes: u64) -> Vec<(&'static Golden, Schedule,
                 .iter()
                 .find(|g| g.scenario == spec.name() && g.layout == layout_name)
                 .unwrap_or_else(|| panic!("no golden for {} / {layout_name}", spec.name()));
-            cells.push((g, spec.build(p, m), layout_of(layout_name, p, n_nodes)));
+            cells.push((g, spec.build_for(e), layout_of(layout_name, p, n_nodes)));
         }
     }
     assert_eq!(cells.len(), GOLDENS.len(), "every golden must be exercised");
@@ -196,9 +345,7 @@ fn assert_close(got: f64, want: f64, what: &str, cell: &str) {
 #[test]
 fn engine_matches_goldens_across_all_scenarios_and_layouts() {
     let e = paper_experiment(8).unwrap();
-    let p = e.parallel.p;
-    let m = e.parallel.num_microbatches();
-    for (g, schedule, layout) in golden_cells(p, m, e.cluster.n_nodes) {
+    for (g, schedule, layout) in golden_cells(&e) {
         let cell = format!("{} / {}", g.scenario, g.layout);
         let r = simulate(&e, &schedule, &layout);
         assert_close(r.makespan, g.makespan, "makespan", &cell);
@@ -211,12 +358,10 @@ fn engine_matches_goldens_across_all_scenarios_and_layouts() {
 
 #[test]
 fn repeated_runs_on_one_workspace_are_bit_identical() {
-    // all 14 golden cells, twice, through ONE workspace: every buffer
+    // all 30 golden cells, twice, through ONE workspace: every buffer
     // reset must be complete or run N+1 leaks state from run N
     let e = paper_experiment(8).unwrap();
-    let p = e.parallel.p;
-    let m = e.parallel.num_microbatches();
-    let cells = golden_cells(p, m, e.cluster.n_nodes);
+    let cells = golden_cells(&e);
     let mut ws = SimWorkspace::new();
     let opts = SimOptions { trace: true };
     let first: Vec<_> = cells

@@ -47,15 +47,32 @@ fn simulate_reports_memory_and_mfu() {
 
 #[test]
 fn sweep_ranks_one_experiment_grid() {
-    // exp (8) × 7 scenarios × 2 layouts through the parallel driver
+    // exp (8) × 15 scenarios × 2 layouts through the parallel driver
     let (ok, out) = bpipe(&["sweep", "--experiment", "8"]);
     assert!(ok, "{out}");
     for needle in [
-        "1F1B+rebalance", "interleaved+rebalance", "V-shaped", "GPipe",
-        "pair-adjacent", "sequential", "OOM @ stage", "fits",
-        "14 grid cells simulated",
+        "1F1B+rebalance", "1F1B+stage-bounds", "interleaved+rebalance", "V-shaped",
+        "GPipe", "W-shaped", "pair-adjacent", "sequential", "OOM @ stage", "fits",
+        "30 grid cells simulated",
     ] {
         assert!(out.contains(needle), "missing {needle}: {out}");
+    }
+}
+
+#[test]
+fn report_emits_markdown_with_figures() {
+    let dir = std::env::temp_dir().join(format!("bpipe-cli-report-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let out_path = dir.join("report.md");
+    let (ok, out) = bpipe(&["report", "--experiment", "8", "--out", out_path.to_str().unwrap()]);
+    assert!(ok, "{out}");
+    assert!(out.contains("4 figures"), "{out}");
+    let md = std::fs::read_to_string(&out_path).unwrap();
+    assert!(md.matches("<svg").count() >= 3, "≥3 embedded SVG figures");
+    for needle in [
+        "# BPipe replication report", "Estimator vs DES", "W-shaped", "1F1B+stage-bounds",
+    ] {
+        assert!(md.contains(needle), "missing {needle}");
     }
 }
 
@@ -92,7 +109,9 @@ fn sweep_exports_ranking_grid_csv() {
     let (ok, out) = bpipe(&["sweep", "--experiment", "8", "--csv", csv.to_str().unwrap()]);
     assert!(ok, "{out}");
     let text = std::fs::read_to_string(&csv).unwrap();
-    assert_eq!(text.lines().count(), 14 + 1, "header + 14 cells");
+    assert_eq!(text.lines().count(), 30 + 1, "header + 30 cells");
+    // per-stage cells export their bound vector as ONE quoted field
+    assert!(text.contains("\"5,6,6,5,4,3,2,2\""), "{text}");
 }
 
 #[test]

@@ -5,9 +5,12 @@
 //! cases per property; every case is checked against the full invariant
 //! set.  Failures print the seed + case for replay.
 
-use bpipe::bpipe::{apply_bpipe, pair_adjacent_layout, pairing, sequential_layout};
+use bpipe::bpipe::{
+    apply_bpipe, capacity_stage_bounds, pair_adjacent_layout, pairing, rebalance_bounded,
+    sequential_layout,
+};
 use bpipe::model::memory::{bpipe_bound, one_f_one_b_in_flight};
-use bpipe::schedule::{gpipe, interleaved, one_f_one_b, validate, OpKind};
+use bpipe::schedule::{gpipe, interleaved, one_f_one_b, validate, zigzag, OpKind};
 use bpipe::util::SplitMix64;
 
 const CASES: u64 = 300;
@@ -133,6 +136,95 @@ fn prop_bpipe_evict_load_symmetry_and_counts() {
                 "case {case} (p={p}, m={m}) stage {st}"
             );
         }
+    }
+}
+
+#[test]
+fn prop_zigzag_validates_with_exact_op_counts() {
+    // the W/zig-zag generators must uphold every per-stage invariant for
+    // arbitrary (p, m, v), and run v·m forwards + backwards per stage
+    let mut rng = SplitMix64::new(0x2162A6);
+    for case in 0..CASES {
+        let p = rng.range(1, 12);
+        let m = rng.range(1, 48);
+        let v = rng.range(1, 6);
+        let s = zigzag(p, m, v);
+        validate(&s).unwrap_or_else(|e| panic!("case {case} (p={p}, m={m}, v={v}): {e}"));
+        for st in 0..p {
+            assert_eq!(s.count(st, OpKind::Fwd) as u64, v * m, "case {case} stage {st}");
+            assert_eq!(s.count(st, OpKind::Bwd) as u64, v * m, "case {case} stage {st}");
+        }
+    }
+}
+
+#[test]
+fn prop_even_zigzag_balanced_by_placement() {
+    // the placement-balance property the W inherits from the V: for even
+    // v, every down-sweep pairs with an up-sweep, so the per-stage stash
+    // high-water spread stays ≤ 1 wherever microbatches saturate the
+    // virtual pipeline (m ≥ v·p, the regime the paper's experiments run)
+    let mut rng = SplitMix64::new(0xBA1A2CE);
+    for case in 0..CASES {
+        let p = rng.range(2, 10);
+        let v = 2 * rng.range(1, 2); // 2 or 4 (the V and the W)
+        let m = v * p + rng.range(0, 32);
+        let s = zigzag(p, m, v);
+        let hws: Vec<i64> = (0..p).map(|st| s.program(st).stash_high_water()).collect();
+        let spread = hws.iter().max().unwrap() - hws.iter().min().unwrap();
+        assert!(
+            spread <= 1,
+            "case {case} (p={p}, m={m}, v={v}): spread {spread} from {hws:?}"
+        );
+    }
+}
+
+#[test]
+fn prop_zigzag_rebalances_at_any_feasible_bound() {
+    // rebalance composes with zig-zag bases across random tighter bounds
+    let mut rng = SplitMix64::new(0x2162B0);
+    for case in 0..CASES / 3 {
+        let p = rng.range(2, 8);
+        let m = rng.range(1, 24);
+        let v = rng.range(2, 5);
+        let base = zigzag(p, m, v);
+        let derived = bpipe::bpipe::derived_bound(&base);
+        let k = rng.range(2, derived.max(2));
+        let rb = bpipe::bpipe::rebalance(&base, Some(k));
+        validate(&rb)
+            .unwrap_or_else(|e| panic!("case {case} (p={p}, m={m}, v={v}, k={k}): {e}"));
+        for st in 0..p {
+            assert!(rb.program(st).stash_high_water() <= k as i64, "case {case} stage {st}");
+        }
+    }
+}
+
+#[test]
+fn prop_capacity_bounds_always_admit_a_valid_rebalance() {
+    // per-stage capacity bounds are derived from the memory model for
+    // arbitrary bases; the bounded transform must validate for all of
+    // them, and every bound must sit in [2, natural high-water ∨ 2]
+    let mut rng = SplitMix64::new(0x51B0);
+    let e = bpipe::config::paper_experiment(8).unwrap();
+    for case in 0..CASES / 6 {
+        let p = e.parallel.p;
+        let m = p * rng.range(1, 9);
+        let base = match rng.range(0, 4) {
+            0 => one_f_one_b(p, m),
+            1 => gpipe(p, m),
+            2 => interleaved(p, m, rng.range(1, 4)),
+            _ => zigzag(p, m, rng.range(1, 5)),
+        };
+        let bounds = capacity_stage_bounds(&e, &base);
+        for (st, &k) in bounds.iter().enumerate() {
+            let hw = base.program(st as u64).stash_high_water().max(2);
+            assert!(
+                (2..=hw as u64).contains(&k),
+                "case {case} {:?} stage {st}: bound {k} outside [2, {hw}]",
+                base.kind
+            );
+        }
+        let rb = rebalance_bounded(&base, &bounds);
+        validate(&rb).unwrap_or_else(|err| panic!("case {case} {:?}: {err}", base.kind));
     }
 }
 
