@@ -16,7 +16,10 @@
 //! non-blocking smoke step (hot-path regressions show up in PR logs
 //! without gating merges).
 
-use bpipe::bpipe::{capacity_stage_bounds, pair_adjacent_layout, rebalance, rebalance_bounded};
+use bpipe::bpipe::{
+    capacity_stage_bounds, pair_adjacent_layout, rebalance, rebalance_bounded,
+    RebalanceWorkspace,
+};
 use bpipe::config::paper_experiment;
 use bpipe::schedule::{interleaved, one_f_one_b, v_shaped, zigzag};
 use bpipe::sim::{bounds_grid, paper_grid, simulate, sweep, SimOptions, SimWorkspace};
@@ -75,6 +78,28 @@ fn main() {
     let cap_bounds = capacity_stage_bounds(&e, &s_1f1b);
     bench("hotpath/rebalance_per_stage_1f1b", iters(10_000), || {
         rebalance_bounded(std::hint::black_box(&s_1f1b), &cap_bounds)
+    });
+
+    println!("\n=== bound-sweep cell setup: fresh generator+transform vs cached base + reused scratch ===");
+    // what one bound-sensitivity cell used to cost: regenerate the base
+    // (the zigzag W's virtual list-schedule dominates), then rebalance
+    bench("hotpath/bound_cell_fresh_w_shaped", iters(500), || {
+        let base = zigzag(p, m, 4);
+        rebalance(&base, Some(8))
+    });
+    bench("hotpath/bound_cell_fresh_1f1b", iters(2_000), || {
+        let base = one_f_one_b(p, m);
+        rebalance(&base, Some(4))
+    });
+    // what it costs now: the worker's ScheduleCache keeps the base and a
+    // RebalanceWorkspace, so only the transform runs per bound
+    let w_base = zigzag(p, m, 4);
+    let mut rb_ws = RebalanceWorkspace::new();
+    bench("hotpath/bound_cell_cached_w_shaped", iters(500), || {
+        rb_ws.rebalance(std::hint::black_box(&w_base), Some(8))
+    });
+    bench("hotpath/bound_cell_cached_1f1b", iters(2_000), || {
+        rb_ws.rebalance(std::hint::black_box(&s_1f1b), Some(4))
     });
 
     println!("\n=== full grids through the parallel sweep driver ===");

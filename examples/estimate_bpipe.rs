@@ -1,39 +1,41 @@
-//! The paper's §4/§5 recipe, end to end on REAL hardware (this CPU):
+//! The paper's §4/§5 recipe, end to end on the execution backend:
 //!
 //! "Prior to applying the BPipe technique, we can evaluate a small part
 //!  of the model with fewer resources to estimate the entire model's
 //!  performance following an increase in the micro batch size."
 //!
-//! 1. Time ONE mid pipeline stage (real PJRT executables) at b ∈ sweep.
+//! 1. Time ONE mid pipeline stage at every b in the manifest's sweep.
 //! 2. Convert to single-stage MFU ratios (peak cancels in Eq. 4).
 //! 3. Predict the whole-pipeline speedup of raising b with Eq. 4.
-//! 4. Verify: run the REAL 4-stage pipeline at each effective batch and
-//!    compare measured step-time ratios against the prediction.
+//! 4. Verify: run the REAL pipeline at each effective batch and compare
+//!    measured step-time ratios against the work-bound prediction.
 //!
-//! Usage: cargo run --release --example estimate_bpipe
-//! (artifacts must exist: `make artifacts`)
+//! Runs on the in-tree [`SimBackend`] by default (synthetic manifest, no
+//! artifacts needed): `cargo run --release --example estimate_bpipe`.
+//! Point `BPIPE_ARTIFACTS` at a lowered artifact directory to measure
+//! those shapes instead.
 
 use bpipe::coordinator::{measure_stage, train, TrainConfig};
 use bpipe::estimator::{estimate, StageMeasurement};
-use bpipe::runtime::Manifest;
+use bpipe::runtime::{Manifest, SimBackend};
 use std::path::PathBuf;
 
 fn main() -> anyhow::Result<()> {
-    let artifacts = PathBuf::from(
-        std::env::var("BPIPE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
-    );
-    let manifest = Manifest::load(&artifacts)?;
+    let manifest = match std::env::var("BPIPE_ARTIFACTS") {
+        Ok(dir) => Manifest::load(&PathBuf::from(dir))?,
+        Err(_) => Manifest::synthetic(4, 16, 8, 2, 64, &[1, 2, 4]),
+    };
     let sweep = manifest.bs_sweep.clone();
     anyhow::ensure!(sweep.len() >= 2, "need ≥2 microbatch sizes in the artifact sweep");
     let p = manifest.spec.stages;
 
     // --- 1+2: single-stage measurements --------------------------------
-    println!("=== single-stage timings (mid stage, real PJRT, this CPU) ===");
+    println!("=== single-stage timings (mid stage, sim backend) ===");
     let mut timings = Vec::new();
     for &b in &sweep {
-        let t = measure_stage(&artifacts, b, 5)?;
+        let t = measure_stage::<SimBackend>(&manifest, b, 5)?;
         println!(
-            "  b={b}: {:>7.1} ms/microbatch  {:>8.2} tokens/s  {:.3e} model FLOP/s",
+            "  b={b}: {:>9.3} ms/microbatch  {:>12.0} tokens/s  {:.3e} model FLOP/s",
             t.t_b * 1e3,
             t.tokens_per_s,
             t.flops_per_s
@@ -52,49 +54,43 @@ fn main() -> anyhow::Result<()> {
     let m_at_max = 4u64; // microbatches when running the largest b
     let global_tokens_b = sweep.iter().max().unwrap() * m_at_max;
     println!("\n=== Eq. 4 predictions (B = {global_tokens_b} sequences, p = {p}) ===");
-    let mut preds = Vec::new();
     for w in meas.windows(2) {
         let est = estimate(global_tokens_b, p, w[0], w[1]);
         println!(
             "  b {}→{}: stage factor {:.3} × bubble factor {:.3} = predicted {:.3}x",
             w[0].b, w[1].b, est.stage_factor, est.bubble_factor, est.speedup_bound
         );
-        preds.push(est);
     }
 
     // --- 4: verify against the real pipeline ----------------------------
     // Same number of TOKENS per step in each run: b doubles → m halves.
     // CAVEAT for this testbed: Eq. 2's bubble term (m + p − 1)·T assumes
-    // p stages computing in PARALLEL; with every stage worker sharing ONE
-    // CPU core, wall-clock is work-bound (∝ m·T), so we verify the
+    // p stages computing in PARALLEL; with every stage worker sharing
+    // one host, wall-clock is work-bound (∝ m·T), so we verify the
     // work-bound prediction here and leave the bubble factor to the DES
-    // simulator (integration test `estimator_tracks_simulator`), which
-    // models the parallel cluster the paper ran on.
+    // simulator (which models the parallel cluster the paper ran on).
+    // The synthetic manifest fixes b per run, so "raising b" is emulated
+    // by shrinking m at constant tokens/step.
     println!("\n=== verification: real {p}-stage pipeline, same tokens/step ===");
-    println!("(1-core testbed → wall time is work-bound: step ∝ m; the bubble");
+    println!("(single host → wall time is work-bound: step ∝ m; the bubble");
     println!(" factor of Eq. 2 is validated against the cluster simulator)");
     let max_b = *sweep.iter().max().unwrap();
     let mut measured = Vec::new();
     for &b in &sweep {
         let m = m_at_max * max_b / b; // fixed global tokens
         let cfg = TrainConfig {
-            artifacts_dir: artifacts.clone(),
+            manifest: Some(manifest.clone()),
             steps: 3,
             microbatches: m,
             lr: 1e-3,
-            bpipe: false,
-            bound: None,
             seed: 0,
-            log_every: 0,
-            checkpoint_dir: None,
-            checkpoint_every: 0,
-            resume: false,
+            ..TrainConfig::default()
         };
-        let r = train(&cfg)?;
-        println!("  m={m:>3}: mean step {:.2}s", r.mean_step_time());
+        let r = train::<SimBackend>(&cfg)?;
+        println!("  m={m:>3}: mean step {:.5}s", r.mean_step_time());
         measured.push((b, m, r.mean_step_time()));
     }
-    println!("\nwork-bound check (1 core: step time ∝ m · T_artifact):");
+    println!("\nwork-bound check (one host: step time ∝ m · T_artifact):");
     for w in measured.windows(2) {
         let (b0, m0, t0) = w[0];
         let (b1, m1, t1) = w[1];

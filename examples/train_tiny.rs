@@ -1,61 +1,58 @@
-//! END-TO-END DRIVER: real pipeline-parallel training of a transformer
-//! through the full three-layer stack.
+//! END-TO-END DRIVER: real pipeline-parallel training through the full
+//! coordinator stack — leader, 4 stage-worker threads, 1F1B schedule,
+//! Adam, synthetic corpus, and (second phase) BPipe activation balancing
+//! on real buffers.
 //!
-//! * L1 — the attention inside every stage artifact is the Pallas kernel
-//!   (flash attention by default; set at `make artifacts` time);
-//! * L2 — the JAX stage graphs AOT-lowered to HLO text;
-//! * L3 — this binary: 4 stage workers, 1F1B schedule, Adam, synthetic
-//!   corpus, and (second phase) BPipe activation balancing on real
-//!   buffers.
+//! Runs on the in-tree deterministic [`SimBackend`] with an in-memory
+//! synthetic manifest, so it works in a fresh checkout with zero
+//! dependencies: `cargo run --release --example train_tiny -- [steps]
+//! [microbatches]`.  Point `BPIPE_ARTIFACTS` at a lowered artifact
+//! directory to train that manifest's shapes instead (the PJRT backend
+//! itself needs the `pjrt` build feature: `bpipe train --backend pjrt`).
 //!
-//! The run proves all layers compose: the loss curve drops from ~ln(v)
-//! toward the corpus's structural entropy, and the BPipe phase computes
-//! **bit-identical** losses while stage 0 holds fewer stashes.
-//!
-//! Usage: cargo run --release --example train_tiny -- [steps] [microbatches]
-//! (artifacts must exist: `make artifacts`)
+//! The run proves the layers compose: the pipeline streams microbatches
+//! through the stage workers, and the BPipe phase computes
+//! **bit-identical** losses while the front stage holds fewer stashes.
 
-use bpipe::coordinator::{train, TrainConfig};
+use bpipe::coordinator::{train, RebalancePlan, TrainConfig};
+use bpipe::runtime::{Manifest, SimBackend};
 use std::path::PathBuf;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
-    let steps: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(60);
+    let steps: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(20);
     let microbatches: u64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8);
-    let artifacts = PathBuf::from(
-        std::env::var("BPIPE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
-    );
+    let manifest = match std::env::var("BPIPE_ARTIFACTS") {
+        Ok(dir) => Manifest::load(&PathBuf::from(dir))?,
+        Err(_) => Manifest::synthetic(4, 16, 8, 2, 64, &[1, 2]),
+    };
 
     println!("=== phase 1: plain 1F1B, {steps} steps × {microbatches} microbatches ===");
     let cfg = TrainConfig {
-        artifacts_dir: artifacts.clone(),
+        manifest: Some(manifest),
         steps,
         microbatches,
-        lr: 3e-3,
-        bpipe: false,
-        bound: None,
+        lr: 2e-2,
         seed: 0,
         log_every: 5,
-        checkpoint_dir: None,
-        checkpoint_every: 0,
-        resume: false,
+        ..TrainConfig::default()
     };
-    let plain = train(&cfg)?;
+    let plain = train::<SimBackend>(&cfg)?;
     println!("\nloss curve (every 5th step):");
     for (i, loss) in plain.losses.iter().enumerate().step_by(5) {
-        let bar = "*".repeat((loss * 6.0) as usize);
-        println!("  step {i:>4}  {loss:>7.4}  |{bar}");
+        let bar = "*".repeat((loss * 200.0) as usize);
+        println!("  step {i:>4}  {loss:>8.5}  |{bar}");
     }
-    println!(
-        "first {:.4} → final {:.4} (corpus rule floor ≈ entropy of 25% noise)",
-        plain.losses[0],
-        plain.final_loss()
-    );
+    println!("first {:.5} → final {:.5}", plain.losses[0], plain.final_loss());
 
     println!("\n=== phase 2: same run under BPipe (memory-balanced) ===");
     let steps_b = steps.min(8); // enough to verify numerics + stash balance
-    let cfg_b = TrainConfig { bpipe: true, steps: steps_b, ..cfg.clone() };
-    let bpipe_run = train(&cfg_b)?;
+    let cfg_b = TrainConfig {
+        rebalance: RebalancePlan::Uniform { bound: None },
+        steps: steps_b,
+        ..cfg.clone()
+    };
+    let bpipe_run = train::<SimBackend>(&cfg_b)?;
 
     // BPipe must be a pure memory optimization: bit-identical losses
     for (i, (a, b)) in plain.losses.iter().zip(bpipe_run.losses.iter()).enumerate() {
@@ -71,10 +68,9 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!(
-        "\nstep time: plain {:.2}s vs bpipe {:.2}s ({:+.1}% overhead)",
+        "\nstep time: plain {:.4}s vs bpipe {:.4}s",
         plain.mean_step_time(),
         bpipe_run.mean_step_time(),
-        (bpipe_run.mean_step_time() / plain.mean_step_time() - 1.0) * 100.0
     );
     println!("tokens trained: {}", plain.tokens + bpipe_run.tokens);
     Ok(())

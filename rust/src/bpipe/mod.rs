@@ -24,6 +24,7 @@ pub use layout::{pair_adjacent_layout, sequential_layout, Layout};
 pub use pairing::{acceptor_extra_stashes, bound, evictions_at, is_acceptor, is_evictor, partner};
 pub use rebalance::{
     bound_range, capacity_stage_bounds, derived_bound, rebalance, rebalance_bounded,
+    RebalanceWorkspace,
 };
 
 use crate::schedule::{Schedule, ScheduleKind};

@@ -83,17 +83,7 @@ pub fn bound_range(base: &Schedule) -> std::ops::RangeInclusive<u64> {
 /// enforces the bound, and inherits the base's `chunks`/`placement` so
 /// the simulator keeps the right dataflow.
 pub fn rebalance(base: &Schedule, bound_override: Option<u64>) -> Schedule {
-    let k = bound_override.unwrap_or_else(|| derived_bound(base));
-    let programs = rebalance_programs(base, &vec![k; base.p as usize]);
-    Schedule {
-        p: base.p,
-        m: base.m,
-        chunks: base.chunks,
-        placement: base.placement,
-        kind: ScheduleKind::BPipe { bound: k },
-        stage_bounds: None,
-        programs,
-    }
+    RebalanceWorkspace::new().rebalance(base, bound_override)
 }
 
 /// Rebalance `base` with an independent bound per stage (non-uniform
@@ -102,18 +92,7 @@ pub fn rebalance(base: &Schedule, bound_override: Option<u64>) -> Schedule {
 /// `stage_bounds: Some(bounds)` so the validator enforces every stage's
 /// own cap, not just the uniform ceiling.
 pub fn rebalance_bounded(base: &Schedule, bounds: &[u64]) -> Schedule {
-    assert_eq!(bounds.len(), base.p as usize, "one bound per stage");
-    let programs = rebalance_programs(base, bounds);
-    let max = *bounds.iter().max().expect("at least one stage");
-    Schedule {
-        p: base.p,
-        m: base.m,
-        chunks: base.chunks,
-        placement: base.placement,
-        kind: ScheduleKind::BPipe { bound: max },
-        stage_bounds: Some(bounds.to_vec()),
-        programs,
-    }
+    RebalanceWorkspace::new().rebalance_bounded(base, bounds)
 }
 
 /// Capacity-aware per-stage bounds for `base` on experiment `e`'s
@@ -141,76 +120,131 @@ pub fn capacity_stage_bounds(e: &ExperimentConfig, base: &Schedule) -> Vec<u64> 
         .collect()
 }
 
-/// The transform core: per-stage evict/load insertion at per-stage caps.
-fn rebalance_programs(base: &Schedule, bounds: &[u64]) -> Vec<StageProgram> {
-    let key_count = (base.m * base.chunks) as usize;
-    let key_of = |op: &Op| (op.mb * base.chunks + op.chunk) as usize;
+/// Reusable scratch for the rebalance transform: the per-key
+/// backward-position table and the resident/evicted working sets.
+/// The bound-sensitivity sweep re-rebalances the SAME base schedule at
+/// every bound from derived down to 2 — holding one workspace per
+/// worker (see `sim::sweep::ScheduleCache`) keeps those cells from
+/// re-allocating (and, paired with the cached base, from re-running the
+/// zigzag generator's virtual list-schedule, which dominates cell
+/// setup).  The output `Schedule` is always freshly allocated; only the
+/// transform's internal scratch is reused.
+#[derive(Debug, Default)]
+pub struct RebalanceWorkspace {
+    bwd_pos: Vec<usize>,
+    resident: Vec<(u64, u64)>,
+    evicted: Vec<(u64, u64)>,
+}
 
-    base.programs
-        .iter()
-        .zip(bounds)
-        .map(|(prog, &k)| {
-            assert!(k >= 2, "rebalance bound must be ≥ 2 (one live + one incoming stash)");
-            // program-order position of each key's backward: the victim
-            // metric (evict whoever is needed furthest in the future)
-            let mut bwd_pos = vec![usize::MAX; key_count];
-            for (j, op) in prog.ops.iter().enumerate() {
-                if op.kind == OpKind::Bwd {
-                    bwd_pos[key_of(op)] = j;
-                }
-            }
-            let mut ops: Vec<Op> = Vec::with_capacity(prog.ops.len() + 8);
-            // members carry (mb, chunk); sets stay ≤ max(k, evicted peak)
-            let mut resident: Vec<(u64, u64)> = Vec::new();
-            let mut evicted: Vec<(u64, u64)> = Vec::new();
-            let pos = |key: (u64, u64)| bwd_pos[(key.0 * base.chunks + key.1) as usize];
-            for op in &prog.ops {
-                let key = (op.mb, op.chunk);
-                match op.kind {
-                    OpKind::Fwd => {
-                        if resident.len() as u64 == k {
-                            evict_furthest(&mut resident, &mut evicted, &mut ops, pos);
-                        }
-                        ops.push(*op);
-                        resident.push(key);
+impl RebalanceWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// [`rebalance`] through this workspace's scratch.
+    pub fn rebalance(&mut self, base: &Schedule, bound_override: Option<u64>) -> Schedule {
+        let k = bound_override.unwrap_or_else(|| derived_bound(base));
+        let programs = self.programs(base, &vec![k; base.p as usize]);
+        Schedule {
+            p: base.p,
+            m: base.m,
+            chunks: base.chunks,
+            placement: base.placement,
+            kind: ScheduleKind::BPipe { bound: k },
+            stage_bounds: None,
+            programs,
+        }
+    }
+
+    /// [`rebalance_bounded`] through this workspace's scratch.
+    pub fn rebalance_bounded(&mut self, base: &Schedule, bounds: &[u64]) -> Schedule {
+        assert_eq!(bounds.len(), base.p as usize, "one bound per stage");
+        let programs = self.programs(base, bounds);
+        let max = *bounds.iter().max().expect("at least one stage");
+        Schedule {
+            p: base.p,
+            m: base.m,
+            chunks: base.chunks,
+            placement: base.placement,
+            kind: ScheduleKind::BPipe { bound: max },
+            stage_bounds: Some(bounds.to_vec()),
+            programs,
+        }
+    }
+
+    /// The transform core: per-stage evict/load insertion at per-stage caps.
+    fn programs(&mut self, base: &Schedule, bounds: &[u64]) -> Vec<StageProgram> {
+        let key_count = (base.m * base.chunks) as usize;
+        let key_of = |op: &Op| (op.mb * base.chunks + op.chunk) as usize;
+        let RebalanceWorkspace { bwd_pos, resident, evicted } = self;
+
+        base.programs
+            .iter()
+            .zip(bounds)
+            .map(|(prog, &k)| {
+                assert!(k >= 2, "rebalance bound must be ≥ 2 (one live + one incoming stash)");
+                // program-order position of each key's backward: the victim
+                // metric (evict whoever is needed furthest in the future)
+                bwd_pos.clear();
+                bwd_pos.resize(key_count, usize::MAX);
+                for (j, op) in prog.ops.iter().enumerate() {
+                    if op.kind == OpKind::Bwd {
+                        bwd_pos[key_of(op)] = j;
                     }
-                    OpKind::Bwd => {
-                        if !resident.contains(&key) {
-                            // late load (tight bounds): make room, load
-                            // back (key is off-device here, so the victim
-                            // can never be the stash being loaded)
+                }
+                let mut ops: Vec<Op> = Vec::with_capacity(prog.ops.len() + 8);
+                // members carry (mb, chunk); sets stay ≤ max(k, evicted peak)
+                resident.clear();
+                evicted.clear();
+                let pos = |key: (u64, u64)| bwd_pos[(key.0 * base.chunks + key.1) as usize];
+                for op in &prog.ops {
+                    let key = (op.mb, op.chunk);
+                    match op.kind {
+                        OpKind::Fwd => {
                             if resident.len() as u64 == k {
-                                evict_furthest(&mut resident, &mut evicted, &mut ops, pos);
+                                evict_furthest(resident, evicted, &mut ops, pos);
                             }
-                            let at = evicted
-                                .iter()
-                                .position(|&e| e == key)
-                                .expect("bwd of a stash that was never forwarded");
-                            evicted.swap_remove(at);
+                            ops.push(*op);
                             resident.push(key);
-                            ops.push(Op { kind: OpKind::Load, mb: key.0, chunk: key.1 });
                         }
-                        ops.push(*op);
-                        let at = resident.iter().position(|&r| r == key).unwrap();
-                        resident.swap_remove(at);
-                        // slot freed: prefetch the soonest-needed evictee
-                        if (resident.len() as u64) < k && !evicted.is_empty() {
-                            let at = (0..evicted.len())
-                                .min_by_key(|&i| pos(evicted[i]))
-                                .unwrap();
-                            let nxt = evicted.swap_remove(at);
-                            resident.push(nxt);
-                            ops.push(Op { kind: OpKind::Load, mb: nxt.0, chunk: nxt.1 });
+                        OpKind::Bwd => {
+                            if !resident.contains(&key) {
+                                // late load (tight bounds): make room, load
+                                // back (key is off-device here, so the victim
+                                // can never be the stash being loaded)
+                                if resident.len() as u64 == k {
+                                    evict_furthest(resident, evicted, &mut ops, pos);
+                                }
+                                let at = evicted
+                                    .iter()
+                                    .position(|&e| e == key)
+                                    .expect("bwd of a stash that was never forwarded");
+                                evicted.swap_remove(at);
+                                resident.push(key);
+                                ops.push(Op { kind: OpKind::Load, mb: key.0, chunk: key.1 });
+                            }
+                            ops.push(*op);
+                            let at = resident.iter().position(|&r| r == key).unwrap();
+                            resident.swap_remove(at);
+                            // slot freed: prefetch the soonest-needed evictee
+                            if (resident.len() as u64) < k && !evicted.is_empty() {
+                                let at = (0..evicted.len())
+                                    .min_by_key(|&i| pos(evicted[i]))
+                                    .unwrap();
+                                let nxt = evicted.swap_remove(at);
+                                resident.push(nxt);
+                                ops.push(Op { kind: OpKind::Load, mb: nxt.0, chunk: nxt.1 });
+                            }
                         }
-                    }
-                    OpKind::Evict | OpKind::Load => {
-                        panic!("rebalance base must be transfer-free (got {:?})", op.kind)
+                        OpKind::Evict | OpKind::Load => {
+                            panic!("rebalance base must be transfer-free (got {:?})", op.kind)
+                        }
                     }
                 }
-            }
-            StageProgram { stage: prog.stage, ops }
-        })
-        .collect()
+                StageProgram { stage: prog.stage, ops }
+            })
+            .collect()
+    }
 }
 
 /// Evict the resident stash whose backward is furthest in program
@@ -443,6 +477,28 @@ mod tests {
             (0..s.p).map(|st| s.count(st, OpKind::Evict)).sum()
         };
         assert!(evicts(&per) < evicts(&uni), "{} vs {}", evicts(&per), evicts(&uni));
+    }
+
+    #[test]
+    fn workspace_reuse_is_op_identical_across_bounds_and_bases() {
+        // the bound-sensitivity sweep reuses one workspace per worker
+        // across consecutive cells (different bounds, then a different
+        // base entirely): every reused result must equal a fresh one
+        let mut ws = RebalanceWorkspace::new();
+        let bases =
+            [one_f_one_b(8, 24), interleaved(8, 24, 2), crate::schedule::zigzag(8, 24, 4)];
+        for base in &bases {
+            for k in bound_range(base).rev() {
+                let fresh = rebalance(base, Some(k));
+                let reused = ws.rebalance(base, Some(k));
+                assert_eq!(fresh, reused, "{:?} k={k}", base.kind);
+            }
+        }
+        let bounds: Vec<u64> = (0..8u64).map(|s| 2 + (s % 3)).collect();
+        assert_eq!(
+            rebalance_bounded(&bases[0], &bounds),
+            ws.rebalance_bounded(&bases[0], &bounds)
+        );
     }
 
     #[test]

@@ -1,68 +1,30 @@
 //! Bounded activation stash + the BPipe remote store.
 //!
 //! Each stage worker owns an [`ActivationStore`] holding the stage-input
-//! tensor of every in-flight microbatch (the thing a backward pass needs
-//! and the thing BPipe ships around).  The store enforces the capacity
-//! bound the schedule was built for — exceeding it is a bug, caught here
-//! rather than as a silent OOM.
+//! tensor(s) of every in-flight `(microbatch, chunk)` key (the thing a
+//! backward pass needs and the thing BPipe ships around).  The store
+//! enforces the capacity bound the schedule was built for — exceeding it
+//! is a bug, caught here rather than as a silent OOM.  Multi-chunk
+//! (interleaved / V / zig-zag) programs share ONE store per worker: the
+//! rebalance transform bounds the stage's resident count across all of
+//! its chunks, and so does the store.
 //!
 //! The acceptor side of a BPipe pair is a [`RemoteStore`] service thread
 //! owning the evicted tensors (the "partner device's free memory"): the
 //! evictor pushes stashes to it and pulls them back before the backward.
 
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::collections::HashMap;
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 
-/// A tensor crossing thread boundaries: host data + logical shape.
-/// (xla::Literal wraps raw pointers and is not Send; the coordinator
-/// moves host vectors and re-materializes literals at the use site.)
-#[derive(Debug, Clone, PartialEq)]
-pub enum HostTensor {
-    F32 { data: Vec<f32>, shape: Vec<i64> },
-    I32 { data: Vec<i32>, shape: Vec<i64> },
-}
+pub use crate::runtime::HostTensor;
 
-impl HostTensor {
-    pub fn bytes(&self) -> usize {
-        match self {
-            HostTensor::F32 { data, .. } => data.len() * 4,
-            HostTensor::I32 { data, .. } => data.len() * 4,
-        }
-    }
+/// A stash key: `(microbatch, chunk)` — chunk is always 0 for
+/// single-chunk schedules.
+pub type StashKey = (u64, u64);
 
-    /// Upload straight to a device buffer (synchronous copy semantics;
-    /// see `runtime::Runtime::upload_f32`) — the hot-path conversion.
-    pub fn to_buffer(&self, rt: &crate::runtime::Runtime) -> anyhow::Result<xla::PjRtBuffer> {
-        let dims: Vec<usize> = match self {
-            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => {
-                shape.iter().map(|&d| d as usize).collect()
-            }
-        };
-        match self {
-            HostTensor::F32 { data, .. } => rt.upload_f32(data, &dims),
-            HostTensor::I32 { data, .. } => rt.upload_i32(data, &dims),
-        }
-    }
-
-    /// Materialize an xla literal (on the calling thread).
-    pub fn to_literal(&self) -> anyhow::Result<xla::Literal> {
-        match self {
-            HostTensor::F32 { data, shape } => crate::runtime::literal_f32(data, shape),
-            HostTensor::I32 { data, shape } => {
-                let lit = xla::Literal::vec1(data.as_slice());
-                if shape.len() <= 1 {
-                    Ok(lit)
-                } else {
-                    Ok(lit.reshape(shape)?)
-                }
-            }
-        }
-    }
-}
-
-/// Per-stage bounded stash: microbatch id → stage-input tensor(s).
+/// Per-stage bounded stash: `(mb, chunk)` → stage-input tensor(s).
 pub struct ActivationStore {
-    stash: HashMap<u64, Vec<HostTensor>>,
+    stash: HashMap<StashKey, Vec<HostTensor>>,
     capacity: usize,
     /// peak resident entries (for the balance report)
     pub high_water: usize,
@@ -92,58 +54,60 @@ impl ActivationStore {
     }
 
     /// Insert a stash; panics if the schedule violated its own bound.
-    pub fn put(&mut self, mb: u64, tensors: Vec<HostTensor>) {
+    pub fn put(&mut self, key: StashKey, tensors: Vec<HostTensor>) {
         assert!(
             self.stash.len() < self.capacity,
-            "activation store over capacity ({}): schedule bound violated at mb {mb}",
-            self.capacity
+            "activation store over capacity ({}): schedule bound violated at (mb {}, chunk {})",
+            self.capacity,
+            key.0,
+            key.1
         );
         self.resident_bytes += tensors.iter().map(|t| t.bytes()).sum::<usize>();
-        let prev = self.stash.insert(mb, tensors);
-        assert!(prev.is_none(), "double stash for microbatch {mb}");
+        let prev = self.stash.insert(key, tensors);
+        assert!(prev.is_none(), "double stash for (mb {}, chunk {})", key.0, key.1);
         self.high_water = self.high_water.max(self.stash.len());
         self.high_water_bytes = self.high_water_bytes.max(self.resident_bytes);
     }
 
     /// Remove and return a stash (for Bwd or Evict).
-    pub fn take(&mut self, mb: u64) -> Vec<HostTensor> {
+    pub fn take(&mut self, key: StashKey) -> Vec<HostTensor> {
         let t = self
             .stash
-            .remove(&mb)
-            .unwrap_or_else(|| panic!("stash for microbatch {mb} not resident"));
+            .remove(&key)
+            .unwrap_or_else(|| panic!("stash for (mb {}, chunk {}) not resident", key.0, key.1));
         self.resident_bytes -= t.iter().map(|x| x.bytes()).sum::<usize>();
         t
     }
 
-    pub fn contains(&self, mb: u64) -> bool {
-        self.stash.contains_key(&mb)
+    pub fn contains(&self, key: StashKey) -> bool {
+        self.stash.contains_key(&key)
     }
 }
 
 /// Messages to a BPipe remote store.
 enum StoreMsg {
-    Evict { mb: u64, tensors: Vec<HostTensor> },
-    Load { mb: u64 },
+    Evict { key: StashKey, tensors: Vec<HostTensor> },
+    Load { key: StashKey },
     Shutdown,
 }
 
 /// Client handle an evictor stage uses to talk to its acceptor-side store.
 pub struct RemoteStoreClient {
     tx: Sender<StoreMsg>,
-    resp_rx: Receiver<(u64, Vec<HostTensor>)>,
+    resp_rx: Receiver<(StashKey, Vec<HostTensor>)>,
 }
 
 impl RemoteStoreClient {
     /// Ship a stash to the acceptor (non-blocking).
-    pub fn evict(&self, mb: u64, tensors: Vec<HostTensor>) {
-        self.tx.send(StoreMsg::Evict { mb, tensors }).expect("remote store gone");
+    pub fn evict(&self, key: StashKey, tensors: Vec<HostTensor>) {
+        self.tx.send(StoreMsg::Evict { key, tensors }).expect("remote store gone");
     }
 
     /// Fetch a stash back (blocks until the acceptor responds).
-    pub fn load(&self, mb: u64) -> Vec<HostTensor> {
-        self.tx.send(StoreMsg::Load { mb }).expect("remote store gone");
+    pub fn load(&self, key: StashKey) -> Vec<HostTensor> {
+        self.tx.send(StoreMsg::Load { key }).expect("remote store gone");
         let (got, tensors) = self.resp_rx.recv().expect("remote store gone");
-        assert_eq!(got, mb, "remote store returned the wrong microbatch");
+        assert_eq!(got, key, "remote store returned the wrong stash");
         tensors
     }
 
@@ -167,29 +131,30 @@ pub struct RemoteStoreStats {
 pub fn spawn_remote_store() -> (RemoteStoreClient, Receiver<RemoteStoreStats>) {
     let (tx, rx) = channel::<StoreMsg>();
     let (resp_tx, resp_rx) = channel();
-    let (stats_tx, stats_rx): (SyncSender<RemoteStoreStats>, Receiver<RemoteStoreStats>) = sync_channel(1);
+    let (stats_tx, stats_rx): (SyncSender<RemoteStoreStats>, Receiver<RemoteStoreStats>) =
+        sync_channel(1);
     std::thread::Builder::new()
         .name("bpipe-remote-store".into())
         .spawn(move || {
-            let mut held: HashMap<u64, Vec<HostTensor>> = HashMap::new();
+            let mut held: HashMap<StashKey, Vec<HostTensor>> = HashMap::new();
             let mut stats = RemoteStoreStats::default();
             let mut bytes = 0usize;
             for msg in rx {
                 match msg {
-                    StoreMsg::Evict { mb, tensors } => {
+                    StoreMsg::Evict { key, tensors } => {
                         bytes += tensors.iter().map(|t| t.bytes()).sum::<usize>();
-                        held.insert(mb, tensors);
+                        held.insert(key, tensors);
                         stats.evictions += 1;
                         stats.high_water_entries = stats.high_water_entries.max(held.len());
                         stats.high_water_bytes = stats.high_water_bytes.max(bytes);
                     }
-                    StoreMsg::Load { mb } => {
-                        let tensors = held
-                            .remove(&mb)
-                            .unwrap_or_else(|| panic!("load of non-evicted microbatch {mb}"));
+                    StoreMsg::Load { key } => {
+                        let tensors = held.remove(&key).unwrap_or_else(|| {
+                            panic!("load of non-evicted (mb {}, chunk {})", key.0, key.1)
+                        });
                         bytes -= tensors.iter().map(|t| t.bytes()).sum::<usize>();
                         stats.loads += 1;
-                        resp_tx.send((mb, tensors)).ok();
+                        resp_tx.send((key, tensors)).ok();
                     }
                     StoreMsg::Shutdown => break,
                 }
@@ -212,55 +177,56 @@ mod tests {
     #[test]
     fn store_tracks_high_water() {
         let mut s = ActivationStore::new(3);
-        s.put(0, t(4));
-        s.put(1, t(4));
+        s.put((0, 0), t(4));
+        s.put((1, 0), t(4));
         assert_eq!(s.high_water, 2);
         assert_eq!(s.resident_bytes, 32);
-        s.take(0);
-        s.put(2, t(4));
+        s.take((0, 0));
+        s.put((2, 0), t(4));
         assert_eq!(s.high_water, 2);
         assert_eq!(s.len(), 2);
-        assert!(s.contains(2) && !s.contains(0));
+        assert!(s.contains((2, 0)) && !s.contains((0, 0)));
+    }
+
+    #[test]
+    fn chunk_keys_are_independent() {
+        let mut s = ActivationStore::new(4);
+        s.put((0, 0), t(2));
+        s.put((0, 1), t(6));
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.take((0, 1))[0].len(), 6);
+        assert!(s.contains((0, 0)));
     }
 
     #[test]
     #[should_panic(expected = "over capacity")]
     fn store_enforces_bound() {
         let mut s = ActivationStore::new(1);
-        s.put(0, t(1));
-        s.put(1, t(1));
+        s.put((0, 0), t(1));
+        s.put((1, 0), t(1));
     }
 
     #[test]
     #[should_panic(expected = "not resident")]
     fn take_missing_panics() {
         let mut s = ActivationStore::new(2);
-        s.take(7);
+        s.take((7, 0));
     }
 
     #[test]
     fn remote_store_round_trip() {
         let (client, stats_rx) = spawn_remote_store();
         let payload = t(8);
-        client.evict(3, payload.clone());
-        client.evict(4, t(8));
-        let back = client.load(3);
+        client.evict((3, 0), payload.clone());
+        client.evict((3, 1), t(8));
+        let back = client.load((3, 0));
         assert_eq!(back, payload);
-        let _ = client.load(4);
+        let _ = client.load((3, 1));
         client.shutdown();
         let stats = stats_rx.recv().unwrap();
         assert_eq!(stats.evictions, 2);
         assert_eq!(stats.loads, 2);
         assert_eq!(stats.high_water_entries, 2);
         assert_eq!(stats.high_water_bytes, 64);
-    }
-
-    #[test]
-    fn host_tensor_literal_round_trip() {
-        let ht = HostTensor::F32 { data: vec![1.0, 2.0, 3.0, 4.0], shape: vec![2, 2] };
-        let lit = ht.to_literal().unwrap();
-        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
-        let hi = HostTensor::I32 { data: vec![5, 6], shape: vec![2] };
-        assert_eq!(hi.to_literal().unwrap().to_vec::<i32>().unwrap(), vec![5, 6]);
     }
 }

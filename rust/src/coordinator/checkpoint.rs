@@ -94,11 +94,15 @@ impl StageCheckpoint {
     }
 }
 
-/// Leader-side run metadata.
+/// Leader-side run metadata.  `chunks` is the virtual-pipeline chunk
+/// count of the schedule family the run used (1 for 1F1B/GPipe) —
+/// per-chunk state files are keyed by VIRTUAL stage id, so a resumed
+/// run must re-plan with the same family shape.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CheckpointMeta {
     pub steps_done: u64,
     pub stages: u64,
+    pub chunks: u64,
     pub microbatches: u64,
     pub seed: u64,
 }
@@ -110,8 +114,8 @@ impl CheckpointMeta {
         std::fs::write(
             &tmp,
             format!(
-                "steps_done = {}\nstages = {}\nmicrobatches = {}\nseed = {}\n",
-                self.steps_done, self.stages, self.microbatches, self.seed
+                "steps_done = {}\nstages = {}\nchunks = {}\nmicrobatches = {}\nseed = {}\n",
+                self.steps_done, self.stages, self.chunks, self.microbatches, self.seed
             ),
         )?;
         std::fs::rename(tmp, dir.join("meta.txt"))?;
@@ -132,6 +136,11 @@ impl CheckpointMeta {
         Ok(Self {
             steps_done: get("steps_done")?,
             stages: get("stages")?,
+            // absent in pre-virtual-pipeline checkpoints: single-chunk
+            chunks: match kv.get("chunks") {
+                Some(v) => v.parse()?,
+                None => 1,
+            },
             microbatches: get("microbatches")?,
             seed: get("seed")?,
         })
@@ -186,10 +195,24 @@ mod tests {
     fn meta_round_trip_and_exists() {
         let dir = tdir("meta");
         assert!(!CheckpointMeta::exists(&dir));
-        let meta = CheckpointMeta { steps_done: 42, stages: 4, microbatches: 8, seed: 7 };
+        let meta =
+            CheckpointMeta { steps_done: 42, stages: 4, chunks: 2, microbatches: 8, seed: 7 };
         meta.save(&dir).unwrap();
         assert!(CheckpointMeta::exists(&dir));
         assert_eq!(CheckpointMeta::load(&dir).unwrap(), meta);
+    }
+
+    #[test]
+    fn meta_without_chunks_defaults_to_one() {
+        // pre-virtual-pipeline checkpoints carried no chunks line
+        let dir = tdir("meta-compat");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("meta.txt"),
+            "steps_done = 3\nstages = 4\nmicrobatches = 8\nseed = 0\n",
+        )
+        .unwrap();
+        assert_eq!(CheckpointMeta::load(&dir).unwrap().chunks, 1);
     }
 
     #[test]

@@ -1,17 +1,26 @@
-//! The real pipeline-parallel training coordinator (substrate S2).
+//! The real pipeline-parallel training coordinator (substrate S2) —
+//! generic over the execution [`crate::runtime::Backend`], so it runs in
+//! tier-1 on the in-tree [`crate::runtime::SimBackend`] and, with
+//! `--features pjrt`, on real AOT-compiled XLA artifacts.
 //!
-//! * [`pipeline`] — the leader: schedule planning, worker wiring, data
-//!   streaming, loss/stat collection;
+//! * [`pipeline`] — the leader: schedule planning ([`plan_schedule`]:
+//!   any [`crate::schedule::Family`] × any [`RebalancePlan`]), worker
+//!   wiring per virtual-stage boundary, data streaming, loss/stat
+//!   collection;
 //! * [`stage_worker`] — one thread per pipeline stage executing its
-//!   [`crate::schedule::StageProgram`] against PJRT executables;
-//! * [`activation_store`] — the bounded stash + the BPipe remote store
-//!   (the acceptor's memory pool);
+//!   [`crate::schedule::StageProgram`] (multi-chunk aware) against
+//!   backend executables;
+//! * [`activation_store`] — the bounded `(mb, chunk)`-keyed stash + the
+//!   BPipe remote store (the acceptor's memory pool);
 //! * [`data`] — deterministic synthetic corpus with learnable structure;
-//! * [`stage_bench`] — single-stage timing for the paper-§4 estimator.
+//! * [`stage_bench`] — single-stage timing for the paper-§4 estimator;
+//! * [`checkpoint`] — per-virtual-stage state + run metadata.
 //!
-//! The key BPipe property is tested end to end: a BPipe run computes
-//! **bit-identical losses** to the plain 1F1B run (eviction is pure data
-//! movement), while stage 0's stash high-water drops to the bound.
+//! The key BPipe property is tested end to end IN TIER-1: a rebalanced
+//! run computes **bit-identical losses** to its baseline (eviction is
+//! pure data movement) for 1F1B and zig-zag bases alike, while the
+//! evictor stages' stash high-water drops to the planned bound
+//! (`rust/tests/integration_runtime.rs`).
 
 pub mod activation_store;
 pub mod checkpoint;
@@ -20,9 +29,9 @@ pub mod pipeline;
 pub mod stage_bench;
 pub mod stage_worker;
 
-pub use activation_store::{ActivationStore, HostTensor};
+pub use activation_store::{ActivationStore, HostTensor, StashKey};
 pub use checkpoint::{CheckpointMeta, StageCheckpoint};
 pub use data::SyntheticCorpus;
-pub use pipeline::{plan_schedule, train, TrainConfig, TrainResult};
+pub use pipeline::{plan_schedule, train, RebalancePlan, TrainConfig, TrainResult};
 pub use stage_bench::{measure_stage, StageTiming};
 pub use stage_worker::StageStats;

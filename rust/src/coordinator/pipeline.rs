@@ -1,40 +1,69 @@
-//! The training leader: builds the schedule, wires the stage workers,
+//! The training leader: plans the schedule, wires the stage workers,
 //! streams data, and collects losses/stats.
 //!
 //! This is substrate S2 of DESIGN.md — a *real* pipeline-parallel
-//! training run over AOT-compiled XLA artifacts, with BPipe activation
-//! balancing done on real buffers.  Stage workers are threads (the
-//! laptop-scale analogue of one rank per GPU); the leader is the analogue
-//! of the launcher + rank-0 logging in Megatron.
+//! training run, generic over the execution [`Backend`]: AOT-compiled
+//! XLA artifacts on PJRT (`--features pjrt`) or the in-tree
+//! deterministic [`crate::runtime::SimBackend`] (tier-1 default), with
+//! BPipe activation balancing done on real buffers either way.  Stage
+//! workers are threads (the laptop-scale analogue of one rank per GPU);
+//! the leader is the analogue of the launcher + rank-0 logging in
+//! Megatron.
+//!
+//! Planning goes through [`plan_schedule`]: any [`Family`] (1F1B, GPipe,
+//! interleaved, V-shaped, zig-zag/W) composed with any
+//! [`RebalancePlan`] — off, uniform BPipe ([`crate::bpipe::rebalance`]),
+//! explicit per-stage caps ([`crate::bpipe::rebalance_bounded`]), or
+//! capacity-derived per-stage caps
+//! ([`crate::bpipe::capacity_stage_bounds`]) — so every schedule the
+//! simulator sweeps also runs on the REAL pipeline.
 
-use std::sync::mpsc::channel;
 use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::Instant;
 
 use super::activation_store::{spawn_remote_store, HostTensor};
 use super::checkpoint::CheckpointMeta;
 use super::data::SyntheticCorpus;
 use super::stage_worker::{worker_main, StageStats, WorkerChannels, WorkerConfig};
-use crate::bpipe::pairing;
-use crate::model::memory::{bpipe_bound, one_f_one_b_in_flight};
-use crate::runtime::Manifest;
-use crate::schedule::{validate, Schedule};
+use crate::config::ExperimentConfig;
+use crate::runtime::{Backend, Manifest};
+use crate::schedule::{validate, Family, OpKind, Schedule};
+
+/// How to compose the base schedule with the rebalance transform.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RebalancePlan {
+    /// Run the family's natural schedule untouched.
+    Off,
+    /// Uniform BPipe: every stage capped at `bound` (the derived
+    /// pair-mean bound when `None` — `⌈(p+2)/2⌉` on 1F1B).
+    Uniform { bound: Option<u64> },
+    /// Explicit per-stage caps (SlimPipe-style non-uniform BPipe).
+    PerStage { bounds: Vec<u64> },
+    /// Per-stage caps derived from an experiment's memory model
+    /// ([`crate::bpipe::capacity_stage_bounds`]).
+    Capacity { experiment: ExperimentConfig },
+}
 
 /// Configuration of one real training run.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
+    /// artifact directory (ignored when `manifest` is given)
     pub artifacts_dir: PathBuf,
+    /// in-memory manifest override — sim runs need no artifacts on disk
+    pub manifest: Option<Manifest>,
+    /// base schedule family; its chunk count must divide the manifest's
+    /// virtual-stage count (`p = stages / chunks`)
+    pub family: Family,
     pub steps: u64,
     /// microbatches per step (global batch = microbatches × artifact b)
     pub microbatches: u64,
     pub lr: f32,
-    pub bpipe: bool,
-    /// override the BPipe bound (default ⌈(p+2)/2⌉)
-    pub bound: Option<u64>,
+    pub rebalance: RebalancePlan,
     pub seed: u64,
     /// print a progress line every n steps (0 = silent)
     pub log_every: u64,
-    /// checkpoint directory; state is saved per stage + run metadata
+    /// checkpoint directory; state is saved per virtual stage + run metadata
     pub checkpoint_dir: Option<PathBuf>,
     /// checkpoint every n steps (0 = only after the final step)
     pub checkpoint_every: u64,
@@ -46,11 +75,12 @@ impl Default for TrainConfig {
     fn default() -> Self {
         Self {
             artifacts_dir: PathBuf::from("artifacts"),
+            manifest: None,
+            family: Family::OneFOneB,
             steps: 20,
             microbatches: 8,
             lr: 1e-3,
-            bpipe: false,
-            bound: None,
+            rebalance: RebalancePlan::Off,
             seed: 0,
             log_every: 0,
             checkpoint_dir: None,
@@ -85,31 +115,59 @@ impl TrainResult {
     }
 }
 
-/// Build the schedule a run implies and the per-stage store capacities.
-pub fn plan_schedule(p: u64, m: u64, bpipe: bool, bound: Option<u64>) -> (Schedule, Vec<usize>) {
-    let base = crate::schedule::one_f_one_b(p, m);
-    let schedule = if bpipe { crate::bpipe::apply_bpipe(&base, bound) } else { base };
+/// Build the schedule a run implies and the per-stage store capacities:
+/// the family's base schedule composed with the rebalance plan, then
+/// validated.  Capacities are each stage's realized stash high-water —
+/// the tightest bound the activation store can enforce without ever
+/// rejecting a scheduled put (for a rebalanced schedule, the planned
+/// per-stage cap; for a base schedule, its natural in-flight count).
+pub fn plan_schedule(
+    family: Family,
+    p: u64,
+    m: u64,
+    plan: &RebalancePlan,
+) -> (Schedule, Vec<usize>) {
+    let base = family.build(p, m);
+    let schedule = match plan {
+        RebalancePlan::Off => base,
+        RebalancePlan::Uniform { bound } => crate::bpipe::rebalance(&base, *bound),
+        RebalancePlan::PerStage { bounds } => crate::bpipe::rebalance_bounded(&base, bounds),
+        RebalancePlan::Capacity { experiment } => {
+            assert_eq!(
+                experiment.parallel.p, p,
+                "capacity plan's experiment models a {}-stage pipeline, schedule has {p}",
+                experiment.parallel.p
+            );
+            let bounds = crate::bpipe::capacity_stage_bounds(experiment, &base);
+            crate::bpipe::rebalance_bounded(&base, &bounds)
+        }
+    };
     validate(&schedule).expect("generated schedule must validate");
-    let caps: Vec<usize> = (0..p)
-        .map(|s| {
-            let cap = if bpipe {
-                bound.unwrap_or_else(|| bpipe_bound(p)).min(m)
-            } else {
-                one_f_one_b_in_flight(p, s, m)
-            };
-            cap as usize
-        })
-        .collect();
+    let caps: Vec<usize> =
+        (0..p).map(|s| schedule.program(s).stash_high_water().max(1) as usize).collect();
     (schedule, caps)
 }
 
-/// Run pipeline-parallel training end to end.  Blocks until done.
-pub fn train(cfg: &TrainConfig) -> anyhow::Result<TrainResult> {
-    let manifest = Manifest::load(&cfg.artifacts_dir)?;
-    let p = manifest.spec.stages;
+/// Run pipeline-parallel training end to end on backend `B`.  Blocks
+/// until done.
+pub fn train<B: Backend>(cfg: &TrainConfig) -> anyhow::Result<TrainResult> {
+    let manifest = match &cfg.manifest {
+        Some(m) => m.clone(),
+        None => Manifest::load(&cfg.artifacts_dir)?,
+    };
+    let vp = manifest.spec.stages;
     let m = cfg.microbatches;
-    anyhow::ensure!(p >= 2, "pipeline needs at least 2 stages");
-    let (schedule, caps) = plan_schedule(p, m, cfg.bpipe, cfg.bound);
+    let chunks = cfg.family.chunks();
+    anyhow::ensure!(vp >= 2, "pipeline needs at least 2 virtual stages");
+    anyhow::ensure!(
+        chunks >= 1 && vp % chunks == 0,
+        "manifest's {vp} virtual stages don't split into {chunks} chunks ({:?})",
+        cfg.family
+    );
+    let p = vp / chunks;
+    let (schedule, caps) = plan_schedule(cfg.family, p, m, &cfg.rebalance);
+    debug_assert_eq!(schedule.chunks, chunks);
+    let placement = schedule.placement;
 
     // resume bookkeeping: cfg.steps is the TOTAL target; a resumed run
     // executes the remainder and fast-forwards the corpus
@@ -121,8 +179,10 @@ pub fn train(cfg: &TrainConfig) -> anyhow::Result<TrainResult> {
         let meta = CheckpointMeta::load(dir)?;
         anyhow::ensure!(meta.stages == p, "checkpoint stages {} != {}", meta.stages, p);
         anyhow::ensure!(
-            meta.microbatches == m && meta.seed == cfg.seed,
-            "checkpoint run shape (m={}, seed={}) differs from this run (m={m}, seed={})",
+            meta.chunks == chunks && meta.microbatches == m && meta.seed == cfg.seed,
+            "checkpoint run shape (chunks={}, m={}, seed={}) differs from this run \
+             (chunks={chunks}, m={m}, seed={})",
+            meta.chunks,
             meta.microbatches,
             meta.seed,
             cfg.seed
@@ -135,20 +195,30 @@ pub fn train(cfg: &TrainConfig) -> anyhow::Result<TrainResult> {
     anyhow::ensure!(run_steps > 0, "nothing to do: {start_step} steps already done");
 
     // -- channel topology ---------------------------------------------------
-    let mut act_txs = Vec::new();
-    let mut act_rxs = vec![None];
-    let mut grad_txs = vec![None];
-    let mut grad_rxs = Vec::new();
-    for _ in 0..p - 1 {
+    // one act + one grad channel per virtual-stage boundary d → d+1,
+    // routed to the physical hosts of the two sides (possibly the same
+    // worker, at zig-zag junction stages)
+    type Slots<T> = Vec<Vec<Option<T>>>;
+    let mut act_in: Slots<Receiver<(u64, HostTensor)>> =
+        (0..p).map(|_| (0..chunks).map(|_| None).collect()).collect();
+    let mut act_out: Slots<Sender<(u64, HostTensor)>> =
+        (0..p).map(|_| (0..chunks).map(|_| None).collect()).collect();
+    let mut grad_in: Slots<Receiver<(u64, HostTensor)>> =
+        (0..p).map(|_| (0..chunks).map(|_| None).collect()).collect();
+    let mut grad_out: Slots<Sender<(u64, HostTensor)>> =
+        (0..p).map(|_| (0..chunks).map(|_| None).collect()).collect();
+    for d in 0..vp - 1 {
+        let (src_s, src_c) = (placement.host_stage(p, d) as usize, (d / p) as usize);
+        let (dst_s, dst_c) = (placement.host_stage(p, d + 1) as usize, ((d + 1) / p) as usize);
         let (atx, arx) = channel();
-        act_txs.push(Some(atx));
-        act_rxs.push(Some(arx));
+        act_out[src_s][src_c] = Some(atx);
+        act_in[dst_s][dst_c] = Some(arx);
         let (gtx, grx) = channel();
-        grad_txs.push(Some(gtx));
-        grad_rxs.push(Some(grx));
+        grad_out[dst_s][dst_c] = Some(gtx);
+        grad_in[src_s][src_c] = Some(grx);
     }
-    act_txs.push(None);
-    grad_rxs.push(None);
+    let first_host = placement.host_stage(p, 0);
+    let last_host = placement.host_stage(p, vp - 1);
     let (tok_tx, tok_rx) = channel();
     let (tgt_tx, tgt_rx) = channel();
     let (loss_tx, loss_rx) = channel();
@@ -162,10 +232,8 @@ pub fn train(cfg: &TrainConfig) -> anyhow::Result<TrainResult> {
             .program(s)
             .ops
             .iter()
-            .any(|o| matches!(o.kind, crate::schedule::OpKind::Evict | crate::schedule::OpKind::Load));
+            .any(|o| matches!(o.kind, OpKind::Evict | OpKind::Load));
         let remote = if needs_store {
-            // stage s evicts to acceptor stage pairing::partner(p, s)
-            let _ = pairing::partner(p, s);
             let (client, _stats_rx) = spawn_remote_store();
             Some(client)
         } else {
@@ -174,11 +242,13 @@ pub fn train(cfg: &TrainConfig) -> anyhow::Result<TrainResult> {
         let wcfg = WorkerConfig {
             stage: s,
             stages: p,
+            chunks,
+            placement,
             steps: run_steps,
             microbatches: m,
             lr: cfg.lr,
             seed: cfg.seed as i32,
-            artifacts_dir: cfg.artifacts_dir.clone(),
+            manifest: manifest.clone(),
             program: schedule.program(s).clone(),
             capacity: caps[s as usize],
             checkpoint_dir: cfg.checkpoint_dir.clone(),
@@ -187,19 +257,19 @@ pub fn train(cfg: &TrainConfig) -> anyhow::Result<TrainResult> {
             start_step,
         };
         let wch = WorkerChannels {
-            act_in: act_rxs[s as usize].take(),
-            act_out: act_txs[s as usize].take(),
-            grad_in: grad_rxs[s as usize].take(),
-            grad_out: grad_txs[s as usize].take(),
-            tokens_in: if s == 0 { tok_rx.take() } else { None },
-            targets_in: if s == p - 1 { tgt_rx.take() } else { None },
-            loss_out: if s == p - 1 { Some(loss_tx.clone()) } else { None },
+            act_in: std::mem::take(&mut act_in[s as usize]),
+            act_out: std::mem::take(&mut act_out[s as usize]),
+            grad_in: std::mem::take(&mut grad_in[s as usize]),
+            grad_out: std::mem::take(&mut grad_out[s as usize]),
+            tokens_in: if s == first_host { tok_rx.take() } else { None },
+            targets_in: if s == last_host { tgt_rx.take() } else { None },
+            loss_out: if s == last_host { Some(loss_tx.clone()) } else { None },
             remote,
         };
         handles.push(
             std::thread::Builder::new()
                 .name(format!("stage-{s}"))
-                .spawn(move || worker_main(wcfg, wch))?,
+                .spawn(move || worker_main::<B>(wcfg, wch))?,
         );
     }
     drop(loss_tx);
@@ -218,7 +288,7 @@ pub fn train(cfg: &TrainConfig) -> anyhow::Result<TrainResult> {
             let (tokens, targets) = corpus.microbatch(b, s_len);
             tok_tx
                 .send((mb, HostTensor::I32 { data: tokens, shape: shape.clone() }))
-                .map_err(|_| anyhow::anyhow!("stage 0 died early"))?;
+                .map_err(|_| anyhow::anyhow!("first stage died early"))?;
             tgt_tx
                 .send((mb, HostTensor::I32 { data: targets, shape: shape.clone() }))
                 .map_err(|_| anyhow::anyhow!("last stage died early"))?;
@@ -262,6 +332,7 @@ pub fn train(cfg: &TrainConfig) -> anyhow::Result<TrainResult> {
         CheckpointMeta {
             steps_done: start_step + run_steps,
             stages: p,
+            chunks,
             microbatches: m,
             seed: cfg.seed,
         }
@@ -279,20 +350,67 @@ pub fn train(cfg: &TrainConfig) -> anyhow::Result<TrainResult> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::schedule::ScheduleKind;
 
     #[test]
-    fn plan_schedule_capacities() {
-        let (sched, caps) = plan_schedule(4, 8, false, None);
+    fn plan_off_uses_natural_in_flight_capacities() {
+        let (sched, caps) = plan_schedule(Family::OneFOneB, 4, 8, &RebalancePlan::Off);
         assert_eq!(caps, vec![4, 3, 2, 1]);
-        assert_eq!(sched.kind, crate::schedule::ScheduleKind::OneFOneB);
-        let (sched_b, caps_b) = plan_schedule(4, 8, true, None);
-        assert_eq!(caps_b, vec![3, 3, 3, 3]);
-        assert!(matches!(sched_b.kind, crate::schedule::ScheduleKind::BPipe { bound: 3 }));
+        assert_eq!(sched.kind, ScheduleKind::OneFOneB);
     }
 
     #[test]
-    fn plan_schedule_small_m_clips() {
-        let (_s, caps) = plan_schedule(4, 2, true, None);
-        assert_eq!(caps, vec![2, 2, 2, 2]);
+    fn plan_uniform_caps_at_the_bound() {
+        let (sched, caps) =
+            plan_schedule(Family::OneFOneB, 4, 8, &RebalancePlan::Uniform { bound: None });
+        // derived bound 3; stages whose natural high-water is below it
+        // keep their tighter natural capacity
+        assert_eq!(caps, vec![3, 3, 2, 1]);
+        assert!(matches!(sched.kind, ScheduleKind::BPipe { bound: 3 }));
+    }
+
+    #[test]
+    fn plan_small_m_clips() {
+        let (_s, caps) =
+            plan_schedule(Family::OneFOneB, 4, 2, &RebalancePlan::Uniform { bound: None });
+        assert_eq!(caps, vec![2, 2, 2, 1]);
+    }
+
+    #[test]
+    fn plan_per_stage_caps_follow_the_vector() {
+        let bounds = vec![5u64, 6, 6, 5, 4, 3, 2, 2];
+        let (sched, caps) = plan_schedule(
+            Family::OneFOneB,
+            8,
+            32,
+            &RebalancePlan::PerStage { bounds: bounds.clone() },
+        );
+        assert_eq!(sched.stage_bounds.as_deref(), Some(&bounds[..]));
+        for (s, &cap) in caps.iter().enumerate() {
+            assert!(cap as u64 <= bounds[s], "stage {s}: {cap} > {}", bounds[s]);
+        }
+    }
+
+    #[test]
+    fn plan_capacity_derives_from_the_experiment() {
+        let e = crate::config::paper_experiment(8).unwrap();
+        let (sched, _caps) = plan_schedule(
+            Family::OneFOneB,
+            e.parallel.p,
+            e.parallel.num_microbatches(),
+            &RebalancePlan::Capacity { experiment: e.clone() },
+        );
+        assert_eq!(sched.stage_bounds, Some(vec![5, 6, 6, 5, 4, 3, 2, 2]));
+    }
+
+    #[test]
+    fn plan_covers_multi_chunk_families() {
+        for family in [Family::VShaped, Family::Interleaved { v: 2 }, Family::ZigZag { v: 4 }] {
+            let (sched, caps) =
+                plan_schedule(family, 4, 8, &RebalancePlan::Uniform { bound: None });
+            assert_eq!(sched.chunks, family.chunks());
+            assert_eq!(caps.len(), 4);
+            assert!(caps.iter().all(|&c| c >= 1));
+        }
     }
 }

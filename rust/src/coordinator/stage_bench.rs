@@ -2,15 +2,14 @@
 //!
 //! "Evaluate a small part of the model with fewer resources" (paper §5):
 //! run ONE mid stage's fwd+bwd at several microbatch sizes through the
-//! real PJRT executables, time them, and feed the resulting
-//! `MFU_stage(b)` ratios into the Eq. 4 estimator.  On CPU the absolute
-//! peak is irrelevant — Eq. 4 only consumes *ratios* of stage MFUs, and
-//! throughput/time ratios are peak-independent.
+//! execution backend, time them, and feed the resulting `MFU_stage(b)`
+//! ratios into the Eq. 4 estimator.  The absolute peak is irrelevant on
+//! a laptop (or under the sim backend) — Eq. 4 only consumes *ratios*
+//! of stage MFUs, and throughput/time ratios are peak-independent.
 
-use std::path::Path;
 use std::time::Instant;
 
-use crate::runtime::{literal_f32, Manifest, Runtime};
+use crate::runtime::{Backend, HostTensor, Manifest};
 
 /// Timing of one stage at one microbatch size.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -26,53 +25,47 @@ pub struct StageTiming {
 
 /// Measure `mid_fwd_b{b}` + `mid_bwd_b{b}` over `iters` repetitions
 /// (after one warmup) and return mean per-microbatch timing.
-pub fn measure_stage(
-    artifacts_dir: &Path,
+pub fn measure_stage<B: Backend>(
+    manifest: &Manifest,
     b: u64,
     iters: u32,
 ) -> anyhow::Result<StageTiming> {
-    let manifest = Manifest::load(artifacts_dir)?;
     anyhow::ensure!(
         manifest.bs_sweep.contains(&b),
         "b={b} not in the artifact sweep {:?}; re-run `make artifacts` with --bs-sweep",
         manifest.bs_sweep
     );
-    let rt = Runtime::cpu()?;
-    let fwd = rt.load(&manifest.path_of(&format!("mid_fwd_b{b}"))?)?;
-    let bwd = rt.load(&manifest.path_of(&format!("mid_bwd_b{b}"))?)?;
+    let backend = B::create(manifest)?;
+    let fwd = backend.compile(manifest, &format!("mid_fwd_b{b}"))?;
+    let bwd = backend.compile(manifest, &format!("mid_bwd_b{b}"))?;
     let spec = &manifest.spec;
     let n = manifest.param_count("mid")? as usize;
 
     // deterministic pseudo-random inputs (content doesn't affect timing)
-    let params: Vec<f32> = (0..n).map(|i| ((i * 2654435761) % 1000) as f32 * 1e-4 - 0.05).collect();
-    let act_len = (spec.b_override(b) * spec.s * spec.h) as usize;
+    let params: Vec<f32> =
+        (0..n).map(|i| ((i * 2654435761) % 1000) as f32 * 1e-4 - 0.05).collect();
+    let act_len = (b * spec.s * spec.h) as usize;
     let x: Vec<f32> = (0..act_len).map(|i| ((i * 40503) % 997) as f32 * 1e-3 - 0.5).collect();
-    let shape = [b as i64, spec.s as i64, spec.h as i64];
-    let params_lit = xla::Literal::vec1(&params);
-    let x_lit = literal_f32(&x, &shape)?;
-    let dy_lit = literal_f32(&x, &shape)?;
+    let shape = vec![b as i64, spec.s as i64, spec.h as i64];
+    let params_buf = backend.upload(&HostTensor::vec_f32(params))?;
+    let x_buf = backend.upload(&HostTensor::F32 { data: x.clone(), shape: shape.clone() })?;
+    let dy_buf = backend.upload(&HostTensor::F32 { data: x, shape })?;
 
     // warmup (first execution pays one-time costs)
-    let y = fwd.run1(&[&params_lit, &x_lit])?;
-    let _ = bwd.run(&[&params_lit, &x_lit, &dy_lit])?;
-    drop(y);
+    let _ = backend.execute(&fwd, &[&params_buf, &x_buf])?;
+    let _ = backend.execute(&bwd, &[&params_buf, &x_buf, &dy_buf])?;
 
     let t0 = Instant::now();
     for _ in 0..iters {
-        let _y = fwd.run1(&[&params_lit, &x_lit])?;
-        let _g = bwd.run(&[&params_lit, &x_lit, &dy_lit])?;
+        let _y = backend.execute(&fwd, &[&params_buf, &x_buf])?;
+        let _g = backend.execute(&bwd, &[&params_buf, &x_buf, &dy_buf])?;
     }
-    let t_b = t0.elapsed().as_secs_f64() / iters as f64;
+    let t_b = t0.elapsed().as_secs_f64() / iters.max(1) as f64;
 
     // analytic stage model-FLOPs for this artifact config (fwd+bwd = 3×fwd)
     let tokens = b * spec.s;
     let flops = stage_model_flops(spec, b);
-    Ok(StageTiming {
-        b,
-        t_b,
-        tokens_per_s: tokens as f64 / t_b,
-        flops_per_s: flops / t_b,
-    })
+    Ok(StageTiming { b, t_b, tokens_per_s: tokens as f64 / t_b, flops_per_s: flops / t_b })
 }
 
 /// Analytic fwd+bwd model FLOPs of one mid stage of the tiny artifact
@@ -82,17 +75,10 @@ pub fn stage_model_flops(spec: &crate::runtime::artifact::SpecMeta, b: u64) -> f
     72.0 * b as f64 * s * spec.layers_per_stage as f64 * h * h * (1.0 + s / (6.0 * h))
 }
 
-impl crate::runtime::artifact::SpecMeta {
-    /// the sweep artifacts share every dimension except b
-    fn b_override(&self, b: u64) -> u64 {
-        let _ = self.b;
-        b
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::SimBackend;
 
     #[test]
     fn stage_model_flops_linear_in_b() {
@@ -112,5 +98,16 @@ mod tests {
         assert!((f4 / f1 - 4.0).abs() < 1e-12);
         // 72·128·2·256²·(1+128/1536) ≈ 1.3e9
         assert!(f1 > 1e9 && f1 < 2e9, "{f1:e}");
+    }
+
+    #[test]
+    fn measures_the_sim_backend_single_stage() {
+        let m = Manifest::synthetic(4, 16, 8, 2, 64, &[1, 2]);
+        let t = measure_stage::<SimBackend>(&m, 2, 2).unwrap();
+        assert_eq!(t.b, 2);
+        assert!(t.t_b > 0.0 && t.t_b.is_finite());
+        assert!(t.tokens_per_s > 0.0 && t.flops_per_s > 0.0);
+        // an unlisted microbatch size is rejected up front
+        assert!(measure_stage::<SimBackend>(&m, 7, 1).is_err());
     }
 }

@@ -1,35 +1,51 @@
-//! One pipeline-stage worker: owns the stage's compiled executables,
-//! parameters and optimizer state, and executes its [`StageProgram`]
-//! op-by-op for every training step.
+//! One pipeline-stage worker: owns the compiled executables, parameters
+//! and optimizer state of every virtual-pipeline chunk it hosts, and
+//! executes its [`StageProgram`] op-by-op for every training step.
 //!
 //! Workers are plain OS threads connected by channels (activations
-//! downstream, gradients upstream, BPipe evict/load to the pair store).
-//! Each worker creates its own PJRT client — `xla` handles are not
-//! `Send`, and a per-worker client is also the honest analogue of
-//! one-process-per-GPU.
+//! downstream per chunk boundary, gradients upstream, BPipe evict/load
+//! to the pair store), generic over the execution [`Backend`]: the PJRT
+//! path and the in-tree [`crate::runtime::SimBackend`] run the exact
+//! same loop.  Each worker creates its own backend client — `xla`
+//! handles are not `Send`, and a per-worker client is also the honest
+//! analogue of one-process-per-GPU.
+//!
+//! Multi-chunk programs (interleaved / V-shaped / zig-zag) are
+//! first-class: ops carry a `chunk` field selecting the per-chunk state,
+//! the stash is keyed by `(mb, chunk)` under ONE per-stage capacity (the
+//! rebalance transform's bound is a per-stage resident count across
+//! chunks), and the chunk whose virtual stage is 0 / `vp − 1` consumes
+//! the leader's token / target streams.
 
-use std::sync::mpsc::{Receiver, Sender};
 use std::path::PathBuf;
+use std::sync::mpsc::{Receiver, Sender};
 use std::time::Instant;
 
 use super::activation_store::{ActivationStore, HostTensor, RemoteStoreClient};
 use super::checkpoint::StageCheckpoint;
-use crate::runtime::{to_f32_vec, Manifest, Runtime};
-use crate::schedule::{OpKind, StageProgram};
+use crate::runtime::{Backend, Manifest};
+use crate::schedule::{OpKind, Placement, StageProgram};
 
 /// Static configuration for one worker.
 pub struct WorkerConfig {
     pub stage: u64,
+    /// physical pipeline depth
     pub stages: u64,
+    /// virtual chunks hosted per stage (1 unless interleaved/V/zig-zag)
+    pub chunks: u64,
+    pub placement: Placement,
     pub steps: u64,
     pub microbatches: u64,
     pub lr: f32,
     pub seed: i32,
-    pub artifacts_dir: PathBuf,
+    /// the artifact contract (shapes, param counts); workers get a copy
+    /// so in-memory synthetic manifests need no artifacts directory
+    pub manifest: Manifest,
     pub program: StageProgram,
-    /// activation-store capacity this schedule was built for
+    /// activation-store capacity this schedule was built for (resident
+    /// stashes across ALL hosted chunks)
     pub capacity: usize,
-    /// checkpoint directory (params + Adam moments per stage)
+    /// checkpoint directory (params + Adam moments per virtual stage)
     pub checkpoint_dir: Option<PathBuf>,
     /// save every n steps (0 = only after the final step)
     pub checkpoint_every: u64,
@@ -39,17 +55,19 @@ pub struct WorkerConfig {
     pub start_step: u64,
 }
 
-/// Channel endpoints for one worker (None where the topology has no edge).
+/// Channel endpoints for one worker, indexed by hosted chunk (`None`
+/// where the topology has no edge — chunk boundaries at the pipeline
+/// ends, or streams belonging to another stage).
 pub struct WorkerChannels {
-    pub act_in: Option<Receiver<(u64, HostTensor)>>,
-    pub act_out: Option<Sender<(u64, HostTensor)>>,
-    pub grad_in: Option<Receiver<(u64, HostTensor)>>,
-    pub grad_out: Option<Sender<(u64, HostTensor)>>,
-    /// leader → stage 0: input tokens per microbatch
+    pub act_in: Vec<Option<Receiver<(u64, HostTensor)>>>,
+    pub act_out: Vec<Option<Sender<(u64, HostTensor)>>>,
+    pub grad_in: Vec<Option<Receiver<(u64, HostTensor)>>>,
+    pub grad_out: Vec<Option<Sender<(u64, HostTensor)>>>,
+    /// leader → host of virtual stage 0: input tokens per microbatch
     pub tokens_in: Option<Receiver<(u64, HostTensor)>>,
-    /// leader → last stage: target tokens per microbatch
+    /// leader → host of the last virtual stage: target tokens
     pub targets_in: Option<Receiver<(u64, HostTensor)>>,
-    /// last stage → leader: (step, microbatch, loss)
+    /// host of the last virtual stage → leader: (step, microbatch, loss)
     pub loss_out: Option<Sender<(u64, u64, f32)>>,
     /// BPipe pair store (present iff the program contains Evict/Load)
     pub remote: Option<RemoteStoreClient>,
@@ -59,6 +77,7 @@ pub struct WorkerChannels {
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct StageStats {
     pub stage: u64,
+    /// parameters across all hosted chunks
     pub param_count: usize,
     pub compile_s: f64,
     pub fwd_s: f64,
@@ -84,189 +103,270 @@ fn recv_expect(
     Ok(t)
 }
 
-/// Worker entry point; runs `cfg.steps` iterations of `cfg.program`.
-pub fn worker_main(cfg: WorkerConfig, ch: WorkerChannels) -> anyhow::Result<StageStats> {
-    let rt = Runtime::cpu()?;
-    let manifest = Manifest::load(&cfg.artifacts_dir)?;
-    let kind = manifest.stage_kind(cfg.stage);
-    let n_params = manifest.param_count(kind)? as usize;
-    let spec = &manifest.spec;
-    let act_shape = vec![spec.b as i64, spec.s as i64, spec.h as i64];
+/// Everything one hosted chunk owns: compiled executables, parameters
+/// (host + device-resident copy), optimizer state, gradient accumulator.
+struct ChunkState<B: Backend> {
+    /// virtual-pipeline stage id (`placement.virtual_stage(p, s, c)`)
+    virt: u64,
+    kind: &'static str,
+    n_params: usize,
+    fwd: Option<B::Exec>,
+    bwd: B::Exec,
+    adam: B::Exec,
+    params: HostTensor,
+    m_state: HostTensor,
+    v_state: HostTensor,
+    params_buf: B::Buffer,
+    grad_acc: Vec<f32>,
+}
 
+/// Worker entry point; runs `cfg.steps` iterations of `cfg.program`.
+pub fn worker_main<B: Backend>(
+    cfg: WorkerConfig,
+    ch: WorkerChannels,
+) -> anyhow::Result<StageStats> {
+    let backend = B::create(&cfg.manifest)?;
+    let manifest = &cfg.manifest;
+    let spec = &manifest.spec;
+    let vp = cfg.stages * cfg.chunks;
+    anyhow::ensure!(
+        spec.stages == vp,
+        "manifest describes {} virtual stages, schedule needs {vp}",
+        spec.stages
+    );
+
+    // -- per-chunk state ----------------------------------------------------
     let t0 = Instant::now();
-    let init = rt.load(&manifest.path_of(&format!("{kind}_init"))?)?;
-    // the last stage computes loss+grads in one bwd artifact; no fwd exe
-    let fwd = if kind == "last" {
-        None
-    } else {
-        Some(rt.load(&manifest.path_of(&format!("{kind}_fwd"))?)?)
-    };
-    let bwd = rt.load(&manifest.path_of(&format!("{kind}_bwd"))?)?;
-    let adam = rt.load(&manifest.path_of(&format!("adam_{kind}"))?)?;
+    let mut chunks: Vec<ChunkState<B>> = Vec::with_capacity(cfg.chunks as usize);
+    for c in 0..cfg.chunks {
+        let virt = cfg.placement.virtual_stage(cfg.stages, cfg.stage, c);
+        let kind = manifest.stage_kind(virt);
+        let n_params = manifest.param_count(kind)? as usize;
+        // the last virtual stage computes loss+grads in one bwd artifact
+        let fwd = if kind == "last" {
+            None
+        } else {
+            Some(backend.compile(manifest, &format!("{kind}_fwd"))?)
+        };
+        let bwd = backend.compile(manifest, &format!("{kind}_bwd"))?;
+        let adam = backend.compile(manifest, &format!("adam_{kind}"))?;
+        let (params, m_state, v_state) = if cfg.resume {
+            let dir = cfg.checkpoint_dir.as_ref().expect("resume without checkpoint dir");
+            let ck = StageCheckpoint::load(dir, virt, n_params)?;
+            (
+                HostTensor::vec_f32(ck.params),
+                HostTensor::vec_f32(ck.m),
+                HostTensor::vec_f32(ck.v),
+            )
+        } else {
+            let init = backend.compile(manifest, &format!("{kind}_init"))?;
+            let seed = HostTensor::scalar_i32(cfg.seed + virt as i32);
+            let mut outs = backend.execute_host(&init, &[&seed])?;
+            anyhow::ensure!(outs.len() == 1, "{kind}_init: expected 1 output");
+            let params = outs.pop().unwrap();
+            anyhow::ensure!(params.len() == n_params, "{kind}_init returned a wrong size");
+            let zeros = HostTensor::vec_f32(vec![0f32; n_params]);
+            (params, zeros.clone(), zeros)
+        };
+        let params_buf = backend.upload(&params)?;
+        chunks.push(ChunkState {
+            virt,
+            kind,
+            n_params,
+            fwd,
+            bwd,
+            adam,
+            params,
+            m_state,
+            v_state,
+            params_buf,
+            grad_acc: vec![0f32; n_params],
+        });
+    }
     let compile_s = t0.elapsed().as_secs_f64();
 
-    // Parameters live as a DEVICE-RESIDENT buffer within a step (they
-    // only change at the optimizer boundary), so the per-op hot path
-    // uploads just the activation; optimizer state stays host-side.
-    let (mut params, mut m_state, mut v_state) = if cfg.resume {
-        let dir = cfg.checkpoint_dir.as_ref().expect("resume without checkpoint dir");
-        let ck = StageCheckpoint::load(dir, cfg.stage, n_params)?;
-        (
-            xla::Literal::vec1(&ck.params),
-            xla::Literal::vec1(&ck.m),
-            xla::Literal::vec1(&ck.v),
-        )
-    } else {
-        let params = init.run1(&[xla::Literal::scalar(cfg.seed + cfg.stage as i32)])?;
-        let zeros = vec![0f32; n_params];
-        (params, xla::Literal::vec1(&zeros), xla::Literal::vec1(&zeros))
-    };
-    let mut params_buf = rt.upload_literal(&params)?;
-    let mut grad_acc = vec![0f32; n_params];
     let inv_m = 1.0f32 / cfg.microbatches as f32;
-
     let mut stash = ActivationStore::new(cfg.capacity);
     let mut stats = StageStats {
         stage: cfg.stage,
-        param_count: n_params,
+        param_count: chunks.iter().map(|c| c.n_params).sum(),
         compile_s,
         ..Default::default()
     };
 
     for step in 1..=cfg.steps {
         for op in &cfg.program.ops {
+            let ci = op.chunk as usize;
+            let key = (op.mb, op.chunk);
             match op.kind {
                 OpKind::Fwd => {
                     let t = Instant::now();
-                    if kind == "last" {
-                        // last stage: stash (x, targets); loss+grads run in Bwd
-                        let x = recv_expect(ch.act_in.as_ref().unwrap(), op.mb, "act", cfg.stage)?;
+                    let cs = &chunks[ci];
+                    if cs.kind == "last" {
+                        // stash (x, targets); loss+grads run in Bwd
+                        let x = recv_expect(
+                            ch.act_in[ci].as_ref().expect("last chunk without act_in"),
+                            op.mb,
+                            "act",
+                            cfg.stage,
+                        )?;
                         let tgt = recv_expect(
-                            ch.targets_in.as_ref().unwrap(),
+                            ch.targets_in.as_ref().expect("last chunk without targets"),
                             op.mb,
                             "targets",
                             cfg.stage,
                         )?;
-                        stash.put(op.mb, vec![x, tgt]);
+                        stash.put(key, vec![x, tgt]);
                     } else {
-                        let x = if cfg.stage == 0 {
-                            recv_expect(ch.tokens_in.as_ref().unwrap(), op.mb, "tokens", cfg.stage)?
+                        let x = if cs.virt == 0 {
+                            recv_expect(
+                                ch.tokens_in.as_ref().expect("first chunk without tokens"),
+                                op.mb,
+                                "tokens",
+                                cfg.stage,
+                            )?
                         } else {
-                            recv_expect(ch.act_in.as_ref().unwrap(), op.mb, "act", cfg.stage)?
+                            recv_expect(
+                                ch.act_in[ci].as_ref().expect("mid chunk without act_in"),
+                                op.mb,
+                                "act",
+                                cfg.stage,
+                            )?
                         };
-                        let x_buf = x.to_buffer(&rt)?;
-                        let y = fwd.as_ref().unwrap().run1_buffers(&[&params_buf, &x_buf])?;
-                        stash.put(op.mb, vec![x]);
-                        ch.act_out
+                        let x_buf = backend.upload(&x)?;
+                        let y = backend.execute1(
+                            cs.fwd.as_ref().expect("non-last chunk has a fwd exe"),
+                            &[&cs.params_buf, &x_buf],
+                        )?;
+                        stash.put(key, vec![x]);
+                        ch.act_out[ci]
                             .as_ref()
-                            .unwrap()
-                            .send((op.mb, HostTensor::F32 {
-                                data: to_f32_vec(&y)?,
-                                shape: act_shape.clone(),
-                            }))
+                            .expect("non-last chunk without act_out")
+                            .send((op.mb, y))
                             .map_err(|_| anyhow::anyhow!("act_out closed"))?;
                     }
                     stats.fwd_s += t.elapsed().as_secs_f64();
                 }
                 OpKind::Bwd => {
                     let t = Instant::now();
-                    let dflat = match kind {
+                    let cs = &mut chunks[ci];
+                    let dflat = match cs.kind {
                         "last" => {
-                            let ts = stash.take(op.mb);
-                            let x_buf = ts[0].to_buffer(&rt)?;
-                            let tgt_buf = ts[1].to_buffer(&rt)?;
-                            let outs = bwd.run_buffers(&[&params_buf, &x_buf, &tgt_buf])?;
-                            let (dx, dflat, loss) = (&outs[0], &outs[1], &outs[2]);
-                            ch.grad_out
+                            let ts = stash.take(key);
+                            let x_buf = backend.upload(&ts[0])?;
+                            let tgt_buf = backend.upload(&ts[1])?;
+                            let outs =
+                                backend.execute(&cs.bwd, &[&cs.params_buf, &x_buf, &tgt_buf])?;
+                            anyhow::ensure!(outs.len() == 3, "last_bwd: expected (dx, dw, loss)");
+                            let mut it = outs.into_iter();
+                            let dx = it.next().unwrap();
+                            let dflat = it.next().unwrap();
+                            let loss = it.next().unwrap();
+                            ch.grad_out[ci]
                                 .as_ref()
-                                .unwrap()
-                                .send((op.mb, HostTensor::F32 {
-                                    data: to_f32_vec(dx)?,
-                                    shape: act_shape.clone(),
-                                }))
+                                .expect("last chunk without grad_out")
+                                .send((op.mb, dx))
                                 .map_err(|_| anyhow::anyhow!("grad_out closed"))?;
                             ch.loss_out
                                 .as_ref()
-                                .unwrap()
-                                .send((step, op.mb, loss.get_first_element::<f32>()?))
+                                .expect("last chunk without loss_out")
+                                .send((step, op.mb, loss.f32s()?[0]))
                                 .map_err(|_| anyhow::anyhow!("loss_out closed"))?;
-                            to_f32_vec(dflat)?
+                            dflat
                         }
                         "mid" => {
-                            let dy =
-                                recv_expect(ch.grad_in.as_ref().unwrap(), op.mb, "grad", cfg.stage)?;
-                            let x_buf = stash.take(op.mb)[0].to_buffer(&rt)?;
-                            let dy_buf = dy.to_buffer(&rt)?;
-                            let outs = bwd.run_buffers(&[&params_buf, &x_buf, &dy_buf])?;
-                            ch.grad_out
+                            let dy = recv_expect(
+                                ch.grad_in[ci].as_ref().expect("mid chunk without grad_in"),
+                                op.mb,
+                                "grad",
+                                cfg.stage,
+                            )?;
+                            let ts = stash.take(key);
+                            let x_buf = backend.upload(&ts[0])?;
+                            let dy_buf = backend.upload(&dy)?;
+                            let outs =
+                                backend.execute(&cs.bwd, &[&cs.params_buf, &x_buf, &dy_buf])?;
+                            anyhow::ensure!(outs.len() == 2, "mid_bwd: expected (dx, dw)");
+                            let mut it = outs.into_iter();
+                            let dx = it.next().unwrap();
+                            let dflat = it.next().unwrap();
+                            ch.grad_out[ci]
                                 .as_ref()
-                                .unwrap()
-                                .send((op.mb, HostTensor::F32 {
-                                    data: to_f32_vec(&outs[0])?,
-                                    shape: act_shape.clone(),
-                                }))
+                                .expect("mid chunk without grad_out")
+                                .send((op.mb, dx))
                                 .map_err(|_| anyhow::anyhow!("grad_out closed"))?;
-                            to_f32_vec(&outs[1])?
+                            dflat
                         }
                         _ => {
-                            // first
-                            let dy =
-                                recv_expect(ch.grad_in.as_ref().unwrap(), op.mb, "grad", cfg.stage)?;
-                            let tok_buf = stash.take(op.mb)[0].to_buffer(&rt)?;
-                            let dy_buf = dy.to_buffer(&rt)?;
-                            let outs = bwd.run_buffers(&[&params_buf, &tok_buf, &dy_buf])?;
-                            to_f32_vec(&outs[0])?
+                            // "first": virtual stage 0 — nothing upstream
+                            let dy = recv_expect(
+                                ch.grad_in[ci].as_ref().expect("first chunk without grad_in"),
+                                op.mb,
+                                "grad",
+                                cfg.stage,
+                            )?;
+                            let ts = stash.take(key);
+                            let tok_buf = backend.upload(&ts[0])?;
+                            let dy_buf = backend.upload(&dy)?;
+                            let outs =
+                                backend.execute(&cs.bwd, &[&cs.params_buf, &tok_buf, &dy_buf])?;
+                            anyhow::ensure!(outs.len() == 1, "first_bwd: expected (dw,)");
+                            outs.into_iter().next().unwrap()
                         }
                     };
-                    for (a, g) in grad_acc.iter_mut().zip(dflat.iter()) {
+                    for (a, g) in cs.grad_acc.iter_mut().zip(dflat.f32s()?.iter()) {
                         *a += g * inv_m;
                     }
                     stats.bwd_s += t.elapsed().as_secs_f64();
                 }
                 OpKind::Evict => {
-                    let tensors = stash.take(op.mb);
-                    ch.remote.as_ref().expect("evict without remote store").evict(op.mb, tensors);
+                    let tensors = stash.take(key);
+                    ch.remote.as_ref().expect("evict without remote store").evict(key, tensors);
                     stats.evictions += 1;
                 }
                 OpKind::Load => {
                     let t = Instant::now();
-                    let tensors = ch.remote.as_ref().expect("load without remote store").load(op.mb);
+                    let tensors =
+                        ch.remote.as_ref().expect("load without remote store").load(key);
                     stats.load_wait_s += t.elapsed().as_secs_f64();
-                    stash.put(op.mb, tensors);
+                    stash.put(key, tensors);
                 }
             }
         }
         anyhow::ensure!(stash.is_empty(), "stage {}: stashes leaked across steps", cfg.stage);
 
-        // optimizer step
+        // optimizer step, per hosted chunk
         let t = Instant::now();
-        let g_lit = xla::Literal::vec1(&grad_acc);
-        let outs = adam.run(&[
-            &params,
-            &g_lit,
-            &m_state,
-            &v_state,
-            &xla::Literal::scalar((cfg.start_step + step) as i32),
-            &xla::Literal::scalar(cfg.lr),
-        ])?;
-        let mut it = outs.into_iter();
-        params = it.next().unwrap();
-        m_state = it.next().unwrap();
-        v_state = it.next().unwrap();
-        params_buf = rt.upload_literal(&params)?; // refresh the device copy
-        grad_acc.iter_mut().for_each(|g| *g = 0.0);
+        for cs in &mut chunks {
+            let g = HostTensor::vec_f32(cs.grad_acc.clone());
+            let step_t = HostTensor::scalar_i32((cfg.start_step + step) as i32);
+            let lr_t = HostTensor::scalar_f32(cfg.lr);
+            let outs = backend.execute_host(
+                &cs.adam,
+                &[&cs.params, &g, &cs.m_state, &cs.v_state, &step_t, &lr_t],
+            )?;
+            anyhow::ensure!(outs.len() == 3, "adam: expected (w, m, v)");
+            let mut it = outs.into_iter();
+            cs.params = it.next().unwrap();
+            cs.m_state = it.next().unwrap();
+            cs.v_state = it.next().unwrap();
+            cs.params_buf = backend.upload(&cs.params)?; // refresh the device copy
+            cs.grad_acc.iter_mut().for_each(|g| *g = 0.0);
+        }
         stats.adam_s += t.elapsed().as_secs_f64();
 
         // checkpoint (atomic; every n steps and always after the last)
         if let Some(dir) = &cfg.checkpoint_dir {
             let due = cfg.checkpoint_every > 0 && step % cfg.checkpoint_every == 0;
             if due || step == cfg.steps {
-                StageCheckpoint {
-                    params: crate::runtime::to_f32_vec(&params)?,
-                    m: crate::runtime::to_f32_vec(&m_state)?,
-                    v: crate::runtime::to_f32_vec(&v_state)?,
+                for cs in &chunks {
+                    StageCheckpoint {
+                        params: cs.params.f32s()?.to_vec(),
+                        m: cs.m_state.f32s()?.to_vec(),
+                        v: cs.v_state.f32s()?.to_vec(),
+                    }
+                    .save(dir, cs.virt)?;
                 }
-                .save(dir, cfg.stage)?;
             }
         }
     }

@@ -5,14 +5,16 @@
 //! rust + JAX + Pallas stack:
 //!
 //! * **L3 (this crate)** — pipeline-parallel training coordination: the
-//!   1F1B/GPipe/interleaved schedules, the BPipe activation-balancing
-//!   transformation ([`bpipe`]), a calibrated discrete-event cluster
-//!   simulator ([`sim`]) that regenerates every table/figure of the paper
-//!   at A100-cluster scale, the paper-§4 analytical estimator
-//!   ([`estimator`]), and a *real* pipeline runtime (`coordinator`,
-//!   `runtime`; behind the `pjrt` feature, which additionally needs the
-//!   `xla` crate) that trains an actual transformer through AOT-compiled
-//!   XLA artifacts on the PJRT CPU client.
+//!   1F1B/GPipe/interleaved/zig-zag schedules, the BPipe
+//!   activation-balancing transformation ([`bpipe`]), a calibrated
+//!   discrete-event cluster simulator ([`sim`]) that regenerates every
+//!   table/figure of the paper at A100-cluster scale, the paper-§4
+//!   analytical estimator ([`estimator`]), and a *real* pipeline
+//!   ([`coordinator`]) generic over the [`runtime::Backend`]
+//!   abstraction: the in-tree deterministic [`runtime::SimBackend`]
+//!   (tier-1, no dependencies) or AOT-compiled XLA artifacts on the
+//!   PJRT CPU client (feature `pjrt`, which additionally needs the
+//!   `xla` crate).
 //! * **L2 (python/compile/model.py)** — JAX stage graphs (GPT-3 and
 //!   LLaMA families), lowered once to HLO text at build time.
 //! * **L1 (python/compile/kernels/)** — Pallas flash-attention and fused
@@ -34,20 +36,20 @@
 //! | Table 3 / Table 5 regeneration | [`report::tables`], driven by [`sim`] |
 //! | §4 estimator (Eqs. 2–4, Table 4) | [`estimator`], `bpipe estimate` |
 //! | Figures 1/2 + estimator-vs-DES report | [`report::figures`], `bpipe report` |
+//! | §2.2 claim on a REAL pipeline: bit-identical BPipe losses | [`coordinator::train`] over [`runtime::SimBackend`], `bpipe train --backend sim` |
 //! | Beyond the paper: schedule/bound/layout design space | [`mod@sim::sweep`], [`schedule::zigzag()`], [`bpipe::rebalance_bounded`] |
 //!
-//! `docs/ARCHITECTURE.md` has the crate-level data-flow diagram;
-//! [`sweep_schema`] documents (and doc-tests) the sweep export formats.
+//! `docs/ARCHITECTURE.md` has the crate-level data-flow diagram and the
+//! [`runtime::Backend`] boundary; [`sweep_schema`] documents (and
+//! doc-tests) the sweep export formats.
 
 pub mod bpipe;
 pub mod config;
-#[cfg(feature = "pjrt")]
 pub mod coordinator;
 pub mod estimator;
 pub mod metrics;
 pub mod model;
 pub mod report;
-#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod schedule;
 pub mod sim;

@@ -59,12 +59,17 @@ COMMANDS:
   estimate  [--global-batch B --p P --from b:mfu --to b:mfu]
             [--runtime --artifacts DIR]  paper §4 Eq. 4 estimator
   memory    [--experiment 1..10]         per-stage memory profile
-  schedule  [--p N --m N --kind 1f1b|gpipe|interleaved|vshaped]
-            [--bpipe | --rebalance [--bound K]]
-  train     [--artifacts DIR --steps N --microbatches M --lr F]
-            [--bpipe] [--seed N] [--log-every N]
-            [--checkpoint-dir D --checkpoint-every N] [--resume]
-                                         REAL pipeline training (pjrt)
+  schedule  [--p N --m N --kind 1f1b|gpipe|interleaved|vshaped|zigzag]
+            [--v N] [--bpipe | --rebalance [--bound K]]
+  train     [--backend sim|pjrt] [--artifacts DIR]
+            [--schedule 1f1b|gpipe|interleaved|vshaped|zigzag --v N]
+            [--bpipe | --rebalance [--bound K] | --stage-bounds a,b,..]
+            [--steps N --microbatches M --lr F --p N] [--seed N]
+            [--log-every N] [--checkpoint-dir D --checkpoint-every N]
+            [--resume]                   REAL pipeline training: the
+                                         in-tree SimBackend by default
+                                         (no artifacts needed), PJRT
+                                         with the pjrt build feature
 ";
 
 /// Minimal flag parser: `--key value` pairs plus boolean `--key` flags.
@@ -127,6 +132,58 @@ fn parse_measurement(s: &str) -> anyhow::Result<StageMeasurement> {
     Ok(StageMeasurement { b: b.trim().parse()?, mfu_stage: mfu.trim().parse()? })
 }
 
+fn parse_family(kind: &str, v: u64) -> anyhow::Result<bpipe::schedule::Family> {
+    use bpipe::schedule::Family;
+    Ok(match kind {
+        "1f1b" => Family::OneFOneB,
+        "gpipe" => Family::GPipe,
+        "interleaved" => Family::Interleaved { v },
+        "vshaped" => Family::VShaped,
+        "zigzag" => Family::ZigZag { v },
+        other => anyhow::bail!(
+            "unknown schedule kind {other:?} (1f1b|gpipe|interleaved|vshaped|zigzag)"
+        ),
+    })
+}
+
+/// Shared result reporting for `bpipe train` on any backend.
+fn run_train<B: bpipe::runtime::Backend>(
+    cfg: &bpipe::coordinator::TrainConfig,
+) -> anyhow::Result<()> {
+    println!(
+        "training: {} steps × {} microbatches, family {:?}, rebalance {}",
+        cfg.steps,
+        cfg.microbatches,
+        cfg.family,
+        match &cfg.rebalance {
+            bpipe::coordinator::RebalancePlan::Off => "off".to_string(),
+            bpipe::coordinator::RebalancePlan::Uniform { bound: None } =>
+                "uniform (derived bound)".to_string(),
+            bpipe::coordinator::RebalancePlan::Uniform { bound: Some(k) } =>
+                format!("uniform (bound {k})"),
+            bpipe::coordinator::RebalancePlan::PerStage { bounds } =>
+                format!("per-stage {bounds:?}"),
+            bpipe::coordinator::RebalancePlan::Capacity { .. } =>
+                "capacity-derived per-stage".to_string(),
+        }
+    );
+    let r = bpipe::coordinator::train::<B>(cfg)?;
+    println!(
+        "first loss {:.4} → final loss {:.4}",
+        r.losses.first().unwrap(),
+        r.final_loss()
+    );
+    println!("mean step time {:.3}s, tokens {}", r.mean_step_time(), r.tokens);
+    for st in &r.stage_stats {
+        println!(
+            "  stage {}: fwd {:.2}s bwd {:.2}s adam {:.2}s load-wait {:.2}s evictions {} stash-hw {}",
+            st.stage, st.fwd_s, st.bwd_s, st.adam_s, st.load_wait_s, st.evictions,
+            st.stash_high_water
+        );
+    }
+    Ok(())
+}
+
 /// Measure single-stage timings over the real PJRT runtime (Eq. 4's
 /// input) — only available with the `pjrt` build feature.
 #[cfg(feature = "pjrt")]
@@ -136,8 +193,9 @@ fn runtime_measurements(
     fy: StageMeasurement,
 ) -> anyhow::Result<(StageMeasurement, StageMeasurement)> {
     println!("measuring single-stage timings from {artifacts:?} …");
-    let tx = bpipe::coordinator::measure_stage(artifacts, fx.b, 3)?;
-    let ty = bpipe::coordinator::measure_stage(artifacts, fy.b, 3)?;
+    let manifest = bpipe::runtime::Manifest::load(artifacts)?;
+    let tx = bpipe::coordinator::measure_stage::<bpipe::runtime::Runtime>(&manifest, fx.b, 3)?;
+    let ty = bpipe::coordinator::measure_stage::<bpipe::runtime::Runtime>(&manifest, fy.b, 3)?;
     for t in [&tx, &ty] {
         println!(
             "  b={} : {:.1} ms/microbatch, {:.2e} FLOP/s",
@@ -355,14 +413,9 @@ fn main() -> anyhow::Result<()> {
             let args = Args::parse(rest, &["bpipe", "rebalance"])?;
             let p = args.get("p", 4u64)?;
             let m = args.get("m", 8u64)?;
+            let v = args.get("v", 2u64)?;
             let kind = args.opt("kind").unwrap_or("1f1b");
-            let sched = match kind {
-                "1f1b" => bpipe::schedule::one_f_one_b(p, m),
-                "gpipe" => bpipe::schedule::gpipe(p, m),
-                "interleaved" => bpipe::schedule::interleaved(p, m, 2),
-                "vshaped" => bpipe::schedule::v_shaped(p, m),
-                other => anyhow::bail!("unknown schedule kind {other:?}"),
-            };
+            let sched = parse_family(kind, v)?.build(p, m);
             let sched = if args.opt("bpipe").is_some() {
                 bpipe_mod::apply_bpipe(&sched, None)
             } else if args.opt("rebalance").is_some() {
@@ -377,47 +430,97 @@ fn main() -> anyhow::Result<()> {
             print!("{}", report::timeline::render_program(&sched));
         }
         "train" => {
-            #[cfg(feature = "pjrt")]
-            {
-                let args = Args::parse(rest, &["bpipe", "resume"])?;
-                let cfg = bpipe::coordinator::TrainConfig {
-                    artifacts_dir: PathBuf::from(args.opt("artifacts").unwrap_or("artifacts")),
-                    steps: args.get("steps", 20u64)?,
-                    microbatches: args.get("microbatches", 8u64)?,
-                    lr: args.get("lr", 1e-3f32)?,
-                    bpipe: args.opt("bpipe").is_some(),
-                    bound: None,
-                    seed: args.get("seed", 0u64)?,
-                    log_every: args.get("log-every", 5u64)?,
-                    checkpoint_dir: args.opt("checkpoint-dir").map(PathBuf::from),
-                    checkpoint_every: args.get("checkpoint-every", 0u64)?,
-                    resume: args.opt("resume").is_some(),
+            use bpipe::coordinator::RebalancePlan;
+            let args = Args::parse(rest, &["bpipe", "rebalance", "resume"])?;
+            let v = args.get("v", 2u64)?;
+            let family = parse_family(args.opt("schedule").unwrap_or("1f1b"), v)?;
+            let rebalance = if let Some(bs) = args.opt("stage-bounds") {
+                let bounds = bs
+                    .split(',')
+                    .map(|t| {
+                        t.trim()
+                            .parse::<u64>()
+                            .map_err(|e| anyhow::anyhow!("--stage-bounds {t:?}: {e}"))
+                    })
+                    .collect::<anyhow::Result<Vec<u64>>>()?;
+                RebalancePlan::PerStage { bounds }
+            } else if args.opt("bpipe").is_some() || args.opt("rebalance").is_some() {
+                let bound = match args.opt("bound") {
+                    Some(b) => Some(b.parse()?),
+                    None => None,
                 };
-                println!(
-                    "training: {} steps × {} microbatches, bpipe={}",
-                    cfg.steps, cfg.microbatches, cfg.bpipe
-                );
-                let r = bpipe::coordinator::train(&cfg)?;
-                println!(
-                    "first loss {:.4} → final loss {:.4}",
-                    r.losses.first().unwrap(),
-                    r.final_loss()
-                );
-                println!("mean step time {:.2}s, tokens {}", r.mean_step_time(), r.tokens);
-                for st in &r.stage_stats {
-                    println!(
-                        "  stage {}: fwd {:.1}s bwd {:.1}s adam {:.1}s load-wait {:.2}s evictions {} stash-hw {}",
-                        st.stage, st.fwd_s, st.bwd_s, st.adam_s, st.load_wait_s, st.evictions, st.stash_high_water
-                    );
+                RebalancePlan::Uniform { bound }
+            } else {
+                RebalancePlan::Off
+            };
+            let artifacts = PathBuf::from(args.opt("artifacts").unwrap_or("artifacts"));
+            let mut cfg = bpipe::coordinator::TrainConfig {
+                artifacts_dir: artifacts.clone(),
+                manifest: None,
+                family,
+                steps: args.get("steps", 20u64)?,
+                microbatches: args.get("microbatches", 8u64)?,
+                lr: args.get("lr", 1e-3f32)?,
+                rebalance,
+                seed: args.get("seed", 0u64)?,
+                log_every: args.get("log-every", 5u64)?,
+                checkpoint_dir: args.opt("checkpoint-dir").map(PathBuf::from),
+                checkpoint_every: args.get("checkpoint-every", 0u64)?,
+                resume: args.opt("resume").is_some(),
+            };
+            let default_backend = if cfg!(feature = "pjrt") { "pjrt" } else { "sim" };
+            match args.opt("backend").unwrap_or(default_backend) {
+                "sim" => {
+                    // load a lowered manifest when one exists, otherwise
+                    // run fully in memory on the synthetic model
+                    cfg.manifest = if artifacts.join("manifest.json").exists() {
+                        let m = bpipe::runtime::Manifest::load(&artifacts)?;
+                        if let Some(p) = args.opt("p") {
+                            // --p only shapes the synthetic manifest; a
+                            // lowered manifest fixes the depth itself
+                            let want: u64 = p.parse()?;
+                            anyhow::ensure!(
+                                want * family.chunks() == m.spec.stages,
+                                "--p {want} × {} chunks contradicts the manifest at \
+                                 {artifacts:?} ({} virtual stages); drop --p or point \
+                                 --artifacts elsewhere",
+                                family.chunks(),
+                                m.spec.stages
+                            );
+                        }
+                        Some(m)
+                    } else {
+                        let p = args.get("p", 4u64)?;
+                        println!(
+                            "no artifacts at {artifacts:?}; using the in-memory synthetic \
+                             model (p={p} × {} chunks)",
+                            family.chunks()
+                        );
+                        Some(bpipe::runtime::Manifest::synthetic(
+                            p * family.chunks(),
+                            16,
+                            8,
+                            2,
+                            64,
+                            &[1, 2],
+                        ))
+                    };
+                    run_train::<bpipe::runtime::SimBackend>(&cfg)?;
                 }
-            }
-            #[cfg(not(feature = "pjrt"))]
-            {
-                eprintln!(
-                    "train needs the real PJRT runtime: rebuild with --features pjrt \
-                     (and the xla crate available)"
-                );
-                std::process::exit(2);
+                "pjrt" => {
+                    #[cfg(feature = "pjrt")]
+                    run_train::<bpipe::runtime::Runtime>(&cfg)?;
+                    #[cfg(not(feature = "pjrt"))]
+                    {
+                        eprintln!(
+                            "--backend pjrt needs the real PJRT runtime: rebuild with \
+                             --features pjrt (and the xla crate available), or use \
+                             --backend sim"
+                        );
+                        std::process::exit(2);
+                    }
+                }
+                other => anyhow::bail!("unknown backend {other:?} (sim | pjrt)"),
             }
         }
         "help" | "--help" | "-h" => print!("{USAGE}"),

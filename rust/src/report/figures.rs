@@ -21,15 +21,21 @@
 //! (and the low-contrast palette slots always have a text fallback).
 //! Charts use a fixed categorical palette assigned **per schedule
 //! family** (color follows the entity across every figure), thin marks,
-//! rounded data-ends, and neutral ink for all text.
+//! rounded data-ends, and neutral ink for all text.  Neutrals (surface,
+//! ink, grid, the HBM-limit red, marker halos) are CSS classes with a
+//! `prefers-color-scheme: dark` variant in each figure's `<style>`
+//! block, so the same SVG reads correctly in light and dark viewers;
+//! series hues are scheme-stable.
 
 use crate::config::{paper_experiments, ExperimentConfig};
 use crate::estimator::{self, StageMeasurement};
 use crate::report::Table;
 use crate::sim::{self, CostModel, SweepOutcome};
 
-/// Categorical palette (reference data-viz palette, light mode, slots in
-/// documented order — validated as a set on the adjacent pairlist).
+/// Categorical palette (reference data-viz palette, slots in documented
+/// order — validated as a set on the adjacent pairlist; the hues hold
+/// ≥3:1 contrast against both surface colors, so series fills stay
+/// literal while the neutrals swap per scheme).
 const PALETTE: [&str; 5] = ["#2a78d6", "#eb6834", "#1baf7a", "#eda100", "#e87ba4"];
 /// Status red, reserved for the HBM-limit line (never a series color).
 const LIMIT_COLOR: &str = "#e34948";
@@ -37,7 +43,33 @@ const INK: &str = "#0b0b0b";
 const INK_MUTED: &str = "#52514e";
 const GRID: &str = "#e4e3df";
 const SURFACE: &str = "#fcfcfb";
+/// Dark-scheme counterparts, applied via `prefers-color-scheme: dark`
+/// (every neutral is expressed as a CSS class, so one `<style>` block
+/// per figure retints ink/grid/surface/limit without touching marks).
+const DARK_LIMIT_COLOR: &str = "#ff6e6d";
+const DARK_INK: &str = "#f2f1ed";
+const DARK_INK_MUTED: &str = "#b6b4ae";
+const DARK_GRID: &str = "#383632";
+const DARK_SURFACE: &str = "#161512";
 const FONT: &str = "font-family=\"system-ui,sans-serif\"";
+
+/// The per-figure stylesheet: light-scheme neutrals plus the dark-mode
+/// media query (pinned by `tests/report_snapshot.rs`).
+fn style_block() -> String {
+    format!(
+        "<style>\
+         .surface{{fill:{SURFACE}}}.ink{{fill:{INK}}}.muted{{fill:{INK_MUTED}}}\
+         .grid{{stroke:{GRID}}}.axis{{stroke:{INK_MUTED}}}\
+         .limit{{stroke:{LIMIT_COLOR}}}.limit-ink{{fill:{LIMIT_COLOR}}}\
+         .marker{{stroke:{SURFACE}}}\
+         @media (prefers-color-scheme: dark){{\
+         .surface{{fill:{DARK_SURFACE}}}.ink{{fill:{DARK_INK}}}.muted{{fill:{DARK_INK_MUTED}}}\
+         .grid{{stroke:{DARK_GRID}}}.axis{{stroke:{DARK_INK_MUTED}}}\
+         .limit{{stroke:{DARK_LIMIT_COLOR}}}.limit-ink{{fill:{DARK_LIMIT_COLOR}}}\
+         .marker{{stroke:{DARK_SURFACE}}}}}\
+         </style>"
+    )
+}
 
 /// Palette slot of a scenario: color follows the schedule *family*, so
 /// "1F1B", "1F1B+rebalance" and "1F1B+stage-bounds" share a hue across
@@ -123,7 +155,7 @@ fn legend(series: &[Series], x: f64, y: f64) -> String {
             PALETTE[s.slot % PALETTE.len()]
         ));
         out.push_str(&format!(
-            "<text x=\"{:.0}\" y=\"{y:.0}\" {FONT} font-size=\"11\" fill=\"{INK_MUTED}\">{}</text>",
+            "<text x=\"{:.0}\" y=\"{y:.0}\" {FONT} font-size=\"11\" class=\"muted\">{}</text>",
             cx + 14.0,
             esc(&s.name)
         ));
@@ -134,8 +166,9 @@ fn legend(series: &[Series], x: f64, y: f64) -> String {
 
 fn frame(w: u32, h: u32, title: &str, body: &str) -> String {
     format!(
-        "<svg xmlns=\"http://www.w3.org/2000/svg\" width=\"{w}\" height=\"{h}\" viewBox=\"0 0 {w} {h}\" role=\"img\" aria-label=\"{}\">\n<rect width=\"{w}\" height=\"{h}\" fill=\"{SURFACE}\"/>\n<text x=\"16\" y=\"22\" {FONT} font-size=\"13\" font-weight=\"600\" fill=\"{INK}\">{}</text>\n{body}</svg>",
+        "<svg xmlns=\"http://www.w3.org/2000/svg\" width=\"{w}\" height=\"{h}\" viewBox=\"0 0 {w} {h}\" role=\"img\" aria-label=\"{}\">\n{}\n<rect width=\"{w}\" height=\"{h}\" class=\"surface\"/>\n<text x=\"16\" y=\"22\" {FONT} font-size=\"13\" font-weight=\"600\" class=\"ink\">{}</text>\n{body}</svg>",
         esc(title),
+        style_block(),
         esc(title)
     )
 }
@@ -167,18 +200,18 @@ pub fn svg_grouped_bars(
     for t in &tks {
         let y = ys(*t);
         body.push_str(&format!(
-            "<line x1=\"{ml}\" y1=\"{y:.1}\" x2=\"{:.1}\" y2=\"{y:.1}\" stroke=\"{GRID}\" stroke-width=\"1\"/>",
+            "<line x1=\"{ml}\" y1=\"{y:.1}\" x2=\"{:.1}\" y2=\"{y:.1}\" class=\"grid\" stroke-width=\"1\"/>",
             ml + pw
         ));
         body.push_str(&format!(
-            "<text x=\"{:.1}\" y=\"{:.1}\" {FONT} font-size=\"10\" text-anchor=\"end\" fill=\"{INK_MUTED}\">{}</text>",
+            "<text x=\"{:.1}\" y=\"{:.1}\" {FONT} font-size=\"10\" text-anchor=\"end\" class=\"muted\">{}</text>",
             ml - 6.0,
             y + 3.0,
             fmt_tick(*t)
         ));
     }
     body.push_str(&format!(
-        "<text x=\"12\" y=\"{:.0}\" {FONT} font-size=\"10\" fill=\"{INK_MUTED}\" transform=\"rotate(-90 12 {:.0})\" text-anchor=\"middle\">{}</text>",
+        "<text x=\"12\" y=\"{:.0}\" {FONT} font-size=\"10\" class=\"muted\" transform=\"rotate(-90 12 {:.0})\" text-anchor=\"middle\">{}</text>",
         mt + ph / 2.0,
         mt + ph / 2.0,
         esc(y_label)
@@ -202,7 +235,7 @@ pub fn svg_grouped_bars(
             }
         }
         body.push_str(&format!(
-            "<text x=\"{:.1}\" y=\"{:.1}\" {FONT} font-size=\"10\" text-anchor=\"middle\" fill=\"{INK_MUTED}\">{}</text>",
+            "<text x=\"{:.1}\" y=\"{:.1}\" {FONT} font-size=\"10\" text-anchor=\"middle\" class=\"muted\">{}</text>",
             ml + (xi as f64 + 0.5) * group_w,
             mt + ph + 16.0,
             esc(xl)
@@ -210,7 +243,7 @@ pub fn svg_grouped_bars(
     }
     // baseline
     body.push_str(&format!(
-        "<line x1=\"{ml}\" y1=\"{:.1}\" x2=\"{:.1}\" y2=\"{:.1}\" stroke=\"{INK_MUTED}\" stroke-width=\"1\"/>",
+        "<line x1=\"{ml}\" y1=\"{:.1}\" x2=\"{:.1}\" y2=\"{:.1}\" class=\"axis\" stroke-width=\"1\"/>",
         mt + ph,
         ml + pw,
         mt + ph
@@ -218,11 +251,11 @@ pub fn svg_grouped_bars(
     if let Some((v, label)) = limit {
         let y = ys(v);
         body.push_str(&format!(
-            "<line x1=\"{ml}\" y1=\"{y:.1}\" x2=\"{:.1}\" y2=\"{y:.1}\" stroke=\"{LIMIT_COLOR}\" stroke-width=\"1.5\" stroke-dasharray=\"6 3\"/>",
+            "<line x1=\"{ml}\" y1=\"{y:.1}\" x2=\"{:.1}\" y2=\"{y:.1}\" class=\"limit\" stroke-width=\"1.5\" stroke-dasharray=\"6 3\"/>",
             ml + pw
         ));
         body.push_str(&format!(
-            "<text x=\"{:.1}\" y=\"{:.1}\" {FONT} font-size=\"10\" text-anchor=\"end\" fill=\"{LIMIT_COLOR}\">{}</text>",
+            "<text x=\"{:.1}\" y=\"{:.1}\" {FONT} font-size=\"10\" text-anchor=\"end\" class=\"limit-ink\">{}</text>",
             ml + pw - 4.0,
             y - 4.0,
             esc(label)
@@ -261,11 +294,11 @@ pub fn svg_multi_line(
     for t in &tks {
         let y = yp(*t);
         body.push_str(&format!(
-            "<line x1=\"{ml}\" y1=\"{y:.1}\" x2=\"{:.1}\" y2=\"{y:.1}\" stroke=\"{GRID}\" stroke-width=\"1\"/>",
+            "<line x1=\"{ml}\" y1=\"{y:.1}\" x2=\"{:.1}\" y2=\"{y:.1}\" class=\"grid\" stroke-width=\"1\"/>",
             ml + pw
         ));
         body.push_str(&format!(
-            "<text x=\"{:.1}\" y=\"{:.1}\" {FONT} font-size=\"10\" text-anchor=\"end\" fill=\"{INK_MUTED}\">{}</text>",
+            "<text x=\"{:.1}\" y=\"{:.1}\" {FONT} font-size=\"10\" text-anchor=\"end\" class=\"muted\">{}</text>",
             ml - 6.0,
             y + 3.0,
             fmt_tick(*t)
@@ -280,26 +313,26 @@ pub fn svg_multi_line(
     };
     for x in &x_ticks {
         body.push_str(&format!(
-            "<text x=\"{:.1}\" y=\"{:.1}\" {FONT} font-size=\"10\" text-anchor=\"middle\" fill=\"{INK_MUTED}\">{}</text>",
+            "<text x=\"{:.1}\" y=\"{:.1}\" {FONT} font-size=\"10\" text-anchor=\"middle\" class=\"muted\">{}</text>",
             xp(*x),
             mt + ph + 16.0,
             fmt_tick(*x)
         ));
     }
     body.push_str(&format!(
-        "<text x=\"{:.1}\" y=\"{:.1}\" {FONT} font-size=\"10\" text-anchor=\"middle\" fill=\"{INK_MUTED}\">{}</text>",
+        "<text x=\"{:.1}\" y=\"{:.1}\" {FONT} font-size=\"10\" text-anchor=\"middle\" class=\"muted\">{}</text>",
         ml + pw / 2.0,
         mt + ph + 32.0,
         esc(x_label)
     ));
     body.push_str(&format!(
-        "<text x=\"12\" y=\"{:.0}\" {FONT} font-size=\"10\" fill=\"{INK_MUTED}\" transform=\"rotate(-90 12 {:.0})\" text-anchor=\"middle\">{}</text>",
+        "<text x=\"12\" y=\"{:.0}\" {FONT} font-size=\"10\" class=\"muted\" transform=\"rotate(-90 12 {:.0})\" text-anchor=\"middle\">{}</text>",
         mt + ph / 2.0,
         mt + ph / 2.0,
         esc(y_label)
     ));
     body.push_str(&format!(
-        "<line x1=\"{ml}\" y1=\"{:.1}\" x2=\"{:.1}\" y2=\"{:.1}\" stroke=\"{INK_MUTED}\" stroke-width=\"1\"/>",
+        "<line x1=\"{ml}\" y1=\"{:.1}\" x2=\"{:.1}\" y2=\"{:.1}\" class=\"axis\" stroke-width=\"1\"/>",
         mt + ph,
         ml + pw,
         mt + ph
@@ -327,7 +360,7 @@ pub fn svg_multi_line(
         for (i, v) in s.values.iter().enumerate() {
             if let Some(v) = v {
                 body.push_str(&format!(
-                    "<circle cx=\"{:.1}\" cy=\"{:.1}\" r=\"4\" fill=\"{color}\" stroke=\"{SURFACE}\" stroke-width=\"2\"/>",
+                    "<circle cx=\"{:.1}\" cy=\"{:.1}\" r=\"4\" fill=\"{color}\" class=\"marker\" stroke-width=\"2\"/>",
                     xp(xs[i]),
                     yp(*v)
                 ));
@@ -359,17 +392,17 @@ pub fn svg_ranked_hbars(
     for t in &tks {
         let x = xp(*t);
         body.push_str(&format!(
-            "<line x1=\"{x:.1}\" y1=\"{mt}\" x2=\"{x:.1}\" y2=\"{:.1}\" stroke=\"{GRID}\" stroke-width=\"1\"/>",
+            "<line x1=\"{x:.1}\" y1=\"{mt}\" x2=\"{x:.1}\" y2=\"{:.1}\" class=\"grid\" stroke-width=\"1\"/>",
             h as f64 - mb
         ));
         body.push_str(&format!(
-            "<text x=\"{x:.1}\" y=\"{:.1}\" {FONT} font-size=\"10\" text-anchor=\"middle\" fill=\"{INK_MUTED}\">{}</text>",
+            "<text x=\"{x:.1}\" y=\"{:.1}\" {FONT} font-size=\"10\" text-anchor=\"middle\" class=\"muted\">{}</text>",
             h as f64 - mb + 14.0,
             fmt_tick(*t)
         ));
     }
     body.push_str(&format!(
-        "<text x=\"{:.1}\" y=\"{:.1}\" {FONT} font-size=\"10\" text-anchor=\"middle\" fill=\"{INK_MUTED}\">{}</text>",
+        "<text x=\"{:.1}\" y=\"{:.1}\" {FONT} font-size=\"10\" text-anchor=\"middle\" class=\"muted\">{}</text>",
         ml + pw / 2.0,
         h as f64 - 8.0,
         esc(x_label)
@@ -383,13 +416,13 @@ pub fn svg_ranked_hbars(
             PALETTE[slot % PALETTE.len()]
         ));
         body.push_str(&format!(
-            "<text x=\"{:.1}\" y=\"{:.1}\" {FONT} font-size=\"11\" text-anchor=\"end\" fill=\"{INK}\">{}</text>",
+            "<text x=\"{:.1}\" y=\"{:.1}\" {FONT} font-size=\"11\" text-anchor=\"end\" class=\"ink\">{}</text>",
             ml - 8.0,
             y + row_h / 2.0 + 1.0,
             esc(label)
         ));
         body.push_str(&format!(
-            "<text x=\"{:.1}\" y=\"{:.1}\" {FONT} font-size=\"10\" fill=\"{INK_MUTED}\">{:.1}</text>",
+            "<text x=\"{:.1}\" y=\"{:.1}\" {FONT} font-size=\"10\" class=\"muted\">{:.1}</text>",
             ml + bw + 5.0,
             y + row_h / 2.0 + 1.0,
             v
@@ -696,6 +729,41 @@ mod tests {
         assert_eq!(family_slot("1F1B"), family_slot("1F1B+stage-bounds"));
         assert_ne!(family_slot("1F1B"), family_slot("GPipe"));
         assert_eq!(family_slot("W-shaped+rebalance"), 4);
+    }
+
+    #[test]
+    fn every_chart_is_scheme_adaptive() {
+        // each chart kind carries exactly one stylesheet with the
+        // dark-mode media query, and no neutral is left as a literal
+        // fill/stroke outside it (series hues and limit/marker classes
+        // excepted by construction)
+        let bars = svg_grouped_bars(
+            "t",
+            "GiB",
+            &["s0".into()],
+            &[Series { name: "a".into(), slot: 0, values: vec![Some(1.0)] }],
+            Some((3.0, "limit")),
+        );
+        let line = svg_multi_line(
+            "t",
+            "k",
+            "MFU",
+            &[1.0, 2.0],
+            &[Series { name: "a".into(), slot: 0, values: vec![Some(1.0), Some(2.0)] }],
+        );
+        let hbars = svg_ranked_hbars("t", "MFU", &[("row".into(), 0, 1.0)]);
+        for svg in [&bars, &line, &hbars] {
+            assert_eq!(svg.matches("<style>").count(), 1);
+            assert_eq!(svg.matches("@media (prefers-color-scheme: dark)").count(), 1);
+            assert!(svg.contains("class=\"surface\"") && svg.contains("class=\"muted\""));
+            // the light neutrals appear only inside the stylesheet
+            // (ink/grid once; muted doubles as axis, surface as marker)
+            for (hex, uses) in [(INK, 1), (INK_MUTED, 2), (GRID, 1), (SURFACE, 2)] {
+                assert_eq!(svg.matches(hex).count(), uses, "{hex} must live in <style> only");
+            }
+        }
+        assert!(bars.contains("class=\"limit\"") && bars.contains("class=\"limit-ink\""));
+        assert!(line.contains("class=\"marker\""));
     }
 
     #[test]

@@ -156,6 +156,93 @@ impl Manifest {
         Ok(Manifest { spec, params, bs_sweep, artifacts, dir: PathBuf::new() })
     }
 
+    /// A fully in-memory manifest describing a tiny synthetic stage
+    /// model — the [`crate::runtime::SimBackend`]'s default input, so
+    /// the REAL pipeline (coordinator + workers) runs in tier-1 with no
+    /// lowered artifacts on disk.  `stages` is the number of **virtual**
+    /// stages (`p × chunks` for virtual-pipeline schedules); the
+    /// artifact set mirrors what `make artifacts` lowers: per-kind
+    /// `init`/`fwd`/`bwd`, `adam_*`, and the `mid_{fwd,bwd}_b{b}`
+    /// single-stage sweep used by the §4 estimator.
+    pub fn synthetic(stages: u64, h: u64, s: u64, b: u64, vocab: u64, bs_sweep: &[u64]) -> Self {
+        assert!(stages >= 2, "need at least 2 virtual stages");
+        let spec = SpecMeta {
+            family: "sim-affine".into(),
+            h,
+            a: 1,
+            s,
+            v: vocab,
+            layers_per_stage: 1,
+            stages,
+            b,
+            attention: "none".into(),
+        };
+        let mut params = HashMap::new();
+        params.insert("first".to_string(), vocab * h);
+        params.insert("mid".to_string(), 8 * h);
+        params.insert("last".to_string(), vocab * h + 2);
+        let f32t = |shape: Vec<u64>| TensorMeta { shape, dtype: "f32".into() };
+        let i32t = |shape: Vec<u64>| TensorMeta { shape, dtype: "i32".into() };
+        let act = |b: u64| f32t(vec![b, s, h]);
+        let tok = |b: u64| i32t(vec![b, s]);
+        let mut artifacts = HashMap::new();
+        let mut add = |name: String, inputs: Vec<TensorMeta>, outputs: Vec<TensorMeta>| {
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta { file: format!("<sim:{name}>"), inputs, outputs },
+            );
+        };
+        for kind in ["first", "mid", "last"] {
+            let n = params[kind];
+            let pv = f32t(vec![n]);
+            add(format!("{kind}_init"), vec![i32t(vec![])], vec![pv.clone()]);
+            match kind {
+                "first" => {
+                    add("first_fwd".into(), vec![pv.clone(), tok(b)], vec![act(b)]);
+                    add("first_bwd".into(), vec![pv.clone(), tok(b), act(b)], vec![pv.clone()]);
+                }
+                "mid" => {
+                    add("mid_fwd".into(), vec![pv.clone(), act(b)], vec![act(b)]);
+                    add(
+                        "mid_bwd".into(),
+                        vec![pv.clone(), act(b), act(b)],
+                        vec![act(b), pv.clone()],
+                    );
+                }
+                _ => {
+                    // last: loss + grads fused into one bwd artifact
+                    add(
+                        "last_bwd".into(),
+                        vec![pv.clone(), act(b), tok(b)],
+                        vec![act(b), pv.clone(), f32t(vec![])],
+                    );
+                }
+            }
+            add(
+                format!("adam_{kind}"),
+                vec![pv.clone(), pv.clone(), pv.clone(), pv.clone(), i32t(vec![]), f32t(vec![])],
+                vec![pv.clone(), pv.clone(), pv.clone()],
+            );
+        }
+        let n_mid = params["mid"];
+        for &bs in bs_sweep {
+            let pv = f32t(vec![n_mid]);
+            add(format!("mid_fwd_b{bs}"), vec![pv.clone(), act(bs)], vec![act(bs)]);
+            add(
+                format!("mid_bwd_b{bs}"),
+                vec![pv.clone(), act(bs), act(bs)],
+                vec![act(bs), pv.clone()],
+            );
+        }
+        Manifest {
+            spec,
+            params,
+            bs_sweep: bs_sweep.to_vec(),
+            artifacts,
+            dir: PathBuf::new(),
+        }
+    }
+
     /// Absolute path of an artifact's HLO file.
     pub fn path_of(&self, name: &str) -> anyhow::Result<PathBuf> {
         let meta = self
@@ -232,6 +319,27 @@ mod tests {
         let m = Manifest::parse(SAMPLE).unwrap();
         assert!(m.meta("nope").is_err());
         assert!(m.param_count("nope").is_err());
+    }
+
+    #[test]
+    fn synthetic_manifest_is_complete() {
+        let m = Manifest::synthetic(8, 16, 8, 2, 64, &[1, 2]);
+        assert_eq!(m.spec.stages, 8);
+        assert_eq!(m.stage_kind(0), "first");
+        assert_eq!(m.stage_kind(7), "last");
+        for kind in ["first", "mid", "last"] {
+            assert!(m.param_count(kind).unwrap() >= 2);
+            assert!(m.meta(&format!("{kind}_init")).is_ok());
+            assert!(m.meta(&format!("adam_{kind}")).is_ok());
+        }
+        assert!(m.meta("first_fwd").is_ok() && m.meta("mid_fwd").is_ok());
+        assert!(m.meta("last_fwd").is_err(), "last stage fuses loss+grads into bwd");
+        for b in [1u64, 2] {
+            assert!(m.meta(&format!("mid_fwd_b{b}")).is_ok());
+            assert!(m.meta(&format!("mid_bwd_b{b}")).is_ok());
+        }
+        assert_eq!(m.meta("mid_fwd").unwrap().inputs[1].shape, vec![2, 8, 16]);
+        assert_eq!(m.bs_sweep, vec![1, 2]);
     }
 
     #[test]

@@ -1,0 +1,167 @@
+//! The execution-backend abstraction: client / compile / upload /
+//! execute over device buffers.
+//!
+//! The coordinator (leader + stage workers) is generic over a
+//! [`Backend`], so the REAL pipeline-parallel training loop — channels,
+//! activation stashes, BPipe evict/load, Adam, checkpointing — is
+//! exercised identically whether the stage functions run as
+//!
+//! * AOT-compiled XLA artifacts on the PJRT CPU client
+//!   (`runtime::engine::Runtime`, behind the `pjrt` feature), or
+//! * deterministic seeded f32 affine ops on host buffers
+//!   ([`crate::runtime::SimBackend`], compiled in tier-1 by default).
+//!
+//! The boundary is deliberately small: a backend owns an opaque compiled
+//! [`Backend::Exec`] per artifact and an opaque device-resident
+//! [`Backend::Buffer`]; everything that crosses threads is a
+//! [`HostTensor`] (plain host data + logical shape), which is what the
+//! activation stashes, BPipe transfers and checkpoints move around.
+
+use super::artifact::Manifest;
+
+/// A tensor crossing thread boundaries: host data + logical shape.
+/// (Backend handles like `xla::Literal` wrap raw pointers and are not
+/// `Send`; the coordinator moves host vectors and re-uploads at the use
+/// site.)  An empty `shape` denotes a scalar.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { data: Vec<f32>, shape: Vec<i64> },
+    I32 { data: Vec<i32>, shape: Vec<i64> },
+}
+
+impl HostTensor {
+    /// A scalar f32 (shape `[]`).
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::F32 { data: vec![v], shape: Vec::new() }
+    }
+
+    /// A scalar i32 (shape `[]`).
+    pub fn scalar_i32(v: i32) -> Self {
+        HostTensor::I32 { data: vec![v], shape: Vec::new() }
+    }
+
+    /// A flat f32 vector (shape `[n]`).
+    pub fn vec_f32(data: Vec<f32>) -> Self {
+        let n = data.len() as i64;
+        HostTensor::F32 { data, shape: vec![n] }
+    }
+
+    pub fn shape(&self) -> &[i64] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Payload bytes (both dtypes are 4-byte).
+    pub fn bytes(&self) -> usize {
+        self.len() * 4
+    }
+
+    /// The f32 payload, or an error for an i32 tensor.
+    pub fn f32s(&self) -> anyhow::Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            HostTensor::I32 { .. } => anyhow::bail!("expected an f32 tensor, got i32"),
+        }
+    }
+
+    /// The i32 payload, or an error for an f32 tensor.
+    pub fn i32s(&self) -> anyhow::Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            HostTensor::F32 { .. } => anyhow::bail!("expected an i32 tensor, got f32"),
+        }
+    }
+
+    /// Consume into the f32 payload.
+    pub fn into_f32s(self) -> anyhow::Result<Vec<f32>> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            HostTensor::I32 { .. } => anyhow::bail!("expected an f32 tensor, got i32"),
+        }
+    }
+}
+
+/// One execution backend: create a per-worker client, compile
+/// manifest-described artifacts, upload host tensors to device buffers,
+/// and execute.  Each stage worker creates its OWN backend instance
+/// (`xla` handles are not `Send`, and a client per worker is the honest
+/// analogue of one process per GPU).
+pub trait Backend: Sized + 'static {
+    /// A compiled stage function.
+    type Exec;
+    /// A device-resident buffer (parameters stay uploaded across a step).
+    type Buffer;
+
+    /// Create a client for one worker.
+    fn create(manifest: &Manifest) -> anyhow::Result<Self>;
+
+    /// Human-readable platform name ("cpu", "sim", …).
+    fn platform(&self) -> String;
+
+    /// Compile the named artifact from the manifest.
+    fn compile(&self, manifest: &Manifest, name: &str) -> anyhow::Result<Self::Exec>;
+
+    /// Upload host data to a device-resident buffer.
+    fn upload(&self, t: &HostTensor) -> anyhow::Result<Self::Buffer>;
+
+    /// Execute with device-resident inputs; returns the decomposed
+    /// output tuple as host tensors.
+    fn execute(&self, exe: &Self::Exec, inputs: &[&Self::Buffer]) -> anyhow::Result<Vec<HostTensor>>;
+
+    /// Convenience: upload host inputs, execute, return host outputs.
+    fn execute_host(
+        &self,
+        exe: &Self::Exec,
+        inputs: &[&HostTensor],
+    ) -> anyhow::Result<Vec<HostTensor>> {
+        let bufs: Vec<Self::Buffer> =
+            inputs.iter().map(|t| self.upload(t)).collect::<anyhow::Result<_>>()?;
+        let refs: Vec<&Self::Buffer> = bufs.iter().collect();
+        self.execute(exe, &refs)
+    }
+
+    /// [`Self::execute`] for single-output artifacts (`*_fwd`).
+    fn execute1(&self, exe: &Self::Exec, inputs: &[&Self::Buffer]) -> anyhow::Result<HostTensor> {
+        let mut out = self.execute(exe, inputs)?;
+        anyhow::ensure!(out.len() == 1, "expected 1 output, got {}", out.len());
+        Ok(out.pop().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_accessors() {
+        let f = HostTensor::F32 { data: vec![1.0, 2.0], shape: vec![2] };
+        assert_eq!(f.len(), 2);
+        assert_eq!(f.bytes(), 8);
+        assert_eq!(f.f32s().unwrap(), &[1.0, 2.0]);
+        assert!(f.i32s().is_err());
+        let i = HostTensor::I32 { data: vec![3, 4, 5], shape: vec![3] };
+        assert_eq!(i.i32s().unwrap(), &[3, 4, 5]);
+        assert!(i.f32s().is_err());
+        assert_eq!(i.shape(), &[3]);
+    }
+
+    #[test]
+    fn scalars_have_empty_shape() {
+        assert_eq!(HostTensor::scalar_f32(0.5).shape(), &[] as &[i64]);
+        assert_eq!(HostTensor::scalar_i32(7).i32s().unwrap(), &[7]);
+        assert_eq!(HostTensor::vec_f32(vec![0.0; 4]).shape(), &[4]);
+    }
+}

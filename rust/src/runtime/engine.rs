@@ -157,6 +157,65 @@ impl Executable {
     }
 }
 
+/// Decompose a literal into a [`HostTensor`] (shape + host copy).
+fn literal_to_host(lit: &xla::Literal) -> anyhow::Result<crate::runtime::HostTensor> {
+    use crate::runtime::HostTensor;
+    let shape = lit.array_shape()?;
+    let dims: Vec<i64> = shape.dims().iter().map(|&d| d as i64).collect();
+    match lit.element_type()? {
+        xla::ElementType::F32 => {
+            Ok(HostTensor::F32 { data: lit.to_vec::<f32>()?, shape: dims })
+        }
+        xla::ElementType::S32 => {
+            Ok(HostTensor::I32 { data: lit.to_vec::<i32>()?, shape: dims })
+        }
+        other => anyhow::bail!("unsupported output dtype {other:?}"),
+    }
+}
+
+/// The PJRT path as a [`crate::runtime::Backend`]: compile loads the
+/// artifact's HLO file from the manifest directory; upload goes through
+/// the leak-free `buffer_from_host_buffer` path; execute decomposes the
+/// output tuple into host tensors.
+impl crate::runtime::Backend for Runtime {
+    type Exec = Executable;
+    type Buffer = xla::PjRtBuffer;
+
+    fn create(_manifest: &crate::runtime::Manifest) -> anyhow::Result<Self> {
+        Runtime::cpu()
+    }
+
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(
+        &self,
+        manifest: &crate::runtime::Manifest,
+        name: &str,
+    ) -> anyhow::Result<Executable> {
+        self.load(&manifest.path_of(name)?)
+    }
+
+    fn upload(&self, t: &crate::runtime::HostTensor) -> anyhow::Result<xla::PjRtBuffer> {
+        use crate::runtime::HostTensor;
+        let dims: Vec<usize> = t.shape().iter().map(|&d| d as usize).collect();
+        match t {
+            HostTensor::F32 { data, .. } => self.upload_f32(data, &dims),
+            HostTensor::I32 { data, .. } => self.upload_i32(data, &dims),
+        }
+    }
+
+    fn execute(
+        &self,
+        exe: &Executable,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> anyhow::Result<Vec<crate::runtime::HostTensor>> {
+        let outs = exe.run_buffers(inputs)?;
+        outs.iter().map(literal_to_host).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,33 +1,54 @@
-//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//! The execution runtime: manifest-described stage artifacts behind the
+//! [`Backend`] abstraction (client / compile / upload / execute over
+//! device buffers).
 //!
-//! This is the only module that touches the `xla` crate.  The python
-//! side (`python/compile/aot.py`) lowers every stage function ONCE to
-//! HLO text (the interchange format xla_extension 0.5.1 can parse — see
-//! DESIGN.md); everything here is pure rust and runs on the request
-//! path with no Python anywhere.
+//! Two backends implement it:
+//!
+//! * [`SimBackend`] — deterministic in-tree execution of the artifacts
+//!   as seeded f32 affine ops on host buffers.  No dependencies,
+//!   compiled by default: this is what puts the REAL pipeline
+//!   (`coordinator`) into tier-1.
+//! * `engine::Runtime` (feature `pjrt`) — the PJRT CPU client
+//!   executing AOT-compiled HLO-text artifacts.  The python side
+//!   (`python/compile/aot.py`) lowers every stage function ONCE to HLO
+//!   text; this is the only module that touches the `xla` crate.
+//!
+//! [`artifact::Manifest`] is the shared contract: the python→rust
+//! manifest.json describing every artifact's shapes and the per-kind
+//! parameter counts — loadable from disk, or built fully in memory by
+//! [`Manifest::synthetic`] for artifact-free sim runs.
 
 pub mod artifact;
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod engine;
+pub mod sim_backend;
 
 pub use artifact::{ArtifactMeta, Manifest, TensorMeta};
+pub use backend::{Backend, HostTensor};
+#[cfg(feature = "pjrt")]
 pub use engine::{Executable, Runtime};
+pub use sim_backend::SimBackend;
 
 /// Convert a flat f32 slice into a Literal of the given shape.
+#[cfg(feature = "pjrt")]
 pub fn literal_f32(data: &[f32], shape: &[i64]) -> anyhow::Result<xla::Literal> {
     let lit = xla::Literal::vec1(data);
-    if shape.len() == 1 {
+    if shape.len() <= 1 {
         return Ok(lit);
     }
     Ok(lit.reshape(shape)?)
 }
 
 /// Convert a token slice into an i32 Literal of shape `[b, s]`.
+#[cfg(feature = "pjrt")]
 pub fn literal_tokens(tokens: &[i32], b: i64, s: i64) -> anyhow::Result<xla::Literal> {
     anyhow::ensure!(tokens.len() as i64 == b * s, "token count mismatch");
     Ok(xla::Literal::vec1(tokens).reshape(&[b, s])?)
 }
 
 /// Extract an f32 vector from a Literal.
+#[cfg(feature = "pjrt")]
 pub fn to_f32_vec(lit: &xla::Literal) -> anyhow::Result<Vec<f32>> {
     Ok(lit.to_vec::<f32>()?)
 }

@@ -1,0 +1,462 @@
+//! `SimBackend` — the deterministic in-tree execution backend.
+//!
+//! Executes manifest-described stage artifacts as **seeded f32 affine
+//! ops on host buffers**: real forward/backward/loss plumbing with
+//! reproducible numerics and no external dependency, so the whole
+//! coordinator (channels, stashes, BPipe evict/load, Adam,
+//! checkpointing) runs under `cargo test -q` by default.
+//!
+//! ## Stage semantics
+//!
+//! Every artifact name the python side would lower has a closed-form
+//! interpretation over the manifest's shapes (`b`, `s`, `h`, `v`) and
+//! per-kind parameter counts.  Only `params[0]` and `params[1]` carry
+//! gradients (an affine model); the rest are inert ballast so parameter
+//! vectors, optimizer state and checkpoints have realistic sizes:
+//!
+//! * `{kind}_init(seed) → params` — SplitMix64-seeded values in ±0.1;
+//! * `first_fwd(w, tokens) → y` — `y[r,t,j] = w₀·emb(tok,j) + w₁`, with
+//!   `emb` a fixed hash-based pseudo-embedding in [−1, 1);
+//! * `mid_fwd(w, x) → y` — `y = (1 + w₀)·x + w₁`;
+//! * `mid_bwd(w, x, dy) → (dx, dw)` — the exact reverse-mode adjoints;
+//! * `last_bwd(w, x, targets) → (dx, dw, loss)` — per-position affine
+//!   head `pred = w₀·mean_j(x) + w₁` against the normalized target
+//!   token, mean-squared-error loss, exact gradients;
+//! * `adam_{kind}(w, g, m, v, step, lr) → (w', m', v')` — standard
+//!   bias-corrected Adam, f32 throughout.
+//!
+//! All reductions accumulate sequentially in index order, so results
+//! are **bit-reproducible** — and because the ops are pure functions of
+//! their inputs, a BPipe-rebalanced run (whose Evict/Load just move
+//! stashes between stores) computes bit-identical losses to its
+//! baseline, the paper's central claim, now asserted in tier-1
+//! (`rust/tests/integration_runtime.rs`).
+
+use super::artifact::Manifest;
+use super::backend::{Backend, HostTensor};
+use crate::util::SplitMix64;
+
+/// Adam hyperparameters (the python side's defaults).
+const BETA1: f32 = 0.9;
+const BETA2: f32 = 0.999;
+const EPS: f32 = 1e-8;
+
+/// SplitMix64 finalizer over a raw index — the pseudo-embedding hash.
+fn mix(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic value in [−1, 1) from the hash's top 24 bits (exactly
+/// representable in f32).
+fn unit(x: u64) -> f32 {
+    (mix(x) >> 40) as f32 / (1u64 << 23) as f32 - 1.0
+}
+
+/// The fixed pseudo-embedding of `(token, feature j)`.
+fn emb(token: i32, j: u64) -> f32 {
+    unit((token as u32 as u64).wrapping_mul(0x0100_0003).wrapping_add(j))
+}
+
+/// What a compiled sim artifact computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SimOp {
+    Init,
+    FwdFirst,
+    FwdMid,
+    BwdFirst,
+    BwdMid,
+    BwdLast,
+    Adam,
+}
+
+/// A "compiled" sim artifact: the op plus the parameter-vector length
+/// of its stage kind (used to size/validate parameter inputs).
+pub struct SimExec {
+    op: SimOp,
+    n_params: usize,
+    name: String,
+}
+
+/// The in-tree deterministic backend.  Device buffers are host tensors;
+/// `upload` is a clone.
+pub struct SimBackend {
+    h: usize,
+    vocab: u64,
+}
+
+impl SimBackend {
+    fn check_params(&self, exe: &SimExec, t: &HostTensor) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            t.len() == exe.n_params,
+            "{}: params length {} != manifest's {}",
+            exe.name,
+            t.len(),
+            exe.n_params
+        );
+        Ok(())
+    }
+}
+
+impl Backend for SimBackend {
+    type Exec = SimExec;
+    type Buffer = HostTensor;
+
+    fn create(manifest: &Manifest) -> anyhow::Result<Self> {
+        anyhow::ensure!(manifest.spec.h >= 1, "sim backend needs h >= 1");
+        anyhow::ensure!(manifest.spec.v >= 1, "sim backend needs v >= 1");
+        Ok(SimBackend { h: manifest.spec.h as usize, vocab: manifest.spec.v })
+    }
+
+    fn platform(&self) -> String {
+        "sim".into()
+    }
+
+    fn compile(&self, manifest: &Manifest, name: &str) -> anyhow::Result<SimExec> {
+        // the artifact must be manifest-described, like a real lowered file
+        manifest.meta(name)?;
+        let (op, kind) = if let Some(kind) = name.strip_prefix("adam_") {
+            (SimOp::Adam, kind)
+        } else {
+            let (kind, rest) = name
+                .split_once('_')
+                .ok_or_else(|| anyhow::anyhow!("unparseable artifact name {name:?}"))?;
+            // strip the single-stage-sweep suffix: "fwd_b4" → "fwd"
+            let base = rest.split('_').next().unwrap_or(rest);
+            let op = match (kind, base) {
+                (_, "init") => SimOp::Init,
+                ("first", "fwd") => SimOp::FwdFirst,
+                ("mid", "fwd") => SimOp::FwdMid,
+                ("first", "bwd") => SimOp::BwdFirst,
+                ("mid", "bwd") => SimOp::BwdMid,
+                ("last", "bwd") => SimOp::BwdLast,
+                _ => anyhow::bail!("artifact {name:?} has no sim semantics"),
+            };
+            (op, kind)
+        };
+        Ok(SimExec { op, n_params: manifest.param_count(kind)? as usize, name: name.to_string() })
+    }
+
+    fn upload(&self, t: &HostTensor) -> anyhow::Result<HostTensor> {
+        Ok(t.clone())
+    }
+
+    fn execute(
+        &self,
+        exe: &SimExec,
+        inputs: &[&HostTensor],
+    ) -> anyhow::Result<Vec<HostTensor>> {
+        let argc = |n: usize| -> anyhow::Result<()> {
+            anyhow::ensure!(
+                inputs.len() == n,
+                "{}: expected {n} inputs, got {}",
+                exe.name,
+                inputs.len()
+            );
+            Ok(())
+        };
+        let h = self.h;
+        match exe.op {
+            SimOp::Init => {
+                argc(1)?;
+                let seed = inputs[0].i32s()?[0];
+                let mut rng = SplitMix64::new((seed as i64 as u64) ^ 0x5EED_BA5E);
+                let data: Vec<f32> =
+                    (0..exe.n_params).map(|_| (rng.next_f64() * 0.2 - 0.1) as f32).collect();
+                Ok(vec![HostTensor::vec_f32(data)])
+            }
+            SimOp::FwdFirst => {
+                argc(2)?;
+                self.check_params(exe, inputs[0])?;
+                let w = inputs[0].f32s()?;
+                let tok = inputs[1].i32s()?;
+                let (w0, w1) = (w[0], w[1]);
+                let mut y = Vec::with_capacity(tok.len() * h);
+                for &t in tok {
+                    for j in 0..h {
+                        y.push(w0 * emb(t, j as u64) + w1);
+                    }
+                }
+                let mut shape = inputs[1].shape().to_vec();
+                shape.push(h as i64);
+                Ok(vec![HostTensor::F32 { data: y, shape }])
+            }
+            SimOp::FwdMid => {
+                argc(2)?;
+                self.check_params(exe, inputs[0])?;
+                let w = inputs[0].f32s()?;
+                let x = inputs[1].f32s()?;
+                let (scale, shift) = (1.0 + w[0], w[1]);
+                let y: Vec<f32> = x.iter().map(|&v| scale * v + shift).collect();
+                Ok(vec![HostTensor::F32 { data: y, shape: inputs[1].shape().to_vec() }])
+            }
+            SimOp::BwdFirst => {
+                argc(3)?;
+                self.check_params(exe, inputs[0])?;
+                let tok = inputs[1].i32s()?;
+                let dy = inputs[2].f32s()?;
+                anyhow::ensure!(dy.len() == tok.len() * h, "{}: dy shape mismatch", exe.name);
+                let (mut g0, mut g1) = (0f32, 0f32);
+                for (p, &t) in tok.iter().enumerate() {
+                    for j in 0..h {
+                        let d = dy[p * h + j];
+                        g0 += d * emb(t, j as u64);
+                        g1 += d;
+                    }
+                }
+                let mut dw = vec![0f32; exe.n_params];
+                dw[0] = g0;
+                dw[1] = g1;
+                Ok(vec![HostTensor::vec_f32(dw)])
+            }
+            SimOp::BwdMid => {
+                argc(3)?;
+                self.check_params(exe, inputs[0])?;
+                let w = inputs[0].f32s()?;
+                let x = inputs[1].f32s()?;
+                let dy = inputs[2].f32s()?;
+                anyhow::ensure!(x.len() == dy.len(), "{}: x/dy length mismatch", exe.name);
+                let scale = 1.0 + w[0];
+                let dx: Vec<f32> = dy.iter().map(|&d| d * scale).collect();
+                let (mut g0, mut g1) = (0f32, 0f32);
+                for (d, xv) in dy.iter().zip(x.iter()) {
+                    g0 += d * xv;
+                    g1 += d;
+                }
+                let mut dw = vec![0f32; exe.n_params];
+                dw[0] = g0;
+                dw[1] = g1;
+                Ok(vec![
+                    HostTensor::F32 { data: dx, shape: inputs[2].shape().to_vec() },
+                    HostTensor::vec_f32(dw),
+                ])
+            }
+            SimOp::BwdLast => {
+                argc(3)?;
+                self.check_params(exe, inputs[0])?;
+                let w = inputs[0].f32s()?;
+                let x = inputs[1].f32s()?;
+                let tgt = inputs[2].i32s()?;
+                anyhow::ensure!(x.len() == tgt.len() * h, "{}: x shape mismatch", exe.name);
+                let (w0, w1) = (w[0], w[1]);
+                let inv_h = 1.0f32 / h as f32;
+                let inv_n = 1.0f32 / tgt.len() as f32;
+                let inv_v = 1.0f32 / self.vocab as f32;
+                let mut dx = vec![0f32; x.len()];
+                let (mut loss, mut g0, mut g1) = (0f32, 0f32, 0f32);
+                for (p, &t) in tgt.iter().enumerate() {
+                    let mut u = 0f32;
+                    for j in 0..h {
+                        u += x[p * h + j];
+                    }
+                    u *= inv_h;
+                    let pred = w0 * u + w1;
+                    let target = t as f32 * inv_v - 0.5;
+                    let e = pred - target;
+                    loss += e * e;
+                    let dpred = 2.0 * e * inv_n;
+                    g0 += dpred * u;
+                    g1 += dpred;
+                    let dxv = dpred * w0 * inv_h;
+                    for j in 0..h {
+                        dx[p * h + j] = dxv;
+                    }
+                }
+                loss *= inv_n;
+                let mut dw = vec![0f32; exe.n_params];
+                dw[0] = g0;
+                dw[1] = g1;
+                Ok(vec![
+                    HostTensor::F32 { data: dx, shape: inputs[1].shape().to_vec() },
+                    HostTensor::vec_f32(dw),
+                    HostTensor::scalar_f32(loss),
+                ])
+            }
+            SimOp::Adam => {
+                argc(6)?;
+                self.check_params(exe, inputs[0])?;
+                let w = inputs[0].f32s()?;
+                let g = inputs[1].f32s()?;
+                let m = inputs[2].f32s()?;
+                let v = inputs[3].f32s()?;
+                anyhow::ensure!(
+                    g.len() == w.len() && m.len() == w.len() && v.len() == w.len(),
+                    "{}: state length mismatch",
+                    exe.name
+                );
+                let step = inputs[4].i32s()?[0];
+                anyhow::ensure!(step >= 1, "{}: adam step must be >= 1", exe.name);
+                let lr = inputs[5].f32s()?[0];
+                let bc1 = 1.0 - BETA1.powi(step);
+                let bc2 = 1.0 - BETA2.powi(step);
+                let mut w2 = Vec::with_capacity(w.len());
+                let mut m2 = Vec::with_capacity(w.len());
+                let mut v2 = Vec::with_capacity(w.len());
+                for i in 0..w.len() {
+                    let mi = BETA1 * m[i] + (1.0 - BETA1) * g[i];
+                    let vi = BETA2 * v[i] + (1.0 - BETA2) * g[i] * g[i];
+                    let mhat = mi / bc1;
+                    let vhat = vi / bc2;
+                    w2.push(w[i] - lr * mhat / (vhat.sqrt() + EPS));
+                    m2.push(mi);
+                    v2.push(vi);
+                }
+                Ok(vec![
+                    HostTensor::vec_f32(w2),
+                    HostTensor::vec_f32(m2),
+                    HostTensor::vec_f32(v2),
+                ])
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (Manifest, SimBackend) {
+        let m = Manifest::synthetic(4, 8, 4, 2, 32, &[1, 2]);
+        let b = SimBackend::create(&m).unwrap();
+        (m, b)
+    }
+
+    #[test]
+    fn init_is_deterministic_in_seed() {
+        let (m, b) = setup();
+        let init = b.compile(&m, "mid_init").unwrap();
+        let run = |seed: i32| {
+            b.execute_host(&init, &[&HostTensor::scalar_i32(seed)])
+                .unwrap()
+                .pop()
+                .unwrap()
+        };
+        assert_eq!(run(3), run(3));
+        assert_ne!(run(3), run(4));
+        let p = run(3);
+        assert_eq!(p.len(), m.param_count("mid").unwrap() as usize);
+        assert!(p.f32s().unwrap().iter().all(|v| v.abs() <= 0.1));
+    }
+
+    #[test]
+    fn fwd_mid_is_affine_and_bwd_is_its_adjoint() {
+        let (m, b) = setup();
+        let n = m.param_count("mid").unwrap() as usize;
+        let mut w = vec![0f32; n];
+        (w[0], w[1]) = (0.5, 0.25);
+        let wt = HostTensor::vec_f32(w);
+        let x = HostTensor::F32 { data: vec![1.0, -2.0, 0.0], shape: vec![3] };
+        let fwd = b.compile(&m, "mid_fwd").unwrap();
+        let y = b.execute_host(&fwd, &[&wt, &x]).unwrap().pop().unwrap();
+        assert_eq!(y.f32s().unwrap(), &[1.75, -2.75, 0.25]);
+        let dy = HostTensor::F32 { data: vec![1.0, 1.0, 1.0], shape: vec![3] };
+        let bwd = b.compile(&m, "mid_bwd").unwrap();
+        let outs = b.execute_host(&bwd, &[&wt, &x, &dy]).unwrap();
+        assert_eq!(outs[0].f32s().unwrap(), &[1.5, 1.5, 1.5]); // dy · (1 + w0)
+        let dw = outs[1].f32s().unwrap();
+        assert_eq!(dw[0], -1.0); // Σ dy·x
+        assert_eq!(dw[1], 3.0); // Σ dy
+        assert!(dw[2..].iter().all(|&g| g == 0.0));
+    }
+
+    #[test]
+    fn last_bwd_gradient_matches_finite_difference() {
+        let (m, b) = setup();
+        let n = m.param_count("last").unwrap() as usize;
+        let spec = &m.spec;
+        let bwd = b.compile(&m, "last_bwd").unwrap();
+        let positions = (spec.b * spec.s) as usize;
+        let x: Vec<f32> = (0..positions * spec.h as usize)
+            .map(|i| ((i % 13) as f32) * 0.05 - 0.3)
+            .collect();
+        let xt = HostTensor::F32 {
+            data: x,
+            shape: vec![spec.b as i64, spec.s as i64, spec.h as i64],
+        };
+        let tgt = HostTensor::I32 {
+            data: (0..positions as i32).map(|i| i % spec.v as i32).collect(),
+            shape: vec![spec.b as i64, spec.s as i64],
+        };
+        let loss_at = |w0: f32, w1: f32| -> (f32, f32, f32) {
+            let mut w = vec![0f32; n];
+            (w[0], w[1]) = (w0, w1);
+            let outs = b
+                .execute_host(&bwd, &[&HostTensor::vec_f32(w), &xt, &tgt])
+                .unwrap();
+            let dw = outs[1].f32s().unwrap();
+            (outs[2].f32s().unwrap()[0], dw[0], dw[1])
+        };
+        let (loss, g0, g1) = loss_at(0.4, -0.2);
+        assert!(loss.is_finite() && loss > 0.0);
+        let eps = 1e-2f32;
+        let fd0 = (loss_at(0.4 + eps, -0.2).0 - loss_at(0.4 - eps, -0.2).0) / (2.0 * eps);
+        let fd1 = (loss_at(0.4, -0.2 + eps).0 - loss_at(0.4, -0.2 - eps).0) / (2.0 * eps);
+        assert!((fd0 - g0).abs() < 0.05 * g0.abs().max(0.1), "analytic {g0} vs fd {fd0}");
+        assert!((fd1 - g1).abs() < 0.05 * g1.abs().max(0.1), "analytic {g1} vs fd {fd1}");
+    }
+
+    #[test]
+    fn adam_moves_against_the_gradient_deterministically() {
+        let (m, b) = setup();
+        let adam = b.compile(&m, "adam_mid").unwrap();
+        let n = m.param_count("mid").unwrap() as usize;
+        let w = HostTensor::vec_f32(vec![0.5; n]);
+        let g = HostTensor::vec_f32(vec![1.0; n]);
+        let zero = HostTensor::vec_f32(vec![0.0; n]);
+        let step = HostTensor::scalar_i32(1);
+        let lr = HostTensor::scalar_f32(0.1);
+        let run = || b.execute_host(&adam, &[&w, &g, &zero, &zero, &step, &lr]).unwrap();
+        let a = run();
+        assert_eq!(a, run(), "adam must be deterministic");
+        let w2 = a[0].f32s().unwrap();
+        // positive gradient → parameters decrease, by ≈ lr at step 1
+        assert!(w2.iter().all(|&v| v < 0.5 && v > 0.5 - 0.11), "{:?}", &w2[..2]);
+        // moments updated
+        assert!(a[1].f32s().unwrap()[0] > 0.0);
+        assert!(a[2].f32s().unwrap()[0] > 0.0);
+    }
+
+    #[test]
+    fn fwd_first_embeds_tokens_shape_and_range() {
+        let (m, b) = setup();
+        let fwd = b.compile(&m, "first_fwd").unwrap();
+        let n = m.param_count("first").unwrap() as usize;
+        let mut w = vec![0f32; n];
+        (w[0], w[1]) = (1.0, 0.0);
+        let tok = HostTensor::I32 { data: vec![0, 1, 2, 31], shape: vec![2, 2] };
+        let y = b
+            .execute_host(&fwd, &[&HostTensor::vec_f32(w), &tok])
+            .unwrap()
+            .pop()
+            .unwrap();
+        assert_eq!(y.shape(), &[2, 2, 8]);
+        let ys = y.f32s().unwrap();
+        assert_eq!(ys.len(), 4 * 8);
+        assert!(ys.iter().all(|v| v.abs() <= 1.0));
+        // distinct tokens embed differently
+        assert_ne!(&ys[0..8], &ys[8..16]);
+        // repeated execution is bit-identical (pure function)
+        let y2 = b
+            .execute_host(&fwd, &[&HostTensor::vec_f32({
+                let mut w = vec![0f32; n];
+                (w[0], w[1]) = (1.0, 0.0);
+                w
+            }), &tok])
+            .unwrap()
+            .pop()
+            .unwrap();
+        assert_eq!(y, y2);
+    }
+
+    #[test]
+    fn compile_rejects_unknown_and_unlisted_artifacts() {
+        let (m, b) = setup();
+        assert!(b.compile(&m, "nope_fwd").is_err(), "not in the manifest");
+        assert!(b.compile(&m, "last_fwd").is_err(), "no sim semantics / not listed");
+        // the b-suffixed sweep artifacts compile to the same ops
+        assert!(b.compile(&m, "mid_fwd_b2").is_ok());
+        assert!(b.compile(&m, "mid_bwd_b1").is_ok());
+    }
+}

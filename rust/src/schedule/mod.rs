@@ -133,6 +133,18 @@ impl Family {
         }
     }
 
+    /// Virtual-pipeline chunks the family's schedules host per stage
+    /// (matches `build(p, m).chunks` without generating anything — the
+    /// coordinator uses it to derive `p` from a manifest's total
+    /// virtual-stage count before building the schedule).
+    pub fn chunks(&self) -> u64 {
+        match *self {
+            Family::OneFOneB | Family::GPipe => 1,
+            Family::Interleaved { v } | Family::ZigZag { v } => v,
+            Family::VShaped => 2,
+        }
+    }
+
     /// Display name (sweep-report scenario column).
     pub fn label(&self) -> &'static str {
         match self {
@@ -198,6 +210,34 @@ pub enum Placement {
     /// p−1→0, each starting on the physical stage where the previous
     /// chunk ended.  Two chunks make the V shape, four make the W.
     ZigZag,
+}
+
+impl Placement {
+    /// The virtual-pipeline stage index of `chunk` hosted on physical
+    /// `stage` of a `p`-deep pipeline.  Virtual stage `d` belongs to
+    /// chunk `d / p`; within the chunk, sequential placements walk
+    /// 0→p−1 while zig-zag placements alternate direction per chunk.
+    pub fn virtual_stage(&self, p: u64, stage: u64, chunk: u64) -> u64 {
+        match self {
+            Placement::Sequential => chunk * p + stage,
+            Placement::ZigZag => chunk * p + zigzag::zigzag_offset(p, stage, chunk),
+        }
+    }
+
+    /// The physical stage hosting virtual stage `virt` — the inverse of
+    /// [`Placement::virtual_stage`].  This is the routing function the
+    /// real coordinator wires its activation/gradient channels from: the
+    /// boundary `virt → virt + 1` connects `host_stage(virt)` to
+    /// `host_stage(virt + 1)` (possibly the same worker, at zig-zag
+    /// junctions).
+    pub fn host_stage(&self, p: u64, virt: u64) -> u64 {
+        let (chunk, offset) = (virt / p, virt % p);
+        match self {
+            Placement::Sequential => offset,
+            // zigzag_offset is an involution per chunk
+            Placement::ZigZag => zigzag::zigzag_offset(p, offset, chunk),
+        }
+    }
 }
 
 /// A complete pipeline schedule: one program per stage.
@@ -267,6 +307,43 @@ mod tests {
         assert_eq!(Family::ZigZag { v: 4 }.build(4, 8).chunks, 4);
         assert_eq!(Family::ZigZag { v: 4 }.label(), "W-shaped");
         assert_eq!(Family::ZigZag { v: 3 }.label(), "zig-zag");
+    }
+
+    #[test]
+    fn family_chunks_match_built_schedules() {
+        for fam in [
+            Family::OneFOneB,
+            Family::GPipe,
+            Family::Interleaved { v: 3 },
+            Family::VShaped,
+            Family::ZigZag { v: 4 },
+        ] {
+            assert_eq!(fam.build(4, 8).chunks, fam.chunks(), "{fam:?}");
+        }
+    }
+
+    #[test]
+    fn placement_routing_round_trips() {
+        for placement in [Placement::Sequential, Placement::ZigZag] {
+            for p in [1u64, 2, 4, 5, 8] {
+                for chunk in 0..4 {
+                    for stage in 0..p {
+                        let d = placement.virtual_stage(p, stage, chunk);
+                        assert_eq!(d / p, chunk);
+                        assert_eq!(
+                            placement.host_stage(p, d),
+                            stage,
+                            "{placement:?} p={p} c={chunk} s={stage}"
+                        );
+                    }
+                }
+            }
+        }
+        // the V shape: chunk 0 flows 0→p−1, chunk 1 starts where it
+        // ended (stage p−1) and flows back to 0
+        assert_eq!(Placement::ZigZag.host_stage(4, 3), 3);
+        assert_eq!(Placement::ZigZag.host_stage(4, 4), 3);
+        assert_eq!(Placement::ZigZag.host_stage(4, 7), 0);
     }
 
     #[test]

@@ -126,6 +126,54 @@ impl ScenarioSpec {
     }
 }
 
+/// Per-worker schedule construction cache: the last base schedule built
+/// (keyed by family × p × m) plus a reusable
+/// [`crate::bpipe::RebalanceWorkspace`].  The bound-sensitivity grid
+/// lists one experiment's cells family-by-family, bound-by-bound, so
+/// consecutive cells on a worker almost always share their base — and
+/// the base build (the zigzag generator's virtual list-schedule in
+/// particular) dominates cell setup.  A cache hit turns that into one
+/// clone (base cells) or one scratch-reusing rebalance pass.
+pub struct ScheduleCache {
+    base: Option<(Family, u64, u64, Schedule)>,
+    rb: crate::bpipe::RebalanceWorkspace,
+}
+
+impl Default for ScheduleCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ScheduleCache {
+    pub fn new() -> Self {
+        Self { base: None, rb: crate::bpipe::RebalanceWorkspace::new() }
+    }
+
+    /// [`ScenarioSpec::build_for`], with the base schedule cached across
+    /// calls — identical output, cheaper steady state.
+    pub fn build_for(&mut self, spec: &ScenarioSpec, e: &ExperimentConfig) -> Schedule {
+        let p = e.parallel.p;
+        let m = e.parallel.num_microbatches();
+        let hit = matches!(
+            &self.base,
+            Some((f, bp, bm, _)) if *f == spec.family && *bp == p && *bm == m
+        );
+        if !hit {
+            self.base = Some((spec.family, p, m, spec.family.build(p, m)));
+        }
+        let (_, _, _, base) = self.base.as_ref().unwrap();
+        if spec.per_stage {
+            let bounds = crate::bpipe::capacity_stage_bounds(e, base);
+            self.rb.rebalance_bounded(base, &bounds)
+        } else if spec.rebalance {
+            self.rb.rebalance(base, spec.bound)
+        } else {
+            base.clone()
+        }
+    }
+}
+
 /// One cell of the sweep grid, before simulation.  The experiment config
 /// is shared (`Arc`) across all of one experiment's cells — with ~2.3k
 /// bounds-grid tasks, per-task deep clones would dominate grid
@@ -268,12 +316,13 @@ pub fn sweep(tasks: Vec<SweepTask>, threads: usize) -> Vec<SweepOutcome> {
         for _ in 0..threads {
             scope.spawn(|| {
                 let mut ws = SimWorkspace::new();
+                let mut cache = ScheduleCache::new();
                 loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= tasks_ref.len() {
                         break;
                     }
-                    let out = run_task_in(&mut ws, &tasks_ref[i]);
+                    let out = run_task_in(&mut ws, &mut cache, &tasks_ref[i]);
                     let _ = slots_ref[i].set(out);
                 }
             });
@@ -286,9 +335,9 @@ pub fn sweep(tasks: Vec<SweepTask>, threads: usize) -> Vec<SweepOutcome> {
 }
 
 /// Simulate one cell in the given workspace (the worker inner loop).
-fn run_task_in(ws: &mut SimWorkspace, t: &SweepTask) -> SweepOutcome {
+fn run_task_in(ws: &mut SimWorkspace, cache: &mut ScheduleCache, t: &SweepTask) -> SweepOutcome {
     let gib = (1u64 << 30) as f64;
-    let schedule = t.spec.build_for(&t.experiment);
+    let schedule = cache.build_for(&t.spec, &t.experiment);
     let stats = ws.run(&t.experiment, &schedule, &t.layout, SimOptions { trace: false });
     // a per-stage-bounds cell reports its bound vector; a uniform
     // rebalance cell its scalar bound; a base cell neither
@@ -532,7 +581,24 @@ mod tests {
 
     /// Simulate one cell with a throwaway workspace (serial reference).
     fn run_task(t: &SweepTask) -> SweepOutcome {
-        run_task_in(&mut SimWorkspace::new(), t)
+        run_task_in(&mut SimWorkspace::new(), &mut ScheduleCache::new(), t)
+    }
+
+    #[test]
+    fn schedule_cache_matches_uncached_builds() {
+        // the cache is a pure memoization: across a realistic worker
+        // stream (bound cells family-by-family, then ranking cells with
+        // base/rebalance/per-stage interleaved) every schedule must be
+        // op-identical to the uncached ScenarioSpec build
+        let e = paper_experiment(8).unwrap();
+        let mut cache = ScheduleCache::new();
+        let mut stream: Vec<ScenarioSpec> = Vec::new();
+        stream.extend(bound_sensitivity_tasks(&e, 2).into_iter().map(|t| t.spec));
+        stream.extend(experiment_tasks(&e, 2).into_iter().map(|t| t.spec));
+        assert!(!stream.is_empty());
+        for spec in stream {
+            assert_eq!(cache.build_for(&spec, &e), spec.build_for(&e), "{}", spec.name());
+        }
     }
 
     #[test]

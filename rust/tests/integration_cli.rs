@@ -145,6 +145,32 @@ fn schedule_subcommand_prints_programs() {
 }
 
 #[test]
+fn train_runs_on_the_sim_backend() {
+    // the acceptance-criteria invocation: no artifacts, no pjrt — the
+    // synthetic manifest + SimBackend train end to end and exit 0
+    let (ok, out) = bpipe(&[
+        "train", "--backend", "sim", "--steps", "2", "--microbatches", "4", "--log-every", "1",
+    ]);
+    assert!(ok, "{out}");
+    for needle in ["training:", "first loss", "final loss", "stage 0:", "stash-hw"] {
+        assert!(out.contains(needle), "missing {needle}: {out}");
+    }
+
+    // a rebalanced zig-zag (v=4) base on 2 physical stages: the REAL
+    // pipeline runs the W placement with evictions
+    let (ok, out) = bpipe(&[
+        "train", "--backend", "sim", "--schedule", "zigzag", "--v", "4", "--p", "2",
+        "--steps", "1", "--microbatches", "6", "--rebalance", "--bound", "6",
+    ]);
+    assert!(ok, "{out}");
+    assert!(out.contains("evictions 18"), "W-shaped bound-6 run must evict: {out}");
+
+    // unknown backend fails cleanly
+    let (ok, _) = bpipe(&["train", "--backend", "quantum"]);
+    assert!(!ok);
+}
+
+#[test]
 fn memory_subcommand_shows_imbalance() {
     let (ok, out) = bpipe(&["memory", "--experiment", "8"]);
     assert!(ok && out.contains("OOM!"), "{out}");

@@ -67,6 +67,39 @@ fn exp8_report_snapshot() {
 
     // figure tables accompany every chart (the palette's text fallback)
     assert!(md.matches("```text").count() >= 4);
+
+    // every embedded figure is scheme-adaptive: one stylesheet with the
+    // dark-mode media query per SVG, neutrals only as classes
+    assert_eq!(md.matches("<style>").count(), 4);
+    assert_eq!(md.matches("@media (prefers-color-scheme: dark)").count(), 4);
+    assert_eq!(md.matches("class=\"surface\"").count(), 4, "one themed canvas per figure");
+}
+
+#[test]
+fn dark_mode_snapshot_of_one_figure() {
+    // a single grouped-bar chart, pinned: both schemes' neutral sets are
+    // present, and the dark set lives inside the media query (after it)
+    let svg = figures::svg_grouped_bars(
+        "snapshot",
+        "GiB",
+        &["stage 0".into()],
+        &[figures::Series { name: "1F1B".into(), slot: 0, values: vec![Some(1.0)] }],
+        Some((2.0, "HBM")),
+    );
+    let media_at = svg.find("@media (prefers-color-scheme: dark)").expect("dark query");
+    for (light, dark) in [
+        ("#fcfcfb", "#161512"), // surface
+        ("#0b0b0b", "#f2f1ed"), // ink
+        ("#52514e", "#b6b4ae"), // muted/axis
+        ("#e4e3df", "#383632"), // grid
+        ("#e34948", "#ff6e6d"), // HBM-limit red
+    ] {
+        let l = svg.find(light).unwrap_or_else(|| panic!("missing light {light}"));
+        let d = svg.find(dark).unwrap_or_else(|| panic!("missing dark {dark}"));
+        assert!(l < media_at && d > media_at, "{light}/{dark} scheme placement");
+    }
+    // marks keep their literal family hue in both schemes
+    assert!(svg.contains("#2a78d6"));
 }
 
 #[test]
