@@ -1,5 +1,5 @@
-//! Hot-path benches for the sweep engine: the DES inner loop is the cost
-//! of every cell in `sim::sweep`'s grids, so this bench times
+//! Hot-path benches for BOTH execution substrates: the DES sweep engine
+//! and the REAL pipeline's training step.  This bench times
 //!
 //! * (a) single sweep cells per schedule family through a reused
 //!   [`SimWorkspace`] — the zero-allocation steady state (CSR edges,
@@ -10,20 +10,60 @@
 //! * (c) the schedule generators + rebalance transform that build grid
 //!   cells lazily on the worker threads;
 //! * (d) the full 300-cell ranking grid and the ~3600-cell
-//!   bound-sensitivity grid end to end through the parallel driver.
+//!   bound-sensitivity grid end to end through the parallel driver;
+//! * (e) the real `train --backend sim` step — pooled/donating
+//!   (`SimBackend`) vs the owned-value baseline (`UnpooledSimBackend`):
+//!   steps/sec plus **allocations per steady-state step of a stage-0
+//!   worker**, counted by a thread-local `#[global_allocator]` through
+//!   `train_probed`.  The group's numbers are also written to
+//!   `BENCH_runtime.json` (schema below) so CI can archive the perf
+//!   trajectory and diff steps/sec against the committed baseline.
 //!
 //! `BPIPE_BENCH_SMOKE=1` caps iteration counts so CI can run this as a
 //! non-blocking smoke step (hot-path regressions show up in PR logs
 //! without gating merges).
+
+use std::collections::HashMap;
 
 use bpipe::bpipe::{
     capacity_stage_bounds, pair_adjacent_layout, rebalance, rebalance_bounded,
     RebalanceWorkspace,
 };
 use bpipe::config::paper_experiment;
-use bpipe::schedule::{interleaved, one_f_one_b, v_shaped, zigzag};
+use bpipe::coordinator::{train, train_probed, RebalancePlan, TrainConfig};
+use bpipe::runtime::{Backend, Manifest, SimBackend, UnpooledSimBackend};
+use bpipe::schedule::{interleaved, one_f_one_b, v_shaped, zigzag, Family};
 use bpipe::sim::{bounds_grid, paper_grid, simulate, sweep, SimOptions, SimWorkspace};
-use bpipe::util::bench;
+use bpipe::util::{bench, Json};
+
+// the thread-local counting #[global_allocator] shared with the
+// zero-alloc test binary: `train_probed` runs the probed stage worker
+// on THIS thread, so the counter sees exactly its hot path
+#[path = "../rust/tests/support/counting_alloc.rs"]
+mod counting_alloc;
+use counting_alloc::allocs;
+
+/// Mean allocations per steady-state step (warm-up step excluded) of the
+/// stage-0 worker, measured on this thread via `train_probed`.
+fn allocs_per_step<B: Backend>(cfg: &TrainConfig) -> f64 {
+    let mut deltas: Vec<f64> = Vec::with_capacity(cfg.steps as usize);
+    let mut last = 0u64;
+    let mut first = true;
+    train_probed::<B>(cfg, 0, &mut |_step| {
+        let now = allocs();
+        if !first {
+            deltas.push((now - last) as f64);
+        }
+        first = false;
+        last = now;
+    })
+    .expect("probed train run failed");
+    if deltas.is_empty() {
+        0.0
+    } else {
+        deltas.iter().sum::<f64>() / deltas.len() as f64
+    }
+}
 
 fn main() {
     let smoke = std::env::var("BPIPE_BENCH_SMOKE")
@@ -115,4 +155,66 @@ fn main() {
         iters(3),
         || sweep(bounds_grid(2), 0),
     );
+
+    println!("\n=== real train step on the SimBackend: pooled vs owned baseline ===");
+    let train_steps: u64 = if smoke { 4 } else { 24 };
+    let t_cfg = TrainConfig {
+        manifest: Some(Manifest::synthetic(4, 16, 8, 2, 64, &[1, 2])),
+        family: Family::OneFOneB,
+        steps: train_steps,
+        microbatches: 8,
+        lr: 1e-3,
+        seed: 0,
+        rebalance: RebalancePlan::Uniform { bound: None },
+        ..TrainConfig::default()
+    };
+    let pooled = train::<SimBackend>(&t_cfg).expect("pooled train run failed");
+    let owned = train::<UnpooledSimBackend>(&t_cfg).expect("owned train run failed");
+    assert_eq!(
+        pooled.losses, owned.losses,
+        "pooled and owned training must be bit-identical"
+    );
+    let (sp_pooled, sp_owned) =
+        (1.0 / pooled.mean_step_time(), 1.0 / owned.mean_step_time());
+    let ap_pooled = allocs_per_step::<SimBackend>(&t_cfg);
+    let ap_owned = allocs_per_step::<UnpooledSimBackend>(&t_cfg);
+    println!(
+        "hotpath/train_step_sim_pooled   {sp_pooled:>10.1} steps/s  {ap_pooled:>8.1} allocs/step (stage-0 worker)"
+    );
+    println!(
+        "hotpath/train_step_sim_owned    {sp_owned:>10.1} steps/s  {ap_owned:>8.1} allocs/step (stage-0 worker)"
+    );
+    println!(
+        "hotpath/train_step delta: pooled runs {:.2}x the owned steps/s and saves {:.0} allocs/step",
+        sp_pooled / sp_owned,
+        ap_owned - ap_pooled
+    );
+
+    // machine-readable perf trajectory (CI archives this and diffs the
+    // steps/s against the committed baseline, advisory-only)
+    let side = |steps_per_s: f64, mean_step_s: f64, allocs_step: f64| -> Json {
+        let mut o = HashMap::new();
+        o.insert("steps_per_s".to_string(), Json::Num(steps_per_s));
+        o.insert("mean_step_s".to_string(), Json::Num(mean_step_s));
+        o.insert("allocs_per_step_stage0".to_string(), Json::Num(allocs_step));
+        Json::Obj(o)
+    };
+    let mut root = HashMap::new();
+    root.insert("schema".to_string(), Json::Num(1.0));
+    root.insert(
+        "bench".to_string(),
+        Json::Str("train_step_sim_p4_m8_bpipe_uniform".to_string()),
+    );
+    root.insert("smoke".to_string(), Json::Bool(smoke));
+    root.insert("steps".to_string(), Json::Num(train_steps as f64));
+    root.insert("pooled".to_string(), side(sp_pooled, pooled.mean_step_time(), ap_pooled));
+    root.insert("owned".to_string(), side(sp_owned, owned.mean_step_time(), ap_owned));
+    root.insert(
+        "speedup_pooled_vs_owned".to_string(),
+        Json::Num(sp_pooled / sp_owned),
+    );
+    match std::fs::write("BENCH_runtime.json", format!("{}\n", Json::Obj(root))) {
+        Ok(()) => println!("wrote BENCH_runtime.json"),
+        Err(e) => eprintln!("could not write BENCH_runtime.json: {e}"),
+    }
 }

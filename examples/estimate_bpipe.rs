@@ -87,7 +87,13 @@ fn main() -> anyhow::Result<()> {
             ..TrainConfig::default()
         };
         let r = train::<SimBackend>(&cfg)?;
-        println!("  m={m:>3}: mean step {:.5}s", r.mean_step_time());
+        let st0 = &r.stage_stats[0];
+        println!(
+            "  m={m:>3}: mean step {:.5}s  (stage-0 pool: {} hits / {} misses)",
+            r.mean_step_time(),
+            st0.pool_hits,
+            st0.pool_misses
+        );
         measured.push((b, m, r.mean_step_time()));
     }
     println!("\nwork-bound check (one host: step time ∝ m · T_artifact):");

@@ -59,12 +59,20 @@ fn main() -> anyhow::Result<()> {
         assert_eq!(a, b, "step {i}: BPipe changed the numerics!");
     }
     println!("numerics: first {steps_b} losses bit-identical to plain 1F1B ✓");
-    println!("\nstash high-water per stage (the balancing effect):");
-    println!("  stage |  1F1B | BPipe | evictions | load-wait");
+    println!("\nstash high-water per stage (the balancing effect), plus the");
+    println!("buffer-pool hit rate (steady-state steps allocate nothing):");
+    println!("  stage |  1F1B | BPipe | evictions | load-wait | pool hit-rate");
     for (a, b) in plain.stage_stats.iter().zip(bpipe_run.stage_stats.iter()) {
+        let total = b.pool_hits + b.pool_misses;
         println!(
-            "  {:>5} | {:>5} | {:>5} | {:>9} | {:>8.3}s",
-            a.stage, a.stash_high_water, b.stash_high_water, b.evictions, b.load_wait_s
+            "  {:>5} | {:>5} | {:>5} | {:>9} | {:>8.3}s | {:>6.1}% ({} misses)",
+            a.stage,
+            a.stash_high_water,
+            b.stash_high_water,
+            b.evictions,
+            b.load_wait_s,
+            if total > 0 { 100.0 * b.pool_hits as f64 / total as f64 } else { 0.0 },
+            b.pool_misses
         );
     }
     println!(

@@ -1,4 +1,5 @@
-//! Bounded activation stash + the BPipe remote store.
+//! Bounded activation stash + the BPipe remote store — the hot path
+//! moves [`Stash`] handles, never cloned tensor values.
 //!
 //! Each stage worker owns an [`ActivationStore`] holding the stage-input
 //! tensor(s) of every in-flight `(microbatch, chunk)` key (the thing a
@@ -9,12 +10,21 @@
 //! rebalance transform bounds the stage's resident count across all of
 //! its chunks, and so does the store.
 //!
+//! Zero-alloc discipline: keys are dense (`mb < m`, `chunk < chunks`),
+//! so the store is a preallocated slot array, not a map — `put`/`take`
+//! are an `Option` swap, and a [`Stash`] is a fixed-size handle (input
+//! tensor + optional targets), so stashing, evicting and loading move
+//! ownership without ever touching the heap.  The remote-store channels
+//! are *bounded* (`sync_channel`), whose ring buffers are allocated once
+//! at wiring time — a send transfers the stash by value into
+//! preallocated slots.
+//!
 //! The acceptor side of a BPipe pair is a [`RemoteStore`] service thread
 //! owning the evicted tensors (the "partner device's free memory"): the
 //! evictor pushes stashes to it and pulls them back before the backward.
 
 use std::collections::HashMap;
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 
 pub use crate::runtime::HostTensor;
 
@@ -22,9 +32,36 @@ pub use crate::runtime::HostTensor;
 /// single-chunk schedules.
 pub type StashKey = (u64, u64);
 
-/// Per-stage bounded stash: `(mb, chunk)` → stage-input tensor(s).
+/// What one Fwd leaves behind for its Bwd: the stage-input tensor, plus
+/// the target tokens on the loss stage.  Fixed-size by design — moving a
+/// stash (into the store, through a BPipe channel) allocates nothing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stash {
+    pub x: HostTensor,
+    pub extra: Option<HostTensor>,
+}
+
+impl Stash {
+    pub fn single(x: HostTensor) -> Self {
+        Stash { x, extra: None }
+    }
+
+    pub fn pair(x: HostTensor, extra: HostTensor) -> Self {
+        Stash { x, extra: Some(extra) }
+    }
+
+    /// Payload bytes across both tensors.
+    pub fn bytes(&self) -> usize {
+        self.x.bytes() + self.extra.as_ref().map_or(0, |t| t.bytes())
+    }
+}
+
+/// Per-stage bounded stash: `(mb, chunk)` → [`Stash`], backed by a
+/// dense preallocated slot array.
 pub struct ActivationStore {
-    stash: HashMap<StashKey, Vec<HostTensor>>,
+    slots: Vec<Option<Stash>>,
+    chunks: usize,
+    len: usize,
     capacity: usize,
     /// peak resident entries (for the balance report)
     pub high_water: usize,
@@ -35,9 +72,15 @@ pub struct ActivationStore {
 }
 
 impl ActivationStore {
-    pub fn new(capacity: usize) -> Self {
+    /// A store enforcing `capacity` resident entries, with one slot per
+    /// `(mb, chunk)` key of the program it serves.
+    pub fn new(capacity: usize, microbatches: u64, chunks: u64) -> Self {
+        let chunks = chunks.max(1) as usize;
+        let n = microbatches.max(1) as usize * chunks;
         Self {
-            stash: HashMap::new(),
+            slots: (0..n).map(|_| None).collect(),
+            chunks,
+            len: 0,
             capacity,
             high_water: 0,
             resident_bytes: 0,
@@ -45,70 +88,144 @@ impl ActivationStore {
         }
     }
 
+    /// The slot a key maps to, or `None` when it lies outside the
+    /// planned program (the single source of truth for the layout).
+    fn slot(&self, key: StashKey) -> Option<usize> {
+        let i = key.0 as usize * self.chunks + key.1 as usize;
+        ((key.1 as usize) < self.chunks && i < self.slots.len()).then_some(i)
+    }
+
+    fn idx(&self, key: StashKey) -> usize {
+        self.slot(key).unwrap_or_else(|| {
+            panic!(
+                "stash key (mb {}, chunk {}) outside the planned program",
+                key.0, key.1
+            )
+        })
+    }
+
     pub fn len(&self) -> usize {
-        self.stash.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.stash.is_empty()
+        self.len == 0
     }
 
     /// Insert a stash; panics if the schedule violated its own bound.
-    pub fn put(&mut self, key: StashKey, tensors: Vec<HostTensor>) {
+    pub fn put(&mut self, key: StashKey, stash: Stash) {
         assert!(
-            self.stash.len() < self.capacity,
+            self.len < self.capacity,
             "activation store over capacity ({}): schedule bound violated at (mb {}, chunk {})",
             self.capacity,
             key.0,
             key.1
         );
-        self.resident_bytes += tensors.iter().map(|t| t.bytes()).sum::<usize>();
-        let prev = self.stash.insert(key, tensors);
+        self.resident_bytes += stash.bytes();
+        let slot = self.idx(key);
+        let prev = self.slots[slot].replace(stash);
         assert!(prev.is_none(), "double stash for (mb {}, chunk {})", key.0, key.1);
-        self.high_water = self.high_water.max(self.stash.len());
+        self.len += 1;
+        self.high_water = self.high_water.max(self.len);
         self.high_water_bytes = self.high_water_bytes.max(self.resident_bytes);
     }
 
     /// Remove and return a stash (for Bwd or Evict).
-    pub fn take(&mut self, key: StashKey) -> Vec<HostTensor> {
-        let t = self
-            .stash
-            .remove(&key)
+    pub fn take(&mut self, key: StashKey) -> Stash {
+        let slot = self.idx(key);
+        let st = self.slots[slot]
+            .take()
             .unwrap_or_else(|| panic!("stash for (mb {}, chunk {}) not resident", key.0, key.1));
-        self.resident_bytes -= t.iter().map(|x| x.bytes()).sum::<usize>();
-        t
+        self.len -= 1;
+        self.resident_bytes -= st.bytes();
+        st
     }
 
     pub fn contains(&self, key: StashKey) -> bool {
-        self.stash.contains_key(&key)
+        self.slot(key).map_or(false, |i| self.slots[i].is_some())
+    }
+}
+
+/// Three-tier allocation-free wait: spin briefly (latency), yield a
+/// while (let a runnable peer in), then sleep in 50 µs slices (release
+/// the core through long pipeline bubbles — `nanosleep` touches no
+/// heap).  Parking instead would register a waker with the channel,
+/// which can allocate the first time each channel parks — and a
+/// channel's *first* park can land after the warm-up step, breaking the
+/// steady-state zero-alloc guarantee; polling keeps the worker hot path
+/// off the allocator entirely, the laptop-scale analogue of a
+/// NCCL-style progress loop.
+fn backoff(spins: &mut u32) {
+    *spins = spins.saturating_add(1);
+    if *spins < 64 {
+        std::hint::spin_loop();
+    } else if *spins < 512 {
+        std::thread::yield_now();
+    } else {
+        std::thread::sleep(std::time::Duration::from_micros(50));
+    }
+}
+
+/// Allocation-free bounded-channel send: busy-polls `try_send` instead
+/// of parking (see [`backoff`]).  Returns `Err(())` when the receiver
+/// is gone.
+pub(crate) fn spin_send<T>(tx: &SyncSender<T>, mut v: T) -> Result<(), ()> {
+    use std::sync::mpsc::TrySendError;
+    let mut spins = 0u32;
+    loop {
+        match tx.try_send(v) {
+            Ok(()) => return Ok(()),
+            Err(TrySendError::Full(back)) => {
+                v = back;
+                backoff(&mut spins);
+            }
+            Err(TrySendError::Disconnected(_)) => return Err(()),
+        }
+    }
+}
+
+/// Receive twin of [`spin_send`]: `Err(())` once every sender is gone
+/// and the channel is drained (matching `recv`'s disconnect semantics).
+pub(crate) fn spin_recv<T>(rx: &Receiver<T>) -> Result<T, ()> {
+    use std::sync::mpsc::TryRecvError;
+    let mut spins = 0u32;
+    loop {
+        match rx.try_recv() {
+            Ok(v) => return Ok(v),
+            Err(TryRecvError::Empty) => {
+                backoff(&mut spins);
+            }
+            Err(TryRecvError::Disconnected) => return Err(()),
+        }
     }
 }
 
 /// Messages to a BPipe remote store.
 enum StoreMsg {
-    Evict { key: StashKey, tensors: Vec<HostTensor> },
+    Evict { key: StashKey, stash: Stash },
     Load { key: StashKey },
     Shutdown,
 }
 
 /// Client handle an evictor stage uses to talk to its acceptor-side store.
 pub struct RemoteStoreClient {
-    tx: Sender<StoreMsg>,
-    resp_rx: Receiver<(StashKey, Vec<HostTensor>)>,
+    tx: SyncSender<StoreMsg>,
+    resp_rx: Receiver<(StashKey, Stash)>,
 }
 
 impl RemoteStoreClient {
-    /// Ship a stash to the acceptor (non-blocking).
-    pub fn evict(&self, key: StashKey, tensors: Vec<HostTensor>) {
-        self.tx.send(StoreMsg::Evict { key, tensors }).expect("remote store gone");
+    /// Ship a stash to the acceptor (non-blocking while the acceptor's
+    /// in-flight window has room; allocation-free either way).
+    pub fn evict(&self, key: StashKey, stash: Stash) {
+        spin_send(&self.tx, StoreMsg::Evict { key, stash }).expect("remote store gone");
     }
 
-    /// Fetch a stash back (blocks until the acceptor responds).
-    pub fn load(&self, key: StashKey) -> Vec<HostTensor> {
-        self.tx.send(StoreMsg::Load { key }).expect("remote store gone");
-        let (got, tensors) = self.resp_rx.recv().expect("remote store gone");
+    /// Fetch a stash back (busy-waits until the acceptor responds).
+    pub fn load(&self, key: StashKey) -> Stash {
+        spin_send(&self.tx, StoreMsg::Load { key }).expect("remote store gone");
+        let (got, stash) = spin_recv(&self.resp_rx).expect("remote store gone");
         assert_eq!(got, key, "remote store returned the wrong stash");
-        tensors
+        stash
     }
 
     pub fn shutdown(&self) {
@@ -126,35 +243,41 @@ pub struct RemoteStoreStats {
 }
 
 /// Spawn the acceptor-side store service thread for one evictor/acceptor
-/// pair.  Returns the evictor's client handle and a receiver for the
-/// final stats.
-pub fn spawn_remote_store() -> (RemoteStoreClient, Receiver<RemoteStoreStats>) {
-    let (tx, rx) = channel::<StoreMsg>();
-    let (resp_tx, resp_rx) = channel();
+/// pair.  `max_inflight` bounds the evictions simultaneously held (the
+/// schedule's resident-eviction high water — `m × chunks` is always
+/// safe); the channel ring buffers are sized once from it, so the
+/// evictor's steady-state sends allocate nothing.  Returns the evictor's
+/// client handle and a receiver for the final stats.
+pub fn spawn_remote_store(
+    max_inflight: usize,
+) -> (RemoteStoreClient, Receiver<RemoteStoreStats>) {
+    let cap = max_inflight.max(1);
+    let (tx, rx) = sync_channel::<StoreMsg>(cap + 1);
+    let (resp_tx, resp_rx) = sync_channel::<(StashKey, Stash)>(1);
     let (stats_tx, stats_rx): (SyncSender<RemoteStoreStats>, Receiver<RemoteStoreStats>) =
         sync_channel(1);
     std::thread::Builder::new()
         .name("bpipe-remote-store".into())
         .spawn(move || {
-            let mut held: HashMap<StashKey, Vec<HostTensor>> = HashMap::new();
+            let mut held: HashMap<StashKey, Stash> = HashMap::with_capacity(cap);
             let mut stats = RemoteStoreStats::default();
             let mut bytes = 0usize;
             for msg in rx {
                 match msg {
-                    StoreMsg::Evict { key, tensors } => {
-                        bytes += tensors.iter().map(|t| t.bytes()).sum::<usize>();
-                        held.insert(key, tensors);
+                    StoreMsg::Evict { key, stash } => {
+                        bytes += stash.bytes();
+                        held.insert(key, stash);
                         stats.evictions += 1;
                         stats.high_water_entries = stats.high_water_entries.max(held.len());
                         stats.high_water_bytes = stats.high_water_bytes.max(bytes);
                     }
                     StoreMsg::Load { key } => {
-                        let tensors = held.remove(&key).unwrap_or_else(|| {
+                        let stash = held.remove(&key).unwrap_or_else(|| {
                             panic!("load of non-evicted (mb {}, chunk {})", key.0, key.1)
                         });
-                        bytes -= tensors.iter().map(|t| t.bytes()).sum::<usize>();
+                        bytes -= stash.bytes();
                         stats.loads += 1;
-                        resp_tx.send((key, tensors)).ok();
+                        resp_tx.send((key, stash)).ok();
                     }
                     StoreMsg::Shutdown => break,
                 }
@@ -170,13 +293,13 @@ pub fn spawn_remote_store() -> (RemoteStoreClient, Receiver<RemoteStoreStats>) {
 mod tests {
     use super::*;
 
-    fn t(n: usize) -> Vec<HostTensor> {
-        vec![HostTensor::F32 { data: vec![0.5; n], shape: vec![n as i64] }]
+    fn t(n: usize) -> Stash {
+        Stash::single(HostTensor::F32 { data: vec![0.5; n], shape: vec![n as i64] })
     }
 
     #[test]
     fn store_tracks_high_water() {
-        let mut s = ActivationStore::new(3);
+        let mut s = ActivationStore::new(3, 4, 1);
         s.put((0, 0), t(4));
         s.put((1, 0), t(4));
         assert_eq!(s.high_water, 2);
@@ -190,18 +313,33 @@ mod tests {
 
     #[test]
     fn chunk_keys_are_independent() {
-        let mut s = ActivationStore::new(4);
+        let mut s = ActivationStore::new(4, 2, 2);
         s.put((0, 0), t(2));
         s.put((0, 1), t(6));
         assert_eq!(s.len(), 2);
-        assert_eq!(s.take((0, 1))[0].len(), 6);
+        assert_eq!(s.take((0, 1)).x.len(), 6);
         assert!(s.contains((0, 0)));
+    }
+
+    #[test]
+    fn pair_stash_counts_both_tensors() {
+        let mut s = ActivationStore::new(2, 2, 1);
+        let st = Stash::pair(
+            HostTensor::vec_f32(vec![0.0; 4]),
+            HostTensor::I32 { data: vec![0; 2], shape: vec![2] },
+        );
+        assert_eq!(st.bytes(), 24);
+        s.put((1, 0), st);
+        assert_eq!(s.resident_bytes, 24);
+        let back = s.take((1, 0));
+        assert!(back.extra.is_some());
+        assert_eq!(s.resident_bytes, 0);
     }
 
     #[test]
     #[should_panic(expected = "over capacity")]
     fn store_enforces_bound() {
-        let mut s = ActivationStore::new(1);
+        let mut s = ActivationStore::new(1, 4, 1);
         s.put((0, 0), t(1));
         s.put((1, 0), t(1));
     }
@@ -209,13 +347,20 @@ mod tests {
     #[test]
     #[should_panic(expected = "not resident")]
     fn take_missing_panics() {
-        let mut s = ActivationStore::new(2);
+        let mut s = ActivationStore::new(2, 8, 1);
         s.take((7, 0));
     }
 
     #[test]
+    #[should_panic(expected = "outside the planned program")]
+    fn out_of_range_key_panics() {
+        let mut s = ActivationStore::new(2, 2, 1);
+        s.put((5, 0), t(1));
+    }
+
+    #[test]
     fn remote_store_round_trip() {
-        let (client, stats_rx) = spawn_remote_store();
+        let (client, stats_rx) = spawn_remote_store(4);
         let payload = t(8);
         client.evict((3, 0), payload.clone());
         client.evict((3, 1), t(8));

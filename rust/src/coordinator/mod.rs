@@ -21,6 +21,13 @@
 //! pure data movement) for 1F1B and zig-zag bases alike, while the
 //! evictor stages' stash high-water drops to the planned bound
 //! (`rust/tests/integration_runtime.rs`).
+//!
+//! The hot path is **zero-alloc in steady state**: tensors move by
+//! handle ([`activation_store::Stash`] slots, bounded channels, the
+//! per-worker [`crate::runtime::BufferPool`] with
+//! [`crate::runtime::Backend::execute_pooled`] donation), pinned by the
+//! counting-allocator test through [`pipeline::train_probed`]
+//! (`rust/tests/alloc_steady_state.rs`).
 
 pub mod activation_store;
 pub mod checkpoint;
@@ -29,9 +36,11 @@ pub mod pipeline;
 pub mod stage_bench;
 pub mod stage_worker;
 
-pub use activation_store::{ActivationStore, HostTensor, StashKey};
+pub use activation_store::{ActivationStore, HostTensor, Stash, StashKey};
 pub use checkpoint::{CheckpointMeta, StageCheckpoint};
 pub use data::SyntheticCorpus;
-pub use pipeline::{plan_schedule, train, RebalancePlan, TrainConfig, TrainResult};
+pub use pipeline::{
+    plan_schedule, train, train_probed, RebalancePlan, TrainConfig, TrainResult,
+};
 pub use stage_bench::{measure_stage, StageTiming};
-pub use stage_worker::StageStats;
+pub use stage_worker::{StageRunner, StageStats};

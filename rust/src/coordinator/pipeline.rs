@@ -17,15 +17,24 @@
 //! capacity-derived per-stage caps
 //! ([`crate::bpipe::capacity_stage_bounds`]) — so every schedule the
 //! simulator sweeps also runs on the REAL pipeline.
+//!
+//! Wiring uses **bounded** channels throughout (ring buffers allocated
+//! once at setup, sized from the microbatch count), so steady-state
+//! sends transfer tensor ownership without touching the heap; a
+//! dedicated feeder thread streams the synthetic corpus under that
+//! backpressure while the leader collects losses.  [`train_probed`] runs
+//! one chosen stage's worker on the *calling* thread — the hook between
+//! steps is how the counting-allocator test and the hot-path bench
+//! observe per-step allocations of a real stage worker.
 
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::time::Instant;
 
 use super::activation_store::{spawn_remote_store, HostTensor};
 use super::checkpoint::CheckpointMeta;
 use super::data::SyntheticCorpus;
-use super::stage_worker::{worker_main, StageStats, WorkerChannels, WorkerConfig};
+use super::stage_worker::{worker_main, StageRunner, StageStats, WorkerChannels, WorkerConfig};
 use crate::config::ExperimentConfig;
 use crate::runtime::{Backend, Manifest};
 use crate::schedule::{validate, Family, OpKind, Schedule};
@@ -151,6 +160,27 @@ pub fn plan_schedule(
 /// Run pipeline-parallel training end to end on backend `B`.  Blocks
 /// until done.
 pub fn train<B: Backend>(cfg: &TrainConfig) -> anyhow::Result<TrainResult> {
+    train_inner::<B>(cfg, None)
+}
+
+/// [`train`], but with stage `probe_stage`'s worker running on the
+/// CALLING thread, `hook(step)` invoked after each of its completed
+/// steps.  This is the instrumentation point for per-worker, per-step
+/// measurements — a thread-local counting allocator sees exactly the
+/// probed stage's hot path (`rust/tests/alloc_steady_state.rs`,
+/// `benches/runtime_hotpath.rs`).
+pub fn train_probed<B: Backend>(
+    cfg: &TrainConfig,
+    probe_stage: u64,
+    hook: &mut dyn FnMut(u64),
+) -> anyhow::Result<TrainResult> {
+    train_inner::<B>(cfg, Some((probe_stage, hook)))
+}
+
+fn train_inner<B: Backend>(
+    cfg: &TrainConfig,
+    mut probe: Option<(u64, &mut dyn FnMut(u64))>,
+) -> anyhow::Result<TrainResult> {
     let manifest = match &cfg.manifest {
         Some(m) => m.clone(),
         None => Manifest::load(&cfg.artifacts_dir)?,
@@ -168,6 +198,9 @@ pub fn train<B: Backend>(cfg: &TrainConfig) -> anyhow::Result<TrainResult> {
     let (schedule, caps) = plan_schedule(cfg.family, p, m, &cfg.rebalance);
     debug_assert_eq!(schedule.chunks, chunks);
     let placement = schedule.placement;
+    if let Some((ps, _)) = &probe {
+        anyhow::ensure!(*ps < p, "probe stage {ps} out of range (p = {p})");
+    }
 
     // resume bookkeeping: cfg.steps is the TOTAL target; a resumed run
     // executes the remainder and fast-forwards the corpus
@@ -197,84 +230,38 @@ pub fn train<B: Backend>(cfg: &TrainConfig) -> anyhow::Result<TrainResult> {
     // -- channel topology ---------------------------------------------------
     // one act + one grad channel per virtual-stage boundary d → d+1,
     // routed to the physical hosts of the two sides (possibly the same
-    // worker, at zig-zag junction stages)
+    // worker, at zig-zag junction stages).  All channels are BOUNDED:
+    // a boundary carries at most m messages per step (`hot_cap` adds
+    // headroom), so the ring never fills in a valid schedule and a send
+    // is an allocation-free slot write.
+    let hot_cap = (m + 1) as usize;
+    let feed_cap = (2 * m) as usize;
     type Slots<T> = Vec<Vec<Option<T>>>;
     let mut act_in: Slots<Receiver<(u64, HostTensor)>> =
         (0..p).map(|_| (0..chunks).map(|_| None).collect()).collect();
-    let mut act_out: Slots<Sender<(u64, HostTensor)>> =
+    let mut act_out: Slots<SyncSender<(u64, HostTensor)>> =
         (0..p).map(|_| (0..chunks).map(|_| None).collect()).collect();
     let mut grad_in: Slots<Receiver<(u64, HostTensor)>> =
         (0..p).map(|_| (0..chunks).map(|_| None).collect()).collect();
-    let mut grad_out: Slots<Sender<(u64, HostTensor)>> =
+    let mut grad_out: Slots<SyncSender<(u64, HostTensor)>> =
         (0..p).map(|_| (0..chunks).map(|_| None).collect()).collect();
     for d in 0..vp - 1 {
         let (src_s, src_c) = (placement.host_stage(p, d) as usize, (d / p) as usize);
         let (dst_s, dst_c) = (placement.host_stage(p, d + 1) as usize, ((d + 1) / p) as usize);
-        let (atx, arx) = channel();
+        let (atx, arx) = sync_channel(hot_cap);
         act_out[src_s][src_c] = Some(atx);
         act_in[dst_s][dst_c] = Some(arx);
-        let (gtx, grx) = channel();
+        let (gtx, grx) = sync_channel(hot_cap);
         grad_out[dst_s][dst_c] = Some(gtx);
         grad_in[src_s][src_c] = Some(grx);
     }
     let first_host = placement.host_stage(p, 0);
     let last_host = placement.host_stage(p, vp - 1);
-    let (tok_tx, tok_rx) = channel();
-    let (tgt_tx, tgt_rx) = channel();
-    let (loss_tx, loss_rx) = channel();
+    let (tok_tx, tok_rx) = sync_channel(feed_cap);
+    let (tgt_tx, tgt_rx) = sync_channel(feed_cap);
+    let (loss_tx, loss_rx) = sync_channel((2 * m) as usize);
 
-    // -- workers -------------------------------------------------------------
-    let mut handles = Vec::new();
-    let mut tok_rx = Some(tok_rx);
-    let mut tgt_rx = Some(tgt_rx);
-    for s in 0..p {
-        let needs_store = schedule
-            .program(s)
-            .ops
-            .iter()
-            .any(|o| matches!(o.kind, OpKind::Evict | OpKind::Load));
-        let remote = if needs_store {
-            let (client, _stats_rx) = spawn_remote_store();
-            Some(client)
-        } else {
-            None
-        };
-        let wcfg = WorkerConfig {
-            stage: s,
-            stages: p,
-            chunks,
-            placement,
-            steps: run_steps,
-            microbatches: m,
-            lr: cfg.lr,
-            seed: cfg.seed as i32,
-            manifest: manifest.clone(),
-            program: schedule.program(s).clone(),
-            capacity: caps[s as usize],
-            checkpoint_dir: cfg.checkpoint_dir.clone(),
-            checkpoint_every: cfg.checkpoint_every,
-            resume: cfg.resume,
-            start_step,
-        };
-        let wch = WorkerChannels {
-            act_in: std::mem::take(&mut act_in[s as usize]),
-            act_out: std::mem::take(&mut act_out[s as usize]),
-            grad_in: std::mem::take(&mut grad_in[s as usize]),
-            grad_out: std::mem::take(&mut grad_out[s as usize]),
-            tokens_in: if s == first_host { tok_rx.take() } else { None },
-            targets_in: if s == last_host { tgt_rx.take() } else { None },
-            loss_out: if s == last_host { Some(loss_tx.clone()) } else { None },
-            remote,
-        };
-        handles.push(
-            std::thread::Builder::new()
-                .name(format!("stage-{s}"))
-                .spawn(move || worker_main::<B>(wcfg, wch))?,
-        );
-    }
-    drop(loss_tx);
-
-    // -- data feeding ----------------------------------------------------------
+    // -- data feeding state (runs on its own thread under backpressure) -----
     let spec = &manifest.spec;
     let (b, s_len) = (spec.b as usize, spec.s as usize);
     let mut corpus = SyntheticCorpus::new(spec.v as u32, cfg.seed);
@@ -283,51 +270,130 @@ pub fn train<B: Backend>(cfg: &TrainConfig) -> anyhow::Result<TrainResult> {
     for _ in 0..start_step * m {
         corpus.microbatch(b, s_len);
     }
-    for _step in 0..run_steps {
-        for mb in 0..m {
-            let (tokens, targets) = corpus.microbatch(b, s_len);
-            tok_tx
-                .send((mb, HostTensor::I32 { data: tokens, shape: shape.clone() }))
-                .map_err(|_| anyhow::anyhow!("first stage died early"))?;
-            tgt_tx
-                .send((mb, HostTensor::I32 { data: targets, shape: shape.clone() }))
-                .map_err(|_| anyhow::anyhow!("last stage died early"))?;
-        }
-    }
-    drop(tok_tx);
-    drop(tgt_tx);
 
-    // -- loss collection ---------------------------------------------------------
-    let mut losses = Vec::with_capacity(run_steps as usize);
-    let mut step_times = Vec::with_capacity(run_steps as usize);
-    let mut t_prev = Instant::now();
-    for step in 1..=run_steps {
-        let mut sum = 0f32;
-        for _ in 0..m {
-            let (got_step, _mb, loss) =
-                loss_rx.recv().map_err(|_| anyhow::anyhow!("pipeline died mid-step {step}"))?;
-            anyhow::ensure!(got_step == step, "loss for step {got_step}, expected {step}");
-            sum += loss;
-        }
-        losses.push(sum / m as f32);
-        step_times.push(t_prev.elapsed().as_secs_f64());
-        t_prev = Instant::now();
-        if cfg.log_every > 0 && step % cfg.log_every == 0 {
-            println!(
-                "step {:>4}/{}  loss {:.4}  ({:.2}s/step)",
-                start_step + step,
-                cfg.steps,
-                losses.last().unwrap(),
-                step_times.last().unwrap()
-            );
-        }
-    }
+    let mut stage_stats_slots: Vec<Option<StageStats>> = (0..p).map(|_| None).collect();
+    let (losses, step_times) =
+        std::thread::scope(|scope| -> anyhow::Result<(Vec<f32>, Vec<f64>)> {
+            // -- workers ----------------------------------------------------
+            let mut handles = Vec::new();
+            let mut probed_work: Option<(WorkerConfig, WorkerChannels)> = None;
+            let mut tok_rx = Some(tok_rx);
+            let mut tgt_rx = Some(tgt_rx);
+            for s in 0..p {
+                let needs_store = schedule
+                    .program(s)
+                    .ops
+                    .iter()
+                    .any(|o| matches!(o.kind, OpKind::Evict | OpKind::Load));
+                let remote = if needs_store {
+                    let (client, _stats_rx) = spawn_remote_store((m * chunks) as usize);
+                    Some(client)
+                } else {
+                    None
+                };
+                let wcfg = WorkerConfig {
+                    stage: s,
+                    stages: p,
+                    chunks,
+                    placement,
+                    steps: run_steps,
+                    microbatches: m,
+                    lr: cfg.lr,
+                    seed: cfg.seed as i32,
+                    manifest: manifest.clone(),
+                    program: schedule.program(s).clone(),
+                    capacity: caps[s as usize],
+                    checkpoint_dir: cfg.checkpoint_dir.clone(),
+                    checkpoint_every: cfg.checkpoint_every,
+                    resume: cfg.resume,
+                    start_step,
+                };
+                let wch = WorkerChannels {
+                    act_in: std::mem::take(&mut act_in[s as usize]),
+                    act_out: std::mem::take(&mut act_out[s as usize]),
+                    grad_in: std::mem::take(&mut grad_in[s as usize]),
+                    grad_out: std::mem::take(&mut grad_out[s as usize]),
+                    tokens_in: if s == first_host { tok_rx.take() } else { None },
+                    targets_in: if s == last_host { tgt_rx.take() } else { None },
+                    loss_out: if s == last_host { Some(loss_tx.clone()) } else { None },
+                    remote,
+                };
+                if probe.as_ref().map(|(ps, _)| *ps == s).unwrap_or(false) {
+                    probed_work = Some((wcfg, wch));
+                    handles.push(None);
+                } else {
+                    handles.push(Some(
+                        std::thread::Builder::new()
+                            .name(format!("stage-{s}"))
+                            .spawn_scoped(scope, move || worker_main::<B>(wcfg, wch))?,
+                    ));
+                }
+            }
+            drop(loss_tx);
 
-    // -- join ------------------------------------------------------------------
-    let mut stage_stats = Vec::new();
-    for h in handles {
-        stage_stats.push(h.join().map_err(|e| anyhow::anyhow!("worker panicked: {e:?}"))??);
-    }
+            // -- data feeder ------------------------------------------------
+            let feeder = std::thread::Builder::new().name("bpipe-feeder".into()).spawn_scoped(
+                scope,
+                move || -> anyhow::Result<()> {
+                    for _step in 0..run_steps {
+                        for mb in 0..m {
+                            let (tokens, targets) = corpus.microbatch(b, s_len);
+                            tok_tx
+                                .send((mb, HostTensor::I32 { data: tokens, shape: shape.clone() }))
+                                .map_err(|_| anyhow::anyhow!("first stage died early"))?;
+                            tgt_tx
+                                .send((mb, HostTensor::I32 {
+                                    data: targets,
+                                    shape: shape.clone(),
+                                }))
+                                .map_err(|_| anyhow::anyhow!("last stage died early"))?;
+                        }
+                    }
+                    Ok(())
+                },
+            )?;
+
+            // -- loss collection (probed stage runs here, if any) -----------
+            let collected = if let Some((ps, hook)) = probe.take() {
+                let collector =
+                    std::thread::Builder::new().name("bpipe-collector".into()).spawn_scoped(
+                        scope,
+                        move || {
+                            collect_losses(
+                                loss_rx,
+                                run_steps,
+                                m,
+                                cfg.log_every,
+                                cfg.steps,
+                                start_step,
+                            )
+                        },
+                    )?;
+                let (wcfg, wch) = probed_work.take().expect("probed stage was planned");
+                let mut runner = StageRunner::<B>::new(wcfg, wch)?;
+                for step in 1..=run_steps {
+                    runner.run_step(step)?;
+                    hook(step);
+                }
+                stage_stats_slots[ps as usize] = Some(runner.finish()?);
+                collector.join().map_err(|e| anyhow::anyhow!("collector panicked: {e:?}"))??
+            } else {
+                collect_losses(loss_rx, run_steps, m, cfg.log_every, cfg.steps, start_step)?
+            };
+
+            // -- join -------------------------------------------------------
+            for (s, h) in handles.into_iter().enumerate() {
+                if let Some(h) = h {
+                    stage_stats_slots[s] =
+                        Some(h.join().map_err(|e| anyhow::anyhow!("worker panicked: {e:?}"))??);
+                }
+            }
+            feeder.join().map_err(|e| anyhow::anyhow!("feeder panicked: {e:?}"))??;
+            Ok(collected)
+        })?;
+
+    let stage_stats: Vec<StageStats> =
+        stage_stats_slots.into_iter().map(|s| s.expect("every stage reports stats")).collect();
     if let Some(dir) = &cfg.checkpoint_dir {
         CheckpointMeta {
             steps_done: start_step + run_steps,
@@ -347,9 +413,47 @@ pub fn train<B: Backend>(cfg: &TrainConfig) -> anyhow::Result<TrainResult> {
     })
 }
 
+/// Drain `m` losses per step from the last stage, averaging per step and
+/// timing the leader-observed step wall clock.
+fn collect_losses(
+    loss_rx: Receiver<(u64, u64, f32)>,
+    run_steps: u64,
+    m: u64,
+    log_every: u64,
+    total_steps: u64,
+    start_step: u64,
+) -> anyhow::Result<(Vec<f32>, Vec<f64>)> {
+    let mut losses = Vec::with_capacity(run_steps as usize);
+    let mut step_times = Vec::with_capacity(run_steps as usize);
+    let mut t_prev = Instant::now();
+    for step in 1..=run_steps {
+        let mut sum = 0f32;
+        for _ in 0..m {
+            let (got_step, _mb, loss) =
+                loss_rx.recv().map_err(|_| anyhow::anyhow!("pipeline died mid-step {step}"))?;
+            anyhow::ensure!(got_step == step, "loss for step {got_step}, expected {step}");
+            sum += loss;
+        }
+        losses.push(sum / m as f32);
+        step_times.push(t_prev.elapsed().as_secs_f64());
+        t_prev = Instant::now();
+        if log_every > 0 && step % log_every == 0 {
+            println!(
+                "step {:>4}/{}  loss {:.4}  ({:.2}s/step)",
+                start_step + step,
+                total_steps,
+                losses.last().unwrap(),
+                step_times.last().unwrap()
+            );
+        }
+    }
+    Ok((losses, step_times))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::SimBackend;
     use crate::schedule::ScheduleKind;
 
     #[test]
@@ -412,5 +516,31 @@ mod tests {
             assert_eq!(caps.len(), 4);
             assert!(caps.iter().all(|&c| c >= 1));
         }
+    }
+
+    #[test]
+    fn probed_training_matches_unprobed_and_hooks_every_step() {
+        let cfg = TrainConfig {
+            manifest: Some(Manifest::synthetic(4, 16, 8, 2, 64, &[1, 2])),
+            steps: 3,
+            microbatches: 4,
+            lr: 2e-3,
+            seed: 3,
+            rebalance: RebalancePlan::Uniform { bound: None },
+            ..TrainConfig::default()
+        };
+        let plain = train::<SimBackend>(&cfg).unwrap();
+        let mut seen = Vec::new();
+        let probed = train_probed::<SimBackend>(&cfg, 0, &mut |s| seen.push(s)).unwrap();
+        assert_eq!(seen, vec![1, 2, 3], "hook must fire once per step");
+        assert_eq!(plain.losses, probed.losses, "probing must not change numerics");
+        let stages: Vec<u64> = probed.stage_stats.iter().map(|s| s.stage).collect();
+        assert_eq!(stages, vec![0, 1, 2, 3], "stats stay in stage order");
+        assert_eq!(
+            plain.stage_stats[0].stash_high_water,
+            probed.stage_stats[0].stash_high_water
+        );
+        // out-of-range probe stage is rejected up front
+        assert!(train_probed::<SimBackend>(&cfg, 9, &mut |_| {}).is_err());
     }
 }

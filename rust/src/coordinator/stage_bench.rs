@@ -9,7 +9,7 @@
 
 use std::time::Instant;
 
-use crate::runtime::{Backend, HostTensor, Manifest};
+use crate::runtime::{Arg, Backend, BufferPool, HostTensor, Manifest};
 
 /// Timing of one stage at one microbatch size.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -48,17 +48,32 @@ pub fn measure_stage<B: Backend>(
     let x: Vec<f32> = (0..act_len).map(|i| ((i * 40503) % 997) as f32 * 1e-3 - 0.5).collect();
     let shape = vec![b as i64, spec.s as i64, spec.h as i64];
     let params_buf = backend.upload(&HostTensor::vec_f32(params))?;
-    let x_buf = backend.upload(&HostTensor::F32 { data: x.clone(), shape: shape.clone() })?;
-    let dy_buf = backend.upload(&HostTensor::F32 { data: x, shape })?;
+    let x_t = HostTensor::F32 { data: x.clone(), shape: shape.clone() };
+    let dy_t = HostTensor::F32 { data: x, shape };
 
-    // warmup (first execution pays one-time costs)
-    let _ = backend.execute(&fwd, &[&params_buf, &x_buf])?;
-    let _ = backend.execute(&bwd, &[&params_buf, &x_buf, &dy_buf])?;
+    // the measured loop runs the runtime's own discipline: borrowed
+    // inputs, pooled outputs recycled every iteration (the warm-up
+    // iteration pays the pool's one-time allocations)
+    let mut pool = BufferPool::new();
+    let mut out = Vec::new();
+    let once = |pool: &mut BufferPool, out: &mut Vec<HostTensor>| -> anyhow::Result<()> {
+        let mut fwd_args = [Arg::Borrowed(&x_t)];
+        backend.execute_pooled(&fwd, Some(&params_buf), &mut fwd_args, pool, out)?;
+        for t in out.drain(..) {
+            pool.give(t);
+        }
+        let mut bwd_args = [Arg::Borrowed(&x_t), Arg::Borrowed(&dy_t)];
+        backend.execute_pooled(&bwd, Some(&params_buf), &mut bwd_args, pool, out)?;
+        for t in out.drain(..) {
+            pool.give(t);
+        }
+        Ok(())
+    };
+    once(&mut pool, &mut out)?; // warmup (first execution pays one-time costs)
 
     let t0 = Instant::now();
     for _ in 0..iters {
-        let _y = backend.execute(&fwd, &[&params_buf, &x_buf])?;
-        let _g = backend.execute(&bwd, &[&params_buf, &x_buf, &dy_buf])?;
+        once(&mut pool, &mut out)?;
     }
     let t_b = t0.elapsed().as_secs_f64() / iters.max(1) as f64;
 

@@ -16,14 +16,31 @@
 //! rebalance transform's bound is a per-stage resident count across
 //! chunks), and the chunk whose virtual stage is 0 / `vp − 1` consumes
 //! the leader's token / target streams.
+//!
+//! ## The zero-alloc hot path
+//!
+//! The step loop lives in [`StageRunner`] and moves every tensor **by
+//! handle**: received activations are donated into the backend
+//! ([`Backend::execute_pooled`]), outputs draw from the worker's
+//! [`BufferPool`], stashes are fixed-size [`Stash`] handles in a
+//! preallocated slot store, channel sends transfer ownership through
+//! bounded ring buffers, and the Adam flush donates `(w, g, m, v)` so
+//! the optimizer updates in place — no `grad_acc` clone, no parameter
+//! re-upload allocation ([`Backend::upload_into`]).  After the warm-up
+//! step populates the pool, a steady-state step performs **zero heap
+//! allocations** on this thread — pinned by the counting-allocator test
+//! in `rust/tests/alloc_steady_state.rs` via
+//! [`crate::coordinator::pipeline::train_probed`].
 
 use std::path::PathBuf;
-use std::sync::mpsc::{Receiver, Sender};
+use std::sync::mpsc::{Receiver, SyncSender};
 use std::time::Instant;
 
-use super::activation_store::{ActivationStore, HostTensor, RemoteStoreClient};
+use super::activation_store::{
+    spin_recv, spin_send, ActivationStore, HostTensor, RemoteStoreClient, Stash,
+};
 use super::checkpoint::StageCheckpoint;
-use crate::runtime::{Backend, Manifest};
+use crate::runtime::{Arg, Backend, BufferPool, Manifest};
 use crate::schedule::{OpKind, Placement, StageProgram};
 
 /// Static configuration for one worker.
@@ -57,18 +74,20 @@ pub struct WorkerConfig {
 
 /// Channel endpoints for one worker, indexed by hosted chunk (`None`
 /// where the topology has no edge — chunk boundaries at the pipeline
-/// ends, or streams belonging to another stage).
+/// ends, or streams belonging to another stage).  Senders are bounded
+/// ([`SyncSender`]): the ring buffers are allocated at wiring time, so a
+/// steady-state send is a slot write, not an allocation.
 pub struct WorkerChannels {
     pub act_in: Vec<Option<Receiver<(u64, HostTensor)>>>,
-    pub act_out: Vec<Option<Sender<(u64, HostTensor)>>>,
+    pub act_out: Vec<Option<SyncSender<(u64, HostTensor)>>>,
     pub grad_in: Vec<Option<Receiver<(u64, HostTensor)>>>,
-    pub grad_out: Vec<Option<Sender<(u64, HostTensor)>>>,
+    pub grad_out: Vec<Option<SyncSender<(u64, HostTensor)>>>,
     /// leader → host of virtual stage 0: input tokens per microbatch
     pub tokens_in: Option<Receiver<(u64, HostTensor)>>,
     /// leader → host of the last virtual stage: target tokens
     pub targets_in: Option<Receiver<(u64, HostTensor)>>,
     /// host of the last virtual stage → leader: (step, microbatch, loss)
-    pub loss_out: Option<Sender<(u64, u64, f32)>>,
+    pub loss_out: Option<SyncSender<(u64, u64, f32)>>,
     /// BPipe pair store (present iff the program contains Evict/Load)
     pub remote: Option<RemoteStoreClient>,
 }
@@ -88,6 +107,10 @@ pub struct StageStats {
     pub evictions: u64,
     pub stash_high_water: usize,
     pub stash_high_water_bytes: usize,
+    /// buffer-pool takes served from a free list (steady state)
+    pub pool_hits: u64,
+    /// buffer-pool takes that allocated fresh (warm-up)
+    pub pool_misses: u64,
 }
 
 fn recv_expect(
@@ -96,8 +119,8 @@ fn recv_expect(
     what: &str,
     stage: u64,
 ) -> anyhow::Result<HostTensor> {
-    let (got, t) = rx
-        .recv()
+    // busy-polled so a steady-state wait never touches the allocator
+    let (got, t) = spin_recv(rx)
         .map_err(|_| anyhow::anyhow!("stage {stage}: {what} channel closed early"))?;
     anyhow::ensure!(got == mb, "stage {stage}: expected {what} for mb {mb}, got {got}");
     Ok(t)
@@ -117,84 +140,141 @@ struct ChunkState<B: Backend> {
     m_state: HostTensor,
     v_state: HostTensor,
     params_buf: B::Buffer,
-    grad_acc: Vec<f32>,
+    grad_acc: HostTensor,
 }
 
-/// Worker entry point; runs `cfg.steps` iterations of `cfg.program`.
-pub fn worker_main<B: Backend>(
+/// Accumulate a microbatch gradient into the chunk's running mean.
+fn accumulate(acc: &mut HostTensor, dflat: &HostTensor, inv_m: f32) -> anyhow::Result<()> {
+    for (a, g) in acc.f32s_mut()?.iter_mut().zip(dflat.f32s()?.iter()) {
+        *a += g * inv_m;
+    }
+    Ok(())
+}
+
+/// The per-stage step executor: [`worker_main`] drives it to completion
+/// on a worker thread, and `pipeline::train_probed` drives it on the
+/// caller's thread so tests/benches can observe each step (e.g. count
+/// heap allocations between steps).
+pub struct StageRunner<B: Backend> {
     cfg: WorkerConfig,
     ch: WorkerChannels,
-) -> anyhow::Result<StageStats> {
-    let backend = B::create(&cfg.manifest)?;
-    let manifest = &cfg.manifest;
-    let spec = &manifest.spec;
-    let vp = cfg.stages * cfg.chunks;
-    anyhow::ensure!(
-        spec.stages == vp,
-        "manifest describes {} virtual stages, schedule needs {vp}",
-        spec.stages
-    );
+    backend: B,
+    chunks: Vec<ChunkState<B>>,
+    stash: ActivationStore,
+    pool: BufferPool,
+    outs: Vec<HostTensor>,
+    step_t: HostTensor,
+    lr_t: HostTensor,
+    inv_m: f32,
+    stats: StageStats,
+}
 
-    // -- per-chunk state ----------------------------------------------------
-    let t0 = Instant::now();
-    let mut chunks: Vec<ChunkState<B>> = Vec::with_capacity(cfg.chunks as usize);
-    for c in 0..cfg.chunks {
-        let virt = cfg.placement.virtual_stage(cfg.stages, cfg.stage, c);
-        let kind = manifest.stage_kind(virt);
-        let n_params = manifest.param_count(kind)? as usize;
-        // the last virtual stage computes loss+grads in one bwd artifact
-        let fwd = if kind == "last" {
-            None
-        } else {
-            Some(backend.compile(manifest, &format!("{kind}_fwd"))?)
+impl<B: Backend> StageRunner<B> {
+    pub fn new(cfg: WorkerConfig, ch: WorkerChannels) -> anyhow::Result<Self> {
+        let backend = B::create(&cfg.manifest)?;
+        let manifest = &cfg.manifest;
+        let spec = &manifest.spec;
+        let vp = cfg.stages * cfg.chunks;
+        anyhow::ensure!(
+            spec.stages == vp,
+            "manifest describes {} virtual stages, schedule needs {vp}",
+            spec.stages
+        );
+
+        // -- per-chunk state ------------------------------------------------
+        let t0 = Instant::now();
+        let mut chunks: Vec<ChunkState<B>> = Vec::with_capacity(cfg.chunks as usize);
+        for c in 0..cfg.chunks {
+            let virt = cfg.placement.virtual_stage(cfg.stages, cfg.stage, c);
+            let kind = manifest.stage_kind(virt);
+            let n_params = manifest.param_count(kind)? as usize;
+            // the last virtual stage computes loss+grads in one bwd artifact
+            let fwd = if kind == "last" {
+                None
+            } else {
+                Some(backend.compile(manifest, &format!("{kind}_fwd"))?)
+            };
+            let bwd = backend.compile(manifest, &format!("{kind}_bwd"))?;
+            let adam = backend.compile(manifest, &format!("adam_{kind}"))?;
+            let (params, m_state, v_state) = if cfg.resume {
+                let dir = cfg.checkpoint_dir.as_ref().expect("resume without checkpoint dir");
+                let ck = StageCheckpoint::load(dir, virt, n_params)?;
+                (
+                    HostTensor::vec_f32(ck.params),
+                    HostTensor::vec_f32(ck.m),
+                    HostTensor::vec_f32(ck.v),
+                )
+            } else {
+                let init = backend.compile(manifest, &format!("{kind}_init"))?;
+                let seed = HostTensor::scalar_i32(cfg.seed + virt as i32);
+                let mut outs = backend.execute_host(&init, &[&seed])?;
+                anyhow::ensure!(outs.len() == 1, "{kind}_init: expected 1 output");
+                let params = outs.pop().unwrap();
+                anyhow::ensure!(params.len() == n_params, "{kind}_init returned a wrong size");
+                let zeros = HostTensor::vec_f32(vec![0f32; n_params]);
+                (params, zeros.clone(), zeros)
+            };
+            let params_buf = backend.upload(&params)?;
+            chunks.push(ChunkState {
+                virt,
+                kind,
+                n_params,
+                fwd,
+                bwd,
+                adam,
+                params,
+                m_state,
+                v_state,
+                params_buf,
+                grad_acc: HostTensor::vec_f32(vec![0f32; n_params]),
+            });
+        }
+        let compile_s = t0.elapsed().as_secs_f64();
+
+        let stats = StageStats {
+            stage: cfg.stage,
+            param_count: chunks.iter().map(|c| c.n_params).sum(),
+            compile_s,
+            ..Default::default()
         };
-        let bwd = backend.compile(manifest, &format!("{kind}_bwd"))?;
-        let adam = backend.compile(manifest, &format!("adam_{kind}"))?;
-        let (params, m_state, v_state) = if cfg.resume {
-            let dir = cfg.checkpoint_dir.as_ref().expect("resume without checkpoint dir");
-            let ck = StageCheckpoint::load(dir, virt, n_params)?;
-            (
-                HostTensor::vec_f32(ck.params),
-                HostTensor::vec_f32(ck.m),
-                HostTensor::vec_f32(ck.v),
-            )
-        } else {
-            let init = backend.compile(manifest, &format!("{kind}_init"))?;
-            let seed = HostTensor::scalar_i32(cfg.seed + virt as i32);
-            let mut outs = backend.execute_host(&init, &[&seed])?;
-            anyhow::ensure!(outs.len() == 1, "{kind}_init: expected 1 output");
-            let params = outs.pop().unwrap();
-            anyhow::ensure!(params.len() == n_params, "{kind}_init returned a wrong size");
-            let zeros = HostTensor::vec_f32(vec![0f32; n_params]);
-            (params, zeros.clone(), zeros)
-        };
-        let params_buf = backend.upload(&params)?;
-        chunks.push(ChunkState {
-            virt,
-            kind,
-            n_params,
-            fwd,
-            bwd,
-            adam,
-            params,
-            m_state,
-            v_state,
-            params_buf,
-            grad_acc: vec![0f32; n_params],
-        });
+        let inv_m = 1.0f32 / cfg.microbatches as f32;
+        let stash = ActivationStore::new(cfg.capacity, cfg.microbatches, cfg.chunks);
+        // generous free-list bound: every in-flight stash and boundary
+        // message of this worker fits with room to spare
+        let pool_limit = (4 * cfg.microbatches * cfg.chunks) as usize + 32;
+        Ok(StageRunner {
+            backend,
+            chunks,
+            stash,
+            pool: BufferPool::with_limit(pool_limit),
+            outs: Vec::with_capacity(4),
+            step_t: HostTensor::scalar_i32(0),
+            lr_t: HostTensor::scalar_f32(cfg.lr),
+            inv_m,
+            stats,
+            cfg,
+            ch,
+        })
     }
-    let compile_s = t0.elapsed().as_secs_f64();
 
-    let inv_m = 1.0f32 / cfg.microbatches as f32;
-    let mut stash = ActivationStore::new(cfg.capacity);
-    let mut stats = StageStats {
-        stage: cfg.stage,
-        param_count: chunks.iter().map(|c| c.n_params).sum(),
-        compile_s,
-        ..Default::default()
-    };
+    /// Execute one full training step (program ops + optimizer flush +
+    /// checkpoint). `step` is 1-based within this run.
+    pub fn run_step(&mut self, step: u64) -> anyhow::Result<()> {
+        let StageRunner {
+            cfg,
+            ch,
+            backend,
+            chunks,
+            stash,
+            pool,
+            outs,
+            step_t,
+            lr_t,
+            inv_m,
+            stats,
+        } = self;
+        let inv_m = *inv_m;
 
-    for step in 1..=cfg.steps {
         for op in &cfg.program.ops {
             let ci = op.chunk as usize;
             let key = (op.mb, op.chunk);
@@ -216,7 +296,7 @@ pub fn worker_main<B: Backend>(
                             "targets",
                             cfg.stage,
                         )?;
-                        stash.put(key, vec![x, tgt]);
+                        stash.put(key, Stash::pair(x, tgt));
                     } else {
                         let x = if cs.virt == 0 {
                             recv_expect(
@@ -233,46 +313,59 @@ pub fn worker_main<B: Backend>(
                                 cfg.stage,
                             )?
                         };
-                        let x_buf = backend.upload(&x)?;
-                        let y = backend.execute1(
+                        // x stays stashed for the backward: borrowed, and
+                        // y comes out of the pool
+                        let mut args = [Arg::Borrowed(&x)];
+                        backend.execute_pooled(
                             cs.fwd.as_ref().expect("non-last chunk has a fwd exe"),
-                            &[&cs.params_buf, &x_buf],
+                            Some(&cs.params_buf),
+                            &mut args,
+                            pool,
+                            outs,
                         )?;
-                        stash.put(key, vec![x]);
-                        ch.act_out[ci]
-                            .as_ref()
-                            .expect("non-last chunk without act_out")
-                            .send((op.mb, y))
-                            .map_err(|_| anyhow::anyhow!("act_out closed"))?;
+                        anyhow::ensure!(outs.len() == 1, "fwd: expected 1 output");
+                        let y = outs.pop().unwrap();
+                        stash.put(key, Stash::single(x));
+                        spin_send(
+                            ch.act_out[ci].as_ref().expect("non-last chunk without act_out"),
+                            (op.mb, y),
+                        )
+                        .map_err(|_| anyhow::anyhow!("act_out closed"))?;
                     }
                     stats.fwd_s += t.elapsed().as_secs_f64();
                 }
                 OpKind::Bwd => {
                     let t = Instant::now();
                     let cs = &mut chunks[ci];
-                    let dflat = match cs.kind {
+                    match cs.kind {
                         "last" => {
-                            let ts = stash.take(key);
-                            let x_buf = backend.upload(&ts[0])?;
-                            let tgt_buf = backend.upload(&ts[1])?;
-                            let outs =
-                                backend.execute(&cs.bwd, &[&cs.params_buf, &x_buf, &tgt_buf])?;
+                            let st = stash.take(key);
+                            let tgt = st.extra.expect("last stash holds (x, targets)");
+                            let mut args = [Arg::Donated(st.x), Arg::Donated(tgt)];
+                            backend.execute_pooled(
+                                &cs.bwd,
+                                Some(&cs.params_buf),
+                                &mut args,
+                                pool,
+                                outs,
+                            )?;
                             anyhow::ensure!(outs.len() == 3, "last_bwd: expected (dx, dw, loss)");
-                            let mut it = outs.into_iter();
-                            let dx = it.next().unwrap();
-                            let dflat = it.next().unwrap();
-                            let loss = it.next().unwrap();
-                            ch.grad_out[ci]
-                                .as_ref()
-                                .expect("last chunk without grad_out")
-                                .send((op.mb, dx))
-                                .map_err(|_| anyhow::anyhow!("grad_out closed"))?;
-                            ch.loss_out
-                                .as_ref()
-                                .expect("last chunk without loss_out")
-                                .send((step, op.mb, loss.f32s()?[0]))
-                                .map_err(|_| anyhow::anyhow!("loss_out closed"))?;
-                            dflat
+                            let loss = outs.pop().unwrap();
+                            let dflat = outs.pop().unwrap();
+                            let dx = outs.pop().unwrap();
+                            spin_send(
+                                ch.grad_out[ci].as_ref().expect("last chunk without grad_out"),
+                                (op.mb, dx),
+                            )
+                            .map_err(|_| anyhow::anyhow!("grad_out closed"))?;
+                            spin_send(
+                                ch.loss_out.as_ref().expect("last chunk without loss_out"),
+                                (step, op.mb, loss.f32s()?[0]),
+                            )
+                            .map_err(|_| anyhow::anyhow!("loss_out closed"))?;
+                            pool.give(loss);
+                            accumulate(&mut cs.grad_acc, &dflat, inv_m)?;
+                            pool.give(dflat);
                         }
                         "mid" => {
                             let dy = recv_expect(
@@ -281,21 +374,25 @@ pub fn worker_main<B: Backend>(
                                 "grad",
                                 cfg.stage,
                             )?;
-                            let ts = stash.take(key);
-                            let x_buf = backend.upload(&ts[0])?;
-                            let dy_buf = backend.upload(&dy)?;
-                            let outs =
-                                backend.execute(&cs.bwd, &[&cs.params_buf, &x_buf, &dy_buf])?;
+                            let st = stash.take(key);
+                            let mut args = [Arg::Donated(st.x), Arg::Donated(dy)];
+                            backend.execute_pooled(
+                                &cs.bwd,
+                                Some(&cs.params_buf),
+                                &mut args,
+                                pool,
+                                outs,
+                            )?;
                             anyhow::ensure!(outs.len() == 2, "mid_bwd: expected (dx, dw)");
-                            let mut it = outs.into_iter();
-                            let dx = it.next().unwrap();
-                            let dflat = it.next().unwrap();
-                            ch.grad_out[ci]
-                                .as_ref()
-                                .expect("mid chunk without grad_out")
-                                .send((op.mb, dx))
-                                .map_err(|_| anyhow::anyhow!("grad_out closed"))?;
-                            dflat
+                            let dflat = outs.pop().unwrap();
+                            let dx = outs.pop().unwrap();
+                            spin_send(
+                                ch.grad_out[ci].as_ref().expect("mid chunk without grad_out"),
+                                (op.mb, dx),
+                            )
+                            .map_err(|_| anyhow::anyhow!("grad_out closed"))?;
+                            accumulate(&mut cs.grad_acc, &dflat, inv_m)?;
+                            pool.give(dflat);
                         }
                         _ => {
                             // "first": virtual stage 0 — nothing upstream
@@ -305,53 +402,65 @@ pub fn worker_main<B: Backend>(
                                 "grad",
                                 cfg.stage,
                             )?;
-                            let ts = stash.take(key);
-                            let tok_buf = backend.upload(&ts[0])?;
-                            let dy_buf = backend.upload(&dy)?;
-                            let outs =
-                                backend.execute(&cs.bwd, &[&cs.params_buf, &tok_buf, &dy_buf])?;
+                            let st = stash.take(key);
+                            let mut args = [Arg::Donated(st.x), Arg::Donated(dy)];
+                            backend.execute_pooled(
+                                &cs.bwd,
+                                Some(&cs.params_buf),
+                                &mut args,
+                                pool,
+                                outs,
+                            )?;
                             anyhow::ensure!(outs.len() == 1, "first_bwd: expected (dw,)");
-                            outs.into_iter().next().unwrap()
+                            let dflat = outs.pop().unwrap();
+                            accumulate(&mut cs.grad_acc, &dflat, inv_m)?;
+                            pool.give(dflat);
                         }
-                    };
-                    for (a, g) in cs.grad_acc.iter_mut().zip(dflat.f32s()?.iter()) {
-                        *a += g * inv_m;
                     }
                     stats.bwd_s += t.elapsed().as_secs_f64();
                 }
                 OpKind::Evict => {
-                    let tensors = stash.take(key);
-                    ch.remote.as_ref().expect("evict without remote store").evict(key, tensors);
+                    let st = stash.take(key);
+                    ch.remote.as_ref().expect("evict without remote store").evict(key, st);
                     stats.evictions += 1;
                 }
                 OpKind::Load => {
                     let t = Instant::now();
-                    let tensors =
-                        ch.remote.as_ref().expect("load without remote store").load(key);
+                    let st = ch.remote.as_ref().expect("load without remote store").load(key);
                     stats.load_wait_s += t.elapsed().as_secs_f64();
-                    stash.put(key, tensors);
+                    stash.put(key, st);
                 }
             }
         }
         anyhow::ensure!(stash.is_empty(), "stage {}: stashes leaked across steps", cfg.stage);
 
-        // optimizer step, per hosted chunk
+        // optimizer flush, per hosted chunk: donate (w, g, m, v) — Adam
+        // updates in place and the spare state buffer comes back through
+        // the pool as the next zeroed accumulator (no grad_acc clone)
         let t = Instant::now();
-        for cs in &mut chunks {
-            let g = HostTensor::vec_f32(cs.grad_acc.clone());
-            let step_t = HostTensor::scalar_i32((cfg.start_step + step) as i32);
-            let lr_t = HostTensor::scalar_f32(cfg.lr);
-            let outs = backend.execute_host(
-                &cs.adam,
-                &[&cs.params, &g, &cs.m_state, &cs.v_state, &step_t, &lr_t],
-            )?;
+        step_t.set_scalar_i32((cfg.start_step + step) as i32)?;
+        for cs in chunks.iter_mut() {
+            let w = std::mem::replace(&mut cs.params, HostTensor::empty_f32());
+            let g = std::mem::replace(&mut cs.grad_acc, HostTensor::empty_f32());
+            let m = std::mem::replace(&mut cs.m_state, HostTensor::empty_f32());
+            let v = std::mem::replace(&mut cs.v_state, HostTensor::empty_f32());
+            let mut args = [
+                Arg::Donated(w),
+                Arg::Donated(g),
+                Arg::Donated(m),
+                Arg::Donated(v),
+                Arg::Borrowed(&*step_t),
+                Arg::Borrowed(&*lr_t),
+            ];
+            backend.execute_pooled(&cs.adam, None, &mut args, pool, outs)?;
             anyhow::ensure!(outs.len() == 3, "adam: expected (w, m, v)");
-            let mut it = outs.into_iter();
-            cs.params = it.next().unwrap();
-            cs.m_state = it.next().unwrap();
-            cs.v_state = it.next().unwrap();
-            cs.params_buf = backend.upload(&cs.params)?; // refresh the device copy
-            cs.grad_acc.iter_mut().for_each(|g| *g = 0.0);
+            cs.v_state = outs.pop().unwrap();
+            cs.m_state = outs.pop().unwrap();
+            cs.params = outs.pop().unwrap();
+            backend.upload_into(&cs.params, &mut cs.params_buf)?; // refresh the device copy
+            let mut acc = pool.take_f32_len(cs.n_params, &[cs.n_params as i64]);
+            acc.f32s_mut()?.fill(0.0);
+            cs.grad_acc = acc;
         }
         stats.adam_s += t.elapsed().as_secs_f64();
 
@@ -359,7 +468,7 @@ pub fn worker_main<B: Backend>(
         if let Some(dir) = &cfg.checkpoint_dir {
             let due = cfg.checkpoint_every > 0 && step % cfg.checkpoint_every == 0;
             if due || step == cfg.steps {
-                for cs in &chunks {
+                for cs in chunks.iter() {
                     StageCheckpoint {
                         params: cs.params.f32s()?.to_vec(),
                         m: cs.m_state.f32s()?.to_vec(),
@@ -369,12 +478,35 @@ pub fn worker_main<B: Backend>(
                 }
             }
         }
+        Ok(())
     }
 
-    if let Some(remote) = &ch.remote {
-        remote.shutdown();
+    /// Steps this runner's program is configured for.
+    pub fn steps(&self) -> u64 {
+        self.cfg.steps
     }
-    stats.stash_high_water = stash.high_water;
-    stats.stash_high_water_bytes = stash.high_water_bytes;
-    Ok(stats)
+
+    /// Shut down the remote store and report final statistics.
+    pub fn finish(mut self) -> anyhow::Result<StageStats> {
+        if let Some(remote) = &self.ch.remote {
+            remote.shutdown();
+        }
+        self.stats.stash_high_water = self.stash.high_water;
+        self.stats.stash_high_water_bytes = self.stash.high_water_bytes;
+        self.stats.pool_hits = self.pool.hits;
+        self.stats.pool_misses = self.pool.misses;
+        Ok(self.stats)
+    }
+}
+
+/// Worker entry point; runs `cfg.steps` iterations of `cfg.program`.
+pub fn worker_main<B: Backend>(
+    cfg: WorkerConfig,
+    ch: WorkerChannels,
+) -> anyhow::Result<StageStats> {
+    let mut runner = StageRunner::<B>::new(cfg, ch)?;
+    for step in 1..=runner.steps() {
+        runner.run_step(step)?;
+    }
+    runner.finish()
 }

@@ -38,6 +38,7 @@
 //! | Figures 1/2 + estimator-vs-DES report | [`report::figures`], `bpipe report` |
 //! | §2.2 claim on a REAL pipeline: bit-identical BPipe losses | [`coordinator::train`] over [`runtime::SimBackend`], `bpipe train --backend sim` |
 //! | Beyond the paper: schedule/bound/layout design space | [`mod@sim::sweep`], [`schedule::zigzag()`], [`bpipe::rebalance_bounded`] |
+//! | Beyond the paper: zero-alloc training hot path (buffer donation) | [`runtime::BufferPool`], [`runtime::Backend::execute_pooled`], [`coordinator::train_probed`] |
 //!
 //! `docs/ARCHITECTURE.md` has the crate-level data-flow diagram and the
 //! [`runtime::Backend`] boundary; [`sweep_schema`] documents (and

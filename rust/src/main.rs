@@ -175,10 +175,18 @@ fn run_train<B: bpipe::runtime::Backend>(
     );
     println!("mean step time {:.3}s, tokens {}", r.mean_step_time(), r.tokens);
     for st in &r.stage_stats {
+        let pool_total = st.pool_hits + st.pool_misses;
         println!(
-            "  stage {}: fwd {:.2}s bwd {:.2}s adam {:.2}s load-wait {:.2}s evictions {} stash-hw {}",
-            st.stage, st.fwd_s, st.bwd_s, st.adam_s, st.load_wait_s, st.evictions,
-            st.stash_high_water
+            "  stage {}: fwd {:.2}s bwd {:.2}s adam {:.2}s load-wait {:.2}s evictions {} \
+             stash-hw {} pool-hit {:.0}%",
+            st.stage,
+            st.fwd_s,
+            st.bwd_s,
+            st.adam_s,
+            st.load_wait_s,
+            st.evictions,
+            st.stash_high_water,
+            if pool_total > 0 { 100.0 * st.pool_hits as f64 / pool_total as f64 } else { 0.0 }
         );
     }
     Ok(())

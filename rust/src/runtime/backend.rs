@@ -18,6 +18,7 @@
 //! activation stashes, BPipe transfers and checkpoints move around.
 
 use super::artifact::Manifest;
+use super::buffer_pool::BufferPool;
 
 /// A tensor crossing thread boundaries: host data + logical shape.
 /// (Backend handles like `xla::Literal` wrap raw pointers and are not
@@ -92,6 +93,131 @@ impl HostTensor {
             HostTensor::I32 { .. } => anyhow::bail!("expected an f32 tensor, got i32"),
         }
     }
+
+    /// A zero-element f32 tensor that performs **no allocation** — the
+    /// placeholder `std::mem::replace` uses when handing an owned tensor
+    /// to a donating execution.
+    pub fn empty_f32() -> Self {
+        HostTensor::F32 { data: Vec::new(), shape: Vec::new() }
+    }
+
+    /// The mutable f32 payload, or an error for an i32 tensor.
+    pub fn f32s_mut(&mut self) -> anyhow::Result<&mut [f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            HostTensor::I32 { .. } => anyhow::bail!("expected an f32 tensor, got i32"),
+        }
+    }
+
+    /// The mutable i32 payload, or an error for an f32 tensor.
+    pub fn i32s_mut(&mut self) -> anyhow::Result<&mut [i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            HostTensor::F32 { .. } => anyhow::bail!("expected an i32 tensor, got f32"),
+        }
+    }
+
+    /// Capacity of the shape vector — what [`Self::set_shape`] can hold
+    /// without reallocating.  The buffer pool matches on this so a
+    /// recycled low-rank buffer is never made to serve a higher-rank
+    /// take (which would grow the shape vector on the hot path).
+    pub fn shape_capacity(&self) -> usize {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape.capacity(),
+        }
+    }
+
+    /// Rewrite the logical shape in place (the shape vector's capacity
+    /// is retained, so steady-state calls never touch the heap).
+    pub fn set_shape(&mut self, new_shape: &[i64]) {
+        let shape = match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        };
+        shape.clear();
+        shape.extend_from_slice(new_shape);
+    }
+
+    /// Overwrite a scalar i32 tensor's value in place.
+    pub fn set_scalar_i32(&mut self, v: i32) -> anyhow::Result<()> {
+        let data = self.i32s_mut()?;
+        anyhow::ensure!(data.len() == 1, "expected a scalar, got {} elements", data.len());
+        data[0] = v;
+        Ok(())
+    }
+
+    /// Overwrite a scalar f32 tensor's value in place.
+    pub fn set_scalar_f32(&mut self, v: f32) -> anyhow::Result<()> {
+        let data = self.f32s_mut()?;
+        anyhow::ensure!(data.len() == 1, "expected a scalar, got {} elements", data.len());
+        data[0] = v;
+        Ok(())
+    }
+}
+
+/// One host-side input to a donating execution
+/// ([`Backend::execute_pooled`]): either **borrowed** (the caller keeps
+/// it alive — the stash still needs it) or **donated** (the computation
+/// consumes it and may reuse its memory for an output, the host-level
+/// mirror of PJRT/XLA input-buffer donation).  Slots are single-use —
+/// spent by the execution; callers rebuild the (stack-allocated)
+/// argument array per call.
+pub enum Arg<'a> {
+    Borrowed(&'a HostTensor),
+    Donated(HostTensor),
+    /// A slot whose value the backend has already consumed.
+    Spent,
+}
+
+impl<'a> Arg<'a> {
+    /// Read-only view of the slot's tensor (panics on a spent slot —
+    /// that is a caller bug, not a data error).
+    pub fn view(&self) -> &HostTensor {
+        match self {
+            Arg::Borrowed(t) => t,
+            Arg::Donated(t) => t,
+            Arg::Spent => panic!("argument slot already consumed"),
+        }
+    }
+
+    /// Move the slot's value out, leaving [`Arg::Spent`] behind.
+    pub fn take(&mut self) -> ArgVal<'a> {
+        match std::mem::replace(self, Arg::Spent) {
+            Arg::Borrowed(t) => ArgVal::Ref(t),
+            Arg::Donated(t) => ArgVal::Owned(t),
+            Arg::Spent => panic!("argument slot already consumed"),
+        }
+    }
+}
+
+/// An argument taken out of its slot: a borrowed view, or the owned
+/// tensor of a donated input (whose buffer the backend may now reuse).
+pub enum ArgVal<'a> {
+    Ref(&'a HostTensor),
+    Owned(HostTensor),
+}
+
+impl ArgVal<'_> {
+    pub fn view(&self) -> &HostTensor {
+        match self {
+            ArgVal::Ref(t) => t,
+            ArgVal::Owned(t) => t,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.view().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.view().is_empty()
+    }
+
+    /// Release a donated value's buffers to the pool (no-op for views).
+    pub fn recycle(self, pool: &mut BufferPool) {
+        if let ArgVal::Owned(t) = self {
+            pool.give(t);
+        }
+    }
 }
 
 /// One execution backend: create a per-worker client, compile
@@ -139,6 +265,57 @@ pub trait Backend: Sized + 'static {
         anyhow::ensure!(out.len() == 1, "expected 1 output, got {}", out.len());
         Ok(out.pop().unwrap())
     }
+
+    /// Donating, pool-backed execution — the training hot path.
+    ///
+    /// `params` is the artifact's leading device-resident argument (the
+    /// stage weights), when it has one; `args` are the remaining inputs
+    /// in artifact order, each either borrowed or **donated** (the
+    /// donation mask is simply which slots are [`Arg::Donated`]).  A
+    /// donated input's buffer may be consumed by the computation — reused
+    /// in place for an output of matching dtype and size, or released to
+    /// `pool`.  Every slot is [`Arg::Spent`] after the call (the tensor
+    /// *behind* a borrowed slot is untouched, but the slot itself is
+    /// consumed): callers rebuild the — stack-allocated — argument array
+    /// per call.  Outputs replace the contents of `out` (cleared first so
+    /// its capacity is reused), drawing any buffers the donations didn't
+    /// cover from `pool`.
+    ///
+    /// The contract is **value-identity with [`Self::execute`]**: the
+    /// same inputs produce bit-identical outputs whatever the donation
+    /// mask (pinned by `rust/tests/property_pooled.rs`).  The default
+    /// implementation is the owned-value baseline: upload every input,
+    /// run [`Self::execute`], and recycle the donated hosts' buffers.
+    fn execute_pooled(
+        &self,
+        exe: &Self::Exec,
+        params: Option<&Self::Buffer>,
+        args: &mut [Arg<'_>],
+        pool: &mut BufferPool,
+        out: &mut Vec<HostTensor>,
+    ) -> anyhow::Result<()> {
+        out.clear();
+        let uploaded: Vec<Self::Buffer> =
+            args.iter().map(|a| self.upload(a.view())).collect::<anyhow::Result<_>>()?;
+        let mut refs: Vec<&Self::Buffer> = Vec::with_capacity(uploaded.len() + 1);
+        if let Some(p) = params {
+            refs.push(p);
+        }
+        refs.extend(uploaded.iter());
+        out.extend(self.execute(exe, &refs)?);
+        for a in args.iter_mut() {
+            a.take().recycle(pool); // donated buffers pool; all slots spend
+        }
+        Ok(())
+    }
+
+    /// Refresh an existing device buffer from host data (the parameter
+    /// buffer after an optimizer step).  Implementations reuse the
+    /// device allocation when they can; the default re-uploads.
+    fn upload_into(&self, t: &HostTensor, buf: &mut Self::Buffer) -> anyhow::Result<()> {
+        *buf = self.upload(t)?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -163,5 +340,35 @@ mod tests {
         assert_eq!(HostTensor::scalar_f32(0.5).shape(), &[] as &[i64]);
         assert_eq!(HostTensor::scalar_i32(7).i32s().unwrap(), &[7]);
         assert_eq!(HostTensor::vec_f32(vec![0.0; 4]).shape(), &[4]);
+    }
+
+    #[test]
+    fn in_place_mutators() {
+        let mut t = HostTensor::vec_f32(vec![1.0, 2.0]);
+        t.f32s_mut().unwrap()[1] = 5.0;
+        assert_eq!(t.f32s().unwrap(), &[1.0, 5.0]);
+        t.set_shape(&[2, 1]);
+        assert_eq!(t.shape(), &[2, 1]);
+        assert!(t.set_scalar_f32(0.0).is_err(), "two elements are not a scalar");
+        let mut s = HostTensor::scalar_i32(3);
+        s.set_scalar_i32(9).unwrap();
+        assert_eq!(s.i32s().unwrap(), &[9]);
+        assert!(HostTensor::empty_f32().is_empty());
+    }
+
+    #[test]
+    fn arg_slots_take_once() {
+        let kept = HostTensor::scalar_f32(1.0);
+        let mut slots = [Arg::Borrowed(&kept), Arg::Donated(HostTensor::scalar_f32(2.0))];
+        assert_eq!(slots[1].view().f32s().unwrap(), &[2.0]);
+        let v0 = slots[0].take();
+        let v1 = slots[1].take();
+        assert!(matches!(v0, ArgVal::Ref(_)));
+        assert!(matches!(&v1, ArgVal::Owned(t) if t.f32s().unwrap() == [2.0]));
+        assert!(matches!(slots[1], Arg::Spent));
+        let mut pool = BufferPool::new();
+        v0.recycle(&mut pool);
+        v1.recycle(&mut pool);
+        assert_eq!(pool.len(), 1, "only the donated value returns to the pool");
     }
 }

@@ -1,0 +1,248 @@
+//! `BufferPool` — shape-keyed free lists of host buffers, the device
+//! memory arena of the training hot path.
+//!
+//! Every steady-state tensor of a stage worker has one of a handful of
+//! shapes (the activation `[b, s, h]`, the token/target `[b, s]`, the
+//! per-kind parameter vector `[n]`, the loss scalar `[]`), so recycling
+//! freed tensors through exact-size free lists makes the whole
+//! `bpipe train --backend sim` step allocation-free after the first
+//! (warm-up) step populates the pool — the runtime mirror of the
+//! simulator's `SimWorkspace` discipline from PR 2, pinned by the same
+//! counting-allocator test (`rust/tests/alloc_steady_state.rs`).
+//!
+//! The pool is **per worker and lock-free**: each stage thread owns one,
+//! exactly like a PJRT client owns its device allocator, and tensors
+//! that cross threads transfer ownership through the channels rather
+//! than touching a shared arena.  Both the tensor's data `Vec` and its
+//! shape `Vec` are recycled (shapes are set in place with retained
+//! capacity), so a pool hit performs zero heap operations.
+//!
+//! Free lists are bounded: once a dtype's list holds `limit` buffers,
+//! further returns are dropped (a plain deallocation) instead of grown,
+//! so a flow that only ever *releases* one shape class — e.g. the
+//! leader-streamed token tensors — cannot grow the pool without bound.
+//! The list vectors reserve `limit` slots up front, which keeps the
+//! steady-state `give` push allocation-free too.
+
+use super::backend::HostTensor;
+
+/// Default free-list bound per dtype (see [`BufferPool::with_limit`]).
+const DEFAULT_LIMIT: usize = 256;
+
+/// Per-worker free lists of [`HostTensor`] buffers, keyed by element
+/// count (exact match — the shape *classes* of a worker are few and
+/// fixed, so a linear scan over a short list beats any map).
+#[derive(Debug)]
+pub struct BufferPool {
+    f32_free: Vec<HostTensor>,
+    i32_free: Vec<HostTensor>,
+    limit: usize,
+    /// takes served from a free list
+    pub hits: u64,
+    /// takes that had to allocate fresh (warm-up, or a new shape class)
+    pub misses: u64,
+    /// tensors accepted back into a free list
+    pub recycled: u64,
+    /// tensors dropped because the free list was at its bound
+    pub dropped: u64,
+}
+
+impl Default for BufferPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BufferPool {
+    pub fn new() -> Self {
+        Self::with_limit(DEFAULT_LIMIT)
+    }
+
+    /// A pool whose per-dtype free lists hold at most `limit` buffers
+    /// (reserved up front, so steady-state returns never reallocate the
+    /// list itself).
+    pub fn with_limit(limit: usize) -> Self {
+        let limit = limit.max(1);
+        BufferPool {
+            f32_free: Vec::with_capacity(limit),
+            i32_free: Vec::with_capacity(limit),
+            limit,
+            hits: 0,
+            misses: 0,
+            recycled: 0,
+            dropped: 0,
+        }
+    }
+
+    /// Free buffers currently held (both dtypes).
+    pub fn len(&self) -> usize {
+        self.f32_free.len() + self.i32_free.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.f32_free.is_empty() && self.i32_free.is_empty()
+    }
+
+    /// Payload bytes parked in the free lists.
+    pub fn bytes_free(&self) -> usize {
+        self.f32_free.iter().chain(self.i32_free.iter()).map(|t| t.bytes()).sum()
+    }
+
+    /// An f32 tensor with exactly `len` elements and the given logical
+    /// `shape` (the two are allowed to disagree only in the degenerate
+    /// ways the backends themselves allow — callers normally pass
+    /// `len == shape.iter().product()`).  Contents are unspecified:
+    /// callers overwrite every element.
+    ///
+    /// A free buffer qualifies only if its shape vector can also hold
+    /// `shape` without growing — element counts can collide across
+    /// tensor classes of different rank (e.g. a `[n]` gradient and a
+    /// `[b, s, h]` activation with `n == b·s·h`), and serving a
+    /// low-rank buffer to a high-rank take would reallocate the shape
+    /// vector on the hot path.
+    pub fn take_f32_len(&mut self, len: usize, shape: &[i64]) -> HostTensor {
+        if let Some(i) = self
+            .f32_free
+            .iter()
+            .position(|t| t.len() == len && t.shape_capacity() >= shape.len())
+        {
+            self.hits += 1;
+            let mut t = self.f32_free.swap_remove(i);
+            t.set_shape(shape);
+            t
+        } else {
+            self.misses += 1;
+            HostTensor::F32 { data: vec![0f32; len], shape: shape.to_vec() }
+        }
+    }
+
+    /// [`Self::take_f32_len`] with `len` derived from the shape product
+    /// (an empty shape is a scalar: one element).
+    pub fn take_f32(&mut self, shape: &[i64]) -> HostTensor {
+        self.take_f32_len(elems(shape), shape)
+    }
+
+    /// The i32 twin of [`Self::take_f32_len`].
+    pub fn take_i32_len(&mut self, len: usize, shape: &[i64]) -> HostTensor {
+        if let Some(i) = self
+            .i32_free
+            .iter()
+            .position(|t| t.len() == len && t.shape_capacity() >= shape.len())
+        {
+            self.hits += 1;
+            let mut t = self.i32_free.swap_remove(i);
+            t.set_shape(shape);
+            t
+        } else {
+            self.misses += 1;
+            HostTensor::I32 { data: vec![0i32; len], shape: shape.to_vec() }
+        }
+    }
+
+    /// The i32 twin of [`Self::take_f32`].
+    pub fn take_i32(&mut self, shape: &[i64]) -> HostTensor {
+        self.take_i32_len(elems(shape), shape)
+    }
+
+    /// Return a tensor's buffers to the pool (or drop it when the free
+    /// list is at its bound).
+    pub fn give(&mut self, t: HostTensor) {
+        let list = match &t {
+            HostTensor::F32 { .. } => &mut self.f32_free,
+            HostTensor::I32 { .. } => &mut self.i32_free,
+        };
+        if list.len() < self.limit {
+            list.push(t);
+            self.recycled += 1;
+        } else {
+            self.dropped += 1;
+        }
+    }
+}
+
+/// Element count of a shape (empty shape = scalar = 1 element).
+fn elems(shape: &[i64]) -> usize {
+    shape.iter().map(|&d| d.max(0) as usize).product()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_miss_then_hit_round_trip() {
+        let mut p = BufferPool::new();
+        let t = p.take_f32(&[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!((p.hits, p.misses), (0, 1));
+        p.give(t);
+        assert_eq!(p.len(), 1);
+        // same element count, different logical shape: the buffer is
+        // recycled and the shape rewritten in place
+        let t2 = p.take_f32(&[6]);
+        assert_eq!(t2.len(), 6);
+        assert_eq!(t2.shape(), &[6]);
+        assert_eq!((p.hits, p.misses), (1, 1));
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn exact_size_matching_never_reuses_a_wrong_buffer() {
+        let mut p = BufferPool::new();
+        p.give(HostTensor::vec_f32(vec![0.0; 4]));
+        let t = p.take_f32(&[8]);
+        assert_eq!(t.len(), 8, "a 4-element buffer must not serve an 8-element take");
+        assert_eq!(p.misses, 1);
+        assert_eq!(p.len(), 1, "the mismatched buffer stays pooled");
+    }
+
+    #[test]
+    fn rank_collisions_do_not_cross_classes() {
+        // a [6] gradient-style buffer (shape capacity 1) must not serve
+        // a rank-2 take of the same element count — set_shape would have
+        // to grow the shape vector, an allocation the pool exists to avoid
+        let mut p = BufferPool::new();
+        p.give(HostTensor::vec_f32(vec![0.0; 6]));
+        let t = p.take_f32(&[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(p.misses, 1, "rank-1 buffer must be skipped for a rank-2 take");
+        assert_eq!(p.len(), 1, "the skipped buffer stays pooled");
+        // and the recycled rank-2 buffer serves both rank-2 and rank-1
+        p.give(t);
+        let t1 = p.take_f32(&[6]);
+        assert_eq!(p.hits, 1);
+        assert_eq!(t1.shape(), &[6]);
+    }
+
+    #[test]
+    fn dtypes_have_independent_lists() {
+        let mut p = BufferPool::new();
+        p.give(HostTensor::I32 { data: vec![0; 4], shape: vec![4] });
+        let t = p.take_f32(&[4]);
+        assert!(matches!(t, HostTensor::F32 { .. }));
+        assert_eq!(p.misses, 1);
+        let t2 = p.take_i32(&[4]);
+        assert!(matches!(t2, HostTensor::I32 { .. }));
+        assert_eq!(p.hits, 1);
+    }
+
+    #[test]
+    fn scalar_shape_is_one_element() {
+        let mut p = BufferPool::new();
+        let t = p.take_f32(&[]);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.shape(), &[] as &[i64]);
+    }
+
+    #[test]
+    fn bounded_list_drops_excess_returns() {
+        let mut p = BufferPool::with_limit(2);
+        for _ in 0..4 {
+            p.give(HostTensor::vec_f32(vec![0.0; 2]));
+        }
+        assert_eq!(p.len(), 2);
+        assert_eq!((p.recycled, p.dropped), (2, 2));
+    }
+}

@@ -214,6 +214,48 @@ impl crate::runtime::Backend for Runtime {
         let outs = exe.run_buffers(inputs)?;
         outs.iter().map(literal_to_host).collect()
     }
+
+    /// The PJRT mapping of donation: a donated host tensor's device
+    /// buffer exists only for this execution — it is RAII-freed the
+    /// moment the call returns (the upstream `xla` crate exposes no
+    /// aliasing config, so "donate to the computation" degrades to
+    /// "free immediately after", which is what keeps steady-state device
+    /// memory flat).  Donated *host* buffers are dropped, not pooled:
+    /// outputs come back through `Literal::to_vec` (which allocates
+    /// internally), so pooling the large donated activations would only
+    /// pin dead host memory the backend can never hand out again — the
+    /// pool here serves the coordinator's own small-buffer cycles
+    /// (gradient accumulators, loss scalars), nothing more.
+    fn execute_pooled(
+        &self,
+        exe: &Executable,
+        params: Option<&xla::PjRtBuffer>,
+        args: &mut [crate::runtime::Arg<'_>],
+        _pool: &mut crate::runtime::BufferPool,
+        out: &mut Vec<crate::runtime::HostTensor>,
+    ) -> anyhow::Result<()> {
+        out.clear();
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        for a in args.iter_mut() {
+            match a.take() {
+                crate::runtime::ArgVal::Ref(t) => bufs.push(self.upload(t)?),
+                crate::runtime::ArgVal::Owned(t) => {
+                    bufs.push(self.upload(&t)?);
+                    drop(t);
+                }
+            }
+        }
+        let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(bufs.len() + 1);
+        if let Some(p) = params {
+            refs.push(p);
+        }
+        refs.extend(bufs.iter());
+        let outs = exe.run_buffers(&refs)?;
+        for lit in &outs {
+            out.push(literal_to_host(lit)?);
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -17,18 +17,27 @@
 //! manifest.json describing every artifact's shapes and the per-kind
 //! parameter counts — loadable from disk, or built fully in memory by
 //! [`Manifest::synthetic`] for artifact-free sim runs.
+//!
+//! [`buffer_pool::BufferPool`] + [`Backend::execute_pooled`] form the
+//! buffer lifecycle layer: per-worker shape-keyed free lists and
+//! donation semantics (which inputs a computation may consume) that make
+//! the steady-state training step allocation-free on the sim backend and
+//! map onto immediate device-buffer release on PJRT.  See
+//! `docs/ARCHITECTURE.md` § "Buffer lifecycle & donation".
 
 pub mod artifact;
 pub mod backend;
+pub mod buffer_pool;
 #[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod sim_backend;
 
 pub use artifact::{ArtifactMeta, Manifest, TensorMeta};
-pub use backend::{Backend, HostTensor};
+pub use backend::{Arg, ArgVal, Backend, HostTensor};
+pub use buffer_pool::BufferPool;
 #[cfg(feature = "pjrt")]
 pub use engine::{Executable, Runtime};
-pub use sim_backend::SimBackend;
+pub use sim_backend::{SimBackend, UnpooledSimBackend};
 
 /// Convert a flat f32 slice into a Literal of the given shape.
 #[cfg(feature = "pjrt")]

@@ -31,9 +31,21 @@
 //! stashes between stores) computes bit-identical losses to its
 //! baseline, the paper's central claim, now asserted in tier-1
 //! (`rust/tests/integration_runtime.rs`).
+//!
+//! ## Buffer donation
+//!
+//! [`Backend::execute_pooled`] is implemented as **true in-place
+//! reuse**: donated inputs become outputs of matching size without a
+//! copy (fwd's `y` over `x`, bwd's `dx` over `x`/`dy`, Adam's rotated
+//! state triple), other outputs draw from the caller's
+//! [`BufferPool`], and `execute` itself is just the donating path with
+//! nothing donated — so pooled and owned execution are bit-identical by
+//! construction.  [`UnpooledSimBackend`] keeps the trait's
+//! fresh-allocation defaults observable as a baseline.
 
 use super::artifact::Manifest;
-use super::backend::{Backend, HostTensor};
+use super::backend::{Arg, ArgVal, Backend, HostTensor};
+use super::buffer_pool::BufferPool;
 use crate::util::SplitMix64;
 
 /// Adam hyperparameters (the python side's defaults).
@@ -148,169 +160,417 @@ impl Backend for SimBackend {
         exe: &SimExec,
         inputs: &[&HostTensor],
     ) -> anyhow::Result<Vec<HostTensor>> {
-        let argc = |n: usize| -> anyhow::Result<()> {
-            anyhow::ensure!(
-                inputs.len() == n,
-                "{}: expected {n} inputs, got {}",
-                exe.name,
-                inputs.len()
-            );
+        // the owned-value path IS the donating path with nothing donated
+        // and a throwaway pool (limit 1: no free-list reservation to
+        // inflate the owned baseline's allocation count): one
+        // implementation, two disciplines, so pooled/fresh bit-identity
+        // holds by construction
+        let mut args: Vec<Arg<'_>> = inputs.iter().map(|&t| Arg::Borrowed(t)).collect();
+        let mut pool = BufferPool::with_limit(1);
+        let mut out = Vec::new();
+        self.execute_pooled(exe, None, &mut args, &mut pool, &mut out)?;
+        Ok(out)
+    }
+
+    /// True donation/reuse: donated inputs are consumed **in place**
+    /// where an output matches their dtype and size (fwd's `y` over `x`,
+    /// bwd's `dx` over `x` or `dy`, Adam's state triple over `w`/`g`/`m`
+    /// — the spare old-`v` buffer returns to the pool), and every other
+    /// output draws from the pool.  All loops read each element before
+    /// overwriting it, in the exact iteration order of the owned path,
+    /// so results are bit-identical whatever the donation mask.
+    fn execute_pooled(
+        &self,
+        exe: &SimExec,
+        params: Option<&HostTensor>,
+        args: &mut [Arg<'_>],
+        pool: &mut BufferPool,
+        out: &mut Vec<HostTensor>,
+    ) -> anyhow::Result<()> {
+        out.clear();
+        let mut inp = SimInputs { params, args };
+        let argc = |n: usize, got: usize| -> anyhow::Result<()> {
+            anyhow::ensure!(got == n, "{}: expected {n} inputs, got {got}", exe.name);
             Ok(())
         };
         let h = self.h;
         match exe.op {
             SimOp::Init => {
-                argc(1)?;
-                let seed = inputs[0].i32s()?[0];
+                argc(1, inp.count())?;
+                let seedv = inp.take(0);
+                let seed = seedv.view().i32s()?[0];
+                seedv.recycle(pool);
+                let mut w_out = pool.take_f32_len(exe.n_params, &[exe.n_params as i64]);
                 let mut rng = SplitMix64::new((seed as i64 as u64) ^ 0x5EED_BA5E);
-                let data: Vec<f32> =
-                    (0..exe.n_params).map(|_| (rng.next_f64() * 0.2 - 0.1) as f32).collect();
-                Ok(vec![HostTensor::vec_f32(data)])
+                for v in w_out.f32s_mut()? {
+                    *v = (rng.next_f64() * 0.2 - 0.1) as f32;
+                }
+                out.push(w_out);
             }
             SimOp::FwdFirst => {
-                argc(2)?;
-                self.check_params(exe, inputs[0])?;
-                let w = inputs[0].f32s()?;
-                let tok = inputs[1].i32s()?;
-                let (w0, w1) = (w[0], w[1]);
-                let mut y = Vec::with_capacity(tok.len() * h);
-                for &t in tok {
-                    for j in 0..h {
-                        y.push(w0 * emb(t, j as u64) + w1);
+                argc(2, inp.count())?;
+                let wv = inp.take(0);
+                self.check_params(exe, wv.view())?;
+                let (w0, w1) = {
+                    let w = wv.view().f32s()?;
+                    (w[0], w[1])
+                };
+                wv.recycle(pool);
+                let tokv = inp.take(1);
+                let y = {
+                    let tok = tokv.view().i32s()?;
+                    let ts = tokv.view().shape();
+                    anyhow::ensure!(ts.len() < 4, "{}: token rank too high", exe.name);
+                    let mut sh = [0i64; 4];
+                    sh[..ts.len()].copy_from_slice(ts);
+                    sh[ts.len()] = h as i64;
+                    let mut y = pool.take_f32_len(tok.len() * h, &sh[..=ts.len()]);
+                    let yd = y.f32s_mut()?;
+                    let mut i = 0;
+                    for &t in tok {
+                        for j in 0..h {
+                            yd[i] = w0 * emb(t, j as u64) + w1;
+                            i += 1;
+                        }
                     }
-                }
-                let mut shape = inputs[1].shape().to_vec();
-                shape.push(h as i64);
-                Ok(vec![HostTensor::F32 { data: y, shape }])
+                    y
+                };
+                tokv.recycle(pool);
+                out.push(y);
             }
             SimOp::FwdMid => {
-                argc(2)?;
-                self.check_params(exe, inputs[0])?;
-                let w = inputs[0].f32s()?;
-                let x = inputs[1].f32s()?;
-                let (scale, shift) = (1.0 + w[0], w[1]);
-                let y: Vec<f32> = x.iter().map(|&v| scale * v + shift).collect();
-                Ok(vec![HostTensor::F32 { data: y, shape: inputs[1].shape().to_vec() }])
+                argc(2, inp.count())?;
+                let wv = inp.take(0);
+                self.check_params(exe, wv.view())?;
+                let (scale, shift) = {
+                    let w = wv.view().f32s()?;
+                    (1.0 + w[0], w[1])
+                };
+                wv.recycle(pool);
+                // a donated x is consumed in place; a borrowed x is copied
+                // into a pooled buffer first — same arithmetic either way
+                let mut y = owned_f32_or_copy(inp.take(1), pool)?;
+                for v in y.f32s_mut()? {
+                    *v = scale * *v + shift;
+                }
+                out.push(y);
             }
             SimOp::BwdFirst => {
-                argc(3)?;
-                self.check_params(exe, inputs[0])?;
-                let tok = inputs[1].i32s()?;
-                let dy = inputs[2].f32s()?;
-                anyhow::ensure!(dy.len() == tok.len() * h, "{}: dy shape mismatch", exe.name);
-                let (mut g0, mut g1) = (0f32, 0f32);
-                for (p, &t) in tok.iter().enumerate() {
-                    for j in 0..h {
-                        let d = dy[p * h + j];
-                        g0 += d * emb(t, j as u64);
-                        g1 += d;
+                argc(3, inp.count())?;
+                let wv = inp.take(0);
+                self.check_params(exe, wv.view())?;
+                wv.recycle(pool);
+                let tokv = inp.take(1);
+                let dyv = inp.take(2);
+                let (g0, g1) = {
+                    let tok = tokv.view().i32s()?;
+                    let dy = dyv.view().f32s()?;
+                    anyhow::ensure!(dy.len() == tok.len() * h, "{}: dy shape mismatch", exe.name);
+                    let (mut g0, mut g1) = (0f32, 0f32);
+                    for (p, &t) in tok.iter().enumerate() {
+                        for j in 0..h {
+                            let d = dy[p * h + j];
+                            g0 += d * emb(t, j as u64);
+                            g1 += d;
+                        }
                     }
-                }
-                let mut dw = vec![0f32; exe.n_params];
-                dw[0] = g0;
-                dw[1] = g1;
-                Ok(vec![HostTensor::vec_f32(dw)])
+                    (g0, g1)
+                };
+                tokv.recycle(pool);
+                dyv.recycle(pool);
+                out.push(grad_out(exe, g0, g1, pool)?);
             }
             SimOp::BwdMid => {
-                argc(3)?;
-                self.check_params(exe, inputs[0])?;
-                let w = inputs[0].f32s()?;
-                let x = inputs[1].f32s()?;
-                let dy = inputs[2].f32s()?;
-                anyhow::ensure!(x.len() == dy.len(), "{}: x/dy length mismatch", exe.name);
-                let scale = 1.0 + w[0];
-                let dx: Vec<f32> = dy.iter().map(|&d| d * scale).collect();
-                let (mut g0, mut g1) = (0f32, 0f32);
-                for (d, xv) in dy.iter().zip(x.iter()) {
-                    g0 += d * xv;
-                    g1 += d;
-                }
-                let mut dw = vec![0f32; exe.n_params];
-                dw[0] = g0;
-                dw[1] = g1;
-                Ok(vec![
-                    HostTensor::F32 { data: dx, shape: inputs[2].shape().to_vec() },
-                    HostTensor::vec_f32(dw),
-                ])
+                argc(3, inp.count())?;
+                let wv = inp.take(0);
+                self.check_params(exe, wv.view())?;
+                let scale = 1.0 + wv.view().f32s()?[0];
+                wv.recycle(pool);
+                let xv = inp.take(1);
+                let dyv = inp.take(2);
+                let (g0, g1) = {
+                    let x = xv.view().f32s()?;
+                    let dy = dyv.view().f32s()?;
+                    anyhow::ensure!(x.len() == dy.len(), "{}: x/dy length mismatch", exe.name);
+                    let (mut g0, mut g1) = (0f32, 0f32);
+                    for (d, xval) in dy.iter().zip(x.iter()) {
+                        g0 += d * xval;
+                        g1 += d;
+                    }
+                    (g0, g1)
+                };
+                // dx = dy · (1 + w0), shaped like dy; donated buffers are
+                // reused (x's first, else dy's in place), pooled otherwise
+                let mut dsh = [0i64; 4];
+                let dk = dyv.view().shape().len();
+                anyhow::ensure!(dk <= 4, "{}: dy rank too high", exe.name);
+                dsh[..dk].copy_from_slice(dyv.view().shape());
+                let dx = match (xv, dyv) {
+                    (ArgVal::Owned(xb), dyv) if matches!(xb, HostTensor::F32 { .. }) => {
+                        let mut xb = xb;
+                        {
+                            let dst = xb.f32s_mut()?;
+                            let dy = dyv.view().f32s()?;
+                            for (o, d) in dst.iter_mut().zip(dy.iter()) {
+                                *o = *d * scale;
+                            }
+                        }
+                        xb.set_shape(&dsh[..dk]);
+                        dyv.recycle(pool);
+                        xb
+                    }
+                    (xv, ArgVal::Owned(db)) if matches!(db, HostTensor::F32 { .. }) => {
+                        xv.recycle(pool);
+                        let mut db = db;
+                        for o in db.f32s_mut()? {
+                            *o = *o * scale;
+                        }
+                        db
+                    }
+                    (xv, dyv) => {
+                        let mut dx = pool.take_f32_len(dyv.len(), &dsh[..dk]);
+                        {
+                            let dst = dx.f32s_mut()?;
+                            let dy = dyv.view().f32s()?;
+                            for (o, d) in dst.iter_mut().zip(dy.iter()) {
+                                *o = *d * scale;
+                            }
+                        }
+                        xv.recycle(pool);
+                        dyv.recycle(pool);
+                        dx
+                    }
+                };
+                out.push(dx);
+                out.push(grad_out(exe, g0, g1, pool)?);
             }
             SimOp::BwdLast => {
-                argc(3)?;
-                self.check_params(exe, inputs[0])?;
-                let w = inputs[0].f32s()?;
-                let x = inputs[1].f32s()?;
-                let tgt = inputs[2].i32s()?;
-                anyhow::ensure!(x.len() == tgt.len() * h, "{}: x shape mismatch", exe.name);
-                let (w0, w1) = (w[0], w[1]);
-                let inv_h = 1.0f32 / h as f32;
-                let inv_n = 1.0f32 / tgt.len() as f32;
-                let inv_v = 1.0f32 / self.vocab as f32;
-                let mut dx = vec![0f32; x.len()];
-                let (mut loss, mut g0, mut g1) = (0f32, 0f32, 0f32);
-                for (p, &t) in tgt.iter().enumerate() {
-                    let mut u = 0f32;
-                    for j in 0..h {
-                        u += x[p * h + j];
+                argc(3, inp.count())?;
+                let wv = inp.take(0);
+                self.check_params(exe, wv.view())?;
+                let (w0, w1) = {
+                    let w = wv.view().f32s()?;
+                    (w[0], w[1])
+                };
+                wv.recycle(pool);
+                let xv = inp.take(1);
+                let tgtv = inp.take(2);
+                // dx shares x's shape (and, when donated, x's buffer: each
+                // position's row is fully read before it is overwritten)
+                let mut dx = owned_f32_or_copy(xv, pool)?;
+                let (loss, g0, g1) = {
+                    let tgt = tgtv.view().i32s()?;
+                    let x = dx.f32s_mut()?; // holds x's values; rewritten row by row
+                    anyhow::ensure!(x.len() == tgt.len() * h, "{}: x shape mismatch", exe.name);
+                    let inv_h = 1.0f32 / h as f32;
+                    let inv_n = 1.0f32 / tgt.len() as f32;
+                    let inv_v = 1.0f32 / self.vocab as f32;
+                    let (mut loss, mut g0, mut g1) = (0f32, 0f32, 0f32);
+                    for (p, &t) in tgt.iter().enumerate() {
+                        let mut u = 0f32;
+                        for j in 0..h {
+                            u += x[p * h + j];
+                        }
+                        u *= inv_h;
+                        let pred = w0 * u + w1;
+                        let target = t as f32 * inv_v - 0.5;
+                        let e = pred - target;
+                        loss += e * e;
+                        let dpred = 2.0 * e * inv_n;
+                        g0 += dpred * u;
+                        g1 += dpred;
+                        let dxv = dpred * w0 * inv_h;
+                        for j in 0..h {
+                            x[p * h + j] = dxv;
+                        }
                     }
-                    u *= inv_h;
-                    let pred = w0 * u + w1;
-                    let target = t as f32 * inv_v - 0.5;
-                    let e = pred - target;
-                    loss += e * e;
-                    let dpred = 2.0 * e * inv_n;
-                    g0 += dpred * u;
-                    g1 += dpred;
-                    let dxv = dpred * w0 * inv_h;
-                    for j in 0..h {
-                        dx[p * h + j] = dxv;
-                    }
-                }
-                loss *= inv_n;
-                let mut dw = vec![0f32; exe.n_params];
-                dw[0] = g0;
-                dw[1] = g1;
-                Ok(vec![
-                    HostTensor::F32 { data: dx, shape: inputs[1].shape().to_vec() },
-                    HostTensor::vec_f32(dw),
-                    HostTensor::scalar_f32(loss),
-                ])
+                    loss *= inv_n;
+                    (loss, g0, g1)
+                };
+                tgtv.recycle(pool);
+                out.push(dx);
+                out.push(grad_out(exe, g0, g1, pool)?);
+                let mut l = pool.take_f32_len(1, &[]);
+                l.f32s_mut()?[0] = loss;
+                out.push(l);
             }
             SimOp::Adam => {
-                argc(6)?;
-                self.check_params(exe, inputs[0])?;
-                let w = inputs[0].f32s()?;
-                let g = inputs[1].f32s()?;
-                let m = inputs[2].f32s()?;
-                let v = inputs[3].f32s()?;
+                argc(6, inp.count())?;
+                let wv = inp.take(0);
+                self.check_params(exe, wv.view())?;
+                let gv = inp.take(1);
+                let mv = inp.take(2);
+                let vv = inp.take(3);
+                let n = wv.len();
                 anyhow::ensure!(
-                    g.len() == w.len() && m.len() == w.len() && v.len() == w.len(),
+                    gv.len() == n && mv.len() == n && vv.len() == n,
                     "{}: state length mismatch",
                     exe.name
                 );
-                let step = inputs[4].i32s()?[0];
+                let stepv = inp.take(4);
+                let step = stepv.view().i32s()?[0];
                 anyhow::ensure!(step >= 1, "{}: adam step must be >= 1", exe.name);
-                let lr = inputs[5].f32s()?[0];
+                stepv.recycle(pool);
+                let lrv = inp.take(5);
+                let lr = lrv.view().f32s()?[0];
+                lrv.recycle(pool);
                 let bc1 = 1.0 - BETA1.powi(step);
                 let bc2 = 1.0 - BETA2.powi(step);
-                let mut w2 = Vec::with_capacity(w.len());
-                let mut m2 = Vec::with_capacity(w.len());
-                let mut v2 = Vec::with_capacity(w.len());
-                for i in 0..w.len() {
-                    let mi = BETA1 * m[i] + (1.0 - BETA1) * g[i];
-                    let vi = BETA2 * v[i] + (1.0 - BETA2) * g[i] * g[i];
-                    let mhat = mi / bc1;
-                    let vhat = vi / bc2;
-                    w2.push(w[i] - lr * mhat / (vhat.sqrt() + EPS));
-                    m2.push(mi);
-                    v2.push(vi);
+                // working buffers: donated state updates in place (borrowed
+                // inputs are copied into pooled buffers); `g`'s buffer
+                // becomes the new `m`, `m`'s the new `v`, and the spare old
+                // `v` returns to the pool — buffers rotate, nothing allocates
+                let mut wb = owned_f32_or_copy(wv, pool)?;
+                let mut gb = owned_f32_or_copy(gv, pool)?;
+                let mut mb = owned_f32_or_copy(mv, pool)?;
+                let vb = owned_f32_or_copy(vv, pool)?;
+                {
+                    let w = wb.f32s_mut()?;
+                    let g = gb.f32s_mut()?;
+                    let m = mb.f32s_mut()?;
+                    let v = vb.f32s()?;
+                    for i in 0..n {
+                        let gi = g[i];
+                        let mi = BETA1 * m[i] + (1.0 - BETA1) * gi;
+                        let vi = BETA2 * v[i] + (1.0 - BETA2) * gi * gi;
+                        let mhat = mi / bc1;
+                        let vhat = vi / bc2;
+                        w[i] -= lr * mhat / (vhat.sqrt() + EPS);
+                        g[i] = mi; // g's buffer becomes m'
+                        m[i] = vi; // m's buffer becomes v'
+                    }
                 }
-                Ok(vec![
-                    HostTensor::vec_f32(w2),
-                    HostTensor::vec_f32(m2),
-                    HostTensor::vec_f32(v2),
-                ])
+                let flat = [n as i64];
+                wb.set_shape(&flat);
+                gb.set_shape(&flat);
+                mb.set_shape(&flat);
+                pool.give(vb);
+                out.push(wb);
+                out.push(gb);
+                out.push(mb);
             }
         }
+        Ok(())
     }
+
+    fn upload_into(&self, t: &HostTensor, buf: &mut HostTensor) -> anyhow::Result<()> {
+        // refresh the device copy without reallocating it
+        match (t, buf) {
+            (HostTensor::F32 { data, shape }, HostTensor::F32 { data: bd, shape: bs })
+                if bd.len() == data.len() =>
+            {
+                bd.copy_from_slice(data);
+                bs.clear();
+                bs.extend_from_slice(shape);
+            }
+            (HostTensor::I32 { data, shape }, HostTensor::I32 { data: bd, shape: bs })
+                if bd.len() == data.len() =>
+            {
+                bd.copy_from_slice(data);
+                bs.clear();
+                bs.extend_from_slice(shape);
+            }
+            (t, buf) => *buf = t.clone(),
+        }
+        Ok(())
+    }
+}
+
+/// Logical input indexing over (optional leading `params`, remaining
+/// `args`): the donating execute sees the same flat argument list as
+/// [`Backend::execute`], whether the caller keeps the stage weights
+/// device-resident or passes them inline.
+struct SimInputs<'s, 'a> {
+    params: Option<&'s HostTensor>,
+    args: &'s mut [Arg<'a>],
+}
+
+impl<'s, 'a: 's> SimInputs<'s, 'a> {
+    fn count(&self) -> usize {
+        self.args.len() + usize::from(self.params.is_some())
+    }
+
+    /// Move logical input `i` out of its slot (the params slot is always
+    /// a borrow).
+    fn take(&mut self, i: usize) -> ArgVal<'s> {
+        match self.params {
+            Some(p) if i == 0 => ArgVal::Ref(p),
+            Some(_) => self.args[i - 1].take(),
+            None => self.args[i].take(),
+        }
+    }
+}
+
+/// A pooled `[n_params]` gradient vector with only the two learnable
+/// slots set (the rest stay zero ballast, as in the owned path).
+fn grad_out(
+    exe: &SimExec,
+    g0: f32,
+    g1: f32,
+    pool: &mut BufferPool,
+) -> anyhow::Result<HostTensor> {
+    let mut dw = pool.take_f32_len(exe.n_params, &[exe.n_params as i64]);
+    let d = dw.f32s_mut()?;
+    d.fill(0.0);
+    d[0] = g0;
+    d[1] = g1;
+    Ok(dw)
+}
+
+/// Materialize an argument as an owned f32 working buffer: donated
+/// values pass through untouched (in-place update), borrowed ones are
+/// copied into a pooled buffer.
+fn owned_f32_or_copy(v: ArgVal<'_>, pool: &mut BufferPool) -> anyhow::Result<HostTensor> {
+    match v {
+        ArgVal::Owned(t) if matches!(t, HostTensor::F32 { .. }) => Ok(t),
+        other => {
+            let src = other.view();
+            let mut t = pool.take_f32_len(src.len(), src.shape());
+            t.f32s_mut()?.copy_from_slice(src.f32s()?);
+            other.recycle(pool);
+            Ok(t)
+        }
+    }
+}
+
+/// The owned-value baseline: bit-identical numerics to [`SimBackend`]
+/// through the *default* (fresh-allocation) `execute_pooled` and
+/// `upload_into` paths — no donation, no in-place reuse, an `upload`
+/// clone per input.  Tests pin pooled-vs-owned equivalence against it
+/// (`rust/tests/property_pooled.rs`) and the hot-path bench measures the
+/// allocation/throughput delta
+/// (`benches/runtime_hotpath.rs` → `BENCH_runtime.json`).
+pub struct UnpooledSimBackend(SimBackend);
+
+impl Backend for UnpooledSimBackend {
+    type Exec = SimExec;
+    type Buffer = HostTensor;
+
+    fn create(manifest: &Manifest) -> anyhow::Result<Self> {
+        Ok(UnpooledSimBackend(SimBackend::create(manifest)?))
+    }
+
+    fn platform(&self) -> String {
+        "sim-unpooled".into()
+    }
+
+    fn compile(&self, manifest: &Manifest, name: &str) -> anyhow::Result<SimExec> {
+        self.0.compile(manifest, name)
+    }
+
+    fn upload(&self, t: &HostTensor) -> anyhow::Result<HostTensor> {
+        self.0.upload(t)
+    }
+
+    fn execute(
+        &self,
+        exe: &SimExec,
+        inputs: &[&HostTensor],
+    ) -> anyhow::Result<Vec<HostTensor>> {
+        self.0.execute(exe, inputs)
+    }
+    // no execute_pooled / upload_into overrides: this backend exists to
+    // exercise the trait's owned-value defaults
 }
 
 #[cfg(test)]
@@ -458,5 +718,81 @@ mod tests {
         // the b-suffixed sweep artifacts compile to the same ops
         assert!(b.compile(&m, "mid_fwd_b2").is_ok());
         assert!(b.compile(&m, "mid_bwd_b1").is_ok());
+    }
+
+    #[test]
+    fn donated_fwd_input_is_consumed_in_place() {
+        let (m, b) = setup();
+        let fwd = b.compile(&m, "mid_fwd").unwrap();
+        let n = m.param_count("mid").unwrap() as usize;
+        let mut w = vec![0f32; n];
+        (w[0], w[1]) = (0.5, 0.25);
+        let wt = HostTensor::vec_f32(w);
+        let x = HostTensor::F32 { data: vec![1.0, -2.0, 0.0], shape: vec![3] };
+        let x_ptr = x.f32s().unwrap().as_ptr();
+        let mut args = [Arg::Donated(x)];
+        let mut pool = BufferPool::new();
+        let mut out = Vec::new();
+        b.execute_pooled(&fwd, Some(&wt), &mut args, &mut pool, &mut out).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].f32s().unwrap(), &[1.75, -2.75, 0.25]);
+        assert_eq!(
+            out[0].f32s().unwrap().as_ptr(),
+            x_ptr,
+            "donated x must become y in place"
+        );
+        assert!(matches!(args[0], Arg::Spent));
+        assert_eq!(pool.misses, 0, "a fully-donated fwd draws nothing from the pool");
+    }
+
+    #[test]
+    fn adam_rotates_donated_state_buffers() {
+        let (m, b) = setup();
+        let adam = b.compile(&m, "adam_mid").unwrap();
+        let n = m.param_count("mid").unwrap() as usize;
+        let mk = |v: f32| HostTensor::vec_f32(vec![v; n]);
+        let (w, g, ms, vs) = (mk(0.5), mk(1.0), mk(0.0), mk(0.0));
+        let step = HostTensor::scalar_i32(1);
+        let lr = HostTensor::scalar_f32(0.1);
+        // reference values from the owned path
+        let fresh = b.execute_host(&adam, &[&w, &g, &ms, &vs, &step, &lr]).unwrap();
+        let ptrs = [
+            w.f32s().unwrap().as_ptr(),
+            g.f32s().unwrap().as_ptr(),
+            ms.f32s().unwrap().as_ptr(),
+        ];
+        let mut args = [
+            Arg::Donated(w),
+            Arg::Donated(g),
+            Arg::Donated(ms),
+            Arg::Donated(vs),
+            Arg::Borrowed(&step),
+            Arg::Borrowed(&lr),
+        ];
+        let mut pool = BufferPool::new();
+        let mut out = Vec::new();
+        b.execute_pooled(&adam, None, &mut args, &mut pool, &mut out).unwrap();
+        assert_eq!(out, fresh, "donating adam must be bit-identical to the owned path");
+        // w' in w's buffer, m' in g's, v' in m's; the old v buffer pools
+        for (o, p) in out.iter().zip(ptrs.iter()) {
+            assert_eq!(o.f32s().unwrap().as_ptr(), *p);
+        }
+        assert_eq!(pool.len(), 1, "the spare state buffer returns to the pool");
+        assert_eq!(pool.misses, 0);
+    }
+
+    #[test]
+    fn unpooled_baseline_matches_the_donating_backend() {
+        let (m, b) = setup();
+        let ub = UnpooledSimBackend::create(&m).unwrap();
+        assert_eq!(ub.platform(), "sim-unpooled");
+        let fwd_a = b.compile(&m, "mid_fwd").unwrap();
+        let fwd_b = ub.compile(&m, "mid_fwd").unwrap();
+        let n = m.param_count("mid").unwrap() as usize;
+        let w = HostTensor::vec_f32((0..n).map(|i| i as f32 * 1e-3).collect());
+        let x = HostTensor::F32 { data: vec![0.25, -1.5], shape: vec![2] };
+        let ya = b.execute_host(&fwd_a, &[&w, &x]).unwrap();
+        let yb = ub.execute_host(&fwd_b, &[&w, &x]).unwrap();
+        assert_eq!(ya, yb);
     }
 }

@@ -1,54 +1,31 @@
-//! Zero-allocation proof for the sweep hot path: after warm-up, repeated
-//! [`SimWorkspace::run`] calls must not touch the heap at all — that is
-//! the point of the CSR/arena rearchitecture (the seed engine allocated
-//! per-node `Vec<Vec<usize>>` edges, a fresh `BinaryHeap` and a full
-//! trace every cell).
+//! Zero-allocation proofs for both hot paths:
+//!
+//! * the sweep engine — after warm-up, repeated [`SimWorkspace::run`]
+//!   calls must not touch the heap at all (the point of PR 2's CSR/arena
+//!   rearchitecture); and
+//! * the REAL training pipeline — after the warm-up step populates the
+//!   per-worker `BufferPool`, a steady-state `train --backend sim` step
+//!   performs zero heap allocations **per stage worker** (the point of
+//!   the buffer-donation layer: pooled outputs, by-handle stashes,
+//!   bounded channels, in-place Adam).
 //!
 //! The proof is a thread-local counting `#[global_allocator]`: it counts
 //! this thread's `alloc`/`realloc`/`alloc_zeroed` calls (dealloc is
 //! free-side and irrelevant to "allocates nothing"), so other test
-//! threads can't pollute the measurement.  This lives in its own
-//! integration-test binary because a global allocator is process-wide.
+//! threads can't pollute the measurement.  The training probe runs one
+//! stage worker ON THIS THREAD via `train_probed`, which is exactly what
+//! makes its per-step allocations observable here.  This lives in its
+//! own integration-test binary because a global allocator is
+//! process-wide.
 
-use std::alloc::{GlobalAlloc, Layout, System};
-use std::cell::Cell;
-
-struct CountingAlloc;
-
-thread_local! {
-    static ALLOCS: Cell<u64> = const { Cell::new(0) };
-}
-
-unsafe impl GlobalAlloc for CountingAlloc {
-    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
-        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
-        System.alloc(l)
-    }
-
-    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
-        System.dealloc(p, l)
-    }
-
-    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
-        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
-        System.realloc(p, l, new_size)
-    }
-
-    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
-        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
-        System.alloc_zeroed(l)
-    }
-}
-
-#[global_allocator]
-static COUNTER: CountingAlloc = CountingAlloc;
-
-fn allocs() -> u64 {
-    ALLOCS.with(|c| c.get())
-}
+#[path = "support/counting_alloc.rs"]
+mod counting_alloc;
+use counting_alloc::allocs;
 
 use bpipe::bpipe::{pair_adjacent_layout, rebalance, sequential_layout};
 use bpipe::config::paper_experiment;
+use bpipe::coordinator::{train_probed, RebalancePlan, TrainConfig};
+use bpipe::runtime::{Manifest, SimBackend};
 use bpipe::schedule::{gpipe, interleaved, one_f_one_b, v_shaped};
 use bpipe::sim::{SimOptions, SimWorkspace};
 
@@ -98,6 +75,49 @@ fn steady_state_sweep_cells_allocate_nothing() {
         after - before,
         0,
         "steady-state sweep cells must perform zero heap allocations"
+    );
+}
+
+/// THE acceptance invariant of the buffer-lifecycle layer: a
+/// steady-state training step of the real pipeline allocates NOTHING on
+/// the stage-worker thread.  Stage 0 is probed on this thread — it is
+/// also a BPipe evictor here (uniform derived bound), so the measured
+/// path covers recv → donate-fwd → stash → evict/load through the remote
+/// store → donate-bwd → in-place Adam → bounded-channel sends.
+#[test]
+fn steady_state_train_step_allocates_nothing_per_stage_worker() {
+    let cfg = TrainConfig {
+        manifest: Some(Manifest::synthetic(4, 16, 8, 2, 64, &[1, 2])),
+        steps: 6,
+        microbatches: 6,
+        lr: 2e-3,
+        seed: 7,
+        rebalance: RebalancePlan::Uniform { bound: None },
+        ..TrainConfig::default()
+    };
+    let mut per_step: Vec<(u64, u64)> = Vec::with_capacity(cfg.steps as usize);
+    let mut last = 0u64;
+    let r = train_probed::<SimBackend>(&cfg, 0, &mut |step| {
+        let now = allocs();
+        per_step.push((step, now - last));
+        last = now;
+    })
+    .unwrap();
+    assert_eq!(r.losses.len(), 6);
+    assert!(r.stage_stats[0].evictions > 0, "the probed stage must actually evict");
+    let (warm_step, warm) = per_step[0];
+    assert_eq!(warm_step, 1);
+    assert!(warm > 0, "the warm-up step is expected to populate the pool");
+    for &(step, n) in &per_step[1..] {
+        assert_eq!(n, 0, "steady-state step {step} performed {n} heap allocations");
+    }
+    // and the pool telemetry agrees: misses stopped after warm-up
+    assert!(r.stage_stats[0].pool_hits > 0);
+    assert!(
+        r.stage_stats[0].pool_misses < r.stage_stats[0].pool_hits,
+        "steady state must be hit-dominated: {} misses vs {} hits",
+        r.stage_stats[0].pool_misses,
+        r.stage_stats[0].pool_hits
     );
 }
 

@@ -1,0 +1,250 @@
+//! Pooled/donating execution must be **bit-identical** to
+//! fresh-allocation execution — the buffer-lifecycle layer is a memory
+//! optimization, never a numerics change.
+//!
+//! Two altitudes:
+//!
+//! * op level — every sim artifact op, executed through
+//!   `execute_pooled` under EVERY donation mask (each subset of inputs
+//!   donated) and both argument conventions (params device-resident vs
+//!   inline), must reproduce `execute`'s outputs exactly (data AND
+//!   shape);
+//! * pipeline level — every schedule family × {rebalance off, uniform
+//!   bound, per-stage bounds}, trained end to end on the donating
+//!   [`SimBackend`] and on [`UnpooledSimBackend`] (the trait's
+//!   fresh-allocation defaults), must produce identical losses and
+//!   identical stash/eviction behavior.
+
+use bpipe::coordinator::{plan_schedule, train, RebalancePlan, TrainConfig};
+use bpipe::runtime::{
+    Arg, Backend, BufferPool, HostTensor, Manifest, SimBackend, UnpooledSimBackend,
+};
+use bpipe::schedule::Family;
+
+fn manifest() -> Manifest {
+    Manifest::synthetic(4, 8, 4, 2, 32, &[1, 2])
+}
+
+/// Deterministic pseudo-random f32 tensor.
+fn f32_t(len: usize, shape: &[i64], salt: u64) -> HostTensor {
+    let data: Vec<f32> = (0..len)
+        .map(|i| {
+            let z = (i as u64).wrapping_mul(0x9E37_79B9).wrapping_add(salt.wrapping_mul(31));
+            ((z % 2003) as f32) * 1e-3 - 1.0
+        })
+        .collect();
+    HostTensor::F32 { data, shape: shape.to_vec() }
+}
+
+fn i32_t(len: usize, shape: &[i64], modulo: i32) -> HostTensor {
+    let data: Vec<i32> = (0..len as i32).map(|i| (i * 7 + 3) % modulo).collect();
+    HostTensor::I32 { data, shape: shape.to_vec() }
+}
+
+/// Non-negative variant (Adam's second moment must stay ≥ 0 or the
+/// update is NaN in both paths, which `assert_eq!` cannot compare).
+fn f32_nonneg(len: usize, shape: &[i64], salt: u64) -> HostTensor {
+    let mut t = f32_t(len, shape, salt);
+    for v in t.f32s_mut().unwrap() {
+        *v = v.abs();
+    }
+    t
+}
+
+/// Run one op through `execute_pooled` with the given donation mask
+/// (bit i set = input i donated).  `params_slot` keeps input 0 as the
+/// device-resident leading argument, the worker's convention.
+fn run_pooled(
+    b: &SimBackend,
+    exe: &<SimBackend as Backend>::Exec,
+    inputs: &[&HostTensor],
+    mask: u32,
+    params_slot: bool,
+) -> Vec<HostTensor> {
+    let mut pool = BufferPool::new();
+    let mut out = Vec::new();
+    let skip = usize::from(params_slot);
+    let mut args: Vec<Arg<'_>> = inputs[skip..]
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| {
+            if mask >> (i + skip) & 1 == 1 {
+                Arg::Donated(t.clone())
+            } else {
+                Arg::Borrowed(t)
+            }
+        })
+        .collect();
+    let params = if params_slot { Some(inputs[0]) } else { None };
+    b.execute_pooled(exe, params, &mut args, &mut pool, &mut out)
+        .expect("pooled execution failed");
+    out
+}
+
+#[test]
+fn every_op_is_mask_invariant() {
+    let m = manifest();
+    let b = SimBackend::create(&m).unwrap();
+    let spec = &m.spec;
+    let h = spec.h as usize;
+    let positions = (spec.b * spec.s) as usize;
+    let act = positions * h;
+    let act_shape = [spec.b as i64, spec.s as i64, spec.h as i64];
+    let tok_shape = [spec.b as i64, spec.s as i64];
+
+    let n_mid = m.param_count("mid").unwrap() as usize;
+    let n_first = m.param_count("first").unwrap() as usize;
+    let n_last = m.param_count("last").unwrap() as usize;
+
+    // (artifact, inputs) per op — inputs[0] is always the params-like arg
+    let cases: Vec<(&str, Vec<HostTensor>)> = vec![
+        ("mid_init", vec![HostTensor::scalar_i32(11)]),
+        (
+            "first_fwd",
+            vec![f32_t(n_first, &[n_first as i64], 1), i32_t(positions, &tok_shape, spec.v as i32)],
+        ),
+        ("mid_fwd", vec![f32_t(n_mid, &[n_mid as i64], 2), f32_t(act, &act_shape, 3)]),
+        (
+            "first_bwd",
+            vec![
+                f32_t(n_first, &[n_first as i64], 4),
+                i32_t(positions, &tok_shape, spec.v as i32),
+                f32_t(act, &act_shape, 5),
+            ],
+        ),
+        (
+            "mid_bwd",
+            vec![
+                f32_t(n_mid, &[n_mid as i64], 6),
+                f32_t(act, &act_shape, 7),
+                f32_t(act, &act_shape, 8),
+            ],
+        ),
+        (
+            "last_bwd",
+            vec![
+                f32_t(n_last, &[n_last as i64], 9),
+                f32_t(act, &act_shape, 10),
+                i32_t(positions, &tok_shape, spec.v as i32),
+            ],
+        ),
+        (
+            "adam_mid",
+            vec![
+                f32_t(n_mid, &[n_mid as i64], 12),
+                f32_t(n_mid, &[n_mid as i64], 13),
+                f32_t(n_mid, &[n_mid as i64], 14),
+                f32_nonneg(n_mid, &[n_mid as i64], 15),
+                HostTensor::scalar_i32(3),
+                HostTensor::scalar_f32(1e-2),
+            ],
+        ),
+    ];
+
+    for (name, inputs) in &cases {
+        let exe = b.compile(&m, name).unwrap();
+        let refs: Vec<&HostTensor> = inputs.iter().collect();
+        let fresh = b.execute(&exe, &refs).unwrap();
+        let k = inputs.len() as u32;
+        for mask in 0..(1u32 << k) {
+            for params_slot in [false, true] {
+                if params_slot && mask & 1 == 1 {
+                    continue; // the params slot is borrowed by definition
+                }
+                let pooled = run_pooled(&b, &exe, &refs, mask, params_slot);
+                assert_eq!(
+                    pooled, fresh,
+                    "{name}: mask {mask:#b} (params_slot={params_slot}) diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn default_trait_path_matches_the_donating_override() {
+    // UnpooledSimBackend has NO execute_pooled override, so this pins the
+    // trait's default (upload + execute + recycle) against the sim's
+    // in-place implementation
+    let m = manifest();
+    let b = SimBackend::create(&m).unwrap();
+    let ub = UnpooledSimBackend::create(&m).unwrap();
+    let n = m.param_count("mid").unwrap() as usize;
+    let w = f32_t(n, &[n as i64], 21);
+    let x = f32_t(16, &[16], 22);
+    let dy = f32_t(16, &[16], 23);
+    for name in ["mid_fwd", "mid_bwd"] {
+        let exe_a = b.compile(&m, name).unwrap();
+        let exe_b = ub.compile(&m, name).unwrap();
+        let inputs: Vec<&HostTensor> =
+            if name == "mid_fwd" { vec![&w, &x] } else { vec![&w, &x, &dy] };
+        let run = |donate_all: bool| -> (Vec<HostTensor>, Vec<HostTensor>) {
+            let mask = if donate_all { u32::MAX ^ 1 } else { 0 };
+            let mut pool = BufferPool::new();
+            let mut out_b = Vec::new();
+            let mut args: Vec<Arg<'_>> = inputs[1..]
+                .iter()
+                .map(|&t| {
+                    if donate_all { Arg::Donated(t.clone()) } else { Arg::Borrowed(t) }
+                })
+                .collect();
+            ub.execute_pooled(&exe_b, Some(inputs[0]), &mut args, &mut pool, &mut out_b)
+                .unwrap();
+            let pooled = run_pooled(&b, &exe_a, &inputs, mask, true);
+            (pooled, out_b)
+        };
+        for donate_all in [false, true] {
+            let (pooled, unpooled) = run(donate_all);
+            assert_eq!(pooled, unpooled, "{name} (donate_all={donate_all}) diverged");
+        }
+    }
+}
+
+/// End to end: the donating pipeline vs the owned-value pipeline, for
+/// all five schedule families × three rebalance plans over one virtual
+/// depth — losses, stash high-waters and eviction counts all identical.
+#[test]
+fn pooled_training_matches_owned_baseline_across_families_and_plans() {
+    let families = [
+        Family::OneFOneB,
+        Family::GPipe,
+        Family::Interleaved { v: 2 },
+        Family::VShaped,
+        Family::ZigZag { v: 4 },
+    ];
+    let m = 4u64;
+    for family in families {
+        let p = 8 / family.chunks();
+        let uniform_caps: Vec<u64> = {
+            let (_s, caps) = plan_schedule(family, p, m, &RebalancePlan::Uniform { bound: None });
+            caps.iter().map(|&c| c as u64).collect()
+        };
+        let plans = [
+            RebalancePlan::Off,
+            RebalancePlan::Uniform { bound: None },
+            RebalancePlan::PerStage { bounds: uniform_caps },
+        ];
+        for plan in plans {
+            let cfg = TrainConfig {
+                manifest: Some(Manifest::synthetic(8, 16, 8, 2, 64, &[1, 2])),
+                family,
+                steps: 2,
+                microbatches: m,
+                lr: 2e-3,
+                seed: 7,
+                rebalance: plan.clone(),
+                ..TrainConfig::default()
+            };
+            let pooled = train::<SimBackend>(&cfg).unwrap();
+            let owned = train::<UnpooledSimBackend>(&cfg).unwrap();
+            assert_eq!(
+                pooled.losses, owned.losses,
+                "{family:?} × {plan:?}: pooled and owned losses diverged"
+            );
+            for (a, b) in pooled.stage_stats.iter().zip(owned.stage_stats.iter()) {
+                assert_eq!(a.stash_high_water, b.stash_high_water, "{family:?} × {plan:?}");
+                assert_eq!(a.evictions, b.evictions, "{family:?} × {plan:?}");
+            }
+        }
+    }
+}

@@ -1,0 +1,49 @@
+//! Thread-local counting `#[global_allocator]`, shared (via `#[path]`
+//! inclusion) by the zero-alloc test binary
+//! (`rust/tests/alloc_steady_state.rs`) and the hot-path bench
+//! (`benches/runtime_hotpath.rs`), so the two instruments can never
+//! drift apart.
+//!
+//! Counts this thread's `alloc`/`realloc`/`alloc_zeroed` calls —
+//! dealloc is free-side and irrelevant to "allocates nothing" — so
+//! other threads (workers, feeder, collector, other tests) can't
+//! pollute the measurement.  Each including binary gets its own copy of
+//! the statics; a binary must include this module at most once.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+pub struct CountingAlloc;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(l)
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(p, l, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(l)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+/// This thread's cumulative allocation count.
+pub fn allocs() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
