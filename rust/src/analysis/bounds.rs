@@ -1,0 +1,262 @@
+//! Pass 3 — **static memory bounds**: closed-form per-stage stash
+//! high-waters computed from the schedule's op order alone (no discrete
+//! event simulation), in the spirit of the paper's Eq. 3/4 but extended
+//! to evict/load traffic between BPipe pairs.
+//!
+//! Three numbers per stage bracket what the DES (and the real
+//! coordinator) can observe:
+//!
+//! * `lo` — the stage's **own** resident high-water
+//!   ([`StageProgram::stash_high_water`]): +1 per Fwd/Load, −1 per
+//!   Bwd/Evict, prefix max.  A sound *lower* bound on the dynamic peak
+//!   (accepted partner stashes only add), so `lo`-based OOM verdicts
+//!   are safe to act on — this is what the sweep's skip gate uses.
+//! * `pred` — `lo` plus the partner stage's *planned* accepted
+//!   high-water (prefix max of +1 per partner Evict, −1 per partner
+//!   Load).  On contention-free pair-adjacent layouts the DES peak is
+//!   `pred` or `pred + 1` (one transient slot while a load overlaps the
+//!   retiring stash) on every golden cell.
+//! * `hi` — a sound *upper* bound: the stage's own high-water with
+//!   evict frees **delayed indefinitely** (+1 Fwd/Load, −1 Bwd, Evict
+//!   ignored) plus the worst-case set of simultaneously-parked partner
+//!   stashes (every partner Evict adds its `(mb, chunk)` key to the
+//!   remote set, the partner's Bwd removes it; max set size).  Holds on
+//!   every golden cell including sequential layouts, where inter-node
+//!   link contention delays evict frees far past the planned schedule.
+//!
+//! Diagnostic codes emitted here: `static-bound-exceeded` (error — a
+//! stage's own static high-water cannot fit under the planned
+//! bound/`stage_bounds`) and `provably-oom` (warning — with an
+//! experiment's cluster attached, even the `lo` peak exceeds HBM).
+
+use super::diagnostics::Diagnostic;
+use crate::bpipe::pairing;
+use crate::config::ExperimentConfig;
+use crate::model::MemoryModel;
+use crate::schedule::{OpKind, Schedule, ScheduleKind, StageProgram};
+
+/// The static bracket for one stage (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageBoundEstimate {
+    pub stage: u64,
+    /// Own resident high-water — sound lower bound on the dynamic peak.
+    pub lo: i64,
+    /// `lo` + partner's planned accepted high-water — matches the DES
+    /// within +1 on contention-free pair-adjacent layouts.
+    pub pred: i64,
+    /// Delayed-free + worst-case accepted — sound upper bound.
+    pub hi: i64,
+    /// The planned resident cap (`stage_bounds[s]`, else the uniform
+    /// BPipe bound), when the schedule is rebalanced.
+    pub planned: Option<u64>,
+}
+
+/// Partner's *planned* accepted high-water: +1 per Evict, −1 per Load,
+/// prefix max over the partner's program.
+fn accepted_planned(prog: &StageProgram) -> i64 {
+    let mut cur = 0i64;
+    let mut hw = 0i64;
+    for op in &prog.ops {
+        match op.kind {
+            OpKind::Evict => cur += 1,
+            OpKind::Load => cur -= 1,
+            OpKind::Fwd | OpKind::Bwd => {}
+        }
+        hw = hw.max(cur);
+    }
+    hw
+}
+
+/// Own high-water with evict frees delayed indefinitely: +1 per
+/// Fwd/Load, −1 per Bwd, Evict ignored.
+fn own_delayed(prog: &StageProgram) -> i64 {
+    let mut cur = 0i64;
+    let mut hw = 0i64;
+    for op in &prog.ops {
+        match op.kind {
+            OpKind::Fwd | OpKind::Load => cur += 1,
+            OpKind::Bwd => cur -= 1,
+            OpKind::Evict => {}
+        }
+        hw = hw.max(cur);
+    }
+    hw
+}
+
+/// Worst-case count of partner stashes parked here at once: an Evict
+/// parks `(mb, chunk)` until the partner's *backward* for that key
+/// retires it (the load only copies; the slot is reclaimed at retire),
+/// so the bound is the max size of the evicted-key set.
+fn accepted_worst(prog: &StageProgram) -> i64 {
+    let mut parked: Vec<(u64, u64)> = Vec::new();
+    let mut hw = 0usize;
+    for op in &prog.ops {
+        match op.kind {
+            OpKind::Evict => {
+                parked.push((op.mb, op.chunk));
+                hw = hw.max(parked.len());
+            }
+            OpKind::Bwd => parked.retain(|&k| k != (op.mb, op.chunk)),
+            OpKind::Fwd | OpKind::Load => {}
+        }
+    }
+    hw as i64
+}
+
+/// The planned resident cap for `stage`, if the schedule carries one.
+pub fn planned_cap(s: &Schedule, stage: u64) -> Option<u64> {
+    if let Some(sb) = &s.stage_bounds {
+        return sb.get(stage as usize).copied();
+    }
+    match s.kind {
+        ScheduleKind::BPipe { bound } => Some(bound),
+        _ => None,
+    }
+}
+
+/// Compute the `[lo, pred, hi]` bracket for every stage.
+pub fn static_bounds(s: &Schedule) -> Vec<StageBoundEstimate> {
+    (0..s.p)
+        .map(|stage| {
+            let own = s.program(stage);
+            let partner = s.program(pairing::partner(s.p, stage));
+            let lo = own.stash_high_water();
+            StageBoundEstimate {
+                stage,
+                lo,
+                pred: lo + accepted_planned(partner),
+                hi: own_delayed(own) + accepted_worst(partner),
+                planned: planned_cap(s, stage),
+            }
+        })
+        .collect()
+}
+
+/// Error-level findings: a stage whose own static high-water exceeds
+/// its planned cap (the plan cannot hold, no matter the interleaving).
+pub fn check_bounds(s: &Schedule) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    for est in static_bounds(s) {
+        if let Some(cap) = est.planned {
+            if est.lo > cap as i64 {
+                diags.push(Diagnostic::error(
+                    "static-bound-exceeded",
+                    Some(est.stage),
+                    format!(
+                        "own static stash high-water {} exceeds the planned bound {cap}",
+                        est.lo
+                    ),
+                ));
+            }
+        }
+    }
+    diags
+}
+
+/// Per-stage **lower-bound** peak bytes on `e`'s cluster: weights +
+/// optimizer state + reserved pool + `lo` stashes of one chunk's
+/// activation each — the fewest bytes any execution of this schedule
+/// can peak at.
+pub fn static_peak_bytes(e: &ExperimentConfig, s: &Schedule) -> Vec<u64> {
+    let mm = MemoryModel::new(e);
+    let chunks = s.chunks.max(1);
+    (0..s.p)
+        .map(|stage| {
+            let lo = s.program(stage).stash_high_water().max(0) as u64;
+            let act = mm.activation_bytes_per_microbatch(stage) / chunks;
+            mm.weight_opt_bytes(stage) + lo * act + e.cluster.reserved_bytes
+        })
+        .collect()
+}
+
+/// Sweep skip gate: the first stage whose **lower-bound** peak already
+/// exceeds HBM on `e`'s cluster, with the peak bytes.  Sound: the
+/// dynamic stash peak is ≥ `lo` on every stage, and peak bytes are
+/// monotone in resident stashes, so a `Some` here means the DES cell
+/// must OOM — it can be skipped without simulating.
+pub fn provably_oom_stage(e: &ExperimentConfig, s: &Schedule) -> Option<(u64, u64)> {
+    static_peak_bytes(e, s)
+        .into_iter()
+        .enumerate()
+        .find(|&(_, bytes)| bytes > e.cluster.hbm_bytes)
+        .map(|(stage, bytes)| (stage as u64, bytes))
+}
+
+/// Warning-level findings from the capacity model (used when the plan
+/// carries an experiment, i.e. `RebalancePlan::Capacity`).
+pub fn check_capacity(e: &ExperimentConfig, s: &Schedule) -> Vec<Diagnostic> {
+    match provably_oom_stage(e, s) {
+        Some((stage, bytes)) => vec![Diagnostic::warning(
+            "provably-oom",
+            Some(stage),
+            format!(
+                "lower-bound peak {:.1} GiB exceeds HBM {:.1} GiB — every run of this plan OOMs",
+                bytes as f64 / (1u64 << 30) as f64,
+                e.cluster.hbm_bytes as f64 / (1u64 << 30) as f64,
+            ),
+        )],
+        None => Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bpipe::rebalance;
+    use crate::schedule::Family;
+
+    #[test]
+    fn base_1f1b_bracket_is_tight() {
+        // no evict/load traffic: lo == pred == hi == the 1F1B in-flight
+        let s = Family::OneFOneB.build(8, 16);
+        for est in static_bounds(&s) {
+            assert_eq!(est.lo, est.pred, "stage {}", est.stage);
+            assert_eq!(est.lo, est.hi, "stage {}", est.stage);
+            let natural =
+                crate::model::memory::one_f_one_b_in_flight(8, est.stage, 16) as i64;
+            assert_eq!(est.lo, natural, "stage {}", est.stage);
+            assert_eq!(est.planned, None);
+        }
+    }
+
+    #[test]
+    fn rebalanced_schedule_brackets_the_accepted_traffic() {
+        let s = rebalance(&Family::OneFOneB.build(8, 16), None);
+        let ests = static_bounds(&s);
+        for est in &ests {
+            let cap = est.planned.expect("rebalanced schedules carry a bound") as i64;
+            assert!(est.lo <= cap, "stage {}: lo {} over cap {cap}", est.stage, est.lo);
+            assert!(est.pred >= est.lo && est.hi >= est.pred, "{est:?}");
+        }
+        // acceptor stages (partners of evictors) see accepted traffic
+        assert!(ests.iter().any(|e| e.pred > e.lo), "no accepted traffic found");
+        assert!(check_bounds(&s).is_empty());
+    }
+
+    #[test]
+    fn undersized_stage_bounds_flag_static_bound_exceeded() {
+        let mut s = Family::OneFOneB.build(4, 8);
+        // stage 0's natural in-flight is 4; claim a cap of 2 without
+        // rebalancing — statically impossible
+        s.stage_bounds = Some(vec![2, 2, 2, 1]);
+        let diags = check_bounds(&s);
+        assert!(
+            diags.iter().any(|d| d.code == "static-bound-exceeded" && d.stage == Some(0)),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn exp8_base_1f1b_is_provably_oom_at_stage_0() {
+        let e = crate::config::paper_experiment(8).unwrap();
+        let base = Family::OneFOneB.build(e.parallel.p, e.parallel.num_microbatches());
+        let (stage, _) = provably_oom_stage(&e, &base).expect("exp 8 base 1F1B OOMs");
+        assert_eq!(stage, 0);
+        assert_eq!(check_capacity(&e, &base).len(), 1);
+        // the capacity-planned rebalance fits — no OOM verdict
+        let bounds = rebalance::capacity_stage_bounds(&e, &base);
+        let planned = rebalance::rebalance_bounded(&base, &bounds);
+        assert_eq!(provably_oom_stage(&e, &planned), None);
+        assert!(check_capacity(&e, &planned).is_empty());
+    }
+}

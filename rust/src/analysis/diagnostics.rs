@@ -1,0 +1,136 @@
+//! Diagnostic values produced by the static analyzer.
+//!
+//! Every finding — a deadlock cycle, a donation-linearity violation, a
+//! memory bound that cannot hold — is reported as a [`Diagnostic`] with
+//! a stable machine-readable `code`, a severity, and a human-readable
+//! message naming the ops and channels involved.  The JSON form
+//! (`bpipe check --json`) reuses [`util::json`](crate::util) so
+//! downstream tools (the planned schedule synthesizer, CI) can gate on
+//! exact codes instead of scraping prose.
+
+use crate::util::Json;
+
+/// How bad a finding is.  `Error` findings make [`super::check_plan`]
+/// callers reject the plan; `Warning` and `Info` are advisory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Info,
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn label(self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One finding from a static-analysis pass.
+///
+/// `code` is a stable kebab-case identifier (see the module docs of
+/// [`super::protocol`], [`super::linearity`] and [`super::bounds`] for
+/// the full vocabulary); `stage` is the physical stage the finding is
+/// anchored to, when one exists.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub severity: Severity,
+    pub code: &'static str,
+    pub stage: Option<u64>,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn error(code: &'static str, stage: Option<u64>, message: String) -> Self {
+        Diagnostic { severity: Severity::Error, code, stage, message }
+    }
+
+    pub fn warning(code: &'static str, stage: Option<u64>, message: String) -> Self {
+        Diagnostic { severity: Severity::Warning, code, stage, message }
+    }
+
+    pub fn info(code: &'static str, stage: Option<u64>, message: String) -> Self {
+        Diagnostic { severity: Severity::Info, code, stage, message }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("severity", Json::str(self.severity.label())),
+            ("code", Json::str(self.code)),
+            (
+                "stage",
+                match self.stage {
+                    Some(s) => Json::Num(s as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("message", Json::str(&self.message)),
+        ])
+    }
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.stage {
+            Some(s) => {
+                write!(f, "{}[{}] stage {}: {}", self.severity.label(), self.code, s, self.message)
+            }
+            None => write!(f, "{}[{}]: {}", self.severity.label(), self.code, self.message),
+        }
+    }
+}
+
+/// True iff any finding is error-level (the gate condition used by
+/// `plan_schedule` and the `bpipe check` exit code).
+pub fn has_errors(diags: &[Diagnostic]) -> bool {
+    diags.iter().any(|d| d.severity == Severity::Error)
+}
+
+/// Render findings one per line, errors first.
+pub fn render_diagnostics(diags: &[Diagnostic]) -> String {
+    let mut sorted: Vec<&Diagnostic> = diags.iter().collect();
+    sorted.sort_by(|a, b| b.severity.cmp(&a.severity));
+    let mut out = String::new();
+    for d in sorted {
+        out.push_str(&d.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// JSON array of findings (the payload of `bpipe check --json`).
+pub fn diagnostics_to_json(diags: &[Diagnostic]) -> Json {
+    Json::Arr(diags.iter().map(Diagnostic::to_json).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_json_name_the_code() {
+        let d = Diagnostic::error("deadlock-cycle", Some(3), "stuck".into());
+        let text = d.to_string();
+        assert!(text.contains("error[deadlock-cycle]") && text.contains("stage 3"), "{text}");
+        let j = d.to_json().to_string();
+        assert!(j.contains("\"code\":\"deadlock-cycle\"") && j.contains("\"stage\":3"), "{j}");
+    }
+
+    #[test]
+    fn severity_orders_and_gates() {
+        assert!(Severity::Error > Severity::Warning && Severity::Warning > Severity::Info);
+        let ds = vec![Diagnostic::info("x", None, "i".into())];
+        assert!(!has_errors(&ds));
+        let ds = vec![
+            Diagnostic::info("x", None, "i".into()),
+            Diagnostic::error("y", None, "e".into()),
+        ];
+        assert!(has_errors(&ds));
+        let rendered = render_diagnostics(&ds);
+        let first = rendered.lines().next().unwrap();
+        assert!(first.starts_with("error["), "errors sort first: {rendered}");
+    }
+}

@@ -1,0 +1,272 @@
+//! Pass 2 — **donation linearity**: an abstract interpretation of the
+//! `StageRunner` argument lifecycle, proving every `Arg::Donated`
+//! handle is spent exactly once and never read after donation, and that
+//! the stash slot array `(capacity, m, chunks)` is never exceeded.
+//!
+//! The runner's donation masks are fixed per op kind: a forward stashes
+//! its input (one live handle per `(mb, chunk)` key), a backward
+//! donates the stashed input and the incoming gradient, an evict
+//! donates the stash to the remote store, a load re-materializes it.
+//! So each key walks a four-state lattice:
+//!
+//! ```text
+//!              Fwd                Evict
+//!   Unborn ─────────▶ Resident ◀─────────▶ Remote
+//!                        │          Load
+//!                    Bwd │
+//!                        ▼
+//!                      Spent      (re-entered by a later Fwd: the slot
+//!                                  is free and a NEW handle is created)
+//! ```
+//!
+//! Any transition outside this diagram is a linearity violation the
+//! runtime would hit as a panic (`double stash`, `not resident`,
+//! `load of non-evicted`) or as silent memory unsafety if unchecked.
+//! The Adam flush's donations (`w`, `g`, `m`, `v`, one mask per chunk,
+//! outputs re-captured into the same slots) are structurally linear —
+//! fixed code path, no schedule dependence — and need no per-schedule
+//! check.
+//!
+//! Diagnostic codes emitted here: `slot-out-of-range` (a key outside
+//! the `m × chunks` slot array), `double-stash` (Fwd/Load into an
+//! occupied slot), `use-uninitialized` (Bwd/Evict of a never-stashed
+//! key), `use-after-donate` (Bwd of a key whose handle lives in the
+//! remote store, or Load of a key never donated there),
+//! `double-donate` (Bwd/Evict of an already-spent handle),
+//! `stash-overflow` (resident count above the planned capacity), and
+//! `donation-leak` (handles still live at end of step, where the runner
+//! asserts its stash is empty).  All are error-level.
+
+use std::collections::HashMap;
+
+use super::bounds::planned_cap;
+use super::diagnostics::Diagnostic;
+use crate::schedule::{OpKind, Schedule};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum KeyState {
+    Resident,
+    Remote,
+    Spent,
+}
+
+/// Check donation linearity with an explicit per-stage stash capacity
+/// (resident-handle ceiling).  [`check_linearity`] derives the capacity
+/// from the schedule itself; synthesis tools can probe tighter ones.
+pub fn check_linearity_with_caps(s: &Schedule, caps: &[i64]) -> Vec<Diagnostic> {
+    let chunks = s.chunks.max(1);
+    let mut diags = Vec::new();
+    for stage in 0..s.p {
+        let cap = caps.get(stage as usize).copied().unwrap_or(i64::MAX);
+        let mut state: HashMap<(u64, u64), KeyState> = HashMap::new();
+        let mut resident = 0i64;
+        for op in &s.program(stage).ops {
+            let key = (op.mb, op.chunk);
+            let at = format!("{:?} mb{} c{}", op.kind, op.mb, op.chunk);
+            if op.mb >= s.m || op.chunk >= chunks {
+                diags.push(Diagnostic::error(
+                    "slot-out-of-range",
+                    Some(stage),
+                    format!("{at} is outside the {}x{} slot array", s.m, chunks),
+                ));
+                continue;
+            }
+            match op.kind {
+                OpKind::Fwd => match state.get(&key) {
+                    Some(KeyState::Resident) | Some(KeyState::Remote) => {
+                        diags.push(Diagnostic::error(
+                            "double-stash",
+                            Some(stage),
+                            format!("{at} stashes into an occupied slot"),
+                        ));
+                    }
+                    // Unborn or Spent: the slot is free, a new handle is born
+                    None | Some(KeyState::Spent) => {
+                        state.insert(key, KeyState::Resident);
+                        resident += 1;
+                    }
+                },
+                OpKind::Bwd => match state.get(&key) {
+                    Some(KeyState::Resident) => {
+                        state.insert(key, KeyState::Spent);
+                        resident -= 1;
+                    }
+                    Some(KeyState::Remote) => diags.push(Diagnostic::error(
+                        "use-after-donate",
+                        Some(stage),
+                        format!("{at} reads a stash donated to the remote store (no Load)"),
+                    )),
+                    Some(KeyState::Spent) => diags.push(Diagnostic::error(
+                        "double-donate",
+                        Some(stage),
+                        format!("{at} donates an already-spent handle"),
+                    )),
+                    None => diags.push(Diagnostic::error(
+                        "use-uninitialized",
+                        Some(stage),
+                        format!("{at} consumes a never-stashed key"),
+                    )),
+                },
+                OpKind::Evict => match state.get(&key) {
+                    Some(KeyState::Resident) => {
+                        state.insert(key, KeyState::Remote);
+                        resident -= 1;
+                    }
+                    Some(KeyState::Remote) | Some(KeyState::Spent) => {
+                        diags.push(Diagnostic::error(
+                            "double-donate",
+                            Some(stage),
+                            format!("{at} donates an already-donated handle"),
+                        ));
+                    }
+                    None => diags.push(Diagnostic::error(
+                        "use-uninitialized",
+                        Some(stage),
+                        format!("{at} evicts a never-stashed key"),
+                    )),
+                },
+                OpKind::Load => match state.get(&key) {
+                    Some(KeyState::Remote) => {
+                        state.insert(key, KeyState::Resident);
+                        resident += 1;
+                    }
+                    Some(KeyState::Resident) => diags.push(Diagnostic::error(
+                        "double-stash",
+                        Some(stage),
+                        format!("{at} loads into an occupied slot"),
+                    )),
+                    Some(KeyState::Spent) | None => diags.push(Diagnostic::error(
+                        "use-after-donate",
+                        Some(stage),
+                        format!("{at} loads a key the remote store never received"),
+                    )),
+                },
+            }
+            if resident > cap {
+                diags.push(Diagnostic::error(
+                    "stash-overflow",
+                    Some(stage),
+                    format!("{at} raises the resident count to {resident}, over capacity {cap}"),
+                ));
+            }
+        }
+        let leaked: Vec<String> = state
+            .iter()
+            .filter(|(_, &st)| st != KeyState::Spent)
+            .map(|(&(mb, c), &st)| format!("mb{mb} c{c} ({st:?})"))
+            .collect();
+        if !leaked.is_empty() {
+            let mut sorted = leaked;
+            sorted.sort();
+            diags.push(Diagnostic::error(
+                "donation-leak",
+                Some(stage),
+                format!(
+                    "{} handle(s) still live at end of step: {}",
+                    sorted.len(),
+                    sorted.join(", ")
+                ),
+            ));
+        }
+    }
+    diags
+}
+
+/// Pass-2 entry point: capacities default to the planned per-stage
+/// bound (`stage_bounds` / uniform BPipe bound) or, for un-rebalanced
+/// schedules, the program's own high-water — the value `plan_schedule`
+/// sizes the slot arrays with.
+pub fn check_linearity(s: &Schedule) -> Vec<Diagnostic> {
+    let caps: Vec<i64> = (0..s.p)
+        .map(|st| match planned_cap(s, st) {
+            Some(c) => c as i64,
+            None => s.program(st).stash_high_water().max(1),
+        })
+        .collect();
+    check_linearity_with_caps(s, &caps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bpipe::rebalance;
+    use crate::schedule::{Family, Op, Placement, ScheduleKind, StageProgram};
+
+    fn sched(ops: Vec<Op>) -> Schedule {
+        Schedule {
+            p: 1,
+            m: 8,
+            chunks: 1,
+            placement: Placement::Sequential,
+            kind: ScheduleKind::OneFOneB,
+            stage_bounds: None,
+            programs: vec![StageProgram { stage: 0, ops }],
+        }
+    }
+
+    fn codes(ds: &[Diagnostic]) -> Vec<&'static str> {
+        ds.iter().map(|d| d.code).collect()
+    }
+
+    #[test]
+    fn generated_schedules_are_linear() {
+        let fams = [
+            Family::OneFOneB,
+            Family::GPipe,
+            Family::Interleaved { v: 2 },
+            Family::VShaped,
+            Family::ZigZag { v: 4 },
+        ];
+        for f in fams {
+            let p = 8 / f.chunks();
+            let base = f.build(p, 6);
+            assert!(check_linearity(&base).is_empty(), "{f:?} base");
+            let reb = rebalance(&base, None);
+            assert!(check_linearity(&reb).is_empty(), "{f:?} rebalanced");
+        }
+    }
+
+    #[test]
+    fn double_donate_and_use_after_donate() {
+        // Bwd twice on the same key: second one donates a spent handle
+        let ds = check_linearity(&sched(vec![Op::fwd(0), Op::bwd(0), Op::bwd(0)]));
+        assert!(codes(&ds).contains(&"double-donate"), "{ds:?}");
+        // Bwd of an evicted key without a Load: reads a donated handle
+        let ds = check_linearity(&sched(vec![Op::fwd(0), Op::evict(0), Op::bwd(0)]));
+        assert!(codes(&ds).contains(&"use-after-donate"), "{ds:?}");
+        // double evict
+        let ds = check_linearity(&sched(vec![Op::fwd(0), Op::evict(0), Op::evict(0)]));
+        assert!(codes(&ds).contains(&"double-donate"), "{ds:?}");
+    }
+
+    #[test]
+    fn stash_misuse_variants() {
+        let ds = check_linearity(&sched(vec![Op::fwd(0), Op::fwd(0)]));
+        assert!(codes(&ds).contains(&"double-stash"), "{ds:?}");
+        let ds = check_linearity(&sched(vec![Op::bwd(0)]));
+        assert!(codes(&ds).contains(&"use-uninitialized"), "{ds:?}");
+        let ds = check_linearity(&sched(vec![Op::fwd(0), Op::load(0)]));
+        assert!(codes(&ds).contains(&"double-stash"), "{ds:?}");
+        let ds = check_linearity(&sched(vec![Op::load(0)]));
+        assert!(codes(&ds).contains(&"use-after-donate"), "{ds:?}");
+        let mut s = sched(vec![Op::fwd(9), Op::bwd(9)]);
+        s.m = 8;
+        let ds = check_linearity(&s);
+        assert!(codes(&ds).contains(&"slot-out-of-range"), "{ds:?}");
+    }
+
+    #[test]
+    fn overflow_and_leak() {
+        let ds = check_linearity_with_caps(
+            &sched(vec![Op::fwd(0), Op::fwd(1), Op::fwd(2), Op::bwd(0), Op::bwd(1), Op::bwd(2)]),
+            &[2],
+        );
+        assert!(codes(&ds).contains(&"stash-overflow"), "{ds:?}");
+        // forward without a backward leaks its handle past end of step
+        let ds = check_linearity(&sched(vec![Op::fwd(0), Op::fwd(1), Op::bwd(0)]));
+        assert!(codes(&ds).contains(&"donation-leak"), "{ds:?}");
+        // an evicted-but-never-retired key leaks in the remote store
+        let ds = check_linearity(&sched(vec![Op::fwd(0), Op::evict(0)]));
+        assert!(codes(&ds).contains(&"donation-leak"), "{ds:?}");
+    }
+}

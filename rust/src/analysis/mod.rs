@@ -1,0 +1,112 @@
+//! Static schedule/protocol analyzer (`bpipe check`): proves
+//! deadlock-freedom, donation linearity, and memory bounds from the
+//! schedule structure alone — before a single step runs.
+//!
+//! PR 5 turned the coordinator into a web of bounded channels,
+//! busy-polled sends, handle-based stashes and donation masks, with
+//! safety argued in prose.  This module machine-checks those arguments,
+//! in the spirit of the paper's thesis that pipeline memory behavior is
+//! *predictable from the schedule* (Eq. 3/4) — and gives the planned
+//! schedule synthesizer (ROADMAP item 1) a fast run-free verifier to
+//! reject unsound candidates.
+//!
+//! Three passes, each a module:
+//!
+//! | pass | module | proves | codes |
+//! |------|--------|--------|-------|
+//! | 1 | [`protocol`] | progress: the bounded-channel protocol derived from op order + placement routing completes (Kahn-network confluence makes one capacity-semantics run decisive) | `deadlock-cycle`, `fifo-mismatch`, `channel-residue` |
+//! | 2 | [`linearity`] | every donated handle is spent exactly once, never read after donation; slot array never exceeded | `double-donate`, `use-after-donate`, `double-stash`, `use-uninitialized`, `stash-overflow`, `slot-out-of-range`, `donation-leak` |
+//! | 3 | [`bounds`] | closed-form per-stage high-water bracket `[lo, hi]` (with `pred` matching the DES within one transient slot on pair-adjacent layouts); planned bounds hold; provable OOMs found without simulating | `static-bound-exceeded`, `provably-oom` |
+//!
+//! Structural validation ([`crate::schedule::validate`]) runs first and
+//! is reported under the `invalid-schedule` code, so one `check_plan`
+//! call subsumes the old gate.  `plan_schedule` rejects plans carrying
+//! error-level findings, and `sim::sweep` (with
+//! [`SweepOptions::skip_provable_oom`](crate::sim::sweep::SweepOptions))
+//! uses pass 3 to skip provably-OOM grid cells before simulating them.
+
+pub mod bounds;
+pub mod diagnostics;
+pub mod linearity;
+pub mod protocol;
+
+pub use bounds::{
+    check_bounds, check_capacity, planned_cap, provably_oom_stage, static_bounds,
+    static_peak_bytes, StageBoundEstimate,
+};
+pub use diagnostics::{
+    diagnostics_to_json, has_errors, render_diagnostics, Diagnostic, Severity,
+};
+pub use linearity::{check_linearity, check_linearity_with_caps};
+pub use protocol::{check_protocol, ChannelCaps, ProtocolModel, ProtocolRun};
+
+use crate::coordinator::RebalancePlan;
+use crate::schedule::{validate, Schedule};
+
+/// Run every pass over a schedule: structural validation, protocol
+/// progress, donation linearity, and static bounds.
+pub fn check_schedule(s: &Schedule, caps: &ChannelCaps) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    if let Err(e) = validate(s) {
+        diags.push(Diagnostic::error("invalid-schedule", None, e.to_string()));
+    }
+    diags.extend(check_protocol(s, caps));
+    diags.extend(check_linearity(s));
+    diags.extend(check_bounds(s));
+    diags
+}
+
+/// Check a schedule under a concrete [`RebalancePlan`]: everything
+/// [`check_schedule`] proves, plus — for capacity plans, which carry a
+/// cluster — pass-3 provable-OOM verdicts against HBM.
+pub fn check_plan(s: &Schedule, plan: &RebalancePlan, caps: &ChannelCaps) -> Vec<Diagnostic> {
+    let mut diags = check_schedule(s, caps);
+    if let RebalancePlan::Capacity { experiment } = plan {
+        diags.extend(check_capacity(experiment, s));
+    }
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bpipe::rebalance;
+    use crate::schedule::Family;
+
+    #[test]
+    fn clean_plans_have_no_findings() {
+        let caps = ChannelCaps::for_run(8, 1);
+        let s = rebalance(&Family::OneFOneB.build(8, 8), None);
+        let diags = check_plan(&s, &RebalancePlan::Uniform { bound: None }, &caps);
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn invalid_schedules_surface_the_validator_error() {
+        let mut s = Family::OneFOneB.build(4, 4);
+        s.programs[2].ops.pop(); // drop stage 2's last backward
+        let caps = ChannelCaps::for_run(4, 1);
+        let diags = check_schedule(&s, &caps);
+        assert!(
+            diags.iter().any(|d| d.code == "invalid-schedule"),
+            "{diags:?}"
+        );
+        // the dropped backward also starves the protocol and leaks a handle
+        assert!(diags.iter().any(|d| d.code == "deadlock-cycle"), "{diags:?}");
+        assert!(diags.iter().any(|d| d.code == "donation-leak"), "{diags:?}");
+    }
+
+    #[test]
+    fn capacity_plans_carry_oom_verdicts() {
+        let e = crate::config::paper_experiment(8).unwrap();
+        let s = Family::OneFOneB.build(e.parallel.p, e.parallel.num_microbatches());
+        let caps = ChannelCaps::for_run(s.m, s.chunks);
+        let diags = check_plan(&s, &RebalancePlan::Capacity { experiment: e }, &caps);
+        assert!(
+            diags.iter().any(|d| d.code == "provably-oom" && d.stage == Some(0)),
+            "{diags:?}"
+        );
+        // warnings don't gate
+        assert!(!has_errors(&diags));
+    }
+}

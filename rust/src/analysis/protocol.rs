@@ -1,0 +1,545 @@
+//! Pass 1 — **deadlock/progress**: a static model of the coordinator's
+//! channel protocol, checked under bounded-capacity semantics.
+//!
+//! The real coordinator ([`crate::coordinator`]) is a fixed set of
+//! threads (feeder, one worker per stage, loss collector, one remote
+//! store per evicting stage) joined by bounded SPSC channels whose
+//! capacities come from [`ChannelCaps`].  Each thread's channel-op
+//! sequence is fully determined by the [`Schedule`]'s op order and the
+//! [`Placement`](crate::schedule::Placement) routing — no data-dependent
+//! branching — so the system is a Kahn network with bounded FIFO links.
+//! Such networks are **confluent**: whether any execution deadlocks (and
+//! which sends/recvs are stuck when it does) is independent of the
+//! interleaving, so ONE deterministic greedy run under capacity
+//! semantics decides deadlock-freedom for ALL interleavings.  The
+//! exhaustive p=2/m=2 interleaving test (`interleaving_protocol.rs`)
+//! verifies this confluence claim dynamically on a small model.
+//!
+//! One step's analysis covers the whole run: every channel's per-step
+//! send count equals its recv count (checked — residue is reported), so
+//! the network returns to the empty marking after each step and the
+//! wait-cycle structure is step-invariant.
+//!
+//! The feeder-recycle channel is deliberately absent from the model:
+//! the worker side uses `try_send` with a local-pool fallback and the
+//! feeder side uses `try_recv`, so that channel can never block either
+//! endpoint.
+//!
+//! Diagnostic codes emitted here: `deadlock-cycle` (error — a wait-for
+//! cycle, or a wait on a finished producer; the message names each
+//! blocked thread, its op, and the channel), `fifo-mismatch` (error — a
+//! receiver's expected microbatch differs from the channel's FIFO head,
+//! which the runtime's `recv_expect` would panic on), and
+//! `channel-residue` (warning — a channel left non-empty at the end of
+//! the step, meaning send/recv counts drift across steps).
+
+use std::collections::VecDeque;
+
+use super::diagnostics::Diagnostic;
+use crate::schedule::{OpKind, Schedule};
+
+/// Capacities of the coordinator's bounded channels, mirroring the
+/// values `train_inner` wires up.  Tests (and `bpipe check --hot-cap`)
+/// can shrink them to probe where the protocol starts deadlocking.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChannelCaps {
+    /// Per-boundary activation/gradient channel capacity (runtime: m+1).
+    pub hot: usize,
+    /// Token/target feed channel capacity (runtime: 2m).
+    pub feed: usize,
+    /// Loss channel capacity (runtime: 2m).
+    pub loss: usize,
+    /// Remote-store in-flight limit (runtime: m·chunks; the store's
+    /// message channel holds one more than this).
+    pub remote_inflight: usize,
+}
+
+impl ChannelCaps {
+    /// The capacities the real coordinator runs with.
+    pub fn for_run(m: u64, chunks: u64) -> Self {
+        ChannelCaps {
+            hot: (m + 1) as usize,
+            feed: (2 * m) as usize,
+            loss: (2 * m) as usize,
+            remote_inflight: (m * chunks).max(1) as usize,
+        }
+    }
+}
+
+/// Send or receive on one channel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dir {
+    Send,
+    Recv,
+}
+
+/// One channel operation in a thread's trace.  `expect` carries the
+/// microbatch the runtime's `recv_expect` would assert on (None for the
+/// collector, which accepts losses in arrival order).
+#[derive(Debug, Clone)]
+pub struct ChanOp {
+    pub dir: Dir,
+    pub chan: usize,
+    /// Microbatch tag carried by a send / asserted by a recv.
+    pub mb: u64,
+    /// Whether the receiving side asserts the tag (worker `recv_expect`).
+    pub expect: bool,
+    /// Human label of the schedule op this belongs to, e.g. "Fwd mb1 c0".
+    pub label: String,
+}
+
+/// One bounded SPSC channel.
+#[derive(Debug, Clone)]
+pub struct ChannelSpec {
+    pub name: String,
+    pub cap: usize,
+    pub producer: usize,
+    pub consumer: usize,
+}
+
+/// One thread's full channel-op trace for a step.
+#[derive(Debug, Clone)]
+pub struct ThreadTrace {
+    pub name: String,
+    pub ops: Vec<ChanOp>,
+}
+
+/// The protocol model: threads × channels, derived from a schedule.
+#[derive(Debug, Clone)]
+pub struct ProtocolModel {
+    pub threads: Vec<ThreadTrace>,
+    pub channels: Vec<ChannelSpec>,
+}
+
+impl ProtocolModel {
+    /// Derive the thread/channel structure `train_inner` would build for
+    /// this schedule, with the given capacities.
+    pub fn build(s: &Schedule, caps: &ChannelCaps) -> ProtocolModel {
+        let p = s.p;
+        let vp = p * s.chunks.max(1);
+        assert!(vp >= 2, "protocol model needs at least 2 virtual stages");
+        let first_host = s.placement.host_stage(p, 0);
+        let last_host = s.placement.host_stage(p, vp - 1);
+
+        // thread indices: feeder, workers 0..p, collector, stores
+        let feeder = 0usize;
+        let worker = |st: u64| 1 + st as usize;
+        let collector = 1 + p as usize;
+
+        let mut channels: Vec<ChannelSpec> = Vec::new();
+        let mut chan = |name: String, cap: usize, producer: usize, consumer: usize| -> usize {
+            channels.push(ChannelSpec { name, cap: cap.max(1), producer, consumer });
+            channels.len() - 1
+        };
+
+        // per-boundary activation/gradient channels
+        let mut act = Vec::with_capacity((vp - 1) as usize);
+        let mut grad = Vec::with_capacity((vp - 1) as usize);
+        for d in 0..vp - 1 {
+            let src = s.placement.host_stage(p, d);
+            let dst = s.placement.host_stage(p, d + 1);
+            act.push(chan(format!("act[d{d}] s{src}->s{dst}"), caps.hot, worker(src), worker(dst)));
+            grad.push(chan(
+                format!("grad[d{d}] s{dst}->s{src}"),
+                caps.hot,
+                worker(dst),
+                worker(src),
+            ));
+        }
+        let tok = chan(format!("tokens feeder->s{first_host}"), caps.feed, feeder, worker(first_host));
+        let tgt = chan(format!("targets feeder->s{last_host}"), caps.feed, feeder, worker(last_host));
+        let loss = chan(format!("loss s{last_host}->collector"), caps.loss, worker(last_host), collector);
+
+        // remote-store message/response channels, only for stages that evict
+        let mut store_of: Vec<Option<(usize, usize, usize)>> = vec![None; p as usize]; // (thread, msg, resp)
+        let mut store_threads: Vec<(u64, ThreadTrace)> = Vec::new();
+        for st in 0..p {
+            let prog = s.program(st);
+            if prog.ops.iter().any(|o| matches!(o.kind, OpKind::Evict | OpKind::Load)) {
+                let thread = collector + 1 + store_threads.len();
+                let msg = chan(format!("store-msg s{st}"), caps.remote_inflight + 1, worker(st), thread);
+                let resp = chan(format!("store-resp s{st}"), 1, thread, worker(st));
+                store_of[st as usize] = Some((thread, msg, resp));
+                let mut ops = Vec::new();
+                for op in &prog.ops {
+                    let label = format!("{:?} mb{} c{}", op.kind, op.mb, op.chunk);
+                    match op.kind {
+                        OpKind::Evict => {
+                            ops.push(ChanOp { dir: Dir::Recv, chan: msg, mb: op.mb, expect: true, label });
+                        }
+                        OpKind::Load => {
+                            ops.push(ChanOp {
+                                dir: Dir::Recv,
+                                chan: msg,
+                                mb: op.mb,
+                                expect: true,
+                                label: label.clone(),
+                            });
+                            ops.push(ChanOp { dir: Dir::Send, chan: resp, mb: op.mb, expect: true, label });
+                        }
+                        OpKind::Fwd | OpKind::Bwd => {}
+                    }
+                }
+                store_threads.push((st, ThreadTrace { name: format!("store s{st}"), ops }));
+            }
+        }
+
+        let mut threads = Vec::with_capacity(2 + p as usize + store_threads.len());
+        // feeder: m tokens to the first host, m targets to the last host,
+        // interleaved per microbatch exactly as `train_inner` sends them
+        let mut fops = Vec::with_capacity(2 * s.m as usize);
+        for mb in 0..s.m {
+            fops.push(ChanOp { dir: Dir::Send, chan: tok, mb, expect: true, label: format!("feed mb{mb}") });
+            fops.push(ChanOp { dir: Dir::Send, chan: tgt, mb, expect: true, label: format!("feed mb{mb}") });
+        }
+        threads.push(ThreadTrace { name: "feeder".into(), ops: fops });
+
+        // workers: expand each schedule op into its channel ops in the
+        // exact order `StageRunner::run_step` performs them
+        for st in 0..p {
+            let mut ops = Vec::new();
+            for op in &s.program(st).ops {
+                let virt = s.placement.virtual_stage(p, st, op.chunk);
+                let label = format!("{:?} mb{} c{}", op.kind, op.mb, op.chunk);
+                let mut push = |dir: Dir, chan: usize, expect: bool| {
+                    ops.push(ChanOp { dir, chan, mb: op.mb, expect, label: label.clone() });
+                };
+                match op.kind {
+                    OpKind::Fwd => {
+                        if virt == 0 {
+                            push(Dir::Recv, tok, true);
+                        } else {
+                            push(Dir::Recv, act[(virt - 1) as usize], true);
+                        }
+                        if virt == vp - 1 {
+                            push(Dir::Recv, tgt, true);
+                        } else {
+                            push(Dir::Send, act[virt as usize], true);
+                        }
+                    }
+                    OpKind::Bwd => {
+                        if virt < vp - 1 {
+                            push(Dir::Recv, grad[virt as usize], true);
+                        }
+                        if virt > 0 {
+                            push(Dir::Send, grad[(virt - 1) as usize], true);
+                        }
+                        if virt == vp - 1 {
+                            push(Dir::Send, loss, true);
+                        }
+                    }
+                    OpKind::Evict => {
+                        let (_, msg, _) = store_of[st as usize].expect("evict without store");
+                        push(Dir::Send, msg, true);
+                    }
+                    OpKind::Load => {
+                        let (_, msg, resp) = store_of[st as usize].expect("load without store");
+                        push(Dir::Send, msg, true);
+                        push(Dir::Recv, resp, true);
+                    }
+                }
+            }
+            threads.push(ThreadTrace { name: format!("stage {st}"), ops });
+        }
+
+        // collector: one loss per microbatch, any order
+        let cops = (0..s.m)
+            .map(|mb| ChanOp {
+                dir: Dir::Recv,
+                chan: loss,
+                mb,
+                expect: false,
+                label: format!("collect loss #{mb}"),
+            })
+            .collect();
+        threads.push(ThreadTrace { name: "collector".into(), ops: cops });
+        threads.extend(store_threads.into_iter().map(|(_, t)| t));
+
+        ProtocolModel { threads, channels }
+    }
+}
+
+/// Executable state of a [`ProtocolModel`] under capacity semantics.
+/// Clonable and hashable-by-parts so the exhaustive interleaving test
+/// can DFS over it; [`ProtocolRun::run`] is the greedy single run the
+/// analyzer uses (sufficient by confluence, see module docs).
+#[derive(Debug, Clone)]
+pub struct ProtocolRun<'m> {
+    model: &'m ProtocolModel,
+    pc: Vec<usize>,
+    queues: Vec<VecDeque<u64>>,
+    fifo_flagged: Vec<bool>,
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl<'m> ProtocolRun<'m> {
+    pub fn new(model: &'m ProtocolModel) -> Self {
+        ProtocolRun {
+            model,
+            pc: vec![0; model.threads.len()],
+            queues: model.channels.iter().map(|_| VecDeque::new()).collect(),
+            fifo_flagged: vec![false; model.channels.len()],
+            diagnostics: Vec::new(),
+        }
+    }
+
+    pub fn num_threads(&self) -> usize {
+        self.model.threads.len()
+    }
+
+    pub fn thread_finished(&self, t: usize) -> bool {
+        self.pc[t] >= self.model.threads[t].ops.len()
+    }
+
+    pub fn all_finished(&self) -> bool {
+        (0..self.num_threads()).all(|t| self.thread_finished(t))
+    }
+
+    /// The DFS memo key: program counters plus channel contents.
+    pub fn state(&self) -> (Vec<usize>, Vec<Vec<u64>>) {
+        (
+            self.pc.clone(),
+            self.queues.iter().map(|q| q.iter().copied().collect()).collect(),
+        )
+    }
+
+    /// Can thread `t` perform its next channel op right now?
+    pub fn enabled(&self, t: usize) -> bool {
+        let trace = &self.model.threads[t];
+        match trace.ops.get(self.pc[t]) {
+            None => false,
+            Some(op) => match op.dir {
+                Dir::Send => self.queues[op.chan].len() < self.model.channels[op.chan].cap,
+                Dir::Recv => !self.queues[op.chan].is_empty(),
+            },
+        }
+    }
+
+    /// Perform thread `t`'s next channel op.  Returns false if it was
+    /// not enabled.  FIFO mismatches are recorded as diagnostics (once
+    /// per channel) and execution continues past them.
+    pub fn step(&mut self, t: usize) -> bool {
+        if !self.enabled(t) {
+            return false;
+        }
+        let op = &self.model.threads[t].ops[self.pc[t]];
+        match op.dir {
+            Dir::Send => self.queues[op.chan].push_back(op.mb),
+            Dir::Recv => {
+                let got = self.queues[op.chan].pop_front().expect("enabled recv");
+                if op.expect && got != op.mb && !self.fifo_flagged[op.chan] {
+                    self.fifo_flagged[op.chan] = true;
+                    self.diagnostics.push(Diagnostic::error(
+                        "fifo-mismatch",
+                        None,
+                        format!(
+                            "{} at {} expects mb{} on {} but the FIFO head is mb{got}",
+                            self.model.threads[t].name,
+                            op.label,
+                            op.mb,
+                            self.model.channels[op.chan].name,
+                        ),
+                    ));
+                }
+            }
+        }
+        self.pc[t] += 1;
+        true
+    }
+
+    /// Where thread `t` is stuck: "(thread) blocked (dir) (channel) at (op)".
+    fn wait_description(&self, t: usize) -> String {
+        let op = &self.model.threads[t].ops[self.pc[t]];
+        let ch = &self.model.channels[op.chan];
+        match op.dir {
+            Dir::Send => format!(
+                "{} blocked sending {} (cap {} full) at {}",
+                self.model.threads[t].name, ch.name, ch.cap, op.label
+            ),
+            Dir::Recv => format!(
+                "{} blocked receiving {} (empty) at {}",
+                self.model.threads[t].name, ch.name, op.label
+            ),
+        }
+    }
+
+    /// The thread a stuck thread `t` is waiting on.
+    fn waits_on(&self, t: usize) -> usize {
+        let op = &self.model.threads[t].ops[self.pc[t]];
+        let ch = &self.model.channels[op.chan];
+        match op.dir {
+            Dir::Send => ch.consumer,
+            Dir::Recv => ch.producer,
+        }
+    }
+
+    /// Greedy run to completion or to a stuck state.  Appends
+    /// diagnostics for any deadlock (wait-for cycle or starved wait on a
+    /// finished producer) and any end-of-step channel residue, then
+    /// returns the collected findings.
+    pub fn run(&mut self) -> Vec<Diagnostic> {
+        loop {
+            let mut progressed = false;
+            for t in 0..self.num_threads() {
+                while self.step(t) {
+                    progressed = true;
+                }
+            }
+            if self.all_finished() {
+                break;
+            }
+            if !progressed {
+                self.report_stuck();
+                break;
+            }
+        }
+        for (i, q) in self.queues.iter().enumerate() {
+            if !q.is_empty() {
+                self.diagnostics.push(Diagnostic::warning(
+                    "channel-residue",
+                    None,
+                    format!(
+                        "{} holds {} undelivered message(s) at end of step — \
+                         send/recv counts drift across steps",
+                        self.model.channels[i].name,
+                        q.len()
+                    ),
+                ));
+            }
+        }
+        std::mem::take(&mut self.diagnostics)
+    }
+
+    /// Follow wait-for edges from a stuck thread until the walk closes a
+    /// cycle or lands on a finished producer, and report the chain.
+    fn report_stuck(&mut self) {
+        let start = (0..self.num_threads())
+            .find(|&t| !self.thread_finished(t))
+            .expect("stuck run has an unfinished thread");
+        let mut path: Vec<usize> = Vec::new();
+        let mut t = start;
+        let message = loop {
+            if self.thread_finished(t) {
+                let chain: Vec<String> =
+                    path.iter().map(|&x| self.wait_description(x)).collect();
+                break format!(
+                    "progress failure: {} — but {} has already finished its step",
+                    chain.join("; which waits on "),
+                    self.model.threads[t].name
+                );
+            }
+            if let Some(pos) = path.iter().position(|&x| x == t) {
+                let cycle: Vec<String> =
+                    path[pos..].iter().map(|&x| self.wait_description(x)).collect();
+                break format!("wait-for cycle: {}", cycle.join("; which waits on "));
+            }
+            path.push(t);
+            t = self.waits_on(t);
+        };
+        self.diagnostics.push(Diagnostic::error("deadlock-cycle", None, message));
+    }
+}
+
+/// Pass-1 entry point: model the protocol and decide progress.
+pub fn check_protocol(s: &Schedule, caps: &ChannelCaps) -> Vec<Diagnostic> {
+    if s.p * s.chunks.max(1) < 2 {
+        return Vec::new(); // a single virtual stage has no channel protocol
+    }
+    let model = ProtocolModel::build(s, caps);
+    ProtocolRun::new(&model).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bpipe::rebalance;
+    use crate::schedule::{Family, Op, Schedule, ScheduleKind, StageProgram};
+
+    fn families() -> Vec<Family> {
+        vec![
+            Family::OneFOneB,
+            Family::GPipe,
+            Family::Interleaved { v: 2 },
+            Family::VShaped,
+            Family::ZigZag { v: 4 },
+        ]
+    }
+
+    #[test]
+    fn run_capacities_are_deadlock_free_for_every_family() {
+        for f in families() {
+            let p = 8 / f.chunks();
+            for s in [f.build(p, 4), rebalance(&f.build(p, 4), None)] {
+                let caps = ChannelCaps::for_run(s.m, s.chunks);
+                let diags = check_protocol(&s, &caps);
+                assert!(diags.is_empty(), "{f:?}: {diags:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn undersized_hot_cap_deadlocks_the_zigzag_junction() {
+        // stage 1 hosts both sides of the d1 boundary in the V shape; at
+        // cap 1 its second chunk-0 forward blocks sending to itself
+        let s = Family::VShaped.build(2, 4);
+        let caps = ChannelCaps { hot: 1, ..ChannelCaps::for_run(s.m, s.chunks) };
+        let diags = check_protocol(&s, &caps);
+        let dead: Vec<_> = diags.iter().filter(|d| d.code == "deadlock-cycle").collect();
+        assert_eq!(dead.len(), 1, "{diags:?}");
+        assert!(
+            dead[0].message.contains("act[d1]") && dead[0].message.contains("stage 1"),
+            "cycle must name the stuck channel and thread: {}",
+            dead[0].message
+        );
+    }
+
+    #[test]
+    fn starved_wait_on_a_finished_producer_is_reported() {
+        // stage 1 never runs its backward, so stage 0's grad recv starves
+        let s = Schedule {
+            p: 2,
+            m: 1,
+            chunks: 1,
+            placement: crate::schedule::Placement::Sequential,
+            kind: ScheduleKind::OneFOneB,
+            stage_bounds: None,
+            programs: vec![
+                StageProgram { stage: 0, ops: vec![Op::fwd(0), Op::bwd(0)] },
+                StageProgram { stage: 1, ops: vec![Op::fwd(0)] },
+            ],
+        };
+        let diags = check_protocol(&s, &ChannelCaps::for_run(1, 1));
+        assert!(
+            diags.iter().any(|d| d.code == "deadlock-cycle" && d.message.contains("finished")),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn out_of_order_forwards_flag_fifo_mismatch() {
+        // stage 1 expects mb1 first, but stage 0 sends mb0 first
+        let s = Schedule {
+            p: 2,
+            m: 2,
+            chunks: 1,
+            placement: crate::schedule::Placement::Sequential,
+            kind: ScheduleKind::OneFOneB,
+            stage_bounds: None,
+            programs: vec![
+                StageProgram {
+                    stage: 0,
+                    ops: vec![Op::fwd(0), Op::fwd(1), Op::bwd(1), Op::bwd(0)],
+                },
+                StageProgram {
+                    stage: 1,
+                    ops: vec![Op::fwd(1), Op::fwd(0), Op::bwd(1), Op::bwd(0)],
+                },
+            ],
+        };
+        let diags = check_protocol(&s, &ChannelCaps::for_run(2, 1));
+        assert!(
+            diags.iter().any(|d| d.code == "fifo-mismatch" && d.message.contains("act[d0]")),
+            "{diags:?}"
+        );
+    }
+}

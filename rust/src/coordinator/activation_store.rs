@@ -169,7 +169,7 @@ fn backoff(spins: &mut u32) {
 /// Allocation-free bounded-channel send: busy-polls `try_send` instead
 /// of parking (see [`backoff`]).  Returns `Err(())` when the receiver
 /// is gone.
-pub(crate) fn spin_send<T>(tx: &SyncSender<T>, mut v: T) -> Result<(), ()> {
+pub fn spin_send<T>(tx: &SyncSender<T>, mut v: T) -> Result<(), ()> {
     use std::sync::mpsc::TrySendError;
     let mut spins = 0u32;
     loop {
@@ -186,7 +186,7 @@ pub(crate) fn spin_send<T>(tx: &SyncSender<T>, mut v: T) -> Result<(), ()> {
 
 /// Receive twin of [`spin_send`]: `Err(())` once every sender is gone
 /// and the channel is drained (matching `recv`'s disconnect semantics).
-pub(crate) fn spin_recv<T>(rx: &Receiver<T>) -> Result<T, ()> {
+pub fn spin_recv<T>(rx: &Receiver<T>) -> Result<T, ()> {
     use std::sync::mpsc::TryRecvError;
     let mut spins = 0u32;
     loop {

@@ -55,6 +55,25 @@ impl SyntheticCorpus {
     pub fn microbatch(&mut self, b: usize, s: usize) -> (Vec<i32>, Vec<i32>) {
         let mut tokens = Vec::with_capacity(b * s);
         let mut targets = Vec::with_capacity(b * s);
+        self.microbatch_into(b, s, &mut tokens, &mut targets);
+        (tokens, targets)
+    }
+
+    /// [`Self::microbatch`] into caller-owned buffers — the feeder's
+    /// recycling path: once `tokens`/`targets` have capacity `b * s`,
+    /// filling them allocates nothing.  Identical RNG walk, so the
+    /// stream is byte-for-byte the same either way.
+    pub fn microbatch_into(
+        &mut self,
+        b: usize,
+        s: usize,
+        tokens: &mut Vec<i32>,
+        targets: &mut Vec<i32>,
+    ) {
+        tokens.clear();
+        targets.clear();
+        tokens.reserve(b * s);
+        targets.reserve(b * s);
         for _ in 0..b {
             let mut cur = self.zipf();
             for _ in 0..s {
@@ -63,7 +82,6 @@ impl SyntheticCorpus {
                 targets.push(cur as i32);
             }
         }
-        (tokens, targets)
     }
 }
 

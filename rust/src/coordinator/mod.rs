@@ -36,11 +36,14 @@ pub mod pipeline;
 pub mod stage_bench;
 pub mod stage_worker;
 
-pub use activation_store::{ActivationStore, HostTensor, Stash, StashKey};
+pub use activation_store::{
+    spin_recv, spin_send, ActivationStore, HostTensor, Stash, StashKey,
+};
 pub use checkpoint::{CheckpointMeta, StageCheckpoint};
 pub use data::SyntheticCorpus;
 pub use pipeline::{
-    plan_schedule, train, train_probed, RebalancePlan, TrainConfig, TrainResult,
+    plan_schedule, train, train_probed, train_probed_feeder, RebalancePlan, TrainConfig,
+    TrainResult,
 };
 pub use stage_bench::{measure_stage, StageTiming};
 pub use stage_worker::{StageRunner, StageStats};

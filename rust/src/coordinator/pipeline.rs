@@ -31,13 +31,13 @@ use std::path::PathBuf;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::time::Instant;
 
-use super::activation_store::{spawn_remote_store, HostTensor};
+use super::activation_store::{spawn_remote_store, spin_send, HostTensor};
 use super::checkpoint::CheckpointMeta;
 use super::data::SyntheticCorpus;
 use super::stage_worker::{worker_main, StageRunner, StageStats, WorkerChannels, WorkerConfig};
 use crate::config::ExperimentConfig;
 use crate::runtime::{Backend, Manifest};
-use crate::schedule::{validate, Family, OpKind, Schedule};
+use crate::schedule::{Family, OpKind, Schedule};
 
 /// How to compose the base schedule with the rebalance transform.
 #[derive(Debug, Clone, PartialEq)]
@@ -126,7 +126,9 @@ impl TrainResult {
 
 /// Build the schedule a run implies and the per-stage store capacities:
 /// the family's base schedule composed with the rebalance plan, then
-/// validated.  Capacities are each stage's realized stash high-water —
+/// gated through the static analyzer ([`crate::analysis::check_plan`]:
+/// structural validation, protocol progress, donation linearity, memory
+/// bounds).  Capacities are each stage's realized stash high-water —
 /// the tightest bound the activation store can enforce without ever
 /// rejecting a scheduled put (for a rebalanced schedule, the planned
 /// per-stage cap; for a base schedule, its natural in-flight count).
@@ -151,7 +153,17 @@ pub fn plan_schedule(
             crate::bpipe::rebalance_bounded(&base, &bounds)
         }
     };
-    validate(&schedule).expect("generated schedule must validate");
+    // the static analyzer gate: structural validation plus the
+    // protocol/linearity/bounds passes — a plan with any error-level
+    // finding must never reach the channel web
+    let chan_caps = crate::analysis::ChannelCaps::for_run(m, schedule.chunks);
+    let diags = crate::analysis::check_plan(&schedule, plan, &chan_caps);
+    if crate::analysis::has_errors(&diags) {
+        panic!(
+            "generated schedule failed static analysis:\n{}",
+            crate::analysis::render_diagnostics(&diags)
+        );
+    }
     let caps: Vec<usize> =
         (0..p).map(|s| schedule.program(s).stash_high_water().max(1) as usize).collect();
     (schedule, caps)
@@ -174,12 +186,31 @@ pub fn train_probed<B: Backend>(
     probe_stage: u64,
     hook: &mut dyn FnMut(u64),
 ) -> anyhow::Result<TrainResult> {
-    train_inner::<B>(cfg, Some((probe_stage, hook)))
+    train_inner::<B>(cfg, Some(Probe::Stage(probe_stage, hook)))
+}
+
+/// [`train`], but with the DATA FEEDER running on the CALLING thread,
+/// `hook(step)` invoked after each step's microbatches are fed — the
+/// feeder-side twin of [`train_probed`], so the counting-allocator test
+/// can pin the feeder's steady-state token recycling too.
+pub fn train_probed_feeder<B: Backend>(
+    cfg: &TrainConfig,
+    hook: &mut dyn FnMut(u64),
+) -> anyhow::Result<TrainResult> {
+    train_inner::<B>(cfg, Some(Probe::Feeder(hook)))
+}
+
+/// Which thread of the run executes on the caller (for instrumentation).
+enum Probe<'a> {
+    /// one stage's worker, hook after each completed step
+    Stage(u64, &'a mut dyn FnMut(u64)),
+    /// the data feeder, hook after each step's microbatches are fed
+    Feeder(&'a mut dyn FnMut(u64)),
 }
 
 fn train_inner<B: Backend>(
     cfg: &TrainConfig,
-    mut probe: Option<(u64, &mut dyn FnMut(u64))>,
+    mut probe: Option<Probe<'_>>,
 ) -> anyhow::Result<TrainResult> {
     let manifest = match &cfg.manifest {
         Some(m) => m.clone(),
@@ -198,7 +229,7 @@ fn train_inner<B: Backend>(
     let (schedule, caps) = plan_schedule(cfg.family, p, m, &cfg.rebalance);
     debug_assert_eq!(schedule.chunks, chunks);
     let placement = schedule.placement;
-    if let Some((ps, _)) = &probe {
+    if let Some(Probe::Stage(ps, _)) = &probe {
         anyhow::ensure!(*ps < p, "probe stage {ps} out of range (p = {p})");
     }
 
@@ -260,6 +291,14 @@ fn train_inner<B: Backend>(
     let (tok_tx, tok_rx) = sync_channel(feed_cap);
     let (tgt_tx, tgt_rx) = sync_channel(feed_cap);
     let (loss_tx, loss_rx) = sync_channel((2 * m) as usize);
+    // spent token/target buffers flow back to the feeder's free list.
+    // Workers return them with a NON-BLOCKING `try_send` (falling back
+    // to their local pool on a full ring), so this edge can never join
+    // a wait cycle — which is why the protocol model omits it.
+    // ring sized past the worst burst between two feeder drains (both
+    // end workers' backwards of one full step = 2m), so steady-state
+    // returns virtually never fall back to the pool
+    let (rec_tx, rec_rx) = sync_channel::<HostTensor>((6 * m) as usize);
 
     // -- data feeding state (runs on its own thread under backpressure) -----
     let spec = &manifest.spec;
@@ -316,9 +355,14 @@ fn train_inner<B: Backend>(
                     tokens_in: if s == first_host { tok_rx.take() } else { None },
                     targets_in: if s == last_host { tgt_rx.take() } else { None },
                     loss_out: if s == last_host { Some(loss_tx.clone()) } else { None },
+                    recycle_out: if s == first_host || s == last_host {
+                        Some(rec_tx.clone())
+                    } else {
+                        None
+                    },
                     remote,
                 };
-                if probe.as_ref().map(|(ps, _)| *ps == s).unwrap_or(false) {
+                if matches!(&probe, Some(Probe::Stage(ps, _)) if *ps == s) {
                     probed_work = Some((wcfg, wch));
                     handles.push(None);
                 } else {
@@ -330,55 +374,72 @@ fn train_inner<B: Backend>(
                 }
             }
             drop(loss_tx);
+            drop(rec_tx); // workers hold their clones; the feeder drains
 
-            // -- data feeder ------------------------------------------------
-            let feeder = std::thread::Builder::new().name("bpipe-feeder".into()).spawn_scoped(
-                scope,
-                move || -> anyhow::Result<()> {
-                    for _step in 0..run_steps {
-                        for mb in 0..m {
-                            let (tokens, targets) = corpus.microbatch(b, s_len);
-                            tok_tx
-                                .send((mb, HostTensor::I32 { data: tokens, shape: shape.clone() }))
-                                .map_err(|_| anyhow::anyhow!("first stage died early"))?;
-                            tgt_tx
-                                .send((mb, HostTensor::I32 {
-                                    data: targets,
-                                    shape: shape.clone(),
-                                }))
-                                .map_err(|_| anyhow::anyhow!("last stage died early"))?;
-                        }
+            // -- data feeder + loss collection ------------------------------
+            // the feeder normally gets its own thread; under a probe the
+            // probed party (one stage worker, or the feeder itself) runs
+            // HERE so a thread-local counting allocator can observe it
+            let feeder_state = FeederState {
+                corpus,
+                tok_tx,
+                tgt_tx,
+                recycle_rx: rec_rx,
+                shape,
+                b,
+                s: s_len,
+                steps: run_steps,
+                m,
+            };
+            let mut feeder = None;
+            let collected = match probe.take() {
+                Some(Probe::Stage(ps, hook)) => {
+                    feeder = Some(spawn_feeder(scope, feeder_state)?);
+                    let collector =
+                        std::thread::Builder::new().name("bpipe-collector".into()).spawn_scoped(
+                            scope,
+                            move || {
+                                collect_losses(
+                                    loss_rx,
+                                    run_steps,
+                                    m,
+                                    cfg.log_every,
+                                    cfg.steps,
+                                    start_step,
+                                )
+                            },
+                        )?;
+                    let (wcfg, wch) = probed_work.take().expect("probed stage was planned");
+                    let mut runner = StageRunner::<B>::new(wcfg, wch)?;
+                    for step in 1..=run_steps {
+                        runner.run_step(step)?;
+                        hook(step);
                     }
-                    Ok(())
-                },
-            )?;
-
-            // -- loss collection (probed stage runs here, if any) -----------
-            let collected = if let Some((ps, hook)) = probe.take() {
-                let collector =
-                    std::thread::Builder::new().name("bpipe-collector".into()).spawn_scoped(
-                        scope,
-                        move || {
-                            collect_losses(
-                                loss_rx,
-                                run_steps,
-                                m,
-                                cfg.log_every,
-                                cfg.steps,
-                                start_step,
-                            )
-                        },
-                    )?;
-                let (wcfg, wch) = probed_work.take().expect("probed stage was planned");
-                let mut runner = StageRunner::<B>::new(wcfg, wch)?;
-                for step in 1..=run_steps {
-                    runner.run_step(step)?;
-                    hook(step);
+                    stage_stats_slots[ps as usize] = Some(runner.finish()?);
+                    collector.join().map_err(|e| anyhow::anyhow!("collector panicked: {e:?}"))??
                 }
-                stage_stats_slots[ps as usize] = Some(runner.finish()?);
-                collector.join().map_err(|e| anyhow::anyhow!("collector panicked: {e:?}"))??
-            } else {
-                collect_losses(loss_rx, run_steps, m, cfg.log_every, cfg.steps, start_step)?
+                Some(Probe::Feeder(hook)) => {
+                    let collector =
+                        std::thread::Builder::new().name("bpipe-collector".into()).spawn_scoped(
+                            scope,
+                            move || {
+                                collect_losses(
+                                    loss_rx,
+                                    run_steps,
+                                    m,
+                                    cfg.log_every,
+                                    cfg.steps,
+                                    start_step,
+                                )
+                            },
+                        )?;
+                    run_feeder(feeder_state, Some(hook))?;
+                    collector.join().map_err(|e| anyhow::anyhow!("collector panicked: {e:?}"))??
+                }
+                None => {
+                    feeder = Some(spawn_feeder(scope, feeder_state)?);
+                    collect_losses(loss_rx, run_steps, m, cfg.log_every, cfg.steps, start_step)?
+                }
             };
 
             // -- join -------------------------------------------------------
@@ -388,7 +449,9 @@ fn train_inner<B: Backend>(
                         Some(h.join().map_err(|e| anyhow::anyhow!("worker panicked: {e:?}"))??);
                 }
             }
-            feeder.join().map_err(|e| anyhow::anyhow!("feeder panicked: {e:?}"))??;
+            if let Some(f) = feeder {
+                f.join().map_err(|e| anyhow::anyhow!("feeder panicked: {e:?}"))??;
+            }
             Ok(collected)
         })?;
 
@@ -411,6 +474,78 @@ fn train_inner<B: Backend>(
         schedule,
         tokens: run_steps * m * (b * s_len) as u64,
     })
+}
+
+/// Everything the data feeder owns: the corpus, the feed rings, and the
+/// recycle ring bringing spent token/target tensors back.
+struct FeederState {
+    corpus: SyntheticCorpus,
+    tok_tx: SyncSender<(u64, HostTensor)>,
+    tgt_tx: SyncSender<(u64, HostTensor)>,
+    recycle_rx: Receiver<HostTensor>,
+    shape: Vec<i64>,
+    b: usize,
+    s: usize,
+    steps: u64,
+    m: u64,
+}
+
+/// Pop a recycled i32 tensor, or allocate a fresh one (warm-up only in
+/// steady state).
+fn take_i32_buf(free: &mut Vec<HostTensor>, shape: &[i64], n: usize) -> HostTensor {
+    match free.pop() {
+        Some(t @ HostTensor::I32 { .. }) => t,
+        _ => HostTensor::I32 { data: Vec::with_capacity(n), shape: shape.to_vec() },
+    }
+}
+
+/// Stream the corpus under backpressure.  Token/target tensors are drawn
+/// from a free list fed by the recycle ring (the end-stage workers hand
+/// their spent feeder-origin tensors back after the backward), so once
+/// the list is warm a step feeds `2m` microbatches with ZERO feeder-side
+/// heap allocations — sends busy-poll ([`spin_send`]) for the same
+/// reason the workers do: parking can allocate on first use.
+fn run_feeder(mut f: FeederState, mut hook: Option<&mut dyn FnMut(u64)>) -> anyhow::Result<()> {
+    let n = f.b * f.s;
+    // sized past the total feeder-origin tensor population (both feed
+    // rings + both end-stage stashes + the recycle ring + two in hand),
+    // so a steady-state push can never grow the list
+    let mut free: Vec<HostTensor> = Vec::with_capacity(12 * f.m as usize + 16);
+    for step in 1..=f.steps {
+        for mb in 0..f.m {
+            while let Ok(t) = f.recycle_rx.try_recv() {
+                if free.len() < free.capacity() {
+                    free.push(t);
+                }
+            }
+            let mut tok_t = take_i32_buf(&mut free, &f.shape, n);
+            let mut tgt_t = take_i32_buf(&mut free, &f.shape, n);
+            match (&mut tok_t, &mut tgt_t) {
+                (
+                    HostTensor::I32 { data: tok, .. },
+                    HostTensor::I32 { data: tgt, .. },
+                ) => f.corpus.microbatch_into(f.b, f.s, tok, tgt),
+                _ => unreachable!("take_i32_buf only yields i32 tensors"),
+            }
+            spin_send(&f.tok_tx, (mb, tok_t))
+                .map_err(|_| anyhow::anyhow!("first stage died early"))?;
+            spin_send(&f.tgt_tx, (mb, tgt_t))
+                .map_err(|_| anyhow::anyhow!("last stage died early"))?;
+        }
+        if let Some(h) = hook.as_mut() {
+            h(step);
+        }
+    }
+    Ok(())
+}
+
+fn spawn_feeder<'scope>(
+    scope: &'scope std::thread::Scope<'scope, '_>,
+    state: FeederState,
+) -> anyhow::Result<std::thread::ScopedJoinHandle<'scope, anyhow::Result<()>>> {
+    Ok(std::thread::Builder::new()
+        .name("bpipe-feeder".into())
+        .spawn_scoped(scope, move || run_feeder(state, None))?)
 }
 
 /// Drain `m` losses per step from the last stage, averaging per step and
@@ -542,5 +677,23 @@ mod tests {
         );
         // out-of-range probe stage is rejected up front
         assert!(train_probed::<SimBackend>(&cfg, 9, &mut |_| {}).is_err());
+    }
+
+    #[test]
+    fn feeder_probe_matches_unprobed_and_hooks_every_step() {
+        let cfg = TrainConfig {
+            manifest: Some(Manifest::synthetic(4, 16, 8, 2, 64, &[1, 2])),
+            steps: 3,
+            microbatches: 4,
+            lr: 2e-3,
+            seed: 3,
+            rebalance: RebalancePlan::Uniform { bound: None },
+            ..TrainConfig::default()
+        };
+        let plain = train::<SimBackend>(&cfg).unwrap();
+        let mut seen = Vec::new();
+        let probed = train_probed_feeder::<SimBackend>(&cfg, &mut |s| seen.push(s)).unwrap();
+        assert_eq!(seen, vec![1, 2, 3], "hook must fire once per fed step");
+        assert_eq!(plain.losses, probed.losses, "feeder probing must not change numerics");
     }
 }

@@ -88,6 +88,9 @@ pub struct WorkerChannels {
     pub targets_in: Option<Receiver<(u64, HostTensor)>>,
     /// host of the last virtual stage → leader: (step, microbatch, loss)
     pub loss_out: Option<SyncSender<(u64, u64, f32)>>,
+    /// spent token/target tensors back to the feeder's free list
+    /// (present on the hosts of virtual stages 0 and vp−1)
+    pub recycle_out: Option<SyncSender<HostTensor>>,
     /// BPipe pair store (present iff the program contains Evict/Load)
     pub remote: Option<RemoteStoreClient>,
 }
@@ -141,6 +144,23 @@ struct ChunkState<B: Backend> {
     v_state: HostTensor,
     params_buf: B::Buffer,
     grad_acc: HostTensor,
+}
+
+/// Hand a feeder-origin token tensor back: into the feeder's free list
+/// when the recycle ring has room, into the local pool otherwise.
+/// `try_send` only — a worker must never block towards the feeder (the
+/// feeder may itself be spinning on a full feed ring), so this edge can
+/// never deadlock and stays out of the protocol model's wait-for graph.
+fn recycle(out: Option<&SyncSender<HostTensor>>, t: HostTensor, pool: &mut BufferPool) {
+    use std::sync::mpsc::TrySendError;
+    match out {
+        Some(tx) => {
+            if let Err(TrySendError::Full(t) | TrySendError::Disconnected(t)) = tx.try_send(t) {
+                pool.give(t);
+            }
+        }
+        None => pool.give(t),
+    }
 }
 
 /// Accumulate a microbatch gradient into the chunk's running mean.
@@ -341,7 +361,10 @@ impl<B: Backend> StageRunner<B> {
                         "last" => {
                             let st = stash.take(key);
                             let tgt = st.extra.expect("last stash holds (x, targets)");
-                            let mut args = [Arg::Donated(st.x), Arg::Donated(tgt)];
+                            // targets are feeder-origin: borrowed (mask-
+                            // invariant numerics) so the tensor survives
+                            // to be recycled back to the feeder
+                            let mut args = [Arg::Donated(st.x), Arg::Borrowed(&tgt)];
                             backend.execute_pooled(
                                 &cs.bwd,
                                 Some(&cs.params_buf),
@@ -366,6 +389,7 @@ impl<B: Backend> StageRunner<B> {
                             pool.give(loss);
                             accumulate(&mut cs.grad_acc, &dflat, inv_m)?;
                             pool.give(dflat);
+                            recycle(ch.recycle_out.as_ref(), tgt, pool);
                         }
                         "mid" => {
                             let dy = recv_expect(
@@ -403,7 +427,9 @@ impl<B: Backend> StageRunner<B> {
                                 cfg.stage,
                             )?;
                             let st = stash.take(key);
-                            let mut args = [Arg::Donated(st.x), Arg::Donated(dy)];
+                            // the stashed input is the feeder's token
+                            // tensor: borrowed, then recycled
+                            let mut args = [Arg::Borrowed(&st.x), Arg::Donated(dy)];
                             backend.execute_pooled(
                                 &cs.bwd,
                                 Some(&cs.params_buf),
@@ -415,6 +441,7 @@ impl<B: Backend> StageRunner<B> {
                             let dflat = outs.pop().unwrap();
                             accumulate(&mut cs.grad_acc, &dflat, inv_m)?;
                             pool.give(dflat);
+                            recycle(ch.recycle_out.as_ref(), st.x, pool);
                         }
                     }
                     stats.bwd_s += t.elapsed().as_secs_f64();

@@ -39,11 +39,13 @@
 //! | §2.2 claim on a REAL pipeline: bit-identical BPipe losses | [`coordinator::train`] over [`runtime::SimBackend`], `bpipe train --backend sim` |
 //! | Beyond the paper: schedule/bound/layout design space | [`mod@sim::sweep`], [`schedule::zigzag()`], [`bpipe::rebalance_bounded`] |
 //! | Beyond the paper: zero-alloc training hot path (buffer donation) | [`runtime::BufferPool`], [`runtime::Backend::execute_pooled`], [`coordinator::train_probed`] |
+//! | Beyond the paper: static schedule/protocol analyzer (deadlock, linearity, bounds) | [`analysis`], `bpipe check` |
 //!
 //! `docs/ARCHITECTURE.md` has the crate-level data-flow diagram and the
 //! [`runtime::Backend`] boundary; [`sweep_schema`] documents (and
 //! doc-tests) the sweep export formats.
 
+pub mod analysis;
 pub mod bpipe;
 pub mod config;
 pub mod coordinator;

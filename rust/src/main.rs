@@ -21,6 +21,9 @@
 //! * `memory`                — per-stage memory profile, ±BPipe;
 //! * `schedule`              — print a schedule program (any generator,
 //!   optionally rebalanced);
+//! * `check`                 — the static schedule/protocol analyzer:
+//!   deadlock-freedom, donation linearity and memory bounds proven from
+//!   the schedule alone (`--grid` sweeps all 15 ranking scenarios);
 //! * `train`                 — REAL pipeline training over PJRT artifacts
 //!   (`pjrt` feature).
 //!
@@ -47,11 +50,13 @@ COMMANDS:
   simulate  [--experiment 1..10 | --config f.cfg] [--bpipe true|false]
             [--timeline]                 simulate one experiment
   sweep     [--experiment 1..10] [--v N] [--threads N]
-            [--bounds] [--csv f.csv] [--json f.json]
+            [--bounds] [--skip-oom] [--csv f.csv] [--json f.json]
                                          rank the experiment x schedule
                                          x layout grid (parallel DES);
                                          --bounds sweeps every rebalance
-                                         bound down to the knee instead
+                                         bound down to the knee instead;
+                                         --skip-oom settles provably-OOM
+                                         cells statically (no DES)
   report    [--experiment 1..10] [--v N] [--threads N]
             [--out report.md]            replication report: markdown +
                                          embedded SVG figures + the
@@ -61,6 +66,17 @@ COMMANDS:
   memory    [--experiment 1..10]         per-stage memory profile
   schedule  [--p N --m N --kind 1f1b|gpipe|interleaved|vshaped|zigzag]
             [--v N] [--bpipe | --rebalance [--bound K]]
+  check     [--schedule 1f1b|gpipe|interleaved|vshaped|zigzag --v N]
+            [--p N --m N]
+            [--rebalance [--bound K] | --stage-bounds a,b,..
+             | --capacity [--experiment 1..10]]
+            [--hot-cap N --feed-cap N] [--json]
+            [--grid [--experiment 1..10]] static analyzer: prove
+                                         deadlock-freedom, donation
+                                         linearity and memory bounds
+                                         before running; --grid checks
+                                         all 15 ranking-grid scenarios;
+                                         exits 1 on error findings
   train     [--backend sim|pjrt] [--artifacts DIR]
             [--schedule 1f1b|gpipe|interleaved|vshaped|zigzag --v N]
             [--bpipe | --rebalance [--bound K] | --stage-bounds a,b,..]
@@ -314,7 +330,7 @@ fn main() -> anyhow::Result<()> {
             }
         }
         "sweep" => {
-            let args = Args::parse(rest, &["bounds"])?;
+            let args = Args::parse(rest, &["bounds", "skip-oom"])?;
             let v = args.get("v", 2u64)?;
             let threads = args.get("threads", 0usize)?;
             let bounds_mode = args.opt("bounds").is_some();
@@ -327,9 +343,12 @@ fn main() -> anyhow::Result<()> {
                 (true, None) => sim::bounds_grid(v),
             };
             let count = tasks.len();
+            let skip_oom = args.opt("skip-oom").is_some();
+            let opts = sim::SweepOptions { skip_provable_oom: skip_oom };
             let t0 = std::time::Instant::now();
-            let outcomes = sim::sweep(tasks, threads);
+            let report = sim::sweep_with(tasks, threads, opts);
             let dt = t0.elapsed();
+            let outcomes = report.outcomes;
             if bounds_mode {
                 print!("{}", sim::render_bound_frontier(&outcomes));
             } else {
@@ -343,11 +362,21 @@ fn main() -> anyhow::Result<()> {
                 std::fs::write(path, sim::sweep_to_json(&outcomes).to_string())?;
                 println!("wrote {} JSON records to {path}", outcomes.len());
             }
-            println!(
-                "\n{count} grid cells simulated in {:.2}s ({:.1} cells/s)",
-                dt.as_secs_f64(),
-                count as f64 / dt.as_secs_f64()
-            );
+            if skip_oom {
+                println!(
+                    "\n{} grid cells simulated ({} provably-OOM cells settled \
+                     statically) in {:.2}s",
+                    count - report.skipped,
+                    report.skipped,
+                    dt.as_secs_f64()
+                );
+            } else {
+                println!(
+                    "\n{count} grid cells simulated in {:.2}s ({:.1} cells/s)",
+                    dt.as_secs_f64(),
+                    count as f64 / dt.as_secs_f64()
+                );
+            }
         }
         "report" => {
             let args = Args::parse(rest, &[])?;
@@ -436,6 +465,156 @@ fn main() -> anyhow::Result<()> {
                 sched
             };
             print!("{}", report::timeline::render_program(&sched));
+        }
+        "check" => {
+            use bpipe::analysis;
+            use bpipe::coordinator::RebalancePlan;
+            use bpipe::util::json::Json;
+            let args = Args::parse(rest, &["rebalance", "capacity", "grid", "json"])?;
+            let v = args.get("v", 2u64)?;
+            let json_out = args.opt("json").is_some();
+
+            // the cells to analyze: the 15-scenario ranking grid with
+            // --grid, otherwise the one schedule the flags describe
+            let cells: Vec<(String, bpipe::schedule::Schedule, RebalancePlan)> =
+                if args.opt("grid").is_some() {
+                    let e = experiment_or_exit(args.get("experiment", 8u32)?);
+                    sim::scenario_specs(v)
+                        .into_iter()
+                        .map(|spec| {
+                            let s = spec.build_for(&e);
+                            let plan = RebalancePlan::Capacity { experiment: e.clone() };
+                            (spec.name().to_string(), s, plan)
+                        })
+                        .collect()
+                } else {
+                    let family = parse_family(args.opt("schedule").unwrap_or("1f1b"), v)?;
+                    if args.opt("capacity").is_some() {
+                        let e = experiment_or_exit(args.get("experiment", 8u32)?);
+                        let base =
+                            family.build(e.parallel.p, e.parallel.num_microbatches());
+                        let bounds = bpipe_mod::capacity_stage_bounds(&e, &base);
+                        let s = bpipe_mod::rebalance_bounded(&base, &bounds);
+                        let plan = RebalancePlan::Capacity { experiment: e };
+                        vec![(family.stage_bounds_label().to_string(), s, plan)]
+                    } else {
+                        let p = args.get("p", 4u64)?;
+                        let m = args.get("m", 8u64)?;
+                        let base = family.build(p, m);
+                        if let Some(bs) = args.opt("stage-bounds") {
+                            let bounds = bs
+                                .split(',')
+                                .map(|t| {
+                                    t.trim().parse::<u64>().map_err(|e| {
+                                        anyhow::anyhow!("--stage-bounds {t:?}: {e}")
+                                    })
+                                })
+                                .collect::<anyhow::Result<Vec<u64>>>()?;
+                            let s = bpipe_mod::rebalance_bounded(&base, &bounds);
+                            let plan = RebalancePlan::PerStage { bounds };
+                            vec![(family.stage_bounds_label().to_string(), s, plan)]
+                        } else if args.opt("rebalance").is_some() {
+                            let bound = match args.opt("bound") {
+                                Some(b) => Some(b.parse()?),
+                                None => None,
+                            };
+                            let s = bpipe_mod::rebalance(&base, bound);
+                            let plan = RebalancePlan::Uniform { bound };
+                            vec![(family.rebalanced_label().to_string(), s, plan)]
+                        } else {
+                            vec![(family.label().to_string(), base, RebalancePlan::Off)]
+                        }
+                    }
+                };
+
+            let mut json_cells = Vec::new();
+            let mut total_errors = 0usize;
+            let mut total_warnings = 0usize;
+            for (label, s, plan) in &cells {
+                let mut caps = analysis::ChannelCaps::for_run(s.m, s.chunks);
+                if let Some(h) = args.opt("hot-cap") {
+                    caps.hot = h.parse()?;
+                }
+                if let Some(f) = args.opt("feed-cap") {
+                    caps.feed = f.parse()?;
+                }
+                let diags = analysis::check_plan(s, plan, &caps);
+                let errors =
+                    diags.iter().filter(|d| d.severity == analysis::Severity::Error).count();
+                let warnings = diags
+                    .iter()
+                    .filter(|d| d.severity == analysis::Severity::Warning)
+                    .count();
+                total_errors += errors;
+                total_warnings += warnings;
+                if json_out {
+                    let bounds: Vec<Json> = analysis::static_bounds(s)
+                        .iter()
+                        .map(|est| {
+                            Json::obj(vec![
+                                ("stage", Json::Num(est.stage as f64)),
+                                ("lo", Json::Num(est.lo as f64)),
+                                ("pred", Json::Num(est.pred as f64)),
+                                ("hi", Json::Num(est.hi as f64)),
+                                (
+                                    "planned",
+                                    est.planned
+                                        .map(|c| Json::Num(c as f64))
+                                        .unwrap_or(Json::Null),
+                                ),
+                            ])
+                        })
+                        .collect();
+                    json_cells.push(Json::obj(vec![
+                        ("scenario", Json::str(label)),
+                        ("p", Json::Num(s.p as f64)),
+                        ("m", Json::Num(s.m as f64)),
+                        ("chunks", Json::Num(s.chunks as f64)),
+                        ("bounds", Json::Arr(bounds)),
+                        ("diagnostics", analysis::diagnostics_to_json(&diags)),
+                        ("ok", Json::Bool(errors == 0)),
+                    ]));
+                } else {
+                    println!(
+                        "checking {label}: p={} m={} chunks={} (caps: hot {} feed {} \
+                         loss {} store {})",
+                        s.p, s.m, s.chunks, caps.hot, caps.feed, caps.loss,
+                        caps.remote_inflight
+                    );
+                    if cells.len() == 1 {
+                        println!("  stage |  lo pred  hi | planned");
+                        for est in analysis::static_bounds(s) {
+                            let cap = est
+                                .planned
+                                .map(|c| c.to_string())
+                                .unwrap_or_else(|| "-".into());
+                            println!(
+                                "  {:>5} | {:>3} {:>4} {:>3} | {cap:>7}",
+                                est.stage, est.lo, est.pred, est.hi
+                            );
+                        }
+                    }
+                    if diags.is_empty() {
+                        println!("  ok — no findings");
+                    } else {
+                        for line in analysis::render_diagnostics(&diags).lines() {
+                            println!("  {line}");
+                        }
+                    }
+                }
+            }
+            if json_out {
+                println!("{}", Json::Arr(json_cells));
+            } else {
+                println!(
+                    "\n{} schedule(s) checked: {total_errors} error(s), \
+                     {total_warnings} warning(s)",
+                    cells.len()
+                );
+            }
+            if total_errors > 0 {
+                std::process::exit(1);
+            }
         }
         "train" => {
             use bpipe::coordinator::RebalancePlan;

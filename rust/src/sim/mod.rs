@@ -24,6 +24,6 @@ pub use engine::{
 };
 pub use sweep::{
     bound_sensitivity_tasks, bounds_grid, experiment_tasks, paper_grid, render_bound_frontier,
-    render_sweep, scenario_specs, sweep, sweep_to_csv, sweep_to_json, ScenarioSpec, ScheduleCache,
-    SweepOutcome, SweepTask,
+    render_sweep, scenario_specs, sweep, sweep_to_csv, sweep_to_json, sweep_with, ScenarioSpec,
+    ScheduleCache, SweepOptions, SweepOutcome, SweepReport, SweepTask,
 };

@@ -297,11 +297,39 @@ pub fn bounds_grid(v: u64) -> Vec<SweepTask> {
     paper_experiments().iter().flat_map(|e| bound_sensitivity_tasks(e, v)).collect()
 }
 
+/// Knobs for [`sweep_with`].  The default (all off) makes `sweep_with`
+/// behave exactly like [`sweep`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SweepOptions {
+    /// Skip cells the static analyzer proves OOM before simulating them
+    /// ([`crate::analysis::provably_oom_stage`]: the schedule's own
+    /// stash high-water is a lower bound on any execution's peak, so a
+    /// static verdict is sound).  Skipped cells still produce a
+    /// [`SweepOutcome`] — `oom_stage` set, memory columns from the
+    /// static model, timing columns `NaN` (rendered `NaN`, exported as
+    /// empty/`null`) — so grids keep their shape.
+    pub skip_provable_oom: bool,
+}
+
+/// [`sweep_with`]'s result: the outcomes in task order, plus how many
+/// cells the static-analysis gate skipped.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub outcomes: Vec<SweepOutcome>,
+    pub skipped: usize,
+}
+
 /// Simulate every task of the grid across `threads` OS threads (0 =
 /// auto).  Each worker owns one [`SimWorkspace`] (reused cell to cell)
 /// and writes into its task's indexed slot, so results come back in task
 /// order with no post-hoc sort.
 pub fn sweep(tasks: Vec<SweepTask>, threads: usize) -> Vec<SweepOutcome> {
+    sweep_with(tasks, threads, SweepOptions::default()).outcomes
+}
+
+/// [`sweep`] with [`SweepOptions`] — the entry point for the
+/// provably-OOM skip gate (`bpipe sweep --skip-oom`).
+pub fn sweep_with(tasks: Vec<SweepTask>, threads: usize, opts: SweepOptions) -> SweepReport {
     let threads = if threads == 0 {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
     } else {
@@ -309,9 +337,11 @@ pub fn sweep(tasks: Vec<SweepTask>, threads: usize) -> Vec<SweepOutcome> {
     };
     let threads = threads.min(tasks.len().max(1));
     let next = AtomicUsize::new(0);
+    let skipped = AtomicUsize::new(0);
     let slots: Vec<OnceLock<SweepOutcome>> = (0..tasks.len()).map(|_| OnceLock::new()).collect();
     let tasks_ref = &tasks;
     let slots_ref = &slots;
+    let skipped_ref = &skipped;
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| {
@@ -322,23 +352,33 @@ pub fn sweep(tasks: Vec<SweepTask>, threads: usize) -> Vec<SweepOutcome> {
                     if i >= tasks_ref.len() {
                         break;
                     }
-                    let out = run_task_in(&mut ws, &mut cache, &tasks_ref[i]);
+                    let (out, was_skipped) = run_task_in(&mut ws, &mut cache, &tasks_ref[i], opts);
+                    if was_skipped {
+                        skipped_ref.fetch_add(1, Ordering::Relaxed);
+                    }
                     let _ = slots_ref[i].set(out);
                 }
             });
         }
     });
-    slots
+    let outcomes = slots
         .into_iter()
         .map(|s| s.into_inner().expect("every sweep slot is filled exactly once"))
-        .collect()
+        .collect();
+    SweepReport { outcomes, skipped: skipped.into_inner() }
 }
 
-/// Simulate one cell in the given workspace (the worker inner loop).
-fn run_task_in(ws: &mut SimWorkspace, cache: &mut ScheduleCache, t: &SweepTask) -> SweepOutcome {
+/// Simulate one cell in the given workspace (the worker inner loop), or
+/// — with the skip gate on — settle it statically.  The bool is true
+/// iff the cell was skipped.
+fn run_task_in(
+    ws: &mut SimWorkspace,
+    cache: &mut ScheduleCache,
+    t: &SweepTask,
+    opts: SweepOptions,
+) -> (SweepOutcome, bool) {
     let gib = (1u64 << 30) as f64;
     let schedule = cache.build_for(&t.spec, &t.experiment);
-    let stats = ws.run(&t.experiment, &schedule, &t.layout, SimOptions { trace: false });
     // a per-stage-bounds cell reports its bound vector; a uniform
     // rebalance cell its scalar bound; a base cell neither
     let stage_bounds = schedule.stage_bounds.clone();
@@ -346,7 +386,32 @@ fn run_task_in(ws: &mut SimWorkspace, cache: &mut ScheduleCache, t: &SweepTask) 
         (ScheduleKind::BPipe { bound }, None) => Some(bound),
         _ => None,
     };
-    SweepOutcome {
+    if opts.skip_provable_oom {
+        if let Some((stage, _)) = crate::analysis::provably_oom_stage(&t.experiment, &schedule) {
+            let per_stage = crate::analysis::static_peak_bytes(&t.experiment, &schedule);
+            let peak = per_stage.iter().copied().max().unwrap_or(0);
+            let out = SweepOutcome {
+                exp_id: t.experiment.id,
+                model: t.experiment.model.name.clone(),
+                microbatch: t.experiment.parallel.microbatch,
+                scenario: t.spec.name(),
+                bound,
+                stage_bounds,
+                layout: t.layout.name,
+                mfu_pct: f64::NAN,
+                makespan: f64::NAN,
+                bubble_pct: f64::NAN,
+                peak_mem_gib: peak as f64 / gib,
+                per_stage_mem_gib: per_stage.iter().map(|&b| b as f64 / gib).collect(),
+                oom_stage: Some(stage),
+                load_stall_ms: f64::NAN,
+                transfer_gib: f64::NAN,
+            };
+            return (out, true);
+        }
+    }
+    let stats = ws.run(&t.experiment, &schedule, &t.layout, SimOptions { trace: false });
+    let out = SweepOutcome {
         exp_id: t.experiment.id,
         model: t.experiment.model.name.clone(),
         microbatch: t.experiment.parallel.microbatch,
@@ -362,7 +427,8 @@ fn run_task_in(ws: &mut SimWorkspace, cache: &mut ScheduleCache, t: &SweepTask) 
         oom_stage: stats.oom_stage,
         load_stall_ms: stats.load_stall * 1e3,
         transfer_gib: stats.transfer_bytes as f64 / gib,
-    }
+    };
+    (out, false)
 }
 
 /// The "k" column of the ranked table: a scalar bound, a per-stage
@@ -581,7 +647,43 @@ mod tests {
 
     /// Simulate one cell with a throwaway workspace (serial reference).
     fn run_task(t: &SweepTask) -> SweepOutcome {
-        run_task_in(&mut SimWorkspace::new(), &mut ScheduleCache::new(), t)
+        run_task_in(&mut SimWorkspace::new(), &mut ScheduleCache::new(), t, SweepOptions::default())
+            .0
+    }
+
+    #[test]
+    fn skip_gate_settles_provable_ooms_statically_and_soundly() {
+        let report = sweep_with(small_grid(), 0, SweepOptions { skip_provable_oom: true });
+        let full = sweep(small_grid(), 0);
+        assert_eq!(report.outcomes.len(), full.len());
+        assert!(report.skipped > 0, "exp 8 has provably-OOM cells (GPipe base, 1F1B base)");
+        let mut seen_skipped = 0;
+        for (gated, des) in report.outcomes.iter().zip(full.iter()) {
+            assert_eq!(gated.scenario, des.scenario);
+            assert_eq!(gated.layout, des.layout);
+            if gated.mfu_pct.is_nan() {
+                // statically settled: the DES must agree the cell OOMs
+                // (soundness of the lower-bound gate); memory columns
+                // come from the static model and stay finite
+                seen_skipped += 1;
+                assert!(
+                    des.oom_stage.is_some(),
+                    "{} / {}: skipped statically but the DES fits",
+                    gated.scenario,
+                    gated.layout
+                );
+                assert!(gated.oom_stage.is_some() && gated.peak_mem_gib.is_finite());
+            } else {
+                // un-skipped cells are simulated exactly as before
+                assert_eq!(gated.mfu_pct, des.mfu_pct, "{} / {}", gated.scenario, gated.layout);
+                assert_eq!(gated.oom_stage, des.oom_stage);
+            }
+        }
+        assert_eq!(seen_skipped, report.skipped);
+        // default options leave the driver untouched
+        let plain = sweep_with(small_grid(), 0, SweepOptions::default());
+        assert_eq!(plain.skipped, 0);
+        assert_eq!(plain.outcomes.len(), full.len());
     }
 
     #[test]

@@ -24,7 +24,7 @@ use counting_alloc::allocs;
 
 use bpipe::bpipe::{pair_adjacent_layout, rebalance, sequential_layout};
 use bpipe::config::paper_experiment;
-use bpipe::coordinator::{train_probed, RebalancePlan, TrainConfig};
+use bpipe::coordinator::{train_probed, train_probed_feeder, RebalancePlan, TrainConfig};
 use bpipe::runtime::{Manifest, SimBackend};
 use bpipe::schedule::{gpipe, interleaved, one_f_one_b, v_shaped};
 use bpipe::sim::{SimOptions, SimWorkspace};
@@ -119,6 +119,41 @@ fn steady_state_train_step_allocates_nothing_per_stage_worker() {
         r.stage_stats[0].pool_misses,
         r.stage_stats[0].pool_hits
     );
+}
+
+/// The feeder-side twin: the LAST per-microbatch allocation was the
+/// feeder building fresh token/target vectors (plus their shape vecs)
+/// for every send.  With the recycle ring the end-stage workers hand
+/// those tensors back after the backward, the feeder refills them in
+/// place (`microbatch_into`), and a steady-state step feeds `2m`
+/// microbatches with zero feeder-side heap allocations.  The first
+/// steps may still allocate while the free list warms (recycled tensors
+/// only start returning after the first backwards), so the pin starts
+/// at step 5.
+#[test]
+fn steady_state_feeder_allocates_nothing_once_recycling_warms() {
+    let cfg = TrainConfig {
+        manifest: Some(Manifest::synthetic(4, 16, 8, 2, 64, &[1, 2])),
+        steps: 8,
+        microbatches: 6,
+        lr: 2e-3,
+        seed: 11,
+        rebalance: RebalancePlan::Uniform { bound: None },
+        ..TrainConfig::default()
+    };
+    let mut per_step: Vec<(u64, u64)> = Vec::with_capacity(cfg.steps as usize);
+    let mut last = 0u64;
+    let r = train_probed_feeder::<SimBackend>(&cfg, &mut |step| {
+        let now = allocs();
+        per_step.push((step, now - last));
+        last = now;
+    })
+    .unwrap();
+    assert_eq!(r.losses.len(), 8);
+    assert!(per_step[0].1 > 0, "the first step must populate the free list");
+    for &(step, n) in &per_step[4..] {
+        assert_eq!(n, 0, "steady-state feeder step {step} performed {n} heap allocations");
+    }
 }
 
 #[test]

@@ -356,6 +356,48 @@ fn engine_matches_goldens_across_all_scenarios_and_layouts() {
     }
 }
 
+/// Cross-validation of the analyzer's pass 3 against the DES: on every
+/// golden cell the closed-form bracket `[lo, hi]` must contain the
+/// simulated stash peak with NO slack tuning, and on the
+/// contention-free pair-adjacent layout the point predictor `pred` must
+/// match the DES peak exactly or undershoot by exactly the one
+/// documented in-flight transient (the stash accepted while the
+/// partner's own slot is still draining).
+#[test]
+fn static_bounds_bracket_the_simulated_peaks_on_every_golden_cell() {
+    let e = paper_experiment(8).unwrap();
+    for (g, schedule, layout) in golden_cells(&e) {
+        let cell = format!("{} / {}", g.scenario, g.layout);
+        let r = simulate(&e, &schedule, &layout);
+        let est = bpipe::analysis::static_bounds(&schedule);
+        assert_eq!(est.len() as u64, schedule.p);
+        for b in &est {
+            let des = r.stash_high_water[b.stage as usize];
+            assert!(
+                b.lo <= des,
+                "{cell} stage {}: static lo {} exceeds DES peak {des}",
+                b.stage,
+                b.lo
+            );
+            assert!(
+                des <= b.hi,
+                "{cell} stage {}: DES peak {des} escapes static hi {}",
+                b.stage,
+                b.hi
+            );
+            if g.layout == "pair-adjacent" {
+                let slack = des - b.pred;
+                assert!(
+                    slack == 0 || slack == 1,
+                    "{cell} stage {}: DES peak {des} vs pred {} — transient must be 0 or +1",
+                    b.stage,
+                    b.pred
+                );
+            }
+        }
+    }
+}
+
 #[test]
 fn repeated_runs_on_one_workspace_are_bit_identical() {
     // all 30 golden cells, twice, through ONE workspace: every buffer

@@ -171,6 +171,53 @@ fn train_runs_on_the_sim_backend() {
 }
 
 #[test]
+fn check_passes_the_whole_ranking_grid() {
+    // the acceptance criterion: all 15 ranking-grid scenarios come out
+    // of the analyzer with zero error-level findings
+    let (ok, out) = bpipe(&["check", "--grid", "--experiment", "8"]);
+    assert!(ok, "{out}");
+    assert!(out.contains("15 schedule(s) checked: 0 error(s)"), "{out}");
+    for needle in ["1F1B", "W-shaped+stage-bounds", "V-shaped+rebalance"] {
+        assert!(out.contains(needle), "missing {needle}: {out}");
+    }
+    // the capacity pass still warns that un-rebalanced exp-8 baselines
+    // would OOM — advisory, not gating
+    assert!(out.contains("provably-oom"), "{out}");
+}
+
+#[test]
+fn check_single_schedule_prints_bounds_and_passes() {
+    let (ok, out) = bpipe(&["check", "--schedule", "1f1b", "--p", "4", "--m", "8", "--rebalance"]);
+    assert!(ok, "{out}");
+    assert!(out.contains("stage |  lo pred  hi | planned"), "{out}");
+    assert!(out.contains("ok — no findings"), "{out}");
+    assert!(out.contains("1 schedule(s) checked: 0 error(s)"), "{out}");
+}
+
+#[test]
+fn check_flags_a_broken_schedule_in_human_and_json_form() {
+    // undersizing the hot channel deadlocks the V-shaped junction: a
+    // named error-level diagnostic and a nonzero exit, in both formats
+    let args = ["check", "--schedule", "vshaped", "--p", "2", "--m", "4", "--hot-cap", "1"];
+    let (ok, out) = bpipe(&args);
+    assert!(!ok, "undersized caps must fail the check: {out}");
+    assert!(out.contains("error[deadlock-cycle]"), "{out}");
+    assert!(out.contains("act[d1]"), "the cycle must name the junction channel: {out}");
+
+    let (ok, out) = bpipe(&[&args[..], &["--json"]].concat());
+    assert!(!ok, "{out}");
+    assert!(out.contains("\"code\":\"deadlock-cycle\""), "{out}");
+    assert!(out.contains("\"ok\":false"), "{out}");
+}
+
+#[test]
+fn sweep_skip_oom_settles_cells_statically() {
+    let (ok, out) = bpipe(&["sweep", "--experiment", "8", "--skip-oom"]);
+    assert!(ok, "{out}");
+    assert!(out.contains("settled statically"), "{out}");
+}
+
+#[test]
 fn memory_subcommand_shows_imbalance() {
     let (ok, out) = bpipe(&["memory", "--experiment", "8"]);
     assert!(ok && out.contains("OOM!"), "{out}");

@@ -1,0 +1,292 @@
+//! The dynamic twin of the analyzer's deadlock/progress pass
+//! (`analysis::protocol`), in two layers:
+//!
+//! 1. **Exhaustive model-level interleavings** (`model_*` tests, the set
+//!    the advisory `cargo miri` CI leg runs): a memoized DFS enumerates
+//!    EVERY reachable state of the [`ProtocolRun`] transition system for
+//!    small pipelines (p = 2, m = 2) and checks that every maximal state
+//!    — one where no thread can take a step — is the all-finished state
+//!    with clean FIFO tags.  This is the direct dynamic justification
+//!    for the analyzer's single greedy run: a Kahn network of fixed
+//!    per-thread traces over bounded SPSC FIFOs is confluent, so "the
+//!    greedy run finishes" must coincide with "every interleaving
+//!    finishes", and the DFS verifies exactly that, including on the
+//!    undersized-capacity counterexample where NO interleaving finishes.
+//!
+//! 2. **Real-thread spin-channel semantics**: the coordinator's
+//!    [`spin_send`]/[`spin_recv`] primitives are what the model's
+//!    Send/Recv transitions abstract.  These tests pin the properties
+//!    the abstraction relies on — per-channel FIFO order under
+//!    contention on a capacity-1 ring, progress when producer and
+//!    consumer spin against each other, and disconnect errors (`Err`)
+//!    exactly when the peer endpoint is gone — and then replay whole
+//!    [`ProtocolModel`] traces on real OS threads over real
+//!    `sync_channel` rings, proving the model-checked schedules also
+//!    complete under genuine preemptive scheduling.
+
+use std::collections::HashSet;
+use std::sync::mpsc::sync_channel;
+
+use bpipe::analysis::protocol::Dir;
+use bpipe::analysis::{ChannelCaps, ProtocolModel, ProtocolRun};
+use bpipe::coordinator::{spin_recv, spin_send};
+use bpipe::schedule::Family;
+
+/// Exhaustively enumerate every reachable state of the protocol
+/// transition system.  Returns `(reachable_states, maximal_states,
+/// all_maximal_finished, any_fifo_mismatch)`.
+///
+/// Memoizing on [`ProtocolRun::state`] (program counters + queue
+/// contents) is sound for the properties checked here: whether a thread
+/// is enabled and what a `Recv` observes depend only on that state, so
+/// two paths reaching the same state have identical futures.
+fn explore(model: &ProtocolModel) -> (usize, usize, bool, bool) {
+    let mut seen: HashSet<(Vec<usize>, Vec<Vec<u64>>)> = HashSet::new();
+    let mut stack = vec![ProtocolRun::new(model)];
+    let mut maximal = 0usize;
+    let mut all_maximal_finished = true;
+    let mut any_fifo = false;
+    while let Some(run) = stack.pop() {
+        if !seen.insert(run.state()) {
+            continue;
+        }
+        any_fifo |= run
+            .diagnostics
+            .iter()
+            .any(|d| d.code == "fifo-mismatch");
+        let mut progressed = false;
+        for t in 0..run.num_threads() {
+            if run.enabled(t) {
+                progressed = true;
+                let mut next = run.clone();
+                assert!(next.step(t), "enabled thread {t} must be able to step");
+                stack.push(next);
+            }
+        }
+        if !progressed {
+            maximal += 1;
+            all_maximal_finished &= run.all_finished();
+        }
+    }
+    (seen.len(), maximal, all_maximal_finished, any_fifo)
+}
+
+/// p = 2, m = 2 instances of every schedule family, all of which the
+/// analyzer certifies deadlock-free at run capacities.
+fn small_families() -> Vec<(&'static str, ProtocolModel)> {
+    [
+        Family::OneFOneB,
+        Family::GPipe,
+        Family::Interleaved { v: 2 },
+        Family::VShaped,
+    ]
+    .into_iter()
+    .map(|f| {
+        let s = f.build(2, 2);
+        let caps = ChannelCaps::for_run(s.m, s.chunks);
+        (f.label(), ProtocolModel::build(&s, &caps))
+    })
+    .collect()
+}
+
+/// EVERY interleaving of every small schedule completes: the only
+/// maximal state the DFS can reach is the all-finished one, and no
+/// interleaving ever observes out-of-FIFO microbatch tags.
+#[test]
+fn model_every_interleaving_completes_at_run_capacities() {
+    for (label, model) in small_families() {
+        let (states, maximal, finished, fifo) = explore(&model);
+        assert!(
+            states > model.threads.len(),
+            "{label}: the DFS must branch, saw only {states} states"
+        );
+        assert!(maximal >= 1, "{label}: at least one maximal state");
+        assert!(
+            finished,
+            "{label}: some interleaving reached a stuck non-final state"
+        );
+        assert!(!fifo, "{label}: some interleaving saw a FIFO mismatch");
+    }
+}
+
+/// Confluence, verified dynamically: for each small schedule the greedy
+/// run (`ProtocolRun::run`, what the analyzer executes) reaches the same
+/// verdict as the exhaustive enumeration.
+#[test]
+fn model_greedy_verdict_matches_the_exhaustive_one() {
+    for (label, model) in small_families() {
+        let mut greedy = ProtocolRun::new(&model);
+        let diags = greedy.run();
+        assert!(
+            greedy.all_finished(),
+            "{label}: greedy run must finish like every other interleaving"
+        );
+        assert!(
+            !diags.iter().any(|d| d.code == "deadlock-cycle"),
+            "{label}: greedy run reported a deadlock the DFS refutes"
+        );
+    }
+}
+
+/// The counterexample direction: with the zig-zag junction's hot
+/// channel undersized to capacity 1, *no* interleaving of the V-shaped
+/// p = 2 pipeline can finish — the self-channel block is in a single
+/// thread's sequential trace, so it is interleaving-independent, which
+/// is exactly why the analyzer may condemn it from one greedy run.
+#[test]
+fn model_undersized_junction_deadlocks_in_every_interleaving() {
+    let s = Family::VShaped.build(2, 4);
+    let caps = ChannelCaps {
+        hot: 1,
+        ..ChannelCaps::for_run(s.m, s.chunks)
+    };
+    let model = ProtocolModel::build(&s, &caps);
+    let mut seen: HashSet<(Vec<usize>, Vec<Vec<u64>>)> = HashSet::new();
+    let mut stack = vec![ProtocolRun::new(&model)];
+    let mut maximal = 0usize;
+    while let Some(run) = stack.pop() {
+        if !seen.insert(run.state()) {
+            continue;
+        }
+        let mut progressed = false;
+        for t in 0..run.num_threads() {
+            if run.enabled(t) {
+                progressed = true;
+                let mut next = run.clone();
+                next.step(t);
+                stack.push(next);
+            }
+        }
+        if !progressed {
+            maximal += 1;
+            assert!(
+                !run.all_finished(),
+                "an interleaving escaped the undersized junction"
+            );
+        }
+    }
+    assert!(maximal >= 1);
+    // and the analyzer's greedy run names the same defect
+    let mut greedy = ProtocolRun::new(&model);
+    let diags = greedy.run();
+    assert!(
+        diags
+            .iter()
+            .any(|d| d.code == "deadlock-cycle" && d.message.contains("act[d1]")),
+        "greedy run must localize the deadlock to the junction channel"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// real-thread spin-channel semantics
+// ---------------------------------------------------------------------------
+
+/// FIFO + progress under maximal contention: a capacity-1 ring forces
+/// the producer and consumer to alternate, so every element crosses a
+/// full/empty boundary and any reordering or lost wakeup would show up
+/// as a wrong value or a hang.
+#[test]
+fn spin_channels_preserve_fifo_on_a_full_ring() {
+    const N: u64 = 2_000;
+    let (tx, rx) = sync_channel::<(u64, u64)>(1);
+    std::thread::scope(|scope| {
+        scope.spawn(move || {
+            for i in 0..N {
+                spin_send(&tx, (i, i * i)).expect("consumer died early");
+            }
+        });
+        for i in 0..N {
+            let (k, v) = spin_recv(&rx).expect("producer died early");
+            assert_eq!(k, i, "spin channel delivered out of FIFO order");
+            assert_eq!(v, i * i);
+        }
+    });
+}
+
+/// Disconnects surface as `Err`, never as a hang: a send into a channel
+/// whose receiver is gone fails, and a recv drains buffered messages
+/// before failing once the sender is gone.
+#[test]
+fn spin_channels_error_on_disconnect() {
+    let (tx, rx) = sync_channel::<u64>(2);
+    drop(rx);
+    assert!(spin_send(&tx, 7).is_err(), "send to dropped receiver must fail");
+
+    let (tx, rx) = sync_channel::<u64>(2);
+    spin_send(&tx, 1).unwrap();
+    spin_send(&tx, 2).unwrap();
+    drop(tx);
+    assert_eq!(spin_recv(&rx), Ok(1), "buffered messages drain before the error");
+    assert_eq!(spin_recv(&rx), Ok(2));
+    assert!(spin_recv(&rx).is_err(), "recv from dropped sender must fail");
+}
+
+/// Replay a [`ProtocolModel`] on real OS threads: one thread per trace,
+/// one `sync_channel` ring per channel spec (same capacities), every op
+/// performed with the coordinator's own `spin_send`/`spin_recv`.  The
+/// model-level DFS proved these schedules complete under EVERY
+/// interleaving; this run checks the abstraction downward — the real
+/// primitives under genuine preemptive scheduling also make progress
+/// and preserve the per-channel FIFO tags.
+fn replay_on_threads(model: &ProtocolModel) {
+    // build one ring per channel and hand each endpoint to its one
+    // producer / one consumer thread (the model is strictly SPSC)
+    let mut senders: Vec<Option<std::sync::mpsc::SyncSender<u64>>> = Vec::new();
+    let mut receivers: Vec<Option<std::sync::mpsc::Receiver<u64>>> = Vec::new();
+    for spec in &model.channels {
+        let (tx, rx) = sync_channel::<u64>(spec.cap);
+        senders.push(Some(tx));
+        receivers.push(Some(rx));
+    }
+    std::thread::scope(|scope| {
+        for (t, trace) in model.threads.iter().enumerate() {
+            let mut txs: Vec<Option<std::sync::mpsc::SyncSender<u64>>> =
+                (0..model.channels.len()).map(|_| None).collect();
+            let mut rxs: Vec<Option<std::sync::mpsc::Receiver<u64>>> =
+                (0..model.channels.len()).map(|_| None).collect();
+            for (c, spec) in model.channels.iter().enumerate() {
+                if spec.producer == t {
+                    txs[c] = senders[c].take();
+                }
+                if spec.consumer == t {
+                    rxs[c] = receivers[c].take();
+                }
+            }
+            scope.spawn(move || {
+                for op in &trace.ops {
+                    match op.dir {
+                        Dir::Send => {
+                            let tx = txs[op.chan].as_ref().expect("producer owns its ring");
+                            spin_send(tx, op.mb).unwrap_or_else(|_| {
+                                panic!("{}: peer died mid-protocol", op.label)
+                            });
+                        }
+                        Dir::Recv => {
+                            let rx = rxs[op.chan].as_ref().expect("consumer owns its ring");
+                            let got = spin_recv(rx).unwrap_or_else(|_| {
+                                panic!("{}: peer died mid-protocol", op.label)
+                            });
+                            if op.expect {
+                                assert_eq!(
+                                    got, op.mb,
+                                    "{}: FIFO tag mismatch on a real ring",
+                                    op.label
+                                );
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn real_threads_complete_every_model_checked_schedule() {
+    // several repetitions to vary the OS scheduler's interleaving
+    for _ in 0..4 {
+        for (_, model) in small_families() {
+            replay_on_threads(&model);
+        }
+    }
+}
