@@ -30,8 +30,12 @@ use bpipe::bpipe::{
     RebalanceWorkspace,
 };
 use bpipe::config::paper_experiment;
-use bpipe::coordinator::{train, train_probed, RebalancePlan, TrainConfig};
-use bpipe::runtime::{Backend, Manifest, SimBackend, UnpooledSimBackend};
+use bpipe::coordinator::{
+    supervise, train, train_probed, RebalancePlan, SuperviseConfig, TrainConfig,
+};
+use bpipe::runtime::{
+    Backend, Fault, FaultPlan, FaultyBackend, Manifest, SimBackend, UnpooledSimBackend,
+};
 use bpipe::schedule::{interleaved, one_f_one_b, v_shaped, zigzag, Family};
 use bpipe::sim::{bounds_grid, paper_grid, simulate, sweep, SimOptions, SimWorkspace};
 use bpipe::util::{bench, Json};
@@ -190,6 +194,35 @@ fn main() {
         ap_owned - ap_pooled
     );
 
+    println!("\n=== supervised crash recovery (FaultyBackend<SimBackend>) ===");
+    // one injected crash mid-run: measures the full detect → drain →
+    // checkpoint → re-plan → resume cycle (time-to-recover), feeding the
+    // recovery sample in BENCH_runtime.json
+    let ck = std::env::temp_dir().join(format!("bpipe-bench-recover-{}", std::process::id()));
+    let mut r_cfg = t_cfg.clone();
+    r_cfg.steps = if smoke { 6 } else { 12 };
+    r_cfg.checkpoint_dir = Some(ck.clone());
+    r_cfg.checkpoint_every = 1;
+    let scfg = SuperviseConfig {
+        train: r_cfg,
+        faults: Some(std::sync::Arc::new(FaultPlan::new(
+            7,
+            vec![Fault::Crash { stage: 1, step: 3 }],
+        ))),
+        max_restarts: 2,
+        recover_timeout: Some(std::time::Duration::from_millis(2000)),
+        backoff_base_ms: 1,
+        log: false,
+    };
+    let recovered =
+        supervise::<FaultyBackend<SimBackend>>(&scfg).expect("supervised bench run failed");
+    let _ = std::fs::remove_dir_all(&ck);
+    let ttr = recovered.time_to_recover_s.first().copied().unwrap_or(0.0);
+    println!(
+        "hotpath/recover_crash_p4        restarts={} steps_lost={} time_to_recover={:.4}s",
+        recovered.restarts, recovered.steps_lost, ttr
+    );
+
     // machine-readable perf trajectory (CI archives this and diffs the
     // steps/s against the committed baseline, advisory-only)
     let side = |steps_per_s: f64, mean_step_s: f64, allocs_step: f64| -> Json {
@@ -213,6 +246,11 @@ fn main() {
         "speedup_pooled_vs_owned".to_string(),
         Json::Num(sp_pooled / sp_owned),
     );
+    let mut rec = HashMap::new();
+    rec.insert("restarts".to_string(), Json::Num(recovered.restarts as f64));
+    rec.insert("steps_lost".to_string(), Json::Num(recovered.steps_lost as f64));
+    rec.insert("time_to_recover_s".to_string(), Json::Num(ttr));
+    root.insert("recovery".to_string(), Json::Obj(rec));
     match std::fs::write("BENCH_runtime.json", format!("{}\n", Json::Obj(root))) {
         Ok(()) => println!("wrote BENCH_runtime.json"),
         Err(e) => eprintln!("could not write BENCH_runtime.json: {e}"),

@@ -67,6 +67,27 @@ pub fn check_plan(s: &Schedule, plan: &RebalancePlan, caps: &ChannelCaps) -> Vec
     diags
 }
 
+/// The go/no-go gate over [`check_plan`]: `Ok(warnings)` admits the
+/// plan, `Err(diags)` rejects it on any error-level finding.  This is
+/// the single entry point every plan must clear before it reaches the
+/// channel web — initial planning (`plan_schedule`) and the
+/// supervisor's re-plan-under-reduced-HBM path
+/// ([`crate::coordinator::supervisor::replan_for_cap`]) both route
+/// through it, so a recovery plan is held to exactly the same proof
+/// obligations as a cold-start plan.
+pub fn gate_plan(
+    s: &Schedule,
+    plan: &RebalancePlan,
+    caps: &ChannelCaps,
+) -> Result<Vec<Diagnostic>, Vec<Diagnostic>> {
+    let diags = check_plan(s, plan, caps);
+    if has_errors(&diags) {
+        Err(diags)
+    } else {
+        Ok(diags)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -94,6 +115,20 @@ mod tests {
         // the dropped backward also starves the protocol and leaks a handle
         assert!(diags.iter().any(|d| d.code == "deadlock-cycle"), "{diags:?}");
         assert!(diags.iter().any(|d| d.code == "donation-leak"), "{diags:?}");
+    }
+
+    #[test]
+    fn gate_plan_splits_go_from_no_go() {
+        let caps = ChannelCaps::for_run(8, 1);
+        let s = rebalance(&Family::OneFOneB.build(8, 8), None);
+        assert!(gate_plan(&s, &RebalancePlan::Uniform { bound: None }, &caps).is_ok());
+
+        let mut bad = Family::OneFOneB.build(4, 4);
+        bad.programs[2].ops.pop();
+        let caps4 = ChannelCaps::for_run(4, 1);
+        let diags = gate_plan(&bad, &RebalancePlan::Uniform { bound: None }, &caps4)
+            .expect_err("a broken schedule must not clear the gate");
+        assert!(has_errors(&diags));
     }
 
     #[test]

@@ -166,36 +166,98 @@ fn backoff(spins: &mut u32) {
     }
 }
 
+/// Why a spin-channel operation gave up: the peer hung up, or (with a
+/// deadline) the peer went silent past the deadline.  `Timeout` is the
+/// typed signal that turns a stalled pipeline neighbor into a
+/// recoverable failure instead of an infinite spin — the supervisor
+/// classifies it as `FailureCause::ChannelTimeout`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChannelError {
+    /// Every peer is gone (disconnect cascade — usually secondary to a
+    /// failure elsewhere in the pipeline).
+    Closed,
+    /// The peer is still connected but made no progress within the
+    /// deadline.
+    Timeout { waited_ms: u64 },
+}
+
+impl std::fmt::Display for ChannelError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ChannelError::Closed => write!(f, "channel closed (peer gone)"),
+            ChannelError::Timeout { waited_ms } => {
+                write!(f, "channel timeout after {waited_ms} ms (peer silent)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ChannelError {}
+
 /// Allocation-free bounded-channel send: busy-polls `try_send` instead
 /// of parking (see [`backoff`]).  Returns `Err(())` when the receiver
 /// is gone.
-pub fn spin_send<T>(tx: &SyncSender<T>, mut v: T) -> Result<(), ()> {
-    use std::sync::mpsc::TrySendError;
-    let mut spins = 0u32;
-    loop {
-        match tx.try_send(v) {
-            Ok(()) => return Ok(()),
-            Err(TrySendError::Full(back)) => {
-                v = back;
-                backoff(&mut spins);
-            }
-            Err(TrySendError::Disconnected(_)) => return Err(()),
-        }
-    }
+pub fn spin_send<T>(tx: &SyncSender<T>, v: T) -> Result<(), ()> {
+    spin_send_deadline(tx, v, None).map_err(|_| ())
 }
 
 /// Receive twin of [`spin_send`]: `Err(())` once every sender is gone
 /// and the channel is drained (matching `recv`'s disconnect semantics).
 pub fn spin_recv<T>(rx: &Receiver<T>) -> Result<T, ()> {
+    spin_recv_deadline(rx, None).map_err(|_| ())
+}
+
+/// [`spin_send`] with an optional deadline.  `deadline: None` is
+/// byte-for-byte the old unbounded spin (no clock reads on the hot
+/// path); with a deadline, the clock is only consulted once the wait
+/// leaves the short spin tier, and the value is dropped on timeout (the
+/// peer was not making progress anyway).
+pub fn spin_send_deadline<T>(
+    tx: &SyncSender<T>,
+    mut v: T,
+    deadline: Option<std::time::Duration>,
+) -> Result<(), ChannelError> {
+    use std::sync::mpsc::TrySendError;
+    let mut spins = 0u32;
+    let started = deadline.map(|_| std::time::Instant::now());
+    loop {
+        match tx.try_send(v) {
+            Ok(()) => return Ok(()),
+            Err(TrySendError::Full(back)) => {
+                v = back;
+                if let (Some(limit), Some(t0)) = (deadline, started) {
+                    if spins >= 64 && t0.elapsed() >= limit {
+                        return Err(ChannelError::Timeout { waited_ms: limit.as_millis() as u64 });
+                    }
+                }
+                backoff(&mut spins);
+            }
+            Err(TrySendError::Disconnected(_)) => return Err(ChannelError::Closed),
+        }
+    }
+}
+
+/// [`spin_recv`] with an optional deadline (see
+/// [`spin_send_deadline`] for the deadline semantics).
+pub fn spin_recv_deadline<T>(
+    rx: &Receiver<T>,
+    deadline: Option<std::time::Duration>,
+) -> Result<T, ChannelError> {
     use std::sync::mpsc::TryRecvError;
     let mut spins = 0u32;
+    let started = deadline.map(|_| std::time::Instant::now());
     loop {
         match rx.try_recv() {
             Ok(v) => return Ok(v),
             Err(TryRecvError::Empty) => {
+                if let (Some(limit), Some(t0)) = (deadline, started) {
+                    if spins >= 64 && t0.elapsed() >= limit {
+                        return Err(ChannelError::Timeout { waited_ms: limit.as_millis() as u64 });
+                    }
+                }
                 backoff(&mut spins);
             }
-            Err(TryRecvError::Disconnected) => return Err(()),
+            Err(TryRecvError::Disconnected) => return Err(ChannelError::Closed),
         }
     }
 }
@@ -211,21 +273,28 @@ enum StoreMsg {
 pub struct RemoteStoreClient {
     tx: SyncSender<StoreMsg>,
     resp_rx: Receiver<(StashKey, Stash)>,
+    deadline: Option<std::time::Duration>,
 }
 
 impl RemoteStoreClient {
     /// Ship a stash to the acceptor (non-blocking while the acceptor's
-    /// in-flight window has room; allocation-free either way).
-    pub fn evict(&self, key: StashKey, stash: Stash) {
-        spin_send(&self.tx, StoreMsg::Evict { key, stash }).expect("remote store gone");
+    /// in-flight window has room; allocation-free either way).  A typed
+    /// [`ChannelError`] (closed store, or deadline exceeded) surfaces as
+    /// a worker failure for the supervisor instead of a panic.
+    pub fn evict(&self, key: StashKey, stash: Stash) -> anyhow::Result<()> {
+        spin_send_deadline(&self.tx, StoreMsg::Evict { key, stash }, self.deadline)
+            .map_err(|e| anyhow::Error::new(e).context("BPipe evict to remote store"))
     }
 
-    /// Fetch a stash back (busy-waits until the acceptor responds).
-    pub fn load(&self, key: StashKey) -> Stash {
-        spin_send(&self.tx, StoreMsg::Load { key }).expect("remote store gone");
-        let (got, stash) = spin_recv(&self.resp_rx).expect("remote store gone");
-        assert_eq!(got, key, "remote store returned the wrong stash");
-        stash
+    /// Fetch a stash back (busy-waits until the acceptor responds, up to
+    /// the client's deadline when one is set).
+    pub fn load(&self, key: StashKey) -> anyhow::Result<Stash> {
+        spin_send_deadline(&self.tx, StoreMsg::Load { key }, self.deadline)
+            .map_err(|e| anyhow::Error::new(e).context("BPipe load request to remote store"))?;
+        let (got, stash) = spin_recv_deadline(&self.resp_rx, self.deadline)
+            .map_err(|e| anyhow::Error::new(e).context("BPipe load response from remote store"))?;
+        anyhow::ensure!(got == key, "remote store returned the wrong stash");
+        Ok(stash)
     }
 
     pub fn shutdown(&self) {
@@ -251,6 +320,21 @@ pub struct RemoteStoreStats {
 pub fn spawn_remote_store(
     max_inflight: usize,
 ) -> (RemoteStoreClient, Receiver<RemoteStoreStats>) {
+    spawn_remote_store_with(max_inflight, None)
+}
+
+/// [`spawn_remote_store`] with an optional client-side deadline on every
+/// evict/load interaction (the supervised runtime's stall detector).
+///
+/// Teardown discipline: the `held.is_empty()` invariant is asserted only
+/// on an orderly [`RemoteStoreClient::shutdown`].  When the client side
+/// simply disappears (a worker failed and the disconnect cascade is
+/// tearing the pipeline down), the store drops whatever it still holds
+/// and exits quietly — a secondary panic here would mask the root cause.
+pub fn spawn_remote_store_with(
+    max_inflight: usize,
+    deadline: Option<std::time::Duration>,
+) -> (RemoteStoreClient, Receiver<RemoteStoreStats>) {
     let cap = max_inflight.max(1);
     let (tx, rx) = sync_channel::<StoreMsg>(cap + 1);
     let (resp_tx, resp_rx) = sync_channel::<(StashKey, Stash)>(1);
@@ -262,6 +346,7 @@ pub fn spawn_remote_store(
             let mut held: HashMap<StashKey, Stash> = HashMap::with_capacity(cap);
             let mut stats = RemoteStoreStats::default();
             let mut bytes = 0usize;
+            let mut orderly = false;
             for msg in rx {
                 match msg {
                     StoreMsg::Evict { key, stash } => {
@@ -279,14 +364,19 @@ pub fn spawn_remote_store(
                         stats.loads += 1;
                         resp_tx.send((key, stash)).ok();
                     }
-                    StoreMsg::Shutdown => break,
+                    StoreMsg::Shutdown => {
+                        orderly = true;
+                        break;
+                    }
                 }
             }
-            assert!(held.is_empty(), "remote store shut down with stashes still held");
+            if orderly {
+                assert!(held.is_empty(), "remote store shut down with stashes still held");
+            }
             stats_tx.send(stats).ok();
         })
         .expect("spawn remote store");
-    (RemoteStoreClient { tx, resp_rx }, stats_rx)
+    (RemoteStoreClient { tx, resp_rx, deadline }, stats_rx)
 }
 
 #[cfg(test)]
@@ -362,16 +452,50 @@ mod tests {
     fn remote_store_round_trip() {
         let (client, stats_rx) = spawn_remote_store(4);
         let payload = t(8);
-        client.evict((3, 0), payload.clone());
-        client.evict((3, 1), t(8));
-        let back = client.load((3, 0));
+        client.evict((3, 0), payload.clone()).unwrap();
+        client.evict((3, 1), t(8)).unwrap();
+        let back = client.load((3, 0)).unwrap();
         assert_eq!(back, payload);
-        let _ = client.load((3, 1));
+        let _ = client.load((3, 1)).unwrap();
         client.shutdown();
         let stats = stats_rx.recv().unwrap();
         assert_eq!(stats.evictions, 2);
         assert_eq!(stats.loads, 2);
         assert_eq!(stats.high_water_entries, 2);
         assert_eq!(stats.high_water_bytes, 64);
+    }
+
+    #[test]
+    fn recv_deadline_times_out_instead_of_spinning() {
+        let (_tx, rx) = sync_channel::<u32>(1);
+        let started = std::time::Instant::now();
+        let got = spin_recv_deadline(&rx, Some(std::time::Duration::from_millis(30)));
+        assert_eq!(got, Err(ChannelError::Timeout { waited_ms: 30 }));
+        assert!(started.elapsed() < std::time::Duration::from_secs(5), "bounded wait");
+    }
+
+    #[test]
+    fn send_deadline_times_out_when_ring_is_full() {
+        let (tx, _rx) = sync_channel::<u32>(1);
+        tx.send(1).unwrap(); // fill the ring; nobody drains it
+        let got = spin_send_deadline(&tx, 2, Some(std::time::Duration::from_millis(30)));
+        assert_eq!(got, Err(ChannelError::Timeout { waited_ms: 30 }));
+    }
+
+    #[test]
+    fn disconnect_reports_closed_not_timeout() {
+        let (tx, rx) = sync_channel::<u32>(1);
+        drop(tx);
+        let got = spin_recv_deadline(&rx, Some(std::time::Duration::from_millis(30)));
+        assert_eq!(got, Err(ChannelError::Closed));
+    }
+
+    #[test]
+    fn abandoned_store_exits_without_panicking() {
+        let (client, stats_rx) = spawn_remote_store(2);
+        client.evict((0, 0), t(4)).unwrap();
+        drop(client); // disconnect cascade: stash still held, no Shutdown
+        let stats = stats_rx.recv().unwrap();
+        assert_eq!(stats.evictions, 1, "store exits cleanly and still reports stats");
     }
 }

@@ -5,19 +5,69 @@
 //!
 //! ```text
 //! <dir>/meta.txt            # key = value: steps_done, stages, microbatches
-//! <dir>/stage<k>.ckpt       # [magic u32][n u64][params f32*n][m f32*n][v f32*n]
+//! <dir>/stage<k>.ckpt       # current generation
+//! <dir>/stage<k>.prev.ckpt  # previous generation (crash-recovery fallback)
 //! ```
 //!
-//! Writes are atomic (tmp file + rename) so a crash mid-checkpoint never
-//! corrupts the previous one.  Resume is exact: together with the
-//! deterministic corpus fast-forward in the leader, a resumed run
+//! File format (all little-endian):
+//!
+//! ```text
+//! [magic u32][step u64][n u64][params f32*n][m f32*n][v f32*n][fnv1a-64 u64]
+//! ```
+//!
+//! The trailing checksum is FNV-1a-64 over every preceding byte; a
+//! mismatch (torn write, bit rot, truncation) surfaces as a typed
+//! [`CorruptCheckpoint`] instead of a garbage resume.  Writes are atomic
+//! *and* two-generation: the new file is fully written and fsynced to a
+//! temp name, the old current is rotated to `.prev.ckpt`, and only then
+//! is the temp renamed into place — a crash at any instant leaves at
+//! least one valid generation on disk.
+//!
+//! Two generations matter for crash recovery: stages checkpoint
+//! independently, so a mid-step failure can leave stage A at step k and
+//! stage B at step k−1.  With the step recorded in each file,
+//! [`latest_common_step`] finds the newest step EVERY stage can restore
+//! (pipeline data dependencies bound the skew to one generation), which
+//! is what the supervisor rolls back to.  Resume is exact: together with
+//! the deterministic corpus fast-forward in the leader, a resumed run
 //! produces bit-identical losses to an uninterrupted one (see
 //! `integration_runtime::checkpoint_resume_is_bit_identical`).
 
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 
-const MAGIC: u32 = 0xB1_9E_C4_99;
+/// v2 magic — v1 (`0xB1_9E_C4_99`) files carried no step or checksum
+/// and are rejected as corrupt (clean format break; checkpoints are
+/// per-run scratch state, not long-lived archives).
+const MAGIC: u32 = 0xB1_9E_C4_9A;
+
+/// FNV-1a 64-bit over `bytes` — dependency-free content integrity.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Typed integrity failure on checkpoint load: bad magic, truncation,
+/// or checksum mismatch.  The supervisor treats a stage whose current
+/// generation is corrupt as simply not having that generation — it falls
+/// back to `.prev.ckpt` or, failing that, a fresh start.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CorruptCheckpoint {
+    pub path: PathBuf,
+    pub detail: String,
+}
+
+impl std::fmt::Display for CorruptCheckpoint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "corrupt checkpoint {:?}: {}", self.path, self.detail)
+    }
+}
+
+impl std::error::Error for CorruptCheckpoint {}
 
 /// One stage's optimizer-visible state.
 #[derive(Debug, Clone, PartialEq)]
@@ -27,70 +77,179 @@ pub struct StageCheckpoint {
     pub v: Vec<f32>,
 }
 
-fn write_f32s(w: &mut impl Write, xs: &[f32]) -> anyhow::Result<()> {
-    let mut buf = Vec::with_capacity(xs.len() * 4);
+fn push_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
     for x in xs {
         buf.extend_from_slice(&x.to_le_bytes());
     }
-    w.write_all(&buf)?;
-    Ok(())
 }
 
-fn read_f32s(r: &mut impl Read, n: usize) -> anyhow::Result<Vec<f32>> {
+fn read_f32s(r: &mut impl Read, n: usize) -> std::io::Result<Vec<f32>> {
     let mut buf = vec![0u8; n * 4];
     r.read_exact(&mut buf)?;
     Ok(buf.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
 }
 
 impl StageCheckpoint {
-    /// Atomically write this checkpoint to `<dir>/stage<k>.ckpt`.
+    /// [`Self::save_at`] without a step tag (step 0) — kept for callers
+    /// that only ever want the latest state.
     pub fn save(&self, dir: &Path, stage: u64) -> anyhow::Result<()> {
+        self.save_at(dir, stage, 0)
+    }
+
+    /// Atomically write this checkpoint as the stage's current
+    /// generation, tagged with the global step it snapshots; the old
+    /// current generation rotates to `.prev.ckpt`.
+    ///
+    /// Crash-safety order: (1) the new file is fully written and synced
+    /// under a temp name, (2) current → prev, (3) temp → current.  Any
+    /// interruption leaves ≥ 1 valid generation.
+    pub fn save_at(&self, dir: &Path, stage: u64, step: u64) -> anyhow::Result<()> {
         anyhow::ensure!(
             self.params.len() == self.m.len() && self.m.len() == self.v.len(),
             "inconsistent checkpoint vector lengths"
         );
         std::fs::create_dir_all(dir)?;
+        let n = self.params.len();
+        let mut buf = Vec::with_capacity(4 + 8 + 8 + n * 12 + 8);
+        buf.extend_from_slice(&MAGIC.to_le_bytes());
+        buf.extend_from_slice(&step.to_le_bytes());
+        buf.extend_from_slice(&(n as u64).to_le_bytes());
+        push_f32s(&mut buf, &self.params);
+        push_f32s(&mut buf, &self.m);
+        push_f32s(&mut buf, &self.v);
+        let sum = fnv1a64(&buf);
+        buf.extend_from_slice(&sum.to_le_bytes());
+
         let tmp = dir.join(format!(".stage{stage}.ckpt.tmp"));
         {
-            let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
-            f.write_all(&MAGIC.to_le_bytes())?;
-            f.write_all(&(self.params.len() as u64).to_le_bytes())?;
-            write_f32s(&mut f, &self.params)?;
-            write_f32s(&mut f, &self.m)?;
-            write_f32s(&mut f, &self.v)?;
-            f.flush()?;
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&buf)?;
+            f.sync_all()?;
         }
-        std::fs::rename(&tmp, Self::path(dir, stage))?;
+        let cur = Self::path(dir, stage);
+        let prev = Self::prev_path(dir, stage);
+        if cur.exists() {
+            std::fs::rename(&cur, &prev)?;
+        }
+        std::fs::rename(&tmp, &cur)?;
         Ok(())
     }
 
-    /// Load `<dir>/stage<k>.ckpt`, verifying magic and length.
-    pub fn load(dir: &Path, stage: u64, expect_n: usize) -> anyhow::Result<Self> {
-        let path = Self::path(dir, stage);
-        let mut f = std::io::BufReader::new(
-            std::fs::File::open(&path)
-                .map_err(|e| anyhow::anyhow!("cannot open checkpoint {path:?}: {e}"))?,
-        );
+    fn load_file(path: &Path, expect_n: usize) -> anyhow::Result<(u64, Self)> {
+        let corrupt = |detail: String| {
+            anyhow::Error::new(CorruptCheckpoint { path: path.to_path_buf(), detail })
+        };
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("cannot open checkpoint {path:?}: {e}"))?;
+        if bytes.len() < 4 + 8 + 8 + 8 {
+            return Err(corrupt(format!("only {} bytes — truncated header", bytes.len())));
+        }
+        let (body, tail) = bytes.split_at(bytes.len() - 8);
+        let stored = u64::from_le_bytes(tail.try_into().unwrap());
+        let computed = fnv1a64(body);
+        if stored != computed {
+            return Err(corrupt(format!(
+                "checksum mismatch (stored {stored:#018x}, computed {computed:#018x})"
+            )));
+        }
+        let mut r = body;
         let mut word = [0u8; 4];
-        f.read_exact(&mut word)?;
-        anyhow::ensure!(u32::from_le_bytes(word) == MAGIC, "bad checkpoint magic in {path:?}");
-        let mut len = [0u8; 8];
-        f.read_exact(&mut len)?;
-        let n = u64::from_le_bytes(len) as usize;
+        r.read_exact(&mut word)?;
+        let magic = u32::from_le_bytes(word);
+        if magic != MAGIC {
+            return Err(corrupt(format!("bad magic {magic:#010x}")));
+        }
+        let mut u64buf = [0u8; 8];
+        r.read_exact(&mut u64buf)?;
+        let step = u64::from_le_bytes(u64buf);
+        r.read_exact(&mut u64buf)?;
+        let n = u64::from_le_bytes(u64buf) as usize;
         anyhow::ensure!(
             n == expect_n,
             "checkpoint {path:?} has {n} params, stage expects {expect_n} \
              (artifacts changed since the checkpoint was written?)"
         );
-        Ok(Self {
-            params: read_f32s(&mut f, n)?,
-            m: read_f32s(&mut f, n)?,
-            v: read_f32s(&mut f, n)?,
-        })
+        if body.len() != 4 + 8 + 8 + n * 12 {
+            return Err(corrupt(format!("payload is {} bytes, expected {}", body.len(), n * 12)));
+        }
+        let ck = Self {
+            params: read_f32s(&mut r, n)?,
+            m: read_f32s(&mut r, n)?,
+            v: read_f32s(&mut r, n)?,
+        };
+        Ok((step, ck))
+    }
+
+    /// Load the stage's newest valid generation, whatever step it holds.
+    pub fn load(dir: &Path, stage: u64, expect_n: usize) -> anyhow::Result<Self> {
+        match Self::load_file(&Self::path(dir, stage), expect_n) {
+            Ok((_, ck)) => Ok(ck),
+            Err(cur_err) => match Self::load_file(&Self::prev_path(dir, stage), expect_n) {
+                Ok((_, ck)) => Ok(ck),
+                Err(_) => Err(cur_err),
+            },
+        }
+    }
+
+    /// Load the generation snapshotting exactly `step`, searching
+    /// current then previous.
+    pub fn load_at(dir: &Path, stage: u64, expect_n: usize, step: u64) -> anyhow::Result<Self> {
+        for path in [Self::path(dir, stage), Self::prev_path(dir, stage)] {
+            if let Ok((s, ck)) = Self::load_file(&path, expect_n) {
+                if s == step {
+                    return Ok(ck);
+                }
+            }
+        }
+        anyhow::bail!("no valid generation of stage {stage} in {dir:?} holds step {step}")
+    }
+
+    /// Steps of the stage's valid generations, newest first (loadable
+    /// headers + intact checksums only; length is not checked).
+    pub fn available_steps(dir: &Path, stage: u64) -> Vec<u64> {
+        let mut steps = Vec::with_capacity(2);
+        for path in [Self::path(dir, stage), Self::prev_path(dir, stage)] {
+            if let Ok(bytes) = std::fs::read(&path) {
+                if bytes.len() >= 4 + 8 + 8 + 8 {
+                    let (body, tail) = bytes.split_at(bytes.len() - 8);
+                    let stored = u64::from_le_bytes(tail.try_into().unwrap());
+                    if stored == fnv1a64(body) && body[..4] == MAGIC.to_le_bytes() {
+                        steps.push(u64::from_le_bytes(body[4..12].try_into().unwrap()));
+                    }
+                }
+            }
+        }
+        steps
     }
 
     pub fn path(dir: &Path, stage: u64) -> PathBuf {
         dir.join(format!("stage{stage}.ckpt"))
+    }
+
+    pub fn prev_path(dir: &Path, stage: u64) -> PathBuf {
+        dir.join(format!("stage{stage}.prev.ckpt"))
+    }
+}
+
+/// The newest global step EVERY listed (virtual) stage can restore from
+/// a valid on-disk generation — the supervisor's rollback target.
+/// Returns 0 (fresh start) when any stage has no valid generation at
+/// all.
+pub fn latest_common_step(dir: &Path, stages: impl IntoIterator<Item = u64>) -> u64 {
+    let mut common = u64::MAX;
+    let mut any = false;
+    for stage in stages {
+        any = true;
+        let newest = StageCheckpoint::available_steps(dir, stage).into_iter().max();
+        match newest {
+            Some(s) => common = common.min(s),
+            None => return 0,
+        }
+    }
+    if any && common != u64::MAX {
+        common
+    } else {
+        0
     }
 }
 
@@ -161,6 +320,10 @@ mod tests {
         d
     }
 
+    fn ck(fill: f32, n: usize) -> StageCheckpoint {
+        StageCheckpoint { params: vec![fill; n], m: vec![fill * 0.5; n], v: vec![fill * 0.25; n] }
+    }
+
     #[test]
     fn stage_checkpoint_round_trip() {
         let dir = tdir("rt");
@@ -189,6 +352,62 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         std::fs::write(StageCheckpoint::path(&dir, 1), b"garbage-not-a-checkpoint").unwrap();
         assert!(StageCheckpoint::load(&dir, 1, 4).is_err());
+    }
+
+    #[test]
+    fn bit_flip_is_a_typed_corruption() {
+        let dir = tdir("flip");
+        ck(1.0, 16).save_at(&dir, 0, 3).unwrap();
+        let path = StageCheckpoint::path(&dir, 0);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, bytes).unwrap();
+        let err = StageCheckpoint::load_at(&dir, 0, 16, 3).unwrap_err();
+        assert!(err.to_string().contains("no valid generation"), "{err}");
+        // with only the corrupt generation, the direct load surfaces the
+        // typed error
+        let err = StageCheckpoint::load_file(&path, 16).unwrap_err();
+        assert!(err.downcast_ref::<CorruptCheckpoint>().is_some(), "{err}");
+        assert!(err.to_string().contains("checksum mismatch"), "{err}");
+    }
+
+    #[test]
+    fn generations_rotate_and_load_by_step() {
+        let dir = tdir("gen");
+        ck(1.0, 8).save_at(&dir, 3, 1).unwrap();
+        ck(2.0, 8).save_at(&dir, 3, 2).unwrap();
+        assert_eq!(StageCheckpoint::available_steps(&dir, 3), vec![2, 1]);
+        assert_eq!(StageCheckpoint::load_at(&dir, 3, 8, 2).unwrap(), ck(2.0, 8));
+        assert_eq!(StageCheckpoint::load_at(&dir, 3, 8, 1).unwrap(), ck(1.0, 8), "prev gen");
+        assert!(StageCheckpoint::load_at(&dir, 3, 8, 5).is_err());
+        // plain load picks the newest
+        assert_eq!(StageCheckpoint::load(&dir, 3, 8).unwrap(), ck(2.0, 8));
+    }
+
+    #[test]
+    fn corrupt_current_falls_back_to_prev() {
+        let dir = tdir("fallback");
+        ck(1.0, 8).save_at(&dir, 0, 1).unwrap();
+        ck(2.0, 8).save_at(&dir, 0, 2).unwrap();
+        std::fs::write(StageCheckpoint::path(&dir, 0), b"torn write").unwrap();
+        assert_eq!(StageCheckpoint::load(&dir, 0, 8).unwrap(), ck(1.0, 8));
+        assert_eq!(StageCheckpoint::available_steps(&dir, 0), vec![1]);
+    }
+
+    #[test]
+    fn latest_common_step_is_min_over_stage_max() {
+        let dir = tdir("common");
+        // stage 0 reached step 3 (prev 2); stage 1 only reached step 2
+        ck(1.0, 4).save_at(&dir, 0, 2).unwrap();
+        ck(1.5, 4).save_at(&dir, 0, 3).unwrap();
+        ck(2.0, 4).save_at(&dir, 1, 1).unwrap();
+        ck(2.5, 4).save_at(&dir, 1, 2).unwrap();
+        assert_eq!(latest_common_step(&dir, [0, 1]), 2);
+        assert_eq!(latest_common_step(&dir, [0]), 3);
+        // a stage with no files at all forces a fresh start
+        assert_eq!(latest_common_step(&dir, [0, 1, 9]), 0);
+        assert_eq!(latest_common_step(&dir, std::iter::empty::<u64>()), 0);
     }
 
     #[test]

@@ -37,7 +37,7 @@ impl SyntheticCorpus {
 
     fn zipf(&mut self) -> u32 {
         let u: f64 = self.rng.next_f64();
-        match self.zipf_cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+        match self.zipf_cdf.binary_search_by(|c| c.total_cmp(&u)) {
             Ok(i) | Err(i) => (i as u32).min(self.vocab - 1)
         }
     }

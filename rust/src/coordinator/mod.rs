@@ -14,7 +14,11 @@
 //!   BPipe remote store (the acceptor's memory pool);
 //! * [`data`] — deterministic synthetic corpus with learnable structure;
 //! * [`stage_bench`] — single-stage timing for the paper-§4 estimator;
-//! * [`checkpoint`] — per-virtual-stage state + run metadata.
+//! * [`checkpoint`] — per-virtual-stage state + run metadata, now with
+//!   two rotated generations, step tags and content checksums;
+//! * [`supervisor`] — the fault-tolerant outer loop: classifies worker
+//!   failures into [`supervisor::FailureReport`]s, then
+//!   checkpoint–re-plan–resume ([`supervisor::supervise`]).
 //!
 //! The key BPipe property is tested end to end IN TIER-1: a rebalanced
 //! run computes **bit-identical losses** to its baseline (eviction is
@@ -35,15 +39,20 @@ pub mod data;
 pub mod pipeline;
 pub mod stage_bench;
 pub mod stage_worker;
+pub mod supervisor;
 
 pub use activation_store::{
-    spin_recv, spin_send, ActivationStore, HostTensor, Stash, StashKey,
+    spin_recv, spin_recv_deadline, spin_send, spin_send_deadline, ActivationStore, ChannelError,
+    HostTensor, Stash, StashKey,
 };
-pub use checkpoint::{CheckpointMeta, StageCheckpoint};
+pub use checkpoint::{latest_common_step, CheckpointMeta, CorruptCheckpoint, StageCheckpoint};
 pub use data::SyntheticCorpus;
 pub use pipeline::{
-    plan_schedule, train, train_probed, train_probed_feeder, RebalancePlan, TrainConfig,
-    TrainResult,
+    plan_schedule, train, train_probed, train_probed_feeder, try_plan_schedule, PlanRejected,
+    ProgressLog, RebalancePlan, TrainConfig, TrainResult,
 };
 pub use stage_bench::{measure_stage, StageTiming};
 pub use stage_worker::{StageRunner, StageStats};
+pub use supervisor::{
+    supervise, FailureCause, FailureReport, RecoveryEvent, SuperviseConfig, SuperviseOutcome,
+};

@@ -29,14 +29,18 @@
 
 use std::path::PathBuf;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::time::Instant;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
-use super::activation_store::{spawn_remote_store, spin_send, HostTensor};
+use super::activation_store::{
+    spawn_remote_store_with, spin_recv_deadline, spin_send_deadline, HostTensor,
+};
 use super::checkpoint::CheckpointMeta;
 use super::data::SyntheticCorpus;
 use super::stage_worker::{worker_main, StageRunner, StageStats, WorkerChannels, WorkerConfig};
+use super::supervisor::{self, FailureCause, FailureReport};
 use crate::config::ExperimentConfig;
-use crate::runtime::{Backend, Manifest};
+use crate::runtime::{Backend, FaultPlan, Manifest};
 use crate::schedule::{Family, OpKind, Schedule};
 
 /// How to compose the base schedule with the rebalance transform.
@@ -78,6 +82,19 @@ pub struct TrainConfig {
     pub checkpoint_every: u64,
     /// resume from `checkpoint_dir` (cfg.steps is the TOTAL step target)
     pub resume: bool,
+    /// deadline on pipeline channel waits (feeder, collector, worker
+    /// boundaries).  `None` — the default — keeps the unbounded spin
+    /// waits; the supervisor sets it so a silent peer becomes a typed
+    /// `ChannelTimeout` instead of a hang.
+    pub recover_timeout: Option<Duration>,
+    /// in-place retries per transient `execute` failure (0 = fail fast)
+    pub retry_budget: u32,
+    /// base backoff between execute retries (doubles per attempt)
+    pub retry_backoff_ms: u64,
+    /// shared per-step progress log (global step, loss, wall-clock) the
+    /// collector appends to as losses arrive — the supervisor's source
+    /// for loss stitching and time-to-recover accounting
+    pub progress: Option<ProgressLog>,
 }
 
 impl Default for TrainConfig {
@@ -95,7 +112,55 @@ impl Default for TrainConfig {
             checkpoint_dir: None,
             checkpoint_every: 0,
             resume: false,
+            recover_timeout: None,
+            retry_budget: 0,
+            retry_backoff_ms: 10,
+            progress: None,
         }
+    }
+}
+
+/// One completed step as the collector saw it.
+#[derive(Debug, Clone, Copy)]
+pub struct ProgressEntry {
+    /// GLOBAL (resume-aware) 1-based step
+    pub step: u64,
+    /// mean loss over the step's microbatches
+    pub loss: f32,
+    /// when the collector recorded it
+    pub at: Instant,
+}
+
+/// Thread-safe append-only log of completed steps, shared between the
+/// in-run loss collector and the out-of-run supervisor.  Entries carry
+/// the GLOBAL step, so a resumed attempt's entries interleave correctly
+/// with the pre-failure attempt's.
+#[derive(Debug, Clone, Default)]
+pub struct ProgressLog(Arc<Mutex<Vec<ProgressEntry>>>);
+
+impl ProgressLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Vec<ProgressEntry>> {
+        self.0.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    pub fn record(&self, step: u64, loss: f32) {
+        self.lock().push(ProgressEntry { step, loss, at: Instant::now() });
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lock().is_empty()
+    }
+
+    pub fn snapshot(&self) -> Vec<ProgressEntry> {
+        self.lock().clone()
     }
 }
 
@@ -138,17 +203,81 @@ pub fn plan_schedule(
     m: u64,
     plan: &RebalancePlan,
 ) -> (Schedule, Vec<usize>) {
+    match try_plan_schedule(family, p, m, plan) {
+        Ok(v) => v,
+        Err(rej) if !rej.diagnostics.is_empty() => panic!(
+            "generated schedule failed static analysis:\n{}",
+            crate::analysis::render_diagnostics(&rej.diagnostics)
+        ),
+        Err(rej) => panic!("{rej}"),
+    }
+}
+
+/// An infeasible plan request, reported instead of panicking — what the
+/// supervisor's re-plan path receives when a post-fault capacity admits
+/// no valid schedule (`FailureCause::NoFeasiblePlan`).
+#[derive(Debug)]
+pub struct PlanRejected {
+    pub reason: String,
+    /// analyzer findings when the rejection came from the static gate
+    /// (empty for builder-precondition rejections)
+    pub diagnostics: Vec<crate::analysis::Diagnostic>,
+}
+
+impl std::fmt::Display for PlanRejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "schedule plan rejected: {}", self.reason)?;
+        for d in &self.diagnostics {
+            write!(f, "\n  {d}")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for PlanRejected {}
+
+/// Non-panicking [`plan_schedule`]: builder preconditions (bound shape
+/// and the BPipe k ≥ 2 floor) are validated up front, and analyzer
+/// errors come back as [`PlanRejected`] instead of aborting the process.
+pub fn try_plan_schedule(
+    family: Family,
+    p: u64,
+    m: u64,
+    plan: &RebalancePlan,
+) -> Result<(Schedule, Vec<usize>), PlanRejected> {
+    let reject = |reason: String| PlanRejected { reason, diagnostics: Vec::new() };
+    match plan {
+        RebalancePlan::PerStage { bounds } => {
+            if bounds.len() != p as usize {
+                return Err(reject(format!(
+                    "per-stage plan has {} bounds for a {p}-stage pipeline",
+                    bounds.len()
+                )));
+            }
+            if let Some((s, &k)) = bounds.iter().enumerate().find(|&(_, &k)| k < 2) {
+                return Err(reject(format!(
+                    "stage {s} bound {k} is below the BPipe floor of 2 \
+                     (one live activation + one incoming stash)"
+                )));
+            }
+        }
+        RebalancePlan::Uniform { bound: Some(k) } if *k < 2 => {
+            return Err(reject(format!("uniform bound {k} is below the BPipe floor of 2")));
+        }
+        RebalancePlan::Capacity { experiment } if experiment.parallel.p != p => {
+            return Err(reject(format!(
+                "capacity plan's experiment models a {}-stage pipeline, schedule has {p}",
+                experiment.parallel.p
+            )));
+        }
+        _ => {}
+    }
     let base = family.build(p, m);
     let schedule = match plan {
         RebalancePlan::Off => base,
         RebalancePlan::Uniform { bound } => crate::bpipe::rebalance(&base, *bound),
         RebalancePlan::PerStage { bounds } => crate::bpipe::rebalance_bounded(&base, bounds),
         RebalancePlan::Capacity { experiment } => {
-            assert_eq!(
-                experiment.parallel.p, p,
-                "capacity plan's experiment models a {}-stage pipeline, schedule has {p}",
-                experiment.parallel.p
-            );
             let bounds = crate::bpipe::capacity_stage_bounds(experiment, &base);
             crate::bpipe::rebalance_bounded(&base, &bounds)
         }
@@ -157,16 +286,15 @@ pub fn plan_schedule(
     // protocol/linearity/bounds passes — a plan with any error-level
     // finding must never reach the channel web
     let chan_caps = crate::analysis::ChannelCaps::for_run(m, schedule.chunks);
-    let diags = crate::analysis::check_plan(&schedule, plan, &chan_caps);
-    if crate::analysis::has_errors(&diags) {
-        panic!(
-            "generated schedule failed static analysis:\n{}",
-            crate::analysis::render_diagnostics(&diags)
-        );
+    if let Err(diags) = crate::analysis::gate_plan(&schedule, plan, &chan_caps) {
+        return Err(PlanRejected {
+            reason: "static analysis found errors".into(),
+            diagnostics: diags,
+        });
     }
     let caps: Vec<usize> =
         (0..p).map(|s| schedule.program(s).stash_high_water().max(1) as usize).collect();
-    (schedule, caps)
+    Ok((schedule, caps))
 }
 
 /// Run pipeline-parallel training end to end on backend `B`.  Blocks
@@ -310,9 +438,21 @@ fn train_inner<B: Backend>(
         corpus.microbatch(b, s_len);
     }
 
+    // the feeder has no backend of its own, so its stall fault is read
+    // straight off the installed plan (workers inject via FaultyBackend)
+    let faults = crate::runtime::fault::installed();
+    let deadline = cfg.recover_timeout;
+
     let mut stage_stats_slots: Vec<Option<StageStats>> = (0..p).map(|_| None).collect();
     let (losses, step_times) =
         std::thread::scope(|scope| -> anyhow::Result<(Vec<f32>, Vec<f64>)> {
+            // every worker/feeder/collector outcome is AGGREGATED here —
+            // a failure anywhere must not early-return before the joins,
+            // both so the scope can tear down (the disconnect cascade
+            // unblocks every peer) and so the supervisor can rank ALL
+            // the cascade's reports and pick the primary cause
+            let mut failures: Vec<anyhow::Error> = Vec::new();
+
             // -- workers ----------------------------------------------------
             let mut handles = Vec::new();
             let mut probed_work: Option<(WorkerConfig, WorkerChannels)> = None;
@@ -325,7 +465,8 @@ fn train_inner<B: Backend>(
                     .iter()
                     .any(|o| matches!(o.kind, OpKind::Evict | OpKind::Load));
                 let remote = if needs_store {
-                    let (client, _stats_rx) = spawn_remote_store((m * chunks) as usize);
+                    let (client, _stats_rx) =
+                        spawn_remote_store_with((m * chunks) as usize, deadline);
                     Some(client)
                 } else {
                     None
@@ -346,6 +487,9 @@ fn train_inner<B: Backend>(
                     checkpoint_every: cfg.checkpoint_every,
                     resume: cfg.resume,
                     start_step,
+                    deadline,
+                    retry_budget: cfg.retry_budget,
+                    retry_backoff_ms: cfg.retry_backoff_ms,
                 };
                 let wch = WorkerChannels {
                     act_in: std::mem::take(&mut act_in[s as usize]),
@@ -390,69 +534,103 @@ fn train_inner<B: Backend>(
                 s: s_len,
                 steps: run_steps,
                 m,
+                start_step,
+                deadline,
+                faults: faults.clone(),
+            };
+            let collect = CollectConfig {
+                run_steps,
+                m,
+                log_every: cfg.log_every,
+                total_steps: cfg.steps,
+                start_step,
+                deadline,
+                progress: cfg.progress.clone(),
             };
             let mut feeder = None;
             let collected = match probe.take() {
                 Some(Probe::Stage(ps, hook)) => {
                     feeder = Some(spawn_feeder(scope, feeder_state)?);
-                    let collector =
-                        std::thread::Builder::new().name("bpipe-collector".into()).spawn_scoped(
-                            scope,
-                            move || {
-                                collect_losses(
-                                    loss_rx,
-                                    run_steps,
-                                    m,
-                                    cfg.log_every,
-                                    cfg.steps,
-                                    start_step,
-                                )
-                            },
-                        )?;
-                    let (wcfg, wch) = probed_work.take().expect("probed stage was planned");
-                    let mut runner = StageRunner::<B>::new(wcfg, wch)?;
-                    for step in 1..=run_steps {
-                        runner.run_step(step)?;
-                        hook(step);
+                    let collector = std::thread::Builder::new()
+                        .name("bpipe-collector".into())
+                        .spawn_scoped(scope, move || collect_losses(loss_rx, collect))?;
+                    // the probed runner runs inside an immediately-invoked
+                    // closure so its channels DROP on failure (starting
+                    // the disconnect cascade) before the collector join
+                    let probed = (|| -> anyhow::Result<()> {
+                        let (wcfg, wch) = probed_work.take().expect("probed stage was planned");
+                        let mut runner = StageRunner::<B>::new(wcfg, wch)?;
+                        for step in 1..=run_steps {
+                            runner.run_step(step)?;
+                            hook(step);
+                        }
+                        stage_stats_slots[ps as usize] = Some(runner.finish()?);
+                        Ok(())
+                    })();
+                    if let Err(e) = probed {
+                        failures.push(e);
                     }
-                    stage_stats_slots[ps as usize] = Some(runner.finish()?);
-                    collector.join().map_err(|e| anyhow::anyhow!("collector panicked: {e:?}"))??
+                    match collector.join() {
+                        Ok(r) => r,
+                        Err(e) => Err(anyhow::anyhow!("collector panicked: {e:?}")),
+                    }
                 }
                 Some(Probe::Feeder(hook)) => {
-                    let collector =
-                        std::thread::Builder::new().name("bpipe-collector".into()).spawn_scoped(
-                            scope,
-                            move || {
-                                collect_losses(
-                                    loss_rx,
-                                    run_steps,
-                                    m,
-                                    cfg.log_every,
-                                    cfg.steps,
-                                    start_step,
-                                )
-                            },
-                        )?;
-                    run_feeder(feeder_state, Some(hook))?;
-                    collector.join().map_err(|e| anyhow::anyhow!("collector panicked: {e:?}"))??
+                    let collector = std::thread::Builder::new()
+                        .name("bpipe-collector".into())
+                        .spawn_scoped(scope, move || collect_losses(loss_rx, collect))?;
+                    if let Err(e) = run_feeder(feeder_state, Some(hook)) {
+                        failures.push(e);
+                    }
+                    match collector.join() {
+                        Ok(r) => r,
+                        Err(e) => Err(anyhow::anyhow!("collector panicked: {e:?}")),
+                    }
                 }
                 None => {
                     feeder = Some(spawn_feeder(scope, feeder_state)?);
-                    collect_losses(loss_rx, run_steps, m, cfg.log_every, cfg.steps, start_step)?
+                    collect_losses(loss_rx, collect)
+                }
+            };
+            let collected = match collected {
+                Ok(v) => Some(v),
+                Err(e) => {
+                    failures.push(e);
+                    None
                 }
             };
 
             // -- join -------------------------------------------------------
             for (s, h) in handles.into_iter().enumerate() {
                 if let Some(h) = h {
-                    stage_stats_slots[s] =
-                        Some(h.join().map_err(|e| anyhow::anyhow!("worker panicked: {e:?}"))??);
+                    match h.join() {
+                        Ok(Ok(stats)) => stage_stats_slots[s] = Some(stats),
+                        Ok(Err(e)) => failures.push(e),
+                        Err(panic) => failures.push(anyhow::Error::new(FailureReport {
+                            stage: Some(s as u64),
+                            step: 0,
+                            cause: FailureCause::WorkerPanic,
+                            detail: supervisor::panic_message(&panic),
+                        })),
+                    }
                 }
             }
             if let Some(f) = feeder {
-                f.join().map_err(|e| anyhow::anyhow!("feeder panicked: {e:?}"))??;
+                match f.join() {
+                    Ok(Ok(())) => {}
+                    Ok(Err(e)) => failures.push(e),
+                    Err(panic) => failures.push(anyhow::Error::new(FailureReport {
+                        stage: None,
+                        step: 0,
+                        cause: FailureCause::WorkerPanic,
+                        detail: format!("feeder: {}", supervisor::panic_message(&panic)),
+                    })),
+                }
             }
-            Ok(collected)
+            if !failures.is_empty() {
+                return Err(supervisor::primary_failure(failures));
+            }
+            Ok(collected.expect("no failures implies the collector finished"))
         })?;
 
     let stage_stats: Vec<StageStats> =
@@ -488,6 +666,9 @@ struct FeederState {
     s: usize,
     steps: u64,
     m: u64,
+    start_step: u64,
+    deadline: Option<Duration>,
+    faults: Option<Arc<FaultPlan>>,
 }
 
 /// Pop a recycled i32 tensor, or allocate a fresh one (warm-up only in
@@ -512,6 +693,12 @@ fn run_feeder(mut f: FeederState, mut hook: Option<&mut dyn FnMut(u64)>) -> anyh
     // so a steady-state push can never grow the list
     let mut free: Vec<HostTensor> = Vec::with_capacity(12 * f.m as usize + 16);
     for step in 1..=f.steps {
+        if let Some(plan) = &f.faults {
+            if let Some(ms) = plan.feeder_stall_due(f.start_step + step) {
+                // injected silence: downstream deadline waits must fire
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+        }
         for mb in 0..f.m {
             while let Ok(t) = f.recycle_rx.try_recv() {
                 if free.len() < free.capacity() {
@@ -527,10 +714,10 @@ fn run_feeder(mut f: FeederState, mut hook: Option<&mut dyn FnMut(u64)>) -> anyh
                 ) => f.corpus.microbatch_into(f.b, f.s, tok, tgt),
                 _ => unreachable!("take_i32_buf only yields i32 tensors"),
             }
-            spin_send(&f.tok_tx, (mb, tok_t))
-                .map_err(|_| anyhow::anyhow!("first stage died early"))?;
-            spin_send(&f.tgt_tx, (mb, tgt_t))
-                .map_err(|_| anyhow::anyhow!("last stage died early"))?;
+            spin_send_deadline(&f.tok_tx, (mb, tok_t), f.deadline)
+                .map_err(|e| anyhow::Error::new(e).context("feeding tokens to the first stage"))?;
+            spin_send_deadline(&f.tgt_tx, (mb, tgt_t), f.deadline)
+                .map_err(|e| anyhow::Error::new(e).context("feeding targets to the last stage"))?;
         }
         if let Some(h) = hook.as_mut() {
             h(step);
@@ -548,35 +735,50 @@ fn spawn_feeder<'scope>(
         .spawn_scoped(scope, move || run_feeder(state, None))?)
 }
 
-/// Drain `m` losses per step from the last stage, averaging per step and
-/// timing the leader-observed step wall clock.
-fn collect_losses(
-    loss_rx: Receiver<(u64, u64, f32)>,
+/// How the loss collector runs (its slice of the `TrainConfig` plus the
+/// resume bookkeeping).
+struct CollectConfig {
     run_steps: u64,
     m: u64,
     log_every: u64,
     total_steps: u64,
     start_step: u64,
+    deadline: Option<Duration>,
+    progress: Option<ProgressLog>,
+}
+
+/// Drain `m` losses per step from the last stage, averaging per step and
+/// timing the leader-observed step wall clock.  Completed steps are
+/// appended to the shared [`ProgressLog`] (when the run has one) as they
+/// land — even a failed attempt leaves its completed prefix behind for
+/// the supervisor to stitch.
+fn collect_losses(
+    loss_rx: Receiver<(u64, u64, f32)>,
+    c: CollectConfig,
 ) -> anyhow::Result<(Vec<f32>, Vec<f64>)> {
-    let mut losses = Vec::with_capacity(run_steps as usize);
-    let mut step_times = Vec::with_capacity(run_steps as usize);
+    let mut losses = Vec::with_capacity(c.run_steps as usize);
+    let mut step_times = Vec::with_capacity(c.run_steps as usize);
     let mut t_prev = Instant::now();
-    for step in 1..=run_steps {
+    for step in 1..=c.run_steps {
         let mut sum = 0f32;
-        for _ in 0..m {
-            let (got_step, _mb, loss) =
-                loss_rx.recv().map_err(|_| anyhow::anyhow!("pipeline died mid-step {step}"))?;
+        for _ in 0..c.m {
+            let (got_step, _mb, loss) = spin_recv_deadline(&loss_rx, c.deadline)
+                .map_err(|e| anyhow::Error::new(e).context(format!("collecting step {step}")))?;
             anyhow::ensure!(got_step == step, "loss for step {got_step}, expected {step}");
             sum += loss;
         }
-        losses.push(sum / m as f32);
+        let mean = sum / c.m as f32;
+        losses.push(mean);
         step_times.push(t_prev.elapsed().as_secs_f64());
         t_prev = Instant::now();
-        if log_every > 0 && step % log_every == 0 {
+        if let Some(p) = &c.progress {
+            p.record(c.start_step + step, mean);
+        }
+        if c.log_every > 0 && step % c.log_every == 0 {
             println!(
                 "step {:>4}/{}  loss {:.4}  ({:.2}s/step)",
-                start_step + step,
-                total_steps,
+                c.start_step + step,
+                c.total_steps,
                 losses.last().unwrap(),
                 step_times.last().unwrap()
             );

@@ -34,13 +34,14 @@
 
 use std::path::PathBuf;
 use std::sync::mpsc::{Receiver, SyncSender};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::activation_store::{
-    spin_recv, spin_send, ActivationStore, HostTensor, RemoteStoreClient, Stash,
+    spin_recv_deadline, spin_send_deadline, ActivationStore, HostTensor, RemoteStoreClient, Stash,
 };
 use super::checkpoint::StageCheckpoint;
-use crate::runtime::{Arg, Backend, BufferPool, Manifest};
+use super::supervisor;
+use crate::runtime::{Arg, Backend, BufferPool, InjectedFault, Manifest};
 use crate::schedule::{OpKind, Placement, StageProgram};
 
 /// Static configuration for one worker.
@@ -70,6 +71,14 @@ pub struct WorkerConfig {
     pub resume: bool,
     /// global step offset (steps already done before this run)
     pub start_step: u64,
+    /// channel-wait deadline; `None` spins forever (zero-clock hot path)
+    pub deadline: Option<Duration>,
+    /// in-place retries for transient `execute` failures before the
+    /// error escalates to the supervisor
+    pub retry_budget: u32,
+    /// base backoff between transient-execute retries (doubles per
+    /// attempt, capped)
+    pub retry_backoff_ms: u64,
 }
 
 /// Channel endpoints for one worker, indexed by hosted chunk (`None`
@@ -114,6 +123,8 @@ pub struct StageStats {
     pub pool_hits: u64,
     /// buffer-pool takes that allocated fresh (warm-up)
     pub pool_misses: u64,
+    /// transient `execute` failures retried in place without a restart
+    pub retried_executes: u64,
 }
 
 fn recv_expect(
@@ -121,12 +132,61 @@ fn recv_expect(
     mb: u64,
     what: &str,
     stage: u64,
+    deadline: Option<Duration>,
 ) -> anyhow::Result<HostTensor> {
-    // busy-polled so a steady-state wait never touches the allocator
-    let (got, t) = spin_recv(rx)
-        .map_err(|_| anyhow::anyhow!("stage {stage}: {what} channel closed early"))?;
+    // busy-polled so a steady-state wait never touches the allocator;
+    // the typed ChannelError stays in the chain so the supervisor can
+    // tell a stalled peer (Timeout) from a dead one (Closed)
+    let (got, t) = spin_recv_deadline(rx, deadline)
+        .map_err(|e| anyhow::Error::new(e).context(format!("stage {stage}: waiting for {what}")))?;
     anyhow::ensure!(got == mb, "stage {stage}: expected {what} for mb {mb}, got {got}");
     Ok(t)
+}
+
+/// A channel edge the program requires: a missing one is a wiring bug,
+/// reported as a typed error instead of a panic so it reaches the
+/// supervisor like every other worker failure.
+fn edge<'a, T>(opt: Option<&'a T>, stage: u64, what: &str) -> anyhow::Result<&'a T> {
+    opt.ok_or_else(|| anyhow::anyhow!("stage {stage}: program requires {what}, but none is wired"))
+}
+
+/// `execute_pooled` with an in-place retry budget for injected transient
+/// failures.  Safe to retry because [`crate::runtime::FaultyBackend`]
+/// fails at entry, before any donated argument is consumed — the arg
+/// slots are still live on the second attempt.  Real (non-injected)
+/// errors escalate immediately.
+#[allow(clippy::too_many_arguments)]
+fn exec_retry<B: Backend>(
+    backend: &B,
+    exe: &B::Exec,
+    params: Option<&B::Buffer>,
+    args: &mut [Arg<'_>],
+    pool: &mut BufferPool,
+    outs: &mut Vec<HostTensor>,
+    budget: u32,
+    backoff_ms: u64,
+    retried: &mut u64,
+) -> anyhow::Result<()> {
+    let mut attempt = 0u32;
+    loop {
+        match backend.execute_pooled(exe, params, args, pool, outs) {
+            Ok(()) => return Ok(()),
+            Err(e) => {
+                let transient = e.chain().any(|c| {
+                    matches!(
+                        c.downcast_ref::<InjectedFault>(),
+                        Some(InjectedFault::TransientExec { .. })
+                    )
+                });
+                if !transient || attempt >= budget {
+                    return Err(e);
+                }
+                *retried += 1;
+                std::thread::sleep(Duration::from_millis(backoff_ms << attempt.min(6)));
+                attempt += 1;
+            }
+        }
+    }
 }
 
 /// Everything one hosted chunk owns: compiled executables, parameters
@@ -191,7 +251,8 @@ pub struct StageRunner<B: Backend> {
 
 impl<B: Backend> StageRunner<B> {
     pub fn new(cfg: WorkerConfig, ch: WorkerChannels) -> anyhow::Result<Self> {
-        let backend = B::create(&cfg.manifest)?;
+        let mut backend = B::create(&cfg.manifest)?;
+        backend.bind_stage(cfg.stage);
         let manifest = &cfg.manifest;
         let spec = &manifest.spec;
         let vp = cfg.stages * cfg.chunks;
@@ -217,8 +278,17 @@ impl<B: Backend> StageRunner<B> {
             let bwd = backend.compile(manifest, &format!("{kind}_bwd"))?;
             let adam = backend.compile(manifest, &format!("adam_{kind}"))?;
             let (params, m_state, v_state) = if cfg.resume {
-                let dir = cfg.checkpoint_dir.as_ref().expect("resume without checkpoint dir");
-                let ck = StageCheckpoint::load(dir, virt, n_params)?;
+                let dir = cfg
+                    .checkpoint_dir
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("resume requested without a checkpoint dir"))?;
+                // resume from the exact rollback step the supervisor
+                // picked, not whichever generation happens to be newest
+                let ck = if cfg.start_step > 0 {
+                    StageCheckpoint::load_at(dir, virt, n_params, cfg.start_step)?
+                } else {
+                    StageCheckpoint::load(dir, virt, n_params)?
+                };
                 (
                     HostTensor::vec_f32(ck.params),
                     HostTensor::vec_f32(ck.m),
@@ -278,8 +348,17 @@ impl<B: Backend> StageRunner<B> {
     }
 
     /// Execute one full training step (program ops + optimizer flush +
-    /// checkpoint). `step` is 1-based within this run.
+    /// checkpoint). `step` is 1-based within this run.  Any failure is
+    /// classified into a structured [`supervisor::FailureReport`] so the
+    /// leader can attribute it to this stage and global step.
     pub fn run_step(&mut self, step: u64) -> anyhow::Result<()> {
+        let stage = self.cfg.stage;
+        let global = self.cfg.start_step + step;
+        self.run_step_inner(step)
+            .map_err(|e| supervisor::into_failure(Some(stage), global, e))
+    }
+
+    fn run_step_inner(&mut self, step: u64) -> anyhow::Result<()> {
         let StageRunner {
             cfg,
             ch,
@@ -295,6 +374,10 @@ impl<B: Backend> StageRunner<B> {
         } = self;
         let inv_m = *inv_m;
 
+        // injection point for crash / stall / HBM-cap faults (a no-op
+        // default on real backends)
+        backend.begin_step(cfg.start_step + step)?;
+
         for op in &cfg.program.ops {
             let ci = op.chunk as usize;
             let key = (op.mb, op.chunk);
@@ -305,52 +388,64 @@ impl<B: Backend> StageRunner<B> {
                     if cs.kind == "last" {
                         // stash (x, targets); loss+grads run in Bwd
                         let x = recv_expect(
-                            ch.act_in[ci].as_ref().expect("last chunk without act_in"),
+                            edge(ch.act_in[ci].as_ref(), cfg.stage, "act_in")?,
                             op.mb,
                             "act",
                             cfg.stage,
+                            cfg.deadline,
                         )?;
                         let tgt = recv_expect(
-                            ch.targets_in.as_ref().expect("last chunk without targets"),
+                            edge(ch.targets_in.as_ref(), cfg.stage, "targets_in")?,
                             op.mb,
                             "targets",
                             cfg.stage,
+                            cfg.deadline,
                         )?;
                         stash.put(key, Stash::pair(x, tgt));
                     } else {
                         let x = if cs.virt == 0 {
                             recv_expect(
-                                ch.tokens_in.as_ref().expect("first chunk without tokens"),
+                                edge(ch.tokens_in.as_ref(), cfg.stage, "tokens_in")?,
                                 op.mb,
                                 "tokens",
                                 cfg.stage,
+                                cfg.deadline,
                             )?
                         } else {
                             recv_expect(
-                                ch.act_in[ci].as_ref().expect("mid chunk without act_in"),
+                                edge(ch.act_in[ci].as_ref(), cfg.stage, "act_in")?,
                                 op.mb,
                                 "act",
                                 cfg.stage,
+                                cfg.deadline,
                             )?
                         };
                         // x stays stashed for the backward: borrowed, and
                         // y comes out of the pool
                         let mut args = [Arg::Borrowed(&x)];
-                        backend.execute_pooled(
-                            cs.fwd.as_ref().expect("non-last chunk has a fwd exe"),
+                        exec_retry(
+                            backend,
+                            edge(cs.fwd.as_ref(), cfg.stage, "fwd executable")?,
                             Some(&cs.params_buf),
                             &mut args,
                             pool,
                             outs,
+                            cfg.retry_budget,
+                            cfg.retry_backoff_ms,
+                            &mut stats.retried_executes,
                         )?;
                         anyhow::ensure!(outs.len() == 1, "fwd: expected 1 output");
                         let y = outs.pop().unwrap();
                         stash.put(key, Stash::single(x));
-                        spin_send(
-                            ch.act_out[ci].as_ref().expect("non-last chunk without act_out"),
+                        spin_send_deadline(
+                            edge(ch.act_out[ci].as_ref(), cfg.stage, "act_out")?,
                             (op.mb, y),
+                            cfg.deadline,
                         )
-                        .map_err(|_| anyhow::anyhow!("act_out closed"))?;
+                        .map_err(|e| {
+                            anyhow::Error::new(e)
+                                .context(format!("stage {}: sending act downstream", cfg.stage))
+                        })?;
                     }
                     stats.fwd_s += t.elapsed().as_secs_f64();
                 }
@@ -360,32 +455,46 @@ impl<B: Backend> StageRunner<B> {
                     match cs.kind {
                         "last" => {
                             let st = stash.take(key);
-                            let tgt = st.extra.expect("last stash holds (x, targets)");
+                            let tgt = st
+                                .extra
+                                .ok_or_else(|| anyhow::anyhow!("last stash missing targets"))?;
                             // targets are feeder-origin: borrowed (mask-
                             // invariant numerics) so the tensor survives
                             // to be recycled back to the feeder
                             let mut args = [Arg::Donated(st.x), Arg::Borrowed(&tgt)];
-                            backend.execute_pooled(
+                            exec_retry(
+                                backend,
                                 &cs.bwd,
                                 Some(&cs.params_buf),
                                 &mut args,
                                 pool,
                                 outs,
+                                cfg.retry_budget,
+                                cfg.retry_backoff_ms,
+                                &mut stats.retried_executes,
                             )?;
                             anyhow::ensure!(outs.len() == 3, "last_bwd: expected (dx, dw, loss)");
                             let loss = outs.pop().unwrap();
                             let dflat = outs.pop().unwrap();
                             let dx = outs.pop().unwrap();
-                            spin_send(
-                                ch.grad_out[ci].as_ref().expect("last chunk without grad_out"),
+                            spin_send_deadline(
+                                edge(ch.grad_out[ci].as_ref(), cfg.stage, "grad_out")?,
                                 (op.mb, dx),
+                                cfg.deadline,
                             )
-                            .map_err(|_| anyhow::anyhow!("grad_out closed"))?;
-                            spin_send(
-                                ch.loss_out.as_ref().expect("last chunk without loss_out"),
+                            .map_err(|e| {
+                                anyhow::Error::new(e)
+                                    .context(format!("stage {}: sending grad upstream", cfg.stage))
+                            })?;
+                            spin_send_deadline(
+                                edge(ch.loss_out.as_ref(), cfg.stage, "loss_out")?,
                                 (step, op.mb, loss.f32s()?[0]),
+                                cfg.deadline,
                             )
-                            .map_err(|_| anyhow::anyhow!("loss_out closed"))?;
+                            .map_err(|e| {
+                                anyhow::Error::new(e)
+                                    .context(format!("stage {}: reporting loss", cfg.stage))
+                            })?;
                             pool.give(loss);
                             accumulate(&mut cs.grad_acc, &dflat, inv_m)?;
                             pool.give(dflat);
@@ -393,49 +502,63 @@ impl<B: Backend> StageRunner<B> {
                         }
                         "mid" => {
                             let dy = recv_expect(
-                                ch.grad_in[ci].as_ref().expect("mid chunk without grad_in"),
+                                edge(ch.grad_in[ci].as_ref(), cfg.stage, "grad_in")?,
                                 op.mb,
                                 "grad",
                                 cfg.stage,
+                                cfg.deadline,
                             )?;
                             let st = stash.take(key);
                             let mut args = [Arg::Donated(st.x), Arg::Donated(dy)];
-                            backend.execute_pooled(
+                            exec_retry(
+                                backend,
                                 &cs.bwd,
                                 Some(&cs.params_buf),
                                 &mut args,
                                 pool,
                                 outs,
+                                cfg.retry_budget,
+                                cfg.retry_backoff_ms,
+                                &mut stats.retried_executes,
                             )?;
                             anyhow::ensure!(outs.len() == 2, "mid_bwd: expected (dx, dw)");
                             let dflat = outs.pop().unwrap();
                             let dx = outs.pop().unwrap();
-                            spin_send(
-                                ch.grad_out[ci].as_ref().expect("mid chunk without grad_out"),
+                            spin_send_deadline(
+                                edge(ch.grad_out[ci].as_ref(), cfg.stage, "grad_out")?,
                                 (op.mb, dx),
+                                cfg.deadline,
                             )
-                            .map_err(|_| anyhow::anyhow!("grad_out closed"))?;
+                            .map_err(|e| {
+                                anyhow::Error::new(e)
+                                    .context(format!("stage {}: sending grad upstream", cfg.stage))
+                            })?;
                             accumulate(&mut cs.grad_acc, &dflat, inv_m)?;
                             pool.give(dflat);
                         }
                         _ => {
                             // "first": virtual stage 0 — nothing upstream
                             let dy = recv_expect(
-                                ch.grad_in[ci].as_ref().expect("first chunk without grad_in"),
+                                edge(ch.grad_in[ci].as_ref(), cfg.stage, "grad_in")?,
                                 op.mb,
                                 "grad",
                                 cfg.stage,
+                                cfg.deadline,
                             )?;
                             let st = stash.take(key);
                             // the stashed input is the feeder's token
                             // tensor: borrowed, then recycled
                             let mut args = [Arg::Borrowed(&st.x), Arg::Donated(dy)];
-                            backend.execute_pooled(
+                            exec_retry(
+                                backend,
                                 &cs.bwd,
                                 Some(&cs.params_buf),
                                 &mut args,
                                 pool,
                                 outs,
+                                cfg.retry_budget,
+                                cfg.retry_backoff_ms,
+                                &mut stats.retried_executes,
                             )?;
                             anyhow::ensure!(outs.len() == 1, "first_bwd: expected (dw,)");
                             let dflat = outs.pop().unwrap();
@@ -448,12 +571,12 @@ impl<B: Backend> StageRunner<B> {
                 }
                 OpKind::Evict => {
                     let st = stash.take(key);
-                    ch.remote.as_ref().expect("evict without remote store").evict(key, st);
+                    edge(ch.remote.as_ref(), cfg.stage, "remote store")?.evict(key, st)?;
                     stats.evictions += 1;
                 }
                 OpKind::Load => {
                     let t = Instant::now();
-                    let st = ch.remote.as_ref().expect("load without remote store").load(key);
+                    let st = edge(ch.remote.as_ref(), cfg.stage, "remote store")?.load(key)?;
                     stats.load_wait_s += t.elapsed().as_secs_f64();
                     stash.put(key, st);
                 }
@@ -479,7 +602,17 @@ impl<B: Backend> StageRunner<B> {
                 Arg::Borrowed(&*step_t),
                 Arg::Borrowed(&*lr_t),
             ];
-            backend.execute_pooled(&cs.adam, None, &mut args, pool, outs)?;
+            exec_retry(
+                backend,
+                &cs.adam,
+                None,
+                &mut args,
+                pool,
+                outs,
+                cfg.retry_budget,
+                cfg.retry_backoff_ms,
+                &mut stats.retried_executes,
+            )?;
             anyhow::ensure!(outs.len() == 3, "adam: expected (w, m, v)");
             cs.v_state = outs.pop().unwrap();
             cs.m_state = outs.pop().unwrap();
@@ -501,7 +634,7 @@ impl<B: Backend> StageRunner<B> {
                         m: cs.m_state.f32s()?.to_vec(),
                         v: cs.v_state.f32s()?.to_vec(),
                     }
-                    .save(dir, cs.virt)?;
+                    .save_at(dir, cs.virt, cfg.start_step + step)?;
                 }
             }
         }

@@ -1,0 +1,651 @@
+//! The training supervisor: failure classification, the
+//! checkpoint–re-plan–resume loop, and structured recovery telemetry.
+//!
+//! [`supervise`] wraps [`crate::coordinator::train`] in a restart loop:
+//!
+//! ```text
+//!            ┌──────────────────────────────────────────────┐
+//!            │ RUN  train::<B>(cfg)                         │◄─────────┐
+//!            └───────┬───────────────────────────┬──────────┘          │
+//!                 Ok │                       Err │                     │
+//!                    ▼                           ▼                     │
+//!            ┌──────────────┐        ┌───────────────────────┐         │
+//!            │ RECOVERED    │        │ CLASSIFY failure →    │         │
+//!            │ stitch losses│        │ FailureReport         │         │
+//!            └──────────────┘        └───────────┬───────────┘         │
+//!                                HBM pressure?   │                     │
+//!                               ┌────────────────┤                     │
+//!                               ▼                ▼                     │
+//!                     ┌──────────────┐  ┌─────────────────────┐        │
+//!                     │ RE-PLAN under│  │ ROLLBACK: latest     │ resume │
+//!                     │ reduced cap  │─►│ common checkpoint    │────────┘
+//!                     │ (or ABORT:   │  │ step; rewrite meta;  │ (bounded
+//!                     │  no feasible │  │ exponential backoff  │  restarts)
+//!                     │  plan)       │  └─────────────────────┘
+//!                     └──────────────┘
+//! ```
+//!
+//! Every run failure — injected crash, worker panic, channel timeout,
+//! HBM cap reduction — funnels into a [`FailureReport`]; the whole
+//! disconnect cascade is aggregated and ranked so the PRIMARY cause is
+//! reported, not whichever neighbor noticed first.  Recovery is exact:
+//! rollback-and-replay from the last common checkpoint reproduces the
+//! uninterrupted run's losses and weights bit for bit (the chaos suite's
+//! core assertion), and because the BPipe rebalance transform is
+//! numerics-preserving, that holds even when an HBM fault forced a
+//! re-plan mid-run.  When no feasible plan exists, or the restart budget
+//! is exhausted, the supervisor aborts with a structured report — it
+//! degrades gracefully, it never hangs.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::activation_store::ChannelError;
+use super::checkpoint::{latest_common_step, CheckpointMeta, CorruptCheckpoint};
+use super::pipeline::{
+    train, try_plan_schedule, PlanRejected, ProgressLog, RebalancePlan, TrainConfig, TrainResult,
+};
+use crate::metrics::RecoveryStats;
+use crate::runtime::{fault, Backend, FaultPlan, InjectedFault, Manifest};
+
+/// Why a training attempt failed, ordered by how much it explains.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FailureCause {
+    /// a stage hit its (reduced) HBM capacity — re-plan territory
+    HbmPressure { cap_bytes: u64 },
+    /// a deterministic injected crash fired
+    InjectedCrash,
+    /// transient execute failures outlived the in-place retry budget
+    ExecRetriesExhausted,
+    /// a stage worker thread panicked (poisoned join)
+    WorkerPanic,
+    /// a channel peer went silent past the recover deadline
+    ChannelTimeout { waited_ms: u64 },
+    /// no plan passes the static analyzer under the post-fault caps
+    NoFeasiblePlan,
+    /// the restart budget ran out
+    RestartsExhausted,
+    /// a checkpoint failed its integrity check on load
+    CorruptCheckpoint,
+    /// anything else (IO, config, arithmetic)
+    Other,
+    /// a channel disconnected — almost always SECONDARY to a failure
+    /// elsewhere in the cascade, hence the lowest rank
+    ChannelClosed,
+}
+
+impl FailureCause {
+    /// Stable kebab-case label for structured log lines.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FailureCause::HbmPressure { .. } => "hbm-pressure",
+            FailureCause::InjectedCrash => "injected-crash",
+            FailureCause::ExecRetriesExhausted => "exec-retries-exhausted",
+            FailureCause::WorkerPanic => "worker-panic",
+            FailureCause::ChannelTimeout { .. } => "channel-timeout",
+            FailureCause::NoFeasiblePlan => "no-feasible-plan",
+            FailureCause::RestartsExhausted => "restarts-exhausted",
+            FailureCause::CorruptCheckpoint => "corrupt-checkpoint",
+            FailureCause::Other => "other",
+            FailureCause::ChannelClosed => "channel-closed",
+        }
+    }
+
+    /// How much of the cascade this cause explains — [`primary_failure`]
+    /// reports the highest-ranked report among all joined failures.
+    fn severity(&self) -> u32 {
+        match self {
+            FailureCause::HbmPressure { .. } => 100,
+            FailureCause::InjectedCrash => 95,
+            FailureCause::ExecRetriesExhausted => 90,
+            FailureCause::WorkerPanic => 80,
+            FailureCause::ChannelTimeout { .. } => 60,
+            FailureCause::NoFeasiblePlan => 55,
+            FailureCause::RestartsExhausted => 52,
+            FailureCause::CorruptCheckpoint => 50,
+            FailureCause::Other => 40,
+            FailureCause::ChannelClosed => 20,
+        }
+    }
+}
+
+/// One classified failure: which stage (when known), at which global
+/// step, and why.  This is both the supervisor's decision input and the
+/// typed error the runtime returns on an unrecoverable failure.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FailureReport {
+    /// physical stage, `None` for leader/feeder/collector failures
+    pub stage: Option<u64>,
+    /// GLOBAL step in flight when the failure surfaced (0 = unknown)
+    pub step: u64,
+    pub cause: FailureCause,
+    pub detail: String,
+}
+
+impl std::fmt::Display for FailureReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.stage {
+            Some(s) => write!(f, "stage={s} ")?,
+            None => write!(f, "stage=- ")?,
+        }
+        write!(f, "step={} cause={} detail={:?}", self.step, self.cause.label(), self.detail)
+    }
+}
+
+impl std::error::Error for FailureReport {}
+
+/// Extract a human string from a `catch_unwind`/join panic payload.
+pub fn panic_message(panic: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = panic.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = panic.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic with non-string payload".to_string()
+    }
+}
+
+/// Classify an arbitrary worker/feeder/collector error into a
+/// [`FailureReport`]-carrying error.  Errors already carrying a report
+/// pass through unchanged; otherwise the anyhow chain is searched for
+/// the typed signals ([`InjectedFault`], [`ChannelError`],
+/// [`CorruptCheckpoint`]).
+pub fn into_failure(stage: Option<u64>, step: u64, e: anyhow::Error) -> anyhow::Error {
+    if e.chain().any(|c| c.downcast_ref::<FailureReport>().is_some()) {
+        return e;
+    }
+    let mut cause = FailureCause::Other;
+    let mut at_step = step;
+    let mut at_stage = stage;
+    for c in e.chain() {
+        if let Some(f) = c.downcast_ref::<InjectedFault>() {
+            cause = match f {
+                InjectedFault::Crash { stage: s, step: k } => {
+                    at_stage = Some(*s);
+                    at_step = *k;
+                    FailureCause::InjectedCrash
+                }
+                InjectedFault::TransientExec { stage: s, step: k } => {
+                    at_stage = Some(*s);
+                    at_step = *k;
+                    FailureCause::ExecRetriesExhausted
+                }
+                InjectedFault::HbmCap { stage: s, step: k, cap_bytes } => {
+                    at_stage = Some(*s);
+                    at_step = *k;
+                    FailureCause::HbmPressure { cap_bytes: *cap_bytes }
+                }
+            };
+            break;
+        }
+        if let Some(ch) = c.downcast_ref::<ChannelError>() {
+            cause = match ch {
+                ChannelError::Timeout { waited_ms } => {
+                    FailureCause::ChannelTimeout { waited_ms: *waited_ms }
+                }
+                ChannelError::Closed => FailureCause::ChannelClosed,
+            };
+            break;
+        }
+        if c.downcast_ref::<CorruptCheckpoint>().is_some() {
+            cause = FailureCause::CorruptCheckpoint;
+            break;
+        }
+    }
+    anyhow::Error::new(FailureReport {
+        stage: at_stage,
+        step: at_step,
+        cause,
+        detail: format!("{e:#}"),
+    })
+}
+
+/// Rank an aggregated failure cascade and return the PRIMARY cause as
+/// the error (with the cascade size noted).  A crash cascades: the dying
+/// worker's neighbors see closed channels, the collector times out — one
+/// root failure, many reports.  Severity ranking picks the explanatory
+/// one instead of whichever thread joined first.
+pub fn primary_failure(failures: Vec<anyhow::Error>) -> anyhow::Error {
+    let n = failures.len();
+    let classified = failures.into_iter().map(|e| into_failure(None, 0, e));
+    let best = classified
+        .max_by_key(|e| {
+            e.chain()
+                .find_map(|c| c.downcast_ref::<FailureReport>())
+                .map_or(10, |r| r.cause.severity())
+        })
+        .unwrap_or_else(|| anyhow::anyhow!("pipeline failed with no reports"));
+    if n > 1 {
+        best.context(format!("+{} secondary failure(s) in the cascade", n - 1))
+    } else {
+        best
+    }
+}
+
+/// One structured recovery event — `Display` renders the
+/// `[bpipe-recover]` log line, which the CI chaos leg archives.
+#[derive(Debug, Clone)]
+pub enum RecoveryEvent {
+    Failure { restart: u32, report: FailureReport },
+    Replan { stage: u64, cap_bytes: u64, bounds: Vec<u64>, accepted: bool },
+    Resume { restart: u32, from_step: u64, steps_lost: u64, backoff_ms: u64 },
+    Recovered { restarts: u32, steps_lost: u64, time_to_recover_s: Vec<f64> },
+    ReplayDivergence { step: u64, before: f32, after: f32 },
+    Abort { report: FailureReport },
+}
+
+impl std::fmt::Display for RecoveryEvent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[bpipe-recover] ")?;
+        match self {
+            RecoveryEvent::Failure { restart, report } => {
+                write!(f, "event=failure restart={restart} {report}")
+            }
+            RecoveryEvent::Replan { stage, cap_bytes, bounds, accepted } => write!(
+                f,
+                "event=replan stage={stage} cap_bytes={cap_bytes} bounds={bounds:?} \
+                 accepted={accepted}"
+            ),
+            RecoveryEvent::Resume { restart, from_step, steps_lost, backoff_ms } => write!(
+                f,
+                "event=resume restart={restart} from_step={from_step} steps_lost={steps_lost} \
+                 backoff_ms={backoff_ms}"
+            ),
+            RecoveryEvent::Recovered { restarts, steps_lost, time_to_recover_s } => {
+                write!(
+                    f,
+                    "event=recovered restarts={restarts} steps_lost={steps_lost} \
+                     time_to_recover_s={time_to_recover_s:?}"
+                )
+            }
+            RecoveryEvent::ReplayDivergence { step, before, after } => write!(
+                f,
+                "event=replay-divergence step={step} before={before} after={after}"
+            ),
+            RecoveryEvent::Abort { report } => write!(f, "event=abort {report}"),
+        }
+    }
+}
+
+/// Supervision policy around one [`TrainConfig`].
+#[derive(Debug, Clone)]
+pub struct SuperviseConfig {
+    pub train: TrainConfig,
+    /// deterministic fault plan to install for the run (None = no
+    /// injection; the supervisor still recovers from organic failures)
+    pub faults: Option<Arc<FaultPlan>>,
+    /// checkpoint–re-plan–resume cycles before a terminal abort
+    pub max_restarts: u32,
+    /// channel deadline — how long a silent peer is tolerated
+    pub recover_timeout: Option<Duration>,
+    /// base restart backoff (doubles per restart, capped at ×64)
+    pub backoff_base_ms: u64,
+    /// print each recovery event as it happens
+    pub log: bool,
+}
+
+impl Default for SuperviseConfig {
+    fn default() -> Self {
+        Self {
+            train: TrainConfig::default(),
+            faults: None,
+            max_restarts: 3,
+            recover_timeout: Some(Duration::from_millis(5000)),
+            backoff_base_ms: 10,
+            log: false,
+        }
+    }
+}
+
+/// What a supervised run produced: the final attempt's result, the
+/// stitched cross-attempt loss curve, and the recovery accounting.
+#[derive(Debug, Clone)]
+pub struct SuperviseOutcome {
+    /// the final (successful) attempt's result
+    pub result: TrainResult,
+    /// loss per global step 1..=steps, stitched across every attempt
+    /// (bit-identical replays overwrite silently; divergence is an event)
+    pub losses: Vec<f32>,
+    pub restarts: u32,
+    /// optimizer steps rolled back and replayed, summed over restarts
+    pub steps_lost: u64,
+    /// transient executes retried in place (final attempt's stats)
+    pub retried_executes: u64,
+    /// per-restart failure-detection → first-new-step seconds
+    pub time_to_recover_s: Vec<f64>,
+    pub events: Vec<RecoveryEvent>,
+}
+
+impl SuperviseOutcome {
+    pub fn recovery_stats(&self) -> RecoveryStats {
+        let mut stats = RecoveryStats::new();
+        stats.restarts = self.restarts;
+        stats.steps_lost = self.steps_lost;
+        stats.retried_executes = self.retried_executes;
+        for &t in &self.time_to_recover_s {
+            stats.record_recovery(t);
+        }
+        stats
+    }
+}
+
+/// Derive a tighter [`RebalancePlan`] after `stage`'s HBM capacity
+/// dropped to `cap_bytes`: every stage keeps its currently realized
+/// stash bound, the pressured stage is capped at how many stash entries
+/// now fit.  The candidate is validated end to end through
+/// [`try_plan_schedule`] (builder preconditions + the static analyzer).
+pub fn replan_for_cap(
+    cfg: &TrainConfig,
+    manifest: &Manifest,
+    p: u64,
+    stage: u64,
+    cap_bytes: u64,
+) -> Result<(RebalancePlan, Vec<u64>), PlanRejected> {
+    let (schedule, caps) = try_plan_schedule(cfg.family, p, cfg.microbatches, &cfg.rebalance)?;
+    let spec = &manifest.spec;
+    let vp = spec.stages;
+    // the largest stash entry the stage hosts, over its virtual stages:
+    // first = tokens (i32), mid = activation, last = activation + targets
+    let entry_bytes = (0..vp)
+        .filter(|&d| schedule.placement.host_stage(p, d) == stage)
+        .map(|d| match manifest.stage_kind(d) {
+            "first" => spec.b * spec.s * 4,
+            "last" => spec.b * spec.s * spec.h * 4 + spec.b * spec.s * 4,
+            _ => spec.b * spec.s * spec.h * 4,
+        })
+        .max()
+        .unwrap_or(1)
+        .max(1);
+    let fit = cap_bytes / entry_bytes;
+    if fit < 2 {
+        return Err(PlanRejected {
+            reason: format!(
+                "stage {stage} cap of {cap_bytes} B fits {fit} stash entries of {entry_bytes} B \
+                 — below the BPipe floor of 2 (one live + one incoming)"
+            ),
+            diagnostics: Vec::new(),
+        });
+    }
+    let mut bounds: Vec<u64> = caps.iter().map(|&c| (c as u64).max(2)).collect();
+    bounds[stage as usize] = bounds[stage as usize].min(fit);
+    let plan = RebalancePlan::PerStage { bounds: bounds.clone() };
+    try_plan_schedule(cfg.family, p, cfg.microbatches, &plan)?;
+    Ok((plan, bounds))
+}
+
+/// Turn a run error into its [`FailureReport`] (classifying untyped
+/// errors on the way).
+fn to_report(e: &anyhow::Error) -> FailureReport {
+    e.chain()
+        .find_map(|c| c.downcast_ref::<FailureReport>())
+        .cloned()
+        .unwrap_or_else(|| FailureReport {
+            stage: None,
+            step: 0,
+            cause: FailureCause::Other,
+            detail: format!("{e:#}"),
+        })
+}
+
+/// Run training under supervision: install the fault plan, and on each
+/// failure roll back to the newest checkpoint step EVERY stage can
+/// restore, re-plan if the failure reduced a stage's capacity, and
+/// resume — up to `max_restarts` times with exponential backoff.
+/// Terminal conditions (restart budget, no feasible plan) return the
+/// [`FailureReport`] as the error; the runtime never hangs on a fault
+/// (channel deadlines turn silence into typed timeouts).
+pub fn supervise<B: Backend>(scfg: &SuperviseConfig) -> anyhow::Result<SuperviseOutcome> {
+    let mut cfg = scfg.train.clone();
+    let dir = cfg
+        .checkpoint_dir
+        .clone()
+        .ok_or_else(|| anyhow::anyhow!("supervised training needs a checkpoint dir"))?;
+    if cfg.checkpoint_every == 0 {
+        // recovery granularity: without periodic checkpoints a failure
+        // would always replay from scratch
+        cfg.checkpoint_every = 1;
+    }
+    cfg.recover_timeout = scfg.recover_timeout;
+    let progress = cfg.progress.get_or_insert_with(ProgressLog::new).clone();
+    let _guard = scfg.faults.clone().map(fault::install);
+
+    // resolve the pipeline shape once — rollback walks VIRTUAL stages
+    let manifest = match &cfg.manifest {
+        Some(m) => m.clone(),
+        None => Manifest::load(&cfg.artifacts_dir)?,
+    };
+    let vp = manifest.spec.stages;
+    let chunks = cfg.family.chunks();
+    anyhow::ensure!(
+        chunks >= 1 && vp % chunks == 0,
+        "manifest's {vp} virtual stages don't split into {chunks} chunks"
+    );
+    let p = vp / chunks;
+
+    let mut events: Vec<RecoveryEvent> = Vec::new();
+    let mut restarts = 0u32;
+    let mut steps_lost = 0u64;
+    // (failure instant, progress length at failure) per restart — the
+    // first entry recorded past the mark closes the recovery window
+    let mut pending: Vec<(Instant, usize)> = Vec::new();
+    let mut emit = |events: &mut Vec<RecoveryEvent>, ev: RecoveryEvent| {
+        if scfg.log {
+            println!("{ev}");
+        }
+        events.push(ev);
+    };
+
+    loop {
+        match train::<B>(&cfg) {
+            Ok(result) => {
+                let snapshot = progress.snapshot();
+                let time_to_recover_s: Vec<f64> = pending
+                    .iter()
+                    .filter_map(|(t_fail, mark)| {
+                        snapshot
+                            .get(*mark)
+                            .map(|e| e.at.saturating_duration_since(*t_fail).as_secs_f64())
+                    })
+                    .collect();
+                // stitch the loss curve across attempts; replayed steps
+                // must land bit-identically (divergence = determinism bug)
+                let mut slots: Vec<Option<f32>> = vec![None; cfg.steps as usize];
+                for e in &snapshot {
+                    if e.step >= 1 && e.step <= cfg.steps {
+                        let slot = &mut slots[(e.step - 1) as usize];
+                        if let Some(prev) = *slot {
+                            if prev.to_bits() != e.loss.to_bits() {
+                                emit(
+                                    &mut events,
+                                    RecoveryEvent::ReplayDivergence {
+                                        step: e.step,
+                                        before: prev,
+                                        after: e.loss,
+                                    },
+                                );
+                            }
+                        }
+                        *slot = Some(e.loss);
+                    }
+                }
+                let losses: Vec<f32> =
+                    slots.into_iter().map(|s| s.unwrap_or(f32::NAN)).collect();
+                let retried_executes =
+                    result.stage_stats.iter().map(|s| s.retried_executes).sum();
+                emit(
+                    &mut events,
+                    RecoveryEvent::Recovered {
+                        restarts,
+                        steps_lost,
+                        time_to_recover_s: time_to_recover_s.clone(),
+                    },
+                );
+                return Ok(SuperviseOutcome {
+                    result,
+                    losses,
+                    restarts,
+                    steps_lost,
+                    retried_executes,
+                    time_to_recover_s,
+                    events,
+                });
+            }
+            Err(err) => {
+                let t_fail = Instant::now();
+                let report = to_report(&err);
+                emit(
+                    &mut events,
+                    RecoveryEvent::Failure { restart: restarts, report: report.clone() },
+                );
+
+                // HBM pressure: the capacity is gone for good — re-plan
+                // under the reduced cap BEFORE resuming, or abort when
+                // nothing fits
+                if let FailureCause::HbmPressure { cap_bytes } = report.cause {
+                    let stage = report.stage.unwrap_or(0);
+                    match replan_for_cap(&cfg, &manifest, p, stage, cap_bytes) {
+                        Ok((plan, bounds)) => {
+                            emit(
+                                &mut events,
+                                RecoveryEvent::Replan { stage, cap_bytes, bounds, accepted: true },
+                            );
+                            cfg.rebalance = plan;
+                        }
+                        Err(rej) => {
+                            let abort = FailureReport {
+                                stage: report.stage,
+                                step: report.step,
+                                cause: FailureCause::NoFeasiblePlan,
+                                detail: rej.to_string(),
+                            };
+                            emit(&mut events, RecoveryEvent::Abort { report: abort.clone() });
+                            return Err(anyhow::Error::new(abort));
+                        }
+                    }
+                }
+
+                if restarts >= scfg.max_restarts {
+                    let abort = FailureReport {
+                        stage: report.stage,
+                        step: report.step,
+                        cause: FailureCause::RestartsExhausted,
+                        detail: format!(
+                            "{} restart(s) used; last failure: {report}",
+                            scfg.max_restarts
+                        ),
+                    };
+                    emit(&mut events, RecoveryEvent::Abort { report: abort.clone() });
+                    return Err(anyhow::Error::new(abort));
+                }
+                restarts += 1;
+
+                // rollback target: the newest step EVERY virtual stage
+                // can restore (≤ steps−1: a failed run can't have fully
+                // finished, and resume needs work left to do)
+                let c = latest_common_step(Path::new(&dir), 0..vp)
+                    .min(cfg.steps.saturating_sub(1));
+                steps_lost += report.step.saturating_sub(c);
+                if c > 0 {
+                    CheckpointMeta {
+                        steps_done: c,
+                        stages: p,
+                        chunks,
+                        microbatches: cfg.microbatches,
+                        seed: cfg.seed,
+                    }
+                    .save(Path::new(&dir))?;
+                    cfg.resume = true;
+                } else {
+                    cfg.resume = false;
+                }
+                let backoff_ms = scfg.backoff_base_ms << (restarts - 1).min(6);
+                emit(
+                    &mut events,
+                    RecoveryEvent::Resume { restart: restarts, from_step: c, steps_lost, backoff_ms },
+                );
+                pending.push((t_fail, progress.len()));
+                std::thread::sleep(Duration::from_millis(backoff_ms));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cause_labels_are_kebab_case() {
+        for (cause, label) in [
+            (FailureCause::InjectedCrash, "injected-crash"),
+            (FailureCause::WorkerPanic, "worker-panic"),
+            (FailureCause::ChannelTimeout { waited_ms: 5 }, "channel-timeout"),
+            (FailureCause::ChannelClosed, "channel-closed"),
+            (FailureCause::NoFeasiblePlan, "no-feasible-plan"),
+            (FailureCause::HbmPressure { cap_bytes: 1 }, "hbm-pressure"),
+        ] {
+            assert_eq!(cause.label(), label);
+        }
+    }
+
+    #[test]
+    fn classification_finds_typed_signals_through_context() {
+        let e = anyhow::Error::new(InjectedFault::Crash { stage: 2, step: 5 })
+            .context("executing fwd")
+            .context("stage worker");
+        let classified = into_failure(Some(9), 9, e);
+        let report = to_report(&classified);
+        assert_eq!(report.cause, FailureCause::InjectedCrash);
+        assert_eq!(report.stage, Some(2), "the fault's own identity wins");
+        assert_eq!(report.step, 5);
+
+        let e = anyhow::Error::new(ChannelError::Timeout { waited_ms: 250 }).context("recv act");
+        let report = to_report(&into_failure(Some(1), 3, e));
+        assert_eq!(report.cause, FailureCause::ChannelTimeout { waited_ms: 250 });
+        assert_eq!(report.stage, Some(1));
+        assert_eq!(report.step, 3);
+    }
+
+    #[test]
+    fn already_classified_errors_pass_through() {
+        let original = FailureReport {
+            stage: Some(1),
+            step: 7,
+            cause: FailureCause::InjectedCrash,
+            detail: "x".into(),
+        };
+        let e = anyhow::Error::new(original.clone()).context("outer");
+        let back = to_report(&into_failure(None, 0, e));
+        assert_eq!(back, original);
+    }
+
+    #[test]
+    fn primary_failure_ranks_the_cascade() {
+        let failures = vec![
+            anyhow::Error::new(ChannelError::Closed),
+            anyhow::Error::new(InjectedFault::Crash { stage: 1, step: 3 }),
+            anyhow::Error::new(ChannelError::Timeout { waited_ms: 100 }),
+        ];
+        let primary = primary_failure(failures);
+        let report = to_report(&primary);
+        assert_eq!(report.cause, FailureCause::InjectedCrash, "crash outranks the cascade");
+        assert!(format!("{primary:#}").contains("2 secondary"), "cascade size noted");
+    }
+
+    #[test]
+    fn event_lines_are_structured() {
+        let ev = RecoveryEvent::Failure {
+            restart: 1,
+            report: FailureReport {
+                stage: Some(2),
+                step: 4,
+                cause: FailureCause::WorkerPanic,
+                detail: "boom".into(),
+            },
+        };
+        let line = ev.to_string();
+        assert!(line.starts_with("[bpipe-recover] event=failure"), "{line}");
+        assert!(line.contains("stage=2") && line.contains("cause=worker-panic"), "{line}");
+    }
+}

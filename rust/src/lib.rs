@@ -40,6 +40,8 @@
 //! | Beyond the paper: schedule/bound/layout design space | [`mod@sim::sweep`], [`schedule::zigzag()`], [`bpipe::rebalance_bounded`] |
 //! | Beyond the paper: zero-alloc training hot path (buffer donation) | [`runtime::BufferPool`], [`runtime::Backend::execute_pooled`], [`coordinator::train_probed`] |
 //! | Beyond the paper: static schedule/protocol analyzer (deadlock, linearity, bounds) | [`analysis`], `bpipe check` |
+//! | Beyond the paper: deterministic fault injection (crash/stall/transient/HBM-cap) | [`runtime::FaultPlan`], [`runtime::FaultyBackend`], `bpipe train --faults` |
+//! | Beyond the paper: supervised recovery — checkpoint, re-plan under reduced HBM ([`analysis::gate_plan`]), resume | [`coordinator::supervisor`], [`coordinator::latest_common_step`] |
 //!
 //! `docs/ARCHITECTURE.md` has the crate-level data-flow diagram and the
 //! [`runtime::Backend`] boundary; [`sweep_schema`] documents (and

@@ -82,10 +82,22 @@ COMMANDS:
             [--bpipe | --rebalance [--bound K] | --stage-bounds a,b,..]
             [--steps N --microbatches M --lr F --p N] [--seed N]
             [--log-every N] [--checkpoint-dir D --checkpoint-every N]
-            [--resume]                   REAL pipeline training: the
+            [--resume]
+            [--faults plan.json] [--max-restarts N]
+            [--recover-timeout-ms T] [--retry-budget N]
+            [--retry-backoff-ms T]       REAL pipeline training: the
                                          in-tree SimBackend by default
                                          (no artifacts needed), PJRT
-                                         with the pjrt build feature
+                                         with the pjrt build feature.
+                                         Any fault/restart flag turns on
+                                         the supervisor: failures are
+                                         classified, the run rolls back
+                                         to the last common checkpoint,
+                                         re-plans under reduced HBM and
+                                         resumes (bounded restarts;
+                                         structured [bpipe-recover]
+                                         event lines; exit 1 on a
+                                         terminal abort)
 ";
 
 /// Minimal flag parser: `--key value` pairs plus boolean `--key` flags.
@@ -190,11 +202,16 @@ fn run_train<B: bpipe::runtime::Backend>(
         r.final_loss()
     );
     println!("mean step time {:.3}s, tokens {}", r.mean_step_time(), r.tokens);
-    for st in &r.stage_stats {
+    print_stage_stats(&r.stage_stats);
+    Ok(())
+}
+
+fn print_stage_stats(stats: &[bpipe::coordinator::StageStats]) {
+    for st in stats {
         let pool_total = st.pool_hits + st.pool_misses;
         println!(
             "  stage {}: fwd {:.2}s bwd {:.2}s adam {:.2}s load-wait {:.2}s evictions {} \
-             stash-hw {} pool-hit {:.0}%",
+             stash-hw {} pool-hit {:.0}% retried {}",
             st.stage,
             st.fwd_s,
             st.bwd_s,
@@ -202,10 +219,75 @@ fn run_train<B: bpipe::runtime::Backend>(
             st.load_wait_s,
             st.evictions,
             st.stash_high_water,
-            if pool_total > 0 { 100.0 * st.pool_hits as f64 / pool_total as f64 } else { 0.0 }
+            if pool_total > 0 { 100.0 * st.pool_hits as f64 / pool_total as f64 } else { 0.0 },
+            st.retried_executes,
         );
     }
-    Ok(())
+}
+
+/// `bpipe train` under the fault-tolerant supervisor: install the fault
+/// plan (when given), recover from failures, report recovery telemetry.
+/// A terminal abort prints its structured report and exits nonzero.
+fn run_train_supervised<B: bpipe::runtime::Backend>(
+    scfg: &bpipe::coordinator::SuperviseConfig,
+) -> anyhow::Result<()> {
+    println!(
+        "supervised training: {} steps × {} microbatches, family {:?}, max restarts {}, \
+         recover timeout {:?}",
+        scfg.train.steps,
+        scfg.train.microbatches,
+        scfg.train.family,
+        scfg.max_restarts,
+        scfg.recover_timeout,
+    );
+    match bpipe::coordinator::supervise::<B>(scfg) {
+        Ok(outcome) => {
+            let r = &outcome.result;
+            println!(
+                "first loss {:.4} → final loss {:.4}",
+                outcome.losses.first().copied().unwrap_or(f32::NAN),
+                r.final_loss()
+            );
+            println!("mean step time {:.3}s, tokens {}", r.mean_step_time(), r.tokens);
+            println!("recovery: {}", outcome.recovery_stats().summary());
+            print_stage_stats(&r.stage_stats);
+            Ok(())
+        }
+        Err(e) => {
+            eprintln!("training aborted: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Assemble the supervision policy from the `train` flags (any
+/// fault/restart flag opts the run in).
+fn build_supervise_config(
+    args: &Args,
+    mut train: bpipe::coordinator::TrainConfig,
+) -> anyhow::Result<bpipe::coordinator::SuperviseConfig> {
+    if train.checkpoint_dir.is_none() {
+        // recovery needs somewhere to roll back to
+        let dir = std::env::temp_dir().join(format!("bpipe-ck-{}", std::process::id()));
+        println!("supervised run without --checkpoint-dir; checkpoints go to {dir:?}");
+        train.checkpoint_dir = Some(dir);
+    }
+    let faults = match args.opt("faults") {
+        Some(path) => Some(std::sync::Arc::new(bpipe::runtime::FaultPlan::load(
+            std::path::Path::new(path),
+        )?)),
+        None => None,
+    };
+    Ok(bpipe::coordinator::SuperviseConfig {
+        train,
+        faults,
+        max_restarts: args.get("max-restarts", 3u32)?,
+        recover_timeout: Some(std::time::Duration::from_millis(
+            args.get("recover-timeout-ms", 5000u64)?,
+        )),
+        backoff_base_ms: 10,
+        log: true,
+    })
 }
 
 /// Measure single-stage timings over the real PJRT runtime (Eq. 4's
@@ -654,7 +736,14 @@ fn main() -> anyhow::Result<()> {
                 checkpoint_dir: args.opt("checkpoint-dir").map(PathBuf::from),
                 checkpoint_every: args.get("checkpoint-every", 0u64)?,
                 resume: args.opt("resume").is_some(),
+                recover_timeout: None,
+                retry_budget: args.get("retry-budget", 3u32)?,
+                retry_backoff_ms: args.get("retry-backoff-ms", 10u64)?,
+                progress: None,
             };
+            let supervised = ["faults", "max-restarts", "recover-timeout-ms"]
+                .iter()
+                .any(|f| args.opt(f).is_some());
             let default_backend = if cfg!(feature = "pjrt") { "pjrt" } else { "sim" };
             match args.opt("backend").unwrap_or(default_backend) {
                 "sim" => {
@@ -692,11 +781,25 @@ fn main() -> anyhow::Result<()> {
                             &[1, 2],
                         ))
                     };
-                    run_train::<bpipe::runtime::SimBackend>(&cfg)?;
+                    if supervised {
+                        let scfg = build_supervise_config(&args, cfg)?;
+                        run_train_supervised::<
+                            bpipe::runtime::FaultyBackend<bpipe::runtime::SimBackend>,
+                        >(&scfg)?;
+                    } else {
+                        run_train::<bpipe::runtime::SimBackend>(&cfg)?;
+                    }
                 }
                 "pjrt" => {
                     #[cfg(feature = "pjrt")]
-                    run_train::<bpipe::runtime::Runtime>(&cfg)?;
+                    if supervised {
+                        let scfg = build_supervise_config(&args, cfg)?;
+                        run_train_supervised::<
+                            bpipe::runtime::FaultyBackend<bpipe::runtime::Runtime>,
+                        >(&scfg)?;
+                    } else {
+                        run_train::<bpipe::runtime::Runtime>(&cfg)?;
+                    }
                     #[cfg(not(feature = "pjrt"))]
                     {
                         eprintln!(

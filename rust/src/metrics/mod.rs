@@ -68,6 +68,58 @@ impl RunningStats {
     }
 }
 
+/// Fault-tolerance accounting for one supervised training run — what
+/// the recovery runtime adds on top of [`RunningStats`]-style step
+/// telemetry (see `coordinator::supervisor`).
+#[derive(Debug, Clone)]
+pub struct RecoveryStats {
+    /// completed checkpoint–re-plan–resume cycles
+    pub restarts: u32,
+    /// transient `execute` failures retried in place (no restart)
+    pub retried_executes: u64,
+    /// optimizer steps rolled back and replayed across all restarts
+    pub steps_lost: u64,
+    /// failure-detection → first post-resume completed step, seconds
+    pub time_to_recover: RunningStats,
+}
+
+impl RecoveryStats {
+    pub fn new() -> Self {
+        Self {
+            restarts: 0,
+            retried_executes: 0,
+            steps_lost: 0,
+            time_to_recover: RunningStats::new(),
+        }
+    }
+
+    pub fn record_recovery(&mut self, secs: f64) {
+        self.time_to_recover.push(secs);
+    }
+
+    /// One-line human summary for run logs.
+    pub fn summary(&self) -> String {
+        if self.restarts == 0 && self.retried_executes == 0 {
+            return "no failures".into();
+        }
+        let ttr = if self.time_to_recover.n > 0 {
+            format!(", mean time-to-recover {:.3}s", self.time_to_recover.mean)
+        } else {
+            String::new()
+        };
+        format!(
+            "{} restart(s), {} retried execute(s), {} step(s) replayed{}",
+            self.restarts, self.retried_executes, self.steps_lost, ttr
+        )
+    }
+}
+
+impl Default for RecoveryStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -91,6 +143,20 @@ mod tests {
         let rep = mfu_report(&e, t);
         assert!((rep.mfu - 0.34).abs() < 1e-9);
         assert!(t > 20.0 && t < 80.0, "iter time {t:.1}s");
+    }
+
+    #[test]
+    fn recovery_stats_summary() {
+        let mut r = RecoveryStats::new();
+        assert_eq!(r.summary(), "no failures");
+        r.restarts = 2;
+        r.steps_lost = 3;
+        r.record_recovery(0.5);
+        r.record_recovery(1.5);
+        let s = r.summary();
+        assert!(s.contains("2 restart(s)"), "{s}");
+        assert!(s.contains("3 step(s) replayed"), "{s}");
+        assert!(s.contains("1.000s"), "{s}");
     }
 
     #[test]

@@ -237,6 +237,20 @@ pub trait Backend: Sized + 'static {
     /// Human-readable platform name ("cpu", "sim", …).
     fn platform(&self) -> String;
 
+    /// Tell the backend which pipeline stage it serves.  Called once by
+    /// the stage worker right after [`Self::create`]; the default
+    /// ignores it.  Instrumenting wrappers (fault injection, tracing)
+    /// use this to key per-stage behavior.
+    fn bind_stage(&mut self, _stage: u64) {}
+
+    /// Step-boundary hook: called by the stage worker at the top of
+    /// every training step with the GLOBAL (resume-aware) 1-based step
+    /// number.  The default does nothing; an error fails the step and is
+    /// routed through the supervisor like any other worker failure.
+    fn begin_step(&self, _global_step: u64) -> anyhow::Result<()> {
+        Ok(())
+    }
+
     /// Compile the named artifact from the manifest.
     fn compile(&self, manifest: &Manifest, name: &str) -> anyhow::Result<Self::Exec>;
 

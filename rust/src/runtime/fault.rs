@@ -1,0 +1,582 @@
+//! Deterministic fault injection for the supervised training runtime.
+//!
+//! A [`FaultPlan`] is a seeded, fully explicit description of the faults
+//! a run must survive — which stage fails, at which global step, and
+//! how.  The plan is *armed* once and each fault is consume-once
+//! (atomically), so a recovered run that replays the faulty step does
+//! not re-trip the same fault forever: the supervisor's
+//! checkpoint–re-plan–resume loop terminates.
+//!
+//! Faults are realized by [`FaultyBackend`], a transparent [`Backend`]
+//! wrapper that any worker can run on.  It learns its stage identity and
+//! the current global step through the [`Backend::bind_stage`] /
+//! [`Backend::begin_step`] hooks and injects at exactly three points:
+//!
+//! * `begin_step` — worker crash (typed error), worker panic (a real
+//!   `panic!`, exercising the poisoned-join path), channel stall (the
+//!   worker goes silent for `stall_ms`, so its *neighbors'* deadline
+//!   waits fire), and HBM cap reduction (a typed
+//!   [`InjectedFault::HbmCap`] the supervisor answers with a re-plan);
+//! * `execute` / `execute_pooled` — transient execution failures with a
+//!   bounded budget, retried in place by the stage runner.
+//!
+//! The feeder has no backend, so its stall fault is consulted directly
+//! by the pipeline's feeder loop ([`FaultPlan::feeder_stall_due`]).
+//!
+//! Plans are installed process-globally ([`install`], RAII-scoped) —
+//! workers create their own backend instances on their own threads, and
+//! the registry is how a `FaultyBackend::create` call finds the plan
+//! without widening the [`Backend`] constructor.  JSON round-trip
+//! ([`FaultPlan::from_json`] / [`FaultPlan::to_json`]) backs the
+//! `bpipe train --faults plan.json` surface using the in-tree
+//! dependency-free [`Json`] parser.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::runtime::{Arg, Backend, BufferPool, HostTensor, Manifest};
+use crate::util::json::Json;
+
+/// One injectable fault.  `step` is the GLOBAL 1-based training step the
+/// fault arms at; a fault fires the first time its stage reaches any
+/// step ≥ `step` (so resume-time step skips cannot dodge it), then never
+/// again.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Fault {
+    /// Stage worker fails with a typed error at the start of step `step`.
+    Crash { stage: u64, step: u64 },
+    /// Stage worker literally panics (poisoned-join path).
+    Panic { stage: u64, step: u64 },
+    /// The next `failures` executions on `stage` (from step `step`) fail
+    /// transiently; the runner retries them within its budget.
+    TransientExec { stage: u64, step: u64, failures: u32 },
+    /// Stage worker goes silent for `stall_ms` at the start of `step` —
+    /// neighbors must detect it via channel deadlines, not hang.
+    ChannelStall { stage: u64, step: u64, stall_ms: u64 },
+    /// The data feeder goes silent for `stall_ms` at the start of `step`.
+    FeederStall { step: u64, stall_ms: u64 },
+    /// The stage's HBM capacity drops to `cap_bytes` at step `step`; the
+    /// supervisor must re-plan under the tighter bound or abort.
+    HbmCap { stage: u64, step: u64, cap_bytes: u64 },
+}
+
+impl Fault {
+    fn kind(&self) -> &'static str {
+        match self {
+            Fault::Crash { .. } => "crash",
+            Fault::Panic { .. } => "panic",
+            Fault::TransientExec { .. } => "transient_exec",
+            Fault::ChannelStall { .. } => "channel_stall",
+            Fault::FeederStall { .. } => "feeder_stall",
+            Fault::HbmCap { .. } => "hbm_cap",
+        }
+    }
+}
+
+/// A fault plus its consume-once firing state (shared across restart
+/// attempts through the `Arc<FaultPlan>`).
+#[derive(Debug)]
+struct Armed {
+    fault: Fault,
+    fired: AtomicBool,
+    /// remaining transient failures ([`Fault::TransientExec`] only)
+    remaining: AtomicU32,
+}
+
+/// A deterministic, seeded set of faults to inject into one supervised
+/// run.  All query methods take `&self` — firing state is atomic, so one
+/// plan serves every worker thread across every restart attempt.
+#[derive(Debug)]
+pub struct FaultPlan {
+    pub seed: u64,
+    armed: Vec<Armed>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64, faults: Vec<Fault>) -> Self {
+        let armed = faults
+            .into_iter()
+            .map(|fault| {
+                let remaining = match fault {
+                    Fault::TransientExec { failures, .. } => failures,
+                    _ => 0,
+                };
+                Armed { fault, fired: AtomicBool::new(false), remaining: AtomicU32::new(remaining) }
+            })
+            .collect();
+        Self { seed, armed }
+    }
+
+    /// A single seeded crash at a pseudo-random (stage, step) — the
+    /// simplest chaos plan, derived entirely from `seed`.
+    pub fn sampled_crash(seed: u64, stages: u64, steps: u64) -> Self {
+        let mut rng = crate::util::SplitMix64::new(seed);
+        let stage = rng.next_u64() % stages.max(1);
+        let step = 1 + rng.next_u64() % steps.max(1);
+        Self::new(seed, vec![Fault::Crash { stage, step }])
+    }
+
+    pub fn faults(&self) -> Vec<Fault> {
+        self.armed.iter().map(|a| a.fault.clone()).collect()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.armed.is_empty()
+    }
+
+    /// Re-arm every fault (used by tests that replay one plan).
+    pub fn rearm(&self) {
+        for a in &self.armed {
+            a.fired.store(false, Ordering::SeqCst);
+            if let Fault::TransientExec { failures, .. } = a.fault {
+                a.remaining.store(failures, Ordering::SeqCst);
+            }
+        }
+    }
+
+    /// Fire-once helper: consume the first matching un-fired fault.
+    fn consume(&self, pred: impl Fn(&Fault) -> bool) -> Option<&Fault> {
+        for a in &self.armed {
+            if pred(&a.fault) && !a.fired.swap(true, Ordering::SeqCst) {
+                return Some(&a.fault);
+            }
+            // keep scanning: an already-fired fault must not shadow a
+            // later-armed one of the same kind
+        }
+        None
+    }
+
+    /// Does a [`Fault::Crash`] fire for `stage` at global step `step`?
+    pub fn crash_due(&self, stage: u64, step: u64) -> bool {
+        self.consume(|f| matches!(f, Fault::Crash { stage: s, step: k } if *s == stage && step >= *k))
+            .is_some()
+    }
+
+    /// Does a [`Fault::Panic`] fire for `stage` at global step `step`?
+    pub fn panic_due(&self, stage: u64, step: u64) -> bool {
+        self.consume(|f| matches!(f, Fault::Panic { stage: s, step: k } if *s == stage && step >= *k))
+            .is_some()
+    }
+
+    /// Channel stall duration (ms) for `stage` at `step`, if one fires.
+    pub fn stall_due(&self, stage: u64, step: u64) -> Option<u64> {
+        match self.consume(
+            |f| matches!(f, Fault::ChannelStall { stage: s, step: k, .. } if *s == stage && step >= *k),
+        ) {
+            Some(Fault::ChannelStall { stall_ms, .. }) => Some(*stall_ms),
+            _ => None,
+        }
+    }
+
+    /// Feeder stall duration (ms) at `step`, if one fires.
+    pub fn feeder_stall_due(&self, step: u64) -> Option<u64> {
+        match self.consume(|f| matches!(f, Fault::FeederStall { step: k, .. } if step >= *k)) {
+            Some(Fault::FeederStall { stall_ms, .. }) => Some(*stall_ms),
+            _ => None,
+        }
+    }
+
+    /// New HBM cap (bytes) for `stage` at `step`, if one fires.
+    pub fn hbm_cap_due(&self, stage: u64, step: u64) -> Option<u64> {
+        match self.consume(
+            |f| matches!(f, Fault::HbmCap { stage: s, step: k, .. } if *s == stage && step >= *k),
+        ) {
+            Some(Fault::HbmCap { cap_bytes, .. }) => Some(*cap_bytes),
+            _ => None,
+        }
+    }
+
+    /// Should the next execution on `stage` at global step `step` fail
+    /// transiently?  Decrements the fault's remaining budget.
+    pub fn exec_should_fail(&self, stage: u64, step: u64) -> bool {
+        for a in &self.armed {
+            if let Fault::TransientExec { stage: s, step: k, .. } = a.fault {
+                if s == stage && step >= k {
+                    let took = a
+                        .remaining
+                        .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |r| r.checked_sub(1));
+                    if took.is_ok() {
+                        return true;
+                    }
+                }
+            }
+        }
+        false
+    }
+
+    // -- JSON surface -------------------------------------------------------
+
+    /// Parse a plan from its JSON form:
+    ///
+    /// ```json
+    /// {"seed": 0, "faults": [
+    ///   {"kind": "crash", "stage": 1, "step": 3},
+    ///   {"kind": "transient_exec", "stage": 0, "step": 2, "failures": 2},
+    ///   {"kind": "channel_stall", "stage": 1, "step": 2, "stall_ms": 800},
+    ///   {"kind": "feeder_stall", "step": 2, "stall_ms": 800},
+    ///   {"kind": "hbm_cap", "stage": 0, "step": 3, "cap_bytes": 2048}
+    /// ]}
+    /// ```
+    pub fn from_json(text: &str) -> anyhow::Result<Self> {
+        let root = Json::parse(text).map_err(|e| anyhow::anyhow!("fault plan JSON: {e}"))?;
+        let seed = root.get("seed").and_then(|j| j.as_u64()).unwrap_or(0);
+        let mut faults = Vec::new();
+        let arr = root
+            .get("faults")
+            .and_then(|j| j.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("fault plan needs a \"faults\" array"))?;
+        for (i, f) in arr.iter().enumerate() {
+            let kind = f
+                .get("kind")
+                .and_then(|j| j.as_str())
+                .ok_or_else(|| anyhow::anyhow!("fault #{i}: missing \"kind\""))?;
+            let field = |key: &str| -> anyhow::Result<u64> {
+                f.get(key)
+                    .and_then(|j| j.as_u64())
+                    .ok_or_else(|| anyhow::anyhow!("fault #{i} ({kind}): missing \"{key}\""))
+            };
+            let fault = match kind {
+                "crash" => Fault::Crash { stage: field("stage")?, step: field("step")? },
+                "panic" => Fault::Panic { stage: field("stage")?, step: field("step")? },
+                "transient_exec" => Fault::TransientExec {
+                    stage: field("stage")?,
+                    step: field("step")?,
+                    failures: field("failures")? as u32,
+                },
+                "channel_stall" => Fault::ChannelStall {
+                    stage: field("stage")?,
+                    step: field("step")?,
+                    stall_ms: field("stall_ms")?,
+                },
+                "feeder_stall" => {
+                    Fault::FeederStall { step: field("step")?, stall_ms: field("stall_ms")? }
+                }
+                "hbm_cap" => Fault::HbmCap {
+                    stage: field("stage")?,
+                    step: field("step")?,
+                    cap_bytes: field("cap_bytes")?,
+                },
+                other => anyhow::bail!("fault #{i}: unknown kind {other:?}"),
+            };
+            let step = match &fault {
+                Fault::Crash { step, .. }
+                | Fault::Panic { step, .. }
+                | Fault::TransientExec { step, .. }
+                | Fault::ChannelStall { step, .. }
+                | Fault::FeederStall { step, .. }
+                | Fault::HbmCap { step, .. } => *step,
+            };
+            anyhow::ensure!(step >= 1, "fault #{i} ({kind}): steps are 1-based, got {step}");
+            faults.push(fault);
+        }
+        Ok(Self::new(seed, faults))
+    }
+
+    /// Load a plan from a JSON file (the `--faults plan.json` surface).
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read fault plan {path:?}: {e}"))?;
+        Self::from_json(&text)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let faults: Vec<Json> = self
+            .armed
+            .iter()
+            .map(|a| {
+                let mut pairs = vec![("kind", Json::str(a.fault.kind()))];
+                match &a.fault {
+                    Fault::Crash { stage, step } | Fault::Panic { stage, step } => {
+                        pairs.push(("stage", Json::Num(*stage as f64)));
+                        pairs.push(("step", Json::Num(*step as f64)));
+                    }
+                    Fault::TransientExec { stage, step, failures } => {
+                        pairs.push(("stage", Json::Num(*stage as f64)));
+                        pairs.push(("step", Json::Num(*step as f64)));
+                        pairs.push(("failures", Json::Num(*failures as f64)));
+                    }
+                    Fault::ChannelStall { stage, step, stall_ms } => {
+                        pairs.push(("stage", Json::Num(*stage as f64)));
+                        pairs.push(("step", Json::Num(*step as f64)));
+                        pairs.push(("stall_ms", Json::Num(*stall_ms as f64)));
+                    }
+                    Fault::FeederStall { step, stall_ms } => {
+                        pairs.push(("step", Json::Num(*step as f64)));
+                        pairs.push(("stall_ms", Json::Num(*stall_ms as f64)));
+                    }
+                    Fault::HbmCap { stage, step, cap_bytes } => {
+                        pairs.push(("stage", Json::Num(*stage as f64)));
+                        pairs.push(("step", Json::Num(*step as f64)));
+                        pairs.push(("cap_bytes", Json::Num(*cap_bytes as f64)));
+                    }
+                }
+                Json::obj(pairs)
+            })
+            .collect();
+        Json::obj(vec![("seed", Json::Num(self.seed as f64)), ("faults", Json::Arr(faults))])
+    }
+}
+
+/// Typed error a [`FaultyBackend`] surfaces; the worker/supervisor
+/// classify failures by downcasting to this through the anyhow chain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InjectedFault {
+    Crash { stage: u64, step: u64 },
+    TransientExec { stage: u64, step: u64 },
+    HbmCap { stage: u64, step: u64, cap_bytes: u64 },
+}
+
+impl std::fmt::Display for InjectedFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            InjectedFault::Crash { stage, step } => {
+                write!(f, "injected crash at stage {stage}, step {step}")
+            }
+            InjectedFault::TransientExec { stage, step } => {
+                write!(f, "injected transient execute failure at stage {stage}, step {step}")
+            }
+            InjectedFault::HbmCap { stage, step, cap_bytes } => {
+                write!(f, "injected HBM cap reduction to {cap_bytes} B at stage {stage}, step {step}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for InjectedFault {}
+
+// -- process-global plan registry -------------------------------------------
+//
+// Workers construct their backends on their own threads via
+// `B::create(&manifest)`; the registry lets `FaultyBackend::create` pick
+// up the active plan without changing the Backend constructor.  The
+// supervisor installs a plan for the duration of one supervised run.
+
+static INSTALLED: Mutex<Option<Arc<FaultPlan>>> = Mutex::new(None);
+
+fn registry() -> std::sync::MutexGuard<'static, Option<Arc<FaultPlan>>> {
+    INSTALLED.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Install `plan` as the process-global fault plan; the previous plan is
+/// restored when the returned guard drops.
+pub fn install(plan: Arc<FaultPlan>) -> FaultGuard {
+    FaultGuard { prev: registry().replace(plan) }
+}
+
+/// The currently installed plan, if any.
+pub fn installed() -> Option<Arc<FaultPlan>> {
+    registry().clone()
+}
+
+/// RAII scope for an installed [`FaultPlan`].
+pub struct FaultGuard {
+    prev: Option<Arc<FaultPlan>>,
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        *registry() = self.prev.take();
+    }
+}
+
+/// A transparent [`Backend`] wrapper injecting the installed
+/// [`FaultPlan`]'s faults at the step boundary and execute call sites.
+/// With no plan installed it is a pure passthrough.
+pub struct FaultyBackend<B: Backend> {
+    inner: B,
+    plan: Option<Arc<FaultPlan>>,
+    stage: Cell<u64>,
+    step: Cell<u64>,
+}
+
+impl<B: Backend> FaultyBackend<B> {
+    fn maybe_fail_exec(&self) -> anyhow::Result<()> {
+        if let Some(p) = &self.plan {
+            let (stage, step) = (self.stage.get(), self.step.get());
+            if p.exec_should_fail(stage, step) {
+                return Err(anyhow::Error::new(InjectedFault::TransientExec { stage, step }));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<B: Backend> Backend for FaultyBackend<B> {
+    type Exec = B::Exec;
+    type Buffer = B::Buffer;
+
+    fn create(manifest: &Manifest) -> anyhow::Result<Self> {
+        Ok(Self {
+            inner: B::create(manifest)?,
+            plan: installed(),
+            stage: Cell::new(0),
+            step: Cell::new(0),
+        })
+    }
+
+    fn platform(&self) -> String {
+        format!("faulty+{}", self.inner.platform())
+    }
+
+    fn bind_stage(&mut self, stage: u64) {
+        self.stage.set(stage);
+        self.inner.bind_stage(stage);
+    }
+
+    fn begin_step(&self, global_step: u64) -> anyhow::Result<()> {
+        self.step.set(global_step);
+        self.inner.begin_step(global_step)?;
+        if let Some(p) = &self.plan {
+            let stage = self.stage.get();
+            if let Some(ms) = p.stall_due(stage, global_step) {
+                // go silent: neighbors must detect this via deadlines
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+            if p.panic_due(stage, global_step) {
+                panic!("injected panic at stage {stage}, step {global_step}");
+            }
+            if p.crash_due(stage, global_step) {
+                return Err(anyhow::Error::new(InjectedFault::Crash {
+                    stage,
+                    step: global_step,
+                }));
+            }
+            if let Some(cap_bytes) = p.hbm_cap_due(stage, global_step) {
+                return Err(anyhow::Error::new(InjectedFault::HbmCap {
+                    stage,
+                    step: global_step,
+                    cap_bytes,
+                }));
+            }
+        }
+        Ok(())
+    }
+
+    fn compile(&self, manifest: &Manifest, name: &str) -> anyhow::Result<Self::Exec> {
+        self.inner.compile(manifest, name)
+    }
+
+    fn upload(&self, t: &HostTensor) -> anyhow::Result<Self::Buffer> {
+        self.inner.upload(t)
+    }
+
+    fn upload_into(&self, t: &HostTensor, buf: &mut Self::Buffer) -> anyhow::Result<()> {
+        self.inner.upload_into(t, buf)
+    }
+
+    fn execute(
+        &self,
+        exe: &Self::Exec,
+        inputs: &[&Self::Buffer],
+    ) -> anyhow::Result<Vec<HostTensor>> {
+        self.maybe_fail_exec()?;
+        self.inner.execute(exe, inputs)
+    }
+
+    /// Injects BEFORE delegating, so on an injected failure every `args`
+    /// slot is still un-spent and the caller may retry the same call.
+    fn execute_pooled(
+        &self,
+        exe: &Self::Exec,
+        params: Option<&Self::Buffer>,
+        args: &mut [Arg<'_>],
+        pool: &mut BufferPool,
+        out: &mut Vec<HostTensor>,
+    ) -> anyhow::Result<()> {
+        self.maybe_fail_exec()?;
+        self.inner.execute_pooled(exe, params, args, pool, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn faults_fire_once() {
+        let p = FaultPlan::new(0, vec![Fault::Crash { stage: 1, step: 3 }]);
+        assert!(!p.crash_due(1, 2), "not yet due");
+        assert!(!p.crash_due(0, 3), "wrong stage");
+        assert!(p.crash_due(1, 3), "fires at its step");
+        assert!(!p.crash_due(1, 3), "consumed");
+        assert!(!p.crash_due(1, 4), "stays consumed on replay");
+        p.rearm();
+        assert!(p.crash_due(1, 5), "≥ step catches resume skips");
+    }
+
+    #[test]
+    fn transient_budget_decrements() {
+        let p = FaultPlan::new(0, vec![Fault::TransientExec { stage: 0, step: 2, failures: 2 }]);
+        assert!(!p.exec_should_fail(0, 1));
+        assert!(p.exec_should_fail(0, 2));
+        assert!(p.exec_should_fail(0, 5));
+        assert!(!p.exec_should_fail(0, 5), "budget spent");
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let plan = FaultPlan::new(
+            7,
+            vec![
+                Fault::Crash { stage: 1, step: 3 },
+                Fault::Panic { stage: 0, step: 2 },
+                Fault::TransientExec { stage: 0, step: 2, failures: 2 },
+                Fault::ChannelStall { stage: 1, step: 2, stall_ms: 800 },
+                Fault::FeederStall { step: 2, stall_ms: 400 },
+                Fault::HbmCap { stage: 0, step: 3, cap_bytes: 2048 },
+            ],
+        );
+        let text = plan.to_json().to_string();
+        let back = FaultPlan::from_json(&text).unwrap();
+        assert_eq!(back.seed, 7);
+        assert_eq!(back.faults(), plan.faults());
+    }
+
+    #[test]
+    fn json_rejects_malformed_plans() {
+        assert!(FaultPlan::from_json("{}").is_err(), "missing faults array");
+        assert!(
+            FaultPlan::from_json(r#"{"faults": [{"kind": "meteor", "step": 1}]}"#).is_err(),
+            "unknown kind"
+        );
+        assert!(
+            FaultPlan::from_json(r#"{"faults": [{"kind": "crash", "stage": 0, "step": 0}]}"#)
+                .is_err(),
+            "steps are 1-based"
+        );
+        assert!(
+            FaultPlan::from_json(r#"{"faults": [{"kind": "crash", "stage": 0}]}"#).is_err(),
+            "missing step"
+        );
+    }
+
+    #[test]
+    fn sampled_crash_is_deterministic() {
+        let a = FaultPlan::sampled_crash(42, 4, 10).faults();
+        let b = FaultPlan::sampled_crash(42, 4, 10).faults();
+        assert_eq!(a, b);
+        match &a[0] {
+            Fault::Crash { stage, step } => {
+                assert!(*stage < 4 && (1..=10).contains(step));
+            }
+            other => panic!("expected a crash, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn install_scope_nests_and_restores() {
+        // serialize against other tests touching the global registry
+        let p1 = Arc::new(FaultPlan::new(1, vec![]));
+        let p2 = Arc::new(FaultPlan::new(2, vec![]));
+        let g1 = install(p1.clone());
+        assert_eq!(installed().unwrap().seed, 1);
+        {
+            let _g2 = install(p2);
+            assert_eq!(installed().unwrap().seed, 2);
+        }
+        assert_eq!(installed().unwrap().seed, 1, "inner scope restored the outer plan");
+        drop(g1);
+    }
+}

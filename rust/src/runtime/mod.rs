@@ -24,17 +24,25 @@
 //! the steady-state training step allocation-free on the sim backend and
 //! map onto immediate device-buffer release on PJRT.  See
 //! `docs/ARCHITECTURE.md` § "Buffer lifecycle & donation".
+//!
+//! [`fault::FaultyBackend`] wraps any backend with deterministic,
+//! seeded fault injection (crash / panic / transient execute / channel
+//! stall / HBM cap reduction per [`fault::FaultPlan`]) — the chaos half
+//! of the supervised recovery runtime in [`crate::coordinator`].  See
+//! `docs/ARCHITECTURE.md` § "Failure domains & recovery".
 
 pub mod artifact;
 pub mod backend;
 pub mod buffer_pool;
 #[cfg(feature = "pjrt")]
 pub mod engine;
+pub mod fault;
 pub mod sim_backend;
 
 pub use artifact::{ArtifactMeta, Manifest, TensorMeta};
 pub use backend::{Arg, ArgVal, Backend, HostTensor};
 pub use buffer_pool::BufferPool;
+pub use fault::{Fault, FaultPlan, FaultyBackend, InjectedFault};
 #[cfg(feature = "pjrt")]
 pub use engine::{Executable, Runtime};
 pub use sim_backend::{SimBackend, UnpooledSimBackend};

@@ -1,0 +1,463 @@
+//! Chaos suite for the fault-tolerant training runtime: deterministic
+//! fault injection ([`FaultPlan`] via [`FaultyBackend`]) against the
+//! supervisor's checkpoint–re-plan–resume loop.
+//!
+//! The headline property: **recovery is exact**.  For every schedule
+//! family × rebalance plan, a run crashed at step k and supervised back
+//! to health produces losses AND final weights bit-identical to the
+//! uninterrupted run — including when an HBM-cap fault forced a re-plan
+//! onto tighter per-stage bounds mid-run (BPipe eviction is pure data
+//! movement, so the re-planned trajectory is still the same
+//! computation).  And the runtime never hangs: silent peers surface as
+//! typed channel timeouts, infeasible re-plans and exhausted restart
+//! budgets abort with a structured [`FailureReport`].
+//!
+//! Fault plans install into a process-global registry, so every test
+//! here serializes on one lock.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use bpipe::coordinator::{
+    plan_schedule, supervise, train, FailureCause, FailureReport, RebalancePlan, RecoveryEvent,
+    StageCheckpoint, SuperviseConfig, SuperviseOutcome, TrainConfig,
+};
+use bpipe::runtime::{Fault, FaultPlan, FaultyBackend, Manifest, SimBackend};
+use bpipe::schedule::Family;
+
+type FB = FaultyBackend<SimBackend>;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// The synthetic model under test: `stages` virtual stages, h=16, s=8,
+/// b=2, vocab 64 — the same shape the runtime integration suite trains.
+fn cfg(stages: u64, steps: u64) -> TrainConfig {
+    TrainConfig {
+        manifest: Some(Manifest::synthetic(stages, 16, 8, 2, 64, &[1, 2])),
+        steps,
+        microbatches: 4,
+        lr: 2e-3,
+        seed: 7,
+        checkpoint_every: 1,
+        ..TrainConfig::default()
+    }
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bpipe-chaos-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn scfg(train: TrainConfig, faults: FaultPlan) -> SuperviseConfig {
+    SuperviseConfig {
+        train,
+        faults: Some(Arc::new(faults)),
+        max_restarts: 3,
+        recover_timeout: Some(Duration::from_millis(2000)),
+        backoff_base_ms: 1,
+        log: false,
+    }
+}
+
+/// Load every virtual stage's newest checkpoint from `dir`.
+fn checkpoints(dir: &Path, manifest: &Manifest) -> Vec<StageCheckpoint> {
+    (0..manifest.spec.stages)
+        .map(|virt| {
+            let n = manifest.param_count(manifest.stage_kind(virt)).unwrap() as usize;
+            StageCheckpoint::load(dir, virt, n)
+                .unwrap_or_else(|e| panic!("loading stage {virt} from {dir:?}: {e}"))
+        })
+        .collect()
+}
+
+fn assert_same_weights(got: &[StageCheckpoint], want: &[StageCheckpoint]) {
+    assert_eq!(got.len(), want.len());
+    for (virt, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        assert_eq!(g.params, w.params, "stage {virt} params diverged");
+        assert_eq!(g.m, w.m, "stage {virt} Adam m diverged");
+        assert_eq!(g.v, w.v, "stage {virt} Adam v diverged");
+    }
+}
+
+fn failure_causes(outcome: &SuperviseOutcome) -> Vec<FailureCause> {
+    outcome
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            RecoveryEvent::Failure { report, .. } => Some(report.cause),
+            _ => None,
+        })
+        .collect()
+}
+
+fn no_divergence(outcome: &SuperviseOutcome) {
+    assert!(
+        !outcome
+            .events
+            .iter()
+            .any(|e| matches!(e, RecoveryEvent::ReplayDivergence { .. })),
+        "replayed steps must land bit-identically: {:?}",
+        outcome.events
+    );
+}
+
+/// THE chaos matrix: every family × {off, uniform, per-stage} rebalance,
+/// crashed at every step k, recovers to losses and weights bit-identical
+/// to the uninterrupted baseline.
+#[test]
+fn crash_recovery_is_bit_identical_across_families_and_plans() {
+    let _g = lock();
+    let steps = 3u64;
+
+    // all five families share the 8-virtual-stage computation, so ONE
+    // uninterrupted run is the baseline for every cell
+    let base_dir = tmp("crash-base");
+    let mut base = cfg(8, steps);
+    base.checkpoint_dir = Some(base_dir.clone());
+    let baseline = train::<SimBackend>(&base).unwrap();
+    let manifest = base.manifest.clone().unwrap();
+    let want_weights = checkpoints(&base_dir, &manifest);
+
+    let families = [
+        Family::OneFOneB,
+        Family::GPipe,
+        Family::Interleaved { v: 2 },
+        Family::VShaped,
+        Family::ZigZag { v: 4 },
+    ];
+    for family in families {
+        let p = 8 / family.chunks();
+        // natural per-stage stash high-waters → safe non-trivial bounds
+        let natural: Vec<u64> = plan_schedule(family, p, 4, &RebalancePlan::Off)
+            .1
+            .iter()
+            .map(|&c| c as u64)
+            .collect();
+        let peak = *natural.iter().max().unwrap();
+        let mut per_stage: Vec<u64> = natural.iter().map(|&c| c.max(2)).collect();
+        let peak_at = natural.iter().position(|&c| c == peak).unwrap();
+        per_stage[peak_at] = (peak - 1).max(2);
+        let plans = [
+            RebalancePlan::Off,
+            RebalancePlan::Uniform { bound: Some((peak - 1).max(2)) },
+            RebalancePlan::PerStage { bounds: per_stage },
+        ];
+        for (pi, plan) in plans.iter().enumerate() {
+            for k in 1..=steps {
+                let dir = tmp(&format!("crash-{family:?}-{pi}-{k}"));
+                let mut c = cfg(8, steps);
+                c.family = family;
+                c.rebalance = plan.clone();
+                c.checkpoint_dir = Some(dir.clone());
+                let crash = FaultPlan::new(7, vec![Fault::Crash { stage: p / 2, step: k }]);
+                let outcome = supervise::<FB>(&scfg(c, crash))
+                    .unwrap_or_else(|e| panic!("{family:?} plan {pi} k={k}: {e:#}"));
+
+                assert_eq!(outcome.restarts, 1, "{family:?} plan {pi} k={k}");
+                assert_eq!(
+                    failure_causes(&outcome),
+                    vec![FailureCause::InjectedCrash],
+                    "{family:?} plan {pi} k={k}"
+                );
+                no_divergence(&outcome);
+                assert_eq!(
+                    outcome.losses, baseline.losses,
+                    "{family:?} plan {pi} crash at k={k}: recovered losses diverged"
+                );
+                assert_same_weights(&checkpoints(&dir, &manifest), &want_weights);
+                let _ = std::fs::remove_dir_all(&dir);
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&base_dir);
+}
+
+/// A literal worker `panic!` takes the poisoned-join path: the
+/// supervisor classifies it, recovers, and the trajectory is exact.
+#[test]
+fn worker_panic_recovers_bit_identically() {
+    let _g = lock();
+    let baseline = train::<SimBackend>(&cfg(4, 3)).unwrap();
+
+    let dir = tmp("panic");
+    let mut c = cfg(4, 3);
+    c.checkpoint_dir = Some(dir.clone());
+    let faults = FaultPlan::new(7, vec![Fault::Panic { stage: 1, step: 2 }]);
+    let outcome = supervise::<FB>(&scfg(c, faults)).unwrap();
+    assert_eq!(outcome.restarts, 1);
+    assert_eq!(failure_causes(&outcome), vec![FailureCause::WorkerPanic]);
+    assert_eq!(outcome.losses, baseline.losses);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A stage that goes silent must surface as a typed channel TIMEOUT on
+/// its neighbors — never a hang — and the run still recovers exactly.
+#[test]
+fn channel_stall_times_out_instead_of_hanging() {
+    let _g = lock();
+    let baseline = train::<SimBackend>(&cfg(4, 3)).unwrap();
+
+    let dir = tmp("stall");
+    let mut c = cfg(4, 3);
+    c.checkpoint_dir = Some(dir.clone());
+    let faults =
+        FaultPlan::new(7, vec![Fault::ChannelStall { stage: 1, step: 2, stall_ms: 1500 }]);
+    let mut s = scfg(c, faults);
+    s.recover_timeout = Some(Duration::from_millis(250));
+    let t0 = std::time::Instant::now();
+    let outcome = supervise::<FB>(&s).unwrap();
+    assert!(
+        t0.elapsed() < Duration::from_secs(20),
+        "stall recovery took {:?} — deadline detection is not working",
+        t0.elapsed()
+    );
+    assert_eq!(outcome.restarts, 1);
+    assert!(
+        matches!(failure_causes(&outcome)[..], [FailureCause::ChannelTimeout { .. }]),
+        "silence must classify as a timeout, got {:?}",
+        failure_causes(&outcome)
+    );
+    assert_eq!(outcome.losses, baseline.losses);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The feeder has no backend; its stall hook lives in the pipeline's
+/// feed loop and must trip the first stage's receive deadline.
+#[test]
+fn feeder_stall_times_out_instead_of_hanging() {
+    let _g = lock();
+    let baseline = train::<SimBackend>(&cfg(4, 3)).unwrap();
+
+    let dir = tmp("feeder-stall");
+    let mut c = cfg(4, 3);
+    c.checkpoint_dir = Some(dir.clone());
+    let faults = FaultPlan::new(7, vec![Fault::FeederStall { step: 2, stall_ms: 1500 }]);
+    let mut s = scfg(c, faults);
+    s.recover_timeout = Some(Duration::from_millis(250));
+    let outcome = supervise::<FB>(&s).unwrap();
+    assert_eq!(outcome.restarts, 1);
+    assert!(
+        matches!(failure_causes(&outcome)[..], [FailureCause::ChannelTimeout { .. }]),
+        "got {:?}",
+        failure_causes(&outcome)
+    );
+    assert_eq!(outcome.losses, baseline.losses);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Transient execute failures within the retry budget are absorbed IN
+/// PLACE: zero restarts, the retries counted, numerics untouched.
+#[test]
+fn transient_exec_failures_retry_in_place() {
+    let _g = lock();
+    let baseline = train::<SimBackend>(&cfg(4, 3)).unwrap();
+
+    let dir = tmp("transient");
+    let mut c = cfg(4, 3);
+    c.checkpoint_dir = Some(dir.clone());
+    c.retry_budget = 3;
+    c.retry_backoff_ms = 1;
+    let faults =
+        FaultPlan::new(7, vec![Fault::TransientExec { stage: 1, step: 2, failures: 2 }]);
+    let outcome = supervise::<FB>(&scfg(c, faults)).unwrap();
+    assert_eq!(outcome.restarts, 0, "transients within budget must not restart");
+    assert_eq!(outcome.retried_executes, 2);
+    assert!(failure_causes(&outcome).is_empty());
+    assert_eq!(outcome.losses, baseline.losses);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Transients beyond the in-place budget escalate to a restart — and the
+/// consumed budget means the replay gets through.
+#[test]
+fn transient_exec_budget_exhaustion_escalates_to_restart() {
+    let _g = lock();
+    let baseline = train::<SimBackend>(&cfg(4, 3)).unwrap();
+
+    let dir = tmp("transient-exhaust");
+    let mut c = cfg(4, 3);
+    c.checkpoint_dir = Some(dir.clone());
+    c.retry_budget = 1;
+    c.retry_backoff_ms = 1;
+    let faults =
+        FaultPlan::new(7, vec![Fault::TransientExec { stage: 1, step: 2, failures: 3 }]);
+    let outcome = supervise::<FB>(&scfg(c, faults)).unwrap();
+    assert_eq!(outcome.restarts, 1);
+    assert_eq!(failure_causes(&outcome), vec![FailureCause::ExecRetriesExhausted]);
+    assert_eq!(outcome.losses, baseline.losses);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A mid-run HBM cap reduction triggers a RE-PLAN: the supervisor
+/// derives tighter per-stage bounds that fit the surviving capacity,
+/// the static analyzer accepts them, and the resumed (rebalanced) run
+/// still matches the baseline bit for bit.
+#[test]
+fn hbm_cap_reduction_replans_and_stays_bit_identical() {
+    let _g = lock();
+    // small activations so the arithmetic is exact: h=8, s=4, b=1 →
+    // a mid-stage stash entry is 1×4×8×4 = 128 B; a 256 B cap fits 2
+    let mk = || TrainConfig {
+        manifest: Some(Manifest::synthetic(4, 8, 4, 1, 64, &[1, 2])),
+        steps: 3,
+        microbatches: 6,
+        lr: 2e-3,
+        seed: 7,
+        checkpoint_every: 1,
+        ..TrainConfig::default()
+    };
+    let baseline = train::<SimBackend>(&mk()).unwrap();
+
+    let dir = tmp("hbm");
+    let mut c = mk();
+    c.checkpoint_dir = Some(dir.clone());
+    let faults =
+        FaultPlan::new(7, vec![Fault::HbmCap { stage: 1, step: 2, cap_bytes: 256 }]);
+    let outcome = supervise::<FB>(&scfg(c, faults)).unwrap();
+
+    assert_eq!(outcome.restarts, 1);
+    assert_eq!(
+        failure_causes(&outcome),
+        vec![FailureCause::HbmPressure { cap_bytes: 256 }]
+    );
+    let replan = outcome
+        .events
+        .iter()
+        .find_map(|e| match e {
+            RecoveryEvent::Replan { stage, cap_bytes, bounds, accepted } => {
+                Some((*stage, *cap_bytes, bounds.clone(), *accepted))
+            }
+            _ => None,
+        })
+        .expect("an HBM fault must produce a re-plan event");
+    assert_eq!(replan.0, 1);
+    assert_eq!(replan.1, 256);
+    assert!(replan.3, "the analyzer must accept the derived plan");
+    assert_eq!(replan.2[1], 2, "the pressured stage is capped at what fits: {:?}", replan.2);
+    // the resumed run actually honors the tighter bound…
+    assert!(
+        outcome.result.stage_stats[1].stash_high_water <= 2,
+        "stage 1 high-water {} exceeds the re-planned bound",
+        outcome.result.stage_stats[1].stash_high_water
+    );
+    // …and rebalancing under pressure never changes the computation
+    no_divergence(&outcome);
+    assert_eq!(outcome.losses, baseline.losses, "re-planned run diverged from baseline");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// When the surviving capacity can't hold even the BPipe floor of two
+/// stash entries, there is no feasible plan: the supervisor aborts with
+/// a structured report (nonzero-exit territory), it does not retry or
+/// hang.
+#[test]
+fn infeasible_hbm_cap_aborts_with_structured_report() {
+    let _g = lock();
+    let dir = tmp("hbm-infeasible");
+    let mut c = TrainConfig {
+        manifest: Some(Manifest::synthetic(4, 8, 4, 1, 64, &[1, 2])),
+        steps: 3,
+        microbatches: 6,
+        lr: 2e-3,
+        seed: 7,
+        checkpoint_every: 1,
+        ..TrainConfig::default()
+    };
+    c.checkpoint_dir = Some(dir.clone());
+    let faults =
+        FaultPlan::new(7, vec![Fault::HbmCap { stage: 1, step: 2, cap_bytes: 100 }]);
+    let err = supervise::<FB>(&scfg(c, faults)).expect_err("100 B fits < 2 entries");
+    let report = err
+        .chain()
+        .find_map(|e| e.downcast_ref::<FailureReport>())
+        .expect("terminal aborts carry a FailureReport");
+    assert_eq!(report.cause, FailureCause::NoFeasiblePlan);
+    assert!(report.detail.contains("floor of 2"), "{}", report.detail);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// An exhausted restart budget is the other terminal condition: the
+/// abort names the LAST failure and the budget that ran out.
+#[test]
+fn exhausted_restart_budget_aborts() {
+    let _g = lock();
+    let dir = tmp("budget");
+    let mut c = cfg(4, 3);
+    c.checkpoint_dir = Some(dir.clone());
+    let faults = FaultPlan::new(7, vec![Fault::Crash { stage: 1, step: 1 }]);
+    let mut s = scfg(c, faults);
+    s.max_restarts = 0;
+    let err = supervise::<FB>(&s).expect_err("no restarts allowed");
+    let report = err
+        .chain()
+        .find_map(|e| e.downcast_ref::<FailureReport>())
+        .expect("terminal aborts carry a FailureReport");
+    assert_eq!(report.cause, FailureCause::RestartsExhausted);
+    assert!(report.detail.contains("injected"), "{}", report.detail);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Two faults in one plan: the supervisor survives a crash AND a later
+/// stall in the same run, one restart each, exact to the baseline.
+#[test]
+fn sequential_faults_recover_one_restart_each() {
+    let _g = lock();
+    let baseline = train::<SimBackend>(&cfg(4, 4)).unwrap();
+
+    let dir = tmp("sequential");
+    let mut c = cfg(4, 4);
+    c.checkpoint_dir = Some(dir.clone());
+    let faults = FaultPlan::new(
+        7,
+        vec![
+            Fault::Crash { stage: 2, step: 2 },
+            Fault::ChannelStall { stage: 1, step: 3, stall_ms: 1200 },
+        ],
+    );
+    let mut s = scfg(c, faults);
+    s.recover_timeout = Some(Duration::from_millis(250));
+    let outcome = supervise::<FB>(&s).unwrap();
+    assert_eq!(outcome.restarts, 2);
+    let causes = failure_causes(&outcome);
+    assert_eq!(causes.len(), 2, "{causes:?}");
+    assert_eq!(causes[0], FailureCause::InjectedCrash);
+    assert!(matches!(causes[1], FailureCause::ChannelTimeout { .. }), "{causes:?}");
+    assert_eq!(outcome.losses, baseline.losses);
+    // recovery telemetry: every restart closed a time-to-recover window
+    assert_eq!(outcome.time_to_recover_s.len(), 2);
+    assert!(outcome.time_to_recover_s.iter().all(|&t| t >= 0.0));
+    assert!(outcome.steps_lost >= 1, "a crash at step 2 replays ≥ 1 step");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Recovery events render as grep-able structured lines — the contract
+/// the CI chaos leg's log artifact relies on.
+#[test]
+fn recovery_log_lines_are_structured() {
+    let _g = lock();
+    let dir = tmp("log-lines");
+    let mut c = cfg(4, 3);
+    c.checkpoint_dir = Some(dir.clone());
+    let faults = FaultPlan::new(7, vec![Fault::Crash { stage: 1, step: 2 }]);
+    let outcome = supervise::<FB>(&scfg(c, faults)).unwrap();
+    assert!(!outcome.events.is_empty());
+    for ev in &outcome.events {
+        let line = ev.to_string();
+        assert!(line.starts_with("[bpipe-recover] event="), "{line}");
+    }
+    assert!(
+        outcome.events.iter().any(|e| matches!(e, RecoveryEvent::Resume { .. })),
+        "a recovered run logs its resume"
+    );
+    assert!(
+        matches!(outcome.events.last(), Some(RecoveryEvent::Recovered { .. })),
+        "the last event of a successful run is `recovered`"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
