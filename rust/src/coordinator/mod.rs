@@ -45,7 +45,9 @@ pub use activation_store::{
     spin_recv, spin_recv_deadline, spin_send, spin_send_deadline, ActivationStore, ChannelError,
     HostTensor, Stash, StashKey,
 };
-pub use checkpoint::{latest_common_step, CheckpointMeta, CorruptCheckpoint, StageCheckpoint};
+pub use checkpoint::{
+    latest_common_step, CheckpointMeta, CheckpointWriter, CorruptCheckpoint, StageCheckpoint,
+};
 pub use data::SyntheticCorpus;
 pub use pipeline::{
     plan_schedule, train, train_probed, train_probed_feeder, try_plan_schedule, PlanRejected,

@@ -68,6 +68,14 @@ pub struct TrainConfig {
     /// base schedule family; its chunk count must divide the manifest's
     /// virtual-stage count (`p = stages / chunks`)
     pub family: Family,
+    /// run THIS schedule instead of building one from `family` +
+    /// `rebalance` — the `bpipe train --schedule synth` path, where the
+    /// schedule comes from [`crate::schedule::synthesize`] rather than a
+    /// family generator.  The override is still gated through the static
+    /// analyzer before any thread spawns; its `p`/`m`/`chunks` must
+    /// match the run shape.  `family` and `rebalance` are ignored for
+    /// schedule construction when set.
+    pub schedule_override: Option<Schedule>,
     pub steps: u64,
     /// microbatches per step (global batch = microbatches × artifact b)
     pub microbatches: u64,
@@ -103,6 +111,7 @@ impl Default for TrainConfig {
             artifacts_dir: PathBuf::from("artifacts"),
             manifest: None,
             family: Family::OneFOneB,
+            schedule_override: None,
             steps: 20,
             microbatches: 8,
             lr: 1e-3,
@@ -297,6 +306,36 @@ pub fn try_plan_schedule(
     Ok((schedule, caps))
 }
 
+/// Gate a caller-supplied schedule (the `schedule_override` path) the
+/// same way [`plan_schedule`] gates a generated one: shape checks, then
+/// the full static-analyzer gate, then store capacities from the
+/// realized per-stage stash high-water.  The rebalance plan passed to
+/// the analyzer is `Off` — an override's eviction bounds are already
+/// baked into its programs and `stage_bounds`, so the validator's
+/// stage-bound pass (not a plan cross-check) is what enforces them.
+fn plan_override(s: &Schedule, p: u64, m: u64) -> anyhow::Result<(Schedule, Vec<usize>)> {
+    anyhow::ensure!(
+        s.p == p,
+        "override schedule spans {} stages, run shape needs {p}",
+        s.p
+    );
+    anyhow::ensure!(
+        s.m == m,
+        "override schedule was built for {} microbatches, run feeds {m}",
+        s.m
+    );
+    let chan_caps = crate::analysis::ChannelCaps::for_run(m, s.chunks);
+    if let Err(diags) = crate::analysis::gate_plan(s, &RebalancePlan::Off, &chan_caps) {
+        anyhow::bail!(
+            "override schedule failed static analysis:\n{}",
+            crate::analysis::render_diagnostics(&diags)
+        );
+    }
+    let caps: Vec<usize> =
+        (0..p).map(|st| s.program(st).stash_high_water().max(1) as usize).collect();
+    Ok((s.clone(), caps))
+}
+
 /// Run pipeline-parallel training end to end on backend `B`.  Blocks
 /// until done.
 pub fn train<B: Backend>(cfg: &TrainConfig) -> anyhow::Result<TrainResult> {
@@ -346,7 +385,10 @@ fn train_inner<B: Backend>(
     };
     let vp = manifest.spec.stages;
     let m = cfg.microbatches;
-    let chunks = cfg.family.chunks();
+    let chunks = match &cfg.schedule_override {
+        Some(s) => s.chunks,
+        None => cfg.family.chunks(),
+    };
     anyhow::ensure!(vp >= 2, "pipeline needs at least 2 virtual stages");
     anyhow::ensure!(
         chunks >= 1 && vp % chunks == 0,
@@ -354,7 +396,10 @@ fn train_inner<B: Backend>(
         cfg.family
     );
     let p = vp / chunks;
-    let (schedule, caps) = plan_schedule(cfg.family, p, m, &cfg.rebalance);
+    let (schedule, caps) = match &cfg.schedule_override {
+        Some(s) => plan_override(s, p, m)?,
+        None => plan_schedule(cfg.family, p, m, &cfg.rebalance),
+    };
     debug_assert_eq!(schedule.chunks, chunks);
     let placement = schedule.placement;
     if let Some(Probe::Stage(ps, _)) = &probe {

@@ -39,7 +39,7 @@ use std::time::{Duration, Instant};
 use super::activation_store::{
     spin_recv_deadline, spin_send_deadline, ActivationStore, HostTensor, RemoteStoreClient, Stash,
 };
-use super::checkpoint::StageCheckpoint;
+use super::checkpoint::{CheckpointWriter, StageCheckpoint};
 use super::supervisor;
 use crate::runtime::{Arg, Backend, BufferPool, InjectedFault, Manifest};
 use crate::schedule::{OpKind, Placement, StageProgram};
@@ -242,6 +242,10 @@ pub struct StageRunner<B: Backend> {
     chunks: Vec<ChunkState<B>>,
     stash: ActivationStore,
     pool: BufferPool,
+    /// one per chunk when checkpointing is on (empty otherwise) — holds
+    /// the serialization scratch so a checkpoint step stays
+    /// allocation-free after the first save
+    ckpt_writers: Vec<CheckpointWriter>,
     outs: Vec<HostTensor>,
     step_t: HostTensor,
     lr_t: HostTensor,
@@ -332,11 +336,16 @@ impl<B: Backend> StageRunner<B> {
         // generous free-list bound: every in-flight stash and boundary
         // message of this worker fits with room to spare
         let pool_limit = (4 * cfg.microbatches * cfg.chunks) as usize + 32;
+        let ckpt_writers = match &cfg.checkpoint_dir {
+            Some(dir) => chunks.iter().map(|c| CheckpointWriter::new(dir, c.virt)).collect(),
+            None => Vec::new(),
+        };
         Ok(StageRunner {
             backend,
             chunks,
             stash,
             pool: BufferPool::with_limit(pool_limit),
+            ckpt_writers,
             outs: Vec::with_capacity(4),
             step_t: HostTensor::scalar_i32(0),
             lr_t: HostTensor::scalar_f32(cfg.lr),
@@ -366,6 +375,7 @@ impl<B: Backend> StageRunner<B> {
             chunks,
             stash,
             pool,
+            ckpt_writers,
             outs,
             step_t,
             lr_t,
@@ -625,16 +635,18 @@ impl<B: Backend> StageRunner<B> {
         stats.adam_s += t.elapsed().as_secs_f64();
 
         // checkpoint (atomic; every n steps and always after the last)
-        if let Some(dir) = &cfg.checkpoint_dir {
+        // — writers borrow the host buffers in place and reuse their
+        // serialization scratch, so this adds no steady-state allocs
+        if !ckpt_writers.is_empty() {
             let due = cfg.checkpoint_every > 0 && step % cfg.checkpoint_every == 0;
             if due || step == cfg.steps {
-                for cs in chunks.iter() {
-                    StageCheckpoint {
-                        params: cs.params.f32s()?.to_vec(),
-                        m: cs.m_state.f32s()?.to_vec(),
-                        v: cs.v_state.f32s()?.to_vec(),
-                    }
-                    .save_at(dir, cs.virt, cfg.start_step + step)?;
+                for (cs, w) in chunks.iter().zip(ckpt_writers.iter_mut()) {
+                    w.save(
+                        cfg.start_step + step,
+                        cs.params.f32s()?,
+                        cs.m_state.f32s()?,
+                        cs.v_state.f32s()?,
+                    )?;
                 }
             }
         }

@@ -42,6 +42,7 @@
 //! | Beyond the paper: static schedule/protocol analyzer (deadlock, linearity, bounds) | [`analysis`], `bpipe check` |
 //! | Beyond the paper: deterministic fault injection (crash/stall/transient/HBM-cap) | [`runtime::FaultPlan`], [`runtime::FaultyBackend`], `bpipe train --faults` |
 //! | Beyond the paper: supervised recovery — checkpoint, re-plan under reduced HBM ([`analysis::gate_plan`]), resume | [`coordinator::supervisor`], [`coordinator::latest_common_step`] |
+//! | Beyond the paper: schedule synthesis under per-stage memory caps (found-vs-family frontier) | [`schedule::synthesize()`], [`sim::sweep::frontier_outcomes`], `bpipe check/train --schedule synth`, `bpipe sweep --synth` |
 //!
 //! `docs/ARCHITECTURE.md` has the crate-level data-flow diagram and the
 //! [`runtime::Backend`] boundary; [`sweep_schema`] documents (and

@@ -13,8 +13,9 @@
 //!   frontier; `--csv`/`--json` export every cell;
 //! * `report`                — the replication report: a self-contained
 //!   markdown file with embedded SVG figures (per-stage memory,
-//!   MFU ranking, bound frontier) and the estimator-vs-DES error
-//!   tables, built from sweep outcomes in-process;
+//!   MFU ranking, bound frontier, found-vs-family frontier) and the
+//!   estimator-vs-DES error tables, built from sweep outcomes
+//!   in-process;
 //! * `estimate`              — the §4 Eq. 4 estimator (analytic or from
 //!   real single-stage runtime measurements; the latter needs the `pjrt`
 //!   build feature);
@@ -50,11 +51,15 @@ COMMANDS:
   simulate  [--experiment 1..10 | --config f.cfg] [--bpipe true|false]
             [--timeline]                 simulate one experiment
   sweep     [--experiment 1..10] [--v N] [--threads N]
-            [--bounds] [--skip-oom] [--csv f.csv] [--json f.json]
-                                         rank the experiment x schedule
+            [--bounds | --synth] [--skip-oom]
+            [--csv f.csv] [--json f.json]  rank the experiment x schedule
                                          x layout grid (parallel DES);
                                          --bounds sweeps every rebalance
                                          bound down to the knee instead;
+                                         --synth ranks a synthesized
+                                         schedule against every family
+                                         under a tight per-stage HBM cap
+                                         (the found-vs-family frontier);
                                          --skip-oom settles provably-OOM
                                          cells statically (no DES)
   report    [--experiment 1..10] [--v N] [--threads N]
@@ -66,8 +71,8 @@ COMMANDS:
   memory    [--experiment 1..10]         per-stage memory profile
   schedule  [--p N --m N --kind 1f1b|gpipe|interleaved|vshaped|zigzag]
             [--v N] [--bpipe | --rebalance [--bound K]]
-  check     [--schedule 1f1b|gpipe|interleaved|vshaped|zigzag --v N]
-            [--p N --m N]
+  check     [--schedule 1f1b|gpipe|interleaved|vshaped|zigzag|synth --v N]
+            [--p N --m N] [--cap-gib G]
             [--rebalance [--bound K] | --stage-bounds a,b,..
              | --capacity [--experiment 1..10]]
             [--hot-cap N --feed-cap N] [--json]
@@ -78,7 +83,8 @@ COMMANDS:
                                          all 15 ranking-grid scenarios;
                                          exits 1 on error findings
   train     [--backend sim|pjrt] [--artifacts DIR]
-            [--schedule 1f1b|gpipe|interleaved|vshaped|zigzag --v N]
+            [--schedule 1f1b|gpipe|interleaved|vshaped|zigzag|synth --v N]
+            [--cap-gib G]
             [--bpipe | --rebalance [--bound K] | --stage-bounds a,b,..]
             [--steps N --microbatches M --lr F --p N] [--seed N]
             [--log-every N] [--checkpoint-dir D --checkpoint-every N]
@@ -172,6 +178,27 @@ fn parse_family(kind: &str, v: u64) -> anyhow::Result<bpipe::schedule::Family> {
             "unknown schedule kind {other:?} (1f1b|gpipe|interleaved|vshaped|zigzag)"
         ),
     })
+}
+
+/// Build a synthesized schedule for the `--schedule synth` paths: the
+/// per-stage memory caps are uniform at `--cap-gib` GiB (default: 90% of
+/// the `--experiment` cluster's HBM), the cost model is the experiment
+/// reshaped to pipeline depth `p`.  Returns the schedule and the byte
+/// cap it was synthesized under.
+fn synth_schedule(args: &Args, p: u64, m: u64) -> anyhow::Result<(bpipe::schedule::Schedule, u64)> {
+    let mut e = experiment_or_exit(args.get("experiment", 8u32)?);
+    e.parallel.p = p;
+    let cap = match args.opt("cap-gib") {
+        Some(g) => {
+            let gib: f64 = g.parse().map_err(|err| anyhow::anyhow!("--cap-gib {g:?}: {err}"))?;
+            (gib * (1u64 << 30) as f64) as u64
+        }
+        None => e.cluster.hbm_bytes / 10 * 9,
+    };
+    let cost = sim::CostModel::new(&e);
+    let s = bpipe::schedule::try_synthesize(p, m, &vec![cap; p as usize], &cost)
+        .map_err(|err| anyhow::anyhow!("schedule synthesis failed: {err}"))?;
+    Ok((s, cap))
 }
 
 /// Shared result reporting for `bpipe train` on any backend.
@@ -412,9 +439,34 @@ fn main() -> anyhow::Result<()> {
             }
         }
         "sweep" => {
-            let args = Args::parse(rest, &["bounds", "skip-oom"])?;
+            let args = Args::parse(rest, &["bounds", "skip-oom", "synth"])?;
             let v = args.get("v", 2u64)?;
             let threads = args.get("threads", 0usize)?;
+            if args.opt("synth").is_some() {
+                // found-vs-family frontier: every family scenario plus a
+                // synthesized cell, all under a tight per-stage HBM cap
+                let e = experiment_or_exit(args.get("experiment", 8u32)?);
+                let t0 = std::time::Instant::now();
+                let (cap, outcomes) = sim::frontier_outcomes(&e, v, threads);
+                let dt = t0.elapsed();
+                print!("{}", sim::render_sweep(&outcomes));
+                if let Some(path) = args.opt("csv") {
+                    std::fs::write(path, sim::sweep_to_csv(&outcomes))?;
+                    println!("wrote {} CSV rows to {path}", outcomes.len());
+                }
+                if let Some(path) = args.opt("json") {
+                    std::fs::write(path, sim::sweep_to_json(&outcomes).to_string())?;
+                    println!("wrote {} JSON records to {path}", outcomes.len());
+                }
+                println!(
+                    "\nfound-vs-family frontier: {} cells at a {:.1} GiB/stage cap \
+                     in {:.2}s",
+                    outcomes.len(),
+                    cap as f64 / (1u64 << 30) as f64,
+                    dt.as_secs_f64()
+                );
+                return Ok(());
+            }
             let bounds_mode = args.opt("bounds").is_some();
             let tasks = match (bounds_mode, args.opt("experiment")) {
                 (false, Some(id)) => sim::experiment_tasks(&experiment_or_exit(id.parse()?), v),
@@ -569,6 +621,14 @@ fn main() -> anyhow::Result<()> {
                             (spec.name().to_string(), s, plan)
                         })
                         .collect()
+                } else if args.opt("schedule") == Some("synth") {
+                    // synthesized under per-stage byte caps; eviction
+                    // bounds are baked into the programs + stage_bounds,
+                    // so the plan side is Off
+                    let p = args.get("p", 4u64)?;
+                    let m = args.get("m", 8u64)?;
+                    let (s, _cap) = synth_schedule(&args, p, m)?;
+                    vec![("synthesized".to_string(), s, RebalancePlan::Off)]
                 } else {
                     let family = parse_family(args.opt("schedule").unwrap_or("1f1b"), v)?;
                     if args.opt("capacity").is_some() {
@@ -702,7 +762,13 @@ fn main() -> anyhow::Result<()> {
             use bpipe::coordinator::RebalancePlan;
             let args = Args::parse(rest, &["bpipe", "rebalance", "resume"])?;
             let v = args.get("v", 2u64)?;
-            let family = parse_family(args.opt("schedule").unwrap_or("1f1b"), v)?;
+            let kind = args.opt("schedule").unwrap_or("1f1b");
+            let synth = kind == "synth";
+            // a synthesized run still carries a family for bookkeeping
+            // (chunks 1, like synthesized schedules); the override below
+            // bypasses its planner entirely
+            let family =
+                if synth { bpipe::schedule::Family::OneFOneB } else { parse_family(kind, v)? };
             let rebalance = if let Some(bs) = args.opt("stage-bounds") {
                 let bounds = bs
                     .split(',')
@@ -727,6 +793,7 @@ fn main() -> anyhow::Result<()> {
                 artifacts_dir: artifacts.clone(),
                 manifest: None,
                 family,
+                schedule_override: None,
                 steps: args.get("steps", 20u64)?,
                 microbatches: args.get("microbatches", 8u64)?,
                 lr: args.get("lr", 1e-3f32)?,
@@ -741,6 +808,18 @@ fn main() -> anyhow::Result<()> {
                 retry_backoff_ms: args.get("retry-backoff-ms", 10u64)?,
                 progress: None,
             };
+            if synth {
+                let p = args.get("p", 4u64)?;
+                let (s, cap) = synth_schedule(&args, p, cfg.microbatches)?;
+                println!(
+                    "synthesized schedule: p={p} m={}, {:.1} GiB/stage cap, \
+                     stash budgets {:?}",
+                    cfg.microbatches,
+                    cap as f64 / (1u64 << 30) as f64,
+                    s.stage_bounds.clone().unwrap_or_default()
+                );
+                cfg.schedule_override = Some(s);
+            }
             let supervised = ["faults", "max-restarts", "recover-timeout-ms"]
                 .iter()
                 .any(|f| args.opt(f).is_some());

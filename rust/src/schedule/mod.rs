@@ -16,6 +16,9 @@
 //!   is the `v = 2` case of: chunks alternate direction down the pipe
 //!   (`v = 4` is the W-shaped placement of the controllable-memory
 //!   paper's Figure 5 family);
+//! * [`synthesize()`] — not a fixed family at all: searches
+//!   warmup-depth schedules (plus a family portfolio) under per-stage
+//!   memory caps, scored by the DES cost model;
 //! * [`crate::bpipe::rebalance()`] — the schedule-agnostic memory
 //!   rebalancing transform (BPipe generalized beyond 1F1B), inserting
 //!   activation Evict/Load ops keyed by `(mb, chunk)`;
@@ -29,6 +32,7 @@
 pub mod gpipe;
 pub mod interleaved;
 pub mod one_f_one_b;
+pub mod synthesize;
 pub mod v_shaped;
 pub mod validate;
 pub mod zigzag;
@@ -36,6 +40,7 @@ pub mod zigzag;
 pub use gpipe::gpipe;
 pub use interleaved::interleaved;
 pub use one_f_one_b::one_f_one_b;
+pub use synthesize::{stash_count_caps, synthesize, try_synthesize, SynthesisError};
 pub use v_shaped::v_shaped;
 pub use validate::{validate, ValidationError};
 pub use zigzag::zigzag;
@@ -197,6 +202,12 @@ pub enum ScheduleKind {
     /// every stage's own resident stash count ≤ `bound` (or, when
     /// [`Schedule::stage_bounds`] is set, ≤ that stage's own bound).
     BPipe { bound: u64 },
+    /// Found by [`synthesize()`] rather than generated from a family:
+    /// searched warmup-depth (W) schedules competing against a family
+    /// portfolio under per-stage memory caps.  Always paired with
+    /// `stage_bounds: Some(stash budgets)` so the caps it was
+    /// synthesized under stay machine-enforced downstream.
+    Synthesized,
 }
 
 /// How virtual-pipeline chunks map onto physical stages — the forward

@@ -1,0 +1,409 @@
+//! Schedule **synthesis**: search the schedule space under per-stage
+//! memory caps instead of enumerating the five hand-written families
+//! (ROADMAP open item 1; cf. *Pipeline Parallelism with Controllable
+//! Memory* and *OptPipe*, which cast pipeline scheduling as a
+//! memory-constrained optimization problem).
+//!
+//! [`synthesize`] takes per-stage **byte** caps (heterogeneous clusters
+//! fall out for free — a tighter cap on one stage just shrinks that
+//! stage's stash budget) and returns the best schedule it can prove
+//! feasible:
+//!
+//! 1. **Caps → stash budgets.**  Each stage's byte cap is converted to a
+//!    resident-stash count via the [`MemoryModel`]:
+//!    `counts[s] = (cap[s] − weights/opt − reserved) / act_per_mb`.
+//!    A stage that cannot hold even one stash is a hard
+//!    [`SynthesisError::Infeasible`] — no schedule exists.
+//! 2. **Seed.**  A warmup-depth vector `W` (the list-scheduling lower
+//!    bound): stage `s` runs `W_s` forwards before its first backward,
+//!    then strict 1F1B steady state.  `W_s = min(p−1−s, m, counts[s]−1,
+//!    W_{s−1})` — clipped to the stash budget and kept nonincreasing
+//!    down the pipe.  Nonincreasing pure-compute W-schedules are
+//!    deadlock-free under the channel-capacity protocol model (verified
+//!    exhaustively for small shapes and by the mirrored property suite
+//!    in `tests/property_synthesis.rs`); *increasing* depth vectors can
+//!    deadlock, which is why [`project`] re-imposes monotonicity after
+//!    every move.
+//! 3. **Local search.**  First-improvement hill climbing over `W`
+//!    (±1 shifts per stage, projected back into the feasible cone),
+//!    scored by the zero-alloc DES — one [`SimWorkspace`] reused across
+//!    every candidate, `trace` off.  Every candidate is
+//!    validator-clean *by construction* (projection keeps it inside the
+//!    proven-deadlock-free cone), so the search loop never simulates an
+//!    invalid schedule.
+//! 4. **Family portfolio.**  The searched winner competes against the
+//!    known families (1F1B, GPipe, and a uniformly rebalanced 1F1B at
+//!    the largest bound the caps admit).  Portfolio candidates are
+//!    pruned with [`static_bounds`] first — a stage whose *own*
+//!    program-order high-water (`lo`, a sound lower bound on the DES
+//!    peak) already exceeds its stash budget is provably OOM and is
+//!    skipped without simulating — then DES-scored and kept only if the
+//!    *dynamic* per-stage stash high-water (own + accepted transfers,
+//!    in-flight evictions included) fits the budget.
+//!
+//! The returned schedule carries `kind:`[`ScheduleKind::Synthesized`]
+//! and `stage_bounds: Some(counts)`, so the validator, the
+//! `analysis::check_plan` gate and the linearity checker all enforce
+//! the caps it was synthesized under.  `tests/property_synthesis.rs`
+//! fuzzes this contract over ≥300 mirrored-seed shapes;
+//! `tests/golden_engine.rs` pins the exp-8 tight-cap winner, and
+//! `tests/estimator_differential.rs` brackets it against the paper's
+//! Eq.3/Eq.4 estimator.
+
+use std::fmt;
+
+use super::{gpipe, one_f_one_b, validate, Op, Placement, Schedule, ScheduleKind, StageProgram};
+use crate::analysis::bounds::static_bounds;
+use crate::bpipe::{derived_bound, pair_adjacent_layout, rebalance, sequential_layout, Layout};
+use crate::config::ExperimentConfig;
+use crate::model::memory::MemoryModel;
+use crate::sim::{CostModel, SimOptions, SimWorkspace};
+
+/// Why no schedule could be synthesized under the requested caps.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SynthesisError {
+    /// `per_stage_mem_caps.len()` does not match the pipeline depth.
+    CapsLen { expected: u64, got: usize },
+    /// The [`CostModel`]'s experiment is configured for a different
+    /// pipeline depth — the weight/activation split would be wrong.
+    DepthMismatch { requested: u64, experiment: u64 },
+    /// Stage `stage` cannot hold even one activation stash: its cap is
+    /// below weights+optimizer+reserved+one microbatch of activations.
+    Infeasible { stage: u64, cap_bytes: u64, floor_bytes: u64 },
+}
+
+impl fmt::Display for SynthesisError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SynthesisError::CapsLen { expected, got } => {
+                write!(f, "expected {expected} per-stage caps, got {got}")
+            }
+            SynthesisError::DepthMismatch { requested, experiment } => write!(
+                f,
+                "synthesize(p = {requested}) against a cost model configured for p = {experiment}"
+            ),
+            SynthesisError::Infeasible { stage, cap_bytes, floor_bytes } => write!(
+                f,
+                "stage {stage} cannot hold one activation stash: cap {cap_bytes} B < \
+                 weights+opt+reserved+1 stash = {floor_bytes} B"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SynthesisError {}
+
+/// Convert per-stage **byte** caps into per-stage resident-stash
+/// budgets: `counts[s] = (cap[s] − weight_opt(s) − reserved) / act`.
+/// The DES charges exactly `weight_opt + reserved + stash·act` per
+/// stage, so `stash ≤ counts[s]` is equivalent to staying under the
+/// byte cap.  Errs if any stage cannot hold a single stash.
+pub fn stash_count_caps(
+    e: &ExperimentConfig,
+    per_stage_mem_caps: &[u64],
+) -> Result<Vec<u64>, SynthesisError> {
+    let p = e.parallel.p;
+    if per_stage_mem_caps.len() != p as usize {
+        return Err(SynthesisError::CapsLen { expected: p, got: per_stage_mem_caps.len() });
+    }
+    let mm = MemoryModel::new(e);
+    let act = mm.activation_bytes_per_microbatch(0);
+    (0..p)
+        .map(|s| {
+            let fixed = mm.weight_opt_bytes(s) + e.cluster.reserved_bytes;
+            let count = per_stage_mem_caps[s as usize].saturating_sub(fixed) / act;
+            if count == 0 {
+                Err(SynthesisError::Infeasible {
+                    stage: s,
+                    cap_bytes: per_stage_mem_caps[s as usize],
+                    floor_bytes: fixed + act,
+                })
+            } else {
+                Ok(count)
+            }
+        })
+        .collect()
+}
+
+/// Build the warmup-depth schedule for depth vector `w`: stage `s` runs
+/// `min(W_s, m)` forwards, then alternates Fwd/Bwd (1F1B steady state),
+/// then drains the remaining backwards.  `w` nonincreasing with
+/// `W_s ≤ p−1−s` generalizes both 1F1B (`W_s = p−1−s`) and GPipe-at-
+/// no-memory (`W = 0`, fully serialized).  Stash high-water is
+/// `min(W_s + 1, m)` — the `+1` is the in-flight steady-state stash.
+fn w_schedule(p: u64, m: u64, w: &[u64]) -> Schedule {
+    let programs = (0..p)
+        .map(|s| {
+            let warm = w[s as usize].min(m);
+            let mut ops = Vec::with_capacity(2 * m as usize);
+            for mb in 0..warm {
+                ops.push(Op::fwd(mb));
+            }
+            for i in 0..m - warm {
+                ops.push(Op::fwd(warm + i));
+                ops.push(Op::bwd(i));
+            }
+            for mb in m - warm..m {
+                ops.push(Op::bwd(mb));
+            }
+            StageProgram { stage: s, ops }
+        })
+        .collect();
+    Schedule {
+        p,
+        m,
+        chunks: 1,
+        placement: Placement::Sequential,
+        kind: ScheduleKind::Synthesized,
+        stage_bounds: None,
+        programs,
+    }
+}
+
+/// Clip a depth vector into the feasible cone, left to right:
+/// `W_s ← min(W_s, p−1−s, m, counts[s]−1, W_{s−1})`.  The `counts[s]−1`
+/// term keeps the steady-state high-water (`W_s + 1`) within the stash
+/// budget; the running minimum keeps the vector nonincreasing (the
+/// deadlock-freedom precondition).
+fn project(p: u64, m: u64, counts: &[u64], w: &[u64]) -> Vec<u64> {
+    let mut out = Vec::with_capacity(p as usize);
+    let mut prev = u64::MAX;
+    for s in 0..p {
+        let ws = w[s as usize].min(p - 1 - s).min(m).min(counts[s as usize] - 1).min(prev);
+        out.push(ws);
+        prev = ws;
+    }
+    out
+}
+
+/// The list-scheduling seed: the deepest feasible warmup per stage.
+fn seed_w(p: u64, m: u64, counts: &[u64]) -> Vec<u64> {
+    project(p, m, counts, &vec![u64::MAX; p as usize])
+}
+
+/// Family candidates the searched schedule must beat: plain 1F1B and
+/// GPipe (free when the caps are loose), and 1F1B uniformly rebalanced
+/// at the largest bound the caps admit.  The rebalance bound is
+/// `min(counts) − 1` — the DES parks an evicted stash until its
+/// *transfer* completes, so an evictor's dynamic high-water overshoots
+/// the program-order bound by one — clipped to the pair-mean
+/// [`derived_bound`] the transform is tested across.
+fn portfolio(p: u64, m: u64, counts: &[u64]) -> Vec<Schedule> {
+    let mut out = vec![one_f_one_b(p, m), gpipe(p, m)];
+    if p >= 2 {
+        let base = one_f_one_b(p, m);
+        let k = counts.iter().copied().min().unwrap().saturating_sub(1).min(derived_bound(&base));
+        if k >= 2 {
+            out.push(rebalance(&base, Some(k)));
+        }
+    }
+    out
+}
+
+fn score_layout(e: &ExperimentConfig, p: u64) -> Layout {
+    if e.cluster.n_nodes >= 1 && p % e.cluster.n_nodes == 0 {
+        pair_adjacent_layout(p, e.cluster.n_nodes)
+    } else {
+        sequential_layout(p, 1)
+    }
+}
+
+/// Synthesize the best schedule for `p` stages × `m` microbatches that
+/// provably fits `per_stage_mem_caps` (bytes per stage), scored by the
+/// DES under `cost`'s experiment.  See the module docs for the search
+/// structure.  The result always carries
+/// `kind:`[`ScheduleKind::Synthesized`] and
+/// `stage_bounds: Some(stash budgets)`, is validator-clean, and its DES
+/// stash high-water respects the budgets on every stage.
+pub fn try_synthesize(
+    p: u64,
+    m: u64,
+    per_stage_mem_caps: &[u64],
+    cost: &CostModel,
+) -> Result<Schedule, SynthesisError> {
+    assert!(p >= 1 && m >= 1, "need at least one stage and one microbatch");
+    let e = cost.e;
+    if e.parallel.p != p {
+        return Err(SynthesisError::DepthMismatch { requested: p, experiment: e.parallel.p });
+    }
+    let counts = stash_count_caps(e, per_stage_mem_caps)?;
+    let layout = score_layout(e, p);
+    let mut ws = SimWorkspace::new();
+    let score = |s: &Schedule, ws: &mut SimWorkspace| {
+        ws.run(e, s, &layout, SimOptions { trace: false }).makespan
+    };
+
+    // -- seed + first-improvement hill climb over warmup depths ----------
+    let mut w = seed_w(p, m, &counts);
+    let mut best = score(&w_schedule(p, m, &w), &mut ws);
+    for _round in 0..64 {
+        let mut improved = false;
+        for s in 0..p as usize {
+            for dlt in [-1i64, 1] {
+                let mut moved = w.clone();
+                moved[s] = (moved[s] as i64 + dlt).max(0) as u64;
+                let cand = project(p, m, &counts, &moved);
+                if cand == w {
+                    continue;
+                }
+                let mk = score(&w_schedule(p, m, &cand), &mut ws);
+                if mk < best {
+                    best = mk;
+                    w = cand;
+                    improved = true;
+                }
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    let mut winner = w_schedule(p, m, &w);
+
+    // -- family portfolio: prune statically, then filter on the DES ------
+    for cand in portfolio(p, m, &counts) {
+        // a stage whose own program-order high-water already exceeds its
+        // budget is provably OOM — skip without simulating
+        if static_bounds(&cand).iter().any(|b| b.lo > counts[b.stage as usize] as i64) {
+            continue;
+        }
+        let stats = ws.run(e, &cand, &layout, SimOptions { trace: false });
+        let fits = ws
+            .stash_high_water()
+            .iter()
+            .zip(&counts)
+            .all(|(&hw, &budget)| hw <= budget as i64);
+        if fits && stats.makespan < best {
+            best = stats.makespan;
+            winner = cand;
+        }
+    }
+
+    winner.kind = ScheduleKind::Synthesized;
+    winner.stage_bounds = Some(counts);
+    validate(&winner).expect("synthesized schedule failed validation");
+    Ok(winner)
+}
+
+/// Panicking wrapper around [`try_synthesize`] (mirrors
+/// `plan_schedule` vs `try_plan_schedule`).
+pub fn synthesize(p: u64, m: u64, per_stage_mem_caps: &[u64], cost: &CostModel) -> Schedule {
+    match try_synthesize(p, m, per_stage_mem_caps, cost) {
+        Ok(s) => s,
+        Err(e) => panic!("schedule synthesis failed: {e}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::paper_experiment;
+
+    fn caps_for_counts(e: &ExperimentConfig, counts: &[u64]) -> Vec<u64> {
+        let mm = MemoryModel::new(e);
+        let act = mm.activation_bytes_per_microbatch(0);
+        counts
+            .iter()
+            .enumerate()
+            .map(|(s, &c)| mm.weight_opt_bytes(s as u64) + e.cluster.reserved_bytes + c * act)
+            .collect()
+    }
+
+    #[test]
+    fn seed_is_nonincreasing_and_within_budget() {
+        let counts = vec![3, 5, 1, 4];
+        let w = seed_w(4, 8, &counts);
+        assert_eq!(w, vec![2, 2, 0, 0]); // clipped by p−1−s, counts−1, prev
+        for s in 0..4 {
+            assert!(w[s] + 1 <= counts[s]);
+        }
+        for pair in w.windows(2) {
+            assert!(pair[0] >= pair[1]);
+        }
+    }
+
+    #[test]
+    fn project_restores_monotonicity() {
+        // bumping a downstream stage above its upstream neighbor must be
+        // clipped back (increasing warmup vectors can deadlock)
+        let counts = vec![9, 9, 9];
+        assert_eq!(project(3, 4, &counts, &[0, 2, 0]), vec![0, 0, 0]);
+        assert_eq!(project(3, 4, &counts, &[2, 2, 9]), vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn w_schedule_matches_1f1b_at_full_depth() {
+        let p = 4;
+        let m = 8;
+        let full: Vec<u64> = (0..p).map(|s| p - 1 - s).collect();
+        let ours = w_schedule(p, m, &full);
+        let reference = one_f_one_b(p, m);
+        assert_eq!(ours.programs, reference.programs);
+    }
+
+    #[test]
+    fn rejects_wrong_caps_len() {
+        let e = paper_experiment(8).unwrap();
+        let cm = CostModel::new(&e);
+        let err = try_synthesize(8, 16, &[e.cluster.hbm_bytes; 3], &cm).unwrap_err();
+        assert!(matches!(err, SynthesisError::CapsLen { expected: 8, got: 3 }));
+    }
+
+    #[test]
+    fn rejects_depth_mismatch() {
+        let e = paper_experiment(8).unwrap();
+        let cm = CostModel::new(&e);
+        let err = try_synthesize(4, 16, &[e.cluster.hbm_bytes; 4], &cm).unwrap_err();
+        assert!(matches!(err, SynthesisError::DepthMismatch { requested: 4, experiment: 8 }));
+    }
+
+    #[test]
+    fn rejects_caps_below_one_stash() {
+        let e = paper_experiment(8).unwrap();
+        let cm = CostModel::new(&e);
+        // stage 0 holds ~52 GiB of weights+opt alone; a 1 GiB cap is hopeless
+        let mut caps = vec![e.cluster.hbm_bytes; 8];
+        caps[0] = 1 << 30;
+        let err = try_synthesize(8, 16, &caps, &cm).unwrap_err();
+        assert!(matches!(err, SynthesisError::Infeasible { stage: 0, .. }));
+    }
+
+    #[test]
+    fn winner_is_stamped_and_cap_clean() {
+        let e = paper_experiment(8).unwrap();
+        let counts = vec![3, 3, 2, 2, 2, 2, 2, 2];
+        let caps = caps_for_counts(&e, &counts);
+        let cm = CostModel::new(&e);
+        let s = synthesize(8, 16, &caps, &cm);
+        assert_eq!(s.kind, ScheduleKind::Synthesized);
+        assert_eq!(s.stage_bounds.as_deref(), Some(&counts[..]));
+        validate(&s).unwrap();
+        // the DES's dynamic stash high-water also fits (not just the
+        // program-order one the validator sees)
+        let mut ws = SimWorkspace::new();
+        ws.run(&e, &s, &score_layout(&e, 8), SimOptions { trace: false });
+        for (hw, &c) in ws.stash_high_water().iter().zip(&counts) {
+            assert!(*hw <= c as i64, "{:?} vs {counts:?}", ws.stash_high_water());
+        }
+    }
+
+    #[test]
+    fn loose_caps_recover_family_throughput() {
+        // with the whole HBM available the portfolio must not lose to a
+        // starved warmup schedule: the winner's makespan is within the
+        // best family cell's (rebalanced 1F1B simulates fine here)
+        let e = paper_experiment(8).unwrap();
+        let m = e.parallel.num_microbatches();
+        let cm = CostModel::new(&e);
+        let s = synthesize(8, m, &vec![e.cluster.hbm_bytes; 8], &cm);
+        let layout = score_layout(&e, 8);
+        let mut ws = SimWorkspace::new();
+        let ours = ws.run(&e, &s, &layout, SimOptions { trace: false }).makespan;
+        let rb = rebalance(&one_f_one_b(8, m), None);
+        let fam = ws.run(&e, &rb, &layout, SimOptions { trace: false }).makespan;
+        assert!(
+            ours <= fam * 1.0000001,
+            "synthesized {ours} should not lose to rebalanced 1F1B {fam}"
+        );
+    }
+}

@@ -23,7 +23,7 @@ pub use engine::{
     simulate, simulate_experiment, SimOptions, SimResult, SimStats, SimWorkspace, TraceEvent,
 };
 pub use sweep::{
-    bound_sensitivity_tasks, bounds_grid, experiment_tasks, paper_grid, render_bound_frontier,
-    render_sweep, scenario_specs, sweep, sweep_to_csv, sweep_to_json, sweep_with, ScenarioSpec,
-    ScheduleCache, SweepOptions, SweepOutcome, SweepReport, SweepTask,
+    bound_sensitivity_tasks, bounds_grid, experiment_tasks, frontier_outcomes, paper_grid,
+    render_bound_frontier, render_sweep, scenario_specs, sweep, sweep_to_csv, sweep_to_json,
+    sweep_with, ScenarioSpec, ScheduleCache, SweepOptions, SweepOutcome, SweepReport, SweepTask,
 };

@@ -38,6 +38,7 @@
 //! bounds grid per scenario; [`sweep_to_csv`] / [`sweep_to_json`] export
 //! every cell for external plotting (`--csv` / `--json`).
 
+use super::costmodel::CostModel;
 use super::engine::{SimOptions, SimWorkspace};
 use crate::bpipe::{bound_range, pair_adjacent_layout, sequential_layout, Layout};
 use crate::config::{paper_experiments, ExperimentConfig};
@@ -295,6 +296,65 @@ pub fn bound_sensitivity_tasks(e: &ExperimentConfig, v: u64) -> Vec<SweepTask> {
 /// (~3600 cells at paper scale; `bpipe sweep --bounds`).
 pub fn bounds_grid(v: u64) -> Vec<SweepTask> {
     paper_experiments().iter().flat_map(|e| bound_sensitivity_tasks(e, v)).collect()
+}
+
+/// The **found-vs-family frontier** under tight HBM: clone `e` with the
+/// per-device HBM capped at 90% (`hbm_bytes / 10 * 9` — tight enough
+/// that at paper scale no hand-written family fits exp (8)), run every
+/// ranking-grid scenario on the pair-adjacent layout through the
+/// provable-OOM skip gate, then add one `"synthesized"` cell:
+/// [`crate::schedule::synthesize`] searched under uniform per-stage
+/// byte caps equal to the tightened HBM.  Returns the cap (bytes) and
+/// the outcomes — family cells keep the grid's shape with `oom_stage`
+/// flagged, and the synthesized cell reports its stash budgets through
+/// the `stage_bounds` column (`bpipe sweep --synth`, the report's
+/// frontier panel, and the CI frontier-CSV artifact all read this).
+pub fn frontier_outcomes(
+    e: &ExperimentConfig,
+    v: u64,
+    threads: usize,
+) -> (u64, Vec<SweepOutcome>) {
+    let gib = (1u64 << 30) as f64;
+    let cap = e.cluster.hbm_bytes / 10 * 9;
+    let mut tight = e.clone();
+    tight.cluster.hbm_bytes = cap;
+    let p = tight.parallel.p;
+    let m = tight.parallel.num_microbatches();
+    let layout = pair_adjacent_layout(p, tight.cluster.n_nodes);
+    let shared = Arc::new(tight.clone());
+    let tasks: Vec<SweepTask> = scenario_specs(v)
+        .into_iter()
+        .map(|spec| SweepTask {
+            experiment: Arc::clone(&shared),
+            spec,
+            layout: pair_adjacent_layout(p, tight.cluster.n_nodes),
+        })
+        .collect();
+    let mut outcomes =
+        sweep_with(tasks, threads, SweepOptions { skip_provable_oom: true }).outcomes;
+
+    let schedule =
+        crate::schedule::synthesize(p, m, &vec![cap; p as usize], &CostModel::new(&tight));
+    let mut ws = SimWorkspace::new();
+    let stats = ws.run(&tight, &schedule, &layout, SimOptions { trace: false });
+    outcomes.push(SweepOutcome {
+        exp_id: tight.id,
+        model: tight.model.name.clone(),
+        microbatch: tight.parallel.microbatch,
+        scenario: "synthesized",
+        bound: None,
+        stage_bounds: schedule.stage_bounds.clone(),
+        layout: layout.name,
+        mfu_pct: stats.mfu_pct(),
+        makespan: stats.makespan,
+        bubble_pct: stats.bubble_fraction * 100.0,
+        peak_mem_gib: stats.peak_mem_bytes as f64 / gib,
+        per_stage_mem_gib: ws.mem_high_water().iter().map(|&b| b as f64 / gib).collect(),
+        oom_stage: stats.oom_stage,
+        load_stall_ms: stats.load_stall * 1e3,
+        transfer_gib: stats.transfer_bytes as f64 / gib,
+    });
+    (cap, outcomes)
 }
 
 /// Knobs for [`sweep_with`].  The default (all off) makes `sweep_with`

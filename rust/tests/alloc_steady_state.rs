@@ -121,6 +121,55 @@ fn steady_state_train_step_allocates_nothing_per_stage_worker() {
     );
 }
 
+/// The checkpoint path rides the same invariant: with `CheckpointWriter`
+/// holding the serialization scratch and borrowing the host buffers in
+/// place (no `.to_vec()` staging copies), a steady-state step that ALSO
+/// writes a checkpoint adds only libstd's per-syscall path→CString
+/// conversions (File::create, the exists() stat, and the two renames —
+/// 6 calls, none scaling with the parameter count).  Before the writer,
+/// every checkpoint step re-allocated 4 parameter-sized buffers (three
+/// staging vectors + the serialization buffer), which this bound
+/// catches immediately.
+#[test]
+fn steady_state_checkpoint_step_adds_no_buffer_allocations() {
+    let dir = std::env::temp_dir().join(format!("bpipe-alloc-ckpt-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = TrainConfig {
+        manifest: Some(Manifest::synthetic(4, 16, 8, 2, 64, &[1, 2])),
+        steps: 6,
+        microbatches: 6,
+        lr: 2e-3,
+        seed: 7,
+        rebalance: RebalancePlan::Uniform { bound: None },
+        checkpoint_dir: Some(dir.clone()),
+        checkpoint_every: 1,
+        ..TrainConfig::default()
+    };
+    let mut per_step: Vec<(u64, u64)> = Vec::with_capacity(cfg.steps as usize);
+    let mut last = 0u64;
+    let r = train_probed::<SimBackend>(&cfg, 0, &mut |step| {
+        let now = allocs();
+        per_step.push((step, now - last));
+        last = now;
+    })
+    .unwrap();
+    assert_eq!(r.losses.len(), 6);
+    let (warm_step, warm) = per_step[0];
+    assert_eq!(warm_step, 1);
+    assert!(warm > 0, "warm-up populates the pool and grows the writer scratch");
+    for &(step, n) in &per_step[1..] {
+        assert!(
+            n <= 6,
+            "checkpointing step {step} performed {n} heap allocations — the writer \
+             must reuse its scratch and borrow the state buffers in place \
+             (6 path→CString conversions are the libstd fs-syscall floor)"
+        );
+    }
+    // the writer really wrote every generation it claims to
+    assert!(bpipe::coordinator::CheckpointMeta::exists(&dir) || dir.join("stage0.ckpt").exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// The feeder-side twin: the LAST per-microbatch allocation was the
 /// feeder building fresh token/target vectors (plus their shape vecs)
 /// for every send.  With the recycle ring the end-stage workers hand

@@ -1,0 +1,102 @@
+//! Differential test: the paper's §4 Eq. 3/Eq. 4 analytic estimator
+//! against the DES, evaluated **on synthesized schedules** (ISSUE 8
+//! satellite).  The estimator assumes a perfect 1F1B pipeline with free
+//! communication, so on any schedule the synthesizer emits it must be an
+//! *upper bound* on the DES MFU — and the gap (est/DES ratio) is pinned
+//! per scenario so a regression in either side (estimator algebra, DES
+//! timing, or the synthesizer's choice of schedule) moves a number a
+//! human can read.
+//!
+//! All pinned values are mirror-derived (validated Python port of the
+//! cost model + DES + synthesizer, exact same arithmetic) for paper
+//! experiment 8 (GPT-3 96B, p=8, m=64, pair-adjacent layout).
+//! Makespans pin at 1e-9 relative; est/DES ratios at 1e-3 absolute
+//! (they were derived to six decimals).
+
+use bpipe::bpipe::pair_adjacent_layout;
+use bpipe::config::{paper_experiment, ExperimentConfig};
+use bpipe::estimator::model_mfu_from_stage;
+use bpipe::model::memory::MemoryModel;
+use bpipe::schedule::{one_f_one_b, synthesize, Schedule};
+use bpipe::sim::{CostModel, SimOptions, SimWorkspace};
+
+fn assert_close(name: &str, got: f64, want: f64) {
+    let rel = ((got - want) / want).abs();
+    assert!(rel < 1e-9, "{name}: got {got:.15}, pinned {want:.15} (rel {rel:.2e})");
+}
+
+/// Byte caps that make `stash_count_caps` recover `counts` exactly.
+fn caps_for_counts(e: &ExperimentConfig, counts: &[u64]) -> Vec<u64> {
+    let mm = MemoryModel::new(e);
+    let act = mm.activation_bytes_per_microbatch(0);
+    counts
+        .iter()
+        .enumerate()
+        .map(|(s, &c)| mm.weight_opt_bytes(s as u64) + e.cluster.reserved_bytes + c * act)
+        .collect()
+}
+
+fn des_run(e: &ExperimentConfig, s: &Schedule, ws: &mut SimWorkspace) -> (f64, f64) {
+    let layout = pair_adjacent_layout(e.parallel.p, e.cluster.n_nodes);
+    let stats = ws.run(e, s, &layout, SimOptions { trace: false });
+    assert_eq!(stats.oom_stage, None);
+    (stats.makespan, stats.mfu)
+}
+
+/// The Eq. 3 whole-model estimate from the cost model's own single-stage
+/// MFU — pinned so the estimator and cost model can't drift silently.
+#[test]
+fn eq3_estimate_is_pinned_for_experiment_8() {
+    let e = paper_experiment(8).unwrap();
+    let est = model_mfu_from_stage(&e, CostModel::new(&e).single_stage_mfu());
+    assert_close("Eq.3 estimate", est, 0.5034275974509936);
+}
+
+#[test]
+fn estimator_upper_bounds_des_on_synthesized_schedules() {
+    let e = paper_experiment(8).unwrap();
+    let m = e.parallel.num_microbatches();
+    let cost = CostModel::new(&e);
+    let est = model_mfu_from_stage(&e, cost.single_stage_mfu());
+    let mut ws = SimWorkspace::new();
+
+    // (scenario, per-stage stash budgets, pinned DES makespan, pinned
+    // est/DES MFU ratio) — tighter budgets starve the warmup, so the
+    // estimator's idealized-1F1B assumption overshoots by more
+    let scenarios: [(&str, Vec<u64>, f64, f64); 4] = [
+        ("uniform-2", vec![2; 8], 114.91382009373845, 3.696269),
+        ("uniform-3", vec![3; 8], 112.1340818046157, 3.606857),
+        ("tight-72GiB", vec![4; 8], 84.54787050101113, 2.719531),
+        ("capacity-shaped", vec![5, 6, 6, 5, 4, 3, 2, 2], 83.23416886042044, 2.677275),
+    ];
+
+    for (name, counts, pinned_makespan, pinned_ratio) in scenarios {
+        let s = synthesize(8, m, &caps_for_counts(&e, &counts), &cost);
+        let (makespan, mfu) = des_run(&e, &s, &mut ws);
+        assert_close(name, makespan, pinned_makespan);
+        assert!(
+            est >= mfu,
+            "{name}: Eq.3 estimate {est} must upper-bound DES MFU {mfu}"
+        );
+        let ratio = est / mfu;
+        assert!(
+            (ratio - pinned_ratio).abs() < 1e-3,
+            "{name}: est/DES ratio {ratio:.6}, pinned {pinned_ratio:.6}"
+        );
+    }
+}
+
+/// Baseline for reading the ratios above: on plain 1F1B — the schedule
+/// the estimator actually models — the gap is ~3.4%, all of it the
+/// communication/imbalance the analytic form ignores.
+#[test]
+fn estimator_gap_on_plain_1f1b_is_small() {
+    let e = paper_experiment(8).unwrap();
+    let m = e.parallel.num_microbatches();
+    let est = model_mfu_from_stage(&e, CostModel::new(&e).single_stage_mfu());
+    let mut ws = SimWorkspace::new();
+    let (_, mfu) = des_run(&e, &one_f_one_b(8, m), &mut ws);
+    assert!(est >= mfu, "upper bound must hold on 1F1B: {est} vs {mfu}");
+    let ratio = est / mfu;
+    assert!((ratio - 1.034297).abs() < 1e-3, "1F1B est/DES ratio {ratio:.6}");
+}

@@ -398,6 +398,67 @@ fn static_bounds_bracket_the_simulated_peaks_on_every_golden_cell() {
     }
 }
 
+/// ISSUE 8 golden: the schedule `synthesize` finds for experiment 8
+/// under a uniform tight per-stage cap of 90% HBM (72 GiB — every one
+/// of the 30 family cells above peaks ABOVE this cap, so the
+/// synthesized cell is the only feasible one).  Pins the winner's
+/// shape (a pure-compute warmup-depth schedule, W = [3,3,3,2,2,2,1,0])
+/// and its full DES profile, mirror-derived at 1e-9 relative for
+/// floats and exactly for integers.
+#[test]
+fn synthesized_tight_cap_winner_matches_golden() {
+    use bpipe::schedule::{synthesize, OpKind, Placement, ScheduleKind};
+    use bpipe::sim::CostModel;
+
+    let mut e = paper_experiment(8).unwrap();
+    let cap = e.cluster.hbm_bytes / 10 * 9;
+    assert_eq!(cap, 77_309_411_328, "tight cap definition drifted");
+    e.cluster.hbm_bytes = cap;
+    let m = e.parallel.num_microbatches();
+    let s = synthesize(8, m, &vec![cap; 8], &CostModel::new(&e));
+
+    // shape: single-chunk, sequential placement, budgets baked in as
+    // stage bounds, 64 Fwd + 64 Bwd per stage and nothing else
+    assert_eq!(s.kind, ScheduleKind::Synthesized);
+    assert_eq!(s.placement, Placement::Sequential);
+    assert_eq!(s.chunks, 1);
+    assert_eq!(s.stage_bounds.as_deref(), Some(&[4u64; 8][..]));
+    for stage in 0..8 {
+        assert_eq!(s.program(stage).ops.len(), 128, "stage {stage}: op count");
+        assert_eq!(s.count(stage, OpKind::Fwd), 64, "stage {stage}: fwds");
+        assert_eq!(s.count(stage, OpKind::Bwd), 64, "stage {stage}: bwds");
+    }
+
+    let layout = pair_adjacent_layout(8, e.cluster.n_nodes);
+    let r = simulate(&e, &s, &layout);
+    let cell = "synthesized / pair-adjacent";
+    assert_close(r.makespan, 84.54787050101113, "makespan", cell);
+    assert_close(r.mfu, 0.1851155939154355, "mfu", cell);
+    assert_close(r.bubble_fraction, 0.6669591480213222, "bubble_fraction", cell);
+    // pure compute: no evict/load ops, so no transfers and no stalls
+    assert_eq!(r.transfer_bytes, 0, "{cell}: transfer_bytes");
+    assert_eq!(r.load_stall, 0.0, "{cell}: load_stall");
+    assert_eq!(r.oom_stage, None, "{cell}: fits under the tightened HBM");
+    assert_eq!(&r.stash_high_water[..], &[4, 4, 4, 3, 3, 3, 2, 1], "{cell}: stash");
+    assert_eq!(
+        &r.mem_high_water[..],
+        &[
+            76_572_073_728,
+            74_179_747_584,
+            74_179_747_584,
+            70_703_718_144,
+            70_703_718_144,
+            70_703_718_144,
+            67_227_688_704,
+            66_052_152_576,
+        ],
+        "{cell}: mem_high_water"
+    );
+    for (stage, &bytes) in r.mem_high_water.iter().enumerate() {
+        assert!(bytes <= cap, "stage {stage}: {bytes} B over the {cap} B cap");
+    }
+}
+
 #[test]
 fn repeated_runs_on_one_workspace_are_bit_identical() {
     // all 30 golden cells, twice, through ONE workspace: every buffer

@@ -66,7 +66,7 @@ fn report_emits_markdown_with_figures() {
     let out_path = dir.join("report.md");
     let (ok, out) = bpipe(&["report", "--experiment", "8", "--out", out_path.to_str().unwrap()]);
     assert!(ok, "{out}");
-    assert!(out.contains("4 figures"), "{out}");
+    assert!(out.contains("5 figures"), "{out}");
     let md = std::fs::read_to_string(&out_path).unwrap();
     assert!(md.matches("<svg").count() >= 3, "≥3 embedded SVG figures");
     for needle in [
@@ -208,6 +208,60 @@ fn check_flags_a_broken_schedule_in_human_and_json_form() {
     assert!(!ok, "{out}");
     assert!(out.contains("\"code\":\"deadlock-cycle\""), "{out}");
     assert!(out.contains("\"ok\":false"), "{out}");
+}
+
+#[test]
+fn check_accepts_a_synthesized_schedule() {
+    // the CI smoke invocation: synthesize at p=8 m=16 under the default
+    // tight cap (90% of exp-8 HBM) and push it through the full static
+    // gate — zero error-level findings, exit 0
+    let (ok, out) = bpipe(&["check", "--schedule", "synth", "--p", "8", "--m", "16"]);
+    assert!(ok, "{out}");
+    assert!(out.contains("checking synthesized"), "{out}");
+    assert!(out.contains("ok — no findings"), "{out}");
+    assert!(out.contains("1 schedule(s) checked: 0 error(s)"), "{out}");
+    // the synthesized budgets surface as planned per-stage caps
+    assert!(out.contains("stage |  lo pred  hi | planned"), "{out}");
+
+    // an impossible cap is a clean, named failure (not a panic)
+    let (ok, out) =
+        bpipe(&["check", "--schedule", "synth", "--p", "8", "--m", "16", "--cap-gib", "1"]);
+    assert!(!ok, "{out}");
+    assert!(out.contains("cannot hold one activation stash"), "{out}");
+}
+
+#[test]
+fn train_runs_a_synthesized_schedule_on_the_sim_backend() {
+    // p must be 8 here: the cost model reshapes experiment 8, and at
+    // shallower depths the per-stage weights alone exceed the default
+    // tight cap (synthesis correctly refuses)
+    let (ok, out) = bpipe(&[
+        "train", "--backend", "sim", "--schedule", "synth", "--p", "8",
+        "--steps", "1", "--microbatches", "4",
+    ]);
+    assert!(ok, "{out}");
+    for needle in ["synthesized schedule: p=8 m=4", "stash budgets", "first loss", "stage 0:"] {
+        assert!(out.contains(needle), "missing {needle}: {out}");
+    }
+}
+
+#[test]
+fn sweep_synth_mode_emits_the_frontier_and_csv() {
+    let dir = std::env::temp_dir().join(format!("bpipe-cli-synth-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv = dir.join("frontier.csv");
+    let (ok, out) =
+        bpipe(&["sweep", "--experiment", "8", "--synth", "--csv", csv.to_str().unwrap()]);
+    assert!(ok, "{out}");
+    assert!(out.contains("found-vs-family frontier"), "{out}");
+    assert!(out.contains("synthesized"), "{out}");
+    let text = std::fs::read_to_string(&csv).unwrap();
+    assert!(text.starts_with("exp,model,microbatch,scenario,bound,layout,mfu_pct"));
+    // 15 family cells + the synthesized cell
+    assert_eq!(text.lines().count(), 16 + 1, "header + 16 cells: {text}");
+    let synth_row = text.lines().find(|l| l.contains("synthesized")).unwrap();
+    // under the tight cap every family cell OOMs; the synthesized one fits
+    assert!(!synth_row.contains("OOM"), "{synth_row}");
 }
 
 #[test]

@@ -1,0 +1,139 @@
+//! Property suite for `schedule::synthesize` (ISSUE 8 satellite): over
+//! randomized shapes — pipeline depth, microbatch count, heterogeneous
+//! per-stage memory caps, all drawn from a splitmix64 stream with a
+//! pinned seed so every run (and the validated Python mirror that
+//! derived the expectations) sees the same cases — the synthesizer must
+//! only ever emit schedules that are
+//!
+//! 1. validator-clean (`schedule::validate`),
+//! 2. clean through the full static-analyzer gate
+//!    (`analysis::check_plan`: zero error-level diagnostics), and
+//! 3. actually within budget when *executed*: the DES's dynamic
+//!    per-stage stash high-water respects the stash budgets, and the
+//!    byte high-water respects the byte caps the budgets came from.
+//!
+//! The caps are built so that `stash_count_caps` recovers the drawn
+//! budget vector exactly (`cap[s] = weights/opt + reserved +
+//! counts[s]·act`), making the third property an exact round-trip, not
+//! a tolerance check.
+
+use bpipe::analysis::{check_plan, ChannelCaps, Severity};
+use bpipe::bpipe::{pair_adjacent_layout, sequential_layout};
+use bpipe::config::paper_experiment;
+use bpipe::coordinator::RebalancePlan;
+use bpipe::model::memory::MemoryModel;
+use bpipe::schedule::{try_synthesize, validate, ScheduleKind};
+use bpipe::sim::{CostModel, SimOptions, SimWorkspace};
+
+/// splitmix64 — tiny, dependency-free, and trivially mirrored in the
+/// Python harness that derived the expected-clean verdicts.
+struct SplitMix64(u64);
+
+impl SplitMix64 {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+const CASES: usize = 300;
+const SEED: u64 = 0xB1BE;
+
+#[test]
+fn synthesized_schedules_are_always_clean_and_within_caps() {
+    let base = paper_experiment(8).unwrap();
+    let mut rng = SplitMix64(SEED);
+    let mut ws = SimWorkspace::new();
+
+    for case in 0..CASES {
+        let r1 = rng.next();
+        let r2 = rng.next();
+        let r3 = rng.next();
+        let p = 2 + r1 % 7; // 2..=8
+        let m = 1 + r2 % 24; // 1..=24
+        let counts: Vec<u64> = (0..p).map(|s| 1 + ((r3 >> (8 * s)) % 6)).collect();
+
+        // reshape the experiment to this depth; the memory model splits
+        // layers as l / p, so any 2..=8 is well-formed
+        let mut e = base.clone();
+        e.parallel.p = p;
+        let mm = MemoryModel::new(&e);
+        let act = mm.activation_bytes_per_microbatch(0);
+        let caps: Vec<u64> = counts
+            .iter()
+            .enumerate()
+            .map(|(s, &c)| mm.weight_opt_bytes(s as u64) + e.cluster.reserved_bytes + c * act)
+            .collect();
+
+        let cost = CostModel::new(&e);
+        let s = try_synthesize(p, m, &caps, &cost)
+            .unwrap_or_else(|err| panic!("case {case} (p={p} m={m} counts {counts:?}): {err}"));
+
+        // contract: stamped kind + the recovered budgets as stage bounds
+        assert_eq!(s.kind, ScheduleKind::Synthesized, "case {case}");
+        assert_eq!(s.stage_bounds.as_deref(), Some(&counts[..]), "case {case}");
+
+        // 1. validator-clean
+        validate(&s).unwrap_or_else(|err| {
+            panic!("case {case} (p={p} m={m} counts {counts:?}): validator: {err}")
+        });
+
+        // 2. full static gate: zero error-level findings
+        let chan = ChannelCaps::for_run(m, s.chunks);
+        let diags = check_plan(&s, &RebalancePlan::Off, &chan);
+        let errors: Vec<_> =
+            diags.iter().filter(|d| d.severity == Severity::Error).collect();
+        assert!(
+            errors.is_empty(),
+            "case {case} (p={p} m={m} counts {counts:?}): {errors:?}"
+        );
+
+        // 3. the executed schedule honors the budgets it was built under
+        let layout = if e.cluster.n_nodes >= 1 && p % e.cluster.n_nodes == 0 {
+            pair_adjacent_layout(p, e.cluster.n_nodes)
+        } else {
+            sequential_layout(p, 1)
+        };
+        let stats = ws.run(&e, &s, &layout, SimOptions { trace: false });
+        assert_eq!(stats.oom_stage, None, "case {case}: DES reported OOM");
+        for (stage, (&hw, &budget)) in ws.stash_high_water().iter().zip(&counts).enumerate() {
+            assert!(
+                hw <= budget as i64,
+                "case {case} stage {stage}: stash high-water {hw} > budget {budget} \
+                 (counts {counts:?}, all {:?})",
+                ws.stash_high_water()
+            );
+        }
+        for (stage, (&bytes, &cap)) in ws.mem_high_water().iter().zip(&caps).enumerate() {
+            assert!(
+                bytes <= cap,
+                "case {case} stage {stage}: {bytes} B > cap {cap} B"
+            );
+        }
+    }
+}
+
+#[test]
+fn fuzz_shapes_cover_the_intended_ranges() {
+    // the suite above is only as strong as its sampling: re-derive the
+    // same stream and check it actually exercises every depth and a wide
+    // spread of budget vectors (guards against a silent RNG change)
+    let mut rng = SplitMix64(SEED);
+    let mut depths = std::collections::BTreeSet::new();
+    let mut shapes = std::collections::BTreeSet::new();
+    for _ in 0..CASES {
+        let r1 = rng.next();
+        let r2 = rng.next();
+        let r3 = rng.next();
+        let p = 2 + r1 % 7;
+        let m = 1 + r2 % 24;
+        let counts: Vec<u64> = (0..p).map(|s| 1 + ((r3 >> (8 * s)) % 6)).collect();
+        depths.insert(p);
+        shapes.insert((p, m, counts));
+    }
+    assert_eq!(depths.into_iter().collect::<Vec<_>>(), vec![2, 3, 4, 5, 6, 7, 8]);
+    assert!(shapes.len() >= 140, "only {} distinct shapes", shapes.len());
+}

@@ -21,20 +21,26 @@ fn exp8_report_snapshot() {
         .filter(|t| t.layout.name == "pair-adjacent")
         .collect();
     let bounds = sim::sweep(bound_tasks, 0);
-    let md = figures::render_replication_report(&e, &ranking, &bounds);
+    let (frontier_cap, frontier) = sim::frontier_outcomes(&e, 2, 0);
+    let md = figures::render_replication_report(&e, &ranking, &bounds, frontier_cap, &frontier);
 
     // -- structure ----------------------------------------------------
-    assert_eq!(md.matches("<svg").count(), 4, "4 embedded SVG figures");
-    assert_eq!(md.matches("</svg>").count(), 4);
+    assert_eq!(md.matches("<svg").count(), 5, "5 embedded SVG figures");
+    assert_eq!(md.matches("</svg>").count(), 5);
     for section in [
         "# BPipe replication report",
         "## Figure 1 — per-stage peak memory",
         "## Figure 2 — throughput by scenario",
         "## Figure 3 — bound-sensitivity frontier",
+        "## Figure 4 — found-vs-family frontier (tight HBM)",
         "## Estimator vs DES",
     ] {
         assert!(md.contains(section), "missing section {section}");
     }
+
+    // the frontier panel charts the synthesized schedule — under the
+    // tight cap it is the only feasible cell, so it must appear by name
+    assert!(md.contains("synthesized"), "frontier panel lost the synthesized cell");
 
     // coverage the acceptance criteria demand: a v>2 W/zig-zag scenario
     // and a per-stage-bounds scenario
@@ -66,13 +72,13 @@ fn exp8_report_snapshot() {
     assert!(md.contains("fits"));
 
     // figure tables accompany every chart (the palette's text fallback)
-    assert!(md.matches("```text").count() >= 4);
+    assert!(md.matches("```text").count() >= 5);
 
     // every embedded figure is scheme-adaptive: one stylesheet with the
     // dark-mode media query per SVG, neutrals only as classes
-    assert_eq!(md.matches("<style>").count(), 4);
-    assert_eq!(md.matches("@media (prefers-color-scheme: dark)").count(), 4);
-    assert_eq!(md.matches("class=\"surface\"").count(), 4, "one themed canvas per figure");
+    assert_eq!(md.matches("<style>").count(), 5);
+    assert_eq!(md.matches("@media (prefers-color-scheme: dark)").count(), 5);
+    assert_eq!(md.matches("class=\"surface\"").count(), 5, "one themed canvas per figure");
 }
 
 #[test]
