@@ -34,10 +34,13 @@ use bpipe::coordinator::{
     supervise, train, train_probed, RebalancePlan, SuperviseConfig, TrainConfig,
 };
 use bpipe::runtime::{
-    Backend, Fault, FaultPlan, FaultyBackend, Manifest, SimBackend, UnpooledSimBackend,
+    kernels, Backend, Fault, FaultPlan, FaultyBackend, Manifest, SimBackend, UnpooledSimBackend,
 };
 use bpipe::schedule::{interleaved, one_f_one_b, v_shaped, zigzag, Family};
-use bpipe::sim::{bounds_grid, paper_grid, simulate, sweep, SimOptions, SimWorkspace};
+use bpipe::sim::{
+    bound_sensitivity_tasks, bounds_grid, paper_grid, simulate, sweep, sweep_with, SimOptions,
+    SimWorkspace, SweepOptions,
+};
 use bpipe::util::{bench, Json};
 
 // the thread-local counting #[global_allocator] shared with the
@@ -87,7 +90,7 @@ fn main() {
     let s_il_rb = rebalance(&s_il, None);
     let s_v = v_shaped(p, m);
     let mut ws = SimWorkspace::new();
-    let opts = SimOptions { trace: false };
+    let opts = SimOptions { trace: false, warm: false };
     bench("hotpath/sim_1f1b_p8_m64", iters(500), || {
         ws.run(std::hint::black_box(&e), &s_1f1b, &layout, opts)
     });
@@ -103,6 +106,30 @@ fn main() {
     bench("hotpath/sim_v_shaped", iters(500), || {
         ws.run(std::hint::black_box(&e), &s_v, &layout, opts)
     });
+
+    println!("\n=== SIMD kernels: chunked 8-lane loops vs mirrored-order scalar twins ===");
+    let nk = (1usize << 16) + 5; // ragged tail on purpose
+    let kx: Vec<f32> = (0..nk).map(|i| kernels::unit(i as u64 * 3 + 1)).collect();
+    let kdy: Vec<f32> = (0..nk).map(|i| kernels::unit(i as u64 * 7 + 2)).collect();
+    assert_eq!(
+        kernels::reduce_dot_bias(&kdy, &kx).0.to_bits(),
+        kernels::reduce_dot_bias_scalar(&kdy, &kx).0.to_bits(),
+        "chunked and scalar kernels must agree before being timed"
+    );
+    let k_chunked = bench("hotpath/kernel_dot_bias_chunked_64k", iters(2_000), || {
+        kernels::reduce_dot_bias(std::hint::black_box(&kdy), &kx)
+    });
+    let k_scalar = bench("hotpath/kernel_dot_bias_scalar_64k", iters(2_000), || {
+        kernels::reduce_dot_bias_scalar(std::hint::black_box(&kdy), &kx)
+    });
+    let mut ka = kx.clone();
+    let k_affine = bench("hotpath/kernel_affine_in_place_64k", iters(2_000), || {
+        kernels::affine_in_place(std::hint::black_box(&mut ka), 1.000_000_1, 1e-7)
+    });
+    println!(
+        "hotpath/kernel_dot_bias: chunked runs {:.2}x the lane-major scalar twin",
+        k_scalar.median.as_secs_f64() / k_chunked.median.as_secs_f64().max(1e-12)
+    );
 
     println!("\n=== allocating wrapper (fresh workspace + trace per call), for the ratio ===");
     bench("hotpath/sim_1f1b_alloc_wrapper", iters(200), || {
@@ -158,6 +185,28 @@ fn main() {
         &format!("hotpath/sweep_bounds_grid_{bounds_cells}_cells"),
         iters(3),
         || sweep(bounds_grid(2), 0),
+    );
+
+    println!("\n=== warm-start delta-DES: bounds grid (exp 8), warm vs forced-cold ===");
+    let wvc_cells = bound_sensitivity_tasks(&e, 2).len();
+    let t_cold = std::time::Instant::now();
+    let cold_report = sweep_with(
+        bound_sensitivity_tasks(&e, 2),
+        0,
+        SweepOptions { force_cold: true, ..Default::default() },
+    );
+    let cold_s = t_cold.elapsed().as_secs_f64();
+    let t_warm = std::time::Instant::now();
+    let warm_report = sweep_with(bound_sensitivity_tasks(&e, 2), 0, SweepOptions::default());
+    let warm_s = t_warm.elapsed().as_secs_f64();
+    assert_eq!(cold_report.outcomes.len(), warm_report.outcomes.len());
+    let replay_frac =
+        warm_report.events_replayed as f64 / warm_report.events_total.max(1) as f64;
+    println!(
+        "hotpath/sweep_warm_vs_cold_{wvc_cells}_cells  cold {cold_s:.3}s  warm {warm_s:.3}s  \
+         ({:.2}x, {:.1}% of events replayed)",
+        cold_s / warm_s.max(1e-9),
+        replay_frac * 100.0
     );
 
     println!("\n=== real train step on the SimBackend: pooled vs owned baseline ===");
@@ -251,6 +300,29 @@ fn main() {
     rec.insert("steps_lost".to_string(), Json::Num(recovered.steps_lost as f64));
     rec.insert("time_to_recover_s".to_string(), Json::Num(ttr));
     root.insert("recovery".to_string(), Json::Obj(rec));
+    let mut simd = HashMap::new();
+    simd.insert("elements".to_string(), Json::Num(nk as f64));
+    simd.insert(
+        "dot_bias_chunked_s".to_string(),
+        Json::Num(k_chunked.median.as_secs_f64()),
+    );
+    simd.insert("dot_bias_scalar_s".to_string(), Json::Num(k_scalar.median.as_secs_f64()));
+    simd.insert(
+        "speedup_chunked_vs_scalar".to_string(),
+        Json::Num(k_scalar.median.as_secs_f64() / k_chunked.median.as_secs_f64().max(1e-12)),
+    );
+    simd.insert("affine_in_place_s".to_string(), Json::Num(k_affine.median.as_secs_f64()));
+    root.insert("simd".to_string(), Json::Obj(simd));
+    let mut wvc = HashMap::new();
+    wvc.insert("cells".to_string(), Json::Num(wvc_cells as f64));
+    wvc.insert("cold_s".to_string(), Json::Num(cold_s));
+    wvc.insert("warm_s".to_string(), Json::Num(warm_s));
+    wvc.insert(
+        "speedup_warm_vs_cold".to_string(),
+        Json::Num(cold_s / warm_s.max(1e-9)),
+    );
+    wvc.insert("events_replayed_frac".to_string(), Json::Num(replay_frac));
+    root.insert("sweep_warm_vs_cold".to_string(), Json::Obj(wvc));
     match std::fs::write("BENCH_runtime.json", format!("{}\n", Json::Obj(root))) {
         Ok(()) => println!("wrote BENCH_runtime.json"),
         Err(e) => eprintln!("could not write BENCH_runtime.json: {e}"),

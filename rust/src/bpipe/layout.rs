@@ -84,6 +84,47 @@ pub fn pair_adjacent_layout(p: u64, n_nodes: u64) -> Layout {
     Layout { node_of, n_nodes, name: "pair-adjacent" }
 }
 
+/// Scatter layout: stage `x` → node `x % n_nodes` (round-robin).  The
+/// classic "spread for compute balance" placement — it maximises
+/// cross-node traffic, since consecutive stages (and, for even
+/// `n_nodes`, every evictor/acceptor pair) land on different nodes.
+/// The adversarial end of the sweep grid's layout axis.
+pub fn scatter_layout(p: u64, n_nodes: u64) -> Layout {
+    assert!(p % n_nodes == 0, "p ({p}) must divide across nodes ({n_nodes})");
+    Layout {
+        node_of: (0..p).map(|x| x % n_nodes).collect(),
+        n_nodes,
+        name: "scatter",
+    }
+}
+
+/// Ring layout: the front half of the pipeline is laid out in
+/// sequential blocks, and each back-half stage lands one node
+/// *clockwise* of its pair partner — evict/load traffic hops exactly one
+/// ring link instead of converging on a single boundary.  Every pair is
+/// inter-node (for `n_nodes > 1`) but the pair traffic is spread evenly
+/// over the ring rather than funneled like `sequential`.
+pub fn ring_layout(p: u64, n_nodes: u64) -> Layout {
+    assert!(p % n_nodes == 0, "p ({p}) must divide across nodes ({n_nodes})");
+    assert!(
+        n_nodes == 1 || (p / 2) % n_nodes == 0,
+        "front half ({}) must divide across nodes ({n_nodes})",
+        p / 2
+    );
+    if n_nodes == 1 {
+        return Layout { node_of: vec![0; p as usize], n_nodes, name: "ring" };
+    }
+    let per_front = (p / 2) / n_nodes;
+    let mut node_of = vec![0u64; p as usize];
+    for x in 0..p / 2 {
+        node_of[x as usize] = x / per_front;
+    }
+    for x in p / 2..p {
+        node_of[x as usize] = (node_of[partner(p, x) as usize] + 1) % n_nodes;
+    }
+    Layout { node_of, n_nodes, name: "ring" }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -137,5 +178,45 @@ mod tests {
     #[should_panic(expected = "must divide")]
     fn rejects_indivisible() {
         sequential_layout(10, 4);
+    }
+
+    #[test]
+    fn scatter_round_robins() {
+        let l = scatter_layout(8, 2);
+        assert_eq!(l.node_of, vec![0, 1, 0, 1, 0, 1, 0, 1]);
+        // 7−x flips parity, so every pair spans nodes
+        assert_eq!(l.intra_node_pair_fraction(8), 0.0);
+        for stages in l.stages_per_node() {
+            assert_eq!(stages.len(), 4);
+        }
+    }
+
+    #[test]
+    fn ring_spreads_pairs_one_hop() {
+        let l = ring_layout(8, 2);
+        assert_eq!(l.node_of, vec![0, 0, 1, 1, 0, 0, 1, 1]);
+        assert_eq!(l.intra_node_pair_fraction(8), 0.0);
+        // every back-half stage is exactly one node clockwise of its pair
+        for x in 4..8u64 {
+            assert_eq!(l.node_of(x), (l.node_of(partner(8, x)) + 1) % 2);
+        }
+        for stages in l.stages_per_node() {
+            assert_eq!(stages.len(), 4);
+        }
+    }
+
+    #[test]
+    fn ring_balanced_four_nodes() {
+        let l = ring_layout(8, 4);
+        assert_eq!(l.node_of, vec![0, 1, 2, 3, 0, 3, 2, 1]);
+        for stages in l.stages_per_node() {
+            assert_eq!(stages.len(), 2);
+        }
+    }
+
+    #[test]
+    fn scatter_and_ring_single_node() {
+        assert_eq!(scatter_layout(8, 1).intra_node_pair_fraction(8), 1.0);
+        assert_eq!(ring_layout(8, 1).intra_node_pair_fraction(8), 1.0);
     }
 }

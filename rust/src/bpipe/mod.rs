@@ -20,7 +20,7 @@ pub mod layout;
 pub mod pairing;
 pub mod rebalance;
 
-pub use layout::{pair_adjacent_layout, sequential_layout, Layout};
+pub use layout::{pair_adjacent_layout, ring_layout, scatter_layout, sequential_layout, Layout};
 pub use pairing::{acceptor_extra_stashes, bound, evictions_at, is_acceptor, is_evictor, partner};
 pub use rebalance::{
     bound_range, capacity_stage_bounds, derived_bound, rebalance, rebalance_bounded,

@@ -12,9 +12,10 @@
 //!   analytical estimator ([`estimator`]), and a *real* pipeline
 //!   ([`coordinator`]) generic over the [`runtime::Backend`]
 //!   abstraction: the in-tree deterministic [`runtime::SimBackend`]
-//!   (tier-1, no dependencies) or AOT-compiled XLA artifacts on the
-//!   PJRT CPU client (feature `pjrt`, which additionally needs the
-//!   `xla` crate).
+//!   (tier-1, no dependencies) or AOT-compiled HLO-text artifacts on a
+//!   PJRT-shaped client (feature `pjrt`, backed by the vendored
+//!   in-tree stub `runtime::pjrt_stub`; dropping in the real `xla`
+//!   crate is a one-line alias change).
 //! * **L2 (python/compile/model.py)** — JAX stage graphs (GPT-3 and
 //!   LLaMA families), lowered once to HLO text at build time.
 //! * **L1 (python/compile/kernels/)** — Pallas flash-attention and fused
@@ -43,6 +44,9 @@
 //! | Beyond the paper: deterministic fault injection (crash/stall/transient/HBM-cap) | [`runtime::FaultPlan`], [`runtime::FaultyBackend`], `bpipe train --faults` |
 //! | Beyond the paper: supervised recovery — checkpoint, re-plan under reduced HBM ([`analysis::gate_plan`]), resume | [`coordinator::supervisor`], [`coordinator::latest_common_step`] |
 //! | Beyond the paper: schedule synthesis under per-stage memory caps (found-vs-family frontier) | [`schedule::synthesize()`], [`sim::sweep::frontier_outcomes`], `bpipe check/train --schedule synth`, `bpipe sweep --synth` |
+//! | Beyond the paper: 8-lane SIMD kernels + canonical tree reduction (bit-reproducible) | [`runtime::kernels`], `rust/tests/property_kernels.rs` |
+//! | Beyond the paper: warm-start delta-DES (event-prefix replay between adjacent bounds) | [`sim::SimWorkspace`], [`sim::SweepReport`], `bpipe sweep --bounds [--force-cold]` |
+//! | Beyond the paper: vendored PJRT-shaped client (compile/execute/donation aliases) | `runtime::pjrt_stub` (feature `pjrt`), `runtime::engine` |
 //!
 //! `docs/ARCHITECTURE.md` has the crate-level data-flow diagram and the
 //! [`runtime::Backend`] boundary; [`sweep_schema`] documents (and

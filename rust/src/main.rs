@@ -51,7 +51,7 @@ COMMANDS:
   simulate  [--experiment 1..10 | --config f.cfg] [--bpipe true|false]
             [--timeline]                 simulate one experiment
   sweep     [--experiment 1..10] [--v N] [--threads N]
-            [--bounds | --synth] [--skip-oom]
+            [--bounds | --synth] [--skip-oom] [--force-cold]
             [--csv f.csv] [--json f.json]  rank the experiment x schedule
                                          x layout grid (parallel DES);
                                          --bounds sweeps every rebalance
@@ -61,11 +61,16 @@ COMMANDS:
                                          under a tight per-stage HBM cap
                                          (the found-vs-family frontier);
                                          --skip-oom settles provably-OOM
-                                         cells statically (no DES)
-  report    [--experiment 1..10] [--v N] [--threads N]
+                                         cells statically (no DES);
+                                         --force-cold disables the
+                                         warm-start DES replay (A/B
+                                         timing)
+  report    [--experiment 1..10 | --all] [--v N] [--threads N]
             [--out report.md]            replication report: markdown +
                                          embedded SVG figures + the
-                                         estimator-vs-DES error tables
+                                         estimator-vs-DES error tables;
+                                         --all renders every Table-3 row
+                                         into one indexed report
   estimate  [--global-batch B --p P --from b:mfu --to b:mfu]
             [--runtime --artifacts DIR]  paper §4 Eq. 4 estimator
   memory    [--experiment 1..10]         per-stage memory profile
@@ -350,10 +355,7 @@ fn runtime_measurements(
     _fx: StageMeasurement,
     _fy: StageMeasurement,
 ) -> anyhow::Result<(StageMeasurement, StageMeasurement)> {
-    anyhow::bail!(
-        "--runtime needs the real PJRT runtime: rebuild with --features pjrt \
-         (and the xla crate available)"
-    )
+    anyhow::bail!("--runtime needs the PJRT runtime: rebuild with --features pjrt")
 }
 
 fn main() -> anyhow::Result<()> {
@@ -439,7 +441,7 @@ fn main() -> anyhow::Result<()> {
             }
         }
         "sweep" => {
-            let args = Args::parse(rest, &["bounds", "skip-oom", "synth"])?;
+            let args = Args::parse(rest, &["bounds", "skip-oom", "synth", "force-cold"])?;
             let v = args.get("v", 2u64)?;
             let threads = args.get("threads", 0usize)?;
             if args.opt("synth").is_some() {
@@ -478,7 +480,10 @@ fn main() -> anyhow::Result<()> {
             };
             let count = tasks.len();
             let skip_oom = args.opt("skip-oom").is_some();
-            let opts = sim::SweepOptions { skip_provable_oom: skip_oom };
+            let opts = sim::SweepOptions {
+                skip_provable_oom: skip_oom,
+                force_cold: args.opt("force-cold").is_some(),
+            };
             let t0 = std::time::Instant::now();
             let report = sim::sweep_with(tasks, threads, opts);
             let dt = t0.elapsed();
@@ -511,19 +516,32 @@ fn main() -> anyhow::Result<()> {
                     count as f64 / dt.as_secs_f64()
                 );
             }
+            if report.events_total > 0 {
+                println!(
+                    "warm-start replay: {} of {} events ({:.1}%){}",
+                    report.events_replayed,
+                    report.events_total,
+                    100.0 * report.events_replayed as f64 / report.events_total as f64,
+                    if opts.force_cold { " [forced cold]" } else { "" }
+                );
+            }
         }
         "report" => {
-            let args = Args::parse(rest, &[])?;
-            let e = experiment_or_exit(args.get("experiment", 8u32)?);
+            let args = Args::parse(rest, &["all"])?;
             let v = args.get("v", 2u64)?;
             let threads = args.get("threads", 0usize)?;
             let out = args.opt("out").unwrap_or("bpipe_report.md");
             let t0 = std::time::Instant::now();
-            let md = report::replication_report(&e, v, threads);
+            let (md, what) = if args.opt("all").is_some() {
+                (report::replication_report_all(v, threads), "all 10 experiments".to_string())
+            } else {
+                let e = experiment_or_exit(args.get("experiment", 8u32)?);
+                let tag = e.id.map(|i| format!("({i})")).unwrap_or_default();
+                (report::replication_report(&e, v, threads), format!("experiment {tag}"))
+            };
             std::fs::write(out, &md)?;
             println!(
-                "wrote replication report for experiment {} to {out}: {} bytes, {} figures, {:.2}s",
-                e.id.map(|i| format!("({i})")).unwrap_or_default(),
+                "wrote replication report for {what} to {out}: {} bytes, {} figures, {:.2}s",
                 md.len(),
                 md.matches("<svg").count(),
                 t0.elapsed().as_secs_f64()
@@ -882,9 +900,8 @@ fn main() -> anyhow::Result<()> {
                     #[cfg(not(feature = "pjrt"))]
                     {
                         eprintln!(
-                            "--backend pjrt needs the real PJRT runtime: rebuild with \
-                             --features pjrt (and the xla crate available), or use \
-                             --backend sim"
+                            "--backend pjrt needs the PJRT runtime: rebuild with \
+                             --features pjrt, or use --backend sim"
                         );
                         std::process::exit(2);
                     }

@@ -760,10 +760,70 @@ pub fn replication_report(e: &ExperimentConfig, v: u64, threads: usize) -> Strin
     render_replication_report(e, &ranking, &bound_outs, frontier_cap, &frontier)
 }
 
+/// The index table heading `bpipe report --all`: one row per Table-3
+/// experiment, linking to its section below.
+fn render_report_index(experiments: &[ExperimentConfig]) -> String {
+    let mut md = String::from(
+        "| exp | model | b | BPipe (paper) | paper MFU % |\n|---|---|---|---|---|\n",
+    );
+    for e in experiments {
+        let id = e.id.expect("Table-3 experiments are numbered");
+        md.push_str(&format!(
+            "| [({id})](#experiment-{id}) | {} | {} | {} | {:.1} |\n",
+            e.model.name,
+            e.parallel.microbatch,
+            if e.bpipe { "yes" } else { "no" },
+            crate::config::paper_table3_mfu(id).unwrap_or(f64::NAN),
+        ));
+    }
+    md
+}
+
+/// `bpipe report --all`: every Table-3 experiment through the full
+/// per-experiment pipeline, concatenated into one indexed markdown
+/// document (each per-experiment report demoted one heading level under
+/// its own `## Experiment (i)` section).
+pub fn replication_report_all(v: u64, threads: usize) -> String {
+    let experiments = crate::config::paper_experiments();
+    let mut md = String::new();
+    md.push_str("# BPipe replication report — all Table-3 experiments\n\n");
+    md.push_str(
+        "Generated by `bpipe report --all`: every Table-3 row through the full \
+         per-experiment pipeline (ranking grid, bound-sensitivity frontier, \
+         found-vs-family frontier, estimator tables).\n\n## Index\n\n",
+    );
+    md.push_str(&render_report_index(&experiments));
+    for e in &experiments {
+        let one = replication_report(e, v, threads);
+        // drop the single-experiment title and demote its sections so
+        // the combined document keeps one H1 and a flat section tree
+        let body = one
+            .replacen("# BPipe replication report\n\n", "", 1)
+            .replace("\n## ", "\n### ");
+        md.push_str(&format!(
+            "\n---\n\n## Experiment ({})\n\n",
+            e.id.expect("Table-3 experiments are numbered")
+        ));
+        md.push_str(&body);
+    }
+    md
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::paper_experiment;
+
+    #[test]
+    fn report_index_links_every_experiment() {
+        let idx = render_report_index(&crate::config::paper_experiments());
+        // header + separator + one row per experiment
+        assert_eq!(idx.lines().count(), 2 + 10);
+        for id in 1..=10 {
+            assert!(idx.contains(&format!("[({id})](#experiment-{id})")), "exp {id}");
+        }
+        assert!(idx.contains("GPT-3 96B") && idx.contains("LLaMA 65B"));
+    }
 
     #[test]
     fn ticks_are_nice_and_cover() {

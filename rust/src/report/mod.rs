@@ -21,6 +21,6 @@ pub mod figures;
 pub mod tables;
 pub mod timeline;
 
-pub use figures::{render_replication_report, replication_report};
+pub use figures::{render_replication_report, replication_report, replication_report_all};
 pub use tables::{render_table2, render_table3, render_table5, Table};
 pub use timeline::{render_layout, render_timeline};

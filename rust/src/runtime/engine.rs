@@ -5,7 +5,14 @@
 //! `PjRtClient::compile` → `execute`.  Artifacts are lowered with
 //! `return_tuple=True`, so every execution returns one tuple literal we
 //! decompose into per-output literals.
+//!
+//! The `xla` names below resolve to the vendored
+//! [`crate::runtime::pjrt_stub`] — an in-tree PJRT-shaped client with
+//! the same API slice (create / compile / upload / execute /
+//! donation aliases), so this module and its twin tests build and run
+//! in CI; swapping in the real `xla` crate is a one-line alias change.
 
+use crate::runtime::pjrt_stub as xla;
 use std::path::Path;
 use std::time::Instant;
 
@@ -131,7 +138,22 @@ impl Executable {
         &self,
         inputs: &[B],
     ) -> anyhow::Result<Vec<xla::Literal>> {
-        let bufs = self.exe.execute_b::<B>(inputs)?;
+        self.run_buffers_donating(inputs, &[])
+    }
+
+    /// [`Self::run_buffers`] with donation: the inputs at `donated`
+    /// positions are consumed by this execution (PJRT's
+    /// `SetUpAlias`-style ownership transfer) and must not be used
+    /// afterwards — `execute_pooled` routes every `Owned` argument
+    /// here so its device buffer is released the moment the
+    /// computation finishes with it.
+    pub fn run_buffers_donating<B: std::borrow::Borrow<xla::PjRtBuffer>>(
+        &self,
+        inputs: &[B],
+        donated: &[usize],
+    ) -> anyhow::Result<Vec<xla::Literal>> {
+        let opts = xla::ExecuteOptions { donated_input_indices: donated.to_vec() };
+        let bufs = self.exe.execute_b_with_options::<B>(inputs, &opts)?;
         let tuple = bufs[0][0].to_literal_sync()?;
         Ok(tuple.to_tuple()?)
     }
@@ -215,13 +237,15 @@ impl crate::runtime::Backend for Runtime {
         outs.iter().map(literal_to_host).collect()
     }
 
-    /// The PJRT mapping of donation: a donated host tensor's device
-    /// buffer exists only for this execution — it is RAII-freed the
-    /// moment the call returns (the upstream `xla` crate exposes no
-    /// aliasing config, so "donate to the computation" degrades to
-    /// "free immediately after", which is what keeps steady-state device
-    /// memory flat).  Donated *host* buffers are dropped, not pooled:
-    /// outputs come back through `Literal::to_vec` (which allocates
+    /// The PJRT mapping of donation: every `Owned` argument's device
+    /// buffer is **donated to the computation** — its position lands in
+    /// the execute options' donated-input set
+    /// ([`Executable::run_buffers_donating`], PJRT's `SetUpAlias`-style
+    /// ownership transfer), so the runtime may reuse its storage for
+    /// outputs and the buffer is invalid (and RAII-freed) the moment
+    /// the call returns.  That is what keeps steady-state device memory
+    /// flat.  Donated *host* buffers are dropped, not pooled: outputs
+    /// come back through `Literal::to_vec` (which allocates
     /// internally), so pooling the large donated activations would only
     /// pin dead host memory the backend can never hand out again — the
     /// pool here serves the coordinator's own small-buffer cycles
@@ -235,12 +259,15 @@ impl crate::runtime::Backend for Runtime {
         out: &mut Vec<crate::runtime::HostTensor>,
     ) -> anyhow::Result<()> {
         out.clear();
+        let offset = usize::from(params.is_some());
         let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(args.len());
-        for a in args.iter_mut() {
+        let mut donated: Vec<usize> = Vec::new();
+        for (i, a) in args.iter_mut().enumerate() {
             match a.take() {
                 crate::runtime::ArgVal::Ref(t) => bufs.push(self.upload(t)?),
                 crate::runtime::ArgVal::Owned(t) => {
                     bufs.push(self.upload(&t)?);
+                    donated.push(offset + i);
                     drop(t);
                 }
             }
@@ -250,7 +277,7 @@ impl crate::runtime::Backend for Runtime {
             refs.push(p);
         }
         refs.extend(bufs.iter());
-        let outs = exe.run_buffers(&refs)?;
+        let outs = exe.run_buffers_donating(&refs, &donated)?;
         for lit in &outs {
             out.push(literal_to_host(lit)?);
         }
@@ -291,5 +318,24 @@ ENTRY main.4 {
     fn missing_file_is_error() {
         let rt = Runtime::cpu().unwrap();
         assert!(rt.load(Path::new("/nonexistent/x.hlo.txt")).is_err());
+    }
+
+    #[test]
+    fn donated_inputs_are_consumed_by_execution() {
+        // execute_pooled's Owned→donated mapping, exercised at the
+        // run_buffers_donating layer: the result is correct and the
+        // donated device buffer is invalid afterwards (real PJRT
+        // rejects donated buffers the same way)
+        let dir = std::env::temp_dir().join(format!("bpipe-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("add_donate.hlo.txt");
+        std::fs::File::create(&path).unwrap().write_all(ADD_HLO.as_bytes()).unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt.load(&path).unwrap();
+        let buf = rt.upload_f32(&[1., 2., 3., 4.], &[4]).unwrap();
+        let out = exe.run_buffers_donating(&[&buf], &[0]).unwrap();
+        assert_eq!(out[0].to_vec::<f32>().unwrap(), vec![2f32, 4., 6., 8.]);
+        assert!(buf.to_literal_sync().is_err(), "donated buffer must be consumed");
+        assert!(exe.run_buffers(&[&buf]).is_err(), "consumed buffer must not re-execute");
     }
 }

@@ -1,0 +1,443 @@
+//! Fixed-width f32 kernels for [`super::SimBackend`] — the fused
+//! forward/backward/Adam loops, vectorized as explicit 8-lane chunks.
+//!
+//! ## Canonical reduction order
+//!
+//! Every reduction here accumulates **chunk-major into 8 lane
+//! accumulators** and collapses them with a fixed tree ([`tree8`]):
+//! lane `l` sums the elements at flat indices `l, 8+l, 16+l, …` (tail
+//! elements land in lanes `0..n%8`), then
+//! `((a0+a4)+(a2+a6)) + ((a1+a5)+(a3+a7))`.  That chunked order *is*
+//! the crate's canonical numerics: the independent per-lane sums give
+//! LLVM a straight-line 8-wide vector body (no loop-carried scalar
+//! dependence, the reason the old sequential loops couldn't vectorize),
+//! and the fixed tree keeps results bit-reproducible across runs,
+//! donation masks, and backends.
+//!
+//! ## The mirrored scalar fallback
+//!
+//! Each kernel has a `*_scalar` twin that walks **lane-major** (one
+//! lane's full element sequence at a time) — a genuinely different,
+//! unvectorizable loop structure that performs the *same per-lane
+//! addition sequence* and the same [`tree8`] collapse, so the two paths
+//! are bit-identical by construction.  `rust/tests/property_kernels.rs`
+//! pins that equivalence across donation masks, odd lengths, and
+//! ±0.0/subnormal inputs; the twins are also the reference if a target
+//! ever needs to opt out of the wide path.
+//!
+//! Elementwise kernels (affine, scale, fill, Adam) have no reduction,
+//! so their twins differ only in loop shape and match trivially.
+
+use crate::util::SplitMix64;
+
+/// Accumulator width: 8 f32 lanes (one AVX2 register, two NEON ones).
+pub const LANES: usize = 8;
+
+/// Adam hyperparameters (the python side's defaults).
+pub const BETA1: f32 = 0.9;
+pub const BETA2: f32 = 0.999;
+pub const EPS: f32 = 1e-8;
+
+/// SplitMix64 finalizer over a raw index — the pseudo-embedding hash.
+#[inline]
+pub fn mix(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic value in [−1, 1) from the hash's top 24 bits (exactly
+/// representable in f32).
+#[inline]
+pub fn unit(x: u64) -> f32 {
+    (mix(x) >> 40) as f32 / (1u64 << 23) as f32 - 1.0
+}
+
+/// The fixed pseudo-embedding of `(token, feature j)`.
+#[inline]
+pub fn emb(token: i32, j: u64) -> f32 {
+    unit((token as u32 as u64).wrapping_mul(0x0100_0003).wrapping_add(j))
+}
+
+/// The canonical lane collapse: `((a0+a4)+(a2+a6)) + ((a1+a5)+(a3+a7))`.
+#[inline]
+fn tree8(acc: [f32; LANES]) -> f32 {
+    let a0 = acc[0] + acc[4];
+    let a1 = acc[1] + acc[5];
+    let a2 = acc[2] + acc[6];
+    let a3 = acc[3] + acc[7];
+    (a0 + a2) + (a1 + a3)
+}
+
+/// Chunk-major single reduction: `Σ f(i)` in canonical order.
+#[inline]
+fn reduce1(n: usize, mut f: impl FnMut(usize) -> f32) -> f32 {
+    let mut acc = [0f32; LANES];
+    let full = n / LANES;
+    for c in 0..full {
+        let base = c * LANES;
+        for (l, a) in acc.iter_mut().enumerate() {
+            *a += f(base + l);
+        }
+    }
+    let base = full * LANES;
+    for l in 0..n - base {
+        acc[l] += f(base + l);
+    }
+    tree8(acc)
+}
+
+/// Lane-major twin of [`reduce1`]: same per-lane addition sequence, same
+/// tree, different loop nest.
+#[inline]
+fn reduce1_scalar(n: usize, mut f: impl FnMut(usize) -> f32) -> f32 {
+    let mut acc = [0f32; LANES];
+    let full = n / LANES;
+    let base = full * LANES;
+    for (l, a) in acc.iter_mut().enumerate() {
+        let mut s = 0f32;
+        for c in 0..full {
+            s += f(c * LANES + l);
+        }
+        if base + l < n {
+            s += f(base + l);
+        }
+        *a = s;
+    }
+    tree8(acc)
+}
+
+/// Chunk-major paired reduction: `(Σ f(i).0, Σ f(i).1)`, both in
+/// canonical order (the fused `(g0, g1)` gradient accumulations).
+#[inline]
+fn reduce2(n: usize, mut f: impl FnMut(usize) -> (f32, f32)) -> (f32, f32) {
+    let mut acc0 = [0f32; LANES];
+    let mut acc1 = [0f32; LANES];
+    let full = n / LANES;
+    for c in 0..full {
+        let base = c * LANES;
+        for l in 0..LANES {
+            let (t0, t1) = f(base + l);
+            acc0[l] += t0;
+            acc1[l] += t1;
+        }
+    }
+    let base = full * LANES;
+    for l in 0..n - base {
+        let (t0, t1) = f(base + l);
+        acc0[l] += t0;
+        acc1[l] += t1;
+    }
+    (tree8(acc0), tree8(acc1))
+}
+
+/// Lane-major twin of [`reduce2`].
+#[inline]
+fn reduce2_scalar(n: usize, mut f: impl FnMut(usize) -> (f32, f32)) -> (f32, f32) {
+    let mut acc0 = [0f32; LANES];
+    let mut acc1 = [0f32; LANES];
+    let full = n / LANES;
+    let base = full * LANES;
+    for l in 0..LANES {
+        let (mut s0, mut s1) = (0f32, 0f32);
+        for c in 0..full {
+            let (t0, t1) = f(c * LANES + l);
+            s0 += t0;
+            s1 += t1;
+        }
+        if base + l < n {
+            let (t0, t1) = f(base + l);
+            s0 += t0;
+            s1 += t1;
+        }
+        acc0[l] = s0;
+        acc1[l] = s1;
+    }
+    (tree8(acc0), tree8(acc1))
+}
+
+/// `first_fwd`: fill `y[p·h + j] = w0·emb(tok[p], j) + w1` (elementwise
+/// over the flat index, 8-wide chunks).
+pub fn fwd_first_fill(y: &mut [f32], tok: &[i32], h: usize, w0: f32, w1: f32) {
+    debug_assert_eq!(y.len(), tok.len() * h);
+    let mut chunks = y.chunks_exact_mut(LANES);
+    let mut i = 0;
+    for chunk in &mut chunks {
+        for o in chunk.iter_mut() {
+            *o = w0 * emb(tok[i / h], (i % h) as u64) + w1;
+            i += 1;
+        }
+    }
+    for o in chunks.into_remainder() {
+        *o = w0 * emb(tok[i / h], (i % h) as u64) + w1;
+        i += 1;
+    }
+}
+
+/// Lane-shape-free twin of [`fwd_first_fill`] (elementwise: same values
+/// in any order; kept as the original nested `(position, feature)` walk).
+pub fn fwd_first_fill_scalar(y: &mut [f32], tok: &[i32], h: usize, w0: f32, w1: f32) {
+    debug_assert_eq!(y.len(), tok.len() * h);
+    let mut i = 0;
+    for &t in tok {
+        for j in 0..h {
+            y[i] = w0 * emb(t, j as u64) + w1;
+            i += 1;
+        }
+    }
+}
+
+/// `mid_fwd`: `data[i] = scale·data[i] + shift` in place, 8-wide chunks.
+pub fn affine_in_place(data: &mut [f32], scale: f32, shift: f32) {
+    let mut chunks = data.chunks_exact_mut(LANES);
+    for chunk in &mut chunks {
+        for v in chunk.iter_mut() {
+            *v = scale * *v + shift;
+        }
+    }
+    for v in chunks.into_remainder() {
+        *v = scale * *v + shift;
+    }
+}
+
+/// Plain-loop twin of [`affine_in_place`].
+pub fn affine_in_place_scalar(data: &mut [f32], scale: f32, shift: f32) {
+    for v in data.iter_mut() {
+        *v = scale * *v + shift;
+    }
+}
+
+/// `mid_bwd` dx (donated-dy arm): `data[i] *= scale` in place.
+pub fn scale_in_place(data: &mut [f32], scale: f32) {
+    let mut chunks = data.chunks_exact_mut(LANES);
+    for chunk in &mut chunks {
+        for v in chunk.iter_mut() {
+            *v *= scale;
+        }
+    }
+    for v in chunks.into_remainder() {
+        *v *= scale;
+    }
+}
+
+/// Plain-loop twin of [`scale_in_place`].
+pub fn scale_in_place_scalar(data: &mut [f32], scale: f32) {
+    for v in data.iter_mut() {
+        *v *= scale;
+    }
+}
+
+/// `mid_bwd` dx (copy arms): `dst[i] = src[i]·scale`.
+pub fn scale_into(dst: &mut [f32], src: &[f32], scale: f32) {
+    debug_assert_eq!(dst.len(), src.len());
+    let mut dc = dst.chunks_exact_mut(LANES);
+    let mut sc = src.chunks_exact(LANES);
+    for (d, s) in (&mut dc).zip(&mut sc) {
+        for (o, v) in d.iter_mut().zip(s.iter()) {
+            *o = *v * scale;
+        }
+    }
+    for (o, v) in dc.into_remainder().iter_mut().zip(sc.remainder().iter()) {
+        *o = *v * scale;
+    }
+}
+
+/// Plain-loop twin of [`scale_into`].
+pub fn scale_into_scalar(dst: &mut [f32], src: &[f32], scale: f32) {
+    for (o, v) in dst.iter_mut().zip(src.iter()) {
+        *o = *v * scale;
+    }
+}
+
+/// `mid_bwd` gradients: `(Σ dy[i]·x[i], Σ dy[i])` in canonical order.
+pub fn reduce_dot_bias(dy: &[f32], x: &[f32]) -> (f32, f32) {
+    debug_assert_eq!(dy.len(), x.len());
+    reduce2(dy.len(), |i| (dy[i] * x[i], dy[i]))
+}
+
+/// Mirrored-order twin of [`reduce_dot_bias`] — bit-identical.
+pub fn reduce_dot_bias_scalar(dy: &[f32], x: &[f32]) -> (f32, f32) {
+    debug_assert_eq!(dy.len(), x.len());
+    reduce2_scalar(dy.len(), |i| (dy[i] * x[i], dy[i]))
+}
+
+/// `first_bwd` gradients over the flat `(position·h + feature)` index:
+/// `(Σ dy[i]·emb(tok[i/h], i%h), Σ dy[i])` in canonical order.
+pub fn reduce_emb_bias(dy: &[f32], tok: &[i32], h: usize) -> (f32, f32) {
+    debug_assert_eq!(dy.len(), tok.len() * h);
+    reduce2(dy.len(), |i| (dy[i] * emb(tok[i / h], (i % h) as u64), dy[i]))
+}
+
+/// Mirrored-order twin of [`reduce_emb_bias`] — bit-identical.
+pub fn reduce_emb_bias_scalar(dy: &[f32], tok: &[i32], h: usize) -> (f32, f32) {
+    debug_assert_eq!(dy.len(), tok.len() * h);
+    reduce2_scalar(dy.len(), |i| (dy[i] * emb(tok[i / h], (i % h) as u64), dy[i]))
+}
+
+/// `last_bwd` per-position row sum `Σ row[j]` in canonical order (the
+/// cross-position loss/gradient epilogue stays sequential in the caller:
+/// positions are few and its order is part of the loss's numerics).
+pub fn row_sum(row: &[f32]) -> f32 {
+    reduce1(row.len(), |i| row[i])
+}
+
+/// Mirrored-order twin of [`row_sum`] — bit-identical.
+pub fn row_sum_scalar(row: &[f32]) -> f32 {
+    reduce1_scalar(row.len(), |i| row[i])
+}
+
+/// Bias-corrected Adam with the buffer-rotation contract: updates `w`
+/// in place, writes the new first moment into `g`'s buffer and the new
+/// second moment into `m`'s buffer (`v` is read-only and its buffer is
+/// the caller's to recycle).  Elementwise, 8-wide chunks.
+pub fn adam_update(w: &mut [f32], g: &mut [f32], m: &mut [f32], v: &[f32], step: i32, lr: f32) {
+    let (bc1, bc2) = (1.0 - BETA1.powi(step), 1.0 - BETA2.powi(step));
+    let n = w.len();
+    debug_assert!(g.len() == n && m.len() == n && v.len() == n);
+    let body = |wi: &mut f32, gi: &mut f32, mi: &mut f32, vi: f32| {
+        let gv = *gi;
+        let m1 = BETA1 * *mi + (1.0 - BETA1) * gv;
+        let v1 = BETA2 * vi + (1.0 - BETA2) * gv * gv;
+        let mhat = m1 / bc1;
+        let vhat = v1 / bc2;
+        *wi -= lr * mhat / (vhat.sqrt() + EPS);
+        *gi = m1; // g's buffer becomes m'
+        *mi = v1; // m's buffer becomes v'
+    };
+    let full = n / LANES;
+    for c in 0..full {
+        let base = c * LANES;
+        for l in 0..LANES {
+            let i = base + l;
+            body(&mut w[i], &mut g[i], &mut m[i], v[i]);
+        }
+    }
+    for i in full * LANES..n {
+        body(&mut w[i], &mut g[i], &mut m[i], v[i]);
+    }
+}
+
+/// Plain-loop twin of [`adam_update`].
+pub fn adam_update_scalar(
+    w: &mut [f32],
+    g: &mut [f32],
+    m: &mut [f32],
+    v: &[f32],
+    step: i32,
+    lr: f32,
+) {
+    let (bc1, bc2) = (1.0 - BETA1.powi(step), 1.0 - BETA2.powi(step));
+    let n = w.len();
+    debug_assert!(g.len() == n && m.len() == n && v.len() == n);
+    for i in 0..n {
+        let gv = g[i];
+        let m1 = BETA1 * m[i] + (1.0 - BETA1) * gv;
+        let v1 = BETA2 * v[i] + (1.0 - BETA2) * gv * gv;
+        let mhat = m1 / bc1;
+        let vhat = v1 / bc2;
+        w[i] -= lr * mhat / (vhat.sqrt() + EPS);
+        g[i] = m1;
+        m[i] = v1;
+    }
+}
+
+/// Seeded parameter init (`{kind}_init`): SplitMix64 values in ±0.1.
+pub fn init_fill(w: &mut [f32], seed: i32) {
+    let mut rng = SplitMix64::new((seed as i64 as u64) ^ 0x5EED_BA5E);
+    for v in w.iter_mut() {
+        *v = (rng.next_f64() * 0.2 - 0.1) as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic "awkward" f32s: mixes signs, magnitudes spanning
+    /// ~40 orders, ±0.0 and subnormals — cancellation-heavy on purpose.
+    fn awkward(n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| match i % 7 {
+                0 => 0.0,
+                1 => -0.0,
+                2 => f32::MIN_POSITIVE / 2.0, // subnormal
+                3 => -(i as f32) * 1e-20,
+                4 => (i as f32).sin() * 1e3,
+                5 => -(i as f32).cos() * 1e-3,
+                _ => unit(i as u64 * 11),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn chunked_and_lane_major_reductions_are_bit_identical() {
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 64, 100, 1023] {
+            let x = awkward(n);
+            let dy = awkward(n + 1)[1..].to_vec();
+            let (a0, a1) = reduce_dot_bias(&dy, &x);
+            let (b0, b1) = reduce_dot_bias_scalar(&dy, &x);
+            assert_eq!(a0.to_bits(), b0.to_bits(), "dot n={n}");
+            assert_eq!(a1.to_bits(), b1.to_bits(), "bias n={n}");
+            assert_eq!(row_sum(&x).to_bits(), row_sum_scalar(&x).to_bits(), "sum n={n}");
+        }
+    }
+
+    #[test]
+    fn tree_reduction_matches_a_hand_sum_on_small_inputs() {
+        // n=3 tail lands in lanes 0..3: tree8 degenerates to a0+a1+a2
+        assert_eq!(row_sum(&[1.0, -2.0, 0.0]), -1.0);
+        assert_eq!(reduce_dot_bias(&[1.0, 1.0, 1.0], &[1.0, -2.0, 0.0]), (-1.0, 3.0));
+        // one full chunk: ((1+16)+(4+64)) + ((2+32)+(8+128))
+        let pow: Vec<f32> = (0..8).map(|i| (1u32 << i) as f32).collect();
+        assert_eq!(row_sum(&pow), 255.0);
+    }
+
+    #[test]
+    fn elementwise_kernels_match_their_twins() {
+        let src = awkward(37);
+        let mut a = src.clone();
+        let mut b = src.clone();
+        affine_in_place(&mut a, 1.5, -0.25);
+        affine_in_place_scalar(&mut b, 1.5, -0.25);
+        assert_eq!(a, b);
+        scale_in_place(&mut a, -3.0);
+        scale_in_place_scalar(&mut b, -3.0);
+        assert_eq!(a, b);
+        let (mut da, mut db) = (vec![0f32; 37], vec![0f32; 37]);
+        scale_into(&mut da, &src, 0.7);
+        scale_into_scalar(&mut db, &src, 0.7);
+        assert_eq!(da, db);
+    }
+
+    #[test]
+    fn adam_twins_rotate_identically() {
+        let n = 29; // odd on purpose
+        let mk = |s: u64| -> Vec<f32> { (0..n).map(|i| unit(i as u64 * 3 + s)).collect() };
+        let (mut w1, mut g1, mut m1) = (mk(1), mk(2), mk(3));
+        let (mut w2, mut g2, mut m2) = (w1.clone(), g1.clone(), m1.clone());
+        let v: Vec<f32> = mk(4).iter().map(|x| x.abs()).collect();
+        adam_update(&mut w1, &mut g1, &mut m1, &v, 3, 1e-2);
+        adam_update_scalar(&mut w2, &mut g2, &mut m2, &v, 3, 1e-2);
+        assert_eq!(w1, w2);
+        assert_eq!(g1, g2);
+        assert_eq!(m1, m2);
+    }
+
+    #[test]
+    fn emb_reduction_twins_agree_on_odd_shapes() {
+        for (positions, h) in [(1usize, 1usize), (3, 5), (4, 8), (5, 13)] {
+            let tok: Vec<i32> = (0..positions as i32).collect();
+            let dy = awkward(positions * h);
+            let a = reduce_emb_bias(&dy, &tok, h);
+            let b = reduce_emb_bias_scalar(&dy, &tok, h);
+            assert_eq!(a.0.to_bits(), b.0.to_bits());
+            assert_eq!(a.1.to_bits(), b.1.to_bits());
+            let mut ya = vec![0f32; positions * h];
+            let mut yb = vec![0f32; positions * h];
+            fwd_first_fill(&mut ya, &tok, h, 0.9, -0.1);
+            fwd_first_fill_scalar(&mut yb, &tok, h, 0.9, -0.1);
+            assert_eq!(ya, yb);
+        }
+    }
+}

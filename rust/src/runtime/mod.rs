@@ -11,7 +11,16 @@
 //! * `engine::Runtime` (feature `pjrt`) — the PJRT CPU client
 //!   executing AOT-compiled HLO-text artifacts.  The python side
 //!   (`python/compile/aot.py`) lowers every stage function ONCE to HLO
-//!   text; this is the only module that touches the `xla` crate.
+//!   text.  The client behind it is the vendored [`pjrt_stub`] — a
+//!   minimal in-tree PJRT-shaped implementation (create / compile /
+//!   upload / execute / donation aliases) that keeps the feature
+//!   compiling and its gated tests running in CI until the real `xla`
+//!   crate is dropped in under the same names.
+//!
+//! [`kernels`] holds the fixed-width f32 compute kernels behind the
+//! sim backend — chunk-major 8-lane accumulation with a fixed tree
+//! reduction, the crate's canonical numerics — plus their mirrored
+//! scalar twins for the bit-identity property suite.
 //!
 //! [`artifact::Manifest`] is the shared contract: the python→rust
 //! manifest.json describing every artifact's shapes and the per-kind
@@ -37,6 +46,9 @@ pub mod buffer_pool;
 #[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod fault;
+pub mod kernels;
+#[cfg(feature = "pjrt")]
+pub mod pjrt_stub;
 pub mod sim_backend;
 
 pub use artifact::{ArtifactMeta, Manifest, TensorMeta};
@@ -46,6 +58,9 @@ pub use fault::{Fault, FaultPlan, FaultyBackend, InjectedFault};
 #[cfg(feature = "pjrt")]
 pub use engine::{Executable, Runtime};
 pub use sim_backend::{SimBackend, UnpooledSimBackend};
+
+#[cfg(feature = "pjrt")]
+use pjrt_stub as xla;
 
 /// Convert a flat f32 slice into a Literal of the given shape.
 #[cfg(feature = "pjrt")]

@@ -1,0 +1,689 @@
+//! Vendored PJRT stub — a minimal in-tree PJRT-shaped client.
+//!
+//! The `pjrt` feature's real backend is the `xla` crate (a PJRT CPU
+//! client executing AOT-lowered HLO text).  That crate is not vendored;
+//! this module implements the exact slice of its API that
+//! [`crate::runtime::engine`] consumes — create / compile / upload /
+//! execute / donation aliases — so the feature compiles, its gated twin
+//! tests run in CI, and the day the real crate lands it drops in under
+//! the same names (`use ... as xla`).
+//!
+//! Semantics, not ceremony:
+//!
+//! * **Compile** parses the HLO text (the same modules
+//!   `python/compile/aot.py` lowers) into a tiny instruction list and
+//!   **execute** interprets it — `parameter` / `add` / `multiply` /
+//!   `subtract` / `negate` / `tuple` over `f32`/`s32` arrays — so the
+//!   `f(x) = (x + x,)` twin tests exercise a real
+//!   upload→execute→download round trip, not a mock that echoes inputs.
+//! * **Donation** follows PJRT's model: inputs donated via
+//!   [`ExecuteOptions::donated_input_indices`] (or pre-declared with
+//!   [`CompileOptions::set_up_alias`], XLA's `SetUpAlias`) are invalid
+//!   after the execution — any later use errors, exactly how a real
+//!   PJRT client rejects a donated buffer.  `execute_pooled`'s
+//!   `Owned`-argument donation maps straight onto this.
+//! * **Buffers** are host-backed and RAII-managed; `to_literal_sync`
+//!   copies out, mirroring the synchronous
+//!   `buffer_from_host_buffer` semantics the engine relies on.
+
+use std::borrow::Borrow;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Stub error type (the `xla` crate's error, shaped for `anyhow?`).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "pjrt-stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn err<T>(msg: impl Into<String>) -> Result<T, Error> {
+    Err(Error(msg.into()))
+}
+
+/// XLA element types (only the slice the runtime touches is
+/// interpreted; the rest exist so dtype dispatch stays a real `match`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    U32,
+    F32,
+    F64,
+}
+
+/// Array dimensions of a non-tuple literal.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Host types that map onto an XLA element type.
+pub trait NativeType: Copy + 'static {
+    const ELEMENT_TYPE: ElementType;
+    fn literal_from(data: &[Self], dims: Vec<i64>) -> Literal;
+    fn vec_from(lit: &Literal) -> Result<Vec<Self>, Error>;
+}
+
+impl NativeType for f32 {
+    const ELEMENT_TYPE: ElementType = ElementType::F32;
+    fn literal_from(data: &[Self], dims: Vec<i64>) -> Literal {
+        Literal::F32(data.to_vec(), dims)
+    }
+    fn vec_from(lit: &Literal) -> Result<Vec<Self>, Error> {
+        match lit {
+            Literal::F32(d, _) => Ok(d.clone()),
+            other => err(format!("to_vec::<f32> on {:?}", other.type_tag())),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const ELEMENT_TYPE: ElementType = ElementType::S32;
+    fn literal_from(data: &[Self], dims: Vec<i64>) -> Literal {
+        Literal::I32(data.to_vec(), dims)
+    }
+    fn vec_from(lit: &Literal) -> Result<Vec<Self>, Error> {
+        match lit {
+            Literal::I32(d, _) => Ok(d.clone()),
+            other => err(format!("to_vec::<i32> on {:?}", other.type_tag())),
+        }
+    }
+}
+
+/// A host-side value: flat data + dims, or a tuple of values.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Literal {
+    F32(Vec<f32>, Vec<i64>),
+    I32(Vec<i32>, Vec<i64>),
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        T::literal_from(data, vec![data.len() as i64])
+    }
+
+    fn type_tag(&self) -> &'static str {
+        match self {
+            Literal::F32(..) => "f32",
+            Literal::I32(..) => "s32",
+            Literal::Tuple(_) => "tuple",
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            Literal::F32(d, _) => d.len(),
+            Literal::I32(d, _) => d.len(),
+            Literal::Tuple(t) => t.len(),
+        }
+    }
+
+    /// Same data, new dims (element counts must agree).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.len() {
+            return err(format!("reshape {:?} to {dims:?}: element count mismatch", self.len()));
+        }
+        match self {
+            Literal::F32(d, _) => Ok(Literal::F32(d.clone(), dims.to_vec())),
+            Literal::I32(d, _) => Ok(Literal::I32(d.clone(), dims.to_vec())),
+            Literal::Tuple(_) => err("reshape on a tuple literal"),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        T::vec_from(self)
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape, Error> {
+        match self {
+            Literal::F32(_, dims) | Literal::I32(_, dims) => {
+                Ok(ArrayShape { dims: dims.clone() })
+            }
+            Literal::Tuple(_) => err("array_shape on a tuple literal"),
+        }
+    }
+
+    pub fn element_type(&self) -> Result<ElementType, Error> {
+        match self {
+            Literal::F32(..) => Ok(ElementType::F32),
+            Literal::I32(..) => Ok(ElementType::S32),
+            Literal::Tuple(_) => err("element_type on a tuple literal"),
+        }
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        match self {
+            Literal::Tuple(t) => Ok(t.clone()),
+            other => err(format!("to_tuple on a {:?} literal", other.type_tag())),
+        }
+    }
+}
+
+/// The raw HLO text of a module (parsing happens at compile, like a
+/// real client; `from_text_file` only touches the filesystem).
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<Self, Error> {
+        match std::fs::read_to_string(path) {
+            Ok(text) => Ok(Self { text }),
+            Err(e) => err(format!("read {path}: {e}")),
+        }
+    }
+
+    pub fn from_text(text: &str) -> Self {
+        Self { text: text.to_string() }
+    }
+}
+
+/// A computation handed to [`PjRtClient::compile`].
+pub struct XlaComputation {
+    text: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> Self {
+        Self { text: proto.text.clone() }
+    }
+}
+
+/// Compile-time input/output aliasing — XLA's `SetUpAlias`.  An aliased
+/// parameter's buffer is donated on **every** execution of the
+/// compiled executable (its storage is reused for the output), on top
+/// of any per-call [`ExecuteOptions::donated_input_indices`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CompileOptions {
+    aliased_params: Vec<usize>,
+}
+
+impl CompileOptions {
+    /// Alias output `_output_index` with parameter `param_index` (the
+    /// stub records the donation side; output placement is host-backed
+    /// so the storage reuse itself is a no-op).
+    pub fn set_up_alias(&mut self, _output_index: usize, param_index: usize) {
+        if !self.aliased_params.contains(&param_index) {
+            self.aliased_params.push(param_index);
+        }
+    }
+}
+
+/// Per-execution options — PJRT's donation control.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ExecuteOptions {
+    /// Input positions whose buffers this execution consumes.
+    pub donated_input_indices: Vec<usize>,
+}
+
+// ---------------------------------------------------------------------
+// HLO text interpreter
+
+#[derive(Debug, Clone)]
+enum Op {
+    Parameter(usize),
+    Add(String, String),
+    Multiply(String, String),
+    Subtract(String, String),
+    Negate(String),
+    Tuple(Vec<String>),
+}
+
+#[derive(Debug, Clone)]
+struct Instr {
+    result: String,
+    is_root: bool,
+    op: Op,
+}
+
+/// Parse the ENTRY block of an HLO-text module into an instruction
+/// list.  Grammar: `[ROOT] name = TYPE opcode(args)` — the shape
+/// `aot.py` lowers and the twin tests feed.
+fn parse_entry(text: &str) -> Result<Vec<Instr>, Error> {
+    let mut instrs = Vec::new();
+    let mut in_entry = false;
+    for raw in text.lines() {
+        let line = raw.trim();
+        if line.starts_with("ENTRY ") && line.ends_with('{') {
+            in_entry = true;
+            continue;
+        }
+        if !in_entry {
+            continue;
+        }
+        if line.starts_with('}') {
+            break;
+        }
+        if line.is_empty() {
+            continue;
+        }
+        let (is_root, line) = match line.strip_prefix("ROOT ") {
+            Some(rest) => (true, rest),
+            None => (false, line),
+        };
+        let Some((result, rhs)) = line.split_once(" = ") else {
+            return err(format!("malformed instruction {line:?}"));
+        };
+        let op = parse_op(rhs.trim())?;
+        instrs.push(Instr { result: result.trim().to_string(), is_root, op });
+    }
+    if instrs.is_empty() {
+        return err("no ENTRY block found");
+    }
+    if !instrs.iter().any(|i| i.is_root) {
+        return err("ENTRY block has no ROOT instruction");
+    }
+    Ok(instrs)
+}
+
+/// Parse `TYPE opcode(args...)` — the type annotation is skipped (the
+/// interpreter is shape-polymorphic), the opcode located by name.
+fn parse_op(rhs: &str) -> Result<Op, Error> {
+    const OPS: [&str; 6] = ["parameter", "add", "multiply", "subtract", "negate", "tuple"];
+    for name in OPS {
+        let needle = format!(" {name}(");
+        let Some(at) = rhs.find(&needle) else { continue };
+        let open = at + needle.len();
+        let Some(close_rel) = rhs[open..].find(')') else {
+            return err(format!("unterminated {name}(...) in {rhs:?}"));
+        };
+        let args: Vec<String> = rhs[open..open + close_rel]
+            .split(',')
+            .map(|a| a.trim().to_string())
+            .filter(|a| !a.is_empty())
+            .collect();
+        let arity = |n: usize| -> Result<(), Error> {
+            if args.len() == n {
+                Ok(())
+            } else {
+                err(format!("{name} wants {n} operand(s), got {} in {rhs:?}", args.len()))
+            }
+        };
+        return Ok(match name {
+            "parameter" => {
+                arity(1)?;
+                Op::Parameter(
+                    args[0]
+                        .parse()
+                        .map_err(|e| Error(format!("parameter index {:?}: {e}", args[0])))?,
+                )
+            }
+            "add" => {
+                arity(2)?;
+                Op::Add(args[0].clone(), args[1].clone())
+            }
+            "multiply" => {
+                arity(2)?;
+                Op::Multiply(args[0].clone(), args[1].clone())
+            }
+            "subtract" => {
+                arity(2)?;
+                Op::Subtract(args[0].clone(), args[1].clone())
+            }
+            "negate" => {
+                arity(1)?;
+                Op::Negate(args[0].clone())
+            }
+            _ => Op::Tuple(args),
+        });
+    }
+    err(format!("unsupported HLO opcode in {rhs:?}"))
+}
+
+fn binary(
+    env: &HashMap<String, Literal>,
+    a: &str,
+    b: &str,
+    name: &str,
+    f32_op: impl Fn(f32, f32) -> f32,
+    i32_op: impl Fn(i32, i32) -> i32,
+) -> Result<Literal, Error> {
+    let (x, y) = (lookup(env, a)?, lookup(env, b)?);
+    match (x, y) {
+        (Literal::F32(xa, xd), Literal::F32(ya, yd)) if xd == yd => {
+            Ok(Literal::F32(xa.iter().zip(ya).map(|(&p, &q)| f32_op(p, q)).collect(), xd.clone()))
+        }
+        (Literal::I32(xa, xd), Literal::I32(ya, yd)) if xd == yd => {
+            Ok(Literal::I32(xa.iter().zip(ya).map(|(&p, &q)| i32_op(p, q)).collect(), xd.clone()))
+        }
+        (x, y) => err(format!(
+            "{name}({a}, {b}): operand mismatch ({:?} vs {:?})",
+            x.type_tag(),
+            y.type_tag()
+        )),
+    }
+}
+
+fn lookup<'e>(env: &'e HashMap<String, Literal>, name: &str) -> Result<&'e Literal, Error> {
+    env.get(name).ok_or_else(|| Error(format!("undefined operand {name:?}")))
+}
+
+fn evaluate(instrs: &[Instr], params: &[Literal]) -> Result<Literal, Error> {
+    let mut env: HashMap<String, Literal> = HashMap::new();
+    let mut root = None;
+    for i in instrs {
+        let v = match &i.op {
+            Op::Parameter(k) => match params.get(*k) {
+                Some(p) => p.clone(),
+                None => {
+                    return err(format!(
+                        "parameter({k}) but only {} argument(s) were passed",
+                        params.len()
+                    ))
+                }
+            },
+            Op::Add(a, b) => binary(&env, a, b, "add", |p, q| p + q, |p, q| p.wrapping_add(q))?,
+            Op::Multiply(a, b) => {
+                binary(&env, a, b, "multiply", |p, q| p * q, |p, q| p.wrapping_mul(q))?
+            }
+            Op::Subtract(a, b) => {
+                binary(&env, a, b, "subtract", |p, q| p - q, |p, q| p.wrapping_sub(q))?
+            }
+            Op::Negate(a) => match lookup(&env, a)? {
+                Literal::F32(d, dims) => {
+                    Literal::F32(d.iter().map(|&x| -x).collect(), dims.clone())
+                }
+                Literal::I32(d, dims) => {
+                    Literal::I32(d.iter().map(|&x| x.wrapping_neg()).collect(), dims.clone())
+                }
+                Literal::Tuple(_) => return err(format!("negate({a}) on a tuple")),
+            },
+            Op::Tuple(names) => Literal::Tuple(
+                names
+                    .iter()
+                    .map(|n| lookup(&env, n).cloned())
+                    .collect::<Result<Vec<_>, Error>>()?,
+            ),
+        };
+        if i.is_root {
+            root = Some(v.clone());
+        }
+        env.insert(i.result.clone(), v);
+    }
+    root.ok_or_else(|| Error("ROOT instruction produced no value".into()))
+}
+
+// ---------------------------------------------------------------------
+// Client / buffers / executables
+
+/// A device-resident buffer (host-backed).  Donation invalidates it:
+/// every access after a donating execution errors, like real PJRT.
+pub struct PjRtBuffer {
+    lit: Literal,
+    consumed: AtomicBool,
+}
+
+impl PjRtBuffer {
+    fn new(lit: Literal) -> Self {
+        Self { lit, consumed: AtomicBool::new(false) }
+    }
+
+    fn literal(&self) -> Result<&Literal, Error> {
+        if self.consumed.load(Ordering::Acquire) {
+            return err("buffer was donated to a computation and is no longer valid");
+        }
+        Ok(&self.lit)
+    }
+
+    /// Copy the buffer back to the host.
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Ok(self.literal()?.clone())
+    }
+}
+
+/// The stub PJRT client ("cpu-stub" platform).  `Clone` shares the
+/// underlying client like the real crate's refcounted handle.
+#[derive(Clone)]
+pub struct PjRtClient {
+    _inner: Arc<()>,
+}
+
+impl PjRtClient {
+    /// Create the CPU client.
+    pub fn cpu() -> Result<Self, Error> {
+        Ok(Self { _inner: Arc::new(()) })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub".to_string()
+    }
+
+    /// Compile a computation (parses the HLO text here, so malformed
+    /// modules fail at compile like a real client).
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        self.compile_with_options(comp, CompileOptions::default())
+    }
+
+    /// [`PjRtClient::compile`] with donation aliases pre-declared.
+    pub fn compile_with_options(
+        &self,
+        comp: &XlaComputation,
+        options: CompileOptions,
+    ) -> Result<PjRtLoadedExecutable, Error> {
+        let instrs = parse_entry(&comp.text)?;
+        Ok(PjRtLoadedExecutable { client: self.clone(), instrs, options })
+    }
+
+    /// Synchronous host→device upload (`kImmutableOnlyDuringCall`
+    /// semantics: `data` is copied before this returns).
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer, Error> {
+        let dims_i: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        let n: i64 = dims_i.iter().product();
+        if n as usize != data.len() {
+            return err(format!("upload: {} elements do not fill shape {dims:?}", data.len()));
+        }
+        Ok(PjRtBuffer::new(T::literal_from(data, dims_i)))
+    }
+}
+
+/// A compiled executable: the parsed instruction list plus its client
+/// handle and compile-time aliasing.
+pub struct PjRtLoadedExecutable {
+    client: PjRtClient,
+    instrs: Vec<Instr>,
+    options: CompileOptions,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    /// Execute on device-resident inputs; one output buffer per device
+    /// (single device here), holding the ROOT value.
+    pub fn execute_b<B: Borrow<PjRtBuffer>>(
+        &self,
+        inputs: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        self.execute_b_with_options(inputs, &ExecuteOptions::default())
+    }
+
+    /// [`PjRtLoadedExecutable::execute_b`] with per-call donation: the
+    /// buffers at `donated_input_indices` (plus any compile-time
+    /// aliases) are consumed by this execution and invalid afterwards.
+    pub fn execute_b_with_options<B: Borrow<PjRtBuffer>>(
+        &self,
+        inputs: &[B],
+        options: &ExecuteOptions,
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        for &i in options.donated_input_indices.iter().chain(&self.options.aliased_params) {
+            if i >= inputs.len() {
+                return err(format!("donated index {i} out of range ({} inputs)", inputs.len()));
+            }
+        }
+        let params: Vec<Literal> = inputs
+            .iter()
+            .map(|b| b.borrow().literal().cloned())
+            .collect::<Result<Vec<_>, Error>>()?;
+        let root = evaluate(&self.instrs, &params)?;
+        // donation takes effect only once the execution has succeeded
+        for &i in options.donated_input_indices.iter().chain(&self.options.aliased_params) {
+            inputs[i].borrow().consumed.store(true, Ordering::Release);
+        }
+        Ok(vec![vec![PjRtBuffer::new(root)]])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ADD_HLO: &str = r#"HloModule jit_fn, entry_computation_layout={(f32[4]{0})->(f32[4]{0})}
+
+ENTRY main.4 {
+  Arg_0.1 = f32[4]{0} parameter(0)
+  add.2 = f32[4]{0} add(Arg_0.1, Arg_0.1)
+  ROOT tuple.3 = (f32[4]{0}) tuple(add.2)
+}
+"#;
+
+    fn compile(text: &str) -> PjRtLoadedExecutable {
+        let client = PjRtClient::cpu().unwrap();
+        client.compile(&XlaComputation::from_proto(&HloModuleProto::from_text(text))).unwrap()
+    }
+
+    #[test]
+    fn interprets_the_twin_module() {
+        let exe = compile(ADD_HLO);
+        let client = exe.client().clone();
+        let x = client.buffer_from_host_buffer(&[1f32, 2., 3., 4.], &[4], None).unwrap();
+        let out = exe.execute_b(&[&x]).unwrap();
+        let tuple = out[0][0].to_literal_sync().unwrap().to_tuple().unwrap();
+        assert_eq!(tuple.len(), 1);
+        assert_eq!(tuple[0].to_vec::<f32>().unwrap(), vec![2f32, 4., 6., 8.]);
+        // non-donated inputs survive the execution
+        assert_eq!(x.to_literal_sync().unwrap().to_vec::<f32>().unwrap(), vec![1., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn arithmetic_opcodes_and_s32() {
+        let hlo = r#"HloModule ops
+ENTRY main {
+  a = s32[3]{0} parameter(0)
+  b = s32[3]{0} parameter(1)
+  prod = s32[3]{0} multiply(a, b)
+  diff = s32[3]{0} subtract(prod, a)
+  neg = s32[3]{0} negate(diff)
+  ROOT out = (s32[3]{0}, s32[3]{0}) tuple(diff, neg)
+}
+"#;
+        let exe = compile(hlo);
+        let c = exe.client().clone();
+        let a = c.buffer_from_host_buffer(&[1i32, 2, 3], &[3], None).unwrap();
+        let b = c.buffer_from_host_buffer(&[10i32, 20, 30], &[3], None).unwrap();
+        let out = exe.execute_b(&[&a, &b]).unwrap();
+        let t = out[0][0].to_literal_sync().unwrap().to_tuple().unwrap();
+        assert_eq!(t[0].to_vec::<i32>().unwrap(), vec![9, 38, 87]);
+        assert_eq!(t[1].to_vec::<i32>().unwrap(), vec![-9, -38, -87]);
+        assert_eq!(t[0].element_type().unwrap(), ElementType::S32);
+    }
+
+    #[test]
+    fn execute_donation_invalidates_the_input() {
+        let exe = compile(ADD_HLO);
+        let x = exe
+            .client()
+            .buffer_from_host_buffer(&[1f32, 2., 3., 4.], &[4], None)
+            .unwrap();
+        let opts = ExecuteOptions { donated_input_indices: vec![0] };
+        let out = exe.execute_b_with_options(&[&x], &opts).unwrap();
+        let t = out[0][0].to_literal_sync().unwrap().to_tuple().unwrap();
+        assert_eq!(t[0].to_vec::<f32>().unwrap(), vec![2., 4., 6., 8.]);
+        // the donated buffer is dead: reads and re-executions both fail
+        assert!(x.to_literal_sync().is_err());
+        assert!(exe.execute_b(&[&x]).is_err());
+    }
+
+    #[test]
+    fn set_up_alias_donates_on_every_execution() {
+        let client = PjRtClient::cpu().unwrap();
+        let mut copts = CompileOptions::default();
+        copts.set_up_alias(0, 0);
+        let exe = client
+            .compile_with_options(
+                &XlaComputation::from_proto(&HloModuleProto::from_text(ADD_HLO)),
+                copts,
+            )
+            .unwrap();
+        let x = client.buffer_from_host_buffer(&[1f32, 0., 0., 0.], &[4], None).unwrap();
+        exe.execute_b(&[&x]).unwrap();
+        assert!(x.to_literal_sync().is_err(), "aliased param must be consumed");
+    }
+
+    #[test]
+    fn failed_execution_does_not_consume_donations() {
+        let hlo = r#"HloModule two
+ENTRY main {
+  a = f32[2]{0} parameter(0)
+  b = f32[2]{0} parameter(1)
+  ROOT t = (f32[2]{0}) tuple(a)
+}
+"#;
+        let exe = compile(hlo);
+        let c = exe.client().clone();
+        let a = c.buffer_from_host_buffer(&[1f32, 2.], &[2], None).unwrap();
+        // arity error: executable wants 2 params, gets 1 — but index 0
+        // must still be alive afterwards
+        let opts = ExecuteOptions { donated_input_indices: vec![0] };
+        assert!(exe.execute_b_with_options(&[&a], &opts).is_err());
+        assert!(a.to_literal_sync().is_ok(), "failed run must not consume the donation");
+    }
+
+    #[test]
+    fn literal_shape_round_trips() {
+        let lit = Literal::vec1(&[1f32, 2., 3., 4., 5., 6.]);
+        let r = lit.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 3]);
+        assert_eq!(r.element_type().unwrap(), ElementType::F32);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+        assert!(lit.reshape(&[4, 2]).is_err());
+        assert!(lit.to_vec::<i32>().is_err());
+        assert!(lit.to_tuple().is_err());
+        let tup = Literal::Tuple(vec![lit]);
+        assert!(tup.array_shape().is_err());
+        assert!(tup.element_type().is_err());
+    }
+
+    #[test]
+    fn malformed_modules_fail_at_compile() {
+        let client = PjRtClient::cpu().unwrap();
+        for bad in [
+            "",                                       // no ENTRY
+            "ENTRY main {\n}\n",                      // empty body
+            "ENTRY main {\n  a = f32[1]{0} parameter(0)\n}\n", // no ROOT
+            "ENTRY main {\n  ROOT a = f32[1]{0} cosine(a)\n}\n", // unknown opcode
+        ] {
+            let comp = XlaComputation::from_proto(&HloModuleProto::from_text(bad));
+            assert!(client.compile(&comp).is_err(), "{bad:?} must not compile");
+        }
+    }
+
+    #[test]
+    fn upload_validates_shape() {
+        let c = PjRtClient::cpu().unwrap();
+        assert!(c.buffer_from_host_buffer(&[1f32, 2.], &[3], None).is_err());
+        assert_eq!(c.platform_name(), "cpu-stub");
+    }
+}

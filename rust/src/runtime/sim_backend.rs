@@ -25,11 +25,14 @@
 //! * `adam_{kind}(w, g, m, v, step, lr) → (w', m', v')` — standard
 //!   bias-corrected Adam, f32 throughout.
 //!
-//! All reductions accumulate sequentially in index order, so results
-//! are **bit-reproducible** — and because the ops are pure functions of
-//! their inputs, a BPipe-rebalanced run (whose Evict/Load just move
-//! stashes between stores) computes bit-identical losses to its
-//! baseline, the paper's central claim, now asserted in tier-1
+//! All loops run through the fixed-width kernels in
+//! [`super::kernels`]: reductions accumulate chunk-major into 8 lane
+//! accumulators and collapse through a fixed tree (the crate's
+//! canonical reduction order — vectorizable *and* bit-reproducible),
+//! and because the ops are pure functions of their inputs, a
+//! BPipe-rebalanced run (whose Evict/Load just move stashes between
+//! stores) computes bit-identical losses to its baseline, the paper's
+//! central claim, now asserted in tier-1
 //! (`rust/tests/integration_runtime.rs`).
 //!
 //! ## Buffer donation
@@ -46,31 +49,7 @@
 use super::artifact::Manifest;
 use super::backend::{Arg, ArgVal, Backend, HostTensor};
 use super::buffer_pool::BufferPool;
-use crate::util::SplitMix64;
-
-/// Adam hyperparameters (the python side's defaults).
-const BETA1: f32 = 0.9;
-const BETA2: f32 = 0.999;
-const EPS: f32 = 1e-8;
-
-/// SplitMix64 finalizer over a raw index — the pseudo-embedding hash.
-fn mix(x: u64) -> u64 {
-    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
-    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-    z ^ (z >> 31)
-}
-
-/// Deterministic value in [−1, 1) from the hash's top 24 bits (exactly
-/// representable in f32).
-fn unit(x: u64) -> f32 {
-    (mix(x) >> 40) as f32 / (1u64 << 23) as f32 - 1.0
-}
-
-/// The fixed pseudo-embedding of `(token, feature j)`.
-fn emb(token: i32, j: u64) -> f32 {
-    unit((token as u32 as u64).wrapping_mul(0x0100_0003).wrapping_add(j))
-}
+use super::kernels;
 
 /// What a compiled sim artifact computes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -201,10 +180,7 @@ impl Backend for SimBackend {
                 let seed = seedv.view().i32s()?[0];
                 seedv.recycle(pool);
                 let mut w_out = pool.take_f32_len(exe.n_params, &[exe.n_params as i64]);
-                let mut rng = SplitMix64::new((seed as i64 as u64) ^ 0x5EED_BA5E);
-                for v in w_out.f32s_mut()? {
-                    *v = (rng.next_f64() * 0.2 - 0.1) as f32;
-                }
+                kernels::init_fill(w_out.f32s_mut()?, seed);
                 out.push(w_out);
             }
             SimOp::FwdFirst => {
@@ -225,14 +201,7 @@ impl Backend for SimBackend {
                     sh[..ts.len()].copy_from_slice(ts);
                     sh[ts.len()] = h as i64;
                     let mut y = pool.take_f32_len(tok.len() * h, &sh[..=ts.len()]);
-                    let yd = y.f32s_mut()?;
-                    let mut i = 0;
-                    for &t in tok {
-                        for j in 0..h {
-                            yd[i] = w0 * emb(t, j as u64) + w1;
-                            i += 1;
-                        }
-                    }
+                    kernels::fwd_first_fill(y.f32s_mut()?, tok, h, w0, w1);
                     y
                 };
                 tokv.recycle(pool);
@@ -250,9 +219,7 @@ impl Backend for SimBackend {
                 // a donated x is consumed in place; a borrowed x is copied
                 // into a pooled buffer first — same arithmetic either way
                 let mut y = owned_f32_or_copy(inp.take(1), pool)?;
-                for v in y.f32s_mut()? {
-                    *v = scale * *v + shift;
-                }
+                kernels::affine_in_place(y.f32s_mut()?, scale, shift);
                 out.push(y);
             }
             SimOp::BwdFirst => {
@@ -266,15 +233,7 @@ impl Backend for SimBackend {
                     let tok = tokv.view().i32s()?;
                     let dy = dyv.view().f32s()?;
                     anyhow::ensure!(dy.len() == tok.len() * h, "{}: dy shape mismatch", exe.name);
-                    let (mut g0, mut g1) = (0f32, 0f32);
-                    for (p, &t) in tok.iter().enumerate() {
-                        for j in 0..h {
-                            let d = dy[p * h + j];
-                            g0 += d * emb(t, j as u64);
-                            g1 += d;
-                        }
-                    }
-                    (g0, g1)
+                    kernels::reduce_emb_bias(dy, tok, h)
                 };
                 tokv.recycle(pool);
                 dyv.recycle(pool);
@@ -292,12 +251,7 @@ impl Backend for SimBackend {
                     let x = xv.view().f32s()?;
                     let dy = dyv.view().f32s()?;
                     anyhow::ensure!(x.len() == dy.len(), "{}: x/dy length mismatch", exe.name);
-                    let (mut g0, mut g1) = (0f32, 0f32);
-                    for (d, xval) in dy.iter().zip(x.iter()) {
-                        g0 += d * xval;
-                        g1 += d;
-                    }
-                    (g0, g1)
+                    kernels::reduce_dot_bias(dy, x)
                 };
                 // dx = dy · (1 + w0), shaped like dy; donated buffers are
                 // reused (x's first, else dy's in place), pooled otherwise
@@ -308,13 +262,7 @@ impl Backend for SimBackend {
                 let dx = match (xv, dyv) {
                     (ArgVal::Owned(xb), dyv) if matches!(xb, HostTensor::F32 { .. }) => {
                         let mut xb = xb;
-                        {
-                            let dst = xb.f32s_mut()?;
-                            let dy = dyv.view().f32s()?;
-                            for (o, d) in dst.iter_mut().zip(dy.iter()) {
-                                *o = *d * scale;
-                            }
-                        }
+                        kernels::scale_into(xb.f32s_mut()?, dyv.view().f32s()?, scale);
                         xb.set_shape(&dsh[..dk]);
                         dyv.recycle(pool);
                         xb
@@ -322,20 +270,12 @@ impl Backend for SimBackend {
                     (xv, ArgVal::Owned(db)) if matches!(db, HostTensor::F32 { .. }) => {
                         xv.recycle(pool);
                         let mut db = db;
-                        for o in db.f32s_mut()? {
-                            *o = *o * scale;
-                        }
+                        kernels::scale_in_place(db.f32s_mut()?, scale);
                         db
                     }
                     (xv, dyv) => {
                         let mut dx = pool.take_f32_len(dyv.len(), &dsh[..dk]);
-                        {
-                            let dst = dx.f32s_mut()?;
-                            let dy = dyv.view().f32s()?;
-                            for (o, d) in dst.iter_mut().zip(dy.iter()) {
-                                *o = *d * scale;
-                            }
-                        }
+                        kernels::scale_into(dx.f32s_mut()?, dyv.view().f32s()?, scale);
                         xv.recycle(pool);
                         dyv.recycle(pool);
                         dx
@@ -366,11 +306,12 @@ impl Backend for SimBackend {
                     let inv_n = 1.0f32 / tgt.len() as f32;
                     let inv_v = 1.0f32 / self.vocab as f32;
                     let (mut loss, mut g0, mut g1) = (0f32, 0f32, 0f32);
+                    // per-row sums go through the canonical chunked
+                    // reduction; the cross-position accumulation below
+                    // stays sequential (position order is part of the
+                    // loss numerics)
                     for (p, &t) in tgt.iter().enumerate() {
-                        let mut u = 0f32;
-                        for j in 0..h {
-                            u += x[p * h + j];
-                        }
+                        let mut u = kernels::row_sum(&x[p * h..(p + 1) * h]);
                         u *= inv_h;
                         let pred = w0 * u + w1;
                         let target = t as f32 * inv_v - 0.5;
@@ -380,9 +321,7 @@ impl Backend for SimBackend {
                         g0 += dpred * u;
                         g1 += dpred;
                         let dxv = dpred * w0 * inv_h;
-                        for j in 0..h {
-                            x[p * h + j] = dxv;
-                        }
+                        x[p * h..(p + 1) * h].fill(dxv);
                     }
                     loss *= inv_n;
                     (loss, g0, g1)
@@ -414,8 +353,6 @@ impl Backend for SimBackend {
                 let lrv = inp.take(5);
                 let lr = lrv.view().f32s()?[0];
                 lrv.recycle(pool);
-                let bc1 = 1.0 - BETA1.powi(step);
-                let bc2 = 1.0 - BETA2.powi(step);
                 // working buffers: donated state updates in place (borrowed
                 // inputs are copied into pooled buffers); `g`'s buffer
                 // becomes the new `m`, `m`'s the new `v`, and the spare old
@@ -424,22 +361,14 @@ impl Backend for SimBackend {
                 let mut gb = owned_f32_or_copy(gv, pool)?;
                 let mut mb = owned_f32_or_copy(mv, pool)?;
                 let vb = owned_f32_or_copy(vv, pool)?;
-                {
-                    let w = wb.f32s_mut()?;
-                    let g = gb.f32s_mut()?;
-                    let m = mb.f32s_mut()?;
-                    let v = vb.f32s()?;
-                    for i in 0..n {
-                        let gi = g[i];
-                        let mi = BETA1 * m[i] + (1.0 - BETA1) * gi;
-                        let vi = BETA2 * v[i] + (1.0 - BETA2) * gi * gi;
-                        let mhat = mi / bc1;
-                        let vhat = vi / bc2;
-                        w[i] -= lr * mhat / (vhat.sqrt() + EPS);
-                        g[i] = mi; // g's buffer becomes m'
-                        m[i] = vi; // m's buffer becomes v'
-                    }
-                }
+                kernels::adam_update(
+                    wb.f32s_mut()?,
+                    gb.f32s_mut()?,
+                    mb.f32s_mut()?,
+                    vb.f32s()?,
+                    step,
+                    lr,
+                );
                 let flat = [n as i64];
                 wb.set_shape(&flat);
                 gb.set_shape(&flat);

@@ -229,8 +229,12 @@ pub fn try_synthesize(
     let counts = stash_count_caps(e, per_stage_mem_caps)?;
     let layout = score_layout(e, p);
     let mut ws = SimWorkspace::new();
+    // warm-start scoring: hill-climb neighbors differ from the incumbent
+    // in one stage's warmup depth, so the DES replays the shared event
+    // prefix from the previous candidate's snapshot (bit-identical to a
+    // cold run — see `sim::engine`'s warm-start docs)
     let score = |s: &Schedule, ws: &mut SimWorkspace| {
-        ws.run(e, s, &layout, SimOptions { trace: false }).makespan
+        ws.run(e, s, &layout, SimOptions { trace: false, warm: true }).makespan
     };
 
     // -- seed + first-improvement hill climb over warmup depths ----------
@@ -267,7 +271,7 @@ pub fn try_synthesize(
         if static_bounds(&cand).iter().any(|b| b.lo > counts[b.stage as usize] as i64) {
             continue;
         }
-        let stats = ws.run(e, &cand, &layout, SimOptions { trace: false });
+        let stats = ws.run(e, &cand, &layout, SimOptions { trace: false, warm: true });
         let fits = ws
             .stash_high_water()
             .iter()
@@ -381,7 +385,7 @@ mod tests {
         // the DES's dynamic stash high-water also fits (not just the
         // program-order one the validator sees)
         let mut ws = SimWorkspace::new();
-        ws.run(&e, &s, &score_layout(&e, 8), SimOptions { trace: false });
+        ws.run(&e, &s, &score_layout(&e, 8), SimOptions { trace: false, warm: false });
         for (hw, &c) in ws.stash_high_water().iter().zip(&counts) {
             assert!(*hw <= c as i64, "{:?} vs {counts:?}", ws.stash_high_water());
         }
@@ -398,9 +402,9 @@ mod tests {
         let s = synthesize(8, m, &vec![e.cluster.hbm_bytes; 8], &cm);
         let layout = score_layout(&e, 8);
         let mut ws = SimWorkspace::new();
-        let ours = ws.run(&e, &s, &layout, SimOptions { trace: false }).makespan;
+        let ours = ws.run(&e, &s, &layout, SimOptions { trace: false, warm: false }).makespan;
         let rb = rebalance(&one_f_one_b(8, m), None);
-        let fam = ws.run(&e, &rb, &layout, SimOptions { trace: false }).makespan;
+        let fam = ws.run(&e, &rb, &layout, SimOptions { trace: false, warm: false }).makespan;
         assert!(
             ours <= fam * 1.0000001,
             "synthesized {ours} should not lose to rebalanced 1F1B {fam}"

@@ -46,6 +46,32 @@
 //! [`SimResult`] (per-stage vectors + trace) from a throwaway workspace.
 //! All float orderings go through `f64::total_cmp`, so a NaN (degenerate
 //! zero-duration config) can never poison a comparator.
+//!
+//! ## Warm-start delta replay
+//!
+//! Adjacent cells of a bound sweep (and adjacent candidates in
+//! `schedule::synthesize`'s hill climb) share almost their entire event
+//! stream: rebalancing at bound `b` vs `b+1` moves only Evict/Load ops
+//! around an identical compute sequence.  With [`SimOptions::warm`] the
+//! workspace snapshots each run's flattened programs, durations and
+//! start/end times; the next warm run compares per-stage
+//! `(op, duration)` slots against the snapshot, finds every stage's
+//! common prefix `P_s`, and derives a **divergence horizon** `D = min`
+//! over divergent stages of `end(last common compute op before P_s)` —
+//! no event anywhere in the DAG can be influenced by a divergent op
+//! before `D`, because every op at a divergent slot has
+//! `ready ≥ end(last common compute below it)` through its
+//! program-order dependency chain.  Every common-prefix node with
+//! `start < D` is copied from the snapshot; the event loop then resumes
+//! with per-link free-times rebuilt from the copied transfers,
+//! indegrees counting only non-copied dependencies, and the copied
+//! `Bwd` ops' load-stall contributions re-accumulated in `(start, id)`
+//! pop order — which, with strictly positive durations (checked; cold
+//! fallback otherwise), reproduces the cold run's heap pop order
+//! exactly, so the warm result is **bit-identical** to a cold run
+//! (differentially tested per cell in `sweep.rs`).  The replayed/total
+//! event counters ([`SimWorkspace::events_replayed`]) feed the sweep
+//! telemetry.
 
 use super::costmodel::{CostModel, StageTimes};
 use crate::bpipe::{pairing, Layout};
@@ -116,11 +142,21 @@ pub struct SimOptions {
     /// always tracked (it feeds OOM detection) but lives in reused
     /// workspace buffers either way.
     pub trace: bool,
+    /// Warm-start delta replay: snapshot this run's event timeline in
+    /// the workspace and, on the next warm run, replay the per-stage
+    /// common program prefix up to the divergence horizon instead of
+    /// re-simulating it (see the module docs § "Warm-start delta
+    /// replay").  Results stay **bit-identical** to a cold run; the
+    /// differential tests in `sweep.rs` pin it.  Off by default: only
+    /// callers that run near-identical schedules back-to-back
+    /// (descending-bound sweeps, `schedule::synthesize`'s scoring loop)
+    /// profit from the snapshot copies.
+    pub warm: bool,
 }
 
 impl Default for SimOptions {
     fn default() -> Self {
-        SimOptions { trace: true }
+        SimOptions { trace: true, warm: false }
     }
 }
 
@@ -347,6 +383,27 @@ pub struct SimWorkspace {
     cur: Vec<i64>,
     stash_hw: Vec<i64>,
     mem_hw: Vec<u64>,
+    // -- warm-start snapshot (SimOptions::warm) ---------------------------
+    /// a snapshot of the previous warm run exists and had strictly
+    /// positive durations (the replay soundness precondition)
+    snap_valid: bool,
+    snap_p: usize,
+    snap_m: usize,
+    snap_chunks: usize,
+    snap_zigzag: bool,
+    snap_base: Vec<u32>,
+    snap_ops: Vec<Op>,
+    snap_link_of: Vec<u32>,
+    snap_dur: Vec<f64>,
+    snap_start: Vec<f64>,
+    snap_end: Vec<f64>,
+    /// node id → copied-from-snapshot marker for the current run
+    copied: Vec<bool>,
+    /// per-stage common-prefix length scratch for the current run
+    prefix: Vec<u32>,
+    // -- telemetry (cumulative across runs; see `events_replayed`) --------
+    events_total: u64,
+    events_replayed: u64,
 }
 
 impl SimWorkspace {
@@ -373,6 +430,20 @@ impl SimWorkspace {
     /// `SimOptions::trace` was set).
     pub fn trace(&self) -> &[TraceEvent] {
         &self.trace
+    }
+
+    /// Cumulative DES node count across every run of this workspace
+    /// (warm or cold) — the denominator of the warm-start telemetry.
+    pub fn events_total(&self) -> u64 {
+        self.events_total
+    }
+
+    /// Cumulative count of nodes whose times were replayed from the
+    /// warm-start snapshot instead of simulated.  The sweep aggregates
+    /// these per-worker counters into
+    /// [`SweepReport`](super::sweep::SweepReport).
+    pub fn events_replayed(&self) -> u64 {
+        self.events_replayed
     }
 
     /// Materialize the last run's full [`SimResult`] (allocates — the
@@ -596,26 +667,153 @@ impl SimWorkspace {
             });
         }
 
+        // -- warm-start delta replay (module docs § "Warm-start delta
+        // replay"): copy the timeline of every common-prefix node that
+        // starts before the divergence horizon, then let the event loop
+        // simulate only the remainder.  Soundness needs strictly
+        // positive durations (heap pop order == (ready, id) order);
+        // degenerate configs fall back to a cold run.
+        self.start.clear();
+        self.start.resize(n, 0.0);
+        self.end.clear();
+        self.end.resize(n, 0.0);
+        self.copied.clear();
+        self.copied.resize(n, false);
+        let positive_durs = self.dur.iter().all(|&d| d > 0.0);
+        let mut replayed = 0usize;
+        if opts.warm
+            && self.snap_valid
+            && positive_durs
+            && self.snap_p == p
+            && self.snap_m == m
+            && self.snap_chunks == chunks
+            && self.snap_zigzag == zigzag
+            && self.snap_link_of == self.link_of
+        {
+            // per-stage common prefix: slots equal in op AND duration
+            // (duration equality subsumes cost-model differences)
+            self.prefix.clear();
+            let mut horizon = f64::INFINITY;
+            for s in 0..p {
+                let lo = self.base[s] as usize;
+                let slo = self.snap_base[s] as usize;
+                let new_len = self.base[s + 1] as usize - lo;
+                let old_len = self.snap_base[s + 1] as usize - slo;
+                let mut k = 0usize;
+                while k < new_len.min(old_len)
+                    && self.ops[lo + k] == self.snap_ops[slo + k]
+                    && self.dur[lo + k] == self.snap_dur[slo + k]
+                {
+                    k += 1;
+                }
+                self.prefix.push(k as u32);
+                if k < new_len || k < old_len {
+                    // a divergent op's ready time is bounded below by
+                    // the end of the last common compute op beneath it
+                    let mut h = 0f64;
+                    for j in (0..k).rev() {
+                        if matches!(self.snap_ops[slo + j].kind, OpKind::Fwd | OpKind::Bwd) {
+                            h = self.snap_end[slo + j];
+                            break;
+                        }
+                    }
+                    horizon = horizon.min(h);
+                }
+            }
+            for s in 0..p {
+                let lo = self.base[s] as usize;
+                let slo = self.snap_base[s] as usize;
+                for k in 0..self.prefix[s] as usize {
+                    if self.snap_start[slo + k] < horizon {
+                        self.copied[lo + k] = true;
+                        self.start[lo + k] = self.snap_start[slo + k];
+                        self.end[lo + k] = self.snap_end[slo + k];
+                        replayed += 1;
+                    }
+                }
+            }
+        }
+        self.events_total += n as u64;
+        self.events_replayed += replayed as u64;
+
         // -- event-driven timing with FCFS link arbitration ---------------
         // Ops become READY when all logical deps complete; compute ops
         // start at their ready time (program-order deps already serialize
         // the stage's compute stream); transfer ops additionally queue
         // FCFS on their link.  Events are processed in ready-time order,
         // which makes the link free-time bookkeeping causally consistent.
-        self.start.clear();
-        self.start.resize(n, 0.0);
-        self.end.clear();
-        self.end.resize(n, 0.0);
         self.link_free.clear();
         self.link_free.resize(p + n_nodes, 0.0);
         self.heap.clear();
-        for id in 0..n {
-            if self.indeg[id] == 0 {
-                self.heap.push(Ev(0.0, id as u32));
+        let mut load_stall = 0f64;
+        if replayed == 0 {
+            for id in 0..n {
+                if self.indeg[id] == 0 {
+                    self.heap.push(Ev(0.0, id as u32));
+                }
+            }
+        } else {
+            // resume mid-timeline: per-link free times are the max end
+            // over the replayed grants (FCFS grant order restricted to a
+            // link is a prefix of pop order, so nothing is missing)
+            for id in 0..n {
+                if self.copied[id] && matches!(self.ops[id].kind, OpKind::Evict | OpKind::Load) {
+                    let l = self.link_of[self.stage_of[id] as usize] as usize;
+                    self.link_free[l] = self.link_free[l].max(self.end[id]);
+                }
+            }
+            // replayed Bwd load-stall contributions, re-accumulated in
+            // (start, id) order == the cold run's heap pop order (Bwd
+            // start equals ready, and every copied Bwd pops before every
+            // non-copied one), so the f64 sum is bit-identical
+            self.order.clear();
+            for id in 0..n {
+                if self.copied[id]
+                    && self.ops[id].kind == OpKind::Bwd
+                    && self.bwd_load_dep[id] != NONE
+                {
+                    self.order.push(id as u32);
+                }
+            }
+            let start = &self.start;
+            self.order.sort_unstable_by(|&a, &b| {
+                start[a as usize].total_cmp(&start[b as usize]).then(a.cmp(&b))
+            });
+            for &idu in &self.order {
+                let id = idu as usize;
+                let load = self.bwd_load_dep[id];
+                let mut without = 0f64;
+                for ei in self.dep_off[id] as usize..self.dep_off[id + 1] as usize {
+                    let d = self.dep_edges[ei];
+                    if d != load {
+                        without = without.max(self.end[d as usize]);
+                    }
+                }
+                load_stall += (self.end[load as usize] - without).max(0.0);
+            }
+            // non-copied nodes wait only on their non-copied deps; the
+            // copied ones already contribute through the ready max
+            for id in 0..n {
+                if self.copied[id] {
+                    continue;
+                }
+                let mut live = 0u32;
+                let mut r = 0f64;
+                for ei in self.dep_off[id] as usize..self.dep_off[id + 1] as usize {
+                    let d = self.dep_edges[ei] as usize;
+                    if self.copied[d] {
+                        r = r.max(self.end[d]);
+                    } else {
+                        live += 1;
+                    }
+                }
+                self.indeg[id] = live;
+                if live == 0 {
+                    self.heap.push(Ev(r, id as u32));
+                }
             }
         }
         let mut done = 0usize;
-        let mut load_stall = 0f64;
         while let Some(Ev(ready, idu)) = self.heap.pop() {
             done += 1;
             let id = idu as usize;
@@ -654,7 +852,28 @@ impl SimWorkspace {
                 }
             }
         }
-        assert_eq!(done, n, "dependency cycle in schedule DAG");
+        assert_eq!(done, n - replayed, "dependency cycle in schedule DAG");
+
+        // -- snapshot for the next warm run -------------------------------
+        if opts.warm && positive_durs {
+            self.snap_valid = true;
+            self.snap_p = p;
+            self.snap_m = m;
+            self.snap_chunks = chunks;
+            self.snap_zigzag = zigzag;
+            self.snap_base.clear();
+            self.snap_base.extend_from_slice(&self.base);
+            self.snap_ops.clear();
+            self.snap_ops.extend_from_slice(&self.ops);
+            self.snap_link_of.clear();
+            self.snap_link_of.extend_from_slice(&self.link_of);
+            self.snap_dur.clear();
+            self.snap_dur.extend_from_slice(&self.dur);
+            self.snap_start.clear();
+            self.snap_start.extend_from_slice(&self.start);
+            self.snap_end.clear();
+            self.snap_end.extend_from_slice(&self.end);
+        }
 
         // -- aggregate -----------------------------------------------------
         let mut makespan = 0f64;
@@ -789,7 +1008,7 @@ impl SimWorkspace {
 pub fn simulate(e: &ExperimentConfig, schedule: &Schedule, layout: &Layout) -> SimResult {
     crate::schedule::validate(schedule).expect("refusing to simulate an invalid schedule");
     let mut ws = SimWorkspace::new();
-    let stats = ws.run(e, schedule, layout, SimOptions { trace: true });
+    let stats = ws.run(e, schedule, layout, SimOptions::default());
     ws.to_result(&stats)
 }
 
@@ -1030,12 +1249,63 @@ mod tests {
         let layout = crate::bpipe::pair_adjacent_layout(e.parallel.p, e.cluster.n_nodes);
         let sched = one_f_one_b(e.parallel.p, m);
         let mut ws = SimWorkspace::new();
-        let with = ws.run(&e, &sched, &layout, SimOptions { trace: true });
+        let with = ws.run(&e, &sched, &layout, SimOptions { trace: true, warm: false });
         assert_eq!(ws.trace().len(), sched.num_ops());
-        let without = ws.run(&e, &sched, &layout, SimOptions { trace: false });
+        let without = ws.run(&e, &sched, &layout, SimOptions { trace: false, warm: false });
         assert!(ws.trace().is_empty(), "trace must be skipped when opted out");
         // ... with identical stats either way
         assert_eq!(with, without);
+    }
+
+    #[test]
+    fn warm_runs_match_fresh_simulate_across_descending_bounds() {
+        // the warm-start core claim at engine level: a warm workspace
+        // fed one family at descending bounds replays a prefix of each
+        // timeline yet stays bit-identical to a fresh cold engine —
+        // start/end of every node (via the trace), the load-stall f64
+        // accumulation, and the memory timeline all match exactly
+        let e = paper_experiment(8).unwrap();
+        let m = e.parallel.num_microbatches();
+        let layout = crate::bpipe::pair_adjacent_layout(e.parallel.p, e.cluster.n_nodes);
+        let base = one_f_one_b(e.parallel.p, m);
+        let mut ws = SimWorkspace::new();
+        let opts = SimOptions { trace: true, warm: true };
+        for bound in crate::bpipe::bound_range(&base).rev() {
+            let sched = rebalance(&base, Some(bound));
+            let stats = ws.run(&e, &sched, &layout, opts);
+            let fresh = simulate(&e, &sched, &layout);
+            assert_eq!(stats.makespan, fresh.makespan, "bound {bound}");
+            assert_eq!(stats.load_stall, fresh.load_stall, "bound {bound}");
+            assert_eq!(ws.trace(), &fresh.trace[..], "bound {bound}");
+            assert_eq!(ws.mem_high_water(), &fresh.mem_high_water[..], "bound {bound}");
+            assert_eq!(ws.stash_high_water(), &fresh.stash_high_water[..], "bound {bound}");
+        }
+        assert!(ws.events_replayed() > 0, "descending bounds must replay a prefix");
+        assert!(ws.events_replayed() < ws.events_total());
+    }
+
+    #[test]
+    fn warm_workspace_survives_shape_and_family_changes() {
+        // incompatible snapshots (different placement, chunk count, op
+        // streams) must fall back to a cold run, never corrupt results
+        let e = paper_experiment(8).unwrap();
+        let m = e.parallel.num_microbatches();
+        let layout = crate::bpipe::pair_adjacent_layout(e.parallel.p, e.cluster.n_nodes);
+        let scheds = [
+            one_f_one_b(e.parallel.p, m),
+            rebalance(&interleaved(e.parallel.p, m, 2), None),
+            gpipe(e.parallel.p, m),
+            v_shaped(e.parallel.p, m),
+            one_f_one_b(e.parallel.p, m),
+        ];
+        let mut ws = SimWorkspace::new();
+        for sched in &scheds {
+            let stats = ws.run(&e, sched, &layout, SimOptions { trace: true, warm: true });
+            let fresh = simulate(&e, sched, &layout);
+            assert_eq!(stats.makespan, fresh.makespan);
+            assert_eq!(stats.load_stall, fresh.load_stall);
+            assert_eq!(ws.trace(), &fresh.trace[..]);
+        }
     }
 
     #[test]
@@ -1054,7 +1324,7 @@ mod tests {
         ];
         let mut ws = SimWorkspace::new();
         for sched in &scheds {
-            let stats = ws.run(&e, sched, &layout, SimOptions { trace: true });
+            let stats = ws.run(&e, sched, &layout, SimOptions { trace: true, warm: false });
             let fresh = simulate(&e, sched, &layout);
             assert_eq!(stats.makespan, fresh.makespan);
             assert_eq!(stats.load_stall, fresh.load_stall);

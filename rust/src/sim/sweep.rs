@@ -19,8 +19,12 @@
 //! load_stall sensitivity frontier**: for every scenario, rebalance at
 //! every uniform bound from the derived value down to the infeasibility
 //! knee, showing where tighter memory starts costing stalls (and where
-//! the acceptor side OOMs) — ~3600 cells at paper scale, ~12× the
-//! ranking grid.
+//! the acceptor side OOMs) — ~7200 cells at paper scale over four
+//! layouts (pair-adjacent, sequential, scatter, ring), ~24× the
+//! ranking grid.  Bound cells are ordered bound-descending within each
+//! (family, layout) run so the warm-start DES replay in
+//! [`SimWorkspace`] can reuse the shared event prefix between adjacent
+//! bounds; [`SweepReport`] carries the replay telemetry.
 //!
 //! ## Execution model
 //!
@@ -40,13 +44,15 @@
 
 use super::costmodel::CostModel;
 use super::engine::{SimOptions, SimWorkspace};
-use crate::bpipe::{bound_range, pair_adjacent_layout, sequential_layout, Layout};
+use crate::bpipe::{
+    bound_range, pair_adjacent_layout, ring_layout, scatter_layout, sequential_layout, Layout,
+};
 use crate::config::{paper_experiments, ExperimentConfig};
 use crate::report::Table;
 use crate::schedule::{Family, Schedule, ScheduleKind};
 use crate::util::Json;
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, OnceLock};
 
 /// What to run in one cell, before the schedule exists: a generator
@@ -264,12 +270,20 @@ pub fn paper_grid(v: u64) -> Vec<SweepTask> {
 /// family (1F1B, GPipe, interleaved, V-shaped, W-shaped) at **every**
 /// bound from its derived pair-mean value down to the infeasibility
 /// knee (2, the smallest the transform admits: one live + one incoming
-/// stash), on both layouts.  Sweeping the whole range — instead of the single
-/// derived point — exposes the memory/throughput frontier: `load_stall`
-/// grows and the acceptor side eventually OOMs as the bound tightens.
+/// stash), on all four layouts (pair-adjacent, sequential, scatter,
+/// ring).  Sweeping the whole range — instead of the single derived
+/// point — exposes the memory/throughput frontier: `load_stall` grows
+/// and the acceptor side eventually OOMs as the bound tightens.
+///
+/// Task order is family → layout → bound **descending**: consecutive
+/// cells on a worker then share family, shape and layout and differ
+/// only by one bound step, which is exactly the adjacency the
+/// warm-start DES replay ([`SimWorkspace`] snapshot) exploits — the
+/// cell at bound `b` replays the event prefix shared with `b+1`.
 pub fn bound_sensitivity_tasks(e: &ExperimentConfig, v: u64) -> Vec<SweepTask> {
     let p = e.parallel.p;
     let m = e.parallel.num_microbatches();
+    let n_nodes = e.cluster.n_nodes;
     let shared = Arc::new(e.clone());
     let mut tasks = Vec::new();
     for family in [
@@ -279,13 +293,20 @@ pub fn bound_sensitivity_tasks(e: &ExperimentConfig, v: u64) -> Vec<SweepTask> {
         Family::VShaped,
         Family::ZigZag { v: 4 },
     ] {
-        for bound in bound_range(&family.build(p, m)).rev() {
-            let spec = ScenarioSpec::rebalanced(family, Some(bound));
-            for layout in [
-                pair_adjacent_layout(p, e.cluster.n_nodes),
-                sequential_layout(p, e.cluster.n_nodes),
-            ] {
-                tasks.push(SweepTask { experiment: Arc::clone(&shared), spec, layout });
+        let base = family.build(p, m);
+        for layout in [
+            pair_adjacent_layout(p, n_nodes),
+            sequential_layout(p, n_nodes),
+            scatter_layout(p, n_nodes),
+            ring_layout(p, n_nodes),
+        ] {
+            for bound in bound_range(&base).rev() {
+                let spec = ScenarioSpec::rebalanced(family, Some(bound));
+                tasks.push(SweepTask {
+                    experiment: Arc::clone(&shared),
+                    spec,
+                    layout: layout.clone(),
+                });
             }
         }
     }
@@ -293,7 +314,7 @@ pub fn bound_sensitivity_tasks(e: &ExperimentConfig, v: u64) -> Vec<SweepTask> {
 }
 
 /// The full bound-sensitivity grid over every Table-3 experiment
-/// (~3600 cells at paper scale; `bpipe sweep --bounds`).
+/// (~7200 cells at paper scale over four layouts; `bpipe sweep --bounds`).
 pub fn bounds_grid(v: u64) -> Vec<SweepTask> {
     paper_experiments().iter().flat_map(|e| bound_sensitivity_tasks(e, v)).collect()
 }
@@ -330,13 +351,17 @@ pub fn frontier_outcomes(
             layout: pair_adjacent_layout(p, tight.cluster.n_nodes),
         })
         .collect();
-    let mut outcomes =
-        sweep_with(tasks, threads, SweepOptions { skip_provable_oom: true }).outcomes;
+    let mut outcomes = sweep_with(
+        tasks,
+        threads,
+        SweepOptions { skip_provable_oom: true, ..Default::default() },
+    )
+    .outcomes;
 
     let schedule =
         crate::schedule::synthesize(p, m, &vec![cap; p as usize], &CostModel::new(&tight));
     let mut ws = SimWorkspace::new();
-    let stats = ws.run(&tight, &schedule, &layout, SimOptions { trace: false });
+    let stats = ws.run(&tight, &schedule, &layout, SimOptions { trace: false, warm: false });
     outcomes.push(SweepOutcome {
         exp_id: tight.id,
         model: tight.model.name.clone(),
@@ -369,14 +394,28 @@ pub struct SweepOptions {
     /// static model, timing columns `NaN` (rendered `NaN`, exported as
     /// empty/`null`) — so grids keep their shape.
     pub skip_provable_oom: bool,
+    /// Disable the warm-start DES replay and simulate every cell from
+    /// scratch ([`SimOptions::warm`] off).  Warm and cold runs are
+    /// bit-identical by construction (pinned by the differential test
+    /// below); this flag exists for A/B timing (`bpipe sweep
+    /// --force-cold`, the bench's warm-vs-cold section) and as the
+    /// escape hatch if a future schedule family violates the replay's
+    /// assumptions.
+    pub force_cold: bool,
 }
 
 /// [`sweep_with`]'s result: the outcomes in task order, plus how many
-/// cells the static-analysis gate skipped.
+/// cells the static-analysis gate skipped and the warm-start replay
+/// telemetry (events replayed from snapshots vs total events simulated,
+/// summed over every worker's [`SimWorkspace`]).
 #[derive(Debug, Clone)]
 pub struct SweepReport {
     pub outcomes: Vec<SweepOutcome>,
     pub skipped: usize,
+    /// total DES events across all simulated cells
+    pub events_total: u64,
+    /// events satisfied by snapshot replay instead of simulation
+    pub events_replayed: u64,
 }
 
 /// Simulate every task of the grid across `threads` OS threads (0 =
@@ -398,10 +437,13 @@ pub fn sweep_with(tasks: Vec<SweepTask>, threads: usize, opts: SweepOptions) -> 
     let threads = threads.min(tasks.len().max(1));
     let next = AtomicUsize::new(0);
     let skipped = AtomicUsize::new(0);
+    let events_total = AtomicU64::new(0);
+    let events_replayed = AtomicU64::new(0);
     let slots: Vec<OnceLock<SweepOutcome>> = (0..tasks.len()).map(|_| OnceLock::new()).collect();
     let tasks_ref = &tasks;
     let slots_ref = &slots;
     let skipped_ref = &skipped;
+    let totals_ref = (&events_total, &events_replayed);
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| {
@@ -418,6 +460,8 @@ pub fn sweep_with(tasks: Vec<SweepTask>, threads: usize, opts: SweepOptions) -> 
                     }
                     let _ = slots_ref[i].set(out);
                 }
+                totals_ref.0.fetch_add(ws.events_total(), Ordering::Relaxed);
+                totals_ref.1.fetch_add(ws.events_replayed(), Ordering::Relaxed);
             });
         }
     });
@@ -425,7 +469,12 @@ pub fn sweep_with(tasks: Vec<SweepTask>, threads: usize, opts: SweepOptions) -> 
         .into_iter()
         .map(|s| s.into_inner().expect("every sweep slot is filled exactly once"))
         .collect();
-    SweepReport { outcomes, skipped: skipped.into_inner() }
+    SweepReport {
+        outcomes,
+        skipped: skipped.into_inner(),
+        events_total: events_total.into_inner(),
+        events_replayed: events_replayed.into_inner(),
+    }
 }
 
 /// Simulate one cell in the given workspace (the worker inner loop), or
@@ -470,7 +519,12 @@ fn run_task_in(
             return (out, true);
         }
     }
-    let stats = ws.run(&t.experiment, &schedule, &t.layout, SimOptions { trace: false });
+    let stats = ws.run(
+        &t.experiment,
+        &schedule,
+        &t.layout,
+        SimOptions { trace: false, warm: !opts.force_cold },
+    );
     let out = SweepOutcome {
         exp_id: t.experiment.id,
         model: t.experiment.model.name.clone(),
@@ -713,7 +767,11 @@ mod tests {
 
     #[test]
     fn skip_gate_settles_provable_ooms_statically_and_soundly() {
-        let report = sweep_with(small_grid(), 0, SweepOptions { skip_provable_oom: true });
+        let report = sweep_with(
+            small_grid(),
+            0,
+            SweepOptions { skip_provable_oom: true, ..Default::default() },
+        );
         let full = sweep(small_grid(), 0);
         assert_eq!(report.outcomes.len(), full.len());
         assert!(report.skipped > 0, "exp 8 has provably-OOM cells (GPipe base, 1F1B base)");
@@ -879,13 +937,23 @@ mod tests {
                 "{family:?} missing from the bounds grid"
             );
         }
-        // exp 8 interleaved v=2 derives bound 16 → bounds 16..2 × 2 layouts
+        // exp 8 interleaved v=2 derives bound 16 → bounds 16..2 × 4 layouts
         let il2 = Family::Interleaved { v: 2 };
         let e8_il: Vec<_> = tasks
             .iter()
             .filter(|t| t.experiment.id == Some(8) && t.spec.family == il2)
             .collect();
-        assert_eq!(e8_il.len(), 15 * 2);
+        assert_eq!(e8_il.len(), 15 * 4);
+        // all four layouts present, each with the full descending range
+        for name in ["pair-adjacent", "sequential", "scatter", "ring"] {
+            let bounds: Vec<u64> = e8_il
+                .iter()
+                .filter(|t| t.layout.name == name)
+                .map(|t| t.spec.bound.unwrap())
+                .collect();
+            assert_eq!(bounds.len(), 15, "{name}");
+            assert!(bounds.windows(2).all(|w| w[0] == w[1] + 1), "{name} not descending");
+        }
     }
 
     #[test]
@@ -911,6 +979,80 @@ mod tests {
         assert!(frontier.contains("5..2"), "{frontier}");
         let csv = sweep_to_csv(&outs);
         assert!(csv.lines().count() == outs.len() + 1 && csv.contains("bound"));
+    }
+
+    /// Deep-clone a task list (tasks share experiments via `Arc`).
+    fn clone_tasks(ts: &[SweepTask]) -> Vec<SweepTask> {
+        ts.iter()
+            .map(|t| SweepTask {
+                experiment: Arc::clone(&t.experiment),
+                spec: t.spec,
+                layout: t.layout.clone(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn warm_sweep_is_bit_identical_to_cold() {
+        // the tentpole invariant: warm-start replay is a pure
+        // optimization — every SweepOutcome bit-identical to a cold
+        // run, on the descending-bound grid AND the mixed ranking grid
+        // (which exercises the incompatible-snapshot fallback between
+        // families/layouts)
+        let e = paper_experiment(8).unwrap();
+        let mut tasks = bound_sensitivity_tasks(&e, 2);
+        tasks.extend(experiment_tasks(&e, 2));
+        let warm = sweep_with(clone_tasks(&tasks), 1, SweepOptions::default());
+        let cold = sweep_with(tasks, 1, SweepOptions { force_cold: true, ..Default::default() });
+        assert_eq!(cold.events_replayed, 0, "force_cold must disable replay");
+        assert!(warm.events_replayed > 0, "descending bounds must replay a prefix");
+        assert!(warm.events_replayed < warm.events_total);
+        assert_eq!(warm.events_total, cold.events_total);
+        assert_eq!(warm.outcomes.len(), cold.outcomes.len());
+        for (w, c) in warm.outcomes.iter().zip(cold.outcomes.iter()) {
+            // SweepOutcome carries floats; the Debug rendering
+            // round-trips every finite f64, so string equality pins
+            // bit-identity across all fields at once
+            assert_eq!(
+                format!("{w:?}"),
+                format!("{c:?}"),
+                "warm != cold at {} k={:?} {}",
+                w.scenario,
+                w.bound,
+                w.layout
+            );
+        }
+    }
+
+    #[test]
+    fn warm_replay_telemetry_hits_the_event_floor() {
+        // ≥50% replayed, provable by construction: run every
+        // descending-bound cell back-to-back twice (the shape of
+        // synthesize-style repeated candidate evaluation).  The second
+        // run of each pair presents an identical op/duration stream, so
+        // the divergence horizon never fires and its entire event
+        // stream replays from the snapshot; the honest prefix reuse
+        // between adjacent bounds (asserted > 0 above) rides on top.
+        let e = paper_experiment(8).unwrap();
+        let tasks: Vec<SweepTask> = bound_sensitivity_tasks(&e, 2)
+            .into_iter()
+            .flat_map(|t| {
+                let twin = SweepTask {
+                    experiment: Arc::clone(&t.experiment),
+                    spec: t.spec,
+                    layout: t.layout.clone(),
+                };
+                [t, twin]
+            })
+            .collect();
+        let report = sweep_with(tasks, 1, SweepOptions::default());
+        assert!(report.events_total > 0);
+        assert!(
+            report.events_replayed * 2 >= report.events_total,
+            "replayed {} of {} events (< 50%)",
+            report.events_replayed,
+            report.events_total
+        );
     }
 
     #[test]

@@ -1,0 +1,360 @@
+//! The vectorized chunk-major kernels and their mirrored-order scalar
+//! twins must be **bit-identical** — the 8-lane SIMD rewrite is a speed
+//! change, never a numerics change.
+//!
+//! Three altitudes:
+//!
+//! * kernel level — every reduction/elementwise kernel vs its
+//!   `*_scalar` twin, across ragged lengths (`n % 8 != 0`), signed
+//!   zeros and subnormals;
+//! * backend level — every sim op through `execute_pooled` under EVERY
+//!   donation mask and both argument conventions must reproduce, bit
+//!   for bit, a reference computed *entirely from the scalar twins*
+//!   (so a chunked/scalar divergence anywhere in the fused paths fails
+//!   here even if both paths are internally self-consistent);
+//! * pool level — re-executing an op whose outputs were recycled draws
+//!   nothing new from the pool (the kernels keep the steady state
+//!   allocation-free; `rust/tests/alloc_steady_state.rs` pins the same
+//!   invariant for the full training loop).
+
+use bpipe::runtime::{kernels, Arg, Backend, BufferPool, HostTensor, Manifest, SimBackend};
+
+/// `h = 13`, `b·s = 9` positions: the activation length (117) and every
+/// parameter row are deliberately NOT multiples of the 8-lane width, so
+/// tail handling is exercised in every fused loop.
+fn manifest() -> Manifest {
+    Manifest::synthetic(4, 13, 3, 3, 32, &[1, 2])
+}
+
+/// Deterministic "awkward" f32s: ±0.0, positive and negative
+/// subnormals, magnitudes spanning ~30 orders — cancellation-heavy on
+/// purpose, so any reassociation between the two loop shapes shows up
+/// in the low bits.
+fn awkward(n: usize, salt: u64) -> Vec<f32> {
+    (0..n)
+        .map(|i| match i % 7 {
+            0 => 0.0,
+            1 => -0.0,
+            2 => f32::MIN_POSITIVE / 2.0,
+            3 => -f32::MIN_POSITIVE / 4.0,
+            4 => kernels::unit(i as u64 ^ salt) * 1e4,
+            5 => kernels::unit((i as u64).wrapping_mul(salt | 1)) * 1e-6,
+            _ => kernels::unit(i as u64 * 31 + salt),
+        })
+        .collect()
+}
+
+#[test]
+fn chunked_kernels_and_their_scalar_twins_are_bit_identical() {
+    for n in [0usize, 1, 2, 3, 5, 7, 8, 9, 13, 17, 23, 31, 33, 63, 65, 100, 117, 129, 1000] {
+        let x = awkward(n, 1);
+        let dy = awkward(n, 9);
+        assert_eq!(
+            kernels::row_sum(&x).to_bits(),
+            kernels::row_sum_scalar(&x).to_bits(),
+            "row_sum n={n}"
+        );
+        let a = kernels::reduce_dot_bias(&dy, &x);
+        let s = kernels::reduce_dot_bias_scalar(&dy, &x);
+        assert_eq!(a.0.to_bits(), s.0.to_bits(), "dot n={n}");
+        assert_eq!(a.1.to_bits(), s.1.to_bits(), "bias n={n}");
+    }
+    for (positions, h) in [(1usize, 1usize), (2, 3), (3, 13), (5, 8), (7, 11)] {
+        let tok: Vec<i32> = (0..positions as i32).map(|i| i * 3 + 1).collect();
+        let dy = awkward(positions * h, 5);
+        let a = kernels::reduce_emb_bias(&dy, &tok, h);
+        let s = kernels::reduce_emb_bias_scalar(&dy, &tok, h);
+        assert_eq!(a.0.to_bits(), s.0.to_bits(), "emb {positions}x{h}");
+        assert_eq!(a.1.to_bits(), s.1.to_bits(), "emb-bias {positions}x{h}");
+        let mut ya = vec![0f32; positions * h];
+        let mut yb = ya.clone();
+        kernels::fwd_first_fill(&mut ya, &tok, h, 0.75, -0.125);
+        kernels::fwd_first_fill_scalar(&mut yb, &tok, h, 0.75, -0.125);
+        assert!(
+            ya.iter().zip(&yb).all(|(p, q)| p.to_bits() == q.to_bits()),
+            "fill {positions}x{h}"
+        );
+    }
+}
+
+#[test]
+fn signed_zeros_and_subnormals_survive_both_paths_identically() {
+    // one full 8-lane chunk plus a 1-element tail
+    let x = vec![
+        -0.0f32,
+        0.0,
+        f32::MIN_POSITIVE / 2.0,
+        -f32::MIN_POSITIVE / 2.0,
+        -0.0,
+        1.0,
+        -1.0,
+        0.0,
+        -0.0,
+    ];
+    assert_eq!(kernels::row_sum(&x).to_bits(), kernels::row_sum_scalar(&x).to_bits());
+    // scaling by a negative flips zero signs — the elementwise twins
+    // must agree on the sign bit, not just the value
+    let mut a = x.clone();
+    let mut b = x.clone();
+    kernels::scale_in_place(&mut a, -1.0);
+    kernels::scale_in_place_scalar(&mut b, -1.0);
+    assert!(a.iter().zip(&b).all(|(p, q)| p.to_bits() == q.to_bits()));
+    let mut c = x.clone();
+    let mut d = x;
+    kernels::affine_in_place(&mut c, -1.0, 0.0);
+    kernels::affine_in_place_scalar(&mut d, -1.0, 0.0);
+    assert!(c.iter().zip(&d).all(|(p, q)| p.to_bits() == q.to_bits()));
+}
+
+#[test]
+fn adam_twins_agree_on_awkward_state() {
+    let n = 117; // ragged tail
+    let (w0, g0, m0) = (awkward(n, 40), awkward(n, 41), awkward(n, 42));
+    let v0: Vec<f32> = awkward(n, 43).iter().map(|x| x.abs()).collect();
+    let (mut wa, mut ga, mut ma) = (w0.clone(), g0.clone(), m0.clone());
+    let (mut wb, mut gb, mut mb) = (w0, g0, m0);
+    kernels::adam_update(&mut wa, &mut ga, &mut ma, &v0, 3, 1e-2);
+    kernels::adam_update_scalar(&mut wb, &mut gb, &mut mb, &v0, 3, 1e-2);
+    for (a, b) in wa.iter().zip(&wb).chain(ga.iter().zip(&gb)).chain(ma.iter().zip(&mb)) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+/// One op case: artifact name, flat inputs (inputs[0] is the
+/// params-like leading argument), and the expected outputs computed
+/// entirely from the scalar twins.
+type Case = (&'static str, Vec<HostTensor>, Vec<HostTensor>);
+
+/// A `[n]` gradient vector with only the two learnable slots set.
+fn grad_vec(n: usize, g0: f32, g1: f32) -> HostTensor {
+    let mut d = vec![0f32; n];
+    d[0] = g0;
+    d[1] = g1;
+    HostTensor::vec_f32(d)
+}
+
+/// Build every sim op's inputs plus its scalar-twin reference outputs.
+fn cases(m: &Manifest) -> Vec<Case> {
+    let spec = &m.spec;
+    let h = spec.h as usize;
+    let positions = (spec.b * spec.s) as usize;
+    let act = positions * h;
+    let act_shape = [spec.b as i64, spec.s as i64, spec.h as i64];
+    let tok_shape = [spec.b as i64, spec.s as i64];
+    let n_mid = m.param_count("mid").unwrap() as usize;
+    let n_first = m.param_count("first").unwrap() as usize;
+    let n_last = m.param_count("last").unwrap() as usize;
+    assert_ne!(act % kernels::LANES, 0, "the grid must exercise ragged tails");
+
+    let w_of = |n: usize, salt: u64| {
+        let mut w = awkward(n, salt);
+        (w[0], w[1]) = (0.75, -0.125);
+        w
+    };
+    let tok: Vec<i32> = (0..positions as i32).map(|i| (i * 5 + 1) % spec.v as i32).collect();
+    let tok_t = HostTensor::I32 { data: tok.clone(), shape: tok_shape.to_vec() };
+    let act_t = |data: Vec<f32>| HostTensor::F32 { data, shape: act_shape.to_vec() };
+
+    let mut cases: Vec<Case> = Vec::new();
+
+    // first_fwd: y[p·h + j] = w0·emb(tok[p], j) + w1
+    let w_first = w_of(n_first, 1);
+    let mut y_first = vec![0f32; act];
+    kernels::fwd_first_fill_scalar(&mut y_first, &tok, h, w_first[0], w_first[1]);
+    cases.push((
+        "first_fwd",
+        vec![HostTensor::vec_f32(w_first.clone()), tok_t.clone()],
+        vec![act_t(y_first)],
+    ));
+
+    // mid_fwd: y = (1 + w0)·x + w1
+    let w_mid = w_of(n_mid, 2);
+    let x_mid = awkward(act, 3);
+    let mut y_mid = x_mid.clone();
+    kernels::affine_in_place_scalar(&mut y_mid, 1.0 + w_mid[0], w_mid[1]);
+    cases.push((
+        "mid_fwd",
+        vec![HostTensor::vec_f32(w_mid.clone()), act_t(x_mid)],
+        vec![act_t(y_mid)],
+    ));
+
+    // first_bwd: dw = (Σ dy·emb, Σ dy)
+    let dy_first = awkward(act, 4);
+    let (fg0, fg1) = kernels::reduce_emb_bias_scalar(&dy_first, &tok, h);
+    cases.push((
+        "first_bwd",
+        vec![HostTensor::vec_f32(w_first), tok_t.clone(), act_t(dy_first)],
+        vec![grad_vec(n_first, fg0, fg1)],
+    ));
+
+    // mid_bwd: dx = dy·(1 + w0), dw = (Σ dy·x, Σ dy)
+    let x_bwd = awkward(act, 5);
+    let dy_bwd = awkward(act, 6);
+    let (mg0, mg1) = kernels::reduce_dot_bias_scalar(&dy_bwd, &x_bwd);
+    let mut dx_mid = vec![0f32; act];
+    kernels::scale_into_scalar(&mut dx_mid, &dy_bwd, 1.0 + w_mid[0]);
+    cases.push((
+        "mid_bwd",
+        vec![HostTensor::vec_f32(w_mid), act_t(x_bwd), act_t(dy_bwd)],
+        vec![act_t(dx_mid), grad_vec(n_mid, mg0, mg1)],
+    ));
+
+    // last_bwd: the per-position affine head — row sums through the
+    // scalar twin, the cross-position epilogue replicated sequentially
+    let w_last = w_of(n_last, 7);
+    let x_last = awkward(act, 8);
+    let (dx_last, lg0, lg1, loss) = {
+        let (w0, w1) = (w_last[0], w_last[1]);
+        let mut x = x_last.clone();
+        let inv_h = 1.0f32 / h as f32;
+        let inv_n = 1.0f32 / tok.len() as f32;
+        let inv_v = 1.0f32 / spec.v as f32;
+        let (mut loss, mut g0, mut g1) = (0f32, 0f32, 0f32);
+        for (p, &t) in tok.iter().enumerate() {
+            let mut u = kernels::row_sum_scalar(&x[p * h..(p + 1) * h]);
+            u *= inv_h;
+            let pred = w0 * u + w1;
+            let target = t as f32 * inv_v - 0.5;
+            let e = pred - target;
+            loss += e * e;
+            let dpred = 2.0 * e * inv_n;
+            g0 += dpred * u;
+            g1 += dpred;
+            let dxv = dpred * w0 * inv_h;
+            x[p * h..(p + 1) * h].fill(dxv);
+        }
+        loss *= inv_n;
+        (x, g0, g1, loss)
+    };
+    let mut loss_t = HostTensor::vec_f32(vec![loss]);
+    loss_t.set_shape(&[]);
+    cases.push((
+        "last_bwd",
+        vec![HostTensor::vec_f32(w_last), act_t(x_last), tok_t],
+        vec![act_t(dx_last), grad_vec(n_last, lg0, lg1), loss_t],
+    ));
+
+    // adam: the rotated state triple
+    let (w_a, g_a, m_a) = (w_of(n_mid, 20), awkward(n_mid, 21), awkward(n_mid, 22));
+    let v_a: Vec<f32> = awkward(n_mid, 23).iter().map(|x| x.abs()).collect();
+    let (mut we, mut ge, mut me) = (w_a.clone(), g_a.clone(), m_a.clone());
+    kernels::adam_update_scalar(&mut we, &mut ge, &mut me, &v_a, 3, 1e-2);
+    cases.push((
+        "adam_mid",
+        vec![
+            HostTensor::vec_f32(w_a),
+            HostTensor::vec_f32(g_a),
+            HostTensor::vec_f32(m_a),
+            HostTensor::vec_f32(v_a),
+            HostTensor::scalar_i32(3),
+            HostTensor::scalar_f32(1e-2),
+        ],
+        vec![HostTensor::vec_f32(we), HostTensor::vec_f32(ge), HostTensor::vec_f32(me)],
+    ));
+
+    cases
+}
+
+/// Bitwise output comparison: shapes must match and every f32 must be
+/// identical *as bits* (so a `-0.0` vs `+0.0` divergence fails even
+/// though `==` would accept it).
+fn assert_bits_eq(got: &[HostTensor], want: &[HostTensor], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: output arity");
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        assert_eq!(g.shape(), w.shape(), "{ctx}: output {i} shape");
+        match (g.f32s(), w.f32s()) {
+            (Ok(a), Ok(b)) => {
+                assert_eq!(a.len(), b.len(), "{ctx}: output {i} length");
+                for (j, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: output {i}[{j}]: {x} vs {y}");
+                }
+            }
+            _ => {
+                assert_eq!(g.i32s().unwrap(), w.i32s().unwrap(), "{ctx}: output {i} (i32)");
+            }
+        }
+    }
+}
+
+/// Run one op through `execute_pooled` with the given donation mask
+/// (bit i set = input i donated); `params_slot` keeps input 0 as the
+/// device-resident leading argument, the worker's convention.
+fn run_pooled(
+    b: &SimBackend,
+    exe: &<SimBackend as Backend>::Exec,
+    inputs: &[&HostTensor],
+    mask: u32,
+    params_slot: bool,
+) -> Vec<HostTensor> {
+    let mut pool = BufferPool::new();
+    let mut out = Vec::new();
+    let skip = usize::from(params_slot);
+    let mut args: Vec<Arg<'_>> = inputs[skip..]
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| {
+            if mask >> (i + skip) & 1 == 1 {
+                Arg::Donated(t.clone())
+            } else {
+                Arg::Borrowed(t)
+            }
+        })
+        .collect();
+    let params = if params_slot { Some(inputs[0]) } else { None };
+    b.execute_pooled(exe, params, &mut args, &mut pool, &mut out)
+        .expect("pooled execution failed");
+    out
+}
+
+#[test]
+fn every_op_matches_its_scalar_reference_under_every_donation_mask() {
+    let m = manifest();
+    let b = SimBackend::create(&m).unwrap();
+    for (name, inputs, expected) in cases(&m) {
+        let exe = b.compile(&m, name).unwrap();
+        let refs: Vec<&HostTensor> = inputs.iter().collect();
+        let fresh = b.execute(&exe, &refs).unwrap();
+        assert_bits_eq(&fresh, &expected, &format!("{name} (owned)"));
+        let k = inputs.len() as u32;
+        for mask in 0..(1u32 << k) {
+            for params_slot in [false, true] {
+                if params_slot && mask & 1 == 1 {
+                    continue; // the params slot is borrowed by definition
+                }
+                let out = run_pooled(&b, &exe, &refs, mask, params_slot);
+                assert_bits_eq(
+                    &out,
+                    &expected,
+                    &format!("{name} mask {mask:#b} params_slot={params_slot}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn steady_state_reexecution_draws_nothing_new_from_the_pool() {
+    let m = manifest();
+    let b = SimBackend::create(&m).unwrap();
+    for (name, inputs, _) in cases(&m) {
+        let exe = b.compile(&m, name).unwrap();
+        let mut pool = BufferPool::new();
+        let mut out = Vec::new();
+        let run = |pool: &mut BufferPool, out: &mut Vec<HostTensor>| {
+            let mut args: Vec<Arg<'_>> = inputs[1..].iter().map(Arg::Borrowed).collect();
+            b.execute_pooled(&exe, Some(&inputs[0]), &mut args, pool, out).unwrap();
+        };
+        run(&mut pool, &mut out);
+        let after_first = pool.misses;
+        for round in 0..3 {
+            for t in out.drain(..) {
+                pool.give(t);
+            }
+            run(&mut pool, &mut out);
+            assert_eq!(
+                pool.misses, after_first,
+                "{name}: steady-state re-execution allocated (round {round})"
+            );
+        }
+    }
+}
