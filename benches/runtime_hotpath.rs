@@ -17,7 +17,11 @@
 //!   worker**, counted by a thread-local `#[global_allocator]` through
 //!   `train_probed`.  The group's numbers are also written to
 //!   `BENCH_runtime.json` (schema below) so CI can archive the perf
-//!   trajectory and diff steps/sec against the committed baseline.
+//!   trajectory and diff steps/sec against the committed baseline;
+//! * (f) a supervised crash-recovery cycle and a 2-replica elastic
+//!   fleet serve run with one injected replica kill — fleet throughput,
+//!   p50/p99 step latency and time-to-recover land in
+//!   `BENCH_runtime.json` (`recovery`, `fleet`).
 //!
 //! `BPIPE_BENCH_SMOKE=1` caps iteration counts so CI can run this as a
 //! non-blocking smoke step (hot-path regressions show up in PR logs
@@ -33,6 +37,7 @@ use bpipe::config::paper_experiment;
 use bpipe::coordinator::{
     supervise, train, train_probed, RebalancePlan, SuperviseConfig, TrainConfig,
 };
+use bpipe::fleet::{serve, FleetConfig, TrafficPattern};
 use bpipe::runtime::{
     kernels, Backend, Fault, FaultPlan, FaultyBackend, Manifest, SimBackend, UnpooledSimBackend,
 };
@@ -90,7 +95,7 @@ fn main() {
     let s_il_rb = rebalance(&s_il, None);
     let s_v = v_shaped(p, m);
     let mut ws = SimWorkspace::new();
-    let opts = SimOptions { trace: false, warm: false };
+    let opts = SimOptions { trace: false, warm: false, recompute: false };
     bench("hotpath/sim_1f1b_p8_m64", iters(500), || {
         ws.run(std::hint::black_box(&e), &s_1f1b, &layout, opts)
     });
@@ -272,6 +277,41 @@ fn main() {
         recovered.restarts, recovered.steps_lost, ttr
     );
 
+    println!("\n=== elastic fleet serve (2 replicas, one injected replica kill) ===");
+    // a full fleet round trip: traffic admission, segment dispatch, one
+    // replica-scoped crash, drain/redistribute, re-admission — feeding
+    // the fleet sample in BENCH_runtime.json
+    let f_dir = std::env::temp_dir().join(format!("bpipe-bench-fleet-{}", std::process::id()));
+    let f_cfg = FleetConfig {
+        replicas: 2,
+        steps: if smoke { 12 } else { 24 },
+        traffic: TrafficPattern::Steady,
+        queue_cap: 32,
+        segment_len: 2,
+        seed: 11,
+        manifest: Some(Manifest::synthetic(2, 16, 8, 2, 64, &[1, 2])),
+        faults: Some(std::sync::Arc::new(FaultPlan::new_scoped(
+            0,
+            vec![(Some(1), Fault::Crash { stage: 1, step: 2 })],
+        ))),
+        max_restarts: 0,
+        readmit_after: 1,
+        sync_every: 0,
+        run_dir: f_dir.clone(),
+        ..FleetConfig::default()
+    };
+    let fleet_out = serve::<FaultyBackend<SimBackend>>(&f_cfg).expect("fleet bench run failed");
+    let _ = std::fs::remove_dir_all(&f_dir);
+    let fstats = &fleet_out.stats;
+    let fleet_ttr = fstats.time_to_recover_s.first().copied().unwrap_or(0.0);
+    println!(
+        "hotpath/fleet_serve_r2          {:>10.1} steps/s  p99 {:.4}s/step  \
+         time_to_recover={fleet_ttr:.4}s  shed={}",
+        fstats.steps_per_s(),
+        fstats.p99_latency_s(),
+        fstats.shed
+    );
+
     // machine-readable perf trajectory (CI archives this and diffs the
     // steps/s against the committed baseline, advisory-only)
     let side = |steps_per_s: f64, mean_step_s: f64, allocs_step: f64| -> Json {
@@ -300,6 +340,15 @@ fn main() {
     rec.insert("steps_lost".to_string(), Json::Num(recovered.steps_lost as f64));
     rec.insert("time_to_recover_s".to_string(), Json::Num(ttr));
     root.insert("recovery".to_string(), Json::Obj(rec));
+    let mut flt = HashMap::new();
+    flt.insert("replicas".to_string(), Json::Num(f_cfg.replicas as f64));
+    flt.insert("steps".to_string(), Json::Num(f_cfg.steps as f64));
+    flt.insert("steps_per_s".to_string(), Json::Num(fstats.steps_per_s()));
+    flt.insert("p50_step_latency_s".to_string(), Json::Num(fstats.p50_latency_s()));
+    flt.insert("p99_step_latency_s".to_string(), Json::Num(fstats.p99_latency_s()));
+    flt.insert("time_to_recover_s".to_string(), Json::Num(fleet_ttr));
+    flt.insert("shed".to_string(), Json::Num(fstats.shed as f64));
+    root.insert("fleet".to_string(), Json::Obj(flt));
     let mut simd = HashMap::new();
     simd.insert("elements".to_string(), Json::Num(nk as f64));
     simd.insert(

@@ -103,6 +103,10 @@ pub struct TrainConfig {
     /// collector appends to as losses arrive — the supervisor's source
     /// for loss stitching and time-to-recover accounting
     pub progress: Option<ProgressLog>,
+    /// fleet replica this run belongs to (`None` for a standalone run).
+    /// Bound into every worker's backend and used by the feeder, so
+    /// replica-scoped faults hit exactly the replica they name.
+    pub replica: Option<usize>,
 }
 
 impl Default for TrainConfig {
@@ -125,6 +129,7 @@ impl Default for TrainConfig {
             retry_budget: 0,
             retry_backoff_ms: 10,
             progress: None,
+            replica: None,
         }
     }
 }
@@ -535,6 +540,7 @@ fn train_inner<B: Backend>(
                     deadline,
                     retry_budget: cfg.retry_budget,
                     retry_backoff_ms: cfg.retry_backoff_ms,
+                    replica: cfg.replica,
                 };
                 let wch = WorkerChannels {
                     act_in: std::mem::take(&mut act_in[s as usize]),
@@ -582,6 +588,7 @@ fn train_inner<B: Backend>(
                 start_step,
                 deadline,
                 faults: faults.clone(),
+                replica: cfg.replica,
             };
             let collect = CollectConfig {
                 run_steps,
@@ -714,6 +721,8 @@ struct FeederState {
     start_step: u64,
     deadline: Option<Duration>,
     faults: Option<Arc<FaultPlan>>,
+    /// fleet replica scope for the feeder's fault queries
+    replica: Option<usize>,
 }
 
 /// Pop a recycled i32 tensor, or allocate a fresh one (warm-up only in
@@ -739,7 +748,7 @@ fn run_feeder(mut f: FeederState, mut hook: Option<&mut dyn FnMut(u64)>) -> anyh
     let mut free: Vec<HostTensor> = Vec::with_capacity(12 * f.m as usize + 16);
     for step in 1..=f.steps {
         if let Some(plan) = &f.faults {
-            if let Some(ms) = plan.feeder_stall_due(f.start_step + step) {
+            if let Some(ms) = plan.feeder_stall_due_for(f.replica, f.start_step + step) {
                 // injected silence: downstream deadline waits must fire
                 std::thread::sleep(Duration::from_millis(ms));
             }

@@ -79,6 +79,9 @@ pub struct WorkerConfig {
     /// base backoff between transient-execute retries (doubles per
     /// attempt, capped)
     pub retry_backoff_ms: u64,
+    /// fleet replica this pipeline belongs to (`None` for a standalone
+    /// run); bound into the backend so replica-scoped faults resolve
+    pub replica: Option<usize>,
 }
 
 /// Channel endpoints for one worker, indexed by hosted chunk (`None`
@@ -257,6 +260,9 @@ impl<B: Backend> StageRunner<B> {
     pub fn new(cfg: WorkerConfig, ch: WorkerChannels) -> anyhow::Result<Self> {
         let mut backend = B::create(&cfg.manifest)?;
         backend.bind_stage(cfg.stage);
+        if let Some(r) = cfg.replica {
+            backend.bind_replica(r);
+        }
         let manifest = &cfg.manifest;
         let spec = &manifest.spec;
         let vp = cfg.stages * cfg.chunks;

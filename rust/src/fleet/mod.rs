@@ -1,0 +1,652 @@
+//! Elastic fleet runtime: N data-parallel pipeline replicas under live
+//! traffic, with replica-level fault domains and graceful degradation.
+//!
+//! Layering (one level up from [`crate::coordinator`]):
+//!
+//! ```text
+//!  traffic gen ──► admission ──► bounded work queue
+//!   (seeded)       (shed ↯)          │ take / requeue
+//!                                    ▼
+//!                        fleet supervisor (this module)
+//!                      ┌────────────┼────────────┐
+//!                      ▼            ▼            ▼
+//!                  replica 0    replica 1    replica 2     ← failure
+//!                 (supervise)  (supervise)  (supervise)      domains
+//!                   p stages     p stages     p stages
+//! ```
+//!
+//! Each replica is a full pipeline coordinator under its own PR-7
+//! supervisor — worker crashes, transient execute failures and HBM
+//! pressure are recovered *inside* the replica.  Only when a replica's
+//! restart budget is exhausted does the failure escalate here, and the
+//! response is fleet-level: drain the replica's in-flight work back to
+//! the queue, redistribute to survivors (degraded mode), and — after a
+//! configurable cool-down — elastically re-admit the replica, which
+//! resumes from its own durable checkpoints.  Every plan a replica will
+//! run is statically proven (analyzer-gated) BEFORE any thread spawns;
+//! under a per-replica memory cap the plan is first re-derived with
+//! [`replan_for_cap`], and an infeasible cap aborts the whole serve run
+//! up front.
+//!
+//! Work items are training steps.  Item `id` is global and its home
+//! replica is `id % R`; without work stealing each replica consumes
+//! exactly its own deterministic slice of the stream (so a kill-free
+//! run is bit-identical to R independent training runs), with stealing
+//! survivors also absorb a dead replica's backlog at the cost of that
+//! identity.
+
+pub mod queue;
+pub mod replica;
+pub mod stats;
+pub mod sync;
+pub mod traffic;
+
+pub use queue::{Admission, AdmissionController, RejectReason, WorkItem, WorkQueue};
+pub use replica::{Command, ReplicaHandle, ReplicaSpec, SegmentOk, SegmentReport};
+pub use stats::{FleetStats, ReplicaStats};
+pub use sync::{SyncPeer, WeightSync};
+pub use traffic::{TrafficGen, TrafficPattern};
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::supervisor::replan_for_cap;
+use crate::coordinator::{
+    latest_common_step, spin_recv_deadline, try_plan_schedule, ChannelError, CheckpointMeta,
+    FailureCause, FailureReport, RebalancePlan, TrainConfig,
+};
+use crate::runtime::{fault, Backend, FaultPlan, Manifest};
+use crate::schedule::Family;
+
+/// Everything `bpipe serve` configures.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// pipeline replicas (each runs `p` stage workers + feeder/collector)
+    pub replicas: usize,
+    /// total work items (training steps) the traffic source offers
+    pub steps: u64,
+    pub traffic: TrafficPattern,
+    /// nominal arrivals per round (0 = auto: `replicas × segment_len`,
+    /// the fleet's steady-state capacity)
+    pub rate: u64,
+    /// bounded work-queue capacity — the backpressure knob
+    pub queue_cap: usize,
+    /// max steps dispatched to a replica per round
+    pub segment_len: u64,
+    pub seed: u64,
+    /// `None` = a small synthetic manifest sized for `family`
+    pub manifest: Option<Manifest>,
+    pub family: Family,
+    pub rebalance: RebalancePlan,
+    pub microbatches: u64,
+    pub lr: f32,
+    /// fleet-wide fault plan (replica-scoped faults hit only the replica
+    /// they name); installed once, before any replica spawns
+    pub faults: Option<Arc<FaultPlan>>,
+    /// per-replica supervisor restart budget (the INNER domain); 0 =
+    /// every replica failure escalates to the fleet immediately
+    pub max_restarts: u32,
+    /// channel deadline inside each replica's pipeline
+    pub recover_timeout: Option<Duration>,
+    /// how long the fleet waits on a dispatched segment before declaring
+    /// the replica silent (spin-deadline on the result channel)
+    pub segment_timeout: Duration,
+    /// rounds a failed replica sits out before elastic re-admission
+    /// (0 = never re-admit)
+    pub readmit_after: u64,
+    /// average weights across alive replicas every n rounds (0 = off)
+    pub sync_every: u64,
+    /// let survivors take over a dead replica's queued work
+    pub steal: bool,
+    /// per-replica HBM cap: re-derive the stage plan under this cap (and
+    /// refuse to serve if no feasible plan exists) before spawning
+    pub replica_cap_bytes: Option<u64>,
+    /// root for per-replica checkpoint directories (`replica<r>/`)
+    pub run_dir: PathBuf,
+    /// print each [`FleetEvent`] as it happens
+    pub log: bool,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            replicas: 2,
+            steps: 16,
+            traffic: TrafficPattern::Steady,
+            rate: 0,
+            queue_cap: 8,
+            segment_len: 2,
+            seed: 0,
+            manifest: None,
+            family: Family::OneFOneB,
+            rebalance: RebalancePlan::Off,
+            microbatches: 4,
+            lr: 2e-3,
+            faults: None,
+            max_restarts: 0,
+            recover_timeout: Some(Duration::from_millis(5000)),
+            segment_timeout: Duration::from_millis(60_000),
+            readmit_after: 2,
+            sync_every: 0,
+            steal: true,
+            replica_cap_bytes: None,
+            run_dir: std::env::temp_dir().join(format!("bpipe-fleet-{}", std::process::id())),
+            log: false,
+        }
+    }
+}
+
+/// One structured fleet event — `Display` renders the `[bpipe-fleet]`
+/// log line the CI chaos-fleet leg greps.
+#[derive(Debug, Clone)]
+pub enum FleetEvent {
+    /// per-round traffic accounting (emitted only for non-empty rounds)
+    Traffic { round: u64, arrivals: u64, admitted: u64, shed: u64, queue_len: usize },
+    /// the plan adopted under `--replica-cap-bytes`, before any spawn
+    CapPlan { stage: u64, cap_bytes: u64, bounds: Vec<u64> },
+    /// a replica escalated past its restart budget (or went silent)
+    ReplicaFailed { round: u64, replica: usize, report: FailureReport },
+    /// in-flight split after a failure: steps already durable vs steps
+    /// returned to the queue for redistribution
+    Drain { round: u64, replica: usize, completed: u64, drained: u64 },
+    /// the fleet lost a replica and keeps serving on the survivors
+    Degraded { round: u64, alive: usize, replicas: usize },
+    /// elastic re-admission: the replica will resume from `from_step`
+    ReplicaReadmitted { round: u64, replica: usize, from_step: u64 },
+    /// first segment completed after re-admission
+    ReplicaRecovered { round: u64, replica: usize, time_to_recover_s: f64 },
+    /// cross-replica weight averaging
+    Sync { round: u64, replicas: usize, elements: u64 },
+    Done { rounds: u64, completed: u64, shed: u64 },
+}
+
+impl FleetEvent {
+    /// Stable kebab-case event name (the `event=` field).
+    pub fn label(&self) -> &'static str {
+        match self {
+            FleetEvent::Traffic { .. } => "traffic",
+            FleetEvent::CapPlan { .. } => "cap-plan",
+            FleetEvent::ReplicaFailed { .. } => "replica-failed",
+            FleetEvent::Drain { .. } => "drain",
+            FleetEvent::Degraded { .. } => "degraded",
+            FleetEvent::ReplicaReadmitted { .. } => "replica-readmitted",
+            FleetEvent::ReplicaRecovered { .. } => "replica-recovered",
+            FleetEvent::Sync { .. } => "sync",
+            FleetEvent::Done { .. } => "done",
+        }
+    }
+}
+
+impl std::fmt::Display for FleetEvent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[bpipe-fleet] event={}", self.label())?;
+        match self {
+            FleetEvent::Traffic { round, arrivals, admitted, shed, queue_len } => write!(
+                f,
+                " round={round} arrivals={arrivals} admitted={admitted} shed={shed} \
+                 queue_len={queue_len}"
+            ),
+            FleetEvent::CapPlan { stage, cap_bytes, bounds } => {
+                write!(f, " stage={stage} cap_bytes={cap_bytes} bounds={bounds:?}")
+            }
+            FleetEvent::ReplicaFailed { round, replica, report } => {
+                write!(f, " round={round} replica={replica} {report}")
+            }
+            FleetEvent::Drain { round, replica, completed, drained } => write!(
+                f,
+                " round={round} replica={replica} completed={completed} drained={drained}"
+            ),
+            FleetEvent::Degraded { round, alive, replicas } => {
+                write!(f, " round={round} alive={alive} replicas={replicas}")
+            }
+            FleetEvent::ReplicaReadmitted { round, replica, from_step } => {
+                write!(f, " round={round} replica={replica} from_step={from_step}")
+            }
+            FleetEvent::ReplicaRecovered { round, replica, time_to_recover_s } => write!(
+                f,
+                " round={round} replica={replica} time_to_recover_s={time_to_recover_s:.3}"
+            ),
+            FleetEvent::Sync { round, replicas, elements } => {
+                write!(f, " round={round} replicas={replicas} elements={elements}")
+            }
+            FleetEvent::Done { rounds, completed, shed } => {
+                write!(f, " rounds={rounds} completed={completed} shed={shed}")
+            }
+        }
+    }
+}
+
+/// What a serve run produced.
+#[derive(Debug)]
+pub struct FleetOutcome {
+    pub stats: FleetStats,
+    pub events: Vec<FleetEvent>,
+    /// durable steps per replica at shutdown
+    pub steps_done: Vec<u64>,
+}
+
+fn emit(log: bool, events: &mut Vec<FleetEvent>, ev: FleetEvent) {
+    if log {
+        println!("{ev}");
+    }
+    events.push(ev);
+}
+
+/// Run the fleet until the traffic source is exhausted and the queue is
+/// drained (or degradation makes that impossible).  Blocks until done.
+pub fn serve<B: Backend>(cfg: &FleetConfig) -> anyhow::Result<FleetOutcome> {
+    anyhow::ensure!(cfg.replicas >= 1, "need at least one replica");
+    anyhow::ensure!(cfg.steps >= 1, "need at least one work item");
+    anyhow::ensure!(cfg.queue_cap >= 1, "need a non-empty work queue");
+    anyhow::ensure!(cfg.segment_len >= 1, "need non-empty segments");
+    let r_count = cfg.replicas;
+
+    let manifest = match &cfg.manifest {
+        Some(m) => m.clone(),
+        None => Manifest::synthetic(4 * cfg.family.chunks(), 16, 8, 2, 64, &[1, 2]),
+    };
+    let vp = manifest.spec.stages;
+    let chunks = cfg.family.chunks();
+    anyhow::ensure!(
+        chunks >= 1 && vp % chunks == 0,
+        "manifest's {vp} virtual stages don't split into {chunks} chunks ({:?})",
+        cfg.family
+    );
+    let p = vp / chunks;
+
+    let mut events: Vec<FleetEvent> = Vec::new();
+
+    // resolve the plan every replica will run — and PROVE it — before a
+    // single thread exists
+    let rebalance = match cfg.replica_cap_bytes {
+        None => cfg.rebalance.clone(),
+        Some(cap_bytes) => {
+            let template = TrainConfig {
+                manifest: Some(manifest.clone()),
+                family: cfg.family,
+                microbatches: cfg.microbatches,
+                rebalance: cfg.rebalance.clone(),
+                ..TrainConfig::default()
+            };
+            // the last stage hosts the largest stash entries (activation
+            // + targets), so it is the binding constraint under a
+            // uniform per-replica cap
+            let stage = p - 1;
+            let (plan, bounds) = replan_for_cap(&template, &manifest, p, stage, cap_bytes)
+                .map_err(|rej| {
+                    anyhow::anyhow!(
+                        "no feasible plan under replica cap of {cap_bytes} B: {}",
+                        rej.reason
+                    )
+                })?;
+            emit(cfg.log, &mut events, FleetEvent::CapPlan { stage, cap_bytes, bounds });
+            plan
+        }
+    };
+    try_plan_schedule(cfg.family, p, cfg.microbatches, &rebalance).map_err(|rej| {
+        anyhow::anyhow!("fleet plan failed static analysis: {}", rej.reason)
+    })?;
+
+    // one process-global fault plan, owned by the fleet; replica-scoped
+    // faults reach their replica through `TrainConfig::replica`
+    let _fault_guard = cfg.faults.clone().map(fault::install);
+
+    let mut handles: Vec<ReplicaHandle> = Vec::with_capacity(r_count);
+    for r in 0..r_count {
+        let dir = cfg.run_dir.join(format!("replica{r}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir)?;
+        handles.push(ReplicaHandle::spawn::<B>(ReplicaSpec {
+            id: r,
+            manifest: manifest.clone(),
+            family: cfg.family,
+            rebalance: rebalance.clone(),
+            microbatches: cfg.microbatches,
+            lr: cfg.lr,
+            seed: cfg.seed.wrapping_add(r as u64),
+            checkpoint_dir: dir,
+            max_restarts: cfg.max_restarts,
+            recover_timeout: cfg.recover_timeout,
+        }));
+    }
+
+    let rate = if cfg.rate == 0 { r_count as u64 * cfg.segment_len } else { cfg.rate };
+    let mut gen = TrafficGen::new(cfg.traffic, cfg.seed, rate);
+    let mut queue = WorkQueue::new(cfg.queue_cap);
+    let mut adm = AdmissionController::new();
+    let mut sync_pool = WeightSync::new();
+    let mut stats = FleetStats::default();
+
+    let started = Instant::now();
+    let mut done = vec![0u64; r_count];
+    let mut failures = vec![0u32; r_count];
+    let mut alive = vec![true; r_count];
+    let mut dead_since: Vec<Option<u64>> = vec![None; r_count];
+    let mut fail_at: Vec<Option<Instant>> = vec![None; r_count];
+    let mut recovering = vec![false; r_count];
+    let mut inflight: Vec<Vec<WorkItem>> = vec![Vec::new(); r_count];
+    let mut next_id = 0u64;
+    let mut round = 0u64;
+    // enough rounds to serve everything even through failures, sit-outs
+    // and re-admissions; past this the fleet is livelocked (e.g. a dead
+    // replica's backlog with stealing AND re-admission disabled)
+    let max_rounds = cfg.steps.saturating_mul(4) + cfg.readmit_after.saturating_mul(8) + 64;
+
+    loop {
+        // 1. traffic: seeded arrivals → admission (backpressure or shed)
+        if adm.offered < cfg.steps {
+            let arrivals = gen.arrivals(round).min(cfg.steps - adm.offered);
+            let mut admitted = 0u64;
+            let mut shed = 0u64;
+            for _ in 0..arrivals {
+                let item = WorkItem {
+                    id: next_id,
+                    home: (next_id % r_count as u64) as usize,
+                    enqueued: Instant::now(),
+                };
+                next_id += 1;
+                match adm.offer(&mut queue, item) {
+                    Admission::Admitted { .. } => admitted += 1,
+                    Admission::Rejected { .. } => shed += 1,
+                }
+            }
+            if arrivals > 0 {
+                let queue_len = queue.len();
+                emit(
+                    cfg.log,
+                    &mut events,
+                    FleetEvent::Traffic { round, arrivals, admitted, shed, queue_len },
+                );
+            }
+        }
+
+        // 2. elastic re-admission after the cool-down
+        if cfg.readmit_after > 0 {
+            for r in 0..r_count {
+                if !alive[r] && dead_since[r].map_or(false, |d| round - d >= cfg.readmit_after) {
+                    alive[r] = true;
+                    recovering[r] = true;
+                    dead_since[r] = None;
+                    emit(
+                        cfg.log,
+                        &mut events,
+                        FleetEvent::ReplicaReadmitted { round, replica: r, from_step: done[r] },
+                    );
+                }
+            }
+        }
+        let alive_now = alive.iter().filter(|&&a| a).count();
+        if alive_now < r_count {
+            stats.degraded_rounds += 1;
+        }
+        if alive_now == 0 && cfg.readmit_after == 0 {
+            anyhow::bail!("all {r_count} replicas failed with re-admission disabled");
+        }
+
+        // 3. dispatch one segment per idle alive replica
+        for r in 0..r_count {
+            if !alive[r] || !inflight[r].is_empty() {
+                continue;
+            }
+            let batch = queue.take(r, cfg.steal, cfg.segment_len);
+            if batch.is_empty() {
+                continue;
+            }
+            let target = done[r] + batch.len() as u64;
+            if handles[r].dispatch(target, done[r] > 0) {
+                inflight[r] = batch;
+            } else {
+                // command channel closed: the thread is gone
+                queue.requeue_front(batch);
+                alive[r] = false;
+                failures[r] += 1;
+                dead_since[r] = Some(round);
+                fail_at[r] = Some(Instant::now());
+                recovering[r] = false;
+                let report = FailureReport {
+                    stage: None,
+                    step: done[r],
+                    cause: FailureCause::ChannelClosed,
+                    detail: format!("replica {r} command channel closed"),
+                };
+                emit(cfg.log, &mut events, FleetEvent::ReplicaFailed { round, replica: r, report });
+                let alive_left = alive.iter().filter(|&&a| a).count();
+                emit(
+                    cfg.log,
+                    &mut events,
+                    FleetEvent::Degraded { round, alive: alive_left, replicas: r_count },
+                );
+            }
+        }
+
+        // 4. collect, in replica order, with a silent-replica deadline
+        for r in 0..r_count {
+            if inflight[r].is_empty() {
+                continue;
+            }
+            let expected = done[r] + inflight[r].len() as u64;
+            let outcome: Result<SegmentOk, FailureReport> = loop {
+                match spin_recv_deadline(handles[r].results(), Some(cfg.segment_timeout)) {
+                    // a report for an older target is the late echo of a
+                    // segment the fleet already timed out — drop it
+                    Ok(rep) if rep.target_steps != expected => continue,
+                    Ok(rep) => break rep.outcome,
+                    Err(ChannelError::Timeout { waited_ms }) => {
+                        break Err(FailureReport {
+                            stage: None,
+                            step: done[r],
+                            cause: FailureCause::ChannelTimeout { waited_ms },
+                            detail: format!("replica {r} silent past the segment deadline"),
+                        })
+                    }
+                    Err(ChannelError::Closed) => {
+                        break Err(FailureReport {
+                            stage: None,
+                            step: done[r],
+                            cause: FailureCause::ChannelClosed,
+                            detail: format!("replica {r} thread exited mid-segment"),
+                        })
+                    }
+                }
+            };
+            let now = Instant::now();
+            match outcome {
+                Ok(ok) => {
+                    done[r] = ok.steps_done;
+                    for item in inflight[r].drain(..) {
+                        stats.record_latency(now.duration_since(item.enqueued).as_secs_f64());
+                    }
+                    if recovering[r] {
+                        recovering[r] = false;
+                        let ttr = fail_at[r]
+                            .take()
+                            .map(|t| now.duration_since(t).as_secs_f64())
+                            .unwrap_or(0.0);
+                        stats.time_to_recover_s.push(ttr);
+                        emit(
+                            cfg.log,
+                            &mut events,
+                            FleetEvent::ReplicaRecovered {
+                                round,
+                                replica: r,
+                                time_to_recover_s: ttr,
+                            },
+                        );
+                    }
+                }
+                Err(report) => {
+                    alive[r] = false;
+                    failures[r] += 1;
+                    dead_since[r] = Some(round);
+                    fail_at[r] = Some(now);
+                    recovering[r] = false;
+                    // split the in-flight batch at the replica's durable
+                    // frontier: completed steps count, the tail drains
+                    // back to the queue for the survivors
+                    let batch = std::mem::take(&mut inflight[r]);
+                    let durable = latest_common_step(&handles[r].checkpoint_dir, 0..vp);
+                    let completed =
+                        (durable.saturating_sub(done[r]) as usize).min(batch.len());
+                    for item in &batch[..completed] {
+                        stats.record_latency(now.duration_since(item.enqueued).as_secs_f64());
+                    }
+                    let drained = batch[completed..].to_vec();
+                    let drained_n = drained.len() as u64;
+                    queue.requeue_front(drained);
+                    done[r] += completed as u64;
+                    if done[r] > 0 {
+                        // re-point run metadata at the durable frontier so
+                        // the re-admitted replica's resume validates
+                        CheckpointMeta {
+                            steps_done: done[r],
+                            stages: p,
+                            chunks,
+                            microbatches: cfg.microbatches,
+                            seed: cfg.seed.wrapping_add(r as u64),
+                        }
+                        .save(&handles[r].checkpoint_dir)?;
+                    }
+                    emit(
+                        cfg.log,
+                        &mut events,
+                        FleetEvent::ReplicaFailed { round, replica: r, report },
+                    );
+                    emit(
+                        cfg.log,
+                        &mut events,
+                        FleetEvent::Drain {
+                            round,
+                            replica: r,
+                            completed: completed as u64,
+                            drained: drained_n,
+                        },
+                    );
+                    let alive_left = alive.iter().filter(|&&a| a).count();
+                    emit(
+                        cfg.log,
+                        &mut events,
+                        FleetEvent::Degraded { round, alive: alive_left, replicas: r_count },
+                    );
+                }
+            }
+        }
+
+        // 5. periodic cross-replica weight averaging
+        if cfg.sync_every > 0 && (round + 1) % cfg.sync_every == 0 {
+            let peers: Vec<SyncPeer> = (0..r_count)
+                .filter(|&r| alive[r] && done[r] > 0)
+                .map(|r| SyncPeer {
+                    replica: r,
+                    dir: handles[r].checkpoint_dir.clone(),
+                    step: done[r],
+                })
+                .collect();
+            if peers.len() >= 2 {
+                let n_peers = peers.len();
+                let elements = sync_pool.sync(&manifest, &peers)?;
+                stats.syncs += 1;
+                emit(
+                    cfg.log,
+                    &mut events,
+                    FleetEvent::Sync { round, replicas: n_peers, elements },
+                );
+            }
+        }
+
+        round += 1;
+        if adm.offered >= cfg.steps && queue.is_empty() && inflight.iter().all(|v| v.is_empty())
+        {
+            break;
+        }
+        anyhow::ensure!(
+            round <= max_rounds,
+            "fleet stalled after {round} rounds: {} of {} offered, queue holds {} \
+             (dead replicas with stealing and re-admission both disabled?)",
+            adm.offered,
+            cfg.steps,
+            queue.len()
+        );
+    }
+
+    for h in &mut handles {
+        h.shutdown();
+    }
+
+    stats.elapsed_s = started.elapsed().as_secs_f64();
+    stats.offered = adm.offered;
+    stats.admitted = adm.admitted;
+    stats.shed = adm.shed;
+    stats.rounds = round;
+    for r in 0..r_count {
+        let steps_per_s = if stats.elapsed_s > 0.0 { done[r] as f64 / stats.elapsed_s } else { 0.0 };
+        stats.replicas.push(ReplicaStats {
+            replica: r,
+            steps: done[r],
+            steps_per_s,
+            failures: failures[r],
+        });
+    }
+    let completed = stats.completed();
+    let shed = stats.shed;
+    emit(cfg.log, &mut events, FleetEvent::Done { rounds: round, completed, shed });
+    Ok(FleetOutcome { stats, events, steps_done: done })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::SimBackend;
+
+    fn base_cfg(tag: &str) -> FleetConfig {
+        FleetConfig {
+            replicas: 2,
+            steps: 8,
+            queue_cap: 16,
+            segment_len: 2,
+            seed: 11,
+            manifest: Some(Manifest::synthetic(2, 16, 8, 2, 64, &[1, 2])),
+            run_dir: std::env::temp_dir()
+                .join(format!("bpipe-fleet-mod-{tag}-{}", std::process::id())),
+            ..FleetConfig::default()
+        }
+    }
+
+    #[test]
+    fn healthy_fleet_serves_all_offered_work() {
+        let cfg = base_cfg("healthy");
+        let out = serve::<SimBackend>(&cfg).unwrap();
+        assert_eq!(out.stats.offered, 8);
+        assert_eq!(out.stats.admitted, 8, "queue cap 16 never sheds at rate 4");
+        assert_eq!(out.stats.shed, 0);
+        assert_eq!(out.stats.completed(), 8);
+        assert_eq!(out.steps_done.iter().sum::<u64>(), 8);
+        // id % 2 homing with no failures splits the stream evenly
+        assert_eq!(out.steps_done, vec![4, 4]);
+        assert!(out.events.iter().all(|e| !matches!(e, FleetEvent::ReplicaFailed { .. })));
+        assert!(matches!(out.events.last(), Some(FleetEvent::Done { .. })));
+        assert!(out.stats.p99_latency_s().is_finite());
+        let _ = std::fs::remove_dir_all(&cfg.run_dir);
+    }
+
+    #[test]
+    fn sync_rounds_average_without_breaking_completion() {
+        let mut cfg = base_cfg("sync");
+        cfg.sync_every = 1;
+        let out = serve::<SimBackend>(&cfg).unwrap();
+        assert_eq!(out.stats.completed(), 8);
+        assert!(out.stats.syncs > 0, "sync_every=1 must sync at least once");
+        assert!(out.events.iter().any(|e| matches!(e, FleetEvent::Sync { .. })));
+        let _ = std::fs::remove_dir_all(&cfg.run_dir);
+    }
+
+    #[test]
+    fn infeasible_replica_cap_refuses_to_spawn() {
+        let mut cfg = base_cfg("cap");
+        cfg.replica_cap_bytes = Some(64); // fits < 2 stash entries
+        let err = serve::<SimBackend>(&cfg).unwrap_err();
+        let text = format!("{err:#}");
+        assert!(text.contains("no feasible plan"), "{text}");
+        let _ = std::fs::remove_dir_all(&cfg.run_dir);
+    }
+}

@@ -1,0 +1,207 @@
+//! The fleet's shared work queue and admission control.
+//!
+//! Work items are training steps: item `id` is globally unique and its
+//! `home` replica is `id % R`, so every replica owns a deterministic
+//! interleaved share of the stream.  The queue is BOUNDED — that bound
+//! is the fleet's backpressure — and the admission controller turns
+//! overflow into a typed [`Admission::Rejected`] (load shedding) instead
+//! of blocking the traffic source or growing without limit.
+//!
+//! Two queue operations deliberately bypass the cap:
+//!
+//! * [`WorkQueue::requeue_front`] — DRAINED items (in flight on a
+//!   replica that died) were already admitted once; conservation
+//!   (`offered = admitted + shed`) would break if re-queueing them could
+//!   shed, so they go back to the queue head even when it is full.
+//! * dispatch ([`WorkQueue::take`]) — survivors pull work out, which is
+//!   what relieves the pressure.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// One unit of fleet work: a single training step for its home replica.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkItem {
+    /// globally unique, monotonically assigned by the traffic loop
+    pub id: u64,
+    /// replica that owns the item's step (`id % replicas`)
+    pub home: usize,
+    /// first admission time — preserved across drain/re-queue so
+    /// latency percentiles stay honest through a failure transition
+    pub enqueued: Instant,
+}
+
+/// Why the admission controller shed a work item.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// the bounded queue is at capacity — the fleet is saturated
+    QueueFull { cap: usize },
+}
+
+impl RejectReason {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RejectReason::QueueFull { .. } => "queue-full",
+        }
+    }
+}
+
+/// Typed admission outcome for one offered work item.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    Admitted { queue_len: usize },
+    Rejected { reason: RejectReason },
+}
+
+/// Bounded FIFO of admitted work items.
+#[derive(Debug)]
+pub struct WorkQueue {
+    items: VecDeque<WorkItem>,
+    cap: usize,
+}
+
+impl WorkQueue {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "a zero-capacity queue can admit nothing");
+        Self { items: VecDeque::with_capacity(cap), cap }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Admit `item` if the queue has room.
+    pub fn admit(&mut self, item: WorkItem) -> Admission {
+        if self.items.len() >= self.cap {
+            return Admission::Rejected { reason: RejectReason::QueueFull { cap: self.cap } };
+        }
+        self.items.push_back(item);
+        Admission::Admitted { queue_len: self.items.len() }
+    }
+
+    /// Return drained (already-admitted) items to the queue HEAD in
+    /// their original order, bypassing the cap — see the module docs.
+    pub fn requeue_front(&mut self, items: Vec<WorkItem>) {
+        for item in items.into_iter().rev() {
+            self.items.push_front(item);
+        }
+    }
+
+    /// Pop up to `max` items for `replica`: its own (`home == replica`)
+    /// items first, in FIFO order; with `steal`, any remaining slots are
+    /// filled from other replicas' backlog (degraded-mode work stealing).
+    pub fn take(&mut self, replica: usize, steal: bool, max: u64) -> Vec<WorkItem> {
+        let max = max as usize;
+        let mut taken = Vec::new();
+        let mut rest = VecDeque::with_capacity(self.items.len());
+        while let Some(item) = self.items.pop_front() {
+            if taken.len() < max && (item.home == replica || steal) {
+                taken.push(item);
+            } else {
+                rest.push_back(item);
+            }
+        }
+        self.items = rest;
+        taken
+    }
+}
+
+/// Admission bookkeeping over the queue: every offered item is exactly
+/// one of admitted or shed, so `offered = admitted + shed` always holds
+/// (the chaos suite asserts it through failure transitions).
+#[derive(Debug, Default)]
+pub struct AdmissionController {
+    pub offered: u64,
+    pub admitted: u64,
+    pub shed: u64,
+}
+
+impl AdmissionController {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Offer one item to the queue and account for the outcome.
+    pub fn offer(&mut self, queue: &mut WorkQueue, item: WorkItem) -> Admission {
+        self.offered += 1;
+        let outcome = queue.admit(item);
+        match outcome {
+            Admission::Admitted { .. } => self.admitted += 1,
+            Admission::Rejected { .. } => self.shed += 1,
+        }
+        outcome
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn item(id: u64, replicas: usize) -> WorkItem {
+        WorkItem { id, home: (id % replicas as u64) as usize, enqueued: Instant::now() }
+    }
+
+    #[test]
+    fn admission_sheds_past_capacity_and_conserves() {
+        let mut q = WorkQueue::new(3);
+        let mut adm = AdmissionController::new();
+        let mut outcomes = Vec::new();
+        for id in 0..5 {
+            outcomes.push(adm.offer(&mut q, item(id, 2)));
+        }
+        assert_eq!(adm.offered, 5);
+        assert_eq!(adm.admitted, 3);
+        assert_eq!(adm.shed, 2);
+        assert_eq!(adm.offered, adm.admitted + adm.shed, "conservation");
+        assert!(matches!(
+            outcomes[3],
+            Admission::Rejected { reason: RejectReason::QueueFull { cap: 3 } }
+        ));
+        assert_eq!(q.len(), 3);
+    }
+
+    #[test]
+    fn take_prefers_home_items_in_fifo_order() {
+        let mut q = WorkQueue::new(8);
+        for id in 0..6 {
+            q.admit(item(id, 2));
+        }
+        // replica 0 owns 0, 2, 4; without steal it gets exactly those
+        let own = q.take(0, false, 8);
+        assert_eq!(own.iter().map(|i| i.id).collect::<Vec<_>>(), vec![0, 2, 4]);
+        assert_eq!(q.len(), 3, "replica 1's items stay queued");
+        let none = q.take(0, false, 8);
+        assert!(none.is_empty(), "no home items left");
+    }
+
+    #[test]
+    fn steal_takes_orphaned_items_up_to_max() {
+        let mut q = WorkQueue::new(8);
+        for id in 0..6 {
+            q.admit(item(id, 2));
+        }
+        let got = q.take(0, true, 4);
+        assert_eq!(got.iter().map(|i| i.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn requeue_front_restores_order_and_bypasses_cap() {
+        let mut q = WorkQueue::new(2);
+        q.admit(item(0, 1));
+        q.admit(item(1, 1));
+        let drained = vec![item(10, 1), item(11, 1)];
+        q.requeue_front(drained);
+        assert_eq!(q.len(), 4, "drains bypass the cap");
+        let got = q.take(0, false, 8);
+        assert_eq!(got.iter().map(|i| i.id).collect::<Vec<_>>(), vec![10, 11, 0, 1]);
+    }
+}

@@ -1,0 +1,266 @@
+//! One fleet replica: a full supervised pipeline coordinator (PR-5
+//! training loop under the PR-7 checkpoint–re-plan–resume supervisor)
+//! running on its own thread, driven segment-by-segment over a command
+//! channel.
+//!
+//! The replica is the fleet's FAILURE DOMAIN: everything below this
+//! boundary (worker panics, transient execute failures, HBM pressure,
+//! channel timeouts) is the per-replica supervisor's business and is
+//! retried/re-planned in place.  Only when that supervisor's restart
+//! budget is exhausted does the failure ESCALATE across the boundary as
+//! a typed [`FailureReport`] in the [`SegmentReport`] — at which point
+//! the fleet supervisor drains the replica's in-flight work and
+//! redistributes it.
+//!
+//! Segments run under `resume: true` against the replica's private
+//! checkpoint directory, so a re-admitted replica continues from its
+//! last durable step with no special-case code path.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::{
+    supervise, FailureCause, FailureReport, ProgressLog, RebalancePlan, SuperviseConfig,
+    TrainConfig,
+};
+use crate::schedule::Family;
+use crate::runtime::{Backend, Manifest};
+
+/// Everything needed to (re)build a replica's training configuration.
+#[derive(Debug, Clone)]
+pub struct ReplicaSpec {
+    pub id: usize,
+    pub manifest: Manifest,
+    pub family: Family,
+    pub rebalance: RebalancePlan,
+    pub microbatches: u64,
+    pub lr: f32,
+    /// already replica-offset: `fleet_seed.wrapping_add(id)`
+    pub seed: u64,
+    /// this replica's private checkpoint directory
+    pub checkpoint_dir: PathBuf,
+    /// per-replica supervisor policy (the INNER failure domain)
+    pub max_restarts: u32,
+    pub recover_timeout: Option<Duration>,
+}
+
+/// A command from the fleet supervisor to a replica thread.
+#[derive(Debug, Clone)]
+pub enum Command {
+    /// Train until the TOTAL step count reaches `target_steps` (resume
+    /// semantics: the segment length is `target_steps - steps_done`).
+    Segment { target_steps: u64, resume: bool },
+    Shutdown,
+}
+
+/// A successfully completed segment.
+#[derive(Debug, Clone)]
+pub struct SegmentOk {
+    /// total steps durable after the segment (== the segment's target)
+    pub steps_done: u64,
+    /// in-domain restarts the replica's own supervisor absorbed
+    pub restarts: u32,
+    pub retried_executes: u64,
+}
+
+/// What came back over the result channel for one segment.
+#[derive(Debug, Clone)]
+pub struct SegmentReport {
+    pub replica: usize,
+    pub target_steps: u64,
+    /// `Err` is an ESCALATED failure — the replica's own restart budget
+    /// is spent and the fleet must handle it
+    pub outcome: Result<SegmentOk, FailureReport>,
+}
+
+/// Fleet-side handle to a running replica thread.
+#[derive(Debug)]
+pub struct ReplicaHandle {
+    pub id: usize,
+    pub checkpoint_dir: PathBuf,
+    pub progress: ProgressLog,
+    cmd: SyncSender<Command>,
+    res: Receiver<SegmentReport>,
+    thread: Option<JoinHandle<()>>,
+}
+
+/// Pull the typed [`FailureReport`] out of a supervisor error chain,
+/// synthesizing an `Other` report for untyped errors (config/IO noise)
+/// so the fleet always has a classified cause to log.
+fn escalate(replica: usize, e: anyhow::Error) -> FailureReport {
+    e.chain()
+        .find_map(|c| c.downcast_ref::<FailureReport>())
+        .cloned()
+        .unwrap_or_else(|| FailureReport {
+            stage: None,
+            step: 0,
+            cause: FailureCause::Other,
+            detail: format!("replica {replica}: {e:#}"),
+        })
+}
+
+impl ReplicaHandle {
+    /// Spawn the replica thread.  The thread owns a persistent
+    /// [`ProgressLog`] (shared with this handle) and runs one supervised
+    /// training segment per [`Command::Segment`], reporting each outcome
+    /// on the result channel.
+    ///
+    /// Faults are NOT installed here: the global fault registry is
+    /// process-wide and owned by the fleet supervisor; replica scoping
+    /// happens through `TrainConfig::replica` → `Backend::bind_replica`.
+    pub fn spawn<B: Backend>(spec: ReplicaSpec) -> ReplicaHandle {
+        let (cmd_tx, cmd_rx) = sync_channel::<Command>(2);
+        let (res_tx, res_rx) = sync_channel::<SegmentReport>(1);
+        let progress = ProgressLog::new();
+        let thread_progress = progress.clone();
+        let id = spec.id;
+        let checkpoint_dir = spec.checkpoint_dir.clone();
+        let thread = std::thread::Builder::new()
+            .name(format!("fleet-replica-{id}"))
+            .spawn(move || {
+                while let Ok(cmd) = cmd_rx.recv() {
+                    let (target_steps, resume) = match cmd {
+                        Command::Segment { target_steps, resume } => (target_steps, resume),
+                        Command::Shutdown => return,
+                    };
+                    let scfg = SuperviseConfig {
+                        train: TrainConfig {
+                            manifest: Some(spec.manifest.clone()),
+                            family: spec.family,
+                            steps: target_steps,
+                            microbatches: spec.microbatches,
+                            lr: spec.lr,
+                            rebalance: spec.rebalance.clone(),
+                            seed: spec.seed,
+                            log_every: 0,
+                            checkpoint_dir: Some(spec.checkpoint_dir.clone()),
+                            checkpoint_every: 1,
+                            resume,
+                            recover_timeout: spec.recover_timeout,
+                            retry_budget: 1,
+                            retry_backoff_ms: 1,
+                            progress: Some(thread_progress.clone()),
+                            replica: Some(spec.id),
+                            ..TrainConfig::default()
+                        },
+                        faults: None,
+                        max_restarts: spec.max_restarts,
+                        recover_timeout: spec.recover_timeout,
+                        backoff_base_ms: 1,
+                        log: false,
+                    };
+                    let outcome = match supervise::<B>(&scfg) {
+                        Ok(out) => Ok(SegmentOk {
+                            steps_done: target_steps,
+                            restarts: out.restarts,
+                            retried_executes: out.retried_executes,
+                        }),
+                        Err(e) => Err(escalate(spec.id, e)),
+                    };
+                    let report = SegmentReport { replica: spec.id, target_steps, outcome };
+                    if res_tx.send(report).is_err() {
+                        return; // fleet supervisor is gone
+                    }
+                }
+            })
+            .expect("spawn replica thread");
+        ReplicaHandle { id, checkpoint_dir, progress, cmd: cmd_tx, res: res_rx, thread: Some(thread) }
+    }
+
+    /// Dispatch a segment.  Returns `false` when the replica thread is
+    /// gone (its channel closed) — the caller treats that as a failure.
+    pub fn dispatch(&self, target_steps: u64, resume: bool) -> bool {
+        self.cmd.send(Command::Segment { target_steps, resume }).is_ok()
+    }
+
+    /// The segment-result channel, for deadline-bounded receives via
+    /// [`crate::coordinator::spin_recv_deadline`].
+    pub fn results(&self) -> &Receiver<SegmentReport> {
+        &self.res
+    }
+
+    /// Ask the thread to exit and join it.  Safe to call on an
+    /// already-dead replica (send/join failures are swallowed — the
+    /// thread's failure was already reported through the result channel).
+    pub fn shutdown(&mut self) {
+        let _ = self.cmd.send(Command::Shutdown);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ReplicaHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::latest_common_step;
+    use crate::runtime::SimBackend;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("bpipe-fleet-replica-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn spec(id: usize, dir: PathBuf) -> ReplicaSpec {
+        ReplicaSpec {
+            id,
+            manifest: Manifest::synthetic(2, 16, 8, 2, 64, &[1, 2]),
+            family: Family::OneFOneB,
+            rebalance: RebalancePlan::Off,
+            microbatches: 4,
+            lr: 2e-3,
+            seed: 7 + id as u64,
+            checkpoint_dir: dir,
+            max_restarts: 0,
+            recover_timeout: Some(Duration::from_millis(5000)),
+        }
+    }
+
+    #[test]
+    fn replica_runs_segments_and_resumes_between_them() {
+        let dir = tmp("segments");
+        let mut h = ReplicaHandle::spawn::<SimBackend>(spec(0, dir.clone()));
+        assert!(h.dispatch(2, false));
+        let first = h.results().recv().unwrap();
+        assert_eq!(first.replica, 0);
+        let ok = first.outcome.expect("segment 1");
+        assert_eq!(ok.steps_done, 2);
+        assert_eq!(latest_common_step(&dir, 0..2), 2, "two steps durable");
+        assert!(h.dispatch(5, true), "second segment resumes to total 5");
+        let second = h.results().recv().unwrap();
+        assert_eq!(second.outcome.expect("segment 2").steps_done, 5);
+        assert_eq!(latest_common_step(&dir, 0..2), 5);
+        assert_eq!(h.progress.len(), 5, "progress log spans both segments");
+        h.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bad_segment_escalates_a_typed_report() {
+        let dir = tmp("escalate");
+        let mut h = ReplicaHandle::spawn::<SimBackend>(spec(1, dir.clone()));
+        // a zero-step segment is a config error ("nothing to do") — it
+        // must come back as an escalated typed report, not a hang or a
+        // panic, and the thread must survive to run real segments after
+        assert!(h.dispatch(0, false));
+        let report = h.results().recv().unwrap();
+        let err = report.outcome.expect_err("zero-step segment is rejected");
+        assert!(!err.detail.is_empty());
+        assert!(h.dispatch(1, false), "replica thread survives a bad segment");
+        let ok = h.results().recv().unwrap().outcome.expect("recovery segment");
+        assert_eq!(ok.steps_done, 1);
+        h.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

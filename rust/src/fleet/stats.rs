@@ -1,0 +1,177 @@
+//! Fleet-level telemetry: per-replica throughput, work-item latency
+//! percentiles, admission accounting and recovery timing — the numbers
+//! behind the `bpipe serve` JSON summary and the `fleet` section of
+//! `BENCH_runtime.json`.
+
+use crate::util::json::Json;
+
+/// One replica's contribution to the fleet run.
+#[derive(Debug, Clone)]
+pub struct ReplicaStats {
+    pub replica: usize,
+    /// optimizer steps this replica completed (post-recovery total)
+    pub steps: u64,
+    /// steps per wall-clock second over the whole serve window
+    pub steps_per_s: f64,
+    /// terminal failures escalated to the fleet domain
+    pub failures: u32,
+}
+
+/// Aggregate statistics for one `serve` run.  Latency is measured per
+/// WORK ITEM — first admission to segment completion — so queue wait,
+/// failure detection and drain/re-dispatch delay all show up in the
+/// percentiles (the p99 through a kill is the honest recovery cost).
+#[derive(Debug, Clone, Default)]
+pub struct FleetStats {
+    pub replicas: Vec<ReplicaStats>,
+    pub offered: u64,
+    pub admitted: u64,
+    pub shed: u64,
+    pub rounds: u64,
+    /// rounds spent with at least one replica down
+    pub degraded_rounds: u64,
+    /// cross-replica weight syncs performed
+    pub syncs: u64,
+    /// seconds from each failure detection to the failed replica's first
+    /// post-re-admission segment completion, in failure order
+    pub time_to_recover_s: Vec<f64>,
+    /// per-item first-admission → completion seconds
+    latency_s: Vec<f64>,
+    /// serve wall-clock, seconds
+    pub elapsed_s: f64,
+}
+
+impl FleetStats {
+    pub fn record_latency(&mut self, secs: f64) {
+        self.latency_s.push(secs);
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.latency_s.len() as u64
+    }
+
+    /// Fleet-aggregate steps per second.
+    pub fn steps_per_s(&self) -> f64 {
+        if self.elapsed_s > 0.0 {
+            self.replicas.iter().map(|r| r.steps).sum::<u64>() as f64 / self.elapsed_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Nearest-rank latency percentile (`q` in 0..=1); NaN with no
+    /// samples.
+    pub fn latency_percentile(&self, q: f64) -> f64 {
+        if self.latency_s.is_empty() {
+            return f64::NAN;
+        }
+        let mut xs = self.latency_s.clone();
+        xs.sort_by(f64::total_cmp);
+        let idx = (q.clamp(0.0, 1.0) * (xs.len() - 1) as f64).round() as usize;
+        xs[idx.min(xs.len() - 1)]
+    }
+
+    pub fn p50_latency_s(&self) -> f64 {
+        self.latency_percentile(0.50)
+    }
+
+    pub fn p99_latency_s(&self) -> f64 {
+        self.latency_percentile(0.99)
+    }
+
+    /// One human line for the end of a serve run.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} replicas, {}/{} items done ({} shed), {:.1} steps/s, \
+             p50 {:.3}s p99 {:.3}s, {} recovery(ies), {} round(s)",
+            self.replicas.len(),
+            self.completed(),
+            self.offered,
+            self.shed,
+            self.steps_per_s(),
+            self.p50_latency_s(),
+            self.p99_latency_s(),
+            self.time_to_recover_s.len(),
+            self.rounds
+        )
+    }
+
+    /// The machine-readable summary `bpipe serve` prints (NaN-free:
+    /// missing percentiles serialize as null).
+    pub fn to_json(&self) -> Json {
+        let num_or_null = |x: f64| if x.is_finite() { Json::Num(x) } else { Json::Null };
+        let replicas: Vec<Json> = self
+            .replicas
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("replica", Json::Num(r.replica as f64)),
+                    ("steps", Json::Num(r.steps as f64)),
+                    ("steps_per_s", num_or_null(r.steps_per_s)),
+                    ("failures", Json::Num(r.failures as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("replicas", Json::Arr(replicas)),
+            ("offered", Json::Num(self.offered as f64)),
+            ("admitted", Json::Num(self.admitted as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("completed", Json::Num(self.completed() as f64)),
+            ("rounds", Json::Num(self.rounds as f64)),
+            ("degraded_rounds", Json::Num(self.degraded_rounds as f64)),
+            ("syncs", Json::Num(self.syncs as f64)),
+            ("steps_per_s", num_or_null(self.steps_per_s())),
+            ("p50_step_latency_s", num_or_null(self.p50_latency_s())),
+            ("p99_step_latency_s", num_or_null(self.p99_latency_s())),
+            (
+                "time_to_recover_s",
+                Json::Arr(self.time_to_recover_s.iter().map(|&t| Json::Num(t)).collect()),
+            ),
+            ("elapsed_s", Json::Num(self.elapsed_s)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_use_nearest_rank() {
+        let mut s = FleetStats::default();
+        for i in 1..=100 {
+            s.record_latency(i as f64);
+        }
+        assert_eq!(s.p50_latency_s(), 50.0);
+        assert_eq!(s.p99_latency_s(), 99.0);
+        assert_eq!(s.latency_percentile(0.0), 1.0);
+        assert_eq!(s.latency_percentile(1.0), 100.0);
+    }
+
+    #[test]
+    fn empty_stats_are_nan_but_json_is_null() {
+        let s = FleetStats::default();
+        assert!(s.p99_latency_s().is_nan());
+        let text = s.to_json().to_string();
+        assert!(text.contains("\"p99_step_latency_s\":null"), "{text}");
+        assert!(!text.contains("NaN"), "JSON must stay parseable: {text}");
+    }
+
+    #[test]
+    fn json_carries_the_admission_accounting() {
+        let mut s = FleetStats::default();
+        s.offered = 10;
+        s.admitted = 8;
+        s.shed = 2;
+        s.elapsed_s = 2.0;
+        s.replicas.push(ReplicaStats { replica: 0, steps: 8, steps_per_s: 4.0, failures: 1 });
+        s.record_latency(0.5);
+        let j = s.to_json();
+        assert_eq!(j.get("shed").and_then(|v| v.as_u64()), Some(2));
+        assert_eq!(j.get("completed").and_then(|v| v.as_u64()), Some(1));
+        let text = j.to_string();
+        assert!(text.contains("\"failures\""), "{text}");
+        assert!(s.summary().contains("2 shed") || s.summary().contains("(2 shed)"));
+    }
+}

@@ -1,0 +1,200 @@
+//! Periodic cross-replica weight synchronization.
+//!
+//! The fleet's replicas are data-parallel: each consumes its own slice
+//! of the work stream, so their weights drift apart between syncs.  A
+//! sync element-wise averages every stage checkpoint (params AND Adam
+//! moments — averaging only params would leave the optimizer state
+//! pointing at pre-average geometry) across the alive replicas and
+//! writes the result back to each replica's checkpoint directory at
+//! that replica's OWN step tag, so a later resume still passes the
+//! step-consistency validation.
+//!
+//! Determinism: replicas are reduced in ascending replica-id order with
+//! f64 accumulation, so the result is bit-identical across runs for the
+//! same inputs — silent (dead) replicas are simply absent from the
+//! `alive` slice and never block the reduction.
+
+use std::path::PathBuf;
+
+use anyhow::Context;
+
+use crate::coordinator::StageCheckpoint;
+use crate::runtime::Manifest;
+
+/// One sync participant: replica id, its checkpoint directory, and the
+/// step its checkpoints are tagged with.
+#[derive(Debug, Clone)]
+pub struct SyncPeer {
+    pub replica: usize,
+    pub dir: PathBuf,
+    pub step: u64,
+}
+
+/// Pooled accumulation buffers for cross-replica averaging; hold one
+/// across rounds so the per-sync cost is I/O plus arithmetic, with no
+/// steady-state allocation.
+#[derive(Debug, Default)]
+pub struct WeightSync {
+    acc_params: Vec<f64>,
+    acc_m: Vec<f64>,
+    acc_v: Vec<f64>,
+}
+
+impl WeightSync {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn reset(&mut self, n: usize) {
+        for acc in [&mut self.acc_params, &mut self.acc_m, &mut self.acc_v] {
+            acc.clear();
+            acc.resize(n, 0.0);
+        }
+    }
+
+    /// Average every virtual stage's checkpoint across `peers` and write
+    /// the result back to each peer at its own step tag.  Returns the
+    /// number of f32 elements averaged (params + moments, all stages,
+    /// counted once — not per peer).
+    ///
+    /// Requires ≥ 2 peers: a one-replica "sync" would only rewrite
+    /// checkpoints it cannot change.
+    pub fn sync(&mut self, manifest: &Manifest, peers: &[SyncPeer]) -> anyhow::Result<u64> {
+        anyhow::ensure!(peers.len() >= 2, "weight sync needs >= 2 alive replicas, got {}", peers.len());
+        let scale = 1.0 / peers.len() as f64;
+        let mut elements = 0u64;
+        for virt in 0..manifest.spec.stages {
+            let n = manifest.param_count(manifest.stage_kind(virt))? as usize;
+            self.reset(n);
+            for peer in peers {
+                // load the generation tagged with the peer's durable step
+                // (a just-rolled-back stage can have a NEWER current
+                // generation than its replica's common step)
+                let ck = StageCheckpoint::load_at(&peer.dir, virt, n, peer.step).with_context(
+                    || {
+                        format!(
+                            "sync: replica {} stage {virt} has no checkpoint at step {}",
+                            peer.replica, peer.step
+                        )
+                    },
+                )?;
+                for i in 0..n {
+                    self.acc_params[i] += ck.params[i] as f64;
+                    self.acc_m[i] += ck.m[i] as f64;
+                    self.acc_v[i] += ck.v[i] as f64;
+                }
+            }
+            let mean = StageCheckpoint {
+                params: self.acc_params.iter().map(|&x| (x * scale) as f32).collect(),
+                m: self.acc_m.iter().map(|&x| (x * scale) as f32).collect(),
+                v: self.acc_v.iter().map(|&x| (x * scale) as f32).collect(),
+            };
+            for peer in peers {
+                mean.save_at(&peer.dir, virt, peer.step).with_context(|| {
+                    format!("sync: replica {} stage {virt} write-back failed", peer.replica)
+                })?;
+            }
+            elements += 3 * n as u64;
+        }
+        Ok(elements)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::latest_common_step;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("bpipe-fleet-sync-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn fill(dir: &std::path::Path, manifest: &Manifest, base: f32, step: u64) {
+        for virt in 0..manifest.spec.stages {
+            let n = manifest.param_count(manifest.stage_kind(virt)).unwrap() as usize;
+            let ck = StageCheckpoint {
+                params: (0..n).map(|i| base + i as f32).collect(),
+                m: vec![base * 0.1; n],
+                v: vec![base * 0.01; n],
+            };
+            ck.save_at(dir, virt, step).unwrap();
+        }
+    }
+
+    #[test]
+    fn sync_averages_and_preserves_step_tags() {
+        let manifest = Manifest::synthetic(2, 16, 8, 2, 64, &[1, 2]);
+        let a = tmp("a");
+        let b = tmp("b");
+        fill(&a, &manifest, 1.0, 5);
+        fill(&b, &manifest, 3.0, 7);
+        let peers = vec![
+            SyncPeer { replica: 0, dir: a.clone(), step: 5 },
+            SyncPeer { replica: 1, dir: b.clone(), step: 7 },
+        ];
+        let elements = WeightSync::new().sync(&manifest, &peers).unwrap();
+        let mut expect = 0u64;
+        for virt in 0..manifest.spec.stages {
+            let n = manifest.param_count(manifest.stage_kind(virt)).unwrap() as usize;
+            expect += 3 * n as u64;
+            let ca = StageCheckpoint::load(&a, virt, n).unwrap();
+            let cb = StageCheckpoint::load(&b, virt, n).unwrap();
+            assert_eq!(ca, cb, "stage {virt}: both replicas hold the mean");
+            assert_eq!(ca.params[0], 2.0, "mean of 1.0 and 3.0");
+            assert_eq!(ca.params[n - 1], 2.0 + (n - 1) as f32);
+            assert!((ca.m[0] - 0.2).abs() < 1e-6);
+        }
+        assert_eq!(elements, expect);
+        // step tags survive the write-back, so resume validation still holds
+        assert_eq!(latest_common_step(&a, 0..manifest.spec.stages), 5);
+        assert_eq!(latest_common_step(&b, 0..manifest.spec.stages), 7);
+        let _ = std::fs::remove_dir_all(&a);
+        let _ = std::fs::remove_dir_all(&b);
+    }
+
+    #[test]
+    fn sync_refuses_a_lonely_replica() {
+        let manifest = Manifest::synthetic(2, 16, 8, 2, 64, &[1, 2]);
+        let a = tmp("lonely");
+        fill(&a, &manifest, 1.0, 1);
+        let peers = vec![SyncPeer { replica: 0, dir: a.clone(), step: 1 }];
+        assert!(WeightSync::new().sync(&manifest, &peers).is_err());
+        let _ = std::fs::remove_dir_all(&a);
+    }
+
+    #[test]
+    fn sync_is_deterministic_across_pool_reuse() {
+        let manifest = Manifest::synthetic(2, 16, 8, 2, 64, &[1, 2]);
+        let dirs: Vec<PathBuf> = (0..3).map(|i| tmp(&format!("det{i}"))).collect();
+        let run = |pool: &mut WeightSync, tag: &str| -> Vec<StageCheckpoint> {
+            for (i, d) in dirs.iter().enumerate() {
+                let _ = std::fs::remove_dir_all(d);
+                std::fs::create_dir_all(d).unwrap();
+                fill(d, &manifest, 0.5 + i as f32 * 1.25, 3);
+            }
+            let peers: Vec<SyncPeer> = dirs
+                .iter()
+                .enumerate()
+                .map(|(i, d)| SyncPeer { replica: i, dir: d.clone(), step: 3 })
+                .collect();
+            pool.sync(&manifest, &peers).unwrap_or_else(|e| panic!("{tag}: {e:#}"));
+            (0..manifest.spec.stages)
+                .map(|virt| {
+                    let n = manifest.param_count(manifest.stage_kind(virt)).unwrap() as usize;
+                    StageCheckpoint::load(&dirs[0], virt, n).unwrap()
+                })
+                .collect()
+        };
+        let mut pool = WeightSync::new();
+        let first = run(&mut pool, "first");
+        let second = run(&mut pool, "second (reused pool)");
+        assert_eq!(first, second, "pooled buffers must not leak state across syncs");
+        for d in &dirs {
+            let _ = std::fs::remove_dir_all(d);
+        }
+    }
+}

@@ -47,6 +47,8 @@
 //! | Beyond the paper: 8-lane SIMD kernels + canonical tree reduction (bit-reproducible) | [`runtime::kernels`], `rust/tests/property_kernels.rs` |
 //! | Beyond the paper: warm-start delta-DES (event-prefix replay between adjacent bounds) | [`sim::SimWorkspace`], [`sim::SweepReport`], `bpipe sweep --bounds [--force-cold]` |
 //! | Beyond the paper: vendored PJRT-shaped client (compile/execute/donation aliases) | `runtime::pjrt_stub` (feature `pjrt`), `runtime::engine` |
+//! | Beyond the paper: recompute-vs-stash hybrid memory model in the sweep | [`sim::SweepOptions`] (`recompute`), `bpipe sweep --recompute` |
+//! | Beyond the paper: elastic fleet — N pipeline replicas under live traffic, replica-level fault domains, load shedding, elastic re-admission | [`fleet::serve`], [`fleet::WorkQueue`], [`fleet::TrafficGen`], `bpipe serve` |
 //!
 //! `docs/ARCHITECTURE.md` has the crate-level data-flow diagram and the
 //! [`runtime::Backend`] boundary; [`sweep_schema`] documents (and
@@ -57,6 +59,7 @@ pub mod bpipe;
 pub mod config;
 pub mod coordinator;
 pub mod estimator;
+pub mod fleet;
 pub mod metrics;
 pub mod model;
 pub mod report;

@@ -52,6 +52,7 @@ COMMANDS:
             [--timeline]                 simulate one experiment
   sweep     [--experiment 1..10] [--v N] [--threads N]
             [--bounds | --synth] [--skip-oom] [--force-cold]
+            [--recompute]
             [--csv f.csv] [--json f.json]  rank the experiment x schedule
                                          x layout grid (parallel DES);
                                          --bounds sweeps every rebalance
@@ -64,7 +65,11 @@ COMMANDS:
                                          cells statically (no DES);
                                          --force-cold disables the
                                          warm-start DES replay (A/B
-                                         timing)
+                                         timing); --recompute swaps the
+                                         BPipe stash transfers for a
+                                         recompute-on-return memory
+                                         model (discard on Evict, re-run
+                                         fwd on Load; no link traffic)
   report    [--experiment 1..10 | --all] [--v N] [--threads N]
             [--out report.md]            replication report: markdown +
                                          embedded SVG figures + the
@@ -109,6 +114,33 @@ COMMANDS:
                                          structured [bpipe-recover]
                                          event lines; exit 1 on a
                                          terminal abort)
+  serve     [--replicas R] [--traffic steady|bursty|diurnal] [--steps N]
+            [--rate N] [--queue-cap N] [--segment-len N]
+            [--p N --microbatches M --lr F] [--seed N]
+            [--schedule 1f1b|gpipe|interleaved|vshaped|zigzag --v N]
+            [--bpipe | --rebalance [--bound K] | --stage-bounds a,b,..]
+            [--faults plan.json] [--max-restarts N]
+            [--recover-timeout-ms T] [--segment-timeout-ms T]
+            [--readmit-after R] [--sync-every N] [--no-steal]
+            [--replica-cap-bytes B] [--run-dir D]
+            [--json f.json]              elastic fleet: R pipeline
+                                         replicas under seeded live
+                                         traffic, fed from one bounded
+                                         queue (backpressure, then typed
+                                         load shedding). A replica
+                                         failing past its restart budget
+                                         is drained back to the queue,
+                                         survivors absorb its work
+                                         (degraded mode), and after a
+                                         cool-down the replica is
+                                         re-admitted and resumes from
+                                         its checkpoints. Structured
+                                         [bpipe-fleet] event lines plus
+                                         a JSON summary; exit 1 when
+                                         serving is impossible (all
+                                         replicas down with re-admission
+                                         off, or no feasible plan under
+                                         --replica-cap-bytes)
 ";
 
 /// Minimal flag parser: `--key value` pairs plus boolean `--key` flags.
@@ -441,7 +473,7 @@ fn main() -> anyhow::Result<()> {
             }
         }
         "sweep" => {
-            let args = Args::parse(rest, &["bounds", "skip-oom", "synth", "force-cold"])?;
+            let args = Args::parse(rest, &["bounds", "skip-oom", "synth", "force-cold", "recompute"])?;
             let v = args.get("v", 2u64)?;
             let threads = args.get("threads", 0usize)?;
             if args.opt("synth").is_some() {
@@ -483,6 +515,7 @@ fn main() -> anyhow::Result<()> {
             let opts = sim::SweepOptions {
                 skip_provable_oom: skip_oom,
                 force_cold: args.opt("force-cold").is_some(),
+                recompute: args.opt("recompute").is_some(),
             };
             let t0 = std::time::Instant::now();
             let report = sim::sweep_with(tasks, threads, opts);
@@ -825,6 +858,7 @@ fn main() -> anyhow::Result<()> {
                 retry_budget: args.get("retry-budget", 3u32)?,
                 retry_backoff_ms: args.get("retry-backoff-ms", 10u64)?,
                 progress: None,
+                replica: None,
             };
             if synth {
                 let p = args.get("p", 4u64)?;
@@ -907,6 +941,108 @@ fn main() -> anyhow::Result<()> {
                     }
                 }
                 other => anyhow::bail!("unknown backend {other:?} (sim | pjrt)"),
+            }
+        }
+        "serve" => {
+            use bpipe::coordinator::RebalancePlan;
+            let args = Args::parse(rest, &["bpipe", "rebalance", "no-steal"])?;
+            let v = args.get("v", 2u64)?;
+            let family = parse_family(args.opt("schedule").unwrap_or("1f1b"), v)?;
+            let rebalance = if let Some(bs) = args.opt("stage-bounds") {
+                let bounds = bs
+                    .split(',')
+                    .map(|t| {
+                        t.trim()
+                            .parse::<u64>()
+                            .map_err(|e| anyhow::anyhow!("--stage-bounds {t:?}: {e}"))
+                    })
+                    .collect::<anyhow::Result<Vec<u64>>>()?;
+                RebalancePlan::PerStage { bounds }
+            } else if args.opt("bpipe").is_some() || args.opt("rebalance").is_some() {
+                let bound = match args.opt("bound") {
+                    Some(b) => Some(b.parse()?),
+                    None => None,
+                };
+                RebalancePlan::Uniform { bound }
+            } else {
+                RebalancePlan::Off
+            };
+            let artifacts = PathBuf::from(args.opt("artifacts").unwrap_or("artifacts"));
+            let manifest = if artifacts.join("manifest.json").exists() {
+                bpipe::runtime::Manifest::load(&artifacts)?
+            } else {
+                let p = args.get("p", 4u64)?;
+                bpipe::runtime::Manifest::synthetic(p * family.chunks(), 16, 8, 2, 64, &[1, 2])
+            };
+            let faults = match args.opt("faults") {
+                Some(path) => Some(std::sync::Arc::new(bpipe::runtime::FaultPlan::load(
+                    std::path::Path::new(path),
+                )?)),
+                None => None,
+            };
+            let cfg = bpipe::fleet::FleetConfig {
+                replicas: args.get("replicas", 3usize)?,
+                steps: args.get("steps", 24u64)?,
+                traffic: bpipe::fleet::TrafficPattern::parse(
+                    args.opt("traffic").unwrap_or("steady"),
+                )?,
+                rate: args.get("rate", 0u64)?,
+                queue_cap: args.get("queue-cap", 8usize)?,
+                segment_len: args.get("segment-len", 2u64)?,
+                seed: args.get("seed", 0u64)?,
+                manifest: Some(manifest.clone()),
+                family,
+                rebalance,
+                microbatches: args.get("microbatches", 4u64)?,
+                lr: args.get("lr", 2e-3f32)?,
+                faults,
+                max_restarts: args.get("max-restarts", 0u32)?,
+                recover_timeout: Some(std::time::Duration::from_millis(
+                    args.get("recover-timeout-ms", 5000u64)?,
+                )),
+                segment_timeout: std::time::Duration::from_millis(
+                    args.get("segment-timeout-ms", 60_000u64)?,
+                ),
+                readmit_after: args.get("readmit-after", 2u64)?,
+                sync_every: args.get("sync-every", 4u64)?,
+                steal: args.opt("no-steal").is_none(),
+                replica_cap_bytes: match args.opt("replica-cap-bytes") {
+                    Some(b) => Some(b.parse()?),
+                    None => None,
+                },
+                run_dir: args.opt("run-dir").map(PathBuf::from).unwrap_or_else(|| {
+                    std::env::temp_dir().join(format!("bpipe-fleet-{}", std::process::id()))
+                }),
+                log: true,
+            };
+            println!(
+                "fleet: {} replicas × {} virtual stages ({:?}), {} work items under {} \
+                 traffic, queue cap {}",
+                cfg.replicas,
+                manifest.spec.stages,
+                family,
+                cfg.steps,
+                cfg.traffic.label(),
+                cfg.queue_cap
+            );
+            match bpipe::fleet::serve::<bpipe::runtime::FaultyBackend<bpipe::runtime::SimBackend>>(
+                &cfg,
+            ) {
+                Ok(out) => {
+                    println!("{}", out.stats.summary());
+                    let json = out.stats.to_json().to_string();
+                    match args.opt("json") {
+                        Some(path) => {
+                            std::fs::write(path, &json)?;
+                            println!("fleet summary JSON → {path}");
+                        }
+                        None => println!("{json}"),
+                    }
+                }
+                Err(e) => {
+                    eprintln!("serve aborted: {e:#}");
+                    std::process::exit(1);
+                }
             }
         }
         "help" | "--help" | "-h" => print!("{USAGE}"),

@@ -243,6 +243,13 @@ pub trait Backend: Sized + 'static {
     /// use this to key per-stage behavior.
     fn bind_stage(&mut self, _stage: u64) {}
 
+    /// Tell the backend which fleet replica it serves (`bpipe serve`
+    /// runs R data-parallel pipelines in one process).  Called once by
+    /// the stage worker right after [`Self::bind_stage`] when the run
+    /// is part of a fleet; the default ignores it.  Fault injection
+    /// uses this to scope replica-targeted faults.
+    fn bind_replica(&mut self, _replica: usize) {}
+
     /// Step-boundary hook: called by the stage worker at the top of
     /// every training step with the GLOBAL (resume-aware) 1-based step
     /// number.  The default does nothing; an error fails the step and is

@@ -80,9 +80,32 @@ impl Fault {
 #[derive(Debug)]
 struct Armed {
     fault: Fault,
+    /// Replica scope: `None` arms the fault for any querier (the
+    /// single-pipeline default, and the pre-fleet JSON back-compat
+    /// shape); `Some(r)` arms it for fleet replica `r` ONLY — a plain
+    /// (replica-less) run never consumes it, and in a fleet exactly one
+    /// replica does, which is what makes chaos tests deterministic
+    /// under R concurrent pipelines.
+    replica: Option<usize>,
     fired: AtomicBool,
     /// remaining transient failures ([`Fault::TransientExec`] only)
     remaining: AtomicU32,
+}
+
+impl Armed {
+    fn from_scoped(replica: Option<usize>, fault: Fault) -> Self {
+        let remaining = match fault {
+            Fault::TransientExec { failures, .. } => failures,
+            _ => 0,
+        };
+        Armed { fault, replica, fired: AtomicBool::new(false), remaining: AtomicU32::new(remaining) }
+    }
+
+    /// Scope rule: an unscoped fault matches every querier; a
+    /// replica-scoped fault matches only that replica's querier.
+    fn scope_matches(&self, querier: Option<usize>) -> bool {
+        self.replica.map_or(true, |r| querier == Some(r))
+    }
 }
 
 /// A deterministic, seeded set of faults to inject into one supervised
@@ -95,17 +118,16 @@ pub struct FaultPlan {
 }
 
 impl FaultPlan {
+    /// An unscoped plan: every fault is armed for any querier (the
+    /// single-pipeline shape every pre-fleet caller uses).
     pub fn new(seed: u64, faults: Vec<Fault>) -> Self {
-        let armed = faults
-            .into_iter()
-            .map(|fault| {
-                let remaining = match fault {
-                    Fault::TransientExec { failures, .. } => failures,
-                    _ => 0,
-                };
-                Armed { fault, fired: AtomicBool::new(false), remaining: AtomicU32::new(remaining) }
-            })
-            .collect();
+        Self::new_scoped(seed, faults.into_iter().map(|f| (None, f)).collect())
+    }
+
+    /// A plan whose faults carry an explicit replica scope each
+    /// (`None` = any querier, `Some(r)` = fleet replica `r` only).
+    pub fn new_scoped(seed: u64, faults: Vec<(Option<usize>, Fault)>) -> Self {
+        let armed = faults.into_iter().map(|(r, f)| Armed::from_scoped(r, f)).collect();
         Self { seed, armed }
     }
 
@@ -122,6 +144,12 @@ impl FaultPlan {
         self.armed.iter().map(|a| a.fault.clone()).collect()
     }
 
+    /// Every fault with its replica scope (round-trip twin of
+    /// [`FaultPlan::new_scoped`]).
+    pub fn scoped_faults(&self) -> Vec<(Option<usize>, Fault)> {
+        self.armed.iter().map(|a| (a.replica, a.fault.clone())).collect()
+    }
+
     pub fn is_empty(&self) -> bool {
         self.armed.is_empty()
     }
@@ -136,10 +164,18 @@ impl FaultPlan {
         }
     }
 
-    /// Fire-once helper: consume the first matching un-fired fault.
-    fn consume(&self, pred: impl Fn(&Fault) -> bool) -> Option<&Fault> {
+    /// Fire-once helper: consume the first matching un-fired fault whose
+    /// replica scope admits `querier`.
+    fn consume(
+        &self,
+        querier: Option<usize>,
+        pred: impl Fn(&Fault) -> bool,
+    ) -> Option<&Fault> {
         for a in &self.armed {
-            if pred(&a.fault) && !a.fired.swap(true, Ordering::SeqCst) {
+            if a.scope_matches(querier)
+                && pred(&a.fault)
+                && !a.fired.swap(true, Ordering::SeqCst)
+            {
                 return Some(&a.fault);
             }
             // keep scanning: an already-fired fault must not shadow a
@@ -150,19 +186,41 @@ impl FaultPlan {
 
     /// Does a [`Fault::Crash`] fire for `stage` at global step `step`?
     pub fn crash_due(&self, stage: u64, step: u64) -> bool {
-        self.consume(|f| matches!(f, Fault::Crash { stage: s, step: k } if *s == stage && step >= *k))
-            .is_some()
+        self.crash_due_for(None, stage, step)
+    }
+
+    /// [`FaultPlan::crash_due`] as queried by fleet replica `replica`.
+    pub fn crash_due_for(&self, replica: Option<usize>, stage: u64, step: u64) -> bool {
+        self.consume(
+            replica,
+            |f| matches!(f, Fault::Crash { stage: s, step: k } if *s == stage && step >= *k),
+        )
+        .is_some()
     }
 
     /// Does a [`Fault::Panic`] fire for `stage` at global step `step`?
     pub fn panic_due(&self, stage: u64, step: u64) -> bool {
-        self.consume(|f| matches!(f, Fault::Panic { stage: s, step: k } if *s == stage && step >= *k))
-            .is_some()
+        self.panic_due_for(None, stage, step)
+    }
+
+    /// [`FaultPlan::panic_due`] as queried by fleet replica `replica`.
+    pub fn panic_due_for(&self, replica: Option<usize>, stage: u64, step: u64) -> bool {
+        self.consume(
+            replica,
+            |f| matches!(f, Fault::Panic { stage: s, step: k } if *s == stage && step >= *k),
+        )
+        .is_some()
     }
 
     /// Channel stall duration (ms) for `stage` at `step`, if one fires.
     pub fn stall_due(&self, stage: u64, step: u64) -> Option<u64> {
+        self.stall_due_for(None, stage, step)
+    }
+
+    /// [`FaultPlan::stall_due`] as queried by fleet replica `replica`.
+    pub fn stall_due_for(&self, replica: Option<usize>, stage: u64, step: u64) -> Option<u64> {
         match self.consume(
+            replica,
             |f| matches!(f, Fault::ChannelStall { stage: s, step: k, .. } if *s == stage && step >= *k),
         ) {
             Some(Fault::ChannelStall { stall_ms, .. }) => Some(*stall_ms),
@@ -172,7 +230,13 @@ impl FaultPlan {
 
     /// Feeder stall duration (ms) at `step`, if one fires.
     pub fn feeder_stall_due(&self, step: u64) -> Option<u64> {
-        match self.consume(|f| matches!(f, Fault::FeederStall { step: k, .. } if step >= *k)) {
+        self.feeder_stall_due_for(None, step)
+    }
+
+    /// [`FaultPlan::feeder_stall_due`] as queried by replica `replica`.
+    pub fn feeder_stall_due_for(&self, replica: Option<usize>, step: u64) -> Option<u64> {
+        match self.consume(replica, |f| matches!(f, Fault::FeederStall { step: k, .. } if step >= *k))
+        {
             Some(Fault::FeederStall { stall_ms, .. }) => Some(*stall_ms),
             _ => None,
         }
@@ -180,7 +244,13 @@ impl FaultPlan {
 
     /// New HBM cap (bytes) for `stage` at `step`, if one fires.
     pub fn hbm_cap_due(&self, stage: u64, step: u64) -> Option<u64> {
+        self.hbm_cap_due_for(None, stage, step)
+    }
+
+    /// [`FaultPlan::hbm_cap_due`] as queried by fleet replica `replica`.
+    pub fn hbm_cap_due_for(&self, replica: Option<usize>, stage: u64, step: u64) -> Option<u64> {
         match self.consume(
+            replica,
             |f| matches!(f, Fault::HbmCap { stage: s, step: k, .. } if *s == stage && step >= *k),
         ) {
             Some(Fault::HbmCap { cap_bytes, .. }) => Some(*cap_bytes),
@@ -191,7 +261,15 @@ impl FaultPlan {
     /// Should the next execution on `stage` at global step `step` fail
     /// transiently?  Decrements the fault's remaining budget.
     pub fn exec_should_fail(&self, stage: u64, step: u64) -> bool {
+        self.exec_should_fail_for(None, stage, step)
+    }
+
+    /// [`FaultPlan::exec_should_fail`] as queried by replica `replica`.
+    pub fn exec_should_fail_for(&self, replica: Option<usize>, stage: u64, step: u64) -> bool {
         for a in &self.armed {
+            if !a.scope_matches(replica) {
+                continue;
+            }
             if let Fault::TransientExec { stage: s, step: k, .. } = a.fault {
                 if s == stage && step >= k {
                     let took = a
@@ -213,16 +291,21 @@ impl FaultPlan {
     /// ```json
     /// {"seed": 0, "faults": [
     ///   {"kind": "crash", "stage": 1, "step": 3},
+    ///   {"kind": "crash", "stage": 1, "step": 3, "replica": 1},
     ///   {"kind": "transient_exec", "stage": 0, "step": 2, "failures": 2},
     ///   {"kind": "channel_stall", "stage": 1, "step": 2, "stall_ms": 800},
     ///   {"kind": "feeder_stall", "step": 2, "stall_ms": 800},
     ///   {"kind": "hbm_cap", "stage": 0, "step": 3, "cap_bytes": 2048}
     /// ]}
     /// ```
+    ///
+    /// The optional `"replica"` field scopes a fault to one fleet
+    /// replica (`bpipe serve`); omitted — the back-compat default —
+    /// the fault is armed for any querier.
     pub fn from_json(text: &str) -> anyhow::Result<Self> {
         let root = Json::parse(text).map_err(|e| anyhow::anyhow!("fault plan JSON: {e}"))?;
         let seed = root.get("seed").and_then(|j| j.as_u64()).unwrap_or(0);
-        let mut faults = Vec::new();
+        let mut faults: Vec<(Option<usize>, Fault)> = Vec::new();
         let arr = root
             .get("faults")
             .and_then(|j| j.as_arr())
@@ -269,9 +352,10 @@ impl FaultPlan {
                 | Fault::HbmCap { step, .. } => *step,
             };
             anyhow::ensure!(step >= 1, "fault #{i} ({kind}): steps are 1-based, got {step}");
-            faults.push(fault);
+            let replica = f.get("replica").and_then(|j| j.as_u64()).map(|r| r as usize);
+            faults.push((replica, fault));
         }
-        Ok(Self::new(seed, faults))
+        Ok(Self::new_scoped(seed, faults))
     }
 
     /// Load a plan from a JSON file (the `--faults plan.json` surface).
@@ -311,6 +395,9 @@ impl FaultPlan {
                         pairs.push(("step", Json::Num(*step as f64)));
                         pairs.push(("cap_bytes", Json::Num(*cap_bytes as f64)));
                     }
+                }
+                if let Some(r) = a.replica {
+                    pairs.push(("replica", Json::Num(r as f64)));
                 }
                 Json::obj(pairs)
             })
@@ -389,13 +476,17 @@ pub struct FaultyBackend<B: Backend> {
     plan: Option<Arc<FaultPlan>>,
     stage: Cell<u64>,
     step: Cell<u64>,
+    /// Fleet replica this backend serves (`None` outside `bpipe serve`);
+    /// scopes every plan query so a replica-scoped fault hits exactly
+    /// the replica it names.
+    replica: Cell<Option<usize>>,
 }
 
 impl<B: Backend> FaultyBackend<B> {
     fn maybe_fail_exec(&self) -> anyhow::Result<()> {
         if let Some(p) = &self.plan {
             let (stage, step) = (self.stage.get(), self.step.get());
-            if p.exec_should_fail(stage, step) {
+            if p.exec_should_fail_for(self.replica.get(), stage, step) {
                 return Err(anyhow::Error::new(InjectedFault::TransientExec { stage, step }));
             }
         }
@@ -413,6 +504,7 @@ impl<B: Backend> Backend for FaultyBackend<B> {
             plan: installed(),
             stage: Cell::new(0),
             step: Cell::new(0),
+            replica: Cell::new(None),
         })
     }
 
@@ -425,25 +517,31 @@ impl<B: Backend> Backend for FaultyBackend<B> {
         self.inner.bind_stage(stage);
     }
 
+    fn bind_replica(&mut self, replica: usize) {
+        self.replica.set(Some(replica));
+        self.inner.bind_replica(replica);
+    }
+
     fn begin_step(&self, global_step: u64) -> anyhow::Result<()> {
         self.step.set(global_step);
         self.inner.begin_step(global_step)?;
         if let Some(p) = &self.plan {
             let stage = self.stage.get();
-            if let Some(ms) = p.stall_due(stage, global_step) {
+            let replica = self.replica.get();
+            if let Some(ms) = p.stall_due_for(replica, stage, global_step) {
                 // go silent: neighbors must detect this via deadlines
                 std::thread::sleep(Duration::from_millis(ms));
             }
-            if p.panic_due(stage, global_step) {
+            if p.panic_due_for(replica, stage, global_step) {
                 panic!("injected panic at stage {stage}, step {global_step}");
             }
-            if p.crash_due(stage, global_step) {
+            if p.crash_due_for(replica, stage, global_step) {
                 return Err(anyhow::Error::new(InjectedFault::Crash {
                     stage,
                     step: global_step,
                 }));
             }
-            if let Some(cap_bytes) = p.hbm_cap_due(stage, global_step) {
+            if let Some(cap_bytes) = p.hbm_cap_due_for(replica, stage, global_step) {
                 return Err(anyhow::Error::new(InjectedFault::HbmCap {
                     stage,
                     step: global_step,
@@ -532,6 +630,57 @@ mod tests {
         let back = FaultPlan::from_json(&text).unwrap();
         assert_eq!(back.seed, 7);
         assert_eq!(back.faults(), plan.faults());
+    }
+
+    #[test]
+    fn replica_scope_targets_exactly_one_replica() {
+        let p = FaultPlan::new_scoped(
+            0,
+            vec![
+                (Some(1), Fault::Crash { stage: 0, step: 2 }),
+                (None, Fault::Panic { stage: 0, step: 3 }),
+            ],
+        );
+        // a replica-scoped fault is invisible to a plain (replica-less)
+        // run and to every other replica
+        assert!(!p.crash_due(0, 2), "unscoped querier must not consume a scoped fault");
+        assert!(!p.crash_due_for(Some(0), 0, 2), "wrong replica");
+        assert!(!p.crash_due_for(Some(2), 0, 2), "wrong replica");
+        assert!(p.crash_due_for(Some(1), 0, 2), "fires for replica 1 only");
+        assert!(!p.crash_due_for(Some(1), 0, 2), "consumed");
+        // an unscoped fault matches any querier — first to reach it wins
+        assert!(p.panic_due_for(Some(0), 0, 3));
+        assert!(!p.panic_due(0, 3), "consumed by replica 0's querier");
+        // scoping applies to transient budgets too
+        let t = FaultPlan::new_scoped(
+            0,
+            vec![(Some(2), Fault::TransientExec { stage: 1, step: 1, failures: 1 })],
+        );
+        assert!(!t.exec_should_fail(1, 1));
+        assert!(!t.exec_should_fail_for(Some(0), 1, 1));
+        assert!(t.exec_should_fail_for(Some(2), 1, 1));
+        assert!(!t.exec_should_fail_for(Some(2), 1, 1), "budget spent");
+    }
+
+    #[test]
+    fn json_round_trips_replica_scope_and_defaults_to_unscoped() {
+        let plan = FaultPlan::new_scoped(
+            3,
+            vec![
+                (Some(1), Fault::Crash { stage: 1, step: 2 }),
+                (None, Fault::FeederStall { step: 2, stall_ms: 100 }),
+            ],
+        );
+        let text = plan.to_json().to_string();
+        assert!(text.contains("\"replica\""), "scoped fault must serialize its scope: {text}");
+        let back = FaultPlan::from_json(&text).unwrap();
+        assert_eq!(back.scoped_faults(), plan.scoped_faults());
+        // back-compat: a plan without "replica" fields parses unscoped
+        let legacy =
+            FaultPlan::from_json(r#"{"seed": 7, "faults": [{"kind": "crash", "stage": 1, "step": 3}]}"#)
+                .unwrap();
+        assert_eq!(legacy.scoped_faults(), vec![(None, Fault::Crash { stage: 1, step: 3 })]);
+        assert!(legacy.crash_due(1, 3), "unscoped fault still fires for a plain run");
     }
 
     #[test]

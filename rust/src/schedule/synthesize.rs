@@ -234,7 +234,7 @@ pub fn try_synthesize(
     // prefix from the previous candidate's snapshot (bit-identical to a
     // cold run — see `sim::engine`'s warm-start docs)
     let score = |s: &Schedule, ws: &mut SimWorkspace| {
-        ws.run(e, s, &layout, SimOptions { trace: false, warm: true }).makespan
+        ws.run(e, s, &layout, SimOptions { trace: false, warm: true, recompute: false }).makespan
     };
 
     // -- seed + first-improvement hill climb over warmup depths ----------
@@ -271,7 +271,7 @@ pub fn try_synthesize(
         if static_bounds(&cand).iter().any(|b| b.lo > counts[b.stage as usize] as i64) {
             continue;
         }
-        let stats = ws.run(e, &cand, &layout, SimOptions { trace: false, warm: true });
+        let stats = ws.run(e, &cand, &layout, SimOptions { trace: false, warm: true, recompute: false });
         let fits = ws
             .stash_high_water()
             .iter()
@@ -385,7 +385,7 @@ mod tests {
         // the DES's dynamic stash high-water also fits (not just the
         // program-order one the validator sees)
         let mut ws = SimWorkspace::new();
-        ws.run(&e, &s, &score_layout(&e, 8), SimOptions { trace: false, warm: false });
+        ws.run(&e, &s, &score_layout(&e, 8), SimOptions { trace: false, warm: false, recompute: false });
         for (hw, &c) in ws.stash_high_water().iter().zip(&counts) {
             assert!(*hw <= c as i64, "{:?} vs {counts:?}", ws.stash_high_water());
         }
@@ -402,9 +402,9 @@ mod tests {
         let s = synthesize(8, m, &vec![e.cluster.hbm_bytes; 8], &cm);
         let layout = score_layout(&e, 8);
         let mut ws = SimWorkspace::new();
-        let ours = ws.run(&e, &s, &layout, SimOptions { trace: false, warm: false }).makespan;
+        let ours = ws.run(&e, &s, &layout, SimOptions { trace: false, warm: false, recompute: false }).makespan;
         let rb = rebalance(&one_f_one_b(8, m), None);
-        let fam = ws.run(&e, &rb, &layout, SimOptions { trace: false, warm: false }).makespan;
+        let fam = ws.run(&e, &rb, &layout, SimOptions { trace: false, warm: false, recompute: false }).makespan;
         assert!(
             ours <= fam * 1.0000001,
             "synthesized {ours} should not lose to rebalanced 1F1B {fam}"

@@ -152,11 +152,25 @@ pub struct SimOptions {
     /// (descending-bound sweeps, `schedule::synthesize`'s scoring loop)
     /// profit from the snapshot copies.
     pub warm: bool,
+    /// Recompute-vs-stash hybrid memory model (`bpipe sweep
+    /// --recompute`): an evicted activation is **discarded** instead of
+    /// transferred to the pair stage — Evict costs nothing and holds no
+    /// acceptor-side memory, and the matching Load is a **recompute op**
+    /// (one forward at the evicting stage's own cost) instead of a
+    /// transfer back.  Neither op touches the inter-stage links, and
+    /// `transfer_bytes` is 0; the recompute cost surfaces through
+    /// `load_stall` (backwards waiting on the re-materialization) and
+    /// the makespan.  This is the memory model a degraded fleet replica
+    /// uses to trade compute for memory when no partner has stash room.
+    /// Zero-duration Evicts fail the strictly-positive-durations gate,
+    /// so recompute cells always run cold (warm replay falls back —
+    /// soundly, since the prefix match also compares durations).
+    pub recompute: bool,
 }
 
 impl Default for SimOptions {
     fn default() -> Self {
-        SimOptions { trace: true, warm: false }
+        SimOptions { trace: true, warm: false, recompute: false }
     }
 }
 
@@ -657,6 +671,10 @@ impl SimWorkspace {
             self.dur.push(match self.ops[id].kind {
                 OpKind::Fwd => self.stage_times[s].fwd * chunk_scale,
                 OpKind::Bwd => self.stage_times[s].bwd * chunk_scale,
+                // recompute hybrid: Evict discards (free), Load
+                // re-materializes at the stage's own forward cost
+                OpKind::Evict if opts.recompute => 0.0,
+                OpKind::Load if opts.recompute => self.stage_times[s].fwd * chunk_scale,
                 OpKind::Evict | OpKind::Load => {
                     if self.intra[s] {
                         t_intra
@@ -819,7 +837,9 @@ impl SimWorkspace {
             let id = idu as usize;
             let kind = self.ops[id].kind;
             let t0 = match kind {
-                OpKind::Evict | OpKind::Load => {
+                // recompute ops run on the stage's own compute stream
+                // (program-order deps serialize them), never on a link
+                OpKind::Evict | OpKind::Load if !opts.recompute => {
                     let l = self.link_of[self.stage_of[id] as usize] as usize;
                     let s0 = ready.max(self.link_free[l]);
                     self.link_free[l] = s0 + self.dur[id];
@@ -927,13 +947,18 @@ impl SimWorkspace {
                 OpKind::Bwd => self.events.push(MemEvent { t: self.end[id], stage: s, delta: -1 }),
                 OpKind::Evict => {
                     // freed locally only once the transfer lands; acceptor
-                    // allocates at transfer start (conservative overlap)
+                    // allocates at transfer start (conservative overlap).
+                    // Recompute mode discards instead: no partner side.
                     self.events.push(MemEvent { t: self.end[id], stage: s, delta: -1 });
-                    self.events.push(MemEvent { t: self.start[id], stage: partner, delta: 1 });
+                    if !opts.recompute {
+                        self.events.push(MemEvent { t: self.start[id], stage: partner, delta: 1 });
+                    }
                 }
                 OpKind::Load => {
                     self.events.push(MemEvent { t: self.start[id], stage: s, delta: 1 });
-                    self.events.push(MemEvent { t: self.end[id], stage: partner, delta: -1 });
+                    if !opts.recompute {
+                        self.events.push(MemEvent { t: self.end[id], stage: partner, delta: -1 });
+                    }
                 }
             }
         }
@@ -994,7 +1019,8 @@ impl SimWorkspace {
             peak_stash,
             oom_stage,
             load_stall,
-            transfer_bytes: transfers * act,
+            // recompute mode moves nothing between stages
+            transfer_bytes: if opts.recompute { 0 } else { transfers * act },
         }
     }
 }
@@ -1249,9 +1275,9 @@ mod tests {
         let layout = crate::bpipe::pair_adjacent_layout(e.parallel.p, e.cluster.n_nodes);
         let sched = one_f_one_b(e.parallel.p, m);
         let mut ws = SimWorkspace::new();
-        let with = ws.run(&e, &sched, &layout, SimOptions { trace: true, warm: false });
+        let with = ws.run(&e, &sched, &layout, SimOptions { trace: true, warm: false, recompute: false });
         assert_eq!(ws.trace().len(), sched.num_ops());
-        let without = ws.run(&e, &sched, &layout, SimOptions { trace: false, warm: false });
+        let without = ws.run(&e, &sched, &layout, SimOptions { trace: false, warm: false, recompute: false });
         assert!(ws.trace().is_empty(), "trace must be skipped when opted out");
         // ... with identical stats either way
         assert_eq!(with, without);
@@ -1269,7 +1295,7 @@ mod tests {
         let layout = crate::bpipe::pair_adjacent_layout(e.parallel.p, e.cluster.n_nodes);
         let base = one_f_one_b(e.parallel.p, m);
         let mut ws = SimWorkspace::new();
-        let opts = SimOptions { trace: true, warm: true };
+        let opts = SimOptions { trace: true, warm: true, recompute: false };
         for bound in crate::bpipe::bound_range(&base).rev() {
             let sched = rebalance(&base, Some(bound));
             let stats = ws.run(&e, &sched, &layout, opts);
@@ -1300,12 +1326,56 @@ mod tests {
         ];
         let mut ws = SimWorkspace::new();
         for sched in &scheds {
-            let stats = ws.run(&e, sched, &layout, SimOptions { trace: true, warm: true });
+            let stats = ws.run(&e, sched, &layout, SimOptions { trace: true, warm: true, recompute: false });
             let fresh = simulate(&e, sched, &layout);
             assert_eq!(stats.makespan, fresh.makespan);
             assert_eq!(stats.load_stall, fresh.load_stall);
             assert_eq!(ws.trace(), &fresh.trace[..]);
         }
+    }
+
+    #[test]
+    fn recompute_mode_drops_transfers_and_partner_memory() {
+        // hybrid memory model: a rebalanced schedule under --recompute
+        // moves zero bytes, charges the acceptor stage no stash memory,
+        // and pays for the re-materialization in time instead — so its
+        // makespan differs from the stash/transfer execution of the very
+        // same schedule, while an unrebalanced schedule (no Evict/Load)
+        // is identical under both modes
+        let e = paper_experiment(8).unwrap();
+        let m = e.parallel.num_microbatches();
+        let layout = crate::bpipe::pair_adjacent_layout(e.parallel.p, e.cluster.n_nodes);
+        let base = one_f_one_b(e.parallel.p, m);
+        let sched = rebalance(&base, Some(derived_bound(&base)));
+        let mut ws = SimWorkspace::new();
+        let stash =
+            ws.run(&e, &sched, &layout, SimOptions { trace: false, warm: false, recompute: false });
+        let stash_peak = ws.stash_high_water().to_vec();
+        let stash_mem = ws.mem_high_water().to_vec();
+        let rec =
+            ws.run(&e, &sched, &layout, SimOptions { trace: false, warm: false, recompute: true });
+        let rec_peak = ws.stash_high_water().to_vec();
+        let rec_mem = ws.mem_high_water().to_vec();
+        assert!(stash.transfer_bytes > 0, "rebalanced schedule must transfer in stash mode");
+        assert_eq!(rec.transfer_bytes, 0, "recompute mode must not touch the links");
+        assert!(rec.makespan > 0.0 && rec.makespan.is_finite());
+        // evictor-local events are identical in both modes, but acceptors
+        // get no partner allocations under recompute — so every stage's
+        // resident peak (and hence device high-water) is bounded by the
+        // stash-mode run's
+        for s in 0..rec_peak.len() {
+            assert!(
+                rec_peak[s] <= stash_peak[s] && rec_mem[s] <= stash_mem[s],
+                "stage {s}: recompute peak {}/{} vs stash {}/{}",
+                rec_peak[s], rec_mem[s], stash_peak[s], stash_mem[s]
+            );
+        }
+        // a schedule without Evict/Load ops is mode-insensitive
+        let plain =
+            ws.run(&e, &base, &layout, SimOptions { trace: false, warm: false, recompute: true });
+        let plain_cold =
+            ws.run(&e, &base, &layout, SimOptions { trace: false, warm: false, recompute: false });
+        assert_eq!(plain, plain_cold, "no Evict/Load: modes must agree exactly");
     }
 
     #[test]
@@ -1324,7 +1394,7 @@ mod tests {
         ];
         let mut ws = SimWorkspace::new();
         for sched in &scheds {
-            let stats = ws.run(&e, sched, &layout, SimOptions { trace: true, warm: false });
+            let stats = ws.run(&e, sched, &layout, SimOptions { trace: true, warm: false, recompute: false });
             let fresh = simulate(&e, sched, &layout);
             assert_eq!(stats.makespan, fresh.makespan);
             assert_eq!(stats.load_stall, fresh.load_stall);

@@ -361,7 +361,7 @@ pub fn frontier_outcomes(
     let schedule =
         crate::schedule::synthesize(p, m, &vec![cap; p as usize], &CostModel::new(&tight));
     let mut ws = SimWorkspace::new();
-    let stats = ws.run(&tight, &schedule, &layout, SimOptions { trace: false, warm: false });
+    let stats = ws.run(&tight, &schedule, &layout, SimOptions { trace: false, warm: false, recompute: false });
     outcomes.push(SweepOutcome {
         exp_id: tight.id,
         model: tight.model.name.clone(),
@@ -402,6 +402,14 @@ pub struct SweepOptions {
     /// escape hatch if a future schedule family violates the replay's
     /// assumptions.
     pub force_cold: bool,
+    /// Score every cell under the recompute-vs-stash hybrid memory
+    /// model ([`SimOptions::recompute`], `bpipe sweep --recompute`):
+    /// evictions discard the activation and the matching load pays one
+    /// forward recompute at the evicting stage instead of a transfer.
+    /// Warm replay composes soundly with this — recompute cells have a
+    /// zero-duration Evict, which fails the replay's positive-duration
+    /// gate, so they simply run cold.
+    pub recompute: bool,
 }
 
 /// [`sweep_with`]'s result: the outcomes in task order, plus how many
@@ -523,7 +531,7 @@ fn run_task_in(
         &t.experiment,
         &schedule,
         &t.layout,
-        SimOptions { trace: false, warm: !opts.force_cold },
+        SimOptions { trace: false, warm: !opts.force_cold, recompute: opts.recompute },
     );
     let out = SweepOutcome {
         exp_id: t.experiment.id,

@@ -50,7 +50,7 @@ fn steady_state_sweep_cells_allocate_nothing() {
         rebalance(&v_shaped(p, m), None),
     ];
     let mut ws = SimWorkspace::new();
-    let opts = SimOptions { trace: false, warm: false };
+    let opts = SimOptions { trace: false, warm: false, recompute: false };
 
     // warm-up: buffers grow to the largest shape in the working set
     for s in &scheds {
@@ -213,7 +213,7 @@ fn steady_state_trace_collection_reuses_its_buffer() {
     let layout = pair_adjacent_layout(p, e.cluster.n_nodes);
     let sched = rebalance(&interleaved(p, m, 2), None);
     let mut ws = SimWorkspace::new();
-    let opts = SimOptions { trace: true, warm: false };
+    let opts = SimOptions { trace: true, warm: false, recompute: false };
     ws.run(&e, &sched, &layout, opts); // warm-up
     let before = allocs();
     for _ in 0..3 {

@@ -1,0 +1,270 @@
+//! Chaos suite for the elastic fleet runtime: replica-scoped fault
+//! injection against `fleet::serve`'s drain → redistribute → re-admit
+//! loop.
+//!
+//! The headline properties:
+//!
+//! * **Survivors progress, nothing hangs.**  Killing a replica mid-run
+//!   degrades the fleet; the dead replica's in-flight work drains back
+//!   to the queue, the survivors absorb it, and the whole run still
+//!   terminates with every admitted item completed.
+//! * **Admission math is exact.**  `offered = admitted + shed` holds
+//!   through every failure transition, and the entire serve run is
+//!   deterministic per seed — two identical runs produce the identical
+//!   event sequence and counters (wall-clock fields excluded).
+//! * **Recovery is exact.**  With stealing off and no shedding, each
+//!   replica executes exactly its own slice of the stream, so a fleet
+//!   that lost and re-admitted a replica ends with final weights
+//!   bit-identical to R standalone uninterrupted training runs.
+//!
+//! Fault plans install into a process-global registry, so every test
+//! here serializes on one lock.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use bpipe::coordinator::{train, TrainConfig};
+use bpipe::fleet::{serve, FleetConfig, FleetEvent, TrafficPattern};
+use bpipe::runtime::{Fault, FaultPlan, FaultyBackend, Manifest, SimBackend};
+
+type FB = FaultyBackend<SimBackend>;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("bpipe-chaos-fleet-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The same synthetic 2-virtual-stage model the recovery chaos suite
+/// trains (h=16, s=8, b=2, vocab 64).
+fn manifest() -> Manifest {
+    Manifest::synthetic(2, 16, 8, 2, 64, &[1, 2])
+}
+
+/// Deterministic per-event signature: everything EXCEPT wall-clock
+/// fields (latency, time-to-recover), which legitimately vary run to
+/// run.
+fn signature(events: &[FleetEvent]) -> Vec<String> {
+    events
+        .iter()
+        .map(|e| match e {
+            FleetEvent::Traffic { round, arrivals, admitted, shed, queue_len } => {
+                format!("traffic r{round} a{arrivals} ad{admitted} sh{shed} q{queue_len}")
+            }
+            FleetEvent::CapPlan { stage, cap_bytes, bounds } => {
+                format!("cap-plan s{stage} c{cap_bytes} b{bounds:?}")
+            }
+            FleetEvent::ReplicaFailed { round, replica, report } => {
+                format!("failed r{round} rep{replica} cause={}", report.cause.label())
+            }
+            FleetEvent::Drain { round, replica, completed, drained } => {
+                format!("drain r{round} rep{replica} c{completed} d{drained}")
+            }
+            FleetEvent::Degraded { round, alive, replicas } => {
+                format!("degraded r{round} {alive}/{replicas}")
+            }
+            FleetEvent::ReplicaReadmitted { round, replica, from_step } => {
+                format!("readmit r{round} rep{replica} from{from_step}")
+            }
+            FleetEvent::ReplicaRecovered { round, replica, .. } => {
+                format!("recovered r{round} rep{replica}")
+            }
+            FleetEvent::Sync { round, replicas, elements } => {
+                format!("sync r{round} n{replicas} e{elements}")
+            }
+            FleetEvent::Done { rounds, completed, shed } => {
+                format!("done r{rounds} c{completed} sh{shed}")
+            }
+        })
+        .collect()
+}
+
+fn count(events: &[FleetEvent], label: &str) -> usize {
+    events.iter().filter(|e| e.label() == label).count()
+}
+
+/// Kill replica 1 mid-run under bursty traffic on a deliberately small
+/// queue: survivors progress, admitted work all completes, shedding is
+/// typed and conserved, the dead replica is re-admitted and recovers —
+/// and the whole thing is deterministic per seed.
+#[test]
+fn killed_replica_degrades_then_recovers_under_bursty_load() {
+    let _g = lock();
+    let cfg = FleetConfig {
+        replicas: 3,
+        steps: 30,
+        traffic: TrafficPattern::Bursty,
+        rate: 8,
+        queue_cap: 4,
+        segment_len: 1,
+        seed: 5,
+        manifest: Some(manifest()),
+        faults: Some(Arc::new(FaultPlan::new_scoped(
+            0,
+            vec![(Some(1), Fault::Crash { stage: 1, step: 2 })],
+        ))),
+        max_restarts: 0,
+        readmit_after: 2,
+        sync_every: 0,
+        steal: true,
+        run_dir: tmp("kill-one"),
+        ..FleetConfig::default()
+    };
+    let out = serve::<FB>(&cfg).expect("fleet survives a replica kill");
+
+    // conservation, and every admitted item completed despite the kill
+    let s = &out.stats;
+    assert_eq!(s.offered, 30);
+    assert_eq!(s.offered, s.admitted + s.shed, "admission conservation");
+    assert_eq!(s.completed(), s.admitted, "no admitted item lost through drain/redistribute");
+    assert_eq!(out.steps_done.iter().sum::<u64>(), s.admitted);
+    assert!(s.shed > 0, "arrivals at 2× drain capacity on a 4-deep queue must shed");
+
+    // the failure transition is visible and targeted: replica 1 failed,
+    // the fleet degraded, re-admitted it, and it completed a segment
+    let fail_replicas: Vec<usize> = out
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            FleetEvent::ReplicaFailed { replica, .. } => Some(*replica),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(fail_replicas, vec![1], "exactly the scoped replica fails, exactly once");
+    assert_eq!(count(&out.events, "drain"), 1);
+    assert_eq!(count(&out.events, "degraded"), 1);
+    assert_eq!(count(&out.events, "replica-readmitted"), 1);
+    assert_eq!(count(&out.events, "replica-recovered"), 1);
+    assert!(s.degraded_rounds > 0);
+    assert_eq!(s.time_to_recover_s.len(), 1);
+    assert!(s.p99_latency_s().is_finite());
+
+    // survivors kept making progress while replica 1 was down
+    assert!(out.steps_done[0] > 0 && out.steps_done[2] > 0);
+    assert!(out.steps_done[1] > 0, "the re-admitted replica resumed and progressed");
+
+    // determinism: the identical config replays the identical event
+    // sequence and counters (wall-clock fields excluded)
+    let out2 = serve::<FB>(&cfg).expect("replay");
+    assert_eq!(signature(&out.events), signature(&out2.events));
+    assert_eq!(out.steps_done, out2.steps_done);
+    assert_eq!(out2.stats.shed, s.shed);
+    let _ = std::fs::remove_dir_all(&cfg.run_dir);
+}
+
+/// With stealing off, no shedding and sync off, each replica owns a
+/// fixed slice of the stream — so a fleet that crashed, drained and
+/// re-admitted replica 1 must end with final weights bit-identical to
+/// two standalone uninterrupted training runs (fleet recovery is exact,
+/// not just "eventually converges").
+#[test]
+fn no_shed_fleet_weights_match_standalone_runs() {
+    let _g = lock();
+    let m = manifest();
+    let cfg = FleetConfig {
+        replicas: 2,
+        steps: 8,
+        traffic: TrafficPattern::Steady,
+        queue_cap: 16,
+        segment_len: 2,
+        seed: 21,
+        manifest: Some(m.clone()),
+        faults: Some(Arc::new(FaultPlan::new_scoped(
+            0,
+            vec![(Some(1), Fault::Crash { stage: 1, step: 2 })],
+        ))),
+        max_restarts: 0,
+        readmit_after: 1,
+        sync_every: 0,
+        steal: false,
+        run_dir: tmp("bit-identical"),
+        ..FleetConfig::default()
+    };
+    let out = serve::<FB>(&cfg).expect("fleet completes");
+    assert_eq!(out.stats.shed, 0, "queue cap 16 at rate 4 must not shed");
+    assert_eq!(out.steps_done, vec![4, 4], "id%2 homing splits 8 items evenly");
+    assert_eq!(count(&out.events, "replica-failed"), 1);
+    assert_eq!(count(&out.events, "replica-recovered"), 1);
+
+    // standalone baselines: same per-replica seed, same total steps,
+    // no faults, no fleet
+    for r in 0..2usize {
+        let base_dir = tmp(&format!("bit-identical-base{r}"));
+        let base = TrainConfig {
+            manifest: Some(m.clone()),
+            steps: 4,
+            microbatches: cfg.microbatches,
+            lr: cfg.lr,
+            seed: cfg.seed.wrapping_add(r as u64),
+            checkpoint_dir: Some(base_dir.clone()),
+            checkpoint_every: 1,
+            ..TrainConfig::default()
+        };
+        train::<SimBackend>(&base).expect("baseline");
+        let want = checkpoints(&base_dir, &m);
+        let got = checkpoints(&cfg.run_dir.join(format!("replica{r}")), &m);
+        for (virt, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            assert_eq!(g.params, w.params, "replica {r} stage {virt} params diverged");
+            assert_eq!(g.m, w.m, "replica {r} stage {virt} Adam m diverged");
+            assert_eq!(g.v, w.v, "replica {r} stage {virt} Adam v diverged");
+        }
+        let _ = std::fs::remove_dir_all(&base_dir);
+    }
+    let _ = std::fs::remove_dir_all(&cfg.run_dir);
+}
+
+/// Load every virtual stage's newest checkpoint from `dir`.
+fn checkpoints(dir: &std::path::Path, manifest: &Manifest) -> Vec<bpipe::coordinator::StageCheckpoint> {
+    (0..manifest.spec.stages)
+        .map(|virt| {
+            let n = manifest.param_count(manifest.stage_kind(virt)).unwrap() as usize;
+            bpipe::coordinator::StageCheckpoint::load(dir, virt, n)
+                .unwrap_or_else(|e| panic!("loading stage {virt} from {dir:?}: {e}"))
+        })
+        .collect()
+}
+
+/// Even losing EVERY replica is survivable with re-admission on: each
+/// failure drains, each replica sits out its cool-down, comes back, and
+/// the full offered stream still completes.
+#[test]
+fn fleet_survives_every_replica_failing() {
+    let _g = lock();
+    let cfg = FleetConfig {
+        replicas: 3,
+        steps: 18,
+        traffic: TrafficPattern::Steady,
+        queue_cap: 32,
+        segment_len: 2,
+        seed: 3,
+        manifest: Some(manifest()),
+        faults: Some(Arc::new(FaultPlan::new_scoped(
+            0,
+            vec![
+                (Some(0), Fault::Crash { stage: 0, step: 1 }),
+                (Some(1), Fault::Crash { stage: 1, step: 2 }),
+                (Some(2), Fault::Crash { stage: 0, step: 3 }),
+            ],
+        ))),
+        max_restarts: 0,
+        readmit_after: 1,
+        sync_every: 0,
+        steal: false,
+        run_dir: tmp("kill-all"),
+        ..FleetConfig::default()
+    };
+    let out = serve::<FB>(&cfg).expect("every replica recovers");
+    assert_eq!(count(&out.events, "replica-failed"), 3, "each replica fails exactly once");
+    assert_eq!(count(&out.events, "replica-recovered"), 3);
+    assert_eq!(out.stats.shed, 0);
+    assert_eq!(out.stats.completed(), 18);
+    assert_eq!(out.steps_done, vec![6, 6, 6], "stealing off: everyone serves their own slice");
+    let _ = std::fs::remove_dir_all(&cfg.run_dir);
+}

@@ -38,7 +38,7 @@ fn caps_for_counts(e: &ExperimentConfig, counts: &[u64]) -> Vec<u64> {
 
 fn des_run(e: &ExperimentConfig, s: &Schedule, ws: &mut SimWorkspace) -> (f64, f64) {
     let layout = pair_adjacent_layout(e.parallel.p, e.cluster.n_nodes);
-    let stats = ws.run(e, s, &layout, SimOptions { trace: false, warm: false });
+    let stats = ws.run(e, s, &layout, SimOptions { trace: false, warm: false, recompute: false });
     assert_eq!(stats.oom_stage, None);
     (stats.makespan, stats.mfu)
 }

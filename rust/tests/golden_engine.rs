@@ -466,7 +466,7 @@ fn repeated_runs_on_one_workspace_are_bit_identical() {
     let e = paper_experiment(8).unwrap();
     let cells = golden_cells(&e);
     let mut ws = SimWorkspace::new();
-    let opts = SimOptions { trace: true, warm: false };
+    let opts = SimOptions { trace: true, warm: false, recompute: false };
     let first: Vec<_> = cells
         .iter()
         .map(|(_, s, l)| {

@@ -97,7 +97,7 @@ fn synthesized_schedules_are_always_clean_and_within_caps() {
         } else {
             sequential_layout(p, 1)
         };
-        let stats = ws.run(&e, &s, &layout, SimOptions { trace: false, warm: false });
+        let stats = ws.run(&e, &s, &layout, SimOptions { trace: false, warm: false, recompute: false });
         assert_eq!(stats.oom_stage, None, "case {case}: DES reported OOM");
         for (stage, (&hw, &budget)) in ws.stash_high_water().iter().zip(&counts).enumerate() {
             assert!(
